@@ -1,0 +1,44 @@
+//! Fig. 2 (scaled): cultural dynamics — simulation time T versus the
+//! task-size proxy F (number of cultural features) for n ∈ {1..5} workers
+//! on the virtual-core testbed.
+//!
+//! ```bash
+//! cargo run --release --example cultural_sweep
+//! ```
+//!
+//! For the paper's full workload use the CLI instead:
+//! `adapar sweep --preset fig2 --paper-scale`.
+
+use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::report::figure_pivot;
+use adapar::coordinator::run_sweep;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = SweepConfig {
+        model: ModelKind::Axelrod,
+        engine: EngineKind::Virtual,
+        sizes: vec![25, 50, 100, 200, 400],
+        workers: vec![1, 2, 3, 4, 5],
+        seeds: vec![1, 2, 3],
+        agents: 1_000,
+        steps: 20_000,
+        calibrate: true,
+        ..Default::default()
+    };
+    eprintln!("running {} grid points...", cfg.sizes.len() * cfg.workers.len());
+    let res = run_sweep(&cfg)?;
+    println!("{}", figure_pivot(&res).to_markdown());
+
+    // The paper's qualitative claims, checked on the spot:
+    for &f in &cfg.sizes {
+        let s4 = res.speedup(f, 4).unwrap();
+        eprintln!("F={f:>4}: T(1)/T(4) = {s4:.2}x");
+    }
+    let small = res.speedup(25, 4).unwrap();
+    let large = res.speedup(400, 4).unwrap();
+    eprintln!(
+        "speedup grows with task size: {small:.2}x (F=25) -> {large:.2}x (F=400): {}",
+        if large > small { "confirmed" } else { "NOT confirmed" }
+    );
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! End-to-end driver: exercises every layer of the system on a real small
+//! workload and reports the paper's headline results. This is the run
+//! recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Pipeline:
+//!   1. calibrate the virtual testbed's cost model on this machine;
+//!   2. cross-engine validation (sequential / parallel / virtual /
+//!      stepwise agree bit-for-bit) for both paper models;
+//!   3. regenerate Fig. 2 and Fig. 3 series on the virtual testbed
+//!      (scaled workloads; CSV + markdown under target/figures/);
+//!   4. if AOT artifacts are present, validate the XLA task path;
+//!   5. print the headline metrics: speedup growth with task size,
+//!      saturation worker count, fine-granularity overhead wall.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::path::Path;
+
+use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::report::{figure_pivot, write_report};
+use adapar::coordinator::run_sweep;
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine, StepwiseEngine};
+use adapar::vtime::calibrate;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. cost-model calibration ==");
+    let cost = calibrate();
+    println!(
+        "measured: visit={:.0}ns create={:.0}ns erase={:.0}ns absorb={:.0}ns exec_fixed={:.0}ns",
+        cost.visit_ns, cost.create_ns, cost.erase_ns, cost.absorb_ns, cost.exec_fixed_ns
+    );
+
+    println!("\n== 2. cross-engine validation ==");
+    {
+        let params = SirParams::scaled(25, 500, 60);
+        let seed = 9;
+        let reference = {
+            let m = SirModel::new(params, 1);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for n in [1, 2, 4] {
+            let m = SirModel::new(params, 1);
+            ParallelEngine::new(ProtocolConfig {
+                workers: n,
+                tasks_per_cycle: 6,
+                seed,
+                collect_timing: false,
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference);
+            println!("  SIR parallel n={n}: bit-identical to sequential ✓");
+        }
+        let m = SirModel::new(params, 1);
+        StepwiseEngine::new(3, seed).run(&m);
+        assert_eq!(m.snapshot(), reference);
+        println!("  SIR stepwise baseline: bit-identical ✓");
+    }
+
+    println!("\n== 3a. Fig. 2 series (cultural dynamics, virtual testbed) ==");
+    let fig2 = run_sweep(&SweepConfig {
+        model: ModelKind::Axelrod,
+        engine: EngineKind::Virtual,
+        sizes: vec![25, 50, 100, 200, 400],
+        workers: vec![1, 2, 3, 4, 5],
+        seeds: vec![1, 2, 3],
+        agents: 1_000,
+        steps: 20_000,
+        calibrate: true,
+        ..Default::default()
+    })?;
+    println!("{}", figure_pivot(&fig2).to_markdown());
+    write_report(&fig2, Path::new("target/figures"), "e2e_fig2")?;
+
+    println!("== 3b. Fig. 3 series (disease spreading, virtual testbed) ==");
+    let fig3 = run_sweep(&SweepConfig {
+        model: ModelKind::Sir,
+        engine: EngineKind::Virtual,
+        sizes: vec![10, 20, 50, 100, 200, 500],
+        workers: vec![1, 2, 3, 4, 5],
+        seeds: vec![1, 2, 3],
+        agents: 4_000,
+        steps: 100,
+        calibrate: true,
+        ..Default::default()
+    })?;
+    println!("{}", figure_pivot(&fig3).to_markdown());
+    write_report(&fig3, Path::new("target/figures"), "e2e_fig3")?;
+
+    println!("== 4. XLA artifact path ==");
+    match adapar::runtime::Manifest::load(adapar::runtime::Manifest::default_dir()) {
+        Err(_) => println!("  artifacts not built — skipped (run `make artifacts`)"),
+        Ok(manifest) => {
+            let rt = adapar::runtime::XlaRuntime::cpu()?;
+            let params = SirParams::scaled(30, 300, 20);
+            let seed = 4;
+            let native = SirModel::new(params, 2);
+            SequentialEngine::new(seed).run(&native);
+            let xla = adapar::runtime::xla_engine::XlaSirModel::from_manifest(
+                &rt,
+                &manifest,
+                SirModel::new(params, 2),
+            )?;
+            SequentialEngine::new(seed).run(&xla);
+            assert_eq!(native.snapshot(), xla.snapshot());
+            println!("  SIR with JAX+Pallas task bodies via PJRT: bit-identical ✓");
+        }
+    }
+
+    println!("\n== 5. headline metrics ==");
+    let s_small = fig2.speedup(25, 4).unwrap();
+    let s_large = fig2.speedup(400, 4).unwrap();
+    println!("  Fig2: T(1)/T(4) grows with F: {s_small:.2}x @F=25 -> {s_large:.2}x @F=400");
+    let s4 = fig2.speedup(400, 4).unwrap();
+    let s5 = fig2.speedup(400, 5).unwrap();
+    println!(
+        "  Fig2: saturation: n=5 adds {:+.1}% over n=4 at F=400",
+        (s5 / s4 - 1.0) * 100.0
+    );
+    let wall = fig3.point(10, 3).unwrap().mean_s / fig3.point(200, 3).unwrap().mean_s;
+    println!("  Fig3: fine-granularity wall: s=10 is {wall:.1}x slower than s=200 at n=3");
+    let p4 = fig3.speedup(200, 4).unwrap();
+    println!("  Fig3: plateau speedup T(1)/T(4) @s=200: {p4:.2}x");
+    println!("\nend-to-end driver completed; figure data in target/figures/e2e_fig*.csv");
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Quickstart: plug a bundled MABS into the adaptive protocol and run it.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+
+fn main() {
+    // The paper's Fig. 3 model at a small scale: 1 000 agents on a ring
+    // lattice of degree 14, partitioned into subsets of 50 agents.
+    let params = SirParams {
+        agents: 1_000,
+        subset_size: 50,
+        steps: 200,
+        ..SirParams::default()
+    };
+    let seed = 42;
+
+    // Ground truth: canonical sequential execution.
+    let sequential = SirModel::new(params, seed);
+    let seq_report = SequentialEngine::new(seed).run(&sequential);
+
+    // The paper's protocol: n workers iterate the task chain, executing
+    // whatever their records prove independent.
+    let parallel = SirModel::new(params, seed);
+    let par_report = ParallelEngine::new(ProtocolConfig {
+        workers: 4,
+        tasks_per_cycle: 6, // the paper's C
+        seed,
+        collect_timing: false,
+    })
+    .run(&parallel);
+
+    println!("sequential: {}", seq_report.summary());
+    println!("parallel:   {}", par_report.summary());
+
+    // The protocol preserves the evolution of the system *exactly*.
+    assert_eq!(sequential.snapshot(), parallel.snapshot());
+    let (s, i, r) = parallel.census();
+    println!("final census: S={s} I={i} R={r}");
+    println!(
+        "protocol overhead: {:.1}% of task visits were skips/passes/retries",
+        par_report.overhead_ratio() * 100.0
+    );
+    println!("OK: parallel state is bit-identical to sequential");
+}

@@ -1,0 +1,100 @@
+"""AOT export: lower the L2 computations to HLO *text* artifacts.
+
+HLO text — NOT ``lowered.compile().serialize()`` and NOT serialized
+``HloModuleProto`` bytes — is the interchange format: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the Rust side's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Each artifact is listed in ``manifest.txt`` with its static parameters so
+the Rust runtime (rust/src/runtime/artifact.rs) can validate shapes:
+
+    <name> path=<file> key=value ...
+
+Usage: ``python -m compile.aot --out-dir ../artifacts [--paper-scale]``
+Idempotent per the Makefile (only rebuilt when inputs change).
+"""
+
+import argparse
+import os
+
+import jax
+
+from . import model
+
+jax.config.update("jax_enable_x64", True)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via stablehlo."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export(fn, args, out_dir, name, **meta):
+    """Lower ``fn(*args)``, write ``<name>.hlo.txt``, return manifest line."""
+    lowered = fn.lower(*args)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as fh:
+        fh.write(text)
+    fields = " ".join(f"{k}={v}" for k, v in meta.items())
+    print(f"  exported {fname} ({len(text)} chars)")
+    return f"{name} path={fname} {fields}".strip()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--paper-scale",
+        action="store_true",
+        help="also export artifacts at the paper's full system sizes",
+    )
+    ns = ap.parse_args()
+    os.makedirs(ns.out_dir, exist_ok=True)
+
+    omega = 0.95
+    p_si, p_ir, p_rs = 0.8, 0.1, 0.3
+    lines = []
+
+    # Axelrod: single interaction (the protocol-task-sized unit) and a
+    # batch variant (amortized dispatch).
+    for b, f in [(1, 100), (32, 100)]:
+        fn, args = model.jitted_axelrod(b, f, omega)
+        lines.append(
+            export(fn, args, ns.out_dir, f"axelrod_b{b}_f{f}",
+                   kind="axelrod", b=b, f=f, omega=omega)
+        )
+
+    # SIR: full synchronous sweep + block-sized compute task.
+    sir_shapes = [(300, 14, 30)]
+    if ns.paper_scale:
+        sir_shapes.append((4000, 14, 100))
+    for n, k, s in sir_shapes:
+        fn, args = model.jitted_sir_step(n, k, p_si, p_ir, p_rs)
+        lines.append(
+            export(fn, args, ns.out_dir, f"sir_step_n{n}_k{k}",
+                   kind="sir_step", n=n, k=k, p_si=p_si, p_ir=p_ir, p_rs=p_rs)
+        )
+        fn, args = model.jitted_sir_block(n, k, s, p_si, p_ir, p_rs)
+        lines.append(
+            export(fn, args, ns.out_dir, f"sir_block_n{n}_k{k}_s{s}",
+                   kind="sir_block", n=n, k=k, s=s,
+                   p_si=p_si, p_ir=p_ir, p_rs=p_rs)
+        )
+
+    manifest = os.path.join(ns.out_dir, "manifest.txt")
+    with open(manifest, "w") as fh:
+        fh.write("# adapar AOT artifact manifest: <name> path=<file> key=value ...\n")
+        fh.write("\n".join(lines) + "\n")
+    print(f"wrote {manifest} ({len(lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""L1 Pallas kernels: the paper models' compute hot-spots + jnp oracles."""

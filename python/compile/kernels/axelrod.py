@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: batched Axelrod pairwise interactions.
+
+The task-execution hot-spot of the cultural-dynamics experiment — the O(F)
+overlap scan plus the probabilistic trait copy — expressed as a Pallas
+kernel tiled over the interaction batch.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the batch dimension is the
+grid; each program instance holds a ``(block_b, F)`` tile of source and
+target traits in VMEM and performs lane-vectorized comparisons/reductions
+along F on the VPU (no MXU involvement — the model has no matmul). On this
+repository's CPU-only image the kernel runs with ``interpret=True``; real
+TPU lowering would emit a Mosaic custom-call the CPU PJRT client cannot
+execute.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _kernel(src_ref, tgt_ref, u1_ref, u2_ref, out_ref, *, omega, features):
+    src = src_ref[...]
+    tgt = tgt_ref[...]
+    u1 = u1_ref[...]
+    u2 = u2_ref[...]
+
+    same = jnp.sum((src == tgt).astype(jnp.int32), axis=1)
+    o = same.astype(jnp.float64) / features
+    d = features - same
+    eligible = (d > 0) & (o >= 1.0 - omega) & (u1 < o)
+    k = jnp.floor(u2 * d.astype(jnp.float64)).astype(jnp.int32)
+    k = jnp.minimum(k, jnp.maximum(d - 1, 0))
+    diff = src != tgt
+    idx = jnp.cumsum(diff.astype(jnp.int32), axis=1) - 1
+    copy = diff & (idx == k[:, None]) & eligible[:, None]
+    out_ref[...] = jnp.where(copy, src, tgt)
+
+
+def axelrod_interact(src, tgt, u_interact, u_pick, *, omega, block_b=None):
+    """Run the batched interaction kernel.
+
+    Args:
+      src, tgt: (B, F) int32 trait tiles.
+      u_interact, u_pick: (B,) float64 uniforms.
+      omega: bounded-confidence threshold (static).
+      block_b: batch tile size (defaults to min(B, 16); must divide B).
+
+    Returns:
+      (B, F) int32 — new target traits. Matches ``ref.axelrod_ref``.
+    """
+    b, f = src.shape
+    if block_b is None:
+        block_b = next(x for x in range(min(b, 16), 0, -1) if b % x == 0)
+    assert b % block_b == 0, f"block_b={block_b} must divide B={b}"
+    grid = (b // block_b,)
+    kernel = functools.partial(_kernel, omega=omega, features=f)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, f), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(src, tgt, u_interact, u_pick)

@@ -1,0 +1,84 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantic ground truth: every kernel in this package must
+match its oracle bit-for-bit (f64 probability arithmetic, i32 states), and
+the Rust native models implement the *same* arithmetic so that the PJRT
+execution path can reproduce native results when fed identical uniforms.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+
+def axelrod_ref(src, tgt, u_interact, u_pick, *, omega):
+    """Batched Axelrod interaction (oracle).
+
+    Args:
+      src: (B, F) int32 — source agents' traits (read-only).
+      tgt: (B, F) int32 — target agents' traits.
+      u_interact: (B,) float64 — uniform for the interaction draw.
+      u_pick: (B,) float64 — uniform for the differing-feature pick.
+      omega: bounded-confidence threshold (static).
+
+    Returns:
+      (B, F) int32 — new target traits.
+
+    Semantics (must match ``rust/src/models/axelrod.rs``): with overlap
+    ``o = |{f: src_f == tgt_f}| / F``, the pair interacts iff
+    ``1 - omega <= o < 1`` and ``u_interact < o``; then the target copies
+    the source's value on differing feature number ``floor(u_pick * d)``
+    (0-based among the ``d`` differing features, in feature order).
+    """
+    b, f = src.shape
+    same = jnp.sum((src == tgt).astype(jnp.int32), axis=1)  # (B,)
+    o = same.astype(jnp.float64) / f
+    d = f - same
+    eligible = (d > 0) & (o >= 1.0 - omega) & (u_interact < o)
+    k = jnp.floor(u_pick * d.astype(jnp.float64)).astype(jnp.int32)
+    k = jnp.minimum(k, jnp.maximum(d - 1, 0))  # guard u_pick -> 1.0 edge
+    diff = src != tgt  # (B, F)
+    # 0-based index of each differing slot along the feature axis.
+    idx = jnp.cumsum(diff.astype(jnp.int32), axis=1) - 1
+    copy = diff & (idx == k[:, None]) & eligible[:, None]
+    return jnp.where(copy, src, tgt)
+
+
+def sir_transition_ref(cur, frac, u, *, p_si, p_ir, p_rs):
+    """Batched SIR state transition (oracle).
+
+    Args:
+      cur: (N,) int32 in {0 (S), 1 (I), 2 (R)}.
+      frac: (N,) float64 — infected fraction among each agent's neighbours.
+      u: (N,) float64 — one uniform per agent.
+      p_si, p_ir, p_rs: transition parameters (static).
+
+    Returns:
+      (N,) int32 — next states.
+    """
+    s_next = jnp.where(u < p_si * frac, 1, 0)
+    i_next = jnp.where(u < p_ir, 2, 1)
+    r_next = jnp.where(u < p_rs, 0, 2)
+    return jnp.where(cur == 0, s_next, jnp.where(cur == 1, i_next, r_next)).astype(jnp.int32)
+
+
+def infected_fraction_ref(cur, nbrs):
+    """Infected-neighbour fraction.
+
+    Args:
+      cur: (N,) int32 states.
+      nbrs: (N, k) int32 neighbour indices.
+
+    Returns:
+      (N,) float64 — fraction of neighbours in state I.
+    """
+    k = nbrs.shape[1]
+    infected = (jnp.take(cur, nbrs, axis=0) == 1).astype(jnp.float64)
+    return jnp.sum(infected, axis=1) / k
+
+
+def sir_step_ref(cur, nbrs, u, *, p_si, p_ir, p_rs):
+    """Full synchronous SIR step (oracle): gather + transition."""
+    frac = infected_fraction_ref(cur, nbrs)
+    return sir_transition_ref(cur, frac, u, p_si=p_si, p_ir=p_ir, p_rs=p_rs)

@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: batched SIR state transitions.
+
+The per-agent transition logic (the compute half of a type-1 task, after
+the neighbour gather which stays in the surrounding L2 graph where XLA's
+native gather is optimal) as a Pallas kernel tiled over agents.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): agents tile along the grid;
+each instance holds ``(block_n,)`` state/fraction/uniform vectors in VMEM
+and evaluates the three-way transition with lane-vectorized selects — a
+purely elementwise, memory-bound kernel whose roofline is HBM bandwidth.
+Runs with ``interpret=True`` on this CPU-only image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _divisor_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is ≤ ``target`` (≥ 1)."""
+    for b in range(min(n, target), 0, -1):
+        if n % b == 0:
+            return b
+    return 1
+
+
+def _kernel(cur_ref, frac_ref, u_ref, out_ref, *, p_si, p_ir, p_rs):
+    cur = cur_ref[...]
+    frac = frac_ref[...]
+    u = u_ref[...]
+    s_next = jnp.where(u < p_si * frac, 1, 0)
+    i_next = jnp.where(u < p_ir, 2, 1)
+    r_next = jnp.where(u < p_rs, 0, 2)
+    out_ref[...] = jnp.where(
+        cur == 0, s_next, jnp.where(cur == 1, i_next, r_next)
+    ).astype(jnp.int32)
+
+
+def sir_transition(cur, frac, u, *, p_si, p_ir, p_rs, block_n=None):
+    """Run the batched transition kernel.
+
+    Args:
+      cur: (N,) int32 states in {0, 1, 2}.
+      frac: (N,) float64 infected-neighbour fractions.
+      u: (N,) float64 uniforms (one per agent).
+      p_si, p_ir, p_rs: transition parameters (static).
+      block_n: agent tile size (defaults to min(N, 128); must divide N).
+
+    Returns:
+      (N,) int32 — next states. Matches ``ref.sir_transition_ref``.
+    """
+    n = cur.shape[0]
+    if block_n is None:
+        block_n = _divisor_block(n, 128)
+    assert n % block_n == 0, f"block_n={block_n} must divide N={n}"
+    grid = (n // block_n,)
+    kernel = functools.partial(_kernel, p_si=p_si, p_ir=p_ir, p_rs=p_rs)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(cur, frac, u)

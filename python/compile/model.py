@@ -1,0 +1,108 @@
+"""L2: the JAX compute graphs lowered into the AOT artifacts.
+
+Each public function here is a *jit-able, array-in/array-out* computation
+that calls the L1 Pallas kernels for its hot-spot and is exported once to
+HLO text by ``aot.py``. Python never runs on the Rust request path.
+
+Exports:
+  * ``axelrod_step``  — batched pairwise interactions (kernel: axelrod).
+  * ``sir_step``      — full synchronous SIR sweep: XLA gather for the
+                        neighbour fractions + the transition kernel.
+  * ``sir_block_step``— the protocol-task-sized variant: computes new
+                        states for one contiguous agent block (dynamic
+                        start index), matching the Rust SIR model's
+                        compute-task semantics.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import axelrod as axelrod_kernel
+from .kernels import sir as sir_kernel
+
+jax.config.update("jax_enable_x64", True)
+
+
+def axelrod_step(src, tgt, u_interact, u_pick, *, omega):
+    """Batched Axelrod interactions; see ``kernels.axelrod``.
+
+    Shapes: src/tgt (B, F) int32; uniforms (B,) float64 → (B, F) int32.
+    """
+    return axelrod_kernel.axelrod_interact(src, tgt, u_interact, u_pick, omega=omega)
+
+
+def sir_step(cur, nbrs, u, *, p_si, p_ir, p_rs):
+    """One synchronous SIR sweep over all agents.
+
+    Shapes: cur (N,) int32, nbrs (N, k) int32, u (N,) float64 → (N,) int32.
+
+    The neighbour gather + mean runs as plain XLA (gather lowers to an
+    optimal loop on CPU and to efficient dynamic-slices on TPU); the
+    transition logic is the Pallas kernel.
+    """
+    k = nbrs.shape[1]
+    infected = (jnp.take(cur, nbrs, axis=0) == 1).astype(jnp.float64)
+    frac = jnp.sum(infected, axis=1) / k
+    return sir_kernel.sir_transition(cur, frac, u, p_si=p_si, p_ir=p_ir, p_rs=p_rs)
+
+
+def sir_block_step(cur, nbrs, u, start, *, block, p_si, p_ir, p_rs):
+    """New states for one contiguous agent block (a protocol compute task).
+
+    Args:
+      cur: (N,) int32 — current states of the whole system.
+      nbrs: (N, k) int32 — neighbour matrix.
+      u: (block,) float64 — uniforms for the block's agents.
+      start: () int32 — first agent of the block.
+      block: static block size `s`.
+
+    Returns:
+      (block,) int32 — new states for agents ``start .. start+block``.
+    """
+    k = nbrs.shape[1]
+    cur_block = jax.lax.dynamic_slice(cur, (start,), (block,))
+    nbrs_block = jax.lax.dynamic_slice(nbrs, (start, jnp.int32(0)), (block, k))
+    infected = (jnp.take(cur, nbrs_block, axis=0) == 1).astype(jnp.float64)
+    frac = jnp.sum(infected, axis=1) / k
+    return sir_kernel.sir_transition(
+        cur_block, frac, u, p_si=p_si, p_ir=p_ir, p_rs=p_rs, block_n=min(block, 128)
+    )
+
+
+def jitted_axelrod(b, f, omega):
+    """Jitted ``axelrod_step`` closed over static params, with arg specs."""
+    fn = jax.jit(functools.partial(axelrod_step, omega=omega))
+    args = (
+        jax.ShapeDtypeStruct((b, f), jnp.int32),
+        jax.ShapeDtypeStruct((b, f), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.float64),
+        jax.ShapeDtypeStruct((b,), jnp.float64),
+    )
+    return fn, args
+
+
+def jitted_sir_step(n, k, p_si, p_ir, p_rs):
+    """Jitted ``sir_step`` closed over static params, with arg specs."""
+    fn = jax.jit(functools.partial(sir_step, p_si=p_si, p_ir=p_ir, p_rs=p_rs))
+    args = (
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n, k), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.float64),
+    )
+    return fn, args
+
+
+def jitted_sir_block(n, k, block, p_si, p_ir, p_rs):
+    """Jitted ``sir_block_step`` closed over static params, with arg specs."""
+    fn = jax.jit(
+        functools.partial(sir_block_step, block=block, p_si=p_si, p_ir=p_ir, p_rs=p_rs)
+    )
+    args = (
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n, k), jnp.int32),
+        jax.ShapeDtypeStruct((block,), jnp.float64),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    return fn, args

@@ -1,0 +1,111 @@
+"""Axelrod Pallas kernel vs pure-jnp oracle — the L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.axelrod import axelrod_interact
+from compile.kernels.ref import axelrod_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _case(seed, b, f, q=3):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, q, size=(b, f)).astype(np.int32)
+    tgt = rng.integers(0, q, size=(b, f)).astype(np.int32)
+    u1 = rng.random(size=(b,))
+    u2 = rng.random(size=(b,))
+    return src, tgt, u1, u2
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.sampled_from([1, 2, 4, 8, 16]),
+    f=st.integers(2, 40),
+    omega=st.sampled_from([0.3, 0.95, 1.0]),
+)
+def test_kernel_matches_ref(seed, b, f, omega):
+    src, tgt, u1, u2 = _case(seed, b, f)
+    got = axelrod_interact(src, tgt, u1, u2, omega=omega, block_b=min(b, 4) if b % 4 == 0 or b < 4 else 1)
+    want = axelrod_ref(src, tgt, u1, u2, omega=omega)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_identical_agents_are_noop():
+    src = np.ones((4, 10), dtype=np.int32)
+    tgt = np.ones((4, 10), dtype=np.int32)
+    u1 = np.zeros(4)
+    u2 = np.zeros(4)
+    out = axelrod_interact(src, tgt, u1, u2, omega=1.0)
+    np.testing.assert_array_equal(np.asarray(out), tgt)
+
+
+def test_interaction_copies_exactly_one_feature():
+    src, tgt, _, _ = _case(7, 8, 20)
+    u1 = np.zeros(8)  # u1 < o whenever o > 0: interact if any overlap
+    u2 = np.full(8, 0.5)
+    out = np.asarray(axelrod_interact(src, tgt, u1, u2, omega=1.0))
+    for row in range(8):
+        same_before = int((src[row] == tgt[row]).sum())
+        changed = int((out[row] != tgt[row]).sum())
+        overlap = same_before / 20
+        if 0 < overlap < 1:
+            assert changed == 1, f"row {row} changed {changed} features"
+            # The changed feature must now equal the source's value.
+            i = int(np.nonzero(out[row] != tgt[row])[0][0])
+            assert out[row, i] == src[row, i]
+        else:
+            assert changed == 0
+
+
+def test_bounded_confidence_window_blocks_interaction():
+    # Overlap = 0.5; with omega = 0.3 the window is [0.7, 1): ineligible.
+    f = 10
+    src = np.zeros((1, f), dtype=np.int32)
+    tgt = np.concatenate([np.zeros((1, f // 2)), np.ones((1, f // 2))], axis=1).astype(np.int32)
+    out = axelrod_interact(src, tgt, np.zeros(1), np.zeros(1), omega=0.3)
+    np.testing.assert_array_equal(np.asarray(out), tgt)
+
+
+def test_u_interact_threshold_is_strict():
+    # o = 0.5: u1 = 0.5 must NOT interact (u < o is strict), u1 < 0.5 must.
+    f = 4
+    src = np.array([[1, 1, 2, 2]], dtype=np.int32)
+    tgt = np.array([[1, 1, 3, 3]], dtype=np.int32)
+    out_eq = np.asarray(axelrod_interact(src, tgt, np.array([0.5]), np.array([0.0]), omega=1.0))
+    np.testing.assert_array_equal(out_eq, tgt)
+    out_lt = np.asarray(axelrod_interact(src, tgt, np.array([0.49]), np.array([0.0]), omega=1.0))
+    assert (out_lt != tgt).sum() == 1
+
+
+def test_pick_selects_kth_differing_feature():
+    # d = 4 differing features at positions 1, 3, 5, 7; u2 = 0.6 -> k = 2
+    # -> position 5.
+    f = 8
+    src = np.zeros((1, f), dtype=np.int32)
+    tgt = np.zeros((1, f), dtype=np.int32)
+    tgt[0, [1, 3, 5, 7]] = 1
+    out = np.asarray(
+        axelrod_interact(src, tgt, np.array([0.0]), np.array([0.6]), omega=1.0)
+    )
+    expect = tgt.copy()
+    expect[0, 5] = 0
+    np.testing.assert_array_equal(out, expect)
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4, 8])
+def test_block_size_invariance(block_b):
+    src, tgt, u1, u2 = _case(3, 8, 16)
+    out = axelrod_interact(src, tgt, u1, u2, omega=0.95, block_b=block_b)
+    want = axelrod_ref(src, tgt, u1, u2, omega=0.95)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_dtype_is_preserved():
+    src, tgt, u1, u2 = _case(1, 4, 8)
+    out = axelrod_interact(src, tgt, u1, u2, omega=0.95)
+    assert out.dtype == jnp.int32

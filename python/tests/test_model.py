@@ -1,0 +1,91 @@
+"""L2 model graphs: composition, block/full consistency, jit stability."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import axelrod_ref, sir_step_ref
+
+jax.config.update("jax_enable_x64", True)
+
+P = dict(p_si=0.8, p_ir=0.1, p_rs=0.3)
+
+
+def _ring_nbrs(n, k):
+    return np.stack(
+        [np.roll(np.arange(n), -d) for d in range(1, k // 2 + 1)]
+        + [np.roll(np.arange(n), d) for d in range(1, k // 2 + 1)],
+        axis=1,
+    ).astype(np.int32)
+
+
+def test_axelrod_step_matches_ref():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 3, size=(16, 25)).astype(np.int32)
+    tgt = rng.integers(0, 3, size=(16, 25)).astype(np.int32)
+    u1, u2 = rng.random(16), rng.random(16)
+    got = model.axelrod_step(src, tgt, u1, u2, omega=0.95)
+    want = axelrod_ref(src, tgt, u1, u2, omega=0.95)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_sir_step_matches_ref():
+    rng = np.random.default_rng(1)
+    n, k = 128, 6
+    cur = rng.integers(0, 3, size=n).astype(np.int32)
+    nbrs = _ring_nbrs(n, k)
+    u = rng.random(n)
+    got = model.sir_step(cur, nbrs, u, **P)
+    want = sir_step_ref(cur, nbrs, u, **P)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), start_block=st.integers(0, 3))
+def test_block_step_equals_full_step_slice(seed, start_block):
+    rng = np.random.default_rng(seed)
+    n, k, s = 120, 6, 30
+    cur = rng.integers(0, 3, size=n).astype(np.int32)
+    nbrs = _ring_nbrs(n, k)
+    u_full = rng.random(n)
+    start = start_block * s
+    full = np.asarray(model.sir_step(cur, nbrs, u_full, **P))
+    block = np.asarray(
+        model.sir_block_step(
+            cur, nbrs, u_full[start : start + s], jnp.int32(start), block=s, **P
+        )
+    )
+    np.testing.assert_array_equal(block, full[start : start + s])
+
+
+def test_jitted_wrappers_lower_and_run():
+    fn, args = model.jitted_axelrod(4, 10, 0.95)
+    lowered = fn.lower(*args)
+    assert lowered is not None
+    rng = np.random.default_rng(2)
+    out = fn(
+        rng.integers(0, 3, size=(4, 10)).astype(np.int32),
+        rng.integers(0, 3, size=(4, 10)).astype(np.int32),
+        rng.random(4),
+        rng.random(4),
+    )
+    assert out.shape == (4, 10) and out.dtype == jnp.int32
+
+    fn, args = model.jitted_sir_step(64, 4, **P)
+    out = fn(
+        rng.integers(0, 3, size=64).astype(np.int32),
+        _ring_nbrs(64, 4),
+        rng.random(64),
+    )
+    assert out.shape == (64,) and out.dtype == jnp.int32
+
+    fn, args = model.jitted_sir_block(64, 4, 16, **P)
+    out = fn(
+        rng.integers(0, 3, size=64).astype(np.int32),
+        _ring_nbrs(64, 4),
+        rng.random(16),
+        jnp.int32(16),
+    )
+    assert out.shape == (16,) and out.dtype == jnp.int32

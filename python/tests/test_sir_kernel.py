@@ -1,0 +1,90 @@
+"""SIR Pallas kernel vs pure-jnp oracle."""
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import infected_fraction_ref, sir_step_ref, sir_transition_ref
+from compile.kernels.sir import sir_transition
+
+jax.config.update("jax_enable_x64", True)
+
+P = dict(p_si=0.8, p_ir=0.1, p_rs=0.3)
+
+
+def _case(seed, n):
+    rng = np.random.default_rng(seed)
+    cur = rng.integers(0, 3, size=n).astype(np.int32)
+    frac = rng.random(size=n)
+    u = rng.random(size=n)
+    return cur, frac, u
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.sampled_from([1, 8, 64, 128, 256]),
+    p_si=st.sampled_from([0.0, 0.5, 0.8, 1.0]),
+)
+def test_kernel_matches_ref(seed, n, p_si):
+    cur, frac, u = _case(seed, n)
+    params = dict(P, p_si=p_si)
+    got = sir_transition(cur, frac, u, **params, block_n=min(n, 64))
+    want = sir_transition_ref(cur, frac, u, **params)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_states_stay_in_range():
+    cur, frac, u = _case(5, 512)
+    out = np.asarray(sir_transition(cur, frac, u, **P))
+    assert set(np.unique(out)).issubset({0, 1, 2})
+
+
+def test_transition_structure():
+    # S with zero infected fraction never infects; I->R and R->S move only
+    # one step; nobody jumps S->R or I->S.
+    n = 256
+    cur, _, u = _case(9, n)
+    frac = np.zeros(n)
+    out = np.asarray(sir_transition(cur, frac, u, **P))
+    for before, after in zip(cur, out):
+        if before == 0:
+            assert after == 0, "S with no infected neighbours stays S"
+        elif before == 1:
+            assert after in (1, 2)
+        else:
+            assert after in (2, 0)
+
+
+def test_certain_infection():
+    # frac = 1, p_si = 1, u < 1: S always becomes I.
+    n = 64
+    cur = np.zeros(n, dtype=np.int32)
+    frac = np.ones(n)
+    u = np.full(n, 0.999)
+    out = np.asarray(sir_transition(cur, frac, u, p_si=1.0, p_ir=0.1, p_rs=0.3))
+    assert (out == 1).all()
+
+
+def test_infected_fraction_ref_on_ring():
+    # 4-ring, agent 0's neighbours are 1 and 3.
+    cur = np.array([0, 1, 0, 1], dtype=np.int32)
+    nbrs = np.array([[1, 3], [2, 0], [3, 1], [0, 2]], dtype=np.int32)
+    frac = np.asarray(infected_fraction_ref(cur, nbrs))
+    np.testing.assert_allclose(frac, [1.0, 0.0, 1.0, 0.0])
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_full_step_composes_gather_and_transition(seed):
+    rng = np.random.default_rng(seed)
+    n, k = 120, 6
+    cur = rng.integers(0, 3, size=n).astype(np.int32)
+    nbrs = np.stack(
+        [np.roll(np.arange(n), -d) for d in range(1, k + 1)], axis=1
+    ).astype(np.int32)
+    u = rng.random(size=n)
+    want = sir_step_ref(cur, nbrs, u, **P)
+    frac = infected_fraction_ref(cur, nbrs)
+    got = sir_transition(cur, np.asarray(frac), u, **P, block_n=60)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

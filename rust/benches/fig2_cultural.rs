@@ -1,0 +1,88 @@
+//! FIG2 — regenerates the paper's Figure 2: cultural dynamics, simulation
+//! time T vs task-size proxy F (number of features), one curve per worker
+//! count n ∈ {1..5}, averaged over seeds with SEM error bars.
+//!
+//! Two series are produced:
+//!   * `virtual` — the multi-core testbed (the figure's actual content;
+//!     this host has one core, see DESIGN.md §2);
+//!   * `native n=1` — real single-worker protocol wall-clock, which checks
+//!     the *overhead* aspect visible on any host: T grows with F and the
+//!     per-task protocol cost amortizes.
+//!
+//! `ADAPAR_PAPER_SCALE=1 cargo bench --bench fig2_cultural` runs the
+//! paper's full N=10⁴ / 2×10⁶-step workload (hours); the default is a
+//! faithfully-shaped scaled workload.
+
+use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::report::{figure_pivot, long_table, write_report};
+use adapar::coordinator::run_sweep;
+use adapar::models::axelrod::{AxelrodModel, AxelrodParams};
+use adapar::protocol::{ParallelEngine, ProtocolConfig};
+use adapar::util::bench::{Bench, fmt_secs};
+
+fn paper_scale() -> bool {
+    std::env::var("ADAPAR_PAPER_SCALE").is_ok_and(|v| v == "1")
+}
+
+fn main() -> anyhow::Result<()> {
+    let paper = paper_scale();
+    let cfg = SweepConfig {
+        model: ModelKind::Axelrod,
+        engine: EngineKind::Virtual,
+        sizes: vec![25, 50, 100, 200, 400, 800],
+        workers: vec![1, 2, 3, 4, 5],
+        seeds: if paper { vec![1, 2, 3, 4, 5] } else { vec![1, 2, 3] },
+        agents: if paper { 10_000 } else { 1_000 },
+        steps: if paper { 2_000_000 } else { 30_000 },
+        paper_scale: paper,
+        calibrate: true,
+        ..Default::default()
+    };
+
+    eprintln!("== FIG2 virtual-testbed series (T vs F, n=1..5) ==");
+    let res = run_sweep(&cfg)?;
+    println!("{}", figure_pivot(&res).to_markdown());
+    write_report(&res, std::path::Path::new("target/bench-data"), "fig2_virtual")?;
+
+    // Acceptance criteria from DESIGN.md §7.
+    let mut ok = true;
+    for &f in &cfg.sizes {
+        let t1 = res.point(f, 1).unwrap().mean_s;
+        let t4 = res.point(f, 4).unwrap().mean_s;
+        eprintln!("F={f:>4}: T(1)={} T(4)={} speedup={:.2}x", fmt_secs(t1), fmt_secs(t4), t1 / t4);
+    }
+    let grow = res.speedup(800, 4).unwrap() > res.speedup(25, 4).unwrap();
+    eprintln!("speedup grows with F: {}", if grow { "PASS" } else { "FAIL" });
+    ok &= grow;
+    let t_monotone = res.point(25, 1).unwrap().mean_s < res.point(800, 1).unwrap().mean_s;
+    eprintln!("T increases with F: {}", if t_monotone { "PASS" } else { "FAIL" });
+    ok &= t_monotone;
+
+    // Native single-worker wall-clock: the overhead amortization aspect.
+    eprintln!("\n== FIG2 native n=1 wall-clock (overhead aspect) ==");
+    let mut bench = Bench::new("fig2_native_n1");
+    for &f in &[25usize, 100, 400] {
+        let steps = if paper { 200_000 } else { 30_000 };
+        let agents = if paper { 10_000 } else { 1_000 };
+        let mut seed = 0u64;
+        bench.measure(&format!("axelrod F={f} native n=1"), Default::default(), || {
+            seed += 1;
+            let m = AxelrodModel::new(
+                AxelrodParams { agents, features: f, traits: 3, omega: 0.95, steps },
+                seed,
+            );
+            ParallelEngine::new(ProtocolConfig {
+                workers: 1,
+                tasks_per_cycle: 6,
+                seed,
+                collect_timing: false,
+            })
+            .run(&m)
+        });
+    }
+    bench.write_csv()?;
+    let _ = long_table(&res);
+    anyhow::ensure!(ok, "FIG2 acceptance criteria failed");
+    eprintln!("fig2_cultural: all acceptance criteria PASS");
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! FIG3 — regenerates the paper's Figure 3: disease spreading, simulation
+//! time T vs task-size proxy s (agents per subset), one curve per worker
+//! count n ∈ {1..5}.
+//!
+//! Expected shape (paper §4.2 / DESIGN.md §7): sharp T decrease with s at
+//! small s (protocol overhead per agent ∝ 1/s), then stabilization; in the
+//! plateau T decreases with n, saturating around n = 4; at very small s
+//! extra workers may *hurt*.
+
+use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::report::{figure_pivot, write_report};
+use adapar::coordinator::run_sweep;
+use adapar::util::bench::fmt_secs;
+
+fn paper_scale() -> bool {
+    std::env::var("ADAPAR_PAPER_SCALE").is_ok_and(|v| v == "1")
+}
+
+fn main() -> anyhow::Result<()> {
+    let paper = paper_scale();
+    let cfg = SweepConfig {
+        model: ModelKind::Sir,
+        engine: EngineKind::Virtual,
+        sizes: vec![10, 20, 50, 100, 200, 500, 1000],
+        workers: vec![1, 2, 3, 4, 5],
+        seeds: if paper { vec![1, 2, 3, 4, 5] } else { vec![1, 2, 3] },
+        agents: 4_000,
+        steps: if paper { 3_000 } else { 150 },
+        paper_scale: paper,
+        calibrate: true,
+        ..Default::default()
+    };
+
+    eprintln!("== FIG3 virtual-testbed series (T vs s, n=1..5) ==");
+    let res = run_sweep(&cfg)?;
+    println!("{}", figure_pivot(&res).to_markdown());
+    write_report(&res, std::path::Path::new("target/bench-data"), "fig3_virtual")?;
+
+    for &s in &cfg.sizes {
+        let t1 = res.point(s, 1).unwrap().mean_s;
+        let t4 = res.point(s, 4).unwrap().mean_s;
+        let ov = res.point(s, 4).unwrap().overhead;
+        eprintln!(
+            "s={s:>5}: T(1)={} T(4)={} speedup={:.2}x overhead={:.0}%",
+            fmt_secs(t1),
+            fmt_secs(t4),
+            t1 / t4,
+            ov * 100.0
+        );
+    }
+
+    // Acceptance criteria (DESIGN.md §7).
+    let mut ok = true;
+    let fine = res.point(10, 3).unwrap().mean_s;
+    let plateau = res.point(200, 3).unwrap().mean_s;
+    let wall = fine > plateau * 1.3;
+    eprintln!("fine-granularity wall (s=10 ≫ s=200 at n=3): {}", if wall { "PASS" } else { "FAIL" });
+    ok &= wall;
+    let plateau_speedup = res.speedup(200, 4).unwrap();
+    let helps = plateau_speedup > 1.4;
+    eprintln!("plateau parallelism T(1)/T(4)={plateau_speedup:.2}x > 1.4: {}", if helps { "PASS" } else { "FAIL" });
+    ok &= helps;
+    // At tiny s extra workers gain little (or hurt): speedup(10, 5) should
+    // be well below speedup(200, 5).
+    let tiny = res.speedup(10, 5).unwrap();
+    let plateau5 = res.speedup(200, 5).unwrap();
+    let saturates = tiny < plateau5;
+    eprintln!(
+        "small-s saturation (T(1)/T(5): {tiny:.2}x @s=10 < {plateau5:.2}x @s=200): {}",
+        if saturates { "PASS" } else { "FAIL" }
+    );
+    ok &= saturates;
+
+    anyhow::ensure!(ok, "FIG3 acceptance criteria failed");
+    eprintln!("fig3_sir: all acceptance criteria PASS");
+    Ok(())
+}

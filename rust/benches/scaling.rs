@@ -1,0 +1,63 @@
+//! SCALE — §1's premise: "scaling is at least linear in system size". T/N
+//! should be roughly flat for SIR (work ∝ N per step) and T/steps flat for
+//! Axelrod (work per interaction independent of N), measured natively
+//! (sequential) and on the virtual testbed at n = 4.
+
+use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::run_once;
+use adapar::util::csv::Table;
+use adapar::vtime::CostModel;
+
+fn main() -> anyhow::Result<()> {
+    let cost = CostModel::default();
+    let mut table = Table::new(["model", "N", "engine", "T_s", "T_per_agent_us"]);
+
+    for n_agents in [1_000usize, 2_000, 4_000, 8_000] {
+        for engine in [EngineKind::Sequential, EngineKind::Virtual] {
+            let cfg = SweepConfig {
+                model: ModelKind::Sir,
+                engine,
+                sizes: vec![100],
+                workers: vec![4],
+                seeds: vec![1],
+                agents: n_agents,
+                steps: 100,
+                ..Default::default()
+            };
+            let t = run_once(&cfg, 100, 4, 1, &cost)?.time_s;
+            table.push([
+                "sir".into(),
+                n_agents.to_string(),
+                engine.to_string(),
+                format!("{t:.6}"),
+                format!("{:.3}", t / n_agents as f64 * 1e6),
+            ]);
+        }
+    }
+
+    for n_agents in [500usize, 1_000, 2_000, 4_000] {
+        let cfg = SweepConfig {
+            model: ModelKind::Axelrod,
+            engine: EngineKind::Sequential,
+            sizes: vec![100],
+            workers: vec![1],
+            seeds: vec![1],
+            agents: n_agents,
+            steps: 30_000,
+            ..Default::default()
+        };
+        let t = run_once(&cfg, 100, 1, 1, &cost)?.time_s;
+        table.push([
+            "axelrod".into(),
+            n_agents.to_string(),
+            "sequential".into(),
+            format!("{t:.6}"),
+            format!("{:.3}", t / 30_000.0 * 1e6), // per step, not per agent
+        ]);
+    }
+
+    println!("{}", table.to_markdown());
+    table.write_csv("target/bench-data/scaling.csv")?;
+    eprintln!("scaling: done (expect ~flat per-agent/per-step columns)");
+    Ok(())
+}

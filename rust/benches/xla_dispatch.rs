@@ -1,0 +1,113 @@
+//! XLA — the three-layer integration cost anatomy: per-task PJRT dispatch
+//! vs native task bodies, and batch amortization (b=1 vs b=32 Axelrod
+//! artifacts). Artifact-gated: prints a skip notice without
+//! `make artifacts`.
+
+use std::time::Instant;
+
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::protocol::SequentialEngine;
+use adapar::runtime::xla_engine::{XlaAxelrodInteractor, XlaSirModel};
+use adapar::runtime::{Manifest, XlaRuntime};
+use adapar::runtime::exec::{lit_f64, lit_i32_2d};
+use adapar::util::csv::Table;
+
+fn main() -> anyhow::Result<()> {
+    let dir = Manifest::default_dir();
+    let Ok(manifest) = Manifest::load(&dir) else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return Ok(());
+    };
+    let rt = XlaRuntime::cpu()?;
+    let mut table = Table::new(["path", "what", "per_unit_us"]);
+
+    // --- SIR: native vs XLA-dispatched compute tasks ---------------------
+    let params = SirParams::scaled(30, 300, 40);
+    let seed = 2;
+    let native = SirModel::new(params, 1);
+    let t0 = Instant::now();
+    SequentialEngine::new(seed).run(&native);
+    let t_native = t0.elapsed().as_secs_f64();
+    let n_tasks = (params.steps * 2 * (params.agents / params.subset_size) as u64) as f64;
+
+    let xla = XlaSirModel::from_manifest(&rt, &manifest, SirModel::new(params, 1))?;
+    let t0 = Instant::now();
+    SequentialEngine::new(seed).run(&xla);
+    let t_xla = t0.elapsed().as_secs_f64();
+    assert_eq!(native.snapshot(), xla.snapshot());
+
+    table.push([
+        "native".into(),
+        "sir task".into(),
+        format!("{:.3}", t_native / n_tasks * 1e6),
+    ]);
+    table.push([
+        "pjrt per-task".into(),
+        "sir task".into(),
+        format!("{:.3}", t_xla / n_tasks * 1e6),
+    ]);
+    eprintln!(
+        "sir: native {:.3}s vs per-task PJRT {:.3}s => dispatch multiplier {:.0}x",
+        t_native,
+        t_xla,
+        t_xla / t_native.max(1e-12)
+    );
+
+    // --- Axelrod: single-pair vs batched artifact amortization -----------
+    let single = XlaAxelrodInteractor::from_manifest(&rt, &manifest)?;
+    let f = single.features();
+    let src = vec![1i32; f];
+    let mut tgt = vec![1i32; f];
+    tgt[0] = 2;
+    let reps = 300;
+    let t0 = Instant::now();
+    for i in 0..reps {
+        let u = i as f64 / reps as f64;
+        std::hint::black_box(single.interact(&src, &tgt, u, u)?);
+    }
+    let per_single = t0.elapsed().as_secs_f64() / reps as f64;
+    table.push([
+        "pjrt b=1".into(),
+        "axelrod interaction".into(),
+        format!("{:.3}", per_single * 1e6),
+    ]);
+
+    if let Some(entry) = manifest
+        .entries()
+        .iter()
+        .find(|e| e.kind() == "axelrod" && e.get("b") == Some("32"))
+    {
+        let exe = rt.load_hlo_text(&entry.path)?;
+        let b = 32usize;
+        let srcs = vec![1i32; b * f];
+        let mut tgts = vec![1i32; b * f];
+        for row in 0..b {
+            tgts[row * f] = 2;
+        }
+        let u: Vec<f64> = (0..b).map(|i| i as f64 / b as f64).collect();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(exe.call1(&[
+                lit_i32_2d(&srcs, b, f)?,
+                lit_i32_2d(&tgts, b, f)?,
+                lit_f64(&u),
+                lit_f64(&u),
+            ])?);
+        }
+        let per_batched = t0.elapsed().as_secs_f64() / (reps * b) as f64;
+        table.push([
+            "pjrt b=32".into(),
+            "axelrod interaction".into(),
+            format!("{:.3}", per_batched * 1e6),
+        ]);
+        eprintln!(
+            "axelrod: batching 32 interactions per dispatch amortizes {:.1}x",
+            per_single / per_batched.max(1e-12)
+        );
+    }
+
+    println!("{}", table.to_markdown());
+    table.write_csv("target/bench-data/xla_dispatch.csv")?;
+    eprintln!("xla_dispatch: done");
+    Ok(())
+}

@@ -1,0 +1,436 @@
+//! The chain container: sentinels, structural mutation (append/unlink),
+//! and counters.
+//!
+//! Structural discipline (who may touch what):
+//!
+//! * **Append** — only a worker holding the *tail sentinel's* visitor slot
+//!   (and located at the current last node, holding its slot too) may
+//!   append. This realizes "at most one task is created at any instant"
+//!   (§3.3) and the enter-lock's empty-chain case.
+//! * **Unlink** — only the worker that executed a task may unlink it, while
+//!   holding the task's visitor slot and the chain's [`erase
+//!   lock`](Chain::unlink); "the erase-lock ensures that at most one task
+//!   is being erased at any given point in time" (§3.3).
+//! * **Pointer reads** — any worker, under the node's link lock (a leaf
+//!   lock, never held across blocking operations).
+//!
+//! Appends and unlinks can interleave, so `unlink` revalidates the
+//! neighbour snapshot after taking the three link locks (ascending `order`,
+//! hence deadlock-free) and retries if an append slipped in.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::node::{Links, Node, NodeKind};
+
+/// The task chain. `R` is the model's recipe type.
+#[derive(Debug)]
+pub struct Chain<R> {
+    head: Arc<Node<R>>,
+    tail: Arc<Node<R>>,
+    erase_lock: Mutex<()>,
+    /// Live (linked, not-erased) task count.
+    len: AtomicUsize,
+    /// High-water mark of `len`.
+    max_len: AtomicUsize,
+    /// Total tasks ever appended; also the next task's `seq`.
+    created: AtomicU64,
+    /// Total tasks erased (== executed).
+    erased: AtomicU64,
+    /// Set once the task source returns `None`.
+    exhausted: AtomicBool,
+}
+
+impl<R> Default for Chain<R> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<R> Chain<R> {
+    /// An empty chain (`head ↔ tail`).
+    pub fn new() -> Self {
+        let head = Node::sentinel(NodeKind::Head, 0);
+        let tail = Node::sentinel(NodeKind::Tail, u64::MAX);
+        {
+            let mut hl = head.links.lock().unwrap();
+            hl.next = Some(tail.clone());
+        }
+        {
+            let mut tl = tail.links.lock().unwrap();
+            tl.prev = Arc::downgrade(&head);
+        }
+        Self {
+            head,
+            tail,
+            erase_lock: Mutex::new(()),
+            len: AtomicUsize::new(0),
+            max_len: AtomicUsize::new(0),
+            created: AtomicU64::new(0),
+            erased: AtomicU64::new(0),
+            exhausted: AtomicBool::new(false),
+        }
+    }
+
+    /// Head sentinel.
+    #[inline]
+    pub fn head(&self) -> &Arc<Node<R>> {
+        &self.head
+    }
+
+    /// Tail sentinel.
+    #[inline]
+    pub fn tail(&self) -> &Arc<Node<R>> {
+        &self.tail
+    }
+
+    /// Whether `node` is the tail sentinel.
+    #[inline]
+    pub fn is_tail(&self, node: &Arc<Node<R>>) -> bool {
+        Arc::ptr_eq(node, &self.tail)
+    }
+
+    /// Live task count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Acquire)
+    }
+
+    /// Whether no live tasks remain.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// High-water mark of the live task count.
+    pub fn max_len(&self) -> usize {
+        self.max_len.load(Ordering::Relaxed)
+    }
+
+    /// Total tasks appended so far.
+    pub fn created(&self) -> u64 {
+        self.created.load(Ordering::Relaxed)
+    }
+
+    /// Total tasks erased so far.
+    pub fn erased(&self) -> u64 {
+        self.erased.load(Ordering::Relaxed)
+    }
+
+    /// Mark the task source as exhausted (no more tasks will ever appear).
+    pub fn set_exhausted(&self) {
+        self.exhausted.store(true, Ordering::Release);
+    }
+
+    /// Whether the task source is exhausted.
+    #[inline]
+    pub fn exhausted(&self) -> bool {
+        self.exhausted.load(Ordering::Acquire)
+    }
+
+    /// Append a task after `last` (which must be the node immediately
+    /// before the tail).
+    ///
+    /// # Locking contract
+    /// The caller holds `last`'s visitor slot *and* the tail's visitor
+    /// slot; the former pins `last` (it cannot be erased under us), the
+    /// latter serializes appends.
+    pub fn append_after(&self, last: &Arc<Node<R>>, recipe: R) -> Arc<Node<R>> {
+        let seq = self.created.fetch_add(1, Ordering::AcqRel);
+        // Pre-linked construction: the node is unpublished, so its own
+        // link lock is not needed (perf: one fewer lock round-trip).
+        let node = Node::task_linked(seq, recipe, Arc::downgrade(last), Some(self.tail.clone()));
+        {
+            let mut ll = last.links.lock().unwrap();
+            debug_assert!(
+                ll.next.as_ref().is_some_and(|n| Arc::ptr_eq(n, &self.tail)),
+                "append_after: `last` is not the last node"
+            );
+            ll.next = Some(node.clone());
+        }
+        {
+            let mut tl = self.tail.links.lock().unwrap();
+            tl.prev = Arc::downgrade(&node);
+        }
+        let len = self.len.fetch_add(1, Ordering::AcqRel) + 1;
+        // Check-before-RMW: the high-water mark rarely moves, so skip the
+        // atomic max in the common case (EXPERIMENTS.md §Perf).
+        if len > self.max_len.load(Ordering::Relaxed) {
+            self.max_len.fetch_max(len, Ordering::Relaxed);
+        }
+        node
+    }
+
+    /// Unlink an executed task node and mark it erased.
+    ///
+    /// # Locking contract
+    /// The caller holds `node`'s visitor slot and `node` is in state
+    /// `Executing` (execution finished). Takes the erase lock internally.
+    pub fn unlink(&self, node: &Arc<Node<R>>) {
+        debug_assert_eq!(node.kind(), NodeKind::Task);
+        let _erase = self.erase_lock.lock().unwrap();
+        loop {
+            // Snapshot neighbours.
+            let (prev_w, next) = {
+                let nl = node.links.lock().unwrap();
+                (
+                    nl.prev.clone(),
+                    nl.next.clone().expect("unlink of already-unlinked node"),
+                )
+            };
+            let prev = prev_w
+                .upgrade()
+                .expect("prev of a linked node is kept alive by the forward chain");
+            debug_assert!(prev.order < node.order && node.order < next.order);
+
+            // Lock links in ascending `order`, then revalidate (an append
+            // may have replaced node.next while we were acquiring).
+            let mut pl = prev.links.lock().unwrap();
+            let mut nl = node.links.lock().unwrap();
+            let still_valid = nl.next.as_ref().is_some_and(|n| Arc::ptr_eq(n, &next))
+                && nl.prev.ptr_eq(&Arc::downgrade(&prev));
+            if !still_valid {
+                continue;
+            }
+            let mut xl = next.links.lock().unwrap();
+            // prev.next must still point at node: only erases change it and
+            // we hold the erase lock.
+            debug_assert!(pl.next.as_ref().is_some_and(|n| Arc::ptr_eq(n, node)));
+            pl.next = Some(next.clone());
+            xl.prev = nl.prev.clone();
+            // Clear the node's own links: erased nodes must not keep
+            // successors alive (prevents tombstone chains / recursive
+            // drops) and visitors finding the node erased retry from their
+            // previous position instead of following stale pointers.
+            *nl = Links {
+                prev: std::sync::Weak::new(),
+                next: None,
+            };
+            break;
+        }
+        node.mark_erased();
+        self.len.fetch_sub(1, Ordering::AcqRel);
+        self.erased.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Walk the chain forward and check all structural invariants.
+    /// **Quiescent use only** (tests / debug): takes no visitor slots.
+    pub fn validate(&self) -> Result<Vec<u64>, String> {
+        let mut seqs = Vec::new();
+        let mut cur = self.head.clone();
+        let mut last_order = 0u64;
+        loop {
+            let next = cur
+                .next()
+                .ok_or_else(|| format!("node order={} has no next", cur.order))?;
+            // prev(next) == cur
+            {
+                let xl = next.links.lock().unwrap();
+                let p = xl
+                    .prev
+                    .upgrade()
+                    .ok_or_else(|| format!("dangling prev at order={}", next.order))?;
+                if !Arc::ptr_eq(&p, &cur) {
+                    return Err(format!("prev mismatch at order={}", next.order));
+                }
+            }
+            if next.order <= last_order {
+                return Err(format!(
+                    "order not increasing: {} after {last_order}",
+                    next.order
+                ));
+            }
+            last_order = next.order;
+            if self.is_tail(&next) {
+                break;
+            }
+            seqs.push(next.seq());
+            cur = next;
+        }
+        if seqs.len() != self.len() {
+            return Err(format!(
+                "len counter {} != walked {}",
+                self.len(),
+                seqs.len()
+            ));
+        }
+        Ok(seqs)
+    }
+}
+
+impl<R> Drop for Chain<R> {
+    fn drop(&mut self) {
+        // Iterative teardown: break the forward Arc chain so drops do not
+        // recurse through millions of nodes.
+        let mut cur = self.head.links.lock().unwrap().next.take();
+        while let Some(node) = cur {
+            cur = node.links.lock().unwrap().next.take();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Append helper for quiescent tests: takes the required visitor slots
+    /// the way a worker would.
+    fn append<R: Clone>(chain: &Chain<R>, recipe: R) -> Arc<Node<R>> {
+        // Find the last node by walking (test-only).
+        let mut last = chain.head().clone();
+        while let Some(next) = last.next() {
+            if chain.is_tail(&next) {
+                break;
+            }
+            last = next;
+        }
+        last.visitor.acquire();
+        chain.tail().visitor.acquire();
+        let node = chain.append_after(&last, recipe);
+        chain.tail().visitor.release();
+        last.visitor.release();
+        node
+    }
+
+    #[test]
+    fn empty_chain_shape() {
+        let c: Chain<u32> = Chain::new();
+        assert!(c.is_empty());
+        let n = c.head().next().unwrap();
+        assert!(c.is_tail(&n));
+        assert_eq!(c.validate().unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn append_three_then_unlink_middle() {
+        let c: Chain<u32> = Chain::new();
+        let _a = append(&c, 10);
+        let b = append(&c, 20);
+        let _d = append(&c, 30);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.validate().unwrap(), vec![0, 1, 2]);
+        assert_eq!(c.max_len(), 3);
+
+        b.visitor.acquire();
+        b.begin_execution();
+        b.visitor.release();
+        // (execution happens here)
+        b.visitor.acquire();
+        c.unlink(&b);
+        b.visitor.release();
+
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.validate().unwrap(), vec![0, 2]);
+        assert_eq!(b.state(), crate::chain::NodeState::Erased);
+        assert!(b.next().is_none(), "erased node must not hold successors");
+    }
+
+    #[test]
+    fn unlink_last_and_first() {
+        let c: Chain<u32> = Chain::new();
+        let a = append(&c, 1);
+        let b = append(&c, 2);
+        for n in [b, a] {
+            n.visitor.acquire();
+            n.begin_execution();
+            c.unlink(&n);
+            n.visitor.release();
+        }
+        assert!(c.is_empty());
+        assert_eq!(c.validate().unwrap(), Vec::<u64>::new());
+        assert_eq!(c.created(), 2);
+        assert_eq!(c.erased(), 2);
+    }
+
+    #[test]
+    fn seq_numbers_are_creation_order() {
+        let c: Chain<u32> = Chain::new();
+        for i in 0..5 {
+            let n = append(&c, i);
+            assert_eq!(n.seq(), i as u64);
+        }
+    }
+
+    #[test]
+    fn drop_long_chain_does_not_overflow_stack() {
+        let c: Chain<u64> = Chain::new();
+        for i in 0..200_000 {
+            // Direct low-level append to keep the test fast: we emulate the
+            // worker's slot acquisition on the last node via tail.prev.
+            let last = {
+                let tl = c.tail().links.lock().unwrap();
+                tl.prev.upgrade().unwrap()
+            };
+            last.visitor.acquire();
+            c.tail().visitor.acquire();
+            c.append_after(&last, i);
+            c.tail().visitor.release();
+            last.visitor.release();
+        }
+        assert_eq!(c.len(), 200_000);
+        drop(c); // must not blow the stack
+    }
+
+    #[test]
+    fn concurrent_append_unlink_preserves_structure() {
+        // Three threads churning append→execute→unlink against one chain;
+        // afterwards the chain must be structurally pristine.
+        let chain: std::sync::Arc<Chain<u64>> = std::sync::Arc::new(Chain::new());
+        let iters = 2_000u64;
+        std::thread::scope(|s| {
+            for t in 0..3u64 {
+                let chain = chain.clone();
+                s.spawn(move || {
+                    for i in 0..iters {
+                        let node = loop {
+                            let last = {
+                                let tl = chain.tail().links.lock().unwrap();
+                                tl.prev.upgrade().unwrap()
+                            };
+                            if !last.visitor.try_acquire() {
+                                std::thread::yield_now();
+                                continue;
+                            }
+                            // `last` may have been erased or displaced
+                            // while we acquired; re-check.
+                            let still_last = {
+                                let ll = last.links.lock().unwrap();
+                                ll.next.as_ref().is_some_and(|n| chain.is_tail(n))
+                            };
+                            if !still_last
+                                || last.state() == crate::chain::NodeState::Erased
+                            {
+                                last.visitor.release();
+                                std::thread::yield_now();
+                                continue;
+                            }
+                            chain.tail().visitor.acquire();
+                            let node = chain.append_after(&last, t * iters + i);
+                            chain.tail().visitor.release();
+                            last.visitor.release();
+                            break node;
+                        };
+                        node.visitor.acquire();
+                        node.begin_execution();
+                        node.visitor.release();
+                        node.visitor.acquire();
+                        chain.unlink(&node);
+                        node.visitor.release();
+                    }
+                });
+            }
+        });
+        assert!(chain.is_empty());
+        assert_eq!(chain.created(), 3 * iters);
+        assert_eq!(chain.erased(), 3 * iters);
+        assert_eq!(chain.validate().unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn exhausted_flag() {
+        let c: Chain<u32> = Chain::new();
+        assert!(!c.exhausted());
+        c.set_exhausted();
+        assert!(c.exhausted());
+    }
+}

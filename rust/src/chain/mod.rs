@@ -1,0 +1,25 @@
+//! The task chain (paper §3.3): a bidirectional linked list of tasks with
+//! head/tail sentinels, traversed concurrently by workers under a
+//! lock-coupling discipline.
+//!
+//! Lock inventory (mapping to the paper's locks):
+//!
+//! | Paper | Here |
+//! |---|---|
+//! | "dedicated mutex lock attached to each task" (waiting of one worker behind another) | [`node::Occupancy`] — the per-node *visitor slot* |
+//! | "enter-lock" (task creation when the chain is empty) | the **head sentinel's** visitor slot: entering workers serialize on it, and an empty chain is just `head ↔ tail`, so creation-from-empty uses the ordinary creation path |
+//! | "erase-lock" (at most one erase at a time) | [`list::Chain::erase_lock`] |
+//!
+//! Additional, implementation-level locks: each node carries a tiny `links`
+//! mutex guarding its prev/next pointers (the paper's C++ can rely on
+//! word-sized pointer stores; Rust's memory model requires the accesses to
+//! be synchronized). Link locks are *leaf* locks — never held while
+//! blocking on anything else — so they cannot participate in deadlock
+//! cycles. See `protocol::worker` for the full traversal state machine and
+//! DESIGN.md §6 for the consistency argument.
+
+pub mod list;
+pub mod node;
+
+pub use list::Chain;
+pub use node::{Node, NodeState};

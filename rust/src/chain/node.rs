@@ -1,0 +1,285 @@
+//! Chain nodes: sentinels and task nodes, with their two per-node
+//! synchronization devices (visitor slot + link lock).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+
+/// Lifecycle of a task node. Sentinels stay `Pending` forever.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum NodeState {
+    /// Created, not yet executed.
+    Pending = 0,
+    /// A worker is executing the task (workers may pass it, absorbing its
+    /// recipe).
+    Executing = 1,
+    /// Executed and unlinked; any visitor that reaches it must retry from
+    /// its previous position.
+    Erased = 2,
+}
+
+impl NodeState {
+    fn from_u8(v: u8) -> NodeState {
+        match v {
+            0 => NodeState::Pending,
+            1 => NodeState::Executing,
+            2 => NodeState::Erased,
+            _ => unreachable!("invalid node state {v}"),
+        }
+    }
+}
+
+/// The per-node *visitor slot* — the paper's "dedicated mutex lock attached
+/// to each task in the chain", implemented as a binary semaphore (guard
+/// lifetimes would otherwise tie visitor slots to stack frames, but a
+/// worker holds its slot across arbitrary control flow).
+///
+/// Semantics: at most one worker is *located at* a node at any time. A
+/// worker located at a node blocks others from arriving; a worker
+/// *executing* a node has released the slot (paper: workers may move past a
+/// task that is being executed).
+///
+/// Perf (EXPERIMENTS.md §Perf #1): slot operations happen on every
+/// traversal step, so the common uncontended case is a single CAS; the
+/// Mutex+Condvar pair is touched only under contention. States:
+/// 0 = free, 1 = held, 2 = held with (possible) waiters.
+#[derive(Debug, Default)]
+pub struct Occupancy {
+    state: AtomicU8,
+    lock: Mutex<()>,
+    cv: Condvar,
+}
+
+impl Occupancy {
+    const FREE: u8 = 0;
+    const HELD: u8 = 1;
+    const CONTENDED: u8 = 2;
+
+    /// Block until the slot is free, then take it.
+    #[inline]
+    pub fn acquire(&self) {
+        if self
+            .state
+            .compare_exchange(Self::FREE, Self::HELD, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+        {
+            return;
+        }
+        self.acquire_slow();
+    }
+
+    #[cold]
+    fn acquire_slow(&self) {
+        let mut guard = self.lock.lock().unwrap();
+        loop {
+            // Mark contended while attempting to take the slot; whoever
+            // releases a CONTENDED slot will notify under `lock`, so the
+            // wait below cannot miss a wakeup.
+            let prev = self.state.swap(Self::CONTENDED, Ordering::Acquire);
+            if prev == Self::FREE {
+                return; // slot taken (conservatively marked contended)
+            }
+            guard = self.cv.wait(guard).unwrap();
+        }
+    }
+
+    /// Take the slot if free; `true` on success.
+    #[inline]
+    pub fn try_acquire(&self) -> bool {
+        self.state
+            .compare_exchange(Self::FREE, Self::HELD, Ordering::Acquire, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Release the slot. Panics if the slot was not held (protocol bug).
+    #[inline]
+    pub fn release(&self) {
+        let prev = self.state.swap(Self::FREE, Ordering::Release);
+        assert_ne!(prev, Self::FREE, "releasing a free occupancy slot");
+        if prev == Self::CONTENDED {
+            // Serialize with waiters' swap-then-wait under `lock`.
+            let _guard = self.lock.lock().unwrap();
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// Node kind. The chain always contains exactly one `Head` and one `Tail`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NodeKind {
+    /// Start sentinel ("start of the chain"): never executed, never erased.
+    Head,
+    /// End sentinel: creation happens just before it.
+    Tail,
+    /// A real task.
+    Task,
+}
+
+/// prev/next pointers, guarded by the node's link lock.
+#[derive(Debug)]
+pub struct Links<R> {
+    /// Weak to avoid `prev` cycles; upgraded only under the erase lock.
+    pub prev: Weak<Node<R>>,
+    /// Strong forward pointer; `None` only for the tail sentinel and for
+    /// erased (unlinked) nodes.
+    pub next: Option<Arc<Node<R>>>,
+}
+
+/// A chain node. `R` is the model's recipe type.
+#[derive(Debug)]
+pub struct Node<R> {
+    /// Total order along the chain: head = 0, task i = i + 1, tail =
+    /// `u64::MAX`. Insertion happens only at the tail, so chain position
+    /// order and `order` agree; link locks are always taken in ascending
+    /// `order`, which makes lock ordering trivially acyclic.
+    pub(crate) order: u64,
+    /// Task sequence number (creation index, 0-based); meaningless for
+    /// sentinels. Drives the per-task RNG stream.
+    pub(crate) seq: u64,
+    pub(crate) kind: NodeKind,
+    state: AtomicU8,
+    pub(crate) visitor: Occupancy,
+    pub(crate) links: Mutex<Links<R>>,
+    /// Immutable after creation; `None` for sentinels.
+    pub(crate) recipe: Option<R>,
+}
+
+impl<R> Node<R> {
+    pub(crate) fn sentinel(kind: NodeKind, order: u64) -> Arc<Self> {
+        Arc::new(Node {
+            order,
+            seq: u64::MAX,
+            kind,
+            state: AtomicU8::new(NodeState::Pending as u8),
+            visitor: Occupancy::default(),
+            links: Mutex::new(Links {
+                prev: Weak::new(),
+                next: None,
+            }),
+            recipe: None,
+        })
+    }
+
+    pub(crate) fn task(seq: u64, recipe: R) -> Arc<Self> {
+        Self::task_linked(seq, recipe, Weak::new(), None)
+    }
+
+    /// Build a task node with its links pre-set — the node is not yet
+    /// published, so no lock is needed (EXPERIMENTS.md §Perf #2).
+    pub(crate) fn task_linked(
+        seq: u64,
+        recipe: R,
+        prev: Weak<Node<R>>,
+        next: Option<Arc<Node<R>>>,
+    ) -> Arc<Self> {
+        Arc::new(Node {
+            order: seq + 1,
+            seq,
+            kind: NodeKind::Task,
+            state: AtomicU8::new(NodeState::Pending as u8),
+            visitor: Occupancy::default(),
+            links: Mutex::new(Links { prev, next }),
+            recipe: Some(recipe),
+        })
+    }
+
+    /// Current lifecycle state.
+    #[inline]
+    pub fn state(&self) -> NodeState {
+        NodeState::from_u8(self.state.load(Ordering::Acquire))
+    }
+
+    /// Transition `Pending → Executing`. Caller must hold the visitor slot
+    /// (only the located worker may claim execution), which serializes the
+    /// transition.
+    #[inline]
+    pub(crate) fn begin_execution(&self) {
+        debug_assert_eq!(self.kind, NodeKind::Task);
+        let prev = self.state.swap(NodeState::Executing as u8, Ordering::AcqRel);
+        debug_assert_eq!(prev, NodeState::Pending as u8, "double execution");
+    }
+
+    /// Transition to `Erased`. Caller must hold the visitor slot and the
+    /// erase lock.
+    #[inline]
+    pub(crate) fn mark_erased(&self) {
+        let prev = self.state.swap(NodeState::Erased as u8, Ordering::AcqRel);
+        debug_assert_eq!(prev, NodeState::Executing as u8, "erase before execute");
+    }
+
+    /// Node kind.
+    #[inline]
+    pub fn kind(&self) -> NodeKind {
+        self.kind
+    }
+
+    /// Task sequence number (panics on sentinels).
+    #[inline]
+    pub fn seq(&self) -> u64 {
+        debug_assert_eq!(self.kind, NodeKind::Task);
+        self.seq
+    }
+
+    /// The recipe (panics on sentinels). Immutable after creation, so this
+    /// is safe to read while another worker executes the task.
+    #[inline]
+    pub fn recipe(&self) -> &R {
+        self.recipe.as_ref().expect("sentinel has no recipe")
+    }
+
+    /// Snapshot of the forward pointer.
+    #[inline]
+    pub(crate) fn next(&self) -> Option<Arc<Node<R>>> {
+        self.links.lock().unwrap().next.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn occupancy_mutual_exclusion() {
+        let occ = Arc::new(Occupancy::default());
+        occ.acquire();
+        assert!(!occ.try_acquire());
+        let o2 = occ.clone();
+        let t = std::thread::spawn(move || {
+            o2.acquire(); // blocks until main releases
+            o2.release();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        occ.release();
+        t.join().unwrap();
+        assert!(occ.try_acquire());
+        occ.release();
+    }
+
+    #[test]
+    #[should_panic]
+    fn release_unheld_panics() {
+        Occupancy::default().release();
+    }
+
+    #[test]
+    fn node_state_transitions() {
+        let n = Node::task(0, 42u32);
+        assert_eq!(n.state(), NodeState::Pending);
+        n.visitor.acquire();
+        n.begin_execution();
+        assert_eq!(n.state(), NodeState::Executing);
+        n.mark_erased();
+        assert_eq!(n.state(), NodeState::Erased);
+        assert_eq!(*n.recipe(), 42);
+        assert_eq!(n.seq(), 0);
+    }
+
+    #[test]
+    fn sentinel_orders() {
+        let h = Node::<u32>::sentinel(NodeKind::Head, 0);
+        let t = Node::<u32>::sentinel(NodeKind::Tail, u64::MAX);
+        assert!(h.order < Node::task(0, 1u32).order);
+        assert!(Node::task(1_000_000, 1u32).order < t.order);
+    }
+}

@@ -1,0 +1,71 @@
+//! The `adapar` command-line interface (the launcher).
+//!
+//! ```text
+//! adapar run        --model sir --engine parallel --workers 4 --size 50
+//! adapar sweep      --preset fig3 [--engine virtual] [--out target/figures]
+//! adapar sweep      --config experiments/fig2.toml
+//! adapar calibrate
+//! adapar validate   --model axelrod [--workers 1,2,4]
+//! adapar artifacts-check
+//! ```
+
+pub mod commands;
+
+use anyhow::{bail, Result};
+
+use crate::util::cli::{Args, Spec};
+
+const SPEC: Spec = Spec {
+    options: &[
+        "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
+        "c", "config", "preset", "out", "sample",
+    ],
+    flags: &["paper-scale", "calibrate", "help"],
+};
+
+const USAGE: &str = "\
+adapar — adaptive parallelization of multi-agent simulations (Băbeanu et al. 2023)
+
+USAGE:
+  adapar <command> [options]
+
+COMMANDS:
+  run              run one simulation and print timing + protocol counters
+  sweep            run a (size × workers × seeds) grid and emit figure data
+  calibrate        measure this machine's protocol micro-action costs
+  validate         assert parallel == sequential bit-for-bit for a model
+  artifacts-check  compile every AOT artifact and smoke-test the XLA path
+
+COMMON OPTIONS:
+  --model <axelrod|sir|voter|ising>     model under test [axelrod]
+  --engine <parallel|sequential|virtual|stepwise>
+                                        execution engine [run: parallel, sweep: virtual]
+  --workers <n | list>                  worker count(s) [run: 2, sweep: 1,2,3,4,5]
+  --size <s> / --sizes <list>           task-size proxy (F or s)
+  --seeds <list> / --seed <s>           simulation seeds
+  --steps <n> / --agents <n>            workload overrides
+  --c <n>                               tasks-per-cycle cap C [6]
+  --config <file.toml>                  sweep config file (experiments/*.toml)
+  --preset <fig2|fig3>                  paper-figure sweep preset
+  --out <dir>                           output dir for sweep reports [target/figures]
+  --paper-scale                         use the paper's full workload sizes
+  --calibrate                           calibrate the virtual cost model first
+  --help                                this text
+";
+
+/// Entry point used by `main.rs`.
+pub fn main_with_args(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, &SPEC)?;
+    if args.has_flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "run" => commands::run(&args),
+        "sweep" => commands::sweep(&args),
+        "calibrate" => commands::calibrate_cmd(&args),
+        "validate" => commands::validate(&args),
+        "artifacts-check" => commands::artifacts_check(&args),
+        other => bail!("unknown command `{other}`; try --help"),
+    }
+}

@@ -1,0 +1,225 @@
+//! The sweep grid runner: `sizes × workers × seeds`, with per-point SEM
+//! aggregation — the paper's experimental methodology.
+
+use anyhow::Result;
+
+use crate::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use crate::coordinator::runner::run_once;
+use crate::util::stats::Online;
+use crate::vtime::{calibrate, calibrate_exec, CostModel};
+
+/// Aggregated result for one `(size, workers)` grid point.
+#[derive(Clone, Debug)]
+pub struct PointResult {
+    /// Task-size proxy value.
+    pub size: usize,
+    /// Worker count `n`.
+    pub workers: usize,
+    /// Mean `T` over seeds (seconds).
+    pub mean_s: f64,
+    /// Standard error of the mean.
+    pub sem_s: f64,
+    /// Per-seed times.
+    pub times_s: Vec<f64>,
+    /// Mean protocol-overhead ratio (skips+passes+retries vs executions).
+    pub overhead: f64,
+    /// Mean high-water chain length.
+    pub max_chain: f64,
+}
+
+/// A completed sweep.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    /// The configuration that produced it.
+    pub config: SweepConfig,
+    /// Grid points in `(size, workers)` iteration order.
+    pub points: Vec<PointResult>,
+    /// The cost model used (virtual engine only; defaults otherwise).
+    pub cost: CostModel,
+}
+
+impl SweepResult {
+    /// Look up a grid point.
+    pub fn point(&self, size: usize, workers: usize) -> Option<&PointResult> {
+        self.points
+            .iter()
+            .find(|p| p.size == size && p.workers == workers)
+    }
+
+    /// `T(1)/T(n)` speedup at a size, if both points exist.
+    pub fn speedup(&self, size: usize, workers: usize) -> Option<f64> {
+        let t1 = self.point(size, 1)?.mean_s;
+        let tn = self.point(size, workers)?.mean_s;
+        Some(t1 / tn)
+    }
+}
+
+/// Build the cost model for a sweep: built-in defaults, or calibrated
+/// protocol costs plus a per-model exec-unit measurement at a
+/// representative size.
+pub fn sweep_cost_model(cfg: &SweepConfig) -> CostModel {
+    if !cfg.calibrate {
+        return CostModel::default();
+    }
+    let mut cost = calibrate();
+    // Calibrate exec-unit cost on a mid-grid throwaway instance.
+    let size = cfg.sizes[cfg.sizes.len() / 2];
+    let sample = 4_000u64;
+    match cfg.model {
+        ModelKind::Axelrod => {
+            let m = crate::models::axelrod::AxelrodModel::new(
+                crate::models::axelrod::AxelrodParams {
+                    agents: cfg.effective_agents(),
+                    features: size,
+                    traits: 3,
+                    omega: 0.95,
+                    steps: sample,
+                },
+                0,
+            );
+            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
+        }
+        ModelKind::Sir => {
+            let m = crate::models::sir::SirModel::new(
+                crate::models::sir::SirParams {
+                    agents: cfg.effective_agents(),
+                    subset_size: size,
+                    steps: 8,
+                    ..Default::default()
+                },
+                0,
+            );
+            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
+        }
+        ModelKind::Voter => {
+            let m = crate::models::voter::VoterModel::new(
+                crate::sim::graph::ring_lattice(cfg.effective_agents(), 6),
+                crate::models::voter::VoterParams {
+                    opinions: 3,
+                    steps: sample,
+                },
+                0,
+            );
+            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
+        }
+        ModelKind::Ising => {
+            let m = crate::models::ising::IsingModel::new(
+                crate::models::ising::IsingParams {
+                    side: 48,
+                    temperature: 2.269,
+                    steps: sample,
+                },
+                0,
+            );
+            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
+        }
+        ModelKind::Schelling => {
+            let m = crate::models::schelling::SchellingModel::new(
+                crate::models::schelling::SchellingParams {
+                    side: 48,
+                    agents: 1_800,
+                    tolerance: 0.4,
+                    steps: sample,
+                },
+                0,
+            );
+            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
+        }
+    }
+    cost
+}
+
+/// Run the full grid. Progress goes to the log; figure emission is the
+/// caller's job (`coordinator::report`).
+pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepResult> {
+    cfg.validate()?;
+    let cost = sweep_cost_model(cfg);
+    let mut points = Vec::with_capacity(cfg.sizes.len() * cfg.workers.len());
+    for &size in &cfg.sizes {
+        for &workers in &cfg.workers {
+            if workers > 1 && cfg.engine == EngineKind::Sequential {
+                continue; // sequential has no worker dimension
+            }
+            let mut acc = Online::new();
+            let mut times = Vec::with_capacity(cfg.seeds.len());
+            let mut overhead = Online::new();
+            let mut max_chain = Online::new();
+            for &seed in &cfg.seeds {
+                let out = run_once(cfg, size, workers, seed, &cost)?;
+                acc.push(out.time_s);
+                times.push(out.time_s);
+                let wasted = out.totals.skipped_dependent
+                    + out.totals.passed_executing
+                    + out.totals.erased_retries;
+                let denom = (wasted + out.totals.executed).max(1);
+                overhead.push(wasted as f64 / denom as f64);
+                max_chain.push(out.max_chain_len as f64);
+            }
+            crate::log_info!(
+                "sweep {} {} size={size} n={workers}: T={:.4}s ± {:.4}",
+                cfg.model,
+                cfg.engine,
+                acc.mean(),
+                acc.sem()
+            );
+            points.push(PointResult {
+                size,
+                workers,
+                mean_s: acc.mean(),
+                sem_s: acc.sem(),
+                times_s: times,
+                overhead: overhead.mean(),
+                max_chain: max_chain.mean(),
+            });
+        }
+    }
+    Ok(SweepResult {
+        config: cfg.clone(),
+        points,
+        cost,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_sweep(engine: EngineKind) -> SweepConfig {
+        SweepConfig {
+            model: ModelKind::Sir,
+            engine,
+            sizes: vec![15, 60],
+            workers: vec![1, 3],
+            seeds: vec![1, 2],
+            agents: 240,
+            steps: 25,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn virtual_sweep_covers_grid() {
+        let res = run_sweep(&tiny_sweep(EngineKind::Virtual)).unwrap();
+        assert_eq!(res.points.len(), 4);
+        for p in &res.points {
+            assert!(p.mean_s > 0.0);
+            assert_eq!(p.times_s.len(), 2);
+        }
+        assert!(res.point(15, 1).is_some());
+        assert!(res.speedup(60, 3).is_some());
+    }
+
+    #[test]
+    fn sequential_sweep_skips_worker_dimension() {
+        let res = run_sweep(&tiny_sweep(EngineKind::Sequential)).unwrap();
+        // Only workers=1 points remain.
+        assert_eq!(res.points.len(), 2);
+        assert!(res.points.iter().all(|p| p.workers == 1));
+    }
+
+    #[test]
+    fn parallel_sweep_runs() {
+        let res = run_sweep(&tiny_sweep(EngineKind::Parallel)).unwrap();
+        assert_eq!(res.points.len(), 4);
+    }
+}

@@ -1,0 +1,18 @@
+//! Experiment coordination: the launcher layer that turns configs into
+//! figure data.
+//!
+//! * [`config`] — experiment configuration (TOML files + CLI overrides).
+//! * [`experiment`] — the sweep grid runner (size × workers × seeds with
+//!   SEM aggregation — the paper's methodology: "T is averaged over 5
+//!   simulation instances with different starting seeds").
+//! * [`report`] — figure-series tables (markdown pivot + CSV).
+//! * [`runner`] — single-run dispatch across engines and models.
+
+pub mod config;
+pub mod experiment;
+pub mod report;
+pub mod runner;
+
+pub use config::{EngineKind, ModelKind, SweepConfig};
+pub use experiment::{run_sweep, PointResult, SweepResult};
+pub use runner::{run_once, RunOutcome};

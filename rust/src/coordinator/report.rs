@@ -1,0 +1,133 @@
+//! Figure-series emission: long-form CSV plus a markdown pivot shaped
+//! like the paper's figures (rows = task size, one column per worker
+//! count — the figures' curve families).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Result;
+
+use crate::coordinator::experiment::SweepResult;
+use crate::util::bench::fmt_secs;
+use crate::util::csv::Table;
+
+/// Long-form table: one row per grid point.
+pub fn long_table(res: &SweepResult) -> Table {
+    let mut t = Table::new([
+        "model", "engine", "size", "workers", "mean_s", "sem_s", "overhead", "max_chain",
+    ]);
+    for p in &res.points {
+        t.push([
+            res.config.model.to_string(),
+            res.config.engine.to_string(),
+            p.size.to_string(),
+            p.workers.to_string(),
+            format!("{:.9}", p.mean_s),
+            format!("{:.9}", p.sem_s),
+            format!("{:.4}", p.overhead),
+            format!("{:.1}", p.max_chain),
+        ]);
+    }
+    t
+}
+
+/// Pivot table shaped like the paper's figures: `size` rows, `T(n)`
+/// columns (mean ± sem), plus the `T(1)/T(n_max)` speedup.
+pub fn figure_pivot(res: &SweepResult) -> Table {
+    let workers: Vec<usize> = {
+        let mut ws: Vec<usize> = res.points.iter().map(|p| p.workers).collect();
+        ws.sort_unstable();
+        ws.dedup();
+        ws
+    };
+    let sizes: Vec<usize> = {
+        let mut ss: Vec<usize> = res.points.iter().map(|p| p.size).collect();
+        ss.sort_unstable();
+        ss.dedup();
+        ss
+    };
+    let mut header = vec!["size".to_string()];
+    header.extend(workers.iter().map(|w| format!("T(n={w})")));
+    if workers.len() > 1 {
+        header.push(format!("T(1)/T({})", workers[workers.len() - 1]));
+    }
+    let mut t = Table::new(header);
+    for &size in &sizes {
+        let mut row = vec![size.to_string()];
+        for &w in &workers {
+            match res.point(size, w) {
+                Some(p) => row.push(format!("{} ±{}", fmt_secs(p.mean_s), fmt_secs(p.sem_s))),
+                None => row.push("-".into()),
+            }
+        }
+        if workers.len() > 1 {
+            match res.speedup(size, workers[workers.len() - 1]) {
+                Some(s) => row.push(format!("{s:.2}×")),
+                None => row.push("-".into()),
+            }
+        }
+        t.push(row);
+    }
+    t
+}
+
+/// Write both renderings under `dir` with the given file stem; returns the
+/// CSV path.
+pub fn write_report(res: &SweepResult, dir: &Path, stem: &str) -> Result<PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let csv_path = dir.join(format!("{stem}.csv"));
+    long_table(res).write_csv(&csv_path)?;
+    let md_path = dir.join(format!("{stem}.md"));
+    std::fs::write(&md_path, figure_pivot(res).to_markdown())?;
+    Ok(csv_path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+    use crate::coordinator::experiment::run_sweep;
+
+    fn result() -> SweepResult {
+        run_sweep(&SweepConfig {
+            model: ModelKind::Sir,
+            engine: EngineKind::Virtual,
+            sizes: vec![20, 40],
+            workers: vec![1, 2],
+            seeds: vec![3],
+            agents: 160,
+            steps: 15,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn long_table_has_one_row_per_point() {
+        let res = result();
+        let t = long_table(&res);
+        assert_eq!(t.len(), res.points.len());
+        assert_eq!(t.col("mean_s"), Some(4));
+    }
+
+    #[test]
+    fn pivot_is_sizes_by_workers() {
+        let res = result();
+        let t = figure_pivot(&res);
+        assert_eq!(t.len(), 2); // two sizes
+        assert_eq!(t.width(), 1 + 2 + 1); // size + two n columns + speedup
+        let md = t.to_markdown();
+        assert!(md.contains("T(n=1)"));
+        assert!(md.contains("T(1)/T(2)"));
+    }
+
+    #[test]
+    fn report_files_written() {
+        let res = result();
+        let dir = std::env::temp_dir().join("adapar_report_test");
+        let csv = write_report(&res, &dir, "unit").unwrap();
+        assert!(csv.exists());
+        assert!(dir.join("unit.md").exists());
+        let parsed = crate::util::csv::parse_csv(&std::fs::read_to_string(csv).unwrap()).unwrap();
+        assert_eq!(parsed.len(), res.points.len());
+    }
+}

@@ -1,0 +1,53 @@
+//! # adapar — Adaptive parallelization of multi-agent simulations
+//!
+//! Rust + JAX + Pallas reproduction of Băbeanu, Filatova, Kwakkel,
+//! Yorke-Smith, *"Adaptive parallelization of multi-agent simulations with
+//! localized dynamics"* (2023).
+//!
+//! The library implements the paper's **worker–chain protocol** for
+//! shared-memory, adaptive, asynchronous parallel execution of multi-agent
+//! based simulations (MABS), together with every substrate the evaluation
+//! depends on:
+//!
+//! * [`chain`] — the task chain: a lock-coupled doubly-linked list with
+//!   head/tail sentinels, per-task occupancy + link locks, and an erase lock.
+//! * [`model`] — the model plug-in interface: [`model::Recipe`],
+//!   [`model::Record`], [`model::TaskSource`] (the paper's *recipe* /
+//!   *record* concepts, §3.5).
+//! * [`protocol`] — the engines: the adaptive [`protocol::ParallelEngine`]
+//!   (the paper's contribution), the [`protocol::SequentialEngine`] ground
+//!   truth, and the related-work [`protocol::StepwiseEngine`] barrier
+//!   baseline.
+//! * [`models`] — MABS models: Axelrod cultural dynamics (§4.1), SIR
+//!   disease spreading (§4.2), plus voter and Ising models exercising the
+//!   same interface.
+//! * [`sim`] — simulation substrates: deterministic RNG streams, CSR
+//!   graphs + generators + partitions + aggregate graphs, shared state.
+//! * [`vtime`] — the virtual-core testbed: a deterministic discrete-event
+//!   simulation of the protocol with a calibrated cost model (reproduces
+//!   the paper's multi-core figures on a single-core host).
+//! * [`runtime`] — PJRT/XLA runtime loading the AOT-compiled JAX+Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) and an XLA-backed task-execution
+//!   engine.
+//! * [`coordinator`] — experiment orchestration: config system, sweep grid
+//!   runner, reports.
+//! * [`util`] — hand-rolled substrates (the crate registry is offline):
+//!   CLI args, bench harness, TOML-subset config parser, property-testing
+//!   mini-framework, statistics.
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod chain;
+pub mod cli;
+pub mod coordinator;
+pub mod model;
+pub mod models;
+pub mod protocol;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod vtime;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,9 @@
+//! `adapar` CLI entrypoint. See `cli` module for the command surface.
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = adapar::cli::main_with_args(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

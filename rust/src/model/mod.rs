@@ -1,0 +1,233 @@
+//! The model plug-in interface — the paper's *recipe* / *record* concepts
+//! (§3.5).
+//!
+//! > "The interface can be understood in terms of two generic concepts:
+//! > 1. recipe: model-side counterpart of the task; 2. record: model-side
+//! > counterpart of the worker."
+//!
+//! A MABS plugs into the protocol by providing:
+//!
+//! * a **recipe** type — the information a task holds after creation and
+//!   needs for execution (e.g. the two interacting agents' ids);
+//! * a **record** type ([`Record`]) — the information a worker accumulates
+//!   while iterating the chain, with the procedure for deciding whether the
+//!   task at hand depends on any previously-encountered task;
+//! * a **task source** ([`TaskSource`]) — the "global, model-specific
+//!   routine" (§3.3) that creates the next task; invoked serially under the
+//!   chain's tail lock, so it may hold the creation RNG stream and step
+//!   counters without further synchronization;
+//! * an **executor** ([`Model::execute`]) — carries out a task's
+//!   operations, mutating shared simulation state. Execution randomness
+//!   must come exclusively from the per-task stream derived from
+//!   `(seed, task_seq)` so that parallel execution is bit-identical to
+//!   sequential execution (DESIGN.md §6).
+//!
+//! ## Task depth (§3.4)
+//!
+//! The creation/execution split ("task depth") is expressed by how much
+//! work [`TaskSource::next_task`] performs versus [`Model::execute`]: both
+//! experiments in the paper perform selection/indexing at creation and the
+//! bulk of the computation at execution, and the bundled models follow
+//! suit.
+
+pub mod testkit;
+
+use crate::sim::rng::TaskRng;
+
+/// Marker bounds for recipe payloads. Recipes are immutable after creation
+/// and shared read-only between workers (absorption reads them while the
+/// executing worker may be running the task).
+pub trait Recipe: Clone + std::fmt::Debug + Send + Sync + 'static {}
+impl<T: Clone + std::fmt::Debug + Send + Sync + 'static> Recipe for T {}
+
+/// Per-worker dependence bookkeeping — the paper's *record*.
+///
+/// Implementations must be **conservative**: if the execution of a task
+/// with recipe `r` could read state written by — or write state read or
+/// written by — any absorbed task, `depends` must return `true`.
+pub trait Record: Send {
+    /// The recipe type this record understands.
+    type Recipe: Recipe;
+
+    /// Does a task with recipe `r` depend on any absorbed task?
+    fn depends(&self, r: &Self::Recipe) -> bool;
+
+    /// Integrate a passed (incomplete) task's information.
+    fn absorb(&mut self, r: &Self::Recipe);
+
+    /// Reset at the start of a new cycle. Must not allocate at steady
+    /// state (called once per cycle on the hot path).
+    fn reset(&mut self);
+}
+
+/// The global task-creation routine — invoked by at most one worker at a
+/// time (under the chain's tail lock), hence `&mut self`.
+pub trait TaskSource: Send {
+    /// The recipe type produced.
+    type Recipe: Recipe;
+
+    /// Create the next task, or `None` when the simulation is complete.
+    /// The implementation owns the creation RNG stream; successive calls
+    /// define the canonical (sequential) task order.
+    fn next_task(&mut self) -> Option<Self::Recipe>;
+
+    /// Optional hint: total number of tasks this source will produce, if
+    /// known (used for progress reporting only).
+    fn size_hint(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// A MABS model pluggable into every engine (parallel, sequential,
+/// virtual-time).
+///
+/// The model owns its shared state (via `sim::state::SharedSim` internally)
+/// and is shared by reference across workers; hence `Sync`.
+pub trait Model: Send + Sync + 'static {
+    /// Task payload type.
+    type Recipe: Recipe;
+    /// Worker record type.
+    type Record: Record<Recipe = Self::Recipe>;
+    /// Task source type.
+    type Source: TaskSource<Recipe = Self::Recipe>;
+
+    /// Construct the task source for a run with the given seed.
+    fn source(&self, seed: u64) -> Self::Source;
+
+    /// Construct a fresh (empty) worker record.
+    fn record(&self) -> Self::Record;
+
+    /// Execute a task.
+    ///
+    /// `rng` is the task's private execution stream (already derived from
+    /// `(seed, task_seq)` by the engine); implementations must draw all
+    /// execution randomness from it.
+    ///
+    /// # Contract
+    /// May mutate shared state only within the task's conservative write
+    /// footprint (the one `Self::Record` protects), and read only within
+    /// its read footprint. The engines guarantee no conflicting task runs
+    /// concurrently.
+    fn execute(&self, recipe: &Self::Recipe, rng: &mut TaskRng);
+
+    /// Relative execution cost of a task, in abstract *work units*
+    /// proportional to basic operations (used by the virtual-core testbed's
+    /// calibrated cost model; see `vtime::CostModel`). The default treats
+    /// all tasks as unit cost.
+    fn task_work(&self, _recipe: &Self::Recipe) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A trivially small model used to sanity-check the trait surface: a
+    // counter model where task i increments cell (i % cells).
+    pub struct CounterModel {
+        pub cells: crate::sim::state::SharedSim<Vec<u64>>,
+        pub tasks: u64,
+    }
+
+    #[derive(Clone, Debug)]
+    pub struct CounterRecipe {
+        pub cell: u32,
+    }
+
+    pub struct CounterRecord {
+        seen: crate::util::u32set::U32Set,
+    }
+
+    impl Record for CounterRecord {
+        type Recipe = CounterRecipe;
+        fn depends(&self, r: &CounterRecipe) -> bool {
+            self.seen.contains(r.cell)
+        }
+        fn absorb(&mut self, r: &CounterRecipe) {
+            self.seen.insert(r.cell);
+        }
+        fn reset(&mut self) {
+            self.seen.clear();
+        }
+    }
+
+    pub struct CounterSource {
+        next: u64,
+        tasks: u64,
+        cells: u32,
+    }
+
+    impl TaskSource for CounterSource {
+        type Recipe = CounterRecipe;
+        fn next_task(&mut self) -> Option<CounterRecipe> {
+            if self.next >= self.tasks {
+                return None;
+            }
+            let cell = (self.next % self.cells as u64) as u32;
+            self.next += 1;
+            Some(CounterRecipe { cell })
+        }
+        fn size_hint(&self) -> Option<u64> {
+            Some(self.tasks)
+        }
+    }
+
+    impl Model for CounterModel {
+        type Recipe = CounterRecipe;
+        type Record = CounterRecord;
+        type Source = CounterSource;
+        fn source(&self, _seed: u64) -> CounterSource {
+            let cells = unsafe { self.cells.get() }.len() as u32;
+            CounterSource {
+                next: 0,
+                tasks: self.tasks,
+                cells,
+            }
+        }
+        fn record(&self) -> CounterRecord {
+            CounterRecord {
+                seen: Default::default(),
+            }
+        }
+        fn execute(&self, recipe: &CounterRecipe, _rng: &mut TaskRng) {
+            unsafe {
+                self.cells.get_mut()[recipe.cell as usize] += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn counter_model_sequential_semantics() {
+        let m = CounterModel {
+            cells: crate::sim::state::SharedSim::new(vec![0; 4]),
+            tasks: 10,
+        };
+        let mut src = m.source(0);
+        let mut seq = 0u64;
+        while let Some(r) = src.next_task() {
+            let mut rng = TaskRng::for_task(0, seq);
+            m.execute(&r, &mut rng);
+            seq += 1;
+        }
+        assert_eq!(seq, 10);
+        assert_eq!(m.cells.into_inner(), vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn record_conservativeness() {
+        let m = CounterModel {
+            cells: crate::sim::state::SharedSim::new(vec![0; 4]),
+            tasks: 4,
+        };
+        let mut rec = m.record();
+        let a = CounterRecipe { cell: 1 };
+        let b = CounterRecipe { cell: 2 };
+        assert!(!rec.depends(&a));
+        rec.absorb(&a);
+        assert!(rec.depends(&a), "same cell conflicts");
+        assert!(!rec.depends(&b), "distinct cells commute");
+        rec.reset();
+        assert!(!rec.depends(&a));
+    }
+}

@@ -1,0 +1,174 @@
+//! Tiny models for tests, property tests, and protocol microbenches.
+//!
+//! Not part of the scientific surface — these exist so the protocol can be
+//! exercised against workloads with precisely controlled conflict
+//! structure (something the real MABS models cannot offer).
+
+use crate::model::{Model, Record, TaskSource};
+use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::state::SharedSim;
+use crate::util::u32set::U32Set;
+
+/// Random-increment model: each task touches one cell chosen by the
+/// creation stream and applies a non-commutative update derived from the
+/// task stream. Two tasks conflict iff they touch the same cell, so
+/// `n_cells` dials the conflict density (1 = fully sequential,
+/// large = almost embarrassingly parallel).
+pub struct IncModel {
+    /// Cell array (shared state).
+    pub cells: SharedSim<Vec<u64>>,
+    /// Number of cells (conflict knob).
+    pub n_cells: u32,
+    /// Number of tasks to generate.
+    pub tasks: u64,
+    /// Extra per-task busy work (iterations of a mixing loop), to emulate
+    /// heavier task bodies in scheduling tests.
+    pub work: u32,
+}
+
+impl IncModel {
+    /// Fresh model with zeroed cells and no extra busy work.
+    pub fn new(tasks: u64, n_cells: u32) -> Self {
+        Self {
+            cells: SharedSim::new(vec![0; n_cells as usize]),
+            n_cells,
+            tasks,
+            work: 0,
+        }
+    }
+
+    /// Fresh model with `work` units of artificial per-task computation.
+    pub fn with_work(tasks: u64, n_cells: u32, work: u32) -> Self {
+        Self {
+            work,
+            ..Self::new(tasks, n_cells)
+        }
+    }
+
+    /// Snapshot the cell array (requires no concurrent run).
+    pub fn cells_snapshot(&self) -> Vec<u64> {
+        unsafe { self.cells.get() }.clone()
+    }
+}
+
+/// Recipe: the single cell a task reads and writes.
+#[derive(Clone, Debug)]
+pub struct IncRecipe {
+    /// Target cell.
+    pub cell: u32,
+}
+
+/// Record: set of cells touched by absorbed tasks.
+pub struct IncRecord {
+    seen: U32Set,
+}
+
+impl Record for IncRecord {
+    type Recipe = IncRecipe;
+    fn depends(&self, r: &IncRecipe) -> bool {
+        self.seen.contains(r.cell)
+    }
+    fn absorb(&mut self, r: &IncRecipe) {
+        self.seen.insert(r.cell);
+    }
+    fn reset(&mut self) {
+        self.seen.clear();
+    }
+}
+
+/// Source: draws uniformly random cells from the creation stream.
+pub struct IncSource {
+    rng: Rng,
+    left: u64,
+    n_cells: u32,
+}
+
+impl TaskSource for IncSource {
+    type Recipe = IncRecipe;
+    fn next_task(&mut self) -> Option<IncRecipe> {
+        if self.left == 0 {
+            return None;
+        }
+        self.left -= 1;
+        Some(IncRecipe {
+            cell: self.rng.below(self.n_cells as u64) as u32,
+        })
+    }
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.left)
+    }
+}
+
+impl Model for IncModel {
+    type Recipe = IncRecipe;
+    type Record = IncRecord;
+    type Source = IncSource;
+
+    fn source(&self, seed: u64) -> IncSource {
+        IncSource {
+            rng: Rng::stream(seed, 0xC0FFEE),
+            left: self.tasks,
+            n_cells: self.n_cells,
+        }
+    }
+
+    fn record(&self) -> IncRecord {
+        IncRecord { seen: U32Set::new() }
+    }
+
+    fn execute(&self, r: &IncRecipe, rng: &mut TaskRng) {
+        let mut v = rng.below(1000);
+        // Optional busy work: data-dependent mixing the optimizer cannot
+        // remove, emulating a task body of tunable size.
+        for _ in 0..self.work {
+            v = v.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(17) ^ 0xA5A5;
+        }
+        unsafe {
+            let cells = self.cells.get_mut();
+            // Non-commutative read-modify-write: racing or reordered
+            // conflicting executions change the result, so determinism
+            // tests detect protocol violations.
+            let old = cells[r.cell as usize];
+            cells[r.cell as usize] = old.wrapping_add(v).wrapping_mul(3);
+        }
+    }
+
+    fn task_work(&self, _r: &IncRecipe) -> f64 {
+        1.0 + self.work as f64
+    }
+}
+
+/// Convenience: build a fresh [`IncModel`].
+pub fn fresh_inc_model(tasks: u64, n_cells: u32) -> IncModel {
+    IncModel::new(tasks, n_cells)
+}
+
+/// Convenience: snapshot an [`IncModel`]'s cells.
+pub fn inc_cells(model: &IncModel) -> Vec<u64> {
+    model.cells_snapshot()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn source_is_finite_and_fused() {
+        let m = IncModel::new(3, 4);
+        let mut s = m.source(0);
+        assert!(s.next_task().is_some());
+        assert!(s.next_task().is_some());
+        assert!(s.next_task().is_some());
+        assert!(s.next_task().is_none());
+        assert!(s.next_task().is_none(), "source must stay exhausted");
+    }
+
+    #[test]
+    fn work_knob_changes_task_work() {
+        let m0 = IncModel::new(1, 1);
+        let m9 = IncModel::with_work(1, 1, 9);
+        let r = IncRecipe { cell: 0 };
+        assert_eq!(m0.task_work(&r), 1.0);
+        assert_eq!(m9.task_work(&r), 10.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! Ising model with Glauber (single-spin-flip) dynamics on a 2D periodic
+//! lattice — a sequential, one-update-per-step MABS whose dependence
+//! footprint is a full graph neighbourhood (site + 4 neighbours), unlike
+//! the pairwise models.
+//!
+//! Each step draws a random site and flips it with the heat-bath
+//! probability `1 / (1 + exp(ΔE / T))`, where `ΔE = 2 J σ_i Σ σ_j`.
+//!
+//! Protocol mapping: recipe = site id; a task reads `{i} ∪ N(i)` and
+//! writes `{i}`, so a task on site `i` conflicts with an absorbed task on
+//! site `j` iff `j ∈ {i} ∪ N(i)` — the record keeps absorbed *sites* and
+//! tests the whole neighbourhood. This exercises records whose `depends`
+//! does O(k) set probes.
+
+use std::sync::Arc;
+
+use crate::model::{Model, Record, TaskSource};
+use crate::sim::graph::{lattice2d, Csr};
+use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::state::SharedSim;
+use crate::util::u32set::U32Set;
+
+/// Parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct IsingParams {
+    /// Lattice side (N = side²).
+    pub side: usize,
+    /// Temperature in units of J/k_B (critical ≈ 2.269).
+    pub temperature: f64,
+    /// Number of flip attempts (== tasks).
+    pub steps: u64,
+}
+
+impl Default for IsingParams {
+    fn default() -> Self {
+        Self {
+            side: 64,
+            temperature: 2.0,
+            steps: 200_000,
+        }
+    }
+}
+
+/// The pluggable model.
+pub struct IsingModel {
+    /// Parameters.
+    pub params: IsingParams,
+    graph: Arc<Csr>,
+    /// Spins stored as ±1 (i8).
+    spins: SharedSim<Vec<i8>>,
+}
+
+impl IsingModel {
+    /// Build with uniform random spins.
+    pub fn new(params: IsingParams, init_seed: u64) -> Self {
+        let graph = lattice2d(params.side);
+        let mut rng = Rng::stream(init_seed, 0x1516);
+        let spins = (0..graph.n())
+            .map(|_| if rng.bernoulli(0.5) { 1i8 } else { -1i8 })
+            .collect();
+        Self {
+            params,
+            graph: Arc::new(graph),
+            spins: SharedSim::new(spins),
+        }
+    }
+
+    /// Snapshot (quiescent use).
+    pub fn snapshot(&self) -> Vec<i8> {
+        unsafe { self.spins.get() }.clone()
+    }
+
+    /// Magnetization per site, in [-1, 1].
+    pub fn magnetization(&self) -> f64 {
+        let spins = unsafe { self.spins.get() };
+        spins.iter().map(|&s| s as i64).sum::<i64>() as f64 / spins.len() as f64
+    }
+
+    /// Energy per site (J = 1).
+    pub fn energy(&self) -> f64 {
+        let spins = unsafe { self.spins.get() };
+        let mut e = 0i64;
+        for (v, nbrs) in self.graph.iter() {
+            for &u in nbrs {
+                if (u as usize) > v {
+                    e -= (spins[v] as i64) * (spins[u as usize] as i64);
+                }
+            }
+        }
+        e as f64 / spins.len() as f64
+    }
+}
+
+/// Task payload: the site to update.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FlipAttempt {
+    /// Site id.
+    pub site: u32,
+}
+
+/// Record: absorbed sites; dependence = neighbourhood overlap.
+pub struct IsingRecord {
+    sites: U32Set,
+    graph: Arc<Csr>,
+}
+
+impl Record for IsingRecord {
+    type Recipe = FlipAttempt;
+
+    #[inline]
+    fn depends(&self, r: &FlipAttempt) -> bool {
+        // A task writes its site and reads site + neighbours; an absorbed
+        // task may have written its own site. Conflict iff the absorbed
+        // site is in our closed neighbourhood, or our site is in *its*
+        // closed neighbourhood — symmetric on undirected graphs, so one
+        // direction suffices.
+        if self.sites.contains(r.site) {
+            return true;
+        }
+        self.graph
+            .neighbors(r.site as usize)
+            .iter()
+            .any(|&nb| self.sites.contains(nb))
+    }
+
+    #[inline]
+    fn absorb(&mut self, r: &FlipAttempt) {
+        self.sites.insert(r.site);
+    }
+
+    #[inline]
+    fn reset(&mut self) {
+        self.sites.clear();
+    }
+}
+
+/// Source: uniform random sites.
+pub struct IsingSource {
+    rng: Rng,
+    n: usize,
+    remaining: u64,
+}
+
+impl TaskSource for IsingSource {
+    type Recipe = FlipAttempt;
+    fn next_task(&mut self) -> Option<FlipAttempt> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        Some(FlipAttempt {
+            site: self.rng.index(self.n) as u32,
+        })
+    }
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.remaining)
+    }
+}
+
+impl Model for IsingModel {
+    type Recipe = FlipAttempt;
+    type Record = IsingRecord;
+    type Source = IsingSource;
+
+    fn source(&self, seed: u64) -> IsingSource {
+        IsingSource {
+            rng: Rng::stream(seed, 0x15),
+            n: self.graph.n(),
+            remaining: self.params.steps,
+        }
+    }
+
+    fn record(&self) -> IsingRecord {
+        IsingRecord {
+            sites: U32Set::new(),
+            graph: self.graph.clone(),
+        }
+    }
+
+    fn execute(&self, r: &FlipAttempt, rng: &mut TaskRng) {
+        // SAFETY: record discipline — writes {site}, reads {site} ∪ N(site),
+        // disjoint from every concurrently-executing task's footprint
+        // (DESIGN.md §6).
+        let spins = unsafe { self.spins.get_mut() };
+        let i = r.site as usize;
+        let field: i32 = self
+            .graph
+            .neighbors(i)
+            .iter()
+            .map(|&nb| spins[nb as usize] as i32)
+            .sum();
+        let delta_e = 2.0 * spins[i] as f64 * field as f64;
+        // Heat-bath acceptance; one uniform per attempt keeps the stream
+        // schedule-independent.
+        let accept = rng.unit_f64() < 1.0 / (1.0 + (delta_e / self.params.temperature).exp());
+        if accept {
+            spins[i] = -spins[i];
+        }
+    }
+
+    fn task_work(&self, r: &FlipAttempt) -> f64 {
+        1.0 + self.graph.degree(r.site as usize) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+
+    fn small(steps: u64) -> IsingParams {
+        IsingParams {
+            side: 12,
+            temperature: 2.0,
+            steps,
+        }
+    }
+
+    #[test]
+    fn spins_stay_plus_minus_one() {
+        let m = IsingModel::new(small(20_000), 3);
+        SequentialEngine::new(1).run(&m);
+        assert!(m.snapshot().iter().all(|&s| s == 1 || s == -1));
+    }
+
+    #[test]
+    fn cold_dynamics_lower_energy() {
+        let m = IsingModel::new(
+            IsingParams {
+                side: 16,
+                temperature: 1.0,
+                steps: 60_000,
+            },
+            7,
+        );
+        let e0 = m.energy();
+        SequentialEngine::new(2).run(&m);
+        let e1 = m.energy();
+        assert!(e1 < e0, "quench must lower energy ({e0:.3} -> {e1:.3})");
+        assert!(m.magnetization().abs() <= 1.0);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let seed = 19;
+        let reference = {
+            let m = IsingModel::new(small(15_000), 4);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [2, 4] {
+            let m = IsingModel::new(small(15_000), 4);
+            ParallelEngine::new(ProtocolConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "n={workers}");
+        }
+    }
+
+    #[test]
+    fn record_uses_neighbourhood() {
+        let m = IsingModel::new(small(10), 0);
+        let mut rec = m.record();
+        // Sites on a 12×12 torus: 0's neighbours are 1, 11, 12, 132.
+        rec.absorb(&FlipAttempt { site: 0 });
+        assert!(rec.depends(&FlipAttempt { site: 0 }));
+        assert!(rec.depends(&FlipAttempt { site: 1 }));
+        assert!(rec.depends(&FlipAttempt { site: 12 }));
+        assert!(!rec.depends(&FlipAttempt { site: 2 }));
+        assert!(!rec.depends(&FlipAttempt { site: 50 }));
+    }
+}

@@ -1,0 +1,26 @@
+//! MABS models plugged into the protocol.
+//!
+//! * [`axelrod`] — Axelrod-type cultural dynamics (paper §4.1): fully
+//!   sequential, one pairwise interaction per step. The experiment behind
+//!   Fig. 2.
+//! * [`sir`] — SIR-type epidemic on a ring lattice (paper §4.2):
+//!   synchronous two-phase dynamics over a fixed partition of agents. The
+//!   experiment behind Fig. 3. Also implements the step-parallel baseline
+//!   interface.
+//! * [`voter`] — voter model on an arbitrary graph: a second sequential
+//!   pairwise model exercising the interface (and the overhead benches,
+//!   since its tasks are tiny).
+//! * [`ising`] — Ising/Glauber single-spin dynamics on a 2D torus: a
+//!   sequential model whose dependence footprint is a whole graph
+//!   neighbourhood rather than a pair.
+//!
+//! Every model provides: the protocol plug-in (recipe/record/source +
+//! execute) and initial-state generation whose randomness is *outside* the
+//! measured simulation (paper: initial state generation "does not
+//! contribute to T").
+
+pub mod axelrod;
+pub mod ising;
+pub mod schelling;
+pub mod sir;
+pub mod voter;

@@ -1,0 +1,404 @@
+//! Schelling segregation with **moving agents** — the paper's future-work
+//! item ("applications of our protocol to simulations with non-stationary
+//! agents", §5), implemented as an extension model.
+//!
+//! Agents of two types live on a 2D torus with vacancies. A task is one
+//! relocation attempt between a *pair of cells* drawn at creation: if the
+//! source cell hosts an agent, the destination cell is vacant, and the
+//! agent is unsatisfied (same-type neighbour fraction below `tolerance`),
+//! the agent relocates.
+//!
+//! ## Sound record for movers
+//!
+//! Movement breaks the stationary-footprint assumption: a task touches
+//! *wherever the agent currently is*. Keying tasks by **cells instead of
+//! agents** restores a creation-time-known footprint: a task reads and
+//! writes only within the closed 3×3 neighbourhoods of its two cells, so
+//! the record claims `N⁺(from) ∪ N⁺(to)` and no state needs to be read
+//! during creation or dependence checking. Two tasks whose claims are
+//! disjoint cannot observe each other's agents at all — dependence
+//! checking stays purely structural, and the determinism suite covers the
+//! model like the stationary ones.
+
+use crate::model::{Model, Record, TaskSource};
+use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::state::SharedSim;
+use crate::util::u32set::U32Set;
+
+/// Parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct SchellingParams {
+    /// Torus side; `side²` cells.
+    pub side: usize,
+    /// Number of agents (must leave vacancies).
+    pub agents: usize,
+    /// Minimum same-type neighbour fraction an agent tolerates.
+    pub tolerance: f64,
+    /// Relocation attempts (== tasks).
+    pub steps: u64,
+}
+
+impl Default for SchellingParams {
+    fn default() -> Self {
+        Self {
+            side: 48,
+            agents: 1_800, // ~78% occupancy
+            tolerance: 0.4,
+            steps: 100_000,
+        }
+    }
+}
+
+/// Grid cell content: `EMPTY` or agent id.
+const EMPTY: u32 = u32::MAX;
+
+/// Shared state.
+pub struct SchellingState {
+    /// Cell → agent id or `EMPTY`.
+    pub grid: Vec<u32>,
+    /// Agent id → cell (observable bookkeeping; written only when the
+    /// resident of a claimed cell moves).
+    pub pos: Vec<u32>,
+    /// Agent id → type (0/1); immutable after init.
+    pub kind: Vec<u8>,
+}
+
+/// The pluggable model.
+pub struct SchellingModel {
+    /// Parameters.
+    pub params: SchellingParams,
+    state: SharedSim<SchellingState>,
+}
+
+/// Task payload: the cell pair (footprint known at creation).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MoveAttempt {
+    /// Source cell (move its resident, if any and unhappy).
+    pub from: u32,
+    /// Destination cell (must be vacant).
+    pub to: u32,
+}
+
+impl SchellingModel {
+    /// Build with random placement.
+    pub fn new(params: SchellingParams, init_seed: u64) -> Self {
+        let cells = params.side * params.side;
+        assert!(params.agents < cells, "need vacancies");
+        let mut rng = Rng::stream(init_seed, 0x5CE1);
+        let mut cell_ids: Vec<u32> = (0..cells as u32).collect();
+        rng.shuffle(&mut cell_ids);
+        let mut grid = vec![EMPTY; cells];
+        let mut pos = vec![0u32; params.agents];
+        let mut kind = vec![0u8; params.agents];
+        for a in 0..params.agents {
+            let c = cell_ids[a];
+            grid[c as usize] = a as u32;
+            pos[a] = c;
+            kind[a] = (rng.bernoulli(0.5)) as u8;
+        }
+        Self {
+            params,
+            state: SharedSim::new(SchellingState { grid, pos, kind }),
+        }
+    }
+
+    /// Closed 3×3 neighbourhood of a cell on the torus (9 cells).
+    pub fn neighborhood(side: usize, cell: u32) -> [u32; 9] {
+        let (r, c) = ((cell as usize) / side, (cell as usize) % side);
+        let mut out = [0u32; 9];
+        let mut i = 0;
+        for dr in [side - 1, 0, 1] {
+            for dc in [side - 1, 0, 1] {
+                let rr = (r + dr) % side;
+                let cc = (c + dc) % side;
+                out[i] = (rr * side + cc) as u32;
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Satisfaction test at `cell` for an agent of type `k` (reads the 8
+    /// open-neighbourhood cells).
+    fn satisfied(&self, state: &SchellingState, cell: u32, k: u8) -> bool {
+        let mut same = 0usize;
+        let mut occupied = 0usize;
+        for &nb in &Self::neighborhood(self.params.side, cell) {
+            if nb == cell {
+                continue;
+            }
+            let resident = state.grid[nb as usize];
+            if resident != EMPTY {
+                occupied += 1;
+                same += (state.kind[resident as usize] == k) as usize;
+            }
+        }
+        if occupied == 0 {
+            return true; // isolated agents are content
+        }
+        (same as f64 / occupied as f64) >= self.params.tolerance
+    }
+
+    /// Snapshot of the grid (quiescent use).
+    pub fn snapshot(&self) -> Vec<u32> {
+        unsafe { self.state.get() }.grid.clone()
+    }
+
+    /// Mean same-type fraction over occupied neighbourhoods — the
+    /// segregation order parameter.
+    pub fn segregation(&self) -> f64 {
+        let state = unsafe { self.state.get() };
+        let mut acc = 0.0;
+        let mut n = 0usize;
+        for a in 0..self.params.agents {
+            let cell = state.pos[a];
+            let mut same = 0usize;
+            let mut occ = 0usize;
+            for &nb in &Self::neighborhood(self.params.side, cell) {
+                if nb == cell {
+                    continue;
+                }
+                let r = state.grid[nb as usize];
+                if r != EMPTY {
+                    occ += 1;
+                    same += (state.kind[r as usize] == state.kind[a]) as usize;
+                }
+            }
+            if occ > 0 {
+                acc += same as f64 / occ as f64;
+                n += 1;
+            }
+        }
+        acc / n.max(1) as f64
+    }
+
+    /// Structural invariant: `grid` and `pos` agree, each agent exactly
+    /// once.
+    pub fn check_consistency(&self) -> Result<(), String> {
+        let state = unsafe { self.state.get() };
+        let mut seen = vec![false; self.params.agents];
+        for (cell, &resident) in state.grid.iter().enumerate() {
+            if resident != EMPTY {
+                let a = resident as usize;
+                if a >= seen.len() {
+                    return Err(format!("bogus agent id {a}"));
+                }
+                if seen[a] {
+                    return Err(format!("agent {a} appears twice"));
+                }
+                seen[a] = true;
+                if state.pos[a] as usize != cell {
+                    return Err(format!("agent {a}: pos={} cell={cell}", state.pos[a]));
+                }
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("agent missing from grid".into());
+        }
+        Ok(())
+    }
+}
+
+/// Record: claimed cells (closed neighbourhoods of both task cells).
+pub struct SchellingRecord {
+    cells: U32Set,
+    side: usize,
+}
+
+impl Record for SchellingRecord {
+    type Recipe = MoveAttempt;
+
+    fn depends(&self, r: &MoveAttempt) -> bool {
+        for base in [r.from, r.to] {
+            for nb in SchellingModel::neighborhood(self.side, base) {
+                if self.cells.contains(nb) {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    fn absorb(&mut self, r: &MoveAttempt) {
+        for base in [r.from, r.to] {
+            for nb in SchellingModel::neighborhood(self.side, base) {
+                self.cells.insert(nb);
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        self.cells.clear();
+    }
+}
+
+/// Source: two uniform random cells per attempt; no state reads.
+pub struct SchellingSource {
+    rng: Rng,
+    remaining: u64,
+    cells: usize,
+}
+
+impl TaskSource for SchellingSource {
+    type Recipe = MoveAttempt;
+    fn next_task(&mut self) -> Option<MoveAttempt> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let (from, to) = self.rng.distinct_pair(self.cells);
+        Some(MoveAttempt {
+            from: from as u32,
+            to: to as u32,
+        })
+    }
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.remaining)
+    }
+}
+
+impl Model for SchellingModel {
+    type Recipe = MoveAttempt;
+    type Record = SchellingRecord;
+    type Source = SchellingSource;
+
+    fn source(&self, seed: u64) -> SchellingSource {
+        SchellingSource {
+            rng: Rng::stream(seed, 0x5E11),
+            remaining: self.params.steps,
+            cells: self.params.side * self.params.side,
+        }
+    }
+
+    fn record(&self) -> SchellingRecord {
+        SchellingRecord {
+            cells: U32Set::new(),
+            side: self.params.side,
+        }
+    }
+
+    fn execute(&self, r: &MoveAttempt, _rng: &mut TaskRng) {
+        // SAFETY: record discipline — every access below is within
+        // N⁺(from) ∪ N⁺(to), plus `pos[resident]` where `resident` lives
+        // in the claimed cell `from` (any other task that could touch this
+        // agent must have claimed `from` too). See module docs.
+        let state = unsafe { self.state.get_mut() };
+        let resident = state.grid[r.from as usize];
+        if resident == EMPTY || state.grid[r.to as usize] != EMPTY {
+            return;
+        }
+        let k = state.kind[resident as usize];
+        if self.satisfied(state, r.from, k) {
+            return; // content agents stay
+        }
+        state.grid[r.from as usize] = EMPTY;
+        state.grid[r.to as usize] = resident;
+        state.pos[resident as usize] = r.to;
+    }
+
+    fn task_work(&self, _r: &MoveAttempt) -> f64 {
+        // Two 3×3 neighbourhood scans.
+        18.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+    use crate::vtime::{CostModel, VirtualEngine};
+
+    fn small(steps: u64) -> SchellingParams {
+        SchellingParams {
+            side: 16,
+            agents: 180,
+            tolerance: 0.5,
+            steps,
+        }
+    }
+
+    #[test]
+    fn initial_state_is_consistent() {
+        let m = SchellingModel::new(small(0), 3);
+        m.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn dynamics_increase_segregation_and_stay_consistent() {
+        let m = SchellingModel::new(small(60_000), 5);
+        let before = m.segregation();
+        SequentialEngine::new(9).run(&m);
+        m.check_consistency().unwrap();
+        let after = m.segregation();
+        assert!(
+            after > before + 0.05,
+            "segregation should rise: {before:.3} -> {after:.3}"
+        );
+    }
+
+    #[test]
+    fn parallel_and_virtual_match_sequential_bitwise() {
+        let seed = 77;
+        let reference = {
+            let m = SchellingModel::new(small(15_000), 2);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [2, 4] {
+            let m = SchellingModel::new(small(15_000), 2);
+            ParallelEngine::new(ProtocolConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "parallel n={workers}");
+            m.check_consistency().unwrap();
+        }
+        let m = SchellingModel::new(small(15_000), 2);
+        VirtualEngine {
+            workers: 3,
+            tasks_per_cycle: 6,
+            seed,
+            cost: CostModel::default(),
+        }
+        .run(&m);
+        assert_eq!(m.snapshot(), reference, "virtual");
+    }
+
+    #[test]
+    fn record_claims_both_neighbourhoods() {
+        let m = SchellingModel::new(small(0), 0);
+        let mut rec = m.record();
+        rec.absorb(&MoveAttempt { from: 0, to: 100 });
+        // Overlap with N⁺(from): cell 1 is adjacent to 0.
+        assert!(rec.depends(&MoveAttempt { from: 1, to: 200 }));
+        // Overlap with N⁺(to): 101 adjacent to 100.
+        assert!(rec.depends(&MoveAttempt { from: 200, to: 101 }));
+        // Far pair: (8,8)=136 and (12,12)=204 on a 16-torus.
+        assert!(!rec.depends(&MoveAttempt { from: 136, to: 204 }));
+        rec.reset();
+        assert!(!rec.depends(&MoveAttempt { from: 0, to: 100 }));
+    }
+
+    #[test]
+    fn moves_respect_vacancy_and_tolerance() {
+        let m = SchellingModel::new(small(0), 1);
+        let before = m.snapshot();
+        // Occupied destination: no-op.
+        let occupied_to = (0..before.len())
+            .find(|&c| before[c] != EMPTY)
+            .unwrap() as u32;
+        let occupied_from = (0..before.len())
+            .rfind(|&c| before[c] != EMPTY)
+            .unwrap() as u32;
+        let mut rng = crate::sim::rng::TaskRng::for_task(0, 0);
+        m.execute(&MoveAttempt { from: occupied_from, to: occupied_to }, &mut rng);
+        assert_eq!(m.snapshot(), before);
+        // Empty source: no-op.
+        let empty = (0..before.len()).find(|&c| before[c] == EMPTY).unwrap() as u32;
+        let empty2 = (0..before.len()).rfind(|&c| before[c] == EMPTY).unwrap() as u32;
+        m.execute(&MoveAttempt { from: empty, to: empty2 }, &mut rng);
+        assert_eq!(m.snapshot(), before);
+    }
+}

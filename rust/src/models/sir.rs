@@ -1,0 +1,562 @@
+//! SIR-type epidemic model on a ring lattice (paper §4.2).
+//!
+//! `N` agents on a fixed constant-degree-`k` ring-like graph; states
+//! S(usceptible) → I(nfected) → R(ecovered) → S with probabilities
+//! `p_SI · (infected fraction of neighbours)`, `p_IR`, `p_RS`. All agents
+//! update synchronously per step, "conditionally on nearest-neighbours'
+//! states during the previous step" — the classic two-buffer scheme.
+//!
+//! ## Protocol mapping (paper §4.2)
+//!
+//! * The system is partitioned once into equal contiguous subsets of size
+//!   `s` (the Fig. 3 task-size proxy and granularity knob).
+//! * Two task types per step and subset: **compute** (type 1: write the
+//!   subset's new states from current states of the subset and its
+//!   neighbours) and **swap** (type 2: publish new states into current).
+//! * The recipe holds the subset id and the type flag; creation does no
+//!   other work (the paper's chosen depth for this experiment).
+//! * Record rules:
+//!   - compute(b) depends on a previously-encountered swap(b') with
+//!     `b' = b` or `b' ~ b` in the aggregate graph (paper, verbatim);
+//!   - swap(b) depends on a previously-encountered compute(b') with
+//!     `b' = b` **or `b' ~ b`** — the paper states "the same agent subset"
+//!     only, but compute(b') *reads* current states of connected subsets,
+//!     which swap(b) writes; the literal rule admits executions that
+//!     diverge from the sequential semantics (our determinism suite
+//!     detects this), so we use the conservative correction. See DESIGN.md
+//!     §2 "Documented protocol deviation".
+//! * The subset adjacency ("aggregate graph") is computed once after
+//!   initial-state generation and, following the paper, *is* part of the
+//!   measured run when using [`SirModel::build_timed`].
+
+use crate::model::{Model, Record, TaskSource};
+use crate::protocol::SyncModel;
+use crate::sim::graph::{aggregate_graph, contiguous_partition, ring_lattice, Csr, Partition};
+use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::state::SharedSim;
+use crate::util::bitset::BitSet;
+
+/// Agent epidemic state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Health {
+    /// Susceptible.
+    S = 0,
+    /// Infected.
+    I = 1,
+    /// Recovered.
+    R = 2,
+}
+
+/// Model parameters (paper values in parentheses).
+#[derive(Clone, Copy, Debug)]
+pub struct SirParams {
+    /// Number of agents (4×10³).
+    pub agents: usize,
+    /// Ring-lattice degree `k` (14).
+    pub degree: usize,
+    /// Infection probability scale `p_SI` (0.8).
+    pub p_si: f64,
+    /// Recovery probability `p_IR` (0.1).
+    pub p_ir: f64,
+    /// Immunity-loss probability `p_RS` (0.3).
+    pub p_rs: f64,
+    /// Steps (3×10³).
+    pub steps: u64,
+    /// Subset size `s` — Fig. 3's task-size proxy / chain granularity.
+    pub subset_size: usize,
+    /// Initially infected fraction (not specified in the paper; fixed at
+    /// 0.1 so the epidemic neither dies out instantly nor saturates).
+    pub initial_infected: f64,
+}
+
+impl Default for SirParams {
+    fn default() -> Self {
+        Self {
+            agents: 4_000,
+            degree: 14,
+            p_si: 0.8,
+            p_ir: 0.1,
+            p_rs: 0.3,
+            steps: 3_000,
+            subset_size: 100,
+            initial_infected: 0.1,
+        }
+    }
+}
+
+impl SirParams {
+    /// The paper's Fig. 3 configuration at subset size `s`.
+    pub fn paper(subset_size: usize) -> Self {
+        Self {
+            subset_size,
+            ..Self::default()
+        }
+    }
+
+    /// Scaled-down configuration for CI-sized runs.
+    pub fn scaled(subset_size: usize, agents: usize, steps: u64) -> Self {
+        Self {
+            agents,
+            steps,
+            subset_size,
+            ..Self::paper(subset_size)
+        }
+    }
+
+    /// Number of subsets `P`.
+    pub fn blocks(&self) -> usize {
+        self.agents.div_ceil(self.subset_size)
+    }
+}
+
+/// Double-buffered epidemic state.
+pub struct SirState {
+    /// Current states (read by compute, written by swap).
+    pub cur: Vec<u8>,
+    /// Next states (written by compute, read by swap).
+    pub new: Vec<u8>,
+}
+
+/// The pluggable model.
+pub struct SirModel {
+    /// Parameters.
+    pub params: SirParams,
+    graph: Csr,
+    partition: Partition,
+    /// Per-block dependence mask: `{b} ∪ neighbours(b)` in the aggregate
+    /// graph. Shared with every worker record.
+    masks: std::sync::Arc<Vec<BitSet>>,
+    state: SharedSim<SirState>,
+    /// Time spent building the aggregate graph (part of measured T per the
+    /// paper; reported so benches can add it).
+    pub setup_cost: std::time::Duration,
+}
+
+impl SirModel {
+    /// Build the model: graph, initial state (untimed, from `init_seed`),
+    /// partition and aggregate graph (timed — the paper includes this in
+    /// `T`).
+    pub fn new(params: SirParams, init_seed: u64) -> Self {
+        let graph = ring_lattice(params.agents, params.degree);
+        let mut rng = Rng::stream(init_seed, 0x51A);
+        let cur: Vec<u8> = (0..params.agents)
+            .map(|_| {
+                if rng.bernoulli(params.initial_infected) {
+                    Health::I as u8
+                } else {
+                    Health::S as u8
+                }
+            })
+            .collect();
+
+        let t0 = std::time::Instant::now();
+        let partition = contiguous_partition(params.agents, params.subset_size);
+        let agg = aggregate_graph(&graph, &partition);
+        let blocks = partition.blocks();
+        let mut masks = Vec::with_capacity(blocks);
+        for b in 0..blocks {
+            let mut m = BitSet::new(blocks);
+            m.set(b);
+            for &nb in agg.neighbors(b) {
+                m.set(nb as usize);
+            }
+            masks.push(m);
+        }
+        let setup_cost = t0.elapsed();
+
+        let new = cur.clone();
+        Self {
+            params,
+            graph,
+            partition,
+            masks: std::sync::Arc::new(masks),
+            state: SharedSim::new(SirState { cur, new }),
+            setup_cost,
+        }
+    }
+
+    /// Number of subsets.
+    pub fn blocks(&self) -> usize {
+        self.partition.blocks()
+    }
+
+    /// The interaction graph.
+    pub fn graph(&self) -> &Csr {
+        &self.graph
+    }
+
+    /// The fixed partition.
+    pub fn partition(&self) -> &Partition {
+        &self.partition
+    }
+
+    /// Snapshot of current states (quiescent use).
+    pub fn snapshot(&self) -> Vec<u8> {
+        unsafe { self.state.get() }.cur.clone()
+    }
+
+    /// Raw state access for the XLA task engine (crate-internal).
+    ///
+    /// # Safety
+    /// Same contract as `SharedSim::get_mut`: caller must uphold the
+    /// record discipline for everything it touches.
+    pub(crate) unsafe fn state_mut(&self) -> &mut SirState {
+        self.state.get_mut()
+    }
+
+    /// (S, I, R) counts (quiescent use).
+    pub fn census(&self) -> (usize, usize, usize) {
+        let cur = &unsafe { self.state.get() }.cur;
+        let mut c = [0usize; 3];
+        for &s in cur {
+            c[s as usize] += 1;
+        }
+        (c[0], c[1], c[2])
+    }
+
+    /// Compute phase for one block: write `new` states of the block's
+    /// agents from `cur` states. Draws exactly one uniform per agent so
+    /// the stream is schedule-independent.
+    fn compute_block(&self, block: usize, rng: &mut TaskRng) {
+        // SAFETY: record discipline — no concurrent swap of this block or
+        // a connected block (they write `cur` rows we read), no concurrent
+        // compute of this block (writes our `new` rows). Distinct-block
+        // computes write disjoint `new` rows and only share reads of
+        // `cur`. (DESIGN.md §6.)
+        let state = unsafe { self.state.get_mut() };
+        let k = self.params.degree as f64;
+        for &a in self.partition.members(block) {
+            let a = a as usize;
+            let u = rng.unit_f64();
+            let cur = state.cur[a];
+            let next = match cur {
+                0 => {
+                    // S → I with p_SI · (infected neighbour fraction)
+                    let infected = self
+                        .graph
+                        .neighbors(a)
+                        .iter()
+                        .filter(|&&nb| state.cur[nb as usize] == 1)
+                        .count();
+                    if u < self.params.p_si * (infected as f64 / k) {
+                        1
+                    } else {
+                        0
+                    }
+                }
+                1 => {
+                    if u < self.params.p_ir {
+                        2
+                    } else {
+                        1
+                    }
+                }
+                _ => {
+                    if u < self.params.p_rs {
+                        0
+                    } else {
+                        2
+                    }
+                }
+            };
+            state.new[a] = next;
+        }
+    }
+
+    /// Swap phase for one block: publish `new` into `cur`.
+    fn swap_block(&self, block: usize) {
+        // SAFETY: record discipline — no concurrent compute of this or a
+        // connected block (they read our `cur` rows); swaps of distinct
+        // blocks touch disjoint rows. (DESIGN.md §6.)
+        let state = unsafe { self.state.get_mut() };
+        for &a in self.partition.members(block) {
+            state.cur[a as usize] = state.new[a as usize];
+        }
+    }
+
+    /// The canonical task sequence number for `(step, phase, block)` —
+    /// shared by the chain engines (via source order) and the stepwise
+    /// baseline so that all engines use identical RNG streams.
+    pub fn task_seq(&self, step: u64, phase: usize, block: usize) -> u64 {
+        let p = self.blocks() as u64;
+        step * 2 * p + phase as u64 * p + block as u64
+    }
+}
+
+/// Task type flag (paper: "a binary flag indicating the task's type").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SirPhase {
+    /// Type 1: compute new states of a subset.
+    Compute,
+    /// Type 2: publish new states of a subset.
+    Swap,
+}
+
+/// Task payload: subset id + type flag.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SirTask {
+    /// Which task type.
+    pub phase: SirPhase,
+    /// Subset (block) id.
+    pub block: u32,
+}
+
+/// Worker record: which subsets appeared in absorbed compute/swap tasks.
+pub struct SirRecord {
+    seen_compute: BitSet,
+    seen_swap: BitSet,
+    masks: std::sync::Arc<Vec<BitSet>>,
+}
+
+impl Record for SirRecord {
+    type Recipe = SirTask;
+
+    #[inline]
+    fn depends(&self, r: &SirTask) -> bool {
+        let mask = &self.masks[r.block as usize];
+        match r.phase {
+            // compute(b) reads cur[b ∪ nbrs(b)]: conflicts with absorbed
+            // swaps there (paper's rule, verbatim).
+            SirPhase::Compute => self.seen_swap.intersects(mask),
+            // swap(b) writes cur[b]: conflicts with absorbed computes of b
+            // or connected blocks (conservative correction, see module
+            // docs).
+            SirPhase::Swap => self.seen_compute.intersects(mask),
+        }
+    }
+
+    #[inline]
+    fn absorb(&mut self, r: &SirTask) {
+        match r.phase {
+            SirPhase::Compute => self.seen_compute.set(r.block as usize),
+            SirPhase::Swap => self.seen_swap.set(r.block as usize),
+        }
+    }
+
+    #[inline]
+    fn reset(&mut self) {
+        self.seen_compute.clear();
+        self.seen_swap.clear();
+    }
+}
+
+/// Task source: `steps × (P computes, then P swaps)`, no creation-time
+/// randomness.
+pub struct SirSource {
+    blocks: u64,
+    steps: u64,
+    next: u64,
+}
+
+impl TaskSource for SirSource {
+    type Recipe = SirTask;
+
+    fn next_task(&mut self) -> Option<SirTask> {
+        let total = self.steps * 2 * self.blocks;
+        if self.next >= total {
+            return None;
+        }
+        let within = self.next % (2 * self.blocks);
+        let task = if within < self.blocks {
+            SirTask {
+                phase: SirPhase::Compute,
+                block: within as u32,
+            }
+        } else {
+            SirTask {
+                phase: SirPhase::Swap,
+                block: (within - self.blocks) as u32,
+            }
+        };
+        self.next += 1;
+        Some(task)
+    }
+
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.steps * 2 * self.blocks - self.next)
+    }
+}
+
+// The masks are shared between the model and every record; an Arc avoids
+// per-record clones of the whole mask table.
+impl Model for SirModel {
+    type Recipe = SirTask;
+    type Record = SirRecord;
+    type Source = SirSource;
+
+    fn source(&self, _seed: u64) -> SirSource {
+        SirSource {
+            blocks: self.blocks() as u64,
+            steps: self.params.steps,
+            next: 0,
+        }
+    }
+
+    fn record(&self) -> SirRecord {
+        SirRecord {
+            seen_compute: BitSet::new(self.blocks()),
+            seen_swap: BitSet::new(self.blocks()),
+            masks: self.masks.clone(),
+        }
+    }
+
+    fn execute(&self, r: &SirTask, rng: &mut TaskRng) {
+        match r.phase {
+            SirPhase::Compute => self.compute_block(r.block as usize, rng),
+            SirPhase::Swap => self.swap_block(r.block as usize),
+        }
+    }
+
+    fn task_work(&self, r: &SirTask) -> f64 {
+        let members = self.partition.members(r.block as usize).len() as f64;
+        match r.phase {
+            // Per-agent: one RNG draw + a k-neighbour scan when susceptible.
+            SirPhase::Compute => members * (1.0 + self.params.degree as f64 * 0.5),
+            SirPhase::Swap => members * 0.25,
+        }
+    }
+}
+
+impl SyncModel for SirModel {
+    fn steps(&self) -> u64 {
+        self.params.steps
+    }
+    fn phases(&self) -> usize {
+        2
+    }
+    fn blocks(&self, _phase: usize) -> usize {
+        self.partition.blocks()
+    }
+    fn run_block(&self, seed: u64, step: u64, phase: usize, block: usize) {
+        let mut rng = TaskRng::for_task(seed, self.task_seq(step, phase, block));
+        match phase {
+            0 => self.compute_block(block, &mut rng),
+            _ => self.swap_block(block),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine, StepwiseEngine};
+
+    fn small(s: usize) -> SirParams {
+        SirParams::scaled(s, 300, 40)
+    }
+
+    #[test]
+    fn source_order_is_computes_then_swaps_per_step() {
+        let m = SirModel::new(small(50), 0);
+        let mut src = m.source(0);
+        let p = m.blocks();
+        for step in 0..2 {
+            for b in 0..p {
+                let t = src.next_task().unwrap();
+                assert_eq!((t.phase, t.block), (SirPhase::Compute, b as u32), "step {step}");
+            }
+            for b in 0..p {
+                let t = src.next_task().unwrap();
+                assert_eq!((t.phase, t.block), (SirPhase::Swap, b as u32));
+            }
+        }
+    }
+
+    #[test]
+    fn census_conserves_agents_and_epidemic_moves() {
+        let m = SirModel::new(small(50), 1);
+        let (s0, i0, r0) = m.census();
+        assert_eq!(s0 + i0 + r0, 300);
+        assert!(i0 > 0, "some agents start infected");
+        assert_eq!(r0, 0);
+        SequentialEngine::new(3).run(&m);
+        let (s1, i1, r1) = m.census();
+        assert_eq!(s1 + i1 + r1, 300);
+        assert!(r1 > 0 || i1 != i0, "dynamics must move the state");
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let seed = 13;
+        for s in [10, 30, 150] {
+            let reference = {
+                let m = SirModel::new(small(s), 5);
+                SequentialEngine::new(seed).run(&m);
+                m.snapshot()
+            };
+            for workers in [1, 2, 4] {
+                let m = SirModel::new(small(s), 5);
+                ParallelEngine::new(ProtocolConfig {
+                    workers,
+                    seed,
+                    ..Default::default()
+                })
+                .run(&m);
+                assert_eq!(m.snapshot(), reference, "s={s} n={workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn stepwise_matches_sequential_bitwise() {
+        let seed = 21;
+        let reference = {
+            let m = SirModel::new(small(30), 2);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [1, 2, 3] {
+            let m = SirModel::new(small(30), 2);
+            StepwiseEngine::new(workers, seed).run(&m);
+            assert_eq!(m.snapshot(), reference, "stepwise n={workers} diverged");
+        }
+    }
+
+    #[test]
+    fn record_rules() {
+        let m = SirModel::new(small(30), 0);
+        let mut rec = m.record();
+        let c0 = SirTask { phase: SirPhase::Compute, block: 0 };
+        let s0 = SirTask { phase: SirPhase::Swap, block: 0 };
+        let s1 = SirTask { phase: SirPhase::Swap, block: 1 };
+        let c5 = SirTask { phase: SirPhase::Compute, block: 5 };
+
+        assert!(!rec.depends(&c0) && !rec.depends(&s0));
+        rec.absorb(&c0);
+        assert!(rec.depends(&s0), "swap(0) after pending compute(0)");
+        assert!(rec.depends(&s1), "swap(1) conflicts with compute(0): compute(0) reads cur of connected block 1 (conservative correction)");
+        assert!(!rec.depends(&c5), "far-away compute is independent");
+
+        rec.reset();
+        rec.absorb(&s0);
+        assert!(rec.depends(&c0), "compute(0) after pending swap(0)");
+        let c1 = SirTask { phase: SirPhase::Compute, block: 1 };
+        assert!(rec.depends(&c1), "compute(1) reads cur of connected block 0");
+        assert!(!rec.depends(&c5));
+    }
+
+    #[test]
+    fn task_seq_mapping_is_bijective_over_a_step() {
+        let m = SirModel::new(small(30), 0);
+        let p = m.blocks();
+        let mut seen = std::collections::BTreeSet::new();
+        for step in 0..3 {
+            for phase in 0..2 {
+                for b in 0..p {
+                    assert!(seen.insert(m.task_seq(step, phase, b)));
+                }
+            }
+        }
+        assert_eq!(seen.len(), 3 * 2 * p);
+        assert_eq!(*seen.iter().next().unwrap(), 0);
+        assert_eq!(*seen.iter().last().unwrap(), (3 * 2 * p - 1) as u64);
+    }
+
+    #[test]
+    fn setup_cost_is_measured() {
+        let m = SirModel::new(small(10), 0);
+        // Aggregate-graph construction takes nonzero (but tiny) time.
+        assert!(m.setup_cost.as_nanos() > 0);
+    }
+}

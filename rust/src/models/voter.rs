@@ -1,0 +1,233 @@
+//! Voter model on an arbitrary graph — a second *sequential* pairwise MABS
+//! exercising the protocol interface.
+//!
+//! Each step draws a random *listener* and a uniformly random neighbour
+//! (*speaker*); the listener adopts the speaker's opinion. Tasks are tiny
+//! (a single copy), making this the stress model for protocol-overhead
+//! ablations: virtually all time is protocol, none is model.
+//!
+//! Protocol mapping mirrors Axelrod: recipe = (speaker, listener); only
+//! listeners are written, so the record keeps the set of absorbed
+//! listeners.
+
+use std::sync::Arc;
+
+use crate::model::{Model, Record, TaskSource};
+use crate::sim::graph::Csr;
+use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::state::SharedSim;
+use crate::util::u32set::U32Set;
+
+/// Parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct VoterParams {
+    /// Number of opinions.
+    pub opinions: u8,
+    /// Number of update steps (== tasks).
+    pub steps: u64,
+}
+
+impl Default for VoterParams {
+    fn default() -> Self {
+        Self {
+            opinions: 2,
+            steps: 100_000,
+        }
+    }
+}
+
+/// The pluggable model. Owns the topology (any connected graph works).
+pub struct VoterModel {
+    /// Parameters.
+    pub params: VoterParams,
+    graph: Arc<Csr>,
+    opinions: SharedSim<Vec<u8>>,
+}
+
+impl VoterModel {
+    /// Build with uniform random initial opinions.
+    pub fn new(graph: Csr, params: VoterParams, init_seed: u64) -> Self {
+        let mut rng = Rng::stream(init_seed, 0x707E);
+        let opinions = (0..graph.n())
+            .map(|_| rng.below(params.opinions as u64) as u8)
+            .collect();
+        Self {
+            params,
+            graph: Arc::new(graph),
+            opinions: SharedSim::new(opinions),
+        }
+    }
+
+    /// Snapshot of opinions (quiescent use).
+    pub fn snapshot(&self) -> Vec<u8> {
+        unsafe { self.opinions.get() }.clone()
+    }
+
+    /// Count of agents holding each opinion.
+    pub fn tally(&self) -> Vec<usize> {
+        let ops = unsafe { self.opinions.get() };
+        let mut out = vec![0usize; self.params.opinions as usize];
+        for &o in ops.iter() {
+            out[o as usize] += 1;
+        }
+        out
+    }
+}
+
+/// Task payload.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct VoterStep {
+    /// Opinion source (read).
+    pub speaker: u32,
+    /// Opinion adopter (written).
+    pub listener: u32,
+}
+
+/// Record: listeners (written) and speakers (read) of absorbed tasks.
+/// Both are needed for the same reason as in `models::axelrod`: writing an
+/// agent that a pending earlier task will *read* (write-after-read) must
+/// also be ordered.
+pub struct VoterRecord {
+    listeners: U32Set,
+    speakers: U32Set,
+}
+
+impl Record for VoterRecord {
+    type Recipe = VoterStep;
+    #[inline]
+    fn depends(&self, r: &VoterStep) -> bool {
+        self.listeners.contains(r.speaker)
+            || self.listeners.contains(r.listener)
+            || self.speakers.contains(r.listener)
+    }
+    #[inline]
+    fn absorb(&mut self, r: &VoterStep) {
+        self.listeners.insert(r.listener);
+        self.speakers.insert(r.speaker);
+    }
+    #[inline]
+    fn reset(&mut self) {
+        self.listeners.clear();
+        self.speakers.clear();
+    }
+}
+
+/// Source: draws (listener, uniform neighbour) pairs.
+pub struct VoterSource {
+    rng: Rng,
+    graph: Arc<Csr>,
+    remaining: u64,
+}
+
+impl TaskSource for VoterSource {
+    type Recipe = VoterStep;
+    fn next_task(&mut self) -> Option<VoterStep> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let listener = self.rng.index(self.graph.n());
+        let nbrs = self.graph.neighbors(listener);
+        let speaker = *self.rng.choose(nbrs);
+        Some(VoterStep {
+            speaker,
+            listener: listener as u32,
+        })
+    }
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.remaining)
+    }
+}
+
+impl Model for VoterModel {
+    type Recipe = VoterStep;
+    type Record = VoterRecord;
+    type Source = VoterSource;
+
+    fn source(&self, seed: u64) -> VoterSource {
+        VoterSource {
+            rng: Rng::stream(seed, 0x0707),
+            graph: self.graph.clone(),
+            remaining: self.params.steps,
+        }
+    }
+
+    fn record(&self) -> VoterRecord {
+        VoterRecord {
+            listeners: U32Set::new(),
+            speakers: U32Set::new(),
+        }
+    }
+
+    fn execute(&self, r: &VoterStep, _rng: &mut TaskRng) {
+        // SAFETY: record discipline — only row `listener` is written; the
+        // speaker row is only read and no absorbed incomplete task wrote
+        // either (DESIGN.md §6).
+        unsafe {
+            let ops = self.opinions.get_mut();
+            ops[r.listener as usize] = ops[r.speaker as usize];
+        }
+    }
+
+    fn task_work(&self, _r: &VoterStep) -> f64 {
+        1.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+    use crate::sim::graph::ring_lattice;
+
+    fn model(steps: u64, seed: u64) -> VoterModel {
+        VoterModel::new(
+            ring_lattice(200, 6),
+            VoterParams {
+                opinions: 3,
+                steps,
+            },
+            seed,
+        )
+    }
+
+    #[test]
+    fn tally_is_conserved() {
+        let m = model(5_000, 4);
+        assert_eq!(m.tally().iter().sum::<usize>(), 200);
+        SequentialEngine::new(8).run(&m);
+        assert_eq!(m.tally().iter().sum::<usize>(), 200);
+    }
+
+    #[test]
+    fn parallel_matches_sequential_bitwise() {
+        let seed = 31;
+        let reference = {
+            let m = model(8_000, 6);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [2, 4] {
+            let m = model(8_000, 6);
+            ParallelEngine::new(ProtocolConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "n={workers}");
+        }
+    }
+
+    #[test]
+    fn speakers_are_neighbors() {
+        let m = model(1000, 0);
+        let mut src = m.source(9);
+        while let Some(t) = src.next_task() {
+            assert!(m
+                .graph
+                .neighbors(t.listener as usize)
+                .contains(&t.speaker));
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Execution engines.
+//!
+//! * [`ParallelEngine`] — the paper's contribution: adaptive, asynchronous
+//!   worker–chain execution (§3.3).
+//! * [`SequentialEngine`] — canonical single-threaded execution; the ground
+//!   truth for determinism tests and the T(n=1) baseline conceptually free
+//!   of protocol overhead.
+//! * [`StepwiseEngine`] — the related-work baseline the paper argues
+//!   against (§2): strict per-step splitting with barriers between phases.
+//!
+//! All engines execute the *same* model with the *same* per-task RNG
+//! streams, so their final states are bit-identical (the determinism test
+//! suite's core assertion).
+
+pub mod engine;
+pub mod sequential;
+pub mod stats;
+pub mod stepwise;
+pub mod worker;
+
+pub use engine::{ParallelEngine, ProtocolConfig};
+pub use sequential::SequentialEngine;
+pub use stats::{ProtocolStats, RunReport, WorkerStats};
+pub use stepwise::{StepwiseEngine, SyncModel};

@@ -1,0 +1,156 @@
+//! Protocol execution statistics.
+//!
+//! The paper's overhead discussion (§4) is driven by exactly these
+//! quantities: how often workers skip dependent tasks, pass executing
+//! tasks, retry over erased nodes, and how long chains grow. The ablation
+//! benches report them alongside wall-clock time.
+
+use std::time::Duration;
+
+/// Counters collected by one worker across a run.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStats {
+    /// Completed chain-exploration cycles.
+    pub cycles: u64,
+    /// Tasks executed (and erased) by this worker.
+    pub executed: u64,
+    /// Tasks created by this worker.
+    pub created: u64,
+    /// Tasks passed because the record reported a dependence.
+    pub skipped_dependent: u64,
+    /// Tasks passed because another worker was executing them.
+    pub passed_executing: u64,
+    /// Arrivals at erased nodes (forced retries from the previous node).
+    pub erased_retries: u64,
+    /// Cycles that neither executed nor created anything (idle spins).
+    pub idle_cycles: u64,
+    /// Total time spent inside `Model::execute` (only if timing enabled).
+    pub exec_time: Duration,
+    /// Total wall time of this worker's loop.
+    pub busy_time: Duration,
+}
+
+impl WorkerStats {
+    /// Merge another worker's counters into this one.
+    pub fn merge(&mut self, o: &WorkerStats) {
+        self.cycles += o.cycles;
+        self.executed += o.executed;
+        self.created += o.created;
+        self.skipped_dependent += o.skipped_dependent;
+        self.passed_executing += o.passed_executing;
+        self.erased_retries += o.erased_retries;
+        self.idle_cycles += o.idle_cycles;
+        self.exec_time += o.exec_time;
+        self.busy_time += o.busy_time;
+    }
+}
+
+/// Chain-level statistics for a run.
+#[derive(Clone, Debug, Default)]
+pub struct ProtocolStats {
+    /// Tasks created in total.
+    pub tasks_created: u64,
+    /// Tasks executed in total.
+    pub tasks_executed: u64,
+    /// High-water mark of the chain length.
+    pub max_chain_len: usize,
+}
+
+/// Result of one engine run.
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Engine label (`"parallel"`, `"sequential"`, `"stepwise"`,
+    /// `"virtual"`).
+    pub engine: &'static str,
+    /// Number of workers.
+    pub workers: usize,
+    /// Wall-clock duration of the run (the paper's `T`).
+    pub wall: Duration,
+    /// Aggregated worker counters.
+    pub totals: WorkerStats,
+    /// Per-worker counters.
+    pub per_worker: Vec<WorkerStats>,
+    /// Chain statistics.
+    pub chain: ProtocolStats,
+}
+
+impl RunReport {
+    /// Sum of per-worker counters (consistency helper for tests).
+    pub fn recompute_totals(&self) -> WorkerStats {
+        let mut t = WorkerStats::default();
+        for w in &self.per_worker {
+            t.merge(w);
+        }
+        t
+    }
+
+    /// Protocol overhead proxy: fraction of task visits that did not lead
+    /// to an execution (skips, passes, retries vs executions).
+    pub fn overhead_ratio(&self) -> f64 {
+        let wasted = self.totals.skipped_dependent
+            + self.totals.passed_executing
+            + self.totals.erased_retries;
+        let total = wasted + self.totals.executed;
+        if total == 0 {
+            0.0
+        } else {
+            wasted as f64 / total as f64
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} n={} wall={:?} executed={} created={} skipped={} passed={} retries={} cycles={} max_chain={}",
+            self.engine,
+            self.workers,
+            self.wall,
+            self.totals.executed,
+            self.totals.created,
+            self.totals.skipped_dependent,
+            self.totals.passed_executing,
+            self.totals.erased_retries,
+            self.totals.cycles,
+            self.chain.max_chain_len,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds_counters() {
+        let mut a = WorkerStats {
+            executed: 3,
+            cycles: 5,
+            ..Default::default()
+        };
+        let b = WorkerStats {
+            executed: 2,
+            skipped_dependent: 7,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.executed, 5);
+        assert_eq!(a.skipped_dependent, 7);
+        assert_eq!(a.cycles, 5);
+    }
+
+    #[test]
+    fn overhead_ratio_bounds() {
+        let mut r = RunReport {
+            engine: "test",
+            workers: 1,
+            wall: Duration::ZERO,
+            totals: WorkerStats::default(),
+            per_worker: vec![],
+            chain: ProtocolStats::default(),
+        };
+        assert_eq!(r.overhead_ratio(), 0.0);
+        r.totals.executed = 10;
+        r.totals.skipped_dependent = 10;
+        assert!((r.overhead_ratio() - 0.5).abs() < 1e-12);
+    }
+}

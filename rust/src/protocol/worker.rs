@@ -1,0 +1,209 @@
+//! The worker loop — the heart of the protocol (§3.3).
+//!
+//! Each worker repeatedly runs *cycles*: it enters the chain at the head
+//! sentinel and advances node by node. At every task it either
+//!
+//! * **executes** it — if its record reports no dependence on any
+//!   previously-encountered (incomplete) task and nobody else is executing
+//!   it — then erases it and returns to the start of the chain; or
+//! * **absorbs** its recipe into the record and moves on.
+//!
+//! At the tail it may create new tasks (at most `C` per cycle); a cycle
+//! ends after an execution, or at the tail when no task can be created.
+//!
+//! ## Traversal discipline (deadlock freedom)
+//!
+//! A worker holds exactly one *visitor slot* (its location) plus,
+//! transiently, the slot of the node it is arriving at; slot waits
+//! therefore only point *forward* along the chain — a strict total order —
+//! so waits cannot cycle. Erasure acquires the erased node's slot while
+//! holding nothing else, then the erase lock (whose holder only ever takes
+//! leaf link locks). Creation holds the tail slot (its holder never blocks
+//! except on leaf link locks). See `chain` module docs for the lock
+//! inventory and DESIGN.md §6 for the consistency argument.
+//!
+//! ## Arrival-at-erased retry
+//!
+//! A worker that blocked on a node's slot may find the node `Erased` when
+//! it finally acquires it (the executor erased it in between). It still
+//! holds its previous node's slot, so it simply re-reads that node's `next`
+//! pointer — updated by the unlink — and retries. Erased nodes are never
+//! traversed through.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::chain::node::NodeKind;
+use crate::chain::{Chain, NodeState};
+use crate::model::{Model, Record, TaskSource};
+use crate::sim::rng::TaskRng;
+
+use super::stats::WorkerStats;
+
+/// Shared, read-only worker context for one run.
+pub(crate) struct RunCtx<'a, M: Model> {
+    /// The chain.
+    pub chain: &'a Chain<M::Recipe>,
+    /// The model (shared state lives inside).
+    pub model: &'a M,
+    /// The serialized task source ("global, model-specific routine").
+    pub source: &'a Mutex<M::Source>,
+    /// Simulation seed (drives per-task RNG streams).
+    pub seed: u64,
+    /// `C`: maximum tasks created per worker cycle.
+    pub tasks_per_cycle: u32,
+    /// Whether to time each `Model::execute` call (adds two `Instant`
+    /// reads per task; off for timing-sensitive benches).
+    pub collect_timing: bool,
+}
+
+/// Outcome of processing an arrived-at node within a cycle.
+enum Processed {
+    /// Task executed and erased — the cycle is over.
+    ExecutedCycleEnds,
+    /// Task absorbed (dependent or being executed) — keep advancing.
+    Absorbed,
+}
+
+/// Run one worker to completion. Returns its statistics.
+pub(crate) fn worker_loop<M: Model>(ctx: &RunCtx<'_, M>, worker_id: usize) -> WorkerStats {
+    let _ = worker_id; // reserved for tracing
+    let mut stats = WorkerStats::default();
+    let mut record = ctx.model.record();
+    let loop_start = Instant::now();
+
+    'cycle: loop {
+        record.reset();
+        stats.cycles += 1;
+        let mut created_this_cycle: u32 = 0;
+        let did_work_at_cycle_start = stats.executed + stats.created;
+
+        // Enter the chain: the head sentinel's visitor slot doubles as the
+        // paper's enter-lock.
+        ctx.chain.head().visitor.acquire();
+        let mut current = ctx.chain.head().clone();
+        // Invariant: we hold `current`'s visitor slot, `current` is live.
+        loop {
+            let next = match current.next() {
+                Some(n) => n,
+                None => unreachable!("live non-tail node must have a successor"),
+            };
+
+            if ctx.chain.is_tail(&next) {
+                // --- creation path -------------------------------------
+                if created_this_cycle >= ctx.tasks_per_cycle || ctx.chain.exhausted() {
+                    current.visitor.release();
+                    break; // cycle ends: "reached the end and cannot create"
+                }
+                ctx.chain.tail().visitor.acquire();
+                // Poll the source while holding the tail slot: creations
+                // are serialized, so the creation stream's draw order (and
+                // hence the whole chain order) is deterministic.
+                let recipe = ctx.source.lock().unwrap().next_task();
+                match recipe {
+                    None => {
+                        ctx.chain.set_exhausted();
+                        ctx.chain.tail().visitor.release();
+                        current.visitor.release();
+                        break; // cycle ends
+                    }
+                    Some(recipe) => {
+                        let node = ctx.chain.append_after(&current, recipe);
+                        ctx.chain.tail().visitor.release();
+                        created_this_cycle += 1;
+                        stats.created += 1;
+                        // Move onto the new node. Uncontended: nobody can
+                        // read `current.next` while we hold current's slot.
+                        node.visitor.acquire();
+                        current.visitor.release();
+                        current = node;
+                        match process(ctx, &current, &mut record, &mut stats) {
+                            Processed::ExecutedCycleEnds => continue 'cycle,
+                            Processed::Absorbed => continue,
+                        }
+                    }
+                }
+            }
+
+            // --- advance path ------------------------------------------
+            next.visitor.acquire();
+            if next.state() == NodeState::Erased {
+                // Executor erased it while we waited; its unlink already
+                // rewired `current.next`, so retry from where we stand.
+                next.visitor.release();
+                stats.erased_retries += 1;
+                continue;
+            }
+            current.visitor.release();
+            current = next;
+            debug_assert_eq!(current.kind(), NodeKind::Task);
+            match process(ctx, &current, &mut record, &mut stats) {
+                Processed::ExecutedCycleEnds => continue 'cycle,
+                Processed::Absorbed => continue,
+            }
+        }
+
+        // Cycle ended without an execution. Are we done?
+        if ctx.chain.exhausted() && ctx.chain.is_empty() {
+            break;
+        }
+        if stats.executed + stats.created == did_work_at_cycle_start {
+            // Nothing executed or created this cycle: other workers hold
+            // all remaining work. Yield so the executor(s) get CPU time
+            // (essential on machines with fewer cores than workers).
+            stats.idle_cycles += 1;
+            std::thread::yield_now();
+        }
+    }
+
+    stats.busy_time = loop_start.elapsed();
+    stats
+}
+
+/// Handle an arrival at a live task node (visitor slot held).
+fn process<M: Model>(
+    ctx: &RunCtx<'_, M>,
+    node: &std::sync::Arc<crate::chain::Node<M::Recipe>>,
+    record: &mut M::Record,
+    stats: &mut WorkerStats,
+) -> Processed {
+    match node.state() {
+        NodeState::Executing => {
+            // Another worker is executing it: absorb and pass (§3.3).
+            record.absorb(node.recipe());
+            stats.passed_executing += 1;
+            Processed::Absorbed
+        }
+        NodeState::Pending => {
+            if record.depends(node.recipe()) {
+                record.absorb(node.recipe());
+                stats.skipped_dependent += 1;
+                Processed::Absorbed
+            } else {
+                // Execute. Claim the task (we hold the visitor slot, so the
+                // transition is ours alone), then free the slot so other
+                // workers can pass the executing task.
+                node.begin_execution();
+                node.visitor.release();
+
+                let mut rng = TaskRng::for_task(ctx.seed, node.seq());
+                if ctx.collect_timing {
+                    let t0 = Instant::now();
+                    ctx.model.execute(node.recipe(), &mut rng);
+                    stats.exec_time += t0.elapsed();
+                } else {
+                    ctx.model.execute(node.recipe(), &mut rng);
+                }
+
+                // Erase: re-acquire our node's slot (waiting out any worker
+                // currently passing it), unlink under the erase lock.
+                node.visitor.acquire();
+                ctx.chain.unlink(node);
+                node.visitor.release();
+                stats.executed += 1;
+                Processed::ExecutedCycleEnds
+            }
+        }
+        NodeState::Erased => unreachable!("arrival at erased nodes is retried earlier"),
+    }
+}

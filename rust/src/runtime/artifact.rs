@@ -1,0 +1,168 @@
+//! Artifact manifest parsing (`artifacts/manifest.txt`).
+//!
+//! Format (written by `python/compile/aot.py`), one artifact per line:
+//!
+//! ```text
+//! # comment
+//! <name> path=<file> kind=<kind> key=value ...
+//! ```
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One manifest entry.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactEntry {
+    /// Artifact name (first token).
+    pub name: String,
+    /// Path to the `.hlo.txt` file, resolved against the manifest dir.
+    pub path: PathBuf,
+    /// Remaining key/value metadata (`kind`, shapes, parameters).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactEntry {
+    /// Metadata value by key.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.meta.get(key).map(String::as_str)
+    }
+
+    /// Typed metadata value.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self
+            .get(key)
+            .with_context(|| format!("artifact {}: missing meta key `{key}`", self.name))?;
+        raw.parse::<T>()
+            .map_err(|e| anyhow::anyhow!("artifact {}: bad `{key}`={raw}: {e}", self.name))
+    }
+
+    /// The `kind` field.
+    pub fn kind(&self) -> &str {
+        self.get("kind").unwrap_or("")
+    }
+}
+
+/// A parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.txt` from an artifacts directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` resolves relative artifact paths.
+    pub fn parse(text: &str, dir: &Path) -> Result<Self> {
+        let mut entries = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut tokens = line.split_whitespace();
+            let name = tokens
+                .next()
+                .with_context(|| format!("manifest line {}: empty", i + 1))?
+                .to_string();
+            let mut meta = BTreeMap::new();
+            for tok in tokens {
+                let (k, v) = tok
+                    .split_once('=')
+                    .with_context(|| format!("manifest line {}: bad token `{tok}`", i + 1))?;
+                meta.insert(k.to_string(), v.to_string());
+            }
+            let rel = meta
+                .remove("path")
+                .with_context(|| format!("artifact {name}: missing path"))?;
+            entries.push(ArtifactEntry {
+                name,
+                path: dir.join(rel),
+                meta,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    /// Entry by exact name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// First entry of a given kind.
+    pub fn by_kind(&self, kind: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind() == kind)
+    }
+
+    /// The default artifacts directory, honouring `ADAPAR_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("ADAPAR_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# adapar AOT artifact manifest
+axelrod_b1_f100 path=axelrod_b1_f100.hlo.txt kind=axelrod b=1 f=100 omega=0.95
+sir_block_n300_k14_s30 path=sir_block.hlo.txt kind=sir_block n=300 k=14 s=30 p_si=0.8 p_ir=0.1 p_rs=0.3
+";
+
+    #[test]
+    fn parses_entries_and_meta() {
+        let m = Manifest::parse(SAMPLE, Path::new("/art")).unwrap();
+        assert_eq!(m.entries().len(), 2);
+        let a = m.by_name("axelrod_b1_f100").unwrap();
+        assert_eq!(a.kind(), "axelrod");
+        assert_eq!(a.get_parse::<usize>("f").unwrap(), 100);
+        assert_eq!(a.path, Path::new("/art/axelrod_b1_f100.hlo.txt"));
+        let s = m.by_kind("sir_block").unwrap();
+        assert_eq!(s.get_parse::<f64>("p_si").unwrap(), 0.8);
+        assert_eq!(s.get_parse::<usize>("s").unwrap(), 30);
+    }
+
+    #[test]
+    fn missing_path_is_an_error() {
+        assert!(Manifest::parse("x kind=foo", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn bad_token_is_an_error() {
+        assert!(Manifest::parse("x path=a.hlo.txt garbage", Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // Runs against the generated artifacts when they exist (CI builds
+        // them via `make artifacts` before `cargo test`).
+        let dir = Manifest::default_dir();
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.by_kind("axelrod").is_some());
+            assert!(m.by_kind("sir_block").is_some());
+            for e in m.entries() {
+                assert!(e.path.exists(), "{} missing", e.path.display());
+            }
+        }
+    }
+}

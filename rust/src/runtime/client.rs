@@ -1,0 +1,95 @@
+//! PJRT CPU client wrapper: compile HLO-text artifacts into executables.
+//!
+//! HLO **text** is the interchange format (not serialized protos): the
+//! image's xla_extension 0.5.1 rejects jax ≥ 0.5 protos with 64-bit
+//! instruction ids, while the text parser reassigns ids cleanly. See
+//! `python/compile/aot.py` and `/opt/xla-example/README.md`.
+
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+/// A PJRT client (CPU backend).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+impl XlaRuntime {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    /// Backend platform name (e.g. `"cpu"`).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Number of addressable devices.
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path is not UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable {
+            inner: Mutex::new(SendExec(exe)),
+        })
+    }
+}
+
+/// Wrapper asserting thread-safety of the underlying PJRT executable.
+///
+/// SAFETY: `PjRtLoadedExecutable` holds a `std::shared_ptr` to an XLA
+/// `PjRtLoadedExecutable`, whose `Execute` is documented thread-safe in
+/// PJRT; the Rust wrapper is `!Send` only because it stores a raw pointer.
+/// We additionally serialize all calls through the `Mutex` in
+/// [`Executable`], so cross-thread use is strictly sequential.
+struct SendExec(xla::PjRtLoadedExecutable);
+unsafe impl Send for SendExec {}
+
+/// A compiled computation, callable from any thread (calls serialized).
+pub struct Executable {
+    inner: Mutex<SendExec>,
+}
+
+impl Executable {
+    /// Execute with the given argument literals; returns the output
+    /// literals (the AOT path lowers with `return_tuple=True`, so the
+    /// single on-device output tuple is flattened here).
+    pub fn call(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let guard = self.inner.lock().unwrap();
+        let result = guard.0.execute::<xla::Literal>(args).context("execute")?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .context("device-to-host transfer")?;
+        let tuple = out.to_tuple().context("decomposing output tuple")?;
+        Ok(tuple)
+    }
+
+    /// Execute and return the single output (errors if arity ≠ 1).
+    pub fn call1(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let mut out = self.call(args)?;
+        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        Ok(out.pop().unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Compilation/execution is covered by the artifact-gated integration
+    // test (rust/tests/xla_integration.rs) — creating PJRT clients in unit
+    // tests would pay the startup cost in every `cargo test` shard.
+}

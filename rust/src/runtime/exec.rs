@@ -1,0 +1,62 @@
+//! Typed literal marshalling helpers for the PJRT boundary.
+
+use anyhow::{Context, Result};
+
+/// 1-D i32 literal from a slice.
+pub fn lit_i32(xs: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// 2-D i32 literal from row-major data.
+pub fn lit_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(xs.len() == rows * cols, "shape mismatch");
+    xla::Literal::vec1(xs)
+        .reshape(&[rows as i64, cols as i64])
+        .context("reshape")
+}
+
+/// 1-D f64 literal from a slice.
+pub fn lit_f64(xs: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(xs)
+}
+
+/// Scalar i32 literal.
+pub fn lit_i32_scalar(x: i32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_vec_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    lit.to_vec::<i32>().context("literal to Vec<i32>")
+}
+
+/// Extract an f64 vector from a literal.
+pub fn to_vec_f64(lit: &xla::Literal) -> Result<Vec<f64>> {
+    lit.to_vec::<f64>().context("literal to Vec<f64>")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_i32() {
+        let lit = lit_i32(&[1, 2, 3]);
+        assert_eq!(to_vec_i32(&lit).unwrap(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn reshape_checks_arity() {
+        assert!(lit_i32_2d(&[1, 2, 3], 2, 2).is_err());
+        let ok = lit_i32_2d(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert_eq!(to_vec_i32(&ok).unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn roundtrip_f64_and_scalar() {
+        let lit = lit_f64(&[0.5, 0.25]);
+        assert_eq!(to_vec_f64(&lit).unwrap(), vec![0.5, 0.25]);
+        let s = lit_i32_scalar(7);
+        assert_eq!(s.get_first_element::<i32>().unwrap(), 7);
+    }
+}

@@ -1,0 +1,21 @@
+//! PJRT/XLA runtime: load the AOT-compiled JAX+Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and execute them from Rust.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the compiled computations callable from the L3 coordinator:
+//!
+//! * [`client`] — PJRT CPU client + HLO-text compilation.
+//! * [`artifact`] — `manifest.txt` parsing and artifact lookup.
+//! * [`exec`] — typed literal marshalling helpers.
+//! * [`xla_engine`] — model variants whose task execution runs through
+//!   the compiled kernels ([`xla_engine::XlaSirModel`],
+//!   [`xla_engine::XlaAxelrodInteractor`]), validated bitwise against the
+//!   native models.
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+pub mod xla_engine;
+
+pub use artifact::{ArtifactEntry, Manifest};
+pub use client::{Executable, XlaRuntime};

@@ -1,0 +1,210 @@
+//! XLA-backed task execution: model variants whose compute runs through
+//! the AOT-compiled JAX+Pallas artifacts.
+//!
+//! These close the three-layer loop: the L3 protocol schedules tasks whose
+//! execution calls L2/L1 computations compiled once at build time. Because
+//! the native Rust models and the kernels implement identical f64 decision
+//! arithmetic and the uniforms are fed from the same per-task streams, the
+//! XLA path reproduces native results **bit for bit** (asserted by
+//! `rust/tests/xla_integration.rs`).
+//!
+//! Per-task PJRT dispatch costs ~µs — orders of magnitude above a native
+//! task body — so this engine exists for (a) validating the AOT path and
+//! (b) the `xla_dispatch` bench quantifying exactly that gap; batch
+//! amortization is the production answer (see `axelrod_b32` artifact).
+
+use anyhow::{Context, Result};
+
+use crate::model::Model;
+use crate::models::sir::{SirModel, SirPhase, SirRecord, SirSource, SirTask};
+use crate::sim::rng::TaskRng;
+
+use super::artifact::Manifest;
+use super::client::{Executable, XlaRuntime};
+use super::exec::{lit_f64, lit_i32, lit_i32_2d, lit_i32_scalar, to_vec_i32};
+
+/// A single-pair Axelrod interactor backed by the `axelrod_b1_*` artifact.
+pub struct XlaAxelrodInteractor {
+    exe: Executable,
+    features: usize,
+    omega: f64,
+}
+
+impl XlaAxelrodInteractor {
+    /// Load from a manifest (requires an `axelrod` artifact with `b=1`).
+    pub fn from_manifest(rt: &XlaRuntime, manifest: &Manifest) -> Result<Self> {
+        let entry = manifest
+            .entries()
+            .iter()
+            .find(|e| e.kind() == "axelrod" && e.get("b") == Some("1"))
+            .context("no axelrod b=1 artifact in manifest")?;
+        let features = entry.get_parse::<usize>("f")?;
+        let omega = entry.get_parse::<f64>("omega")?;
+        let exe = rt.load_hlo_text(&entry.path)?;
+        Ok(Self {
+            exe,
+            features,
+            omega,
+        })
+    }
+
+    /// Static feature count baked into the artifact.
+    pub fn features(&self) -> usize {
+        self.features
+    }
+
+    /// Bounded-confidence threshold baked into the artifact.
+    pub fn omega(&self) -> f64 {
+        self.omega
+    }
+
+    /// Run one interaction; returns the target's new trait row.
+    pub fn interact(
+        &self,
+        src: &[i32],
+        tgt: &[i32],
+        u_interact: f64,
+        u_pick: f64,
+    ) -> Result<Vec<i32>> {
+        anyhow::ensure!(
+            src.len() == self.features && tgt.len() == self.features,
+            "trait row length mismatch"
+        );
+        let out = self.exe.call1(&[
+            lit_i32_2d(src, 1, self.features)?,
+            lit_i32_2d(tgt, 1, self.features)?,
+            lit_f64(&[u_interact]),
+            lit_f64(&[u_pick]),
+        ])?;
+        to_vec_i32(&out)
+    }
+}
+
+/// SIR model whose **compute** tasks run through the `sir_block_*`
+/// artifact (swap tasks stay native: they are pure copies).
+///
+/// Wraps a native [`SirModel`] — same partition, same record rules, same
+/// task source — replacing only the task body.
+pub struct XlaSirModel {
+    inner: SirModel,
+    exe: Executable,
+    /// Neighbour matrix literal, marshalled once.
+    nbrs: Vec<i32>,
+    degree: usize,
+    block: usize,
+}
+
+impl XlaSirModel {
+    /// Build from a manifest entry matching the model's shape.
+    pub fn from_manifest(rt: &XlaRuntime, manifest: &Manifest, inner: SirModel) -> Result<Self> {
+        let n = inner.params.agents;
+        let k = inner.params.degree;
+        let s = inner.params.subset_size;
+        let entry = manifest
+            .entries()
+            .iter()
+            .find(|e| {
+                e.kind() == "sir_block"
+                    && e.get_parse::<usize>("n").ok() == Some(n)
+                    && e.get_parse::<usize>("k").ok() == Some(k)
+                    && e.get_parse::<usize>("s").ok() == Some(s)
+            })
+            .with_context(|| format!("no sir_block artifact for n={n} k={k} s={s}"))?;
+        for (key, expect) in [
+            ("p_si", inner.params.p_si),
+            ("p_ir", inner.params.p_ir),
+            ("p_rs", inner.params.p_rs),
+        ] {
+            let got = entry.get_parse::<f64>(key)?;
+            anyhow::ensure!(
+                (got - expect).abs() < 1e-12,
+                "artifact {key}={got} != model {key}={expect}"
+            );
+        }
+        let exe = rt.load_hlo_text(&entry.path)?;
+        let (degree, nbrs_u32) = inner
+            .graph()
+            .neighbor_matrix()
+            .context("SIR graph must be constant-degree")?;
+        let nbrs: Vec<i32> = nbrs_u32.into_iter().map(|x| x as i32).collect();
+        Ok(Self {
+            inner,
+            exe,
+            nbrs,
+            degree,
+            block: s,
+        })
+    }
+
+    /// The wrapped native model.
+    pub fn inner(&self) -> &SirModel {
+        &self.inner
+    }
+
+    /// Snapshot of current states (quiescent use).
+    pub fn snapshot(&self) -> Vec<u8> {
+        self.inner.snapshot()
+    }
+
+    fn compute_block_xla(&self, block: usize, rng: &mut TaskRng) -> Result<()> {
+        let members = self.inner.partition().members(block);
+        anyhow::ensure!(
+            members.len() == self.block,
+            "artifact block size {} != partition block {}",
+            self.block,
+            members.len()
+        );
+        let start = members[0] as i32;
+        // One uniform per agent in member order — the same stream layout
+        // as the native compute task.
+        let u: Vec<f64> = members.iter().map(|_| rng.unit_f64()).collect();
+        // SAFETY: record discipline (same footprint as the native compute
+        // task; see models::sir). We read `cur` wholesale — the record
+        // only guarantees non-conflict for the block's neighbourhood, but
+        // concurrent writes touch rows the artifact's gather never uses
+        // for this block… which the compiled gather cannot promise. The
+        // XLA engine therefore only runs under the sequential engine or
+        // with a single worker; `source()`/`record()` still expose the
+        // full protocol surface for validation runs.
+        let state = unsafe { self.inner.state_mut() };
+        let cur_i32: Vec<i32> = state.cur.iter().map(|&x| x as i32).collect();
+        let out = self.exe.call1(&[
+            lit_i32(&cur_i32),
+            lit_i32_2d(&self.nbrs, cur_i32.len(), self.degree)?,
+            lit_f64(&u),
+            lit_i32_scalar(start),
+        ])?;
+        let new_block = to_vec_i32(&out)?;
+        for (i, &a) in members.iter().enumerate() {
+            state.new[a as usize] = new_block[i] as u8;
+        }
+        Ok(())
+    }
+}
+
+impl Model for XlaSirModel {
+    type Recipe = SirTask;
+    type Record = SirRecord;
+    type Source = SirSource;
+
+    fn source(&self, seed: u64) -> SirSource {
+        self.inner.source(seed)
+    }
+
+    fn record(&self) -> SirRecord {
+        self.inner.record()
+    }
+
+    fn execute(&self, r: &SirTask, rng: &mut TaskRng) {
+        match r.phase {
+            SirPhase::Compute => self
+                .compute_block_xla(r.block as usize, rng)
+                .expect("XLA compute task failed"),
+            SirPhase::Swap => self.inner.execute(r, rng),
+        }
+    }
+
+    fn task_work(&self, r: &SirTask) -> f64 {
+        self.inner.task_work(r)
+    }
+}

@@ -1,0 +1,79 @@
+//! Aggregate (quotient) graph over a partition.
+//!
+//! Paper §4.2: "Connections between agent subsets are encoded in an
+//! aggregate graph computed once (just after generating the initial
+//! state); this computation contributes to the measured T."
+
+use super::{Csr, Partition};
+
+/// Quotient graph: blocks are vertices; two blocks are adjacent iff some
+/// edge of `g` crosses them. Self-edges (intra-block) are not represented.
+pub fn aggregate_graph(g: &Csr, p: &Partition) -> Csr {
+    assert_eq!(g.n(), p.n());
+    let mut edges = std::collections::BTreeSet::new();
+    for (v, nbrs) in g.iter() {
+        let bv = p.block_of(v);
+        for &u in nbrs {
+            let bu = p.block_of(u as usize);
+            if bu != bv {
+                edges.insert((bv.min(bu), bv.max(bu)));
+            }
+        }
+    }
+    let edges: Vec<_> = edges.into_iter().collect();
+    Csr::from_edges(p.blocks(), &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::graph::{contiguous_partition, ring_lattice};
+
+    #[test]
+    fn ring_aggregate_is_ringish() {
+        // Ring of 100, k=4 (reach 2), blocks of 10: each block touches the
+        // next/previous block only (reach 2 < block size 10).
+        let g = ring_lattice(100, 4);
+        let p = contiguous_partition(100, 10);
+        let a = aggregate_graph(&g, &p);
+        assert_eq!(a.n(), 10);
+        for b in 0..10 {
+            assert_eq!(a.degree(b), 2, "block {b}");
+        }
+        assert!(a.has_edge(0, 1));
+        assert!(a.has_edge(0, 9));
+    }
+
+    #[test]
+    fn wide_reach_touches_two_blocks_away() {
+        // k=14 => reach 7; blocks of 5 => neighbours up to 2 blocks away.
+        let g = ring_lattice(50, 14);
+        let p = contiguous_partition(50, 5);
+        let a = aggregate_graph(&g, &p);
+        assert!(a.has_edge(0, 1));
+        assert!(a.has_edge(0, 2));
+        assert!(!a.has_edge(0, 3));
+    }
+
+    #[test]
+    fn single_block_has_no_edges() {
+        let g = ring_lattice(20, 4);
+        let p = contiguous_partition(20, 20);
+        let a = aggregate_graph(&g, &p);
+        assert_eq!(a.n(), 1);
+        assert_eq!(a.m(), 0);
+    }
+
+    #[test]
+    fn paper_config_aggregate() {
+        // N=4000, k=14, s=50: reach 7 < 50 so each block touches exactly
+        // one block on each side.
+        let g = ring_lattice(4000, 14);
+        let p = contiguous_partition(4000, 50);
+        let a = aggregate_graph(&g, &p);
+        assert_eq!(a.n(), 80);
+        for b in 0..80 {
+            assert_eq!(a.degree(b), 2);
+        }
+    }
+}

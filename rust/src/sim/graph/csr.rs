@@ -1,0 +1,135 @@
+//! Compressed-sparse-row undirected graph storage.
+
+/// An undirected graph in CSR form. Neighbour lists are sorted; parallel
+/// edges and self-loops are rejected at construction.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    neighbors: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list over `n` vertices. Edges are undirected;
+    /// duplicates and self-loops panic (they indicate generator bugs).
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Self {
+        let mut degree = vec![0usize; n];
+        for &(a, b) in edges {
+            assert_ne!(a, b, "self-loop {a}");
+            assert!((a as usize) < n && (b as usize) < n, "edge out of range");
+            degree[a as usize] += 1;
+            degree[b as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + degree[i];
+        }
+        let mut neighbors = vec![0u32; offsets[n]];
+        let mut cursor = offsets.clone();
+        for &(a, b) in edges {
+            neighbors[cursor[a as usize]] = b;
+            cursor[a as usize] += 1;
+            neighbors[cursor[b as usize]] = a;
+            cursor[b as usize] += 1;
+        }
+        for i in 0..n {
+            let span = &mut neighbors[offsets[i]..offsets[i + 1]];
+            span.sort_unstable();
+            for w in span.windows(2) {
+                assert_ne!(w[0], w[1], "duplicate edge at vertex {i}");
+            }
+        }
+        Self { offsets, neighbors }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.neighbors.len() / 2
+    }
+
+    /// Degree of vertex `v`.
+    #[inline]
+    pub fn degree(&self, v: usize) -> usize {
+        self.offsets[v + 1] - self.offsets[v]
+    }
+
+    /// Sorted neighbour list of vertex `v`.
+    #[inline]
+    pub fn neighbors(&self, v: usize) -> &[u32] {
+        &self.neighbors[self.offsets[v]..self.offsets[v + 1]]
+    }
+
+    /// Whether `{a, b}` is an edge (binary search).
+    #[inline]
+    pub fn has_edge(&self, a: usize, b: usize) -> bool {
+        self.neighbors(a).binary_search(&(b as u32)).is_ok()
+    }
+
+    /// Iterate all vertices' neighbour slices.
+    pub fn iter(&self) -> impl Iterator<Item = (usize, &[u32])> {
+        (0..self.n()).map(move |v| (v, self.neighbors(v)))
+    }
+
+    /// Flat neighbour matrix `(n, k)` for constant-degree graphs, used to
+    /// marshal the topology into the XLA artifacts. Errors if the degree is
+    /// not uniform.
+    pub fn neighbor_matrix(&self) -> Option<(usize, Vec<u32>)> {
+        if self.n() == 0 {
+            return Some((0, Vec::new()));
+        }
+        let k = self.degree(0);
+        let mut out = Vec::with_capacity(self.n() * k);
+        for v in 0..self.n() {
+            if self.degree(v) != k {
+                return None;
+            }
+            out.extend_from_slice(self.neighbors(v));
+        }
+        Some((k, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triangle() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert_eq!(g.n(), 3);
+        assert_eq!(g.m(), 3);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert!(g.has_edge(2, 0));
+        assert!(!g.has_edge(0, 0));
+        let (k, mat) = g.neighbor_matrix().unwrap();
+        assert_eq!(k, 2);
+        assert_eq!(mat, vec![1, 2, 0, 2, 0, 1]);
+    }
+
+    #[test]
+    fn path_is_not_constant_degree() {
+        let g = Csr::from_edges(3, &[(0, 1), (1, 2)]);
+        assert_eq!(g.degree(1), 2);
+        assert_eq!(g.degree(0), 1);
+        assert!(g.neighbor_matrix().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_self_loop() {
+        let _ = Csr::from_edges(2, &[(0, 0)]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_duplicate_edge() {
+        let _ = Csr::from_edges(2, &[(0, 1), (1, 0)]);
+    }
+}

@@ -1,0 +1,189 @@
+//! Topology generators.
+
+use super::Csr;
+use crate::sim::rng::Rng;
+
+/// Ring lattice with constant even degree `k`: vertex `i` connects to the
+/// `k/2` nearest vertices on each side (the paper's SIR topology: "a fixed
+/// graph with constant degree k and a ring-like structure", k = 14).
+pub fn ring_lattice(n: usize, k: usize) -> Csr {
+    assert!(k % 2 == 0, "ring lattice degree must be even");
+    assert!(k < n, "degree must be below n");
+    let half = k / 2;
+    let mut edges = Vec::with_capacity(n * half);
+    for i in 0..n {
+        for d in 1..=half {
+            let j = (i + d) % n;
+            edges.push((i as u32, j as u32));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Complete graph K_n (the Axelrod experiment's "all connected to each
+/// other" topology — only used at small n; the Axelrod model itself samples
+/// pairs directly and never materializes K_n).
+pub fn complete(n: usize) -> Csr {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            edges.push((i as u32, j as u32));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// 2D periodic square lattice (`side` × `side`, 4-neighbourhood), used by
+/// the Ising model.
+pub fn lattice2d(side: usize) -> Csr {
+    assert!(side >= 3, "need side >= 3 for distinct torus neighbours");
+    let n = side * side;
+    let mut edges = Vec::with_capacity(2 * n);
+    let at = |r: usize, c: usize| (r * side + c) as u32;
+    for r in 0..side {
+        for c in 0..side {
+            edges.push((at(r, c), at(r, (c + 1) % side)));
+            edges.push((at(r, c), at((r + 1) % side, c)));
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+/// Erdős–Rényi G(n, m): `m` distinct uniform edges.
+pub fn erdos_renyi(n: usize, m: usize, rng: &mut Rng) -> Csr {
+    let max_m = n * (n - 1) / 2;
+    assert!(m <= max_m, "too many edges requested");
+    let mut set = std::collections::BTreeSet::new();
+    while set.len() < m {
+        let (a, b) = rng.distinct_pair(n);
+        let e = (a.min(b) as u32, a.max(b) as u32);
+        set.insert(e);
+    }
+    let edges: Vec<_> = set.into_iter().collect();
+    Csr::from_edges(n, &edges)
+}
+
+/// Watts–Strogatz small world: start from a ring lattice of degree `k`,
+/// rewire each clockwise edge with probability `beta` to a uniform
+/// non-duplicate target.
+pub fn watts_strogatz(n: usize, k: usize, beta: f64, rng: &mut Rng) -> Csr {
+    assert!(k % 2 == 0 && k < n);
+    let half = k / 2;
+    // adjacency sets for duplicate avoidance during rewiring
+    let mut adj: Vec<std::collections::BTreeSet<u32>> = vec![Default::default(); n];
+    let add = |adj: &mut Vec<std::collections::BTreeSet<u32>>, a: usize, b: usize| {
+        adj[a].insert(b as u32);
+        adj[b].insert(a as u32);
+    };
+    for i in 0..n {
+        for d in 1..=half {
+            add(&mut adj, i, (i + d) % n);
+        }
+    }
+    for i in 0..n {
+        for d in 1..=half {
+            let j = (i + d) % n;
+            if rng.bernoulli(beta) {
+                // Rewire i—j to i—t.
+                let mut attempts = 0;
+                loop {
+                    let t = rng.index(n);
+                    if t != i && !adj[i].contains(&(t as u32)) {
+                        adj[i].remove(&(j as u32));
+                        adj[j].remove(&(i as u32));
+                        add(&mut adj, i, t);
+                        break;
+                    }
+                    attempts += 1;
+                    if attempts > 32 {
+                        break; // saturated vertex: keep the original edge
+                    }
+                }
+            }
+        }
+    }
+    let mut edges = Vec::new();
+    for (i, set) in adj.iter().enumerate() {
+        for &j in set {
+            if (j as usize) > i {
+                edges.push((i as u32, j));
+            }
+        }
+    }
+    Csr::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_lattice_degree_and_structure() {
+        let g = ring_lattice(20, 6);
+        assert_eq!(g.n(), 20);
+        for v in 0..20 {
+            assert_eq!(g.degree(v), 6);
+        }
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(0, 3));
+        assert!(!g.has_edge(0, 4));
+        assert!(g.has_edge(0, 19)); // wraps
+        let (k, _) = g.neighbor_matrix().unwrap();
+        assert_eq!(k, 6);
+    }
+
+    #[test]
+    fn paper_sir_topology() {
+        // N = 4000, k = 14 — the exact Fig. 3 configuration.
+        let g = ring_lattice(4000, 14);
+        assert_eq!(g.n(), 4000);
+        assert_eq!(g.m(), 4000 * 7);
+        assert!(g.neighbor_matrix().is_some());
+    }
+
+    #[test]
+    fn complete_graph() {
+        let g = complete(5);
+        assert_eq!(g.m(), 10);
+        for v in 0..5 {
+            assert_eq!(g.degree(v), 4);
+        }
+    }
+
+    #[test]
+    fn lattice2d_torus() {
+        let g = lattice2d(4);
+        assert_eq!(g.n(), 16);
+        for v in 0..16 {
+            assert_eq!(g.degree(v), 4);
+        }
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(0, 4));
+        assert!(g.has_edge(0, 3)); // row wrap
+        assert!(g.has_edge(0, 12)); // column wrap
+    }
+
+    #[test]
+    fn erdos_renyi_edge_count() {
+        let mut rng = Rng::new(7);
+        let g = erdos_renyi(50, 100, &mut rng);
+        assert_eq!(g.n(), 50);
+        assert_eq!(g.m(), 100);
+    }
+
+    #[test]
+    fn watts_strogatz_preserves_edge_count() {
+        let mut rng = Rng::new(8);
+        let g = watts_strogatz(100, 6, 0.2, &mut rng);
+        assert_eq!(g.n(), 100);
+        // Rewiring preserves the number of edges (up to rare saturation).
+        assert!(g.m() >= 295 && g.m() <= 300, "m = {}", g.m());
+    }
+
+    #[test]
+    fn watts_strogatz_beta_zero_is_ring() {
+        let mut rng = Rng::new(9);
+        let g = watts_strogatz(30, 4, 0.0, &mut rng);
+        assert_eq!(g, ring_lattice(30, 4));
+    }
+}

@@ -1,0 +1,18 @@
+//! Graph toolkit: CSR storage, topology generators, partitions, and
+//! aggregate (quotient) graphs.
+//!
+//! The paper's SIR experiment (§4.2) runs on "a fixed graph with constant
+//! degree k and a ring-like structure" partitioned into equal agent
+//! subsets, with subset adjacency captured by an *aggregate graph* computed
+//! once after initialization. This module provides that machinery plus the
+//! standard topologies used by the extra models and tests.
+
+mod aggregate;
+mod csr;
+mod generators;
+mod partition;
+
+pub use aggregate::aggregate_graph;
+pub use csr::Csr;
+pub use generators::{complete, erdos_renyi, lattice2d, ring_lattice, watts_strogatz};
+pub use partition::{contiguous_partition, round_robin_partition, Partition};

@@ -1,0 +1,110 @@
+//! Vertex partitions — the SIR experiment's "partition of the system into
+//! equal subsets, fixed throughout the simulation" (§4.2). The subset size
+//! is the experiment's task-size proxy `s` and sets the chain granularity.
+
+/// A partition of `n` vertices into blocks.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Partition {
+    /// block id per vertex
+    block_of: Vec<u32>,
+    /// vertex list per block
+    members: Vec<Vec<u32>>,
+}
+
+impl Partition {
+    /// Build from a block-id assignment (block ids must be dense `0..B`).
+    pub fn from_assignment(block_of: Vec<u32>) -> Self {
+        let blocks = block_of.iter().copied().max().map_or(0, |m| m as usize + 1);
+        let mut members = vec![Vec::new(); blocks];
+        for (v, &b) in block_of.iter().enumerate() {
+            members[b as usize].push(v as u32);
+        }
+        assert!(
+            members.iter().all(|m| !m.is_empty()),
+            "partition has empty blocks"
+        );
+        Self { block_of, members }
+    }
+
+    /// Number of blocks.
+    #[inline]
+    pub fn blocks(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.block_of.len()
+    }
+
+    /// Block id of vertex `v`.
+    #[inline]
+    pub fn block_of(&self, v: usize) -> u32 {
+        self.block_of[v]
+    }
+
+    /// Members of block `b` (ascending).
+    #[inline]
+    pub fn members(&self, b: usize) -> &[u32] {
+        &self.members[b]
+    }
+
+    /// Largest block size.
+    pub fn max_block_size(&self) -> usize {
+        self.members.iter().map(Vec::len).max().unwrap_or(0)
+    }
+}
+
+/// Contiguous partition into blocks of size `s` (last block may be
+/// smaller). With a ring lattice this minimizes inter-block edges — the
+/// paper's implied choice for the ring-like SIR topology.
+pub fn contiguous_partition(n: usize, s: usize) -> Partition {
+    assert!(s >= 1 && n >= 1);
+    let assignment: Vec<u32> = (0..n).map(|v| (v / s) as u32).collect();
+    Partition::from_assignment(assignment)
+}
+
+/// Round-robin partition into `b` blocks (pessimal locality; used by the
+/// granularity ablation to show partition quality matters).
+pub fn round_robin_partition(n: usize, b: usize) -> Partition {
+    assert!(b >= 1 && b <= n);
+    let assignment: Vec<u32> = (0..n).map(|v| (v % b) as u32).collect();
+    Partition::from_assignment(assignment)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contiguous_blocks() {
+        let p = contiguous_partition(10, 4);
+        assert_eq!(p.blocks(), 3);
+        assert_eq!(p.members(0), &[0, 1, 2, 3]);
+        assert_eq!(p.members(2), &[8, 9]);
+        assert_eq!(p.block_of(5), 1);
+        assert_eq!(p.max_block_size(), 4);
+    }
+
+    #[test]
+    fn exact_division() {
+        let p = contiguous_partition(4000, 50);
+        assert_eq!(p.blocks(), 80);
+        assert!(p.members.iter().all(|m| m.len() == 50));
+    }
+
+    #[test]
+    fn round_robin_blocks() {
+        let p = round_robin_partition(10, 3);
+        assert_eq!(p.blocks(), 3);
+        assert_eq!(p.members(0), &[0, 3, 6, 9]);
+        assert_eq!(p.members(1), &[1, 4, 7]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_block_rejected() {
+        let _ = Partition::from_assignment(vec![0, 2]); // block 1 missing
+    }
+}

@@ -1,0 +1,6 @@
+//! Simulation substrates: deterministic RNG, shared simulation state, and
+//! the graph toolkit (topologies, partitions, aggregate graphs).
+
+pub mod graph;
+pub mod rng;
+pub mod state;

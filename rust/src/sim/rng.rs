@@ -1,0 +1,296 @@
+//! Deterministic RNG substrate.
+//!
+//! The protocol's determinism guarantee (parallel execution bit-identical to
+//! sequential execution, DESIGN.md §6) requires that randomness is keyed by
+//! *logical* position, never by thread identity or wall clock:
+//!
+//! * task **creation** draws from a single creation stream that advances
+//!   under the chain's tail lock (creation is serialized, so the sequence of
+//!   draws is a deterministic function of the seed);
+//! * task **execution** draws from a private [`TaskRng`] stream derived from
+//!   `(simulation seed, task sequence number)` — concurrent executions never
+//!   share a stream.
+//!
+//! Implementations: SplitMix64 (seeding / stream derivation) and
+//! xoshiro256++ (the workhorse generator). Both are tiny, fast, and
+//! reproduce the reference vectors from the authors' public domain C code.
+
+/// SplitMix64 — used to expand seeds and derive stream keys.
+///
+/// Reference: Sebastiano Vigna's public-domain implementation.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new generator from a raw seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — the main generator used by all simulation streams.
+///
+/// Reference: Blackman & Vigna, public-domain `xoshiro256plusplus.c`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+#[inline(always)]
+fn rotl(x: u64, k: u32) -> u64 {
+    x.rotate_left(k)
+}
+
+impl Rng {
+    /// Seed via SplitMix64 expansion (never yields the all-zero state).
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Derive an independent stream for logical index `stream` under `seed`.
+    ///
+    /// Streams are decorrelated by hashing the pair through SplitMix64 with
+    /// golden-ratio mixing, then expanding the result into a fresh state.
+    pub fn stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed ^ stream.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // One extra scramble round to separate (seed, 0) from plain seed.
+        let k = sm.next_u64();
+        Self::new(k)
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = rotl(self.s[0].wrapping_add(self.s[3]), 23).wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = rotl(self.s[3], 45);
+        result
+    }
+
+    /// Next 32-bit output (upper bits of the 64-bit output).
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's multiply-shift method
+    /// (unbiased, uses rejection on the low product half).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0, "below(0) is meaningless");
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform `usize` in `[0, bound)`.
+    #[inline]
+    pub fn index(&mut self, bound: usize) -> usize {
+        self.below(bound as u64) as usize
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn unit_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Bernoulli trial with success probability `p`.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.unit_f64() < p
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range_inclusive(&mut self, lo: u64, hi: u64) -> u64 {
+        debug_assert!(lo <= hi);
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Pick a uniformly random element of a slice.
+    #[inline]
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.index(xs.len())]
+    }
+
+    /// Pick a uniformly random *ordered pair* of distinct indices `< n`.
+    #[inline]
+    pub fn distinct_pair(&mut self, n: usize) -> (usize, usize) {
+        debug_assert!(n >= 2);
+        let a = self.index(n);
+        let mut b = self.index(n - 1);
+        if b >= a {
+            b += 1;
+        }
+        (a, b)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Per-task execution stream (see module docs).
+///
+/// A thin newtype so model code cannot accidentally mix creation-stream and
+/// execution-stream randomness.
+#[derive(Clone, Debug)]
+pub struct TaskRng(Rng);
+
+impl TaskRng {
+    /// Derive the execution stream for task `task_seq` under `seed`.
+    ///
+    /// The domain-separation constant keeps task streams disjoint from
+    /// creation streams even for colliding integer arguments.
+    pub fn for_task(seed: u64, task_seq: u64) -> Self {
+        const TASK_DOMAIN: u64 = 0x7A5C_0000_5EED_0001;
+        TaskRng(Rng::stream(seed ^ TASK_DOMAIN, task_seq))
+    }
+}
+
+impl std::ops::Deref for TaskRng {
+    type Target = Rng;
+    fn deref(&self) -> &Rng {
+        &self.0
+    }
+}
+
+impl std::ops::DerefMut for TaskRng {
+    fn deref_mut(&mut self) -> &mut Rng {
+        &mut self.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // First outputs for seed 0 from the public-domain reference code.
+        let mut sm = SplitMix64::new(0);
+        assert_eq!(sm.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(sm.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+        assert_eq!(sm.next_u64(), 0x06C4_5D18_8009_454F);
+    }
+
+    #[test]
+    fn xoshiro_is_deterministic_and_seed_sensitive() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        let mut c = Rng::new(43);
+        let va: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let vb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let vc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn streams_are_decorrelated() {
+        let mut s0 = Rng::stream(7, 0);
+        let mut s1 = Rng::stream(7, 1);
+        let v0: Vec<u64> = (0..8).map(|_| s0.next_u64()).collect();
+        let v1: Vec<u64> = (0..8).map(|_| s1.next_u64()).collect();
+        assert_ne!(v0, v1);
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(1);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn unit_f64_in_half_open_interval() {
+        let mut r = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = r.unit_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn unit_f64_mean_near_half() {
+        let mut r = Rng::new(3);
+        let n = 100_000;
+        let mean: f64 = (0..n).map(|_| r.unit_f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn distinct_pair_is_distinct_and_uniformish() {
+        let mut r = Rng::new(4);
+        let mut counts = [[0u32; 5]; 5];
+        for _ in 0..20_000 {
+            let (a, b) = r.distinct_pair(5);
+            assert_ne!(a, b);
+            counts[a][b] += 1;
+        }
+        // 20 ordered pairs, expect ~1000 each; allow wide tolerance.
+        for a in 0..5 {
+            for b in 0..5 {
+                if a != b {
+                    assert!(counts[a][b] > 700, "pair ({a},{b}) count {}", counts[a][b]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn task_rng_differs_per_task() {
+        let mut t0 = TaskRng::for_task(9, 0);
+        let mut t1 = TaskRng::for_task(9, 1);
+        assert_ne!(t0.next_u64(), t1.next_u64());
+    }
+}

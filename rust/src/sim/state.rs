@@ -1,0 +1,123 @@
+//! Shared simulation state — the one `unsafe` in the protocol's hot path.
+//!
+//! # Safety argument (DESIGN.md §6)
+//!
+//! Agent state is accessed concurrently by workers executing tasks. The
+//! protocol guarantees that **tasks executing concurrently are pairwise
+//! independent**: a worker only executes a task after verifying, via its
+//! record (accumulated over every incomplete task preceding it in the chain
+//! during the current cycle), that the task's conservative read/write
+//! footprint is disjoint from those of all incomplete predecessors. Records
+//! are conservative over-approximations, so disjointness at the record
+//! level implies disjointness of the actual memory accesses.
+//!
+//! Happens-before for *sequentially ordered* (dependent) tasks is
+//! established by the chain's mutexes: an executing worker publishes its
+//! writes when it releases the erase-side link locks, and any worker that
+//! subsequently observes the task as erased acquired those same locks.
+//!
+//! Therefore: conflicting accesses are totally ordered via lock
+//! synchronization, non-conflicting accesses are disjoint — no data race.
+//! All uses of [`SharedSim::get_mut`] must go through the protocol (or a
+//! single-threaded engine), which is why the method is `unsafe` and the
+//! type is not exported beyond the crate's engine/model modules.
+
+use std::cell::UnsafeCell;
+
+/// Interior-mutable, `Sync` wrapper around simulation state `T`.
+///
+/// See the module docs for the safety argument. The protocol (not this
+/// type) enforces mutual exclusion between conflicting accesses.
+#[derive(Debug)]
+pub struct SharedSim<T> {
+    cell: UnsafeCell<T>,
+}
+
+// SAFETY: see module-level safety argument. `SharedSim` hands out aliasing
+// mutable references only through `unsafe fn get_mut`, whose contract makes
+// the caller (the protocol engines) responsible for conflict freedom.
+unsafe impl<T: Send> Sync for SharedSim<T> {}
+unsafe impl<T: Send> Send for SharedSim<T> {}
+
+impl<T> SharedSim<T> {
+    /// Wrap a state value.
+    pub fn new(value: T) -> Self {
+        Self {
+            cell: UnsafeCell::new(value),
+        }
+    }
+
+    /// Shared reference to the state.
+    ///
+    /// # Safety
+    /// The caller must guarantee no concurrent conflicting mutable access
+    /// to the parts of `T` it will read (protocol record discipline).
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn get(&self) -> &T {
+        &*self.cell.get()
+    }
+
+    /// Mutable reference to the state.
+    ///
+    /// # Safety
+    /// The caller must guarantee exclusive access to the parts of `T` it
+    /// will mutate and absence of concurrent readers of those parts
+    /// (protocol record discipline).
+    #[allow(clippy::mut_from_ref)]
+    #[inline]
+    pub unsafe fn get_mut(&self) -> &mut T {
+        &mut *self.cell.get()
+    }
+
+    /// Consume the wrapper, returning the state (requires unique ownership,
+    /// hence safe).
+    pub fn into_inner(self) -> T {
+        self.cell.into_inner()
+    }
+
+    /// Exclusive access through a unique borrow (safe: `&mut self`).
+    pub fn get_mut_exclusive(&mut self) -> &mut T {
+        self.cell.get_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_threaded_roundtrip() {
+        let s = SharedSim::new(vec![1u32, 2, 3]);
+        unsafe {
+            s.get_mut()[0] = 7;
+            assert_eq!(s.get()[0], 7);
+        }
+        assert_eq!(s.into_inner(), vec![7, 2, 3]);
+    }
+
+    #[test]
+    fn disjoint_parallel_writes_are_race_free() {
+        // Two threads write disjoint halves — the pattern the protocol
+        // guarantees. Run under `cargo miri test` for UB checking if
+        // available; under plain test this asserts the values.
+        let s = std::sync::Arc::new(SharedSim::new(vec![0u64; 1024]));
+        let a = s.clone();
+        let b = s.clone();
+        let ta = std::thread::spawn(move || unsafe {
+            for i in 0..512 {
+                a.get_mut()[i] = 1;
+            }
+        });
+        let tb = std::thread::spawn(move || unsafe {
+            for i in 512..1024 {
+                b.get_mut()[i] = 2;
+            }
+        });
+        ta.join().unwrap();
+        tb.join().unwrap();
+        let v = unsafe { s.get() };
+        assert!(v[..512].iter().all(|&x| x == 1));
+        assert!(v[512..].iter().all(|&x| x == 2));
+    }
+}

@@ -1,0 +1,221 @@
+//! Benchmark statistics harness (criterion is unavailable offline).
+//!
+//! Usage pattern, shared by all `rust/benches/*` targets:
+//!
+//! ```ignore
+//! let mut b = Bench::new("fig2_cultural");
+//! let m = b.measure("axelrod F=100 n=2", Budget::default(), || run_once(...));
+//! println!("{}", m);
+//! ```
+//!
+//! Each measurement runs warmup iterations, then timed samples, and reports
+//! mean ± SEM, median, and min. Timings use `std::time::Instant`
+//! (CLOCK_MONOTONIC). The paper's figures average over five seeds; seed
+//! variation is handled by the *callers* (each sample = one full simulation
+//! instance with its own seed), matching the paper's methodology.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Sampling budget for one measurement.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// Warmup iterations (not recorded).
+    pub warmup: usize,
+    /// Recorded samples.
+    pub samples: usize,
+    /// Hard wall-clock cap; sampling stops early once exceeded (at least
+    /// one sample is always taken).
+    pub max_total: Duration,
+}
+
+impl Default for Budget {
+    fn default() -> Self {
+        Self {
+            warmup: 1,
+            samples: 5,
+            max_total: Duration::from_secs(60),
+        }
+    }
+}
+
+impl Budget {
+    /// Budget for quick smoke measurements.
+    pub fn quick() -> Self {
+        Self {
+            warmup: 0,
+            samples: 3,
+            max_total: Duration::from_secs(20),
+        }
+    }
+}
+
+/// One finished measurement.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    /// Label (shown in tables).
+    pub label: String,
+    /// Per-sample durations in seconds.
+    pub samples_s: Vec<f64>,
+    /// Summary over `samples_s`.
+    pub summary: Summary,
+}
+
+impl std::fmt::Display for Measurement {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{:<44} mean {:>10} ± {:>8}  median {:>10}  min {:>10}  (n={})",
+            self.label,
+            fmt_secs(self.summary.mean),
+            fmt_secs(self.summary.sem),
+            fmt_secs(self.summary.median),
+            fmt_secs(self.summary.min),
+            self.summary.n,
+        )
+    }
+}
+
+/// Human-scaled duration formatting.
+pub fn fmt_secs(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// A named collection of measurements (one bench target).
+pub struct Bench {
+    name: String,
+    measurements: Vec<Measurement>,
+}
+
+impl Bench {
+    /// Create a bench group.
+    pub fn new(name: &str) -> Self {
+        eprintln!("== bench group: {name} ==");
+        Self {
+            name: name.to_string(),
+            measurements: Vec::new(),
+        }
+    }
+
+    /// Group name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Run and record one measurement of `f` (its return value is consumed
+    /// via `std::hint::black_box` to keep the optimizer honest).
+    pub fn measure<T>(&mut self, label: &str, budget: Budget, mut f: impl FnMut() -> T) -> &Measurement {
+        let started = Instant::now();
+        for _ in 0..budget.warmup {
+            std::hint::black_box(f());
+            if started.elapsed() > budget.max_total {
+                break;
+            }
+        }
+        let mut samples = Vec::with_capacity(budget.samples);
+        for i in 0..budget.samples {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+            if i + 1 < budget.samples && started.elapsed() > budget.max_total {
+                break;
+            }
+        }
+        let m = Measurement {
+            label: label.to_string(),
+            summary: Summary::of(&samples),
+            samples_s: samples,
+        };
+        eprintln!("{m}");
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// Record an externally-taken set of samples (seconds).
+    pub fn record(&mut self, label: &str, samples_s: Vec<f64>) -> &Measurement {
+        let m = Measurement {
+            label: label.to_string(),
+            summary: Summary::of(&samples_s),
+            samples_s,
+        };
+        eprintln!("{m}");
+        self.measurements.push(m);
+        self.measurements.last().unwrap()
+    }
+
+    /// All measurements so far.
+    pub fn measurements(&self) -> &[Measurement] {
+        &self.measurements
+    }
+
+    /// Emit a CSV of all measurements under `target/bench-data/<name>.csv`.
+    pub fn write_csv(&self) -> std::io::Result<std::path::PathBuf> {
+        let mut t = super::csv::Table::new(["label", "mean_s", "sem_s", "median_s", "min_s", "n"]);
+        for m in &self.measurements {
+            t.push([
+                m.label.clone(),
+                format!("{:.9}", m.summary.mean),
+                format!("{:.9}", m.summary.sem),
+                format!("{:.9}", m.summary.median),
+                format!("{:.9}", m.summary.min),
+                m.summary.n.to_string(),
+            ]);
+        }
+        let path = std::path::PathBuf::from(format!("target/bench-data/{}.csv", self.name));
+        t.write_csv(&path)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_records_samples() {
+        let mut b = Bench::new("test_group");
+        let m = b.measure(
+            "noop",
+            Budget {
+                warmup: 1,
+                samples: 4,
+                max_total: Duration::from_secs(5),
+            },
+            || 1 + 1,
+        );
+        assert_eq!(m.samples_s.len(), 4);
+        assert!(m.summary.mean >= 0.0);
+    }
+
+    #[test]
+    fn budget_cap_stops_early() {
+        let mut b = Bench::new("test_cap");
+        let m = b.measure(
+            "sleepy",
+            Budget {
+                warmup: 0,
+                samples: 100,
+                max_total: Duration::from_millis(30),
+            },
+            || std::thread::sleep(Duration::from_millis(20)),
+        );
+        assert!(m.samples_s.len() < 100);
+    }
+
+    #[test]
+    fn fmt_secs_scales() {
+        assert!(fmt_secs(2.0).ends_with(" s"));
+        assert!(fmt_secs(2e-3).ends_with(" ms"));
+        assert!(fmt_secs(2e-6).ends_with(" µs"));
+        assert!(fmt_secs(2e-9).ends_with(" ns"));
+    }
+}

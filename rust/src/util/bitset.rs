@@ -1,0 +1,145 @@
+//! Fixed-capacity bitsets for the SIR record's subset bookkeeping.
+//!
+//! The SIR model's dependence test is "does the set of subsets I have seen
+//! intersect the neighbourhood mask of this subset?" — a word-wise AND over
+//! two bitsets of `P = N/s` bits (≤ 400 for every paper configuration).
+
+/// Fixed-capacity bitset over `0..capacity`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+}
+
+impl BitSet {
+    /// All-zero bitset with room for `capacity` bits.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            words: vec![0; capacity.div_ceil(64)],
+            capacity,
+        }
+    }
+
+    /// Capacity in bits.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    /// Clear bit `i`.
+    #[inline]
+    pub fn unset(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    /// Test bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.capacity);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Zero all bits (keeps capacity; no allocation).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.words.iter_mut().for_each(|w| *w = 0);
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Whether `self ∩ other ≠ ∅` (word-wise AND; the record hot path).
+    #[inline]
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.capacity, other.capacity);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .any(|(a, b)| a & b != 0)
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Iterate indices of set bits, ascending.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(wi * 64 + b)
+                }
+            })
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_unset() {
+        let mut b = BitSet::new(130);
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(128));
+        assert_eq!(b.count(), 3);
+        b.unset(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn intersects_and_union() {
+        let mut a = BitSet::new(200);
+        let mut b = BitSet::new(200);
+        a.set(7);
+        b.set(150);
+        assert!(!a.intersects(&b));
+        b.set(7);
+        assert!(a.intersects(&b));
+        a.union_with(&b);
+        assert!(a.get(150));
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut b = BitSet::new(100);
+        for i in (0..100).step_by(3) {
+            b.set(i);
+        }
+        b.clear();
+        assert_eq!(b.count(), 0);
+    }
+
+    #[test]
+    fn iter_ones_ascending() {
+        let mut b = BitSet::new(256);
+        for i in [3usize, 64, 65, 200, 255] {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, vec![3, 64, 65, 200, 255]);
+    }
+}

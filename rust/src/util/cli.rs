@@ -1,0 +1,207 @@
+//! Command-line argument parsing (hand-rolled; no `clap` offline).
+//!
+//! Grammar: `adapar <subcommand> [--flag] [--key value] [--key=value]
+//! [positional...]`. Unknown flags are an error so typos fail fast.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand, options, flags, positionals.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Args {
+    /// First non-flag token, if any.
+    pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` options.
+    pub options: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+    /// Remaining positional tokens.
+    pub positional: Vec<String>,
+}
+
+/// Declarative spec used to validate and document a subcommand's surface.
+#[derive(Clone, Debug)]
+pub struct Spec {
+    /// Option names accepting a value.
+    pub options: &'static [&'static str],
+    /// Boolean flag names.
+    pub flags: &'static [&'static str],
+}
+
+/// Errors from argument parsing/validation.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum CliError {
+    /// Option requires a value but none was supplied.
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    /// Name not present in the spec.
+    #[error("unknown option --{0}")]
+    Unknown(String),
+    /// Failed to parse a typed option value.
+    #[error("invalid value for --{0}: `{1}` ({2})")]
+    BadValue(String, String, String),
+}
+
+impl Args {
+    /// Parse raw tokens (without the program name) against a spec.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, spec: &Spec) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    Self::insert(&mut out, k, Some(v.to_string()), spec)?;
+                } else if spec.flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if spec.options.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| CliError::MissingValue(body.to_string()))?;
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    return Err(CliError::Unknown(body.to_string()));
+                }
+            } else if out.subcommand.is_none() && out.options.is_empty() && out.flags.is_empty() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    fn insert(
+        out: &mut Args,
+        key: &str,
+        value: Option<String>,
+        spec: &Spec,
+    ) -> Result<(), CliError> {
+        if spec.options.contains(&key) {
+            out.options.insert(
+                key.to_string(),
+                value.ok_or_else(|| CliError::MissingValue(key.to_string()))?,
+            );
+            Ok(())
+        } else if spec.flags.contains(&key) {
+            // `--flag=true/false` form
+            match value.as_deref() {
+                Some("true") | None => out.flags.push(key.to_string()),
+                Some("false") => {}
+                Some(v) => {
+                    return Err(CliError::BadValue(
+                        key.to_string(),
+                        v.to_string(),
+                        "expected true/false".into(),
+                    ))
+                }
+            }
+            Ok(())
+        } else {
+            Err(CliError::Unknown(key.to_string()))
+        }
+    }
+
+    /// Whether a boolean flag was given.
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Raw string option.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    /// Typed option with default.
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|e| {
+                CliError::BadValue(name.to_string(), v.clone(), format!("{e}"))
+            }),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--sizes 10,20,50`.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.trim().is_empty())
+                .map(|s| {
+                    s.trim().parse::<T>().map_err(|e| {
+                        CliError::BadValue(name.to_string(), s.to_string(), format!("{e}"))
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SPEC: Spec = Spec {
+        options: &["model", "workers", "sizes"],
+        flags: &["paper-scale", "quiet"],
+    };
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(toks("sweep --model axelrod --workers=3 --paper-scale pos1"), &SPEC)
+            .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+        assert_eq!(a.get("model"), Some("axelrod"));
+        assert_eq!(a.get_parse::<usize>("workers", 1).unwrap(), 3);
+        assert!(a.has_flag("paper-scale"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        assert_eq!(
+            Args::parse(toks("run --nope 1"), &SPEC),
+            Err(CliError::Unknown("nope".into()))
+        );
+    }
+
+    #[test]
+    fn missing_value_fails() {
+        assert_eq!(
+            Args::parse(toks("run --model"), &SPEC),
+            Err(CliError::MissingValue("model".into()))
+        );
+    }
+
+    #[test]
+    fn list_option() {
+        let a = Args::parse(toks("x --sizes 10,20,50"), &SPEC).unwrap();
+        assert_eq!(a.get_list::<u32>("sizes", &[]).unwrap(), vec![10, 20, 50]);
+        let d = Args::parse(toks("x"), &SPEC).unwrap();
+        assert_eq!(d.get_list::<u32>("sizes", &[7]).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn bad_typed_value() {
+        let a = Args::parse(toks("x --workers abc"), &SPEC).unwrap();
+        assert!(matches!(
+            a.get_parse::<usize>("workers", 1),
+            Err(CliError::BadValue(..))
+        ));
+    }
+}

@@ -1,0 +1,236 @@
+//! CSV and markdown table emitters for figure/benchmark data.
+//!
+//! Every bench target emits both a human-readable markdown table (stdout)
+//! and a machine-readable CSV under `target/bench-data/` so figures can be
+//! re-plotted without re-running the sweep.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// An in-memory rectangular table with a header row.
+#[derive(Clone, Debug)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column names.
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Self {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Number of columns.
+    pub fn width(&self) -> usize {
+        self.header.len()
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Append a row; panics if the arity does not match the header.
+    pub fn push<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, row: I) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            row.len(),
+            self.header.len()
+        );
+        self.rows.push(row);
+    }
+
+    /// Render as CSV (RFC-4180 quoting for fields containing `,"\n`).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        let emit = |out: &mut String, fields: &[String]| {
+            let mut first = true;
+            for f in fields {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                if f.contains(',') || f.contains('"') || f.contains('\n') {
+                    out.push('"');
+                    out.push_str(&f.replace('"', "\"\""));
+                    out.push('"');
+                } else {
+                    out.push_str(f);
+                }
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.header);
+        for r in &self.rows {
+            emit(&mut out, r);
+        }
+        out
+    }
+
+    /// Render as a GitHub-flavoured markdown table with aligned columns.
+    pub fn to_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, f) in r.iter().enumerate() {
+                widths[i] = widths[i].max(f.len());
+            }
+        }
+        let mut out = String::new();
+        let emit = |out: &mut String, fields: &[String], widths: &[usize]| {
+            out.push('|');
+            for (f, w) in fields.iter().zip(widths) {
+                let _ = write!(out, " {f:<w$} |");
+            }
+            out.push('\n');
+        };
+        emit(&mut out, &self.header, &widths);
+        out.push('|');
+        for w in &widths {
+            let _ = write!(out, "{:-<1$}|", "", w + 2);
+        }
+        out.push('\n');
+        for r in &self.rows {
+            emit(&mut out, r, &widths);
+        }
+        out
+    }
+
+    /// Write the CSV rendering to `path`, creating parent directories.
+    pub fn write_csv<P: AsRef<Path>>(&self, path: P) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.to_csv())
+    }
+}
+
+/// Parse a CSV string produced by [`Table::to_csv`] back into a table.
+/// Supports RFC-4180 quoting; used by tests and by report tooling.
+pub fn parse_csv(text: &str) -> Option<Table> {
+    let mut records: Vec<Vec<String>> = Vec::new();
+    let mut field = String::new();
+    let mut record: Vec<String> = Vec::new();
+    let mut in_quotes = false;
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                _ => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    record.push(std::mem::take(&mut field));
+                }
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut record));
+                }
+                '\r' => {}
+                _ => field.push(c),
+            }
+        }
+    }
+    if !field.is_empty() || !record.is_empty() {
+        record.push(field);
+        records.push(record);
+    }
+    let mut it = records.into_iter();
+    let header = it.next()?;
+    let mut t = Table::new(header);
+    for r in it {
+        if r.len() == t.width() {
+            t.push(r);
+        } else {
+            return None;
+        }
+    }
+    Some(t)
+}
+
+impl Table {
+    /// Access the header.
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// Access the rows.
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip_plain() {
+        let mut t = Table::new(["a", "b"]);
+        t.push(["1", "2"]);
+        t.push(["x", "y"]);
+        let parsed = parse_csv(&t.to_csv()).unwrap();
+        assert_eq!(parsed.header(), t.header());
+        assert_eq!(parsed.rows(), t.rows());
+    }
+
+    #[test]
+    fn csv_roundtrip_quoted() {
+        let mut t = Table::new(["a", "b"]);
+        t.push(["with,comma", "with\"quote"]);
+        t.push(["multi\nline", "ok"]);
+        let parsed = parse_csv(&t.to_csv()).unwrap();
+        assert_eq!(parsed.rows(), t.rows());
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(["a", "b"]);
+        t.push(["only-one"]);
+    }
+
+    #[test]
+    fn markdown_has_separator_and_rows() {
+        let mut t = Table::new(["name", "value"]);
+        t.push(["x", "1"]);
+        let md = t.to_markdown();
+        let lines: Vec<&str> = md.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[1].starts_with("|--") || lines[1].starts_with("| --"));
+    }
+
+    #[test]
+    fn col_lookup() {
+        let t = Table::new(["x", "y", "z"]);
+        assert_eq!(t.col("y"), Some(1));
+        assert_eq!(t.col("w"), None);
+    }
+}

@@ -1,0 +1,145 @@
+//! Log-bucketed histograms for latency / duration distributions.
+//!
+//! Buckets grow geometrically (factor 2 by default over nanoseconds), which
+//! keeps relative error bounded across the nine orders of magnitude between
+//! a lock acquisition and a full simulation run.
+
+/// A histogram with geometric (power-of-two) buckets over `u64` values.
+#[derive(Clone, Debug)]
+pub struct LogHistogram {
+    /// counts[i] counts values v with 2^i <= v < 2^(i+1); counts[0] also
+    /// includes v == 0.
+    counts: [u64; 64],
+    total: u64,
+    sum: u128,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            counts: [0; 64],
+            total: 0,
+            sum: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            0
+        } else {
+            63 - v.leading_zeros() as usize
+        }
+    }
+
+    /// Record one value.
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        self.counts[Self::bucket(v)] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+    }
+
+    /// Number of recorded values.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of recorded values (0 if empty).
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Approximate quantile: upper edge of the bucket containing quantile
+    /// `q` (in `[0,1]`). Within a factor of 2 of the true value.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil() as u64;
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= target.max(1) {
+                return if i >= 63 { u64::MAX } else { 1u64 << (i + 1) };
+            }
+        }
+        u64::MAX
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for i in 0..64 {
+            self.counts[i] += other.counts[i];
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+    }
+
+    /// Non-empty buckets as `(lower_edge, count)` pairs, ascending.
+    pub fn buckets(&self) -> Vec<(u64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (if i == 0 { 0 } else { 1u64 << i }, c))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(LogHistogram::bucket(0), 0);
+        assert_eq!(LogHistogram::bucket(1), 0);
+        assert_eq!(LogHistogram::bucket(2), 1);
+        assert_eq!(LogHistogram::bucket(3), 1);
+        assert_eq!(LogHistogram::bucket(4), 2);
+        assert_eq!(LogHistogram::bucket(u64::MAX), 63);
+    }
+
+    #[test]
+    fn mean_and_count() {
+        let mut h = LogHistogram::new();
+        for v in [1u64, 2, 3, 4] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.mean() - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantile_monotone() {
+        let mut h = LogHistogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        assert!(h.quantile(0.1) <= h.quantile(0.5));
+        assert!(h.quantile(0.5) <= h.quantile(0.99));
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        a.record(10);
+        b.record(1000);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.buckets().len(), 2);
+    }
+}

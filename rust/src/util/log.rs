@@ -1,0 +1,85 @@
+//! Minimal leveled logging to stderr, controlled by the `ADAPAR_LOG`
+//! environment variable (`error`, `warn`, `info` (default), `debug`,
+//! `trace`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, ascending verbosity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable or surprising conditions.
+    Error = 0,
+    /// Suspicious but tolerated conditions.
+    Warn = 1,
+    /// High-level progress (default).
+    Info = 2,
+    /// Per-phase details.
+    Debug = 3,
+    /// Per-task details (very chatty).
+    Trace = 4,
+}
+
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // u8::MAX = uninitialized
+
+fn init_from_env() -> u8 {
+    let lvl = match std::env::var("ADAPAR_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    } as u8;
+    MAX_LEVEL.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// Whether messages at `level` are currently emitted.
+#[inline]
+pub fn enabled(level: Level) -> bool {
+    let mut max = MAX_LEVEL.load(Ordering::Relaxed);
+    if max == u8::MAX {
+        max = init_from_env();
+    }
+    (level as u8) <= max
+}
+
+/// Emit a message (used by the macros; prefer those).
+pub fn emit(level: Level, args: std::fmt::Arguments<'_>) {
+    if enabled(level) {
+        let tag = match level {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[adapar {tag}] {args}");
+    }
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! log_error { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Error, format_args!($($t)*)) } }
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Warn, format_args!($($t)*)) } }
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Info, format_args!($($t)*)) } }
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Debug, format_args!($($t)*)) } }
+/// Log at trace level.
+#[macro_export]
+macro_rules! log_trace { ($($t:tt)*) => { $crate::util::log::emit($crate::util::log::Level::Trace, format_args!($($t)*)) } }
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Info);
+        assert!(Level::Info < Level::Trace);
+    }
+}

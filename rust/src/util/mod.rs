@@ -1,0 +1,26 @@
+//! Hand-rolled utility substrates.
+//!
+//! The crate registry is unreachable in this build environment (DESIGN.md
+//! §2), so the functionality normally pulled from `clap`, `criterion`,
+//! `serde`+`toml`, and `proptest` is implemented here from scratch:
+//!
+//! * [`cli`] — command-line argument parsing.
+//! * [`bench`] — benchmark statistics harness (warmup, timed samples,
+//!   robust summary statistics) used by all `cargo bench` targets.
+//! * [`toml`] — a TOML-subset parser for the config system.
+//! * [`prop`] — a property-based testing mini-framework with shrinking.
+//! * [`stats`] — online and batch statistics (Welford, SEM, percentiles).
+//! * [`histogram`] — log-bucketed latency histograms.
+//! * [`csv`] — CSV/markdown table emitters for figure data.
+//! * [`log`] — leveled stderr logging controlled by `ADAPAR_LOG`.
+
+pub mod bench;
+pub mod bitset;
+pub mod cli;
+pub mod csv;
+pub mod histogram;
+pub mod log;
+pub mod prop;
+pub mod stats;
+pub mod toml;
+pub mod u32set;

@@ -1,0 +1,292 @@
+//! Property-based testing mini-framework (proptest is unavailable offline).
+//!
+//! A [`Gen`] produces random values and proposes *shrinks* (simpler
+//! candidate values) for failing inputs. [`check`] runs a property over many
+//! generated cases, and on failure greedily shrinks to a (locally) minimal
+//! counterexample before panicking with a reproducible report.
+//!
+//! ```ignore
+//! use adapar::util::prop::{check, Config, ranged_usize, vec_of};
+//! check("sorted idempotent", Config::default(), vec_of(ranged_usize(0, 100), 0, 32), |v| {
+//!     let mut a = v.clone(); a.sort();
+//!     let mut b = a.clone(); b.sort();
+//!     a == b
+//! });
+//! ```
+
+use crate::sim::rng::Rng;
+
+/// A generator of random test cases with shrinking.
+pub trait Gen {
+    /// Generated value type.
+    type Value: Clone + std::fmt::Debug;
+    /// Generate one value.
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Propose strictly-simpler candidates for `v` (may be empty).
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value>;
+}
+
+/// Runner configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case derives case-seed `seed + i`).
+    pub seed: u64,
+    /// Maximum shrink iterations on failure.
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xADA9_A875,
+            max_shrink: 400,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated values; panic with a shrunk
+/// counterexample on failure.
+pub fn check<G: Gen>(name: &str, cfg: Config, gen: G, prop: impl Fn(&G::Value) -> bool) {
+    for case in 0..cfg.cases {
+        let mut rng = Rng::stream(cfg.seed, case as u64);
+        let value = gen.generate(&mut rng);
+        if !prop(&value) {
+            let minimal = shrink_loop(&gen, value, &prop, cfg.max_shrink);
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed}); minimal counterexample: {minimal:?}",
+                seed = cfg.seed,
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    mut failing: G::Value,
+    prop: &impl Fn(&G::Value) -> bool,
+    max_iters: usize,
+) -> G::Value {
+    let mut iters = 0;
+    'outer: while iters < max_iters {
+        for cand in gen.shrink(&failing) {
+            iters += 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if iters >= max_iters {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---------------------------------------------------------------------------
+// Built-in generators
+// ---------------------------------------------------------------------------
+
+/// Uniform `usize` in `[lo, hi]`, shrinking toward `lo`.
+pub struct RangedUsize {
+    lo: usize,
+    hi: usize,
+}
+
+/// Construct a [`RangedUsize`].
+pub fn ranged_usize(lo: usize, hi: usize) -> RangedUsize {
+    assert!(lo <= hi);
+    RangedUsize { lo, hi }
+}
+
+impl Gen for RangedUsize {
+    type Value = usize;
+    fn generate(&self, rng: &mut Rng) -> usize {
+        self.lo + rng.index(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (*v - self.lo) / 2);
+            out.push(*v - 1);
+            out.dedup();
+            out.retain(|x| x < v);
+        }
+        out
+    }
+}
+
+/// Uniform `u64` seed values, shrinking toward small numbers.
+pub struct AnySeed;
+
+impl Gen for AnySeed {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        rng.next_u64()
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        if *v == 0 {
+            vec![]
+        } else {
+            vec![0, *v >> 1, *v >> 8]
+                .into_iter()
+                .filter(|x| x < v)
+                .collect()
+        }
+    }
+}
+
+/// Uniform `f64` in `[lo, hi)`, shrinking toward `lo`.
+pub struct RangedF64 {
+    lo: f64,
+    hi: f64,
+}
+
+/// Construct a [`RangedF64`].
+pub fn ranged_f64(lo: f64, hi: f64) -> RangedF64 {
+    assert!(lo < hi);
+    RangedF64 { lo, hi }
+}
+
+impl Gen for RangedF64 {
+    type Value = f64;
+    fn generate(&self, rng: &mut Rng) -> f64 {
+        self.lo + rng.unit_f64() * (self.hi - self.lo)
+    }
+    fn shrink(&self, v: &f64) -> Vec<f64> {
+        let mid = self.lo + (*v - self.lo) / 2.0;
+        if *v > self.lo && mid < *v {
+            vec![self.lo, mid]
+        } else {
+            vec![]
+        }
+    }
+}
+
+/// Vector of values from an element generator, with length in `[min, max]`.
+/// Shrinks by removing chunks and by shrinking single elements.
+pub struct VecOf<G> {
+    elem: G,
+    min: usize,
+    max: usize,
+}
+
+/// Construct a [`VecOf`].
+pub fn vec_of<G: Gen>(elem: G, min: usize, max: usize) -> VecOf<G> {
+    assert!(min <= max);
+    VecOf { elem, min, max }
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Value = Vec<G::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<G::Value> {
+        let len = self.min + rng.index(self.max - self.min + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<G::Value>) -> Vec<Vec<G::Value>> {
+        let mut out = Vec::new();
+        // Remove halves, then single elements.
+        if v.len() > self.min {
+            let half = v.len() / 2;
+            if half >= self.min {
+                out.push(v[..half].to_vec());
+                out.push(v[half..].to_vec());
+            }
+            for i in 0..v.len().min(8) {
+                let mut c = v.clone();
+                c.remove(i);
+                if c.len() >= self.min {
+                    out.push(c);
+                }
+            }
+        }
+        // Shrink one element at a time (first few positions).
+        for i in 0..v.len().min(4) {
+            for e in self.elem.shrink(&v[i]) {
+                let mut c = v.clone();
+                c[i] = e;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Pair of independent generators.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Gen, B: Gen> Gen for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> = self
+            .0
+            .shrink(&v.0)
+            .into_iter()
+            .map(|a| (a, v.1.clone()))
+            .collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice", Config::default(), vec_of(ranged_usize(0, 9), 0, 16), |v| {
+            let mut r = v.clone();
+            r.reverse();
+            r.reverse();
+            &r == v
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_small() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "no vec contains 7",
+                Config { cases: 200, ..Config::default() },
+                vec_of(ranged_usize(0, 9), 0, 16),
+                |v| !v.contains(&7),
+            );
+        });
+        let err = result.expect_err("property should fail");
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        // The minimal counterexample should be exactly [7].
+        assert!(msg.contains("[7]"), "got: {msg}");
+    }
+
+    #[test]
+    fn ranged_usize_respects_bounds() {
+        let g = ranged_usize(5, 10);
+        let mut rng = Rng::new(0);
+        for _ in 0..200 {
+            let v = g.generate(&mut rng);
+            assert!((5..=10).contains(&v));
+            for s in g.shrink(&v) {
+                assert!(s < v && s >= 5);
+            }
+        }
+    }
+
+    #[test]
+    fn pair_shrinks_componentwise() {
+        let g = PairOf(ranged_usize(0, 10), ranged_usize(0, 10));
+        let shrinks = g.shrink(&(4, 6));
+        assert!(shrinks.iter().any(|&(a, b)| a < 4 && b == 6));
+        assert!(shrinks.iter().any(|&(a, b)| a == 4 && b < 6));
+    }
+}

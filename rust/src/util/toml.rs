@@ -1,0 +1,358 @@
+//! A TOML-subset parser for the config system.
+//!
+//! Supported (everything the config files use):
+//! * top-level and nested tables: `[section]`, `[a.b]`
+//! * key/value pairs: strings (`"..."` with escapes), integers, floats,
+//!   booleans, and homogeneous arrays of those scalars
+//! * comments (`# ...`), blank lines, and `key = value` whitespace freedom
+//!
+//! Not supported (rejected with an error rather than misparsed): inline
+//! tables, multi-line strings, dates, array-of-tables.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// UTF-8 string.
+    Str(String),
+    /// 64-bit signed integer.
+    Int(i64),
+    /// 64-bit float.
+    Float(f64),
+    /// Boolean.
+    Bool(bool),
+    /// Homogeneous array of scalars.
+    Array(Vec<Value>),
+    /// Nested table.
+    Table(BTreeMap<String, Value>),
+}
+
+impl Value {
+    /// As string, if this is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// As integer (accepting exact floats too).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+    /// As float (accepting integers).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    /// As boolean.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    /// As array slice.
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+    /// As table.
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+    /// Dotted-path lookup, e.g. `get("model.axelrod.features")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for seg in path.split('.') {
+            cur = cur.as_table()?.get(seg)?;
+        }
+        Some(cur)
+    }
+}
+
+/// Parse error with 1-based line information.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParseError {
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable message.
+    pub msg: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "TOML parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError {
+        line,
+        msg: msg.into(),
+    }
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse(text: &str) -> Result<Value, ParseError> {
+    let mut root: BTreeMap<String, Value> = BTreeMap::new();
+    let mut current_path: Vec<String> = Vec::new();
+
+    for (idx, raw) in text.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let inner = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated table header"))?;
+            if inner.starts_with('[') {
+                return Err(err(lineno, "array-of-tables is not supported"));
+            }
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|s| s.is_empty()) {
+                return Err(err(lineno, "empty table-path segment"));
+            }
+            ensure_table(&mut root, &path, lineno)?;
+            current_path = path;
+        } else {
+            let eq = line
+                .find('=')
+                .ok_or_else(|| err(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(err(lineno, "empty key"));
+            }
+            let vtext = line[eq + 1..].trim();
+            let value = parse_value(vtext, lineno)?;
+            let table = navigate(&mut root, &current_path, lineno)?;
+            if table.insert(key.to_string(), value).is_some() {
+                return Err(err(lineno, format!("duplicate key `{key}`")));
+            }
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` inside a quoted string does not start a comment.
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' if !prev_backslash => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    line
+}
+
+fn ensure_table(
+    root: &mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<(), ParseError> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .entry(seg.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => return Err(err(lineno, format!("`{seg}` is not a table"))),
+        };
+    }
+    Ok(())
+}
+
+fn navigate<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    lineno: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, ParseError> {
+    let mut cur = root;
+    for seg in path {
+        let entry = cur
+            .get_mut(seg)
+            .ok_or_else(|| err(lineno, format!("missing table `{seg}`")))?;
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => return Err(err(lineno, format!("`{seg}` is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<Value, ParseError> {
+    let text = text.trim();
+    if text.is_empty() {
+        return Err(err(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        return parse_string(rest, lineno).map(Value::Str);
+    }
+    if let Some(inner) = text.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| err(lineno, "unterminated array (must be single-line)"))?;
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            items.push(parse_value(part, lineno)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let cleaned = text.replace('_', "");
+    if let Ok(i) = cleaned.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = cleaned.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(err(lineno, format!("cannot parse value `{text}`")))
+}
+
+fn parse_string(rest: &str, lineno: usize) -> Result<String, ParseError> {
+    let mut out = String::new();
+    let mut chars = rest.chars();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' => {
+                let trailing: String = chars.collect();
+                if !trailing.trim().is_empty() {
+                    return Err(err(lineno, "trailing characters after string"));
+                }
+                return Ok(out);
+            }
+            '\\' => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('r') => out.push('\r'),
+                Some('"') => out.push('"'),
+                Some('\\') => out.push('\\'),
+                other => return Err(err(lineno, format!("bad escape `\\{other:?}`"))),
+            },
+            _ => out.push(c),
+        }
+    }
+    Err(err(lineno, "unterminated string"))
+}
+
+/// Split array body on top-level commas (strings may contain commas).
+fn split_array_items(inner: &str) -> Vec<String> {
+    let mut items = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    let mut prev_backslash = false;
+    for c in inner.chars() {
+        match c {
+            '"' if !prev_backslash => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => items.push(std::mem::take(&mut cur)),
+            _ => cur.push(c),
+        }
+        prev_backslash = c == '\\' && !prev_backslash;
+    }
+    if !cur.trim().is_empty() {
+        items.push(cur);
+    }
+    items
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = r#"
+# experiment config
+name = "fig2"
+steps = 2_000_000
+omega = 0.95
+paper_scale = false
+
+[model.axelrod]
+features = [25, 50, 100]
+agents = 10000
+"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig2"));
+        assert_eq!(v.get("steps").unwrap().as_int(), Some(2_000_000));
+        assert_eq!(v.get("omega").unwrap().as_float(), Some(0.95));
+        assert_eq!(v.get("paper_scale").unwrap().as_bool(), Some(false));
+        let feats = v.get("model.axelrod.features").unwrap().as_array().unwrap();
+        assert_eq!(feats.len(), 3);
+        assert_eq!(feats[1].as_int(), Some(50));
+        assert_eq!(v.get("model.axelrod.agents").unwrap().as_int(), Some(10000));
+    }
+
+    #[test]
+    fn string_escapes_and_comment_in_string() {
+        let v = parse(r#"s = "a # not comment \"q\" \n" "#).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some("a # not comment \"q\" \n"));
+    }
+
+    #[test]
+    fn rejects_duplicate_keys() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_values() {
+        assert!(parse("a = nope").is_err());
+        assert!(parse("a = [1, 2").is_err());
+        assert!(parse("[unclosed").is_err());
+    }
+
+    #[test]
+    fn array_of_strings_with_commas() {
+        let v = parse(r#"xs = ["a,b", "c"]"#).unwrap();
+        let xs = v.get("xs").unwrap().as_array().unwrap();
+        assert_eq!(xs[0].as_str(), Some("a,b"));
+        assert_eq!(xs[1].as_str(), Some("c"));
+    }
+
+    #[test]
+    fn nested_tables_merge() {
+        let doc = "[a]\nx = 1\n[a.b]\ny = 2\n";
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("a.x").unwrap().as_int(), Some(1));
+        assert_eq!(v.get("a.b.y").unwrap().as_int(), Some(2));
+    }
+
+    #[test]
+    fn error_carries_line_number() {
+        let e = parse("ok = 1\nbad").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+}

@@ -1,0 +1,201 @@
+//! A small, fast set of `u32` ids for worker records.
+//!
+//! Worker records absorb the ids of every incomplete task they pass during a
+//! cycle and are queried once per task visit, so membership tests sit on the
+//! protocol's hot path. Typical cardinality is tiny (a few × workers × C),
+//! so the set starts as a linear-scan vector and spills to an
+//! open-addressing table (splitmix-hashed, power-of-two capacity) only when
+//! it grows. `clear` keeps capacity — records reset every cycle and must not
+//! allocate at steady state.
+
+const LINEAR_MAX: usize = 16;
+
+/// Insert-and-query set of `u32` ids; no deletion (records only grow within
+/// a cycle and are bulk-cleared at cycle start).
+#[derive(Clone, Debug, Default)]
+pub struct U32Set {
+    /// Small mode storage (always the source of truth when `table` empty).
+    small: Vec<u32>,
+    /// Open-addressing table; `u32::MAX` marks empty slots.
+    table: Vec<u32>,
+    /// Number of elements in `table` mode.
+    len: usize,
+}
+
+#[inline(always)]
+fn hash(x: u32) -> u64 {
+    // splitmix64 finalizer over the id.
+    let mut z = (x as u64).wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl U32Set {
+    /// Empty set.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of stored ids.
+    pub fn len(&self) -> usize {
+        if self.table.is_empty() {
+            self.small.len()
+        } else {
+            self.len
+        }
+    }
+
+    /// Whether the set is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Membership test.
+    #[inline]
+    pub fn contains(&self, x: u32) -> bool {
+        debug_assert_ne!(x, u32::MAX, "u32::MAX is reserved");
+        if self.table.is_empty() {
+            self.small.contains(&x)
+        } else {
+            let mask = self.table.len() - 1;
+            let mut i = (hash(x) as usize) & mask;
+            loop {
+                let slot = self.table[i];
+                if slot == x {
+                    return true;
+                }
+                if slot == u32::MAX {
+                    return false;
+                }
+                i = (i + 1) & mask;
+            }
+        }
+    }
+
+    /// Insert; returns true if newly added.
+    #[inline]
+    pub fn insert(&mut self, x: u32) -> bool {
+        debug_assert_ne!(x, u32::MAX, "u32::MAX is reserved");
+        if self.table.is_empty() {
+            if self.small.contains(&x) {
+                return false;
+            }
+            if self.small.len() < LINEAR_MAX {
+                self.small.push(x);
+                return true;
+            }
+            self.spill();
+        }
+        self.insert_table(x)
+    }
+
+    fn spill(&mut self) {
+        let cap = (LINEAR_MAX * 4).next_power_of_two();
+        self.table = vec![u32::MAX; cap];
+        self.len = 0;
+        let small = std::mem::take(&mut self.small);
+        for x in small {
+            self.insert_table(x);
+        }
+    }
+
+    fn insert_table(&mut self, x: u32) -> bool {
+        if (self.len + 1) * 4 > self.table.len() * 3 {
+            self.grow();
+        }
+        let mask = self.table.len() - 1;
+        let mut i = (hash(x) as usize) & mask;
+        loop {
+            let slot = self.table[i];
+            if slot == x {
+                return false;
+            }
+            if slot == u32::MAX {
+                self.table[i] = x;
+                self.len += 1;
+                return true;
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    fn grow(&mut self) {
+        let new_cap = self.table.len() * 2;
+        let old = std::mem::replace(&mut self.table, vec![u32::MAX; new_cap]);
+        self.len = 0;
+        for x in old {
+            if x != u32::MAX {
+                self.insert_table(x);
+            }
+        }
+    }
+
+    /// Remove all elements, keeping allocated capacity (no allocation).
+    pub fn clear(&mut self) {
+        self.small.clear();
+        if !self.table.is_empty() {
+            self.table.iter_mut().for_each(|s| *s = u32::MAX);
+            self.len = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_contains_small() {
+        let mut s = U32Set::new();
+        assert!(s.insert(3));
+        assert!(!s.insert(3));
+        assert!(s.contains(3));
+        assert!(!s.contains(4));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn spills_to_table_and_stays_correct() {
+        let mut s = U32Set::new();
+        for i in 0..1000u32 {
+            assert!(s.insert(i * 7));
+        }
+        assert_eq!(s.len(), 1000);
+        for i in 0..1000u32 {
+            assert!(s.contains(i * 7));
+            assert!(!s.contains(i * 7 + 1));
+        }
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_empties() {
+        let mut s = U32Set::new();
+        for i in 0..100 {
+            s.insert(i);
+        }
+        let cap = s.table.len();
+        s.clear();
+        assert!(s.is_empty());
+        assert!(!s.contains(5));
+        assert_eq!(s.table.len(), cap);
+        s.insert(7);
+        assert!(s.contains(7));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn matches_std_hashset_reference() {
+        use std::collections::HashSet;
+        let mut ours = U32Set::new();
+        let mut theirs = HashSet::new();
+        let mut rng = crate::sim::rng::Rng::new(99);
+        for _ in 0..5000 {
+            let x = rng.next_u32() % 512;
+            assert_eq!(ours.insert(x), theirs.insert(x));
+        }
+        for x in 0..512 {
+            assert_eq!(ours.contains(x), theirs.contains(&x));
+        }
+    }
+}

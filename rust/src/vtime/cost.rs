@@ -1,0 +1,133 @@
+//! The virtual testbed's cost model: nanoseconds per protocol micro-action.
+//!
+//! Default values were measured on this repository's host (single-core
+//! Xeon @ 2.1 GHz, release build) via [`super::calibrate`]; rerun
+//! `adapar calibrate` to refresh them for another machine. The *ratios*
+//! between protocol costs and per-unit execution cost are what shape the
+//! figures; absolute values only scale the time axis.
+
+/// Nanosecond costs of protocol micro-actions and model execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// Entering the chain at a cycle start (head slot + record reset).
+    pub enter_ns: f64,
+    /// Arriving at a node: slot acquisition, pointer read, state check and
+    /// the record's dependence test.
+    pub visit_ns: f64,
+    /// Absorbing a passed task's recipe into the record.
+    pub absorb_ns: f64,
+    /// Creating a task: source poll, node allocation, splice.
+    pub create_ns: f64,
+    /// Erasing a task: unlink under the erase lock plus counters.
+    pub erase_ns: f64,
+    /// Returning to the start of the chain at a cycle end.
+    pub cycle_end_ns: f64,
+    /// A wasted arrival at an erased node (retry from previous node).
+    pub retry_ns: f64,
+    /// Fixed per-execution cost (claiming the task, RNG stream setup).
+    pub exec_fixed_ns: f64,
+    /// Execution cost per `Model::task_work` unit.
+    pub exec_unit_ns: f64,
+    /// Idle backoff applied to a cycle that neither executed nor created
+    /// (models `yield_now`; prevents zero-cost spinning in virtual time).
+    pub idle_ns: f64,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        // Measured via `adapar calibrate` on the reference host after the
+        // §Perf optimization pass (atomic-fast-path visitor slots,
+        // pre-linked node construction); see EXPERIMENTS.md §Calibration.
+        Self {
+            enter_ns: 18.5,
+            visit_ns: 21.0,
+            absorb_ns: 4.7,
+            create_ns: 247.0,
+            erase_ns: 165.0,
+            cycle_end_ns: 9.3,
+            retry_ns: 18.5,
+            exec_fixed_ns: 4.3,
+            exec_unit_ns: 1.6,
+            idle_ns: 37.0,
+        }
+    }
+}
+
+impl CostModel {
+    /// Execution duration for a task of the given work (see
+    /// `Model::task_work`).
+    #[inline]
+    pub fn exec_ns(&self, work: f64) -> f64 {
+        self.exec_fixed_ns + self.exec_unit_ns * work
+    }
+
+    /// A cost model with all protocol overhead zeroed (ideal machine):
+    /// used by tests to check the DES against hand-computable schedules
+    /// and by the ablation that isolates overhead effects.
+    pub fn ideal(exec_unit_ns: f64) -> Self {
+        Self {
+            enter_ns: 0.0,
+            visit_ns: 0.0,
+            absorb_ns: 0.0,
+            create_ns: 0.0,
+            erase_ns: 0.0,
+            cycle_end_ns: 0.0,
+            retry_ns: 0.0,
+            exec_fixed_ns: 0.0,
+            exec_unit_ns,
+            idle_ns: 1.0, // must stay positive: zero-cost spins would hang virtual time
+        }
+    }
+
+    /// Sanity check: all costs non-negative, idle positive.
+    pub fn validate(&self) -> Result<(), String> {
+        let fields = [
+            ("enter_ns", self.enter_ns),
+            ("visit_ns", self.visit_ns),
+            ("absorb_ns", self.absorb_ns),
+            ("create_ns", self.create_ns),
+            ("erase_ns", self.erase_ns),
+            ("cycle_end_ns", self.cycle_end_ns),
+            ("retry_ns", self.retry_ns),
+            ("exec_fixed_ns", self.exec_fixed_ns),
+            ("exec_unit_ns", self.exec_unit_ns),
+        ];
+        for (name, v) in fields {
+            if !v.is_finite() || v < 0.0 {
+                return Err(format!("cost {name} = {v} is invalid"));
+            }
+        }
+        if !(self.idle_ns > 0.0) {
+            return Err("idle_ns must be strictly positive".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        CostModel::default().validate().unwrap();
+    }
+
+    #[test]
+    fn exec_cost_is_affine_in_work() {
+        let c = CostModel::default();
+        let base = c.exec_ns(0.0);
+        assert!((c.exec_ns(100.0) - base - 100.0 * c.exec_unit_ns).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ideal_rejects_only_nonpositive_idle() {
+        CostModel::ideal(1.0).validate().unwrap();
+        let mut bad = CostModel::ideal(1.0);
+        bad.idle_ns = 0.0;
+        assert!(bad.validate().is_err());
+        let mut neg = CostModel::default();
+        neg.visit_ns = -1.0;
+        assert!(neg.validate().is_err());
+    }
+}

@@ -1,0 +1,27 @@
+//! Virtual-core testbed: a deterministic discrete-event simulation (DES)
+//! of the worker–chain protocol with `n` *virtual* cores.
+//!
+//! The host machine has a single physical core, so the paper's multi-core
+//! wall-clock figures (Fig. 2, Fig. 3: T vs task size for n ∈ {1..5})
+//! cannot be measured directly. Instead of skipping the experiment, the
+//! testbed replays the *exact* protocol semantics — visitor slots,
+//! waiting-behind, passing executing tasks, the erase lock, per-cycle
+//! creation caps — in virtual time, with every micro-action costed by a
+//! [`cost::CostModel`] **calibrated from native single-core
+//! measurements** ([`calibrate`]).
+//!
+//! The protocol's speedup behaviour is a function of (i) the dependence
+//! structure of the task chain and (ii) the ratio of task-execution cost
+//! to protocol overhead; both are preserved exactly (the DES executes the
+//! same records, the same task streams — it even executes the *model
+//! itself*, so its final state is bit-identical to the sequential engine,
+//! which the test suite asserts). What is *not* modelled is memory-bus
+//! contention between cores, a second-order effect at n ≤ 5 (DESIGN.md §2).
+
+pub mod calibrate;
+pub mod cost;
+pub mod vengine;
+
+pub use calibrate::{calibrate, calibrate_exec, calibrated_for};
+pub use cost::CostModel;
+pub use vengine::{VirtualEngine, VirtualReport};

@@ -1,0 +1,603 @@
+//! The discrete-event simulation of the protocol (virtual cores).
+//!
+//! Single-threaded, deterministic: workers are state machines advanced one
+//! micro-action at a time, ordered by a `(virtual time, worker id)`
+//! priority queue. Slot waits are event-driven (a freed slot hands off to
+//! the first queued waiter), never polled. The DES executes the actual
+//! model (same records, same RNG streams), so besides virtual timings it
+//! produces the exact simulation state — asserted bit-identical to the
+//! sequential engine by the test suite.
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::model::{Model, Record, TaskSource};
+use crate::protocol::{ProtocolStats, WorkerStats};
+use crate::sim::rng::TaskRng;
+
+use super::cost::CostModel;
+
+/// Result of a virtual run.
+#[derive(Clone, Debug)]
+pub struct VirtualReport {
+    /// Number of virtual workers (cores).
+    pub workers: usize,
+    /// Virtual wall-clock time `T` in seconds (max over worker clocks).
+    pub virtual_time_s: f64,
+    /// Aggregated counters (same semantics as the real engine's).
+    pub totals: WorkerStats,
+    /// Per-worker counters.
+    pub per_worker: Vec<WorkerStats>,
+    /// Chain statistics.
+    pub chain: ProtocolStats,
+}
+
+/// Virtual-core engine configuration + entry point.
+#[derive(Clone, Copy, Debug)]
+pub struct VirtualEngine {
+    /// `n` — number of virtual workers/cores.
+    pub workers: usize,
+    /// `C` — max creations per worker cycle.
+    pub tasks_per_cycle: u32,
+    /// Simulation seed.
+    pub seed: u64,
+    /// Micro-action costs.
+    pub cost: CostModel,
+}
+
+// ---------------------------------------------------------------------------
+// internal DES structures
+// ---------------------------------------------------------------------------
+
+const HEAD: usize = 0;
+const TAIL: usize = 1;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum VState {
+    Pending,
+    Executing,
+    Erased,
+}
+
+struct VNode<R> {
+    seq: u64,
+    recipe: Option<R>,
+    state: VState,
+    /// Worker currently located here (holding the visitor slot).
+    occupant: Option<usize>,
+    waiters: VecDeque<usize>,
+    prev: usize,
+    next: usize,
+}
+
+/// What a worker will do when it next runs.
+#[derive(Clone, Copy, Debug)]
+enum Phase {
+    /// Begin a new cycle (reset record, try to enter at head).
+    StartCycle,
+    /// Holding `from`'s slot; step to its successor.
+    WantNext { from: usize },
+    /// Slot of `node` was just granted while holding `from`: complete the
+    /// arrival (pay visit cost, release `from`, process `node`).
+    ArriveGranted { from: usize, node: usize },
+    /// Holding `from` and the tail slot was just granted: create.
+    CreateGranted { from: usize },
+    /// Execution of `node` finished at the current clock; need the node's
+    /// slot back to erase it.
+    WantEraseSlot { node: usize },
+    /// Slot of executed `node` re-acquired: erase it.
+    EraseGranted { node: usize },
+    /// Head slot granted at cycle start.
+    EnterGranted,
+    /// Finished.
+    Done,
+}
+
+struct VWorker<Rec> {
+    clock: f64,
+    phase: Phase,
+    record: Rec,
+    created_this_cycle: u32,
+    /// Work performed in the current cycle (for idle detection).
+    cycle_had_work: bool,
+    stats: WorkerStats,
+}
+
+#[derive(PartialEq)]
+struct Ev {
+    time: f64,
+    wid: usize,
+}
+
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // min-heap by (time, wid): reverse for BinaryHeap.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.wid.cmp(&self.wid))
+    }
+}
+
+struct Des<'m, M: Model> {
+    model: &'m M,
+    cost: CostModel,
+    seed: u64,
+    cap: u32,
+    nodes: Vec<VNode<M::Recipe>>,
+    workers: Vec<VWorker<M::Record>>,
+    heap: BinaryHeap<Ev>,
+    source: M::Source,
+    exhausted: bool,
+    live: usize,
+    max_live: usize,
+    created: u64,
+    erased: u64,
+    erase_free_at: f64,
+}
+
+impl VirtualEngine {
+    /// Run the model on the virtual testbed.
+    pub fn run<M: Model>(&self, model: &M) -> VirtualReport {
+        assert!(self.workers >= 1 && self.tasks_per_cycle >= 1);
+        self.cost.validate().expect("invalid cost model");
+
+        let mut des = Des {
+            model,
+            cost: self.cost,
+            seed: self.seed,
+            cap: self.tasks_per_cycle,
+            nodes: Vec::with_capacity(64),
+            workers: Vec::with_capacity(self.workers),
+            heap: BinaryHeap::new(),
+            source: model.source(self.seed),
+            exhausted: false,
+            live: 0,
+            max_live: 0,
+            created: 0,
+            erased: 0,
+            erase_free_at: 0.0,
+        };
+        // Sentinels.
+        des.nodes.push(VNode {
+            seq: u64::MAX,
+            recipe: None,
+            state: VState::Pending,
+            occupant: None,
+            waiters: VecDeque::new(),
+            prev: HEAD,
+            next: TAIL,
+        });
+        des.nodes.push(VNode {
+            seq: u64::MAX,
+            recipe: None,
+            state: VState::Pending,
+            occupant: None,
+            waiters: VecDeque::new(),
+            prev: HEAD,
+            next: TAIL,
+        });
+        for w in 0..self.workers {
+            des.workers.push(VWorker {
+                clock: 0.0,
+                phase: Phase::StartCycle,
+                record: model.record(),
+                created_this_cycle: 0,
+                cycle_had_work: false,
+                stats: WorkerStats::default(),
+            });
+            des.heap.push(Ev { time: 0.0, wid: w });
+        }
+
+        des.run_to_completion();
+
+        let mut totals = WorkerStats::default();
+        let mut per_worker = Vec::with_capacity(self.workers);
+        let mut t_end: f64 = 0.0;
+        for w in &des.workers {
+            totals.merge(&w.stats);
+            per_worker.push(w.stats.clone());
+            t_end = t_end.max(w.clock);
+        }
+        VirtualReport {
+            workers: self.workers,
+            virtual_time_s: t_end * 1e-9,
+            totals,
+            per_worker,
+            chain: ProtocolStats {
+                tasks_created: des.created,
+                tasks_executed: des.erased,
+                max_chain_len: des.max_live,
+            },
+        }
+    }
+}
+
+impl<'m, M: Model> Des<'m, M> {
+    fn run_to_completion(&mut self) {
+        while let Some(Ev { time, wid }) = self.heap.pop() {
+            debug_assert!(time <= self.workers[wid].clock + 1e-6);
+            self.dispatch(wid);
+        }
+        debug_assert!(self.exhausted && self.live == 0, "DES ended with work left");
+    }
+
+    fn push(&mut self, wid: usize) {
+        self.heap.push(Ev {
+            time: self.workers[wid].clock,
+            wid,
+        });
+    }
+
+    /// Try to take `node`'s slot for `wid`; on failure, queue as waiter
+    /// (caller must have set the worker's wake phase beforehand).
+    fn occupy_or_wait(&mut self, node: usize, wid: usize) -> bool {
+        if self.nodes[node].occupant.is_none() {
+            self.nodes[node].occupant = Some(wid);
+            true
+        } else {
+            debug_assert_ne!(self.nodes[node].occupant, Some(wid));
+            self.nodes[node].waiters.push_back(wid);
+            false
+        }
+    }
+
+    /// Release `node`'s slot at time `now`, handing off to the first
+    /// waiter (whose pre-set phase describes its continuation).
+    fn release(&mut self, node: usize, now: f64) {
+        debug_assert!(self.nodes[node].occupant.is_some());
+        self.nodes[node].occupant = None;
+        if let Some(w) = self.nodes[node].waiters.pop_front() {
+            self.nodes[node].occupant = Some(w);
+            let wk = &mut self.workers[w];
+            wk.clock = wk.clock.max(now);
+            self.push(w);
+        }
+    }
+
+    fn dispatch(&mut self, wid: usize) {
+        let phase = self.workers[wid].phase;
+        match phase {
+            Phase::Done => {}
+            Phase::StartCycle => {
+                if self.exhausted && self.live == 0 {
+                    self.workers[wid].phase = Phase::Done;
+                    return;
+                }
+                {
+                    let w = &mut self.workers[wid];
+                    w.record.reset();
+                    w.stats.cycles += 1;
+                    w.created_this_cycle = 0;
+                    w.cycle_had_work = false;
+                    w.phase = Phase::EnterGranted;
+                }
+                if self.occupy_or_wait(HEAD, wid) {
+                    self.dispatch_enter(wid);
+                }
+                // else: queued on head; wakes in EnterGranted.
+            }
+            Phase::EnterGranted => self.dispatch_enter(wid),
+            Phase::WantNext { from } => self.dispatch_want_next(wid, from),
+            Phase::ArriveGranted { from, node } => self.dispatch_arrive(wid, from, node),
+            Phase::CreateGranted { from } => self.dispatch_create(wid, from),
+            Phase::WantEraseSlot { node } => {
+                self.workers[wid].phase = Phase::EraseGranted { node };
+                if self.occupy_or_wait(node, wid) {
+                    self.dispatch_erase(wid, node);
+                }
+            }
+            Phase::EraseGranted { node } => self.dispatch_erase(wid, node),
+        }
+    }
+
+    fn dispatch_enter(&mut self, wid: usize) {
+        // Holding HEAD.
+        self.workers[wid].clock += self.cost.enter_ns;
+        self.workers[wid].phase = Phase::WantNext { from: HEAD };
+        self.push(wid);
+    }
+
+    fn dispatch_want_next(&mut self, wid: usize, from: usize) {
+        let next = self.nodes[from].next;
+        if next == TAIL {
+            // Creation path.
+            if self.workers[wid].created_this_cycle >= self.cap || self.exhausted {
+                self.end_cycle(wid, from);
+                return;
+            }
+            self.workers[wid].phase = Phase::CreateGranted { from };
+            if self.occupy_or_wait(TAIL, wid) {
+                self.dispatch_create(wid, from);
+            }
+            return;
+        }
+        self.workers[wid].phase = Phase::ArriveGranted { from, node: next };
+        if self.occupy_or_wait(next, wid) {
+            self.dispatch_arrive(wid, from, next);
+        }
+    }
+
+    fn dispatch_arrive(&mut self, wid: usize, from: usize, node: usize) {
+        // Slot of `node` held; still holding `from`.
+        if self.nodes[node].state == VState::Erased {
+            // The executor erased it while we waited (unlink already moved
+            // our wake to the retry path — this branch is for the rare
+            // direct grant race kept for robustness).
+            self.release(node, self.workers[wid].clock);
+            self.workers[wid].clock += self.cost.retry_ns;
+            self.workers[wid].stats.erased_retries += 1;
+            self.workers[wid].phase = Phase::WantNext { from };
+            self.push(wid);
+            return;
+        }
+        self.workers[wid].clock += self.cost.visit_ns;
+        let now = self.workers[wid].clock;
+        self.release(from, now);
+        self.process(wid, node);
+    }
+
+    /// Process an arrival at a live task node (slot held).
+    fn process(&mut self, wid: usize, node: usize) {
+        let state = self.nodes[node].state;
+        match state {
+            VState::Executing => {
+                let recipe = self.nodes[node].recipe.clone().unwrap();
+                let w = &mut self.workers[wid];
+                w.record.absorb(&recipe);
+                w.stats.passed_executing += 1;
+                w.clock += self.cost.absorb_ns;
+                w.phase = Phase::WantNext { from: node };
+                self.push(wid);
+            }
+            VState::Pending => {
+                let recipe = self.nodes[node].recipe.clone().unwrap();
+                let depends = self.workers[wid].record.depends(&recipe);
+                if depends {
+                    let w = &mut self.workers[wid];
+                    w.record.absorb(&recipe);
+                    w.stats.skipped_dependent += 1;
+                    w.clock += self.cost.absorb_ns;
+                    w.phase = Phase::WantNext { from: node };
+                    self.push(wid);
+                } else {
+                    // Execute: claim, free the slot (others may pass),
+                    // burn virtual exec time, then reclaim to erase.
+                    self.nodes[node].state = VState::Executing;
+                    let seq = self.nodes[node].seq;
+                    let now = self.workers[wid].clock;
+                    self.release(node, now);
+                    // Execute the model *now*: any order the DES picks is
+                    // conflict-free (records), so state equals sequential.
+                    let mut rng = TaskRng::for_task(self.seed, seq);
+                    self.model.execute(&recipe, &mut rng);
+                    let work = self.model.task_work(&recipe);
+                    let w = &mut self.workers[wid];
+                    w.clock += self.cost.exec_ns(work);
+                    w.cycle_had_work = true;
+                    w.phase = Phase::WantEraseSlot { node };
+                    self.push(wid);
+                }
+            }
+            VState::Erased => unreachable!("erased nodes are retried at arrival"),
+        }
+    }
+
+    fn dispatch_create(&mut self, wid: usize, from: usize) {
+        // Holding `from` and TAIL.
+        if self.exhausted {
+            // Someone exhausted the source while we waited for the slot.
+            let now = self.workers[wid].clock;
+            self.release(TAIL, now);
+            self.end_cycle(wid, from);
+            return;
+        }
+        self.workers[wid].clock += self.cost.create_ns;
+        match self.source.next_task() {
+            None => {
+                self.exhausted = true;
+                let now = self.workers[wid].clock;
+                self.release(TAIL, now);
+                self.end_cycle(wid, from);
+            }
+            Some(recipe) => {
+                let seq = self.created;
+                self.created += 1;
+                self.live += 1;
+                self.max_live = self.max_live.max(self.live);
+                let idx = self.nodes.len();
+                let prev = self.nodes[TAIL].prev;
+                debug_assert_eq!(prev, from);
+                self.nodes.push(VNode {
+                    seq,
+                    recipe: Some(recipe),
+                    state: VState::Pending,
+                    occupant: Some(wid), // step straight onto the new node
+                    waiters: VecDeque::new(),
+                    prev: from,
+                    next: TAIL,
+                });
+                self.nodes[from].next = idx;
+                self.nodes[TAIL].prev = idx;
+                let now = self.workers[wid].clock;
+                self.release(TAIL, now);
+                self.release(from, now);
+                let w = &mut self.workers[wid];
+                w.created_this_cycle += 1;
+                w.stats.created += 1;
+                w.cycle_had_work = true;
+                self.process(wid, idx);
+            }
+        }
+    }
+
+    fn dispatch_erase(&mut self, wid: usize, node: usize) {
+        // Slot of `node` re-acquired after execution: erase under the
+        // (virtual) erase lock.
+        let start = self.workers[wid].clock.max(self.erase_free_at);
+        let end = start + self.cost.erase_ns;
+        self.erase_free_at = end;
+        self.workers[wid].clock = end;
+
+        // Unlink.
+        let (p, n) = (self.nodes[node].prev, self.nodes[node].next);
+        self.nodes[p].next = n;
+        self.nodes[n].prev = p;
+        self.nodes[node].state = VState::Erased;
+        self.nodes[node].recipe = None;
+        self.live -= 1;
+        self.erased += 1;
+
+        // Wake every waiter on the erased node into the retry path: they
+        // still hold their previous node, whose `next` now skips us.
+        let waiters: Vec<usize> = self.nodes[node].waiters.drain(..).collect();
+        self.nodes[node].occupant = None;
+        for w in waiters {
+            let (retry_from, ok) = match self.workers[w].phase {
+                Phase::ArriveGranted { from, .. } => (from, true),
+                _ => (0, false),
+            };
+            debug_assert!(ok, "waiter on task node must be an arriver");
+            let wk = &mut self.workers[w];
+            wk.clock = wk.clock.max(end) + self.cost.retry_ns;
+            wk.stats.erased_retries += 1;
+            wk.phase = Phase::WantNext { from: retry_from };
+            self.push(w);
+        }
+
+        self.workers[wid].stats.executed += 1;
+        // Cycle ends after an execution.
+        self.workers[wid].clock += self.cost.cycle_end_ns;
+        self.workers[wid].phase = Phase::StartCycle;
+        self.push(wid);
+    }
+
+    fn end_cycle(&mut self, wid: usize, held: usize) {
+        let now = self.workers[wid].clock;
+        self.release(held, now);
+        let w = &mut self.workers[wid];
+        w.clock += self.cost.cycle_end_ns;
+        if !w.cycle_had_work {
+            w.stats.idle_cycles += 1;
+            w.clock += self.cost.idle_ns;
+        }
+        w.phase = Phase::StartCycle;
+        self.push(wid);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::IncModel;
+    use crate::protocol::SequentialEngine;
+
+    fn vengine(workers: usize, seed: u64) -> VirtualEngine {
+        VirtualEngine {
+            workers,
+            tasks_per_cycle: 6,
+            seed,
+            cost: CostModel::default(),
+        }
+    }
+
+    #[test]
+    fn virtual_state_matches_sequential_bitwise() {
+        let seed = 3;
+        let expected = {
+            let m = IncModel::new(1500, 8);
+            SequentialEngine::new(seed).run(&m);
+            m.cells_snapshot()
+        };
+        for workers in [1, 2, 4, 5] {
+            let m = IncModel::new(1500, 8);
+            let rep = vengine(workers, seed).run(&m);
+            assert_eq!(m.cells_snapshot(), expected, "n={workers}");
+            assert_eq!(rep.chain.tasks_executed, 1500);
+            assert_eq!(rep.totals.executed, 1500);
+        }
+    }
+
+    #[test]
+    fn virtual_run_is_deterministic() {
+        let run = || {
+            let m = IncModel::with_work(800, 16, 50);
+            vengine(3, 9).run(&m).virtual_time_s
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn more_cores_speed_up_parallel_workload() {
+        // 64 cells, heavy tasks: plenty of parallelism.
+        let t = |workers| {
+            let m = IncModel::with_work(2000, 64, 2000);
+            vengine(workers, 1).run(&m).virtual_time_s
+        };
+        let t1 = t(1);
+        let t2 = t(2);
+        let t4 = t(4);
+        assert!(t2 < t1 * 0.75, "2 cores: {t2:.6} vs {t1:.6}");
+        assert!(t4 < t2 * 0.80, "4 cores: {t4:.6} vs {t2:.6}");
+    }
+
+    #[test]
+    fn serial_workload_gains_at_most_pipelining() {
+        // Single cell: fully dependent chain. Executions cannot overlap,
+        // but workers may still pipeline task *creation* against the
+        // running execution, so a small constant-factor gain (bounded by
+        // create/(create+exec)) is legitimate — large speedups are not.
+        let t = |workers| {
+            let m = IncModel::with_work(500, 1, 500);
+            vengine(workers, 2).run(&m).virtual_time_s
+        };
+        let t1 = t(1);
+        let t4 = t(4);
+        assert!(
+            t4 >= t1 * 0.75,
+            "serial chain must not truly parallelize: {t4:.6} vs {t1:.6}"
+        );
+        assert!(t4 <= t1 * 1.5, "extra workers must not wreck a serial chain");
+    }
+
+    #[test]
+    fn ideal_cost_model_gives_near_linear_speedup() {
+        // Zero protocol overhead + abundant parallelism => T(n) ≈ T(1)/n.
+        let t = |workers| {
+            let m = IncModel::with_work(4000, 4096, 100);
+            VirtualEngine {
+                workers,
+                tasks_per_cycle: 6,
+                seed: 4,
+                cost: CostModel::ideal(1.0),
+            }
+            .run(&m)
+            .virtual_time_s
+        };
+        let t1 = t(1);
+        let t4 = t(4);
+        let speedup = t1 / t4;
+        assert!(
+            speedup > 3.3,
+            "ideal machine should give near-linear speedup, got {speedup:.2}"
+        );
+    }
+
+    #[test]
+    fn counters_consistent() {
+        let m = IncModel::new(600, 4);
+        let rep = vengine(3, 7).run(&m);
+        assert_eq!(rep.totals.created, 600);
+        assert_eq!(rep.totals.executed, 600);
+        assert_eq!(rep.chain.tasks_created, 600);
+        assert!(rep.chain.max_chain_len >= 1);
+        assert!(rep.virtual_time_s > 0.0);
+        assert_eq!(rep.per_worker.len(), 3);
+    }
+}

@@ -1,0 +1,102 @@
+//! Config system + CLI surface tests (the launcher layer).
+
+use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::report::{figure_pivot, long_table};
+use adapar::coordinator::run_sweep;
+use adapar::util::cli::{Args, CliError, Spec};
+
+const SPEC: Spec = Spec {
+    options: &["model", "engine", "workers", "sizes"],
+    flags: &["paper-scale"],
+};
+
+fn toks(s: &str) -> Vec<String> {
+    s.split_whitespace().map(String::from).collect()
+}
+
+#[test]
+fn cli_parses_figure_style_invocation() {
+    let a = Args::parse(
+        toks("sweep --model sir --engine virtual --workers 1,2,3,4,5 --sizes 10,50,100 --paper-scale"),
+        &SPEC,
+    )
+    .unwrap();
+    assert_eq!(a.subcommand.as_deref(), Some("sweep"));
+    assert_eq!(a.get_list::<usize>("workers", &[]).unwrap(), vec![1, 2, 3, 4, 5]);
+    assert_eq!(a.get_list::<usize>("sizes", &[]).unwrap(), vec![10, 50, 100]);
+    assert!(a.has_flag("paper-scale"));
+}
+
+#[test]
+fn cli_rejects_typos() {
+    assert!(matches!(
+        Args::parse(toks("run --modle sir"), &SPEC),
+        Err(CliError::Unknown(_))
+    ));
+}
+
+#[test]
+fn preset_configs_run_end_to_end_scaled() {
+    // Take the fig presets, shrink the workload drastically, run the grid,
+    // check the report shape.
+    for preset in ["fig2", "fig3"] {
+        let mut cfg = SweepConfig::preset(preset).unwrap();
+        cfg.sizes.truncate(2);
+        cfg.workers = vec![1, 2];
+        cfg.seeds = vec![1];
+        cfg.agents = 200;
+        cfg.steps = if cfg.model == ModelKind::Sir { 10 } else { 3_000 };
+        cfg.engine = EngineKind::Virtual;
+        let res = run_sweep(&cfg).unwrap();
+        assert_eq!(res.points.len(), 4, "{preset}");
+        let pivot = figure_pivot(&res);
+        assert_eq!(pivot.len(), 2);
+        let long = long_table(&res);
+        assert_eq!(long.len(), 4);
+    }
+}
+
+#[test]
+fn experiment_toml_files_parse() {
+    for f in ["experiments/fig2.toml", "experiments/fig3.toml"] {
+        let cfg = SweepConfig::from_file(f)
+            .unwrap_or_else(|e| panic!("{f}: {e:#}"));
+        cfg.validate().unwrap();
+        assert_eq!(cfg.workers, vec![1, 2, 3, 4, 5]);
+        assert_eq!(cfg.seeds.len(), 5, "paper: five instances");
+    }
+}
+
+#[test]
+fn toml_roundtrip_of_all_fields() {
+    let cfg = SweepConfig::from_toml(
+        r#"
+model = "voter"
+engine = "parallel"
+sizes = [1]
+workers = [2, 4]
+seeds = [9, 10]
+tasks_per_cycle = 3
+agents = 77
+steps = 123
+paper_scale = true
+calibrate = true
+"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.model, ModelKind::Voter);
+    assert_eq!(cfg.engine, EngineKind::Parallel);
+    assert_eq!(cfg.tasks_per_cycle, 3);
+    assert_eq!(cfg.agents, 77);
+    assert_eq!(cfg.effective_agents(), 77);
+    assert_eq!(cfg.effective_steps(), 123);
+    assert!(cfg.paper_scale && cfg.calibrate);
+}
+
+#[test]
+fn invalid_configs_are_rejected() {
+    assert!(SweepConfig::from_toml("model = \"nope\"").is_err());
+    assert!(SweepConfig::from_toml("engine = \"nope\"").is_err());
+    assert!(SweepConfig::from_toml("workers = []").is_err());
+    assert!(SweepConfig::from_toml("model = \"ising\"\nengine = \"stepwise\"").is_err());
+}

@@ -1,0 +1,120 @@
+//! Property tests over the protocol engines using the in-crate
+//! property-testing framework (`util::prop`): random workload shapes,
+//! random seeds, random worker counts — parallel must always equal
+//! sequential, counters must always balance.
+
+use adapar::model::testkit::IncModel;
+use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+use adapar::util::prop::{check, ranged_usize, AnySeed, Config, Gen, PairOf};
+use adapar::vtime::{CostModel, VirtualEngine};
+
+/// Generator for (tasks, cells) workload shapes.
+fn workload() -> PairOf<adapar::util::prop::RangedUsize, adapar::util::prop::RangedUsize> {
+    PairOf(ranged_usize(1, 600), ranged_usize(1, 32))
+}
+
+#[test]
+fn prop_parallel_equals_sequential() {
+    let gen = PairOf(workload(), PairOf(AnySeed, ranged_usize(1, 5)));
+    check(
+        "parallel == sequential",
+        Config { cases: 40, ..Default::default() },
+        gen,
+        |&((tasks, cells), (seed, workers))| {
+            let expected = {
+                let m = IncModel::new(tasks as u64, cells as u32);
+                SequentialEngine::new(seed).run(&m);
+                m.cells_snapshot()
+            };
+            let m = IncModel::new(tasks as u64, cells as u32);
+            let rep = ParallelEngine::new(ProtocolConfig {
+                workers,
+                tasks_per_cycle: 6,
+                seed,
+                collect_timing: false,
+            })
+            .run(&m);
+            m.cells_snapshot() == expected && rep.totals.executed == tasks as u64
+        },
+    );
+}
+
+#[test]
+fn prop_virtual_equals_sequential() {
+    let gen = PairOf(workload(), PairOf(AnySeed, ranged_usize(1, 5)));
+    check(
+        "virtual == sequential",
+        Config { cases: 40, ..Default::default() },
+        gen,
+        |&((tasks, cells), (seed, workers))| {
+            let expected = {
+                let m = IncModel::new(tasks as u64, cells as u32);
+                SequentialEngine::new(seed).run(&m);
+                m.cells_snapshot()
+            };
+            let m = IncModel::new(tasks as u64, cells as u32);
+            let rep = VirtualEngine {
+                workers,
+                tasks_per_cycle: 6,
+                seed,
+                cost: CostModel::default(),
+            }
+            .run(&m);
+            m.cells_snapshot() == expected
+                && rep.totals.executed == tasks as u64
+                && rep.virtual_time_s > 0.0
+        },
+    );
+}
+
+#[test]
+fn prop_c_parameter_never_changes_results() {
+    let gen = PairOf(workload(), PairOf(AnySeed, ranged_usize(1, 64)));
+    check(
+        "result independent of C",
+        Config { cases: 30, ..Default::default() },
+        gen,
+        |&((tasks, cells), (seed, c))| {
+            let expected = {
+                let m = IncModel::new(tasks as u64, cells as u32);
+                SequentialEngine::new(seed).run(&m);
+                m.cells_snapshot()
+            };
+            let m = IncModel::new(tasks as u64, cells as u32);
+            ParallelEngine::new(ProtocolConfig {
+                workers: 3,
+                tasks_per_cycle: c as u32,
+                seed,
+                collect_timing: false,
+            })
+            .run(&m);
+            m.cells_snapshot() == expected
+        },
+    );
+}
+
+#[test]
+fn prop_counters_balance() {
+    let gen = PairOf(workload(), ranged_usize(1, 4));
+    check(
+        "created == executed == tasks",
+        Config { cases: 30, ..Default::default() },
+        gen,
+        |&((tasks, cells), workers)| {
+            let m = IncModel::new(tasks as u64, cells as u32);
+            let rep = ParallelEngine::new(ProtocolConfig {
+                workers,
+                tasks_per_cycle: 6,
+                seed: 1,
+                collect_timing: false,
+            })
+            .run(&m);
+            let per_worker_sum: u64 = rep.per_worker.iter().map(|w| w.executed).sum();
+            rep.totals.created == tasks as u64
+                && rep.totals.executed == tasks as u64
+                && per_worker_sum == tasks as u64
+                && rep.chain.tasks_created == tasks as u64
+                && rep.chain.tasks_executed == tasks as u64
+        },
+    );
+}

@@ -1,0 +1,248 @@
+//! Record correctness, property-tested: every model's record must be
+//! **conservative** with respect to an explicit read/write-footprint
+//! oracle — `footprints conflict ⇒ depends() == true` — and should be
+//! exact (no false positives) for the pairwise models, where the record
+//! *is* the footprint check.
+
+use std::collections::BTreeSet;
+
+use adapar::model::Record as _;
+use adapar::models::axelrod::{AxelrodModel, AxelrodParams, Interaction};
+use adapar::models::ising::{FlipAttempt, IsingModel, IsingParams};
+use adapar::models::sir::{SirModel, SirParams, SirPhase, SirTask};
+use adapar::models::voter::{VoterModel, VoterParams, VoterStep};
+use adapar::model::Model;
+use adapar::sim::graph::ring_lattice;
+use adapar::util::prop::{check, ranged_usize, vec_of, Config, Gen, PairOf};
+
+/// Oracle: conflict between footprints (r1, w1) and (r2, w2).
+fn conflicts(
+    r1: &BTreeSet<u32>,
+    w1: &BTreeSet<u32>,
+    r2: &BTreeSet<u32>,
+    w2: &BTreeSet<u32>,
+) -> bool {
+    w1.iter().any(|x| r2.contains(x) || w2.contains(x))
+        || w2.iter().any(|x| r1.contains(x) || w1.contains(x))
+}
+
+fn set(xs: &[u32]) -> BTreeSet<u32> {
+    xs.iter().copied().collect()
+}
+
+#[test]
+fn axelrod_record_equals_footprint_oracle() {
+    let model = AxelrodModel::new(
+        AxelrodParams {
+            agents: 12,
+            features: 4,
+            ..Default::default()
+        },
+        0,
+    );
+    // Generate sequences of (source, target) pairs over 12 agents.
+    let gen = vec_of(
+        PairOf(ranged_usize(0, 11), ranged_usize(0, 11)),
+        1,
+        12,
+    );
+    check("axelrod record == oracle", Config { cases: 128, ..Default::default() }, gen, |pairs| {
+        let tasks: Vec<Interaction> = pairs
+            .iter()
+            .filter(|(s, t)| s != t)
+            .map(|&(s, t)| Interaction {
+                source: s as u32,
+                target: t as u32,
+            })
+            .collect();
+        if tasks.is_empty() {
+            return true;
+        }
+        let (probe, absorbed) = tasks.split_last().unwrap();
+        let mut rec = model.record();
+        let mut reads = BTreeSet::new();
+        let mut writes = BTreeSet::new();
+        for t in absorbed {
+            rec.absorb(t);
+            reads.insert(t.source);
+            reads.insert(t.target);
+            writes.insert(t.target);
+        }
+        let probe_r = set(&[probe.source, probe.target]);
+        let probe_w = set(&[probe.target]);
+        let oracle = conflicts(&probe_r, &probe_w, &reads, &writes);
+        rec.depends(probe) == oracle
+    });
+}
+
+#[test]
+fn voter_record_equals_footprint_oracle() {
+    let model = VoterModel::new(ring_lattice(16, 4), VoterParams::default(), 0);
+    let gen = vec_of(PairOf(ranged_usize(0, 15), ranged_usize(0, 15)), 1, 10);
+    check("voter record == oracle", Config { cases: 128, ..Default::default() }, gen, |pairs| {
+        let tasks: Vec<VoterStep> = pairs
+            .iter()
+            .filter(|(a, b)| a != b)
+            .map(|&(a, b)| VoterStep {
+                speaker: a as u32,
+                listener: b as u32,
+            })
+            .collect();
+        if tasks.is_empty() {
+            return true;
+        }
+        let (probe, absorbed) = tasks.split_last().unwrap();
+        let mut rec = model.record();
+        let mut reads = BTreeSet::new();
+        let mut writes = BTreeSet::new();
+        for t in absorbed {
+            rec.absorb(t);
+            reads.insert(t.speaker);
+            reads.insert(t.listener);
+            writes.insert(t.listener);
+        }
+        let probe_r = set(&[probe.speaker, probe.listener]);
+        let probe_w = set(&[probe.listener]);
+        let oracle = conflicts(&probe_r, &probe_w, &reads, &writes);
+        rec.depends(probe) == oracle
+    });
+}
+
+#[test]
+fn ising_record_is_conservative_over_neighbourhoods() {
+    let model = IsingModel::new(
+        IsingParams {
+            side: 6,
+            ..Default::default()
+        },
+        0,
+    );
+    let n = 36;
+    let nbrs = |i: u32| -> BTreeSet<u32> {
+        let g = adapar::sim::graph::lattice2d(6);
+        let mut s: BTreeSet<u32> = g.neighbors(i as usize).iter().copied().collect();
+        s.insert(i);
+        s
+    };
+    let gen = vec_of(ranged_usize(0, n - 1), 1, 8);
+    check("ising record conservative", Config { cases: 96, ..Default::default() }, gen, |sites| {
+        let (probe, absorbed) = sites.split_last().unwrap();
+        let probe = FlipAttempt { site: *probe as u32 };
+        let mut rec = model.record();
+        let mut reads = BTreeSet::new();
+        let mut writes = BTreeSet::new();
+        for &s in absorbed {
+            let t = FlipAttempt { site: s as u32 };
+            rec.absorb(&t);
+            reads.extend(nbrs(s as u32));
+            writes.insert(s as u32);
+        }
+        let probe_r = nbrs(probe.site);
+        let probe_w = set(&[probe.site]);
+        let oracle = conflicts(&probe_r, &probe_w, &reads, &writes);
+        // Conservative: oracle conflict must imply depends.
+        !oracle || rec.depends(&probe)
+    });
+}
+
+#[test]
+fn sir_record_is_conservative_over_block_footprints() {
+    let params = SirParams::scaled(25, 200, 10);
+    let model = SirModel::new(params, 0);
+    let blocks = model.blocks();
+    // Footprints in *agent* space: compute(b) reads cur[b ∪ nbr-agents],
+    // writes new[b] (disjoint address space — model `new` as ids + N).
+    let g = model.graph().clone();
+    let members: Vec<Vec<u32>> = (0..blocks)
+        .map(|b| model.partition().members(b).to_vec())
+        .collect();
+    let n = params.agents as u32;
+    let compute_reads = |b: usize| -> BTreeSet<u32> {
+        let mut s = BTreeSet::new();
+        for &a in &members[b] {
+            s.insert(a);
+            for &nb in g.neighbors(a as usize) {
+                s.insert(nb);
+            }
+        }
+        s
+    };
+    let compute_writes = |b: usize| -> BTreeSet<u32> {
+        members[b].iter().map(|&a| a + n).collect() // `new` rows
+    };
+    let swap_reads = |b: usize| -> BTreeSet<u32> {
+        members[b].iter().map(|&a| a + n).collect()
+    };
+    let swap_writes = |b: usize| -> BTreeSet<u32> {
+        members[b].iter().copied().collect() // `cur` rows
+    };
+
+    // The SIR record's soundness relies on a *chain-order invariant*: the
+    // source emits compute(0..P) then swap(0..P) per step, and a task can
+    // only be complete once all tasks it depends on are complete. The
+    // oracle therefore generates only protocol-reachable pending sets: walk
+    // the real source order, mark tasks complete only when every earlier
+    // conflicting task is complete, probe a random incomplete task, absorb
+    // the incomplete tasks before it.
+    let footprint = |t: &SirTask| -> (BTreeSet<u32>, BTreeSet<u32>) {
+        let b = t.block as usize;
+        match t.phase {
+            SirPhase::Compute => (compute_reads(b), compute_writes(b)),
+            SirPhase::Swap => (swap_reads(b), swap_writes(b)),
+        }
+    };
+    // Enumerate three steps of source order.
+    let mut order: Vec<SirTask> = Vec::new();
+    for _step in 0..3 {
+        for b in 0..blocks {
+            order.push(SirTask { phase: SirPhase::Compute, block: b as u32 });
+        }
+        for b in 0..blocks {
+            order.push(SirTask { phase: SirPhase::Swap, block: b as u32 });
+        }
+    }
+    let m = order.len();
+    let gen = PairOf(
+        vec_of(ranged_usize(0, 1), m, m), // completion coin flips
+        ranged_usize(0, m - 1),           // probe position
+    );
+    check(
+        "sir record conservative on reachable states",
+        Config { cases: 96, ..Default::default() },
+        gen,
+        |(coins, probe_pos)| {
+            let mut complete = vec![false; m];
+            for i in 0..m {
+                if coins[i] == 1 {
+                    let (ri, wi) = footprint(&order[i]);
+                    let deps_done = (0..i).all(|j| {
+                        let (rj, wj) = footprint(&order[j]);
+                        !conflicts(&ri, &wi, &rj, &wj) || complete[j]
+                    });
+                    if deps_done {
+                        complete[i] = true;
+                    }
+                }
+            }
+            let p = *probe_pos;
+            if complete[p] {
+                return true; // probe must be an incomplete task
+            }
+            let probe = order[p];
+            let mut rec = model.record();
+            let mut reads = BTreeSet::new();
+            let mut writes = BTreeSet::new();
+            for j in 0..p {
+                if !complete[j] {
+                    rec.absorb(&order[j]);
+                    let (rj, wj) = footprint(&order[j]);
+                    reads.extend(rj);
+                    writes.extend(wj);
+                }
+            }
+            let (pr, pw) = footprint(&probe);
+            let oracle = conflicts(&pr, &pw, &reads, &writes);
+            !oracle || rec.depends(&probe)
+        },
+    );
+}

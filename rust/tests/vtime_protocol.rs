@@ -1,0 +1,110 @@
+//! Virtual testbed invariants: state fidelity across all real models,
+//! counter consistency, determinism, and the qualitative speedup shapes
+//! the paper's figures rely on.
+
+use adapar::model::testkit::IncModel;
+use adapar::models::axelrod::{AxelrodModel, AxelrodParams};
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::protocol::SequentialEngine;
+use adapar::vtime::{CostModel, VirtualEngine};
+
+fn engine(workers: usize, seed: u64) -> VirtualEngine {
+    VirtualEngine {
+        workers,
+        tasks_per_cycle: 6,
+        seed,
+        cost: CostModel::default(),
+    }
+}
+
+#[test]
+fn virtual_sir_matches_sequential_for_every_n() {
+    let params = SirParams::scaled(25, 300, 40);
+    let seed = 3;
+    let reference = {
+        let m = SirModel::new(params, 1);
+        SequentialEngine::new(seed).run(&m);
+        m.snapshot()
+    };
+    for n in 1..=5 {
+        let m = SirModel::new(params, 1);
+        let rep = engine(n, seed).run(&m);
+        assert_eq!(m.snapshot(), reference, "n={n}");
+        assert_eq!(rep.totals.executed, rep.totals.created);
+        assert_eq!(rep.totals.executed, 40 * 2 * m.blocks() as u64);
+    }
+}
+
+#[test]
+fn virtual_axelrod_speedup_grows_with_task_size() {
+    // The Fig. 2 mechanism: the T(1)/T(n) ratio must increase with F
+    // because protocol overhead amortizes over the O(F) task body.
+    let t = |features: usize, workers: usize| {
+        let m = AxelrodModel::new(
+            AxelrodParams {
+                agents: 400,
+                features,
+                traits: 3,
+                omega: 0.95,
+                steps: 4_000,
+            },
+            2,
+        );
+        engine(workers, 5).run(&m).virtual_time_s
+    };
+    let ratio_small = t(8, 1) / t(8, 4);
+    let ratio_large = t(200, 1) / t(200, 4);
+    assert!(
+        ratio_large > ratio_small,
+        "speedup must grow with F: F=8 ratio {ratio_small:.2}, F=200 ratio {ratio_large:.2}"
+    );
+    assert!(ratio_large > 1.5, "large tasks must parallelize: {ratio_large:.2}");
+}
+
+#[test]
+fn virtual_sir_fine_granularity_is_overhead_dominated() {
+    // The Fig. 3 mechanism: total model work is constant in s, so tiny
+    // subsets (many tasks) must cost more wall-clock than the plateau.
+    let t = |s: usize| {
+        let m = SirModel::new(SirParams::scaled(s, 400, 30), 1);
+        engine(3, 7).run(&m).virtual_time_s
+    };
+    let t_fine = t(5);
+    let t_plateau = t(100);
+    assert!(
+        t_fine > t_plateau * 1.5,
+        "s=5 ({t_fine:.6}s) should be markedly slower than s=100 ({t_plateau:.6}s)"
+    );
+}
+
+#[test]
+fn virtual_time_monotone_in_task_cost() {
+    let t = |work: u32| {
+        let m = IncModel::with_work(1500, 32, work);
+        engine(2, 1).run(&m).virtual_time_s
+    };
+    assert!(t(10) < t(1000));
+    assert!(t(1000) < t(50_000));
+}
+
+#[test]
+fn virtual_reports_are_reproducible() {
+    let run = || {
+        let m = SirModel::new(SirParams::scaled(20, 200, 30), 4);
+        let r = engine(4, 9).run(&m);
+        (r.virtual_time_s, r.totals.executed, r.totals.skipped_dependent, r.chain.max_chain_len)
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn worker_clocks_and_counters_are_consistent() {
+    let m = IncModel::with_work(2000, 64, 200);
+    let rep = engine(5, 11).run(&m);
+    assert_eq!(rep.per_worker.len(), 5);
+    let sum: u64 = rep.per_worker.iter().map(|w| w.executed).sum();
+    assert_eq!(sum, rep.totals.executed);
+    assert_eq!(rep.chain.tasks_created, 2000);
+    // Every worker should have done *something* on this workload.
+    assert!(rep.per_worker.iter().all(|w| w.cycles > 0));
+}

@@ -1,0 +1,110 @@
+//! Three-layer integration: AOT artifacts (Python/JAX/Pallas) loaded and
+//! executed from Rust via PJRT, validated **bitwise** against the native
+//! models.
+//!
+//! Gated on `artifacts/manifest.txt` (built by `make artifacts`); each test
+//! is skipped with a notice when artifacts are absent so plain
+//! `cargo test` stays green in a fresh checkout.
+
+use adapar::models::axelrod::{AxelrodModel, AxelrodParams, Interaction};
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::protocol::SequentialEngine;
+use adapar::runtime::xla_engine::{XlaAxelrodInteractor, XlaSirModel};
+use adapar::runtime::{Manifest, XlaRuntime};
+use adapar::sim::rng::TaskRng;
+
+fn manifest() -> Option<Manifest> {
+    let dir = Manifest::default_dir();
+    if dir.join("manifest.txt").exists() {
+        Some(Manifest::load(dir).expect("manifest parses"))
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn axelrod_xla_matches_native_bitwise() {
+    let Some(manifest) = manifest() else { return };
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    let interactor = XlaAxelrodInteractor::from_manifest(&rt, &manifest).expect("load artifact");
+
+    // Native model at the artifact's static shape.
+    let params = AxelrodParams {
+        agents: 60,
+        features: interactor.features(),
+        traits: 3,
+        omega: interactor.omega(),
+        steps: 400,
+    };
+    let seed = 99;
+    let native = AxelrodModel::new(params, 7);
+    let via_xla = AxelrodModel::new(params, 7);
+    assert_eq!(native.snapshot(), via_xla.snapshot());
+
+    // Drive both through the same task sequence: native execution vs
+    // XLA-per-task execution fed from identical per-task streams.
+    let mut source = adapar::model::Model::source(&native, seed);
+    let mut seq = 0u64;
+    while let Some(recipe) = adapar::model::TaskSource::next_task(&mut source) {
+        let Interaction { source: s, target: t } = recipe;
+        // Native path.
+        let mut rng = TaskRng::for_task(seed, seq);
+        adapar::model::Model::execute(&native, &recipe, &mut rng);
+        // XLA path: same stream, same draws.
+        let mut rng2 = TaskRng::for_task(seed, seq);
+        let f = params.features;
+        let (src_row, tgt_row): (Vec<i32>, Vec<i32>) = {
+            let snap = via_xla.snapshot();
+            (
+                snap[s as usize * f..(s as usize + 1) * f].iter().map(|&x| x as i32).collect(),
+                snap[t as usize * f..(t as usize + 1) * f].iter().map(|&x| x as i32).collect(),
+            )
+        };
+        let u1 = rng2.unit_f64();
+        let u2 = rng2.unit_f64();
+        let new_tgt = interactor.interact(&src_row, &tgt_row, u1, u2).expect("interact");
+        via_xla.write_agent_row(t as usize, &new_tgt);
+        seq += 1;
+    }
+    assert_eq!(
+        native.snapshot(),
+        via_xla.snapshot(),
+        "XLA and native Axelrod diverged"
+    );
+}
+
+#[test]
+fn sir_xla_model_matches_native_bitwise() {
+    let Some(manifest) = manifest() else { return };
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+
+    // Shape must match the exported artifact: n=300, k=14, s=30.
+    let params = SirParams::scaled(30, 300, 25);
+    let seed = 5;
+
+    let native = SirModel::new(params, 3);
+    SequentialEngine::new(seed).run(&native);
+
+    let xla_model = XlaSirModel::from_manifest(&rt, &manifest, SirModel::new(params, 3))
+        .expect("load sir_block artifact");
+    SequentialEngine::new(seed).run(&xla_model);
+
+    assert_eq!(
+        native.snapshot(),
+        xla_model.snapshot(),
+        "XLA and native SIR diverged"
+    );
+}
+
+#[test]
+fn manifest_artifacts_all_compile() {
+    let Some(manifest) = manifest() else { return };
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    assert!(rt.device_count() >= 1);
+    assert_eq!(rt.platform(), "cpu");
+    for entry in manifest.entries() {
+        rt.load_hlo_text(&entry.path)
+            .unwrap_or_else(|e| panic!("artifact {} failed to compile: {e:#}", entry.name));
+    }
+}
