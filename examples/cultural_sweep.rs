@@ -9,13 +9,13 @@
 //! For the paper's full workload use the CLI instead:
 //! `adapar sweep --preset fig2 --paper-scale`.
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::report::figure_pivot;
 use adapar::coordinator::run_sweep;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let cfg = SweepConfig {
-        model: ModelKind::Axelrod,
+        model: "axelrod".to_string(),
         engine: EngineKind::Virtual,
         sizes: vec![25, 50, 100, 200, 400],
         workers: vec![1, 2, 3, 4, 5],

@@ -18,14 +18,14 @@
 
 use std::path::Path;
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::report::{figure_pivot, write_report};
 use adapar::coordinator::run_sweep;
 use adapar::models::sir::{SirModel, SirParams};
 use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine, StepwiseEngine};
 use adapar::vtime::calibrate;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     println!("== 1. cost-model calibration ==");
     let cost = calibrate();
     println!(
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== 3a. Fig. 2 series (cultural dynamics, virtual testbed) ==");
     let fig2 = run_sweep(&SweepConfig {
-        model: ModelKind::Axelrod,
+        model: "axelrod".to_string(),
         engine: EngineKind::Virtual,
         sizes: vec![25, 50, 100, 200, 400],
         workers: vec![1, 2, 3, 4, 5],
@@ -77,7 +77,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("== 3b. Fig. 3 series (disease spreading, virtual testbed) ==");
     let fig3 = run_sweep(&SweepConfig {
-        model: ModelKind::Sir,
+        model: "sir".to_string(),
         engine: EngineKind::Virtual,
         sizes: vec![10, 20, 50, 100, 200, 500],
         workers: vec![1, 2, 3, 4, 5],
@@ -91,6 +91,7 @@ fn main() -> anyhow::Result<()> {
     write_report(&fig3, Path::new("target/figures"), "e2e_fig3")?;
 
     println!("== 4. XLA artifact path ==");
+    #[cfg(feature = "xla")]
     match adapar::runtime::Manifest::load(adapar::runtime::Manifest::default_dir()) {
         Err(_) => println!("  artifacts not built — skipped (run `make artifacts`)"),
         Ok(manifest) => {
@@ -109,6 +110,8 @@ fn main() -> anyhow::Result<()> {
             println!("  SIR with JAX+Pallas task bodies via PJRT: bit-identical ✓");
         }
     }
+    #[cfg(not(feature = "xla"))]
+    println!("  built without the `xla` feature — skipped");
 
     println!("\n== 5. headline metrics ==");
     let s_small = fig2.speedup(25, 4).unwrap();

@@ -6,13 +6,13 @@
 //! cargo run --release --example epidemic_sweep
 //! ```
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::report::figure_pivot;
 use adapar::coordinator::run_sweep;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let cfg = SweepConfig {
-        model: ModelKind::Sir,
+        model: "sir".to_string(),
         engine: EngineKind::Virtual,
         sizes: vec![10, 20, 50, 100, 200, 500],
         workers: vec![1, 2, 3, 4, 5],

@@ -1,4 +1,6 @@
-//! Quickstart: plug a bundled MABS into the adaptive protocol and run it.
+//! Quickstart: run a bundled MABS through the `Simulation` facade — the
+//! single entry point the CLI, sweeps and benches use — then drop one
+//! level down to the raw engines to see what the facade wires together.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -6,43 +8,69 @@
 
 use adapar::models::sir::{SirModel, SirParams};
 use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+use adapar::{EngineKind, Simulation};
 
-fn main() {
-    // The paper's Fig. 3 model at a small scale: 1 000 agents on a ring
-    // lattice of degree 14, partitioned into subsets of 50 agents.
+fn main() -> adapar::Result<()> {
+    // ------------------------------------------------------------------
+    // The facade: model by registry name, engine by kind, builder-style
+    // workload overrides. Any registered model runs on any legal engine.
+    // ------------------------------------------------------------------
+    let seed = 42;
+    let sequential = Simulation::builder()
+        .model("sir")
+        .engine(EngineKind::Sequential)
+        .agents(1_000)
+        .size(50) // subset size s — the task-size proxy
+        .steps(200)
+        .seed(seed)
+        .run()?;
+    let parallel = Simulation::builder()
+        .model("sir")
+        .engine(EngineKind::Parallel)
+        .workers(4)
+        .agents(1_000)
+        .size(50)
+        .steps(200)
+        .seed(seed)
+        .run()?;
+
+    println!("sequential: {}", sequential.report.summary());
+    println!("parallel:   {}", parallel.report.summary());
+    println!("observable: {}", parallel.observable);
+
+    // The protocol preserves the evolution of the system *exactly*.
+    assert_eq!(
+        sequential.observable, parallel.observable,
+        "parallel must be bit-identical to sequential"
+    );
+    println!(
+        "protocol overhead: {:.1}% of task visits were skips/passes/retries",
+        parallel.report.overhead_ratio() * 100.0
+    );
+
+    // ------------------------------------------------------------------
+    // The same run against the raw engine API (what the facade builds):
+    // recipe/record models plugged straight into an engine.
+    // ------------------------------------------------------------------
     let params = SirParams {
         agents: 1_000,
         subset_size: 50,
         steps: 200,
         ..SirParams::default()
     };
-    let seed = 42;
-
-    // Ground truth: canonical sequential execution.
-    let sequential = SirModel::new(params, seed);
-    let seq_report = SequentialEngine::new(seed).run(&sequential);
-
-    // The paper's protocol: n workers iterate the task chain, executing
-    // whatever their records prove independent.
-    let parallel = SirModel::new(params, seed);
-    let par_report = ParallelEngine::new(ProtocolConfig {
+    let reference = SirModel::new(params, seed ^ 0x51); // facade's init stream
+    SequentialEngine::new(seed).run(&reference);
+    let direct = SirModel::new(params, seed ^ 0x51);
+    ParallelEngine::new(ProtocolConfig {
         workers: 4,
         tasks_per_cycle: 6, // the paper's C
         seed,
         collect_timing: false,
     })
-    .run(&parallel);
-
-    println!("sequential: {}", seq_report.summary());
-    println!("parallel:   {}", par_report.summary());
-
-    // The protocol preserves the evolution of the system *exactly*.
-    assert_eq!(sequential.snapshot(), parallel.snapshot());
-    let (s, i, r) = parallel.census();
-    println!("final census: S={s} I={i} R={r}");
-    println!(
-        "protocol overhead: {:.1}% of task visits were skips/passes/retries",
-        par_report.overhead_ratio() * 100.0
-    );
-    println!("OK: parallel state is bit-identical to sequential");
+    .run(&direct);
+    assert_eq!(reference.snapshot(), direct.snapshot());
+    let (s, i, r) = direct.census();
+    println!("raw-engine final census: S={s} I={i} R={r}");
+    println!("OK: facade and raw engines agree; parallel state is bit-identical");
+    Ok(())
 }

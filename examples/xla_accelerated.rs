@@ -14,10 +14,10 @@ use adapar::protocol::SequentialEngine;
 use adapar::runtime::xla_engine::{XlaAxelrodInteractor, XlaSirModel};
 use adapar::runtime::{Manifest, XlaRuntime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let dir = Manifest::default_dir();
     let manifest = Manifest::load(&dir).map_err(|e| {
-        anyhow::anyhow!("{e:#}\nhint: run `make artifacts` first")
+        adapar::err!("{e:#}\nhint: run `make artifacts` first")
     })?;
     let rt = XlaRuntime::cpu()?;
     println!("PJRT platform={} devices={}", rt.platform(), rt.device_count());

@@ -4,33 +4,33 @@
 //! testbed (timing) and the native engine (correct completion), and
 //! report the relative spread of T.
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::run_once;
 use adapar::util::csv::Table;
 use adapar::util::stats::Online;
 use adapar::vtime::CostModel;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let cs = [1u32, 2, 6, 16, 64];
     let cost = CostModel::default();
     let mut table = Table::new(["model", "C", "mean_T_s", "rel_to_C6"]);
     let mut worst_spread: f64 = 0.0;
 
-    for model in [ModelKind::Axelrod, ModelKind::Sir] {
+    for model in ["axelrod", "sir"] {
         let mut means = Vec::new();
         for &c in &cs {
             let cfg = SweepConfig {
-                model,
+                model: model.to_string(),
                 engine: EngineKind::Virtual,
                 sizes: vec![0], // unused below
                 workers: vec![3],
                 seeds: vec![1],
                 tasks_per_cycle: c,
-                agents: if model == ModelKind::Axelrod { 1_000 } else { 4_000 },
-                steps: if model == ModelKind::Axelrod { 30_000 } else { 150 },
+                agents: if model == "axelrod" { 1_000 } else { 4_000 },
+                steps: if model == "axelrod" { 30_000 } else { 150 },
                 ..Default::default()
             };
-            let size = if model == ModelKind::Axelrod { 100 } else { 100 };
+            let size = 100;
             let mut acc = Online::new();
             for seed in [1u64, 2, 3] {
                 acc.push(run_once(&cfg, size, 3, seed, &cost)?.time_s);
@@ -57,6 +57,6 @@ fn main() -> anyhow::Result<()> {
         worst_spread * 100.0,
         if worst_spread < 0.10 { "PASS" } else { "FAIL" }
     );
-    anyhow::ensure!(worst_spread < 0.10, "C ablation spread too large");
+    adapar::ensure!(worst_spread < 0.10, "C ablation spread too large");
     Ok(())
 }

@@ -12,7 +12,7 @@ use adapar::sim::graph::{aggregate_graph, contiguous_partition, ring_lattice, ro
 use adapar::util::csv::Table;
 use adapar::vtime::{CostModel, VirtualEngine};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     // Part 1: protocol-op counters across granularity (virtual, n = 3).
     let mut t1 = Table::new(["s", "blocks", "T_s", "overhead", "max_chain", "skips_per_task"]);
     for s in [10usize, 20, 50, 100, 200, 500] {
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
         t1.push([
             s.to_string(),
             m.blocks().to_string(),
-            format!("{:.6}", rep.virtual_time_s),
+            format!("{:.6}", rep.time_s),
             format!(
                 "{:.3}",
                 (rep.totals.skipped_dependent + rep.totals.passed_executing) as f64

@@ -10,13 +10,13 @@
 //!      only the protocol parallelizes it. This is asserted via the config
 //!      validator, not hand-waved.
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::run_once;
 use adapar::util::csv::Table;
 use adapar::util::stats::Online;
 use adapar::vtime::CostModel;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let cost = CostModel::default();
     let mut table = Table::new(["model", "engine", "workers", "mean_T_s", "sem"]);
 
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         (EngineKind::Virtual, 4),
     ] {
         let cfg = SweepConfig {
-            model: ModelKind::Sir,
+            model: "sir".to_string(),
             engine,
             sizes: vec![100],
             workers: vec![workers],
@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
         (EngineKind::Virtual, 4),
     ] {
         let cfg = SweepConfig {
-            model: ModelKind::Axelrod,
+            model: "axelrod".to_string(),
             engine,
             sizes: vec![100],
             workers: vec![workers],
@@ -89,11 +89,11 @@ fn main() -> anyhow::Result<()> {
 
     // Claim 2: the stepwise engine rejects sequential-form models.
     let bad = SweepConfig {
-        model: ModelKind::Axelrod,
+        model: "axelrod".to_string(),
         engine: EngineKind::Stepwise,
         ..Default::default()
     };
-    anyhow::ensure!(
+    adapar::ensure!(
         bad.validate().is_err(),
         "stepwise must reject sequential-form models (the paper's argument)"
     );

@@ -13,7 +13,7 @@
 //! paper's full N=10⁴ / 2×10⁶-step workload (hours); the default is a
 //! faithfully-shaped scaled workload.
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::report::{figure_pivot, long_table, write_report};
 use adapar::coordinator::run_sweep;
 use adapar::models::axelrod::{AxelrodModel, AxelrodParams};
@@ -24,10 +24,10 @@ fn paper_scale() -> bool {
     std::env::var("ADAPAR_PAPER_SCALE").is_ok_and(|v| v == "1")
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let paper = paper_scale();
     let cfg = SweepConfig {
-        model: ModelKind::Axelrod,
+        model: "axelrod".to_string(),
         engine: EngineKind::Virtual,
         sizes: vec![25, 50, 100, 200, 400, 800],
         workers: vec![1, 2, 3, 4, 5],
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
     }
     bench.write_csv()?;
     let _ = long_table(&res);
-    anyhow::ensure!(ok, "FIG2 acceptance criteria failed");
+    adapar::ensure!(ok, "FIG2 acceptance criteria failed");
     eprintln!("fig2_cultural: all acceptance criteria PASS");
     Ok(())
 }

@@ -7,7 +7,7 @@
 //! plateau T decreases with n, saturating around n = 4; at very small s
 //! extra workers may *hurt*.
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::report::{figure_pivot, write_report};
 use adapar::coordinator::run_sweep;
 use adapar::util::bench::fmt_secs;
@@ -16,10 +16,10 @@ fn paper_scale() -> bool {
     std::env::var("ADAPAR_PAPER_SCALE").is_ok_and(|v| v == "1")
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let paper = paper_scale();
     let cfg = SweepConfig {
-        model: ModelKind::Sir,
+        model: "sir".to_string(),
         engine: EngineKind::Virtual,
         sizes: vec![10, 20, 50, 100, 200, 500, 1000],
         workers: vec![1, 2, 3, 4, 5],
@@ -71,7 +71,7 @@ fn main() -> anyhow::Result<()> {
     );
     ok &= saturates;
 
-    anyhow::ensure!(ok, "FIG3 acceptance criteria failed");
+    adapar::ensure!(ok, "FIG3 acceptance criteria failed");
     eprintln!("fig3_sir: all acceptance criteria PASS");
     Ok(())
 }

@@ -3,19 +3,19 @@
 //! Axelrod (work per interaction independent of N), measured natively
 //! (sequential) and on the virtual testbed at n = 4.
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::run_once;
 use adapar::util::csv::Table;
 use adapar::vtime::CostModel;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let cost = CostModel::default();
     let mut table = Table::new(["model", "N", "engine", "T_s", "T_per_agent_us"]);
 
     for n_agents in [1_000usize, 2_000, 4_000, 8_000] {
         for engine in [EngineKind::Sequential, EngineKind::Virtual] {
             let cfg = SweepConfig {
-                model: ModelKind::Sir,
+                model: "sir".to_string(),
                 engine,
                 sizes: vec![100],
                 workers: vec![4],
@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
 
     for n_agents in [500usize, 1_000, 2_000, 4_000] {
         let cfg = SweepConfig {
-            model: ModelKind::Axelrod,
+            model: "axelrod".to_string(),
             engine: EngineKind::Sequential,
             sizes: vec![100],
             workers: vec![1],

@@ -12,7 +12,7 @@ use adapar::runtime::{Manifest, XlaRuntime};
 use adapar::runtime::exec::{lit_f64, lit_i32_2d};
 use adapar::util::csv::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> adapar::Result<()> {
     let dir = Manifest::default_dir();
     let Ok(manifest) = Manifest::load(&dir) else {
         eprintln!("SKIP: artifacts not built (run `make artifacts`)");

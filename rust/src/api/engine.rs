@@ -1,0 +1,162 @@
+//! The object-safe [`Engine`] abstraction over execution backends.
+//!
+//! Every backend — the paper's adaptive [`ParallelEngine`], the
+//! [`SequentialEngine`] ground truth, the related-work [`StepwiseEngine`]
+//! baseline and the [`VirtualEngine`] testbed — implements `Engine` and
+//! returns the *same* [`RunReport`], so launcher code (facade, sweeps,
+//! CLI) dispatches through one `&dyn Engine` and never matches on the
+//! backend.
+
+use std::str::FromStr;
+
+use crate::api::model::DynModel;
+use crate::error::{Error, Result};
+use crate::protocol::{
+    ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine,
+};
+use crate::vtime::{CostModel, VirtualEngine};
+
+/// An execution backend able to run any [`DynModel`].
+pub trait Engine: Send + Sync {
+    /// Engine label (`"parallel"`, `"sequential"`, `"stepwise"`,
+    /// `"virtual"`).
+    fn name(&self) -> &'static str;
+
+    /// Run the model to completion.
+    fn run(&self, model: &dyn DynModel) -> Result<RunReport>;
+}
+
+impl Engine for SequentialEngine {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
+        Ok(model.run_sequential(self.seed))
+    }
+}
+
+impl Engine for ParallelEngine {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
+        Ok(model.run_parallel(self.config()))
+    }
+}
+
+impl Engine for StepwiseEngine {
+    fn name(&self) -> &'static str {
+        "stepwise"
+    }
+
+    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
+        model.run_stepwise(self.workers, self.seed)
+    }
+}
+
+impl Engine for VirtualEngine {
+    fn name(&self) -> &'static str {
+        "virtual"
+    }
+
+    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
+        let cfg = ProtocolConfig {
+            workers: self.workers,
+            tasks_per_cycle: self.tasks_per_cycle,
+            seed: self.seed,
+            collect_timing: false,
+        };
+        Ok(model.run_virtual(&cfg, &self.cost))
+    }
+}
+
+/// Which execution engine (the config/CLI-facing selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    /// The paper's adaptive protocol on real threads.
+    Parallel,
+    /// Canonical single-threaded execution.
+    Sequential,
+    /// The virtual-core testbed (reproduces multi-core figures on a
+    /// single-core host).
+    Virtual,
+    /// The barrier-based step-parallel baseline (synchronous models only).
+    Stepwise,
+}
+
+impl EngineKind {
+    /// Every selectable engine.
+    pub const ALL: [EngineKind; 4] = [
+        EngineKind::Parallel,
+        EngineKind::Sequential,
+        EngineKind::Virtual,
+        EngineKind::Stepwise,
+    ];
+
+    /// Canonical names, for error listings.
+    pub fn names() -> String {
+        Self::ALL
+            .iter()
+            .map(|k| k.to_string())
+            .collect::<Vec<_>>()
+            .join("|")
+    }
+}
+
+impl FromStr for EngineKind {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s {
+            "parallel" | "protocol" => EngineKind::Parallel,
+            "sequential" | "seq" => EngineKind::Sequential,
+            "virtual" | "vtime" => EngineKind::Virtual,
+            "stepwise" | "barrier" => EngineKind::Stepwise,
+            other => {
+                return Err(crate::err!(
+                    "unknown engine `{other}`; valid engines: {}",
+                    EngineKind::names()
+                ))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            EngineKind::Parallel => "parallel",
+            EngineKind::Sequential => "sequential",
+            EngineKind::Virtual => "virtual",
+            EngineKind::Stepwise => "stepwise",
+        })
+    }
+}
+
+/// Build a boxed engine for a kind and workflow parameters. `cost` is
+/// only consulted by the virtual testbed.
+pub fn engine_for(
+    kind: EngineKind,
+    workers: usize,
+    tasks_per_cycle: u32,
+    seed: u64,
+    cost: CostModel,
+) -> Box<dyn Engine> {
+    match kind {
+        EngineKind::Sequential => Box::new(SequentialEngine::new(seed)),
+        EngineKind::Parallel => Box::new(ParallelEngine::new(ProtocolConfig {
+            workers,
+            tasks_per_cycle,
+            seed,
+            collect_timing: false,
+        })),
+        EngineKind::Stepwise => Box::new(StepwiseEngine::new(workers, seed)),
+        EngineKind::Virtual => Box::new(VirtualEngine {
+            workers,
+            tasks_per_cycle,
+            seed,
+            cost,
+        }),
+    }
+}

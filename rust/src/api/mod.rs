@@ -1,0 +1,41 @@
+//! The public execution API: engine abstraction, model registry, and the
+//! [`Simulation`] facade.
+//!
+//! The paper's protocol is model-agnostic by design (§3.5's recipe/record
+//! interface); this module makes the *launcher* side equally agnostic:
+//!
+//! * [`engine`] — the object-safe [`Engine`] trait implemented by every
+//!   backend (parallel, sequential, stepwise, virtual), all returning the
+//!   unified [`crate::protocol::RunReport`].
+//! * [`model`] — [`DynModel`], the type-erased runnable model, and
+//!   [`Runnable`], the adapter that erases any [`crate::model::Model`].
+//! * [`registry`] — the dynamic model registry: name + parameter bag →
+//!   runnable model. The five bundled models self-register; downstream
+//!   crates register their own at runtime.
+//! * [`simulation`] — the builder-style [`Simulation`] facade, the single
+//!   entry point used by the CLI, the sweep coordinator, the benches and
+//!   the examples.
+//!
+//! ```no_run
+//! use adapar::{EngineKind, Simulation};
+//!
+//! let out = Simulation::builder()
+//!     .model("sir")
+//!     .agents(10_000)
+//!     .engine(EngineKind::Parallel)
+//!     .workers(4)
+//!     .seed(7)
+//!     .run()?;
+//! println!("T = {}s, {}", out.report.time_s, out.observable);
+//! # Ok::<(), adapar::error::Error>(())
+//! ```
+
+pub mod engine;
+pub mod model;
+pub mod registry;
+pub mod simulation;
+
+pub use engine::{engine_for, Engine, EngineKind};
+pub use model::{DynModel, Runnable};
+pub use registry::{BuildCtx, ModelInfo, Params, Registry};
+pub use simulation::{SimOutcome, Simulation, SimulationBuilder};

@@ -1,0 +1,218 @@
+//! Type-erased runnable models.
+//!
+//! [`crate::model::Model`] is deeply generic (recipe/record/source
+//! associated types), which is what the engines need — but the launcher
+//! layers (registry, facade, CLI, sweep coordinator) must handle models
+//! *uniformly*. [`DynModel`] is the object-safe bridge: it exposes one
+//! generic-free entry point per engine family, each implemented exactly
+//! once by the [`Runnable`] adapter (double dispatch, in the style of
+//! `erased-serde`). Adding a model therefore never touches the dispatch
+//! code; adding an engine means one more method here and one [`Engine`]
+//! impl — never a per-model match.
+//!
+//! [`Engine`]: crate::api::Engine
+
+use crate::error::Result;
+use crate::model::Model;
+use crate::protocol::{
+    ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine, SyncModel,
+};
+use crate::vtime::{calibrate_exec, CostModel, VirtualEngine};
+
+/// An object-safe, engine-agnostic runnable model: [`Model`] with its
+/// associated types erased, plus the launcher-facing extras (observable,
+/// post-run consistency check, exec-cost calibration).
+pub trait DynModel: Send + Sync {
+    /// Model name (registry key or ad-hoc label).
+    fn name(&self) -> &str;
+
+    /// Run on the canonical single-threaded engine.
+    fn run_sequential(&self, seed: u64) -> RunReport;
+
+    /// Run on the paper's adaptive parallel engine.
+    fn run_parallel(&self, cfg: &ProtocolConfig) -> RunReport;
+
+    /// Run on the virtual-core testbed with the given cost model.
+    fn run_virtual(&self, cfg: &ProtocolConfig, cost: &CostModel) -> RunReport;
+
+    /// Run on the barrier-based stepwise baseline. Errors unless the model
+    /// has a synchronous (phase-structured) form — the paper's point about
+    /// sequential-form models (§2).
+    fn run_stepwise(&self, workers: usize, seed: u64) -> Result<RunReport>;
+
+    /// Whether the model has a synchronous form (can run stepwise).
+    fn has_sync_form(&self) -> bool;
+
+    /// Human-readable post-run observable (e.g. an SIR census) used by
+    /// determinism validation and run summaries.
+    fn observable(&self) -> String;
+
+    /// Post-run internal consistency check (e.g. Schelling's grid/position
+    /// agreement). Default: nothing to check.
+    fn check_consistency(&self) -> Result<()>;
+
+    /// Measure ns per `task_work` unit by executing a task sample
+    /// sequentially (advances model state — use a throwaway instance).
+    fn calibrate_exec_unit(&self, sample_tasks: u64, cost: &CostModel) -> f64;
+}
+
+/// Adapter erasing a concrete [`Model`] into a [`DynModel`].
+///
+/// Configure launcher-facing behaviour with the builder methods:
+/// [`observed`](Runnable::observed) attaches the observable,
+/// [`checked`](Runnable::checked) a post-run consistency check, and
+/// [`with_sync`](Runnable::with_sync) unlocks the stepwise engine for
+/// models that also implement [`SyncModel`].
+pub struct Runnable<M: Model> {
+    name: String,
+    model: M,
+    observe: Option<Box<dyn Fn(&M) -> String + Send + Sync>>,
+    check: Option<Box<dyn Fn(&M) -> std::result::Result<(), String> + Send + Sync>>,
+    stepwise: Option<fn(&M, usize, u64) -> RunReport>,
+}
+
+fn run_stepwise_impl<M: Model + SyncModel>(m: &M, workers: usize, seed: u64) -> RunReport {
+    StepwiseEngine::new(workers, seed).run(m)
+}
+
+impl<M: Model> Runnable<M> {
+    /// Wrap a model under a display name.
+    pub fn new(name: impl Into<String>, model: M) -> Self {
+        Self {
+            name: name.into(),
+            model,
+            observe: None,
+            check: None,
+            stepwise: None,
+        }
+    }
+
+    /// Attach the post-run observable.
+    pub fn observed(mut self, f: impl Fn(&M) -> String + Send + Sync + 'static) -> Self {
+        self.observe = Some(Box::new(f));
+        self
+    }
+
+    /// Attach a post-run consistency check.
+    pub fn checked(
+        mut self,
+        f: impl Fn(&M) -> std::result::Result<(), String> + Send + Sync + 'static,
+    ) -> Self {
+        self.check = Some(Box::new(f));
+        self
+    }
+
+    /// Unlock the stepwise engine (requires the synchronous form).
+    pub fn with_sync(mut self) -> Self
+    where
+        M: SyncModel,
+    {
+        self.stepwise = Some(run_stepwise_impl::<M>);
+        self
+    }
+
+    /// Access the wrapped model.
+    pub fn model(&self) -> &M {
+        &self.model
+    }
+
+    /// Box into a trait object (convenience for registry factories).
+    pub fn boxed(self) -> Box<dyn DynModel> {
+        Box::new(self)
+    }
+}
+
+impl<M: Model> DynModel for Runnable<M> {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn run_sequential(&self, seed: u64) -> RunReport {
+        SequentialEngine::new(seed).run(&self.model)
+    }
+
+    fn run_parallel(&self, cfg: &ProtocolConfig) -> RunReport {
+        ParallelEngine::new(*cfg).run(&self.model)
+    }
+
+    fn run_virtual(&self, cfg: &ProtocolConfig, cost: &CostModel) -> RunReport {
+        VirtualEngine {
+            workers: cfg.workers,
+            tasks_per_cycle: cfg.tasks_per_cycle,
+            seed: cfg.seed,
+            cost: *cost,
+        }
+        .run(&self.model)
+    }
+
+    fn run_stepwise(&self, workers: usize, seed: u64) -> Result<RunReport> {
+        match self.stepwise {
+            Some(f) => Ok(f(&self.model, workers, seed)),
+            None => Err(crate::err!(
+                "model `{}` has no synchronous form; the stepwise engine requires one \
+                 (that is the paper's point about sequential-form models)",
+                self.name
+            )),
+        }
+    }
+
+    fn has_sync_form(&self) -> bool {
+        self.stepwise.is_some()
+    }
+
+    fn observable(&self) -> String {
+        match &self.observe {
+            Some(f) => f(&self.model),
+            None => format!("{}: run complete", self.name),
+        }
+    }
+
+    fn check_consistency(&self) -> Result<()> {
+        if let Some(f) = &self.check {
+            f(&self.model)
+                .map_err(|e| crate::err!("model `{}` state corrupted: {e}", self.name))?;
+        }
+        Ok(())
+    }
+
+    fn calibrate_exec_unit(&self, sample_tasks: u64, cost: &CostModel) -> f64 {
+        calibrate_exec(&self.model, sample_tasks, cost).0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::IncModel;
+
+    #[test]
+    fn erased_model_runs_on_every_core_engine() {
+        let dyn_model: Box<dyn DynModel> = Runnable::new("inc", IncModel::new(200, 8))
+            .observed(|m| format!("cells={:?}", &m.cells_snapshot()[..2]))
+            .boxed();
+        let seq = dyn_model.run_sequential(3);
+        assert_eq!(seq.totals.executed, 200);
+        let par = dyn_model.run_parallel(&ProtocolConfig {
+            workers: 2,
+            tasks_per_cycle: 6,
+            seed: 3,
+            collect_timing: false,
+        });
+        assert_eq!(par.totals.executed, 200);
+        let virt = dyn_model.run_virtual(
+            &ProtocolConfig {
+                workers: 3,
+                tasks_per_cycle: 6,
+                seed: 3,
+                collect_timing: false,
+            },
+            &CostModel::default(),
+        );
+        assert_eq!(virt.totals.executed, 200);
+        assert!(virt.time_s > 0.0);
+        assert!(dyn_model.observable().starts_with("cells="));
+        assert!(!dyn_model.has_sync_form());
+        assert!(dyn_model.run_stepwise(2, 3).is_err());
+        dyn_model.check_consistency().unwrap();
+    }
+}

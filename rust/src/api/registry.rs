@@ -1,0 +1,574 @@
+//! The dynamic model registry: `name + parameter bag → runnable model`.
+//!
+//! The paper's plug-in concept (§3.5) made a first-class runtime feature:
+//! the coordinator, CLI and sweep configs refer to models purely by name,
+//! and the registry maps that name — plus a [`Params`] bag of
+//! model-specific knobs from the TOML config / CLI — to a type-erased
+//! [`DynModel`]. The five bundled models self-register into the global
+//! registry on first use; downstream code (see `examples/custom_model.rs`)
+//! registers its own with [`register`], after which the model is runnable
+//! from the CLI and sweep configs with **zero** coordinator edits.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use crate::api::model::{DynModel, Runnable};
+use crate::error::Result;
+use crate::util::toml::Value;
+
+/// A model-specific parameter bag (string-keyed TOML scalars).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Params(BTreeMap<String, Value>);
+
+impl Params {
+    /// Empty bag.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Build from a parsed TOML table.
+    pub fn from_table(table: &BTreeMap<String, Value>) -> Self {
+        Self(table.clone())
+    }
+
+    /// Whether the bag holds no keys.
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Set a key.
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<Value>) -> &mut Self {
+        self.0.insert(key.into(), value.into());
+        self
+    }
+
+    /// Raw value by key.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.0.get(key)
+    }
+
+    /// Merge another bag into this one, key by key (`other` wins on
+    /// conflicts).
+    pub fn merge(&mut self, other: &Params) {
+        for (k, v) in &other.0 {
+            self.0.insert(k.clone(), v.clone());
+        }
+    }
+
+    /// Iterate keys.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.0.keys().map(String::as_str)
+    }
+
+    /// Integer parameter with default.
+    pub fn i64_or(&self, key: &str, default: i64) -> Result<i64> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_int()
+                .ok_or_else(|| crate::err!("param `{key}` must be an integer, got {v:?}")),
+        }
+    }
+
+    /// `usize` parameter with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        let v = self.i64_or(key, default as i64)?;
+        crate::ensure!(v >= 0, "param `{key}` must be non-negative, got {v}");
+        Ok(v as usize)
+    }
+
+    /// `u64` parameter with default.
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        let v = self.i64_or(key, default as i64)?;
+        crate::ensure!(v >= 0, "param `{key}` must be non-negative, got {v}");
+        Ok(v as u64)
+    }
+
+    /// Float parameter with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_float()
+                .ok_or_else(|| crate::err!("param `{key}` must be a number, got {v:?}")),
+        }
+    }
+
+    /// Boolean parameter with default.
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.0.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_bool()
+                .ok_or_else(|| crate::err!("param `{key}` must be a boolean, got {v:?}")),
+        }
+    }
+}
+
+/// Registry metadata for one model: name, aliases, and the per-model
+/// workload defaults the launcher layers used to hardcode.
+#[derive(Clone, Debug)]
+pub struct ModelInfo {
+    /// Canonical registry key.
+    pub name: String,
+    /// Accepted alternative names.
+    pub aliases: Vec<String>,
+    /// One-line description.
+    pub summary: String,
+    /// Default task-size proxy grid for sweeps.
+    pub default_sizes: Vec<usize>,
+    /// Default agent count (scaled workload).
+    pub default_agents: usize,
+    /// Agent count at the paper's full scale.
+    pub paper_agents: usize,
+    /// Default step count (scaled workload).
+    pub default_steps: u64,
+    /// Step count at the paper's full scale.
+    pub paper_steps: u64,
+    /// Shrunk step count for determinism validation runs.
+    pub validate_steps: u64,
+    /// Whether the model has a synchronous form (stepwise-capable).
+    pub has_sync_form: bool,
+}
+
+impl ModelInfo {
+    /// New info with conservative defaults; refine with the builder
+    /// methods.
+    pub fn new(name: impl Into<String>, summary: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            aliases: Vec::new(),
+            summary: summary.into(),
+            default_sizes: vec![1],
+            default_agents: 1_000,
+            paper_agents: 1_000,
+            default_steps: 10_000,
+            paper_steps: 10_000,
+            validate_steps: 10_000,
+            has_sync_form: false,
+        }
+    }
+
+    /// Set accepted aliases.
+    pub fn aliases(mut self, aliases: &[&str]) -> Self {
+        self.aliases = aliases.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    /// Set the default sweep grid.
+    pub fn sizes(mut self, sizes: &[usize]) -> Self {
+        self.default_sizes = sizes.to_vec();
+        self
+    }
+
+    /// Set scaled/paper agent counts.
+    pub fn agents(mut self, scaled: usize, paper: usize) -> Self {
+        self.default_agents = scaled;
+        self.paper_agents = paper;
+        self
+    }
+
+    /// Set scaled/paper step counts.
+    pub fn steps(mut self, scaled: u64, paper: u64) -> Self {
+        self.default_steps = scaled;
+        self.paper_steps = paper;
+        self
+    }
+
+    /// Set the validation-run step count.
+    pub fn validate_steps(mut self, steps: u64) -> Self {
+        self.validate_steps = steps;
+        self
+    }
+
+    /// Mark the model stepwise-capable.
+    pub fn sync(mut self) -> Self {
+        self.has_sync_form = true;
+        self
+    }
+
+    /// Agent count for a scale.
+    pub fn agents_for(&self, paper_scale: bool) -> usize {
+        if paper_scale {
+            self.paper_agents
+        } else {
+            self.default_agents
+        }
+    }
+
+    /// Step count for a scale.
+    pub fn steps_for(&self, paper_scale: bool) -> u64 {
+        if paper_scale {
+            self.paper_steps
+        } else {
+            self.default_steps
+        }
+    }
+}
+
+/// Everything a factory needs to instantiate a model for one run.
+#[derive(Clone, Debug, Default)]
+pub struct BuildCtx {
+    /// Task-size proxy (`F` for Axelrod, `s` for SIR; model-defined).
+    pub size: usize,
+    /// Number of agents `N`.
+    pub agents: usize,
+    /// Number of steps.
+    pub steps: u64,
+    /// Simulation seed (factories derive their init streams from it).
+    pub seed: u64,
+    /// Model-specific knobs.
+    pub params: Params,
+}
+
+type Factory = Arc<dyn Fn(&BuildCtx) -> Result<Box<dyn DynModel>> + Send + Sync>;
+
+struct ModelEntry {
+    info: ModelInfo,
+    factory: Factory,
+}
+
+/// A model registry. Most callers use the process-global one (via
+/// [`register`], [`build`], [`info`]); tests may hold private instances.
+#[derive(Default)]
+pub struct Registry {
+    entries: BTreeMap<String, ModelEntry>,
+    aliases: BTreeMap<String, String>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn empty() -> Self {
+        Self::default()
+    }
+
+    /// A registry pre-loaded with the five bundled models.
+    pub fn bundled() -> Self {
+        let mut r = Self::empty();
+        bundled::register_all(&mut r).expect("bundled model registration cannot conflict");
+        r
+    }
+
+    /// Register a model. Errors if the name or an alias is already taken.
+    pub fn register<F>(&mut self, info: ModelInfo, factory: F) -> Result<()>
+    where
+        F: Fn(&BuildCtx) -> Result<Box<dyn DynModel>> + Send + Sync + 'static,
+    {
+        crate::ensure!(
+            !self.entries.contains_key(&info.name) && !self.aliases.contains_key(&info.name),
+            "model `{}` is already registered",
+            info.name
+        );
+        for a in &info.aliases {
+            crate::ensure!(
+                !self.entries.contains_key(a) && !self.aliases.contains_key(a),
+                "model alias `{a}` is already registered"
+            );
+        }
+        for a in &info.aliases {
+            self.aliases.insert(a.clone(), info.name.clone());
+        }
+        self.entries.insert(
+            info.name.clone(),
+            ModelEntry {
+                info,
+                factory: Arc::new(factory),
+            },
+        );
+        Ok(())
+    }
+
+    fn resolve(&self, name: &str) -> Result<&ModelEntry> {
+        let key = self.aliases.get(name).map(String::as_str).unwrap_or(name);
+        self.entries.get(key).ok_or_else(|| {
+            crate::err!(
+                "unknown model `{name}`; registered models: {}",
+                self.names().join("|")
+            )
+        })
+    }
+
+    /// Canonical names of all registered models, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Whether a name (or alias) is registered.
+    pub fn contains(&self, name: &str) -> bool {
+        self.resolve(name).is_ok()
+    }
+
+    /// Metadata for a model.
+    pub fn info(&self, name: &str) -> Result<ModelInfo> {
+        Ok(self.resolve(name)?.info.clone())
+    }
+
+    /// Instantiate a model for one run.
+    pub fn build(&self, name: &str, ctx: &BuildCtx) -> Result<Box<dyn DynModel>> {
+        (self.resolve(name)?.factory)(ctx)
+    }
+
+    /// The factory for a model, cloned out (lets the global wrappers drop
+    /// the registry lock before running it — factories may re-enter the
+    /// registry).
+    fn factory(&self, name: &str) -> Result<Factory> {
+        Ok(Arc::clone(&self.resolve(name)?.factory))
+    }
+}
+
+fn global() -> &'static RwLock<Registry> {
+    static GLOBAL: OnceLock<RwLock<Registry>> = OnceLock::new();
+    GLOBAL.get_or_init(|| RwLock::new(Registry::bundled()))
+}
+
+/// Register a model in the process-global registry.
+pub fn register<F>(info: ModelInfo, factory: F) -> Result<()>
+where
+    F: Fn(&BuildCtx) -> Result<Box<dyn DynModel>> + Send + Sync + 'static,
+{
+    global().write().unwrap().register(info, factory)
+}
+
+/// Metadata for a globally-registered model.
+pub fn info(name: &str) -> Result<ModelInfo> {
+    global().read().unwrap().info(name)
+}
+
+/// Instantiate a globally-registered model. The registry lock is released
+/// before the factory runs, so factories may themselves call back into
+/// the registry (e.g. composite models building sub-models).
+pub fn build(name: &str, ctx: &BuildCtx) -> Result<Box<dyn DynModel>> {
+    let factory = global().read().unwrap().factory(name)?;
+    factory(ctx)
+}
+
+/// Names of all globally-registered models.
+pub fn model_names() -> Vec<String> {
+    global().read().unwrap().names()
+}
+
+/// Whether a name (or alias) is globally registered.
+pub fn is_registered(name: &str) -> bool {
+    global().read().unwrap().contains(name)
+}
+
+mod bundled {
+    //! Self-registration of the five bundled models. The factories carry
+    //! over the launcher's historical parameter mapping exactly (init-seed
+    //! xors included) so results stay bit-identical to the pre-registry
+    //! dispatch.
+
+    use super::*;
+    use crate::models::axelrod::{AxelrodModel, AxelrodParams};
+    use crate::models::ising::{IsingModel, IsingParams};
+    use crate::models::schelling::{SchellingModel, SchellingParams};
+    use crate::models::sir::{SirModel, SirParams};
+    use crate::models::voter::{VoterModel, VoterParams};
+    use crate::sim::graph::ring_lattice;
+
+    pub(super) fn register_all(r: &mut Registry) -> Result<()> {
+        register_axelrod(r)?;
+        register_sir(r)?;
+        register_voter(r)?;
+        register_ising(r)?;
+        register_schelling(r)?;
+        Ok(())
+    }
+
+    fn register_axelrod(r: &mut Registry) -> Result<()> {
+        let info = ModelInfo::new("axelrod", "Axelrod cultural dynamics (paper §4.1, Fig. 2)")
+            .aliases(&["cultural"])
+            .sizes(&[25, 50, 100, 200, 400, 800])
+            .agents(2_000, 10_000)
+            .steps(60_000, 2_000_000)
+            .validate_steps(20_000);
+        r.register(info, |ctx| {
+            let params = AxelrodParams {
+                agents: ctx.agents,
+                features: ctx.size.max(1),
+                traits: ctx.params.usize_or("traits", 3)? as u8,
+                omega: ctx.params.f64_or("omega", 0.95)?,
+                steps: ctx.steps,
+            };
+            let model = AxelrodModel::new(params, ctx.seed ^ 0x1217);
+            Ok(Runnable::new("axelrod", model)
+                .observed(|m| format!("traits[0..4]={:?}", &m.snapshot()[..4]))
+                .boxed())
+        })
+    }
+
+    fn register_sir(r: &mut Registry) -> Result<()> {
+        let info = ModelInfo::new("sir", "SIR epidemic on a ring lattice (paper §4.2, Fig. 3)")
+            .aliases(&["epidemic"])
+            .sizes(&[10, 20, 50, 100, 200, 500, 1000])
+            .agents(4_000, 4_000)
+            .steps(120, 3_000)
+            .validate_steps(60)
+            .sync();
+        r.register(info, |ctx| {
+            let params = SirParams {
+                agents: ctx.agents,
+                subset_size: ctx.size.max(1),
+                steps: ctx.steps,
+                degree: ctx.params.usize_or("degree", SirParams::default().degree)?,
+                p_si: ctx.params.f64_or("p_si", SirParams::default().p_si)?,
+                p_ir: ctx.params.f64_or("p_ir", SirParams::default().p_ir)?,
+                p_rs: ctx.params.f64_or("p_rs", SirParams::default().p_rs)?,
+                initial_infected: ctx
+                    .params
+                    .f64_or("initial_infected", SirParams::default().initial_infected)?,
+            };
+            let model = SirModel::new(params, ctx.seed ^ 0x51);
+            Ok(Runnable::new("sir", model)
+                .observed(|m| {
+                    let (s, i, r) = m.census();
+                    format!("census S={s} I={i} R={r}")
+                })
+                .with_sync()
+                .boxed())
+        })
+    }
+
+    fn register_voter(r: &mut Registry) -> Result<()> {
+        let info = ModelInfo::new("voter", "voter model on a ring lattice (extra)")
+            .sizes(&[1])
+            .agents(2_000, 2_000)
+            .steps(100_000, 100_000)
+            .validate_steps(20_000);
+        r.register(info, |ctx| {
+            let degree = ctx.params.usize_or("degree", 6)?;
+            let opinions = ctx.params.usize_or("opinions", 3)? as u8;
+            let model = VoterModel::new(
+                ring_lattice(ctx.agents, degree),
+                VoterParams {
+                    opinions,
+                    steps: ctx.steps,
+                },
+                ctx.seed ^ 0x70,
+            );
+            Ok(Runnable::new("voter", model)
+                .observed(|m| format!("tally={:?}", m.tally()))
+                .boxed())
+        })
+    }
+
+    fn register_ising(r: &mut Registry) -> Result<()> {
+        let info = ModelInfo::new("ising", "Ising/Glauber dynamics on a 2D torus (extra)")
+            .sizes(&[1])
+            .agents(64 * 64, 64 * 64)
+            .steps(100_000, 100_000)
+            .validate_steps(20_000);
+        r.register(info, |ctx| {
+            let side = ((ctx.agents as f64).sqrt() as usize).max(8);
+            let params = IsingParams {
+                side: ctx.params.usize_or("side", side)?,
+                temperature: ctx.params.f64_or("temperature", 2.269)?,
+                steps: ctx.steps,
+            };
+            let model = IsingModel::new(params, ctx.seed ^ 0x15);
+            Ok(Runnable::new("ising", model)
+                .observed(|m| format!("m={:+.4}", m.magnetization()))
+                .boxed())
+        })
+    }
+
+    fn register_schelling(r: &mut Registry) -> Result<()> {
+        let info = ModelInfo::new(
+            "schelling",
+            "Schelling segregation with moving agents (future-work extension)",
+        )
+        .sizes(&[1])
+        .agents(1_800, 1_800)
+        .steps(100_000, 100_000)
+        .validate_steps(20_000);
+        r.register(info, |ctx| {
+            // ~78% occupancy on the smallest torus that fits `agents`.
+            let side = ((ctx.agents as f64 / 0.78).sqrt().ceil() as usize).max(8);
+            let params = SchellingParams {
+                side: ctx.params.usize_or("side", side)?,
+                agents: ctx.agents,
+                tolerance: ctx.params.f64_or("tolerance", 0.4)?,
+                steps: ctx.steps,
+            };
+            let model = SchellingModel::new(params, ctx.seed ^ 0x5C);
+            Ok(Runnable::new("schelling", model)
+                .observed(|m| format!("segregation={:.4}", m.segregation()))
+                .checked(|m| m.check_consistency())
+                .boxed())
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundled_registry_knows_all_five_models() {
+        let r = Registry::bundled();
+        assert_eq!(
+            r.names(),
+            vec!["axelrod", "ising", "schelling", "sir", "voter"]
+        );
+        assert!(r.contains("cultural"), "alias resolves");
+        assert!(r.info("sir").unwrap().has_sync_form);
+        assert!(!r.info("axelrod").unwrap().has_sync_form);
+    }
+
+    #[test]
+    fn unknown_model_error_lists_registered_names() {
+        let r = Registry::bundled();
+        let e = r.info("nope").unwrap_err().to_string();
+        assert!(e.contains("unknown model `nope`"), "{e}");
+        for name in ["axelrod", "ising", "schelling", "sir", "voter"] {
+            assert!(e.contains(name), "{e} should list {name}");
+        }
+    }
+
+    #[test]
+    fn duplicate_registration_is_rejected() {
+        let mut r = Registry::bundled();
+        let err = r.register(ModelInfo::new("sir", "dup"), |_| {
+            unreachable!("factory never called")
+        });
+        assert!(err.is_err());
+        let err = r.register(ModelInfo::new("fresh", "aliased dup").aliases(&["cultural"]), |_| {
+            unreachable!("factory never called")
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn factory_builds_with_param_overrides() {
+        let r = Registry::bundled();
+        let mut params = Params::new();
+        params.set("omega", 0.5).set("traits", 4i64);
+        let m = r
+            .build(
+                "axelrod",
+                &BuildCtx {
+                    size: 8,
+                    agents: 50,
+                    steps: 10,
+                    seed: 1,
+                    params,
+                },
+            )
+            .unwrap();
+        assert_eq!(m.name(), "axelrod");
+        let rep = m.run_sequential(1);
+        assert_eq!(rep.totals.executed, 10);
+    }
+
+    #[test]
+    fn params_typed_getters() {
+        let mut p = Params::new();
+        p.set("n", 42i64).set("x", 1.5).set("flag", true).set("s", "hi");
+        assert_eq!(p.usize_or("n", 0).unwrap(), 42);
+        assert_eq!(p.u64_or("missing", 7).unwrap(), 7);
+        assert_eq!(p.f64_or("x", 0.0).unwrap(), 1.5);
+        assert_eq!(p.f64_or("n", 0.0).unwrap(), 42.0, "ints coerce to float");
+        assert!(p.bool_or("flag", false).unwrap());
+        assert!(p.usize_or("s", 0).is_err(), "type mismatch is an error");
+    }
+}

@@ -1,0 +1,308 @@
+//! The builder-style [`Simulation`] facade — the single entry point for
+//! running one simulation, used by the CLI, the sweep coordinator, the
+//! benches and the examples.
+//!
+//! ```no_run
+//! use adapar::{EngineKind, Simulation};
+//!
+//! let out = Simulation::builder()
+//!     .model("sir")
+//!     .agents(1_000_000)
+//!     .engine(EngineKind::Parallel)
+//!     .workers(8)
+//!     .seed(7)
+//!     .run()?;
+//! println!("{}: T={}s {}", out.report.engine, out.report.time_s, out.observable);
+//! # Ok::<(), adapar::error::Error>(())
+//! ```
+//!
+//! Models are resolved by name through the [registry](crate::api::registry),
+//! so anything registered there — bundled or user-defined — runs on any
+//! legal engine with no launcher edits.
+
+use crate::api::engine::{engine_for, EngineKind};
+use crate::api::registry::{self, BuildCtx, Params};
+use crate::error::Result;
+use crate::protocol::{ProtocolConfig, RunReport};
+use crate::util::toml::Value;
+use crate::vtime::CostModel;
+
+/// Outcome of one facade run.
+#[derive(Clone, Debug)]
+pub struct SimOutcome {
+    /// The engine's unified report (timings + protocol counters).
+    pub report: RunReport,
+    /// The model's post-run observable.
+    pub observable: String,
+}
+
+/// A fully-specified single simulation. Build with
+/// [`Simulation::builder`]; `0` values for `agents`/`steps`/`size` mean
+/// "use the model's registered default".
+#[derive(Clone, Debug)]
+pub struct Simulation {
+    /// Registry name of the model.
+    pub model: String,
+    /// Engine selector.
+    pub engine: EngineKind,
+    /// Worker count `n`.
+    pub workers: usize,
+    /// Per-cycle creation cap `C`.
+    pub tasks_per_cycle: u32,
+    /// Simulation seed.
+    pub seed: u64,
+    /// Agent count `N` (0 = model default).
+    pub agents: usize,
+    /// Step count (0 = model default).
+    pub steps: u64,
+    /// Task-size proxy (0 = first of the model's default grid).
+    pub size: usize,
+    /// Use the paper's full workload defaults.
+    pub paper_scale: bool,
+    /// Model-specific parameter bag.
+    pub params: Params,
+    /// Cost model for the virtual testbed (None = built-in defaults).
+    pub cost: Option<CostModel>,
+}
+
+impl Default for Simulation {
+    fn default() -> Self {
+        Self {
+            model: "axelrod".to_string(),
+            engine: EngineKind::Parallel,
+            workers: ProtocolConfig::default().workers,
+            tasks_per_cycle: 6,
+            seed: 1,
+            agents: 0,
+            steps: 0,
+            size: 0,
+            paper_scale: false,
+            params: Params::new(),
+            cost: None,
+        }
+    }
+}
+
+impl Simulation {
+    /// Start building a simulation.
+    pub fn builder() -> SimulationBuilder {
+        SimulationBuilder {
+            sim: Simulation::default(),
+        }
+    }
+
+    /// Run to completion: registry lookup → engine dispatch → post-run
+    /// consistency check.
+    pub fn run(&self) -> Result<SimOutcome> {
+        let info = registry::info(&self.model)?;
+        let ctx = BuildCtx {
+            size: if self.size != 0 {
+                self.size
+            } else {
+                info.default_sizes.first().copied().unwrap_or(1)
+            },
+            agents: if self.agents != 0 {
+                self.agents
+            } else {
+                info.agents_for(self.paper_scale)
+            },
+            steps: if self.steps != 0 {
+                self.steps
+            } else {
+                info.steps_for(self.paper_scale)
+            },
+            seed: self.seed,
+            params: self.params.clone(),
+        };
+        crate::ensure!(self.workers >= 1, "workers must be >= 1");
+        crate::ensure!(self.tasks_per_cycle >= 1, "tasks_per_cycle must be >= 1");
+        let model = registry::build(&self.model, &ctx)?;
+        let engine = engine_for(
+            self.engine,
+            self.workers,
+            self.tasks_per_cycle,
+            self.seed,
+            self.cost.unwrap_or_default(),
+        );
+        let report = engine.run(model.as_ref())?;
+        model.check_consistency()?;
+        Ok(SimOutcome {
+            report,
+            observable: model.observable(),
+        })
+    }
+}
+
+/// Builder for [`Simulation`].
+#[derive(Clone, Debug, Default)]
+pub struct SimulationBuilder {
+    sim: Simulation,
+}
+
+impl SimulationBuilder {
+    /// Model registry name (or alias).
+    pub fn model(mut self, name: impl Into<String>) -> Self {
+        self.sim.model = name.into();
+        self
+    }
+
+    /// Execution engine.
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.sim.engine = kind;
+        self
+    }
+
+    /// Execution engine by name (`"parallel"`, `"virtual"`, ...).
+    pub fn engine_name(mut self, name: &str) -> Result<Self> {
+        self.sim.engine = name.parse()?;
+        Ok(self)
+    }
+
+    /// Worker count `n`.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.sim.workers = n;
+        self
+    }
+
+    /// Per-cycle creation cap `C`.
+    pub fn tasks_per_cycle(mut self, c: u32) -> Self {
+        self.sim.tasks_per_cycle = c;
+        self
+    }
+
+    /// Simulation seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.sim.seed = seed;
+        self
+    }
+
+    /// Agent count `N` (0 = model default).
+    pub fn agents(mut self, n: usize) -> Self {
+        self.sim.agents = n;
+        self
+    }
+
+    /// Step count (0 = model default).
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.sim.steps = steps;
+        self
+    }
+
+    /// Task-size proxy (`F`/`s`; 0 = model default).
+    pub fn size(mut self, size: usize) -> Self {
+        self.sim.size = size;
+        self
+    }
+
+    /// Use the paper's full workload defaults.
+    pub fn paper_scale(mut self, on: bool) -> Self {
+        self.sim.paper_scale = on;
+        self
+    }
+
+    /// Set one model-specific parameter.
+    pub fn param(mut self, key: impl Into<String>, value: impl Into<Value>) -> Self {
+        self.sim.params.set(key, value);
+        self
+    }
+
+    /// Replace the whole parameter bag.
+    pub fn params(mut self, params: Params) -> Self {
+        self.sim.params = params;
+        self
+    }
+
+    /// Cost model for the virtual testbed.
+    pub fn cost(mut self, cost: CostModel) -> Self {
+        self.sim.cost = Some(cost);
+        self
+    }
+
+    /// Finish building without running.
+    pub fn build(self) -> Simulation {
+        self.sim
+    }
+
+    /// Build and run.
+    pub fn run(self) -> Result<SimOutcome> {
+        self.sim.run()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facade_runs_a_bundled_model_end_to_end() {
+        let out = Simulation::builder()
+            .model("sir")
+            .engine(EngineKind::Parallel)
+            .workers(2)
+            .agents(200)
+            .steps(20)
+            .size(20)
+            .seed(7)
+            .run()
+            .unwrap();
+        assert!(out.report.totals.executed > 0);
+        assert!(out.observable.starts_with("census"));
+        assert_eq!(out.report.engine, "parallel");
+    }
+
+    #[test]
+    fn facade_is_deterministic_across_engines() {
+        let run = |engine| {
+            Simulation::builder()
+                .model("voter")
+                .engine(engine)
+                .workers(3)
+                .agents(150)
+                .steps(2_000)
+                .seed(11)
+                .run()
+                .unwrap()
+                .observable
+        };
+        let seq = run(EngineKind::Sequential);
+        assert_eq!(run(EngineKind::Parallel), seq);
+        assert_eq!(run(EngineKind::Virtual), seq);
+    }
+
+    #[test]
+    fn unknown_model_and_engine_errors_list_choices() {
+        let err = Simulation::builder().model("martian").run().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown model `martian`"), "{msg}");
+        assert!(msg.contains("axelrod") && msg.contains("voter"), "{msg}");
+
+        let err = Simulation::builder().engine_name("warp").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown engine `warp`"), "{msg}");
+        assert!(msg.contains("parallel") && msg.contains("stepwise"), "{msg}");
+    }
+
+    #[test]
+    fn stepwise_requires_a_sync_model() {
+        let err = Simulation::builder()
+            .model("axelrod")
+            .engine(EngineKind::Stepwise)
+            .agents(100)
+            .steps(50)
+            .size(5)
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("no synchronous form"));
+
+        let ok = Simulation::builder()
+            .model("sir")
+            .engine(EngineKind::Stepwise)
+            .workers(2)
+            .agents(200)
+            .steps(10)
+            .size(20)
+            .run()
+            .unwrap();
+        assert_eq!(ok.report.engine, "stepwise");
+    }
+}

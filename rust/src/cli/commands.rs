@@ -1,15 +1,44 @@
-//! CLI subcommand implementations.
+//! CLI subcommand implementations — thin wrappers over the
+//! [`Simulation`] facade and the sweep coordinator. No per-model logic
+//! lives here: model names, defaults and parameters all resolve through
+//! the registry.
 
 use std::path::PathBuf;
 
-use anyhow::{Context, Result};
-
-use crate::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use crate::api::{registry, EngineKind, Params, Simulation};
+use crate::coordinator::config::SweepConfig;
 use crate::coordinator::report::{figure_pivot, write_report};
-use crate::coordinator::{run_once, run_sweep};
+use crate::coordinator::run_sweep;
+use crate::error::{Context, Result};
 use crate::util::bench::fmt_secs;
 use crate::util::cli::Args;
-use crate::vtime::{calibrate, CostModel};
+use crate::util::toml::Value;
+use crate::vtime::calibrate;
+
+/// Parse `--params k=v,k2=v2` into a bag, sniffing scalar types.
+fn params_from(args: &Args) -> Result<Params> {
+    let mut params = Params::new();
+    let Some(raw) = args.get("params") else {
+        return Ok(params);
+    };
+    for pair in raw.split(',').filter(|s| !s.trim().is_empty()) {
+        let (k, v) = pair
+            .split_once('=')
+            .with_context(|| format!("--params entry `{pair}` is not key=value"))?;
+        let v = v.trim();
+        let value = if let Ok(i) = v.parse::<i64>() {
+            Value::Int(i)
+        } else if let Ok(f) = v.parse::<f64>() {
+            Value::Float(f)
+        } else if let Ok(b) = v.parse::<bool>() {
+            Value::Bool(b)
+        } else {
+            Value::Str(v.to_string())
+        };
+        params.set(k.trim(), value);
+    }
+    Ok(params)
+}
 
 fn sweep_config_from(args: &Args) -> Result<SweepConfig> {
     let mut cfg = if let Some(path) = args.get("config") {
@@ -20,14 +49,12 @@ fn sweep_config_from(args: &Args) -> Result<SweepConfig> {
         SweepConfig::default()
     };
     if let Some(m) = args.get("model") {
-        cfg.model = m.parse()?;
-        // Model-appropriate default grid if none was given explicitly.
-        if args.get("sizes").is_none() && args.get("config").is_none() && args.get("preset").is_none() {
-            cfg.sizes = match cfg.model {
-                ModelKind::Axelrod => vec![25, 50, 100, 200, 400, 800],
-                ModelKind::Sir => vec![10, 20, 50, 100, 200, 500, 1000],
-                _ => vec![1],
-            };
+        cfg.model = m.to_string();
+        // Model-appropriate default grid if none was given explicitly: an
+        // empty `sizes` defers to the registry's per-model default.
+        if args.get("sizes").is_none() && args.get("config").is_none() && args.get("preset").is_none()
+        {
+            cfg.sizes = Vec::new();
         }
     }
     if let Some(e) = args.get("engine") {
@@ -45,35 +72,74 @@ fn sweep_config_from(args: &Args) -> Result<SweepConfig> {
     if args.has_flag("calibrate") {
         cfg.calibrate = true;
     }
+    // Per-key override on top of the config file's [params] table, like
+    // every other CLI option.
+    cfg.params.merge(&params_from(args)?);
     cfg.validate()?;
     Ok(cfg)
 }
 
-/// `adapar run` — one simulation, one line of truth.
-pub fn run(args: &Args) -> Result<()> {
-    let mut cfg = sweep_config_from(args)?;
-    if args.get("engine").is_none() {
-        cfg.engine = EngineKind::Parallel;
+/// `adapar models` — list every registered model with its defaults.
+pub fn models(_args: &Args) -> Result<()> {
+    println!("registered models:");
+    for name in registry::model_names() {
+        let info = registry::info(&name)?;
+        let engines = if info.has_sync_form {
+            "parallel|sequential|virtual|stepwise"
+        } else {
+            "parallel|sequential|virtual"
+        };
+        println!("  {:<10} {}", info.name, info.summary);
+        println!(
+            "  {:<10}   engines: {engines}; defaults: N={}, steps={}, sizes={:?}",
+            "", info.default_agents, info.default_steps, info.default_sizes
+        );
+        if !info.aliases.is_empty() {
+            println!("  {:<10}   aliases: {}", "", info.aliases.join(", "));
+        }
     }
+    Ok(())
+}
+
+/// `adapar run` — one simulation through the facade, one line of truth.
+pub fn run(args: &Args) -> Result<()> {
+    let cfg = sweep_config_from(args)?;
+    let engine = match args.get("engine") {
+        Some(e) => e.parse()?,
+        None => EngineKind::Parallel,
+    };
     let workers = args.get_parse("workers", 2usize)?;
-    let size = args.get_parse("size", *cfg.sizes.first().unwrap())?;
+    let size = args.get_parse(
+        "size",
+        cfg.effective_sizes().first().copied().unwrap_or(1),
+    )?;
     let seed = args.get_parse("seed", 1u64)?;
-    let cost = CostModel::default();
-    let out = run_once(&cfg, size, workers, seed, &cost)?;
+    let out = Simulation::builder()
+        .model(cfg.model.clone())
+        .engine(engine)
+        .workers(workers)
+        .tasks_per_cycle(cfg.tasks_per_cycle)
+        .seed(seed)
+        .agents(cfg.agents)
+        .steps(cfg.steps)
+        .size(size)
+        .paper_scale(cfg.paper_scale)
+        .params(cfg.params.clone())
+        .run()?;
     println!(
-        "model={} engine={} size={size} workers={workers} seed={seed}",
-        cfg.model, cfg.engine
+        "model={} engine={engine} size={size} workers={workers} seed={seed}",
+        cfg.model
     );
-    println!("T = {}", fmt_secs(out.time_s));
+    println!("T = {} ({})", fmt_secs(out.report.time_s), out.report.basis);
     println!(
         "tasks: executed={} created={} skipped={} passed={} retries={} cycles={} max_chain={}",
-        out.totals.executed,
-        out.totals.created,
-        out.totals.skipped_dependent,
-        out.totals.passed_executing,
-        out.totals.erased_retries,
-        out.totals.cycles,
-        out.max_chain_len
+        out.report.totals.executed,
+        out.report.totals.created,
+        out.report.totals.skipped_dependent,
+        out.report.totals.passed_executing,
+        out.report.totals.erased_retries,
+        out.report.totals.cycles,
+        out.report.chain.max_chain_len
     );
     println!("observable: {}", out.observable);
     Ok(())
@@ -91,7 +157,7 @@ pub fn sweep(args: &Args) -> Result<()> {
         "sweep: model={} engine={} sizes={:?} workers={:?} seeds={:?} (N={}, steps={})",
         cfg.model,
         cfg.engine,
-        cfg.sizes,
+        cfg.effective_sizes(),
         cfg.workers,
         cfg.seeds,
         cfg.effective_agents(),
@@ -100,7 +166,11 @@ pub fn sweep(args: &Args) -> Result<()> {
     let res = run_sweep(&cfg)?;
     println!("{}", figure_pivot(&res).to_markdown());
     let csv = write_report(&res, &out_dir, &stem)?;
-    eprintln!("wrote {} and {}", csv.display(), out_dir.join(format!("{stem}.md")).display());
+    eprintln!(
+        "wrote {} and {}",
+        csv.display(),
+        out_dir.join(format!("{stem}.md")).display()
+    );
     Ok(())
 }
 
@@ -126,47 +196,54 @@ pub fn validate(args: &Args) -> Result<()> {
     let mut cfg = sweep_config_from(args)?;
     cfg.engine = EngineKind::Parallel;
     let workers = args.get_list::<usize>("workers", &[1, 2, 3, 4])?;
-    let size = args.get_parse("size", *cfg.sizes.first().unwrap())?;
+    let size = args.get_parse(
+        "size",
+        cfg.effective_sizes().first().copied().unwrap_or(1),
+    )?;
     let seed = args.get_parse("seed", 1u64)?;
     // Shrink default workloads: validation is about equality, not timing.
     if cfg.steps == 0 {
-        cfg.steps = match cfg.model {
-            ModelKind::Axelrod | ModelKind::Voter | ModelKind::Ising | ModelKind::Schelling => 20_000,
-            ModelKind::Sir => 60,
-        };
+        cfg.steps = registry::info(&cfg.model)?.validate_steps;
     }
     if cfg.agents == 0 {
         cfg.agents = 500;
     }
-    let cost = CostModel::default();
-
-    let reference = {
-        let mut c = cfg.clone();
-        c.engine = EngineKind::Sequential;
-        run_once(&c, size, 1, seed, &cost)?.observable
+    let sim = |engine: EngineKind, workers: usize| {
+        Simulation::builder()
+            .model(cfg.model.clone())
+            .engine(engine)
+            .workers(workers)
+            .tasks_per_cycle(cfg.tasks_per_cycle)
+            .seed(seed)
+            .agents(cfg.agents)
+            .steps(cfg.steps)
+            .size(size)
+            .params(cfg.params.clone())
+            .run()
     };
+
+    let reference = sim(EngineKind::Sequential, 1)?.observable;
     println!("sequential reference: {reference}");
     let mut all_ok = true;
     for &n in &workers {
-        let got = run_once(&cfg, size, n, seed, &cost)?.observable;
+        let got = sim(EngineKind::Parallel, n)?.observable;
         let ok = got == reference;
         all_ok &= ok;
         println!("parallel n={n}: {} ({got})", if ok { "OK" } else { "MISMATCH" });
     }
     {
-        let mut c = cfg.clone();
-        c.engine = EngineKind::Virtual;
-        let got = run_once(&c, size, 3, seed, &cost)?.observable;
+        let got = sim(EngineKind::Virtual, 3)?.observable;
         let ok = got == reference;
         all_ok &= ok;
         println!("virtual  n=3: {} ({got})", if ok { "OK" } else { "MISMATCH" });
     }
-    anyhow::ensure!(all_ok, "validation failed: engines disagree");
+    crate::ensure!(all_ok, "validation failed: engines disagree");
     println!("validation passed: all engines agree on the model observable");
     Ok(())
 }
 
 /// `adapar artifacts-check` — compile all AOT artifacts, smoke-test one.
+#[cfg(feature = "xla")]
 pub fn artifacts_check(_args: &Args) -> Result<()> {
     use crate::runtime::{Manifest, XlaRuntime};
     let dir = Manifest::default_dir();
@@ -188,9 +265,18 @@ pub fn artifacts_check(_args: &Args) -> Result<()> {
         let mut tgt = vec![1i32; f];
         tgt[0] = 2;
         let out = interactor.interact(&src, &tgt, 0.0, 0.0)?;
-        anyhow::ensure!(out == src, "smoke interaction should copy the differing trait");
+        crate::ensure!(out == src, "smoke interaction should copy the differing trait");
         println!("  axelrod kernel smoke ... OK (copied differing trait)");
     }
     println!("artifacts check passed");
     Ok(())
+}
+
+/// `adapar artifacts-check` without the `xla` feature: a clear refusal.
+#[cfg(not(feature = "xla"))]
+pub fn artifacts_check(_args: &Args) -> Result<()> {
+    crate::bail!(
+        "adapar was built without the `xla` feature; rebuild with \
+         `--features xla` (requires the PJRT/XLA toolchain) to check artifacts"
+    )
 }

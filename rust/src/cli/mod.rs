@@ -4,6 +4,7 @@
 //! adapar run        --model sir --engine parallel --workers 4 --size 50
 //! adapar sweep      --preset fig3 [--engine virtual] [--out target/figures]
 //! adapar sweep      --config experiments/fig2.toml
+//! adapar models
 //! adapar calibrate
 //! adapar validate   --model axelrod [--workers 1,2,4]
 //! adapar artifacts-check
@@ -11,14 +12,13 @@
 
 pub mod commands;
 
-use anyhow::{bail, Result};
-
+use crate::error::Result;
 use crate::util::cli::{Args, Spec};
 
 const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
-        "c", "config", "preset", "out", "sample",
+        "c", "config", "preset", "out", "sample", "params",
     ],
     flags: &["paper-scale", "calibrate", "help"],
 };
@@ -32,12 +32,13 @@ USAGE:
 COMMANDS:
   run              run one simulation and print timing + protocol counters
   sweep            run a (size × workers × seeds) grid and emit figure data
+  models           list every registered model (bundled + user-registered)
   calibrate        measure this machine's protocol micro-action costs
   validate         assert parallel == sequential bit-for-bit for a model
   artifacts-check  compile every AOT artifact and smoke-test the XLA path
 
 COMMON OPTIONS:
-  --model <axelrod|sir|voter|ising>     model under test [axelrod]
+  --model <name>                        any registered model (see `adapar models`) [axelrod]
   --engine <parallel|sequential|virtual|stepwise>
                                         execution engine [run: parallel, sweep: virtual]
   --workers <n | list>                  worker count(s) [run: 2, sweep: 1,2,3,4,5]
@@ -45,6 +46,7 @@ COMMON OPTIONS:
   --seeds <list> / --seed <s>           simulation seeds
   --steps <n> / --agents <n>            workload overrides
   --c <n>                               tasks-per-cycle cap C [6]
+  --params <k=v,k2=v2>                  model-specific parameters (registry bag)
   --config <file.toml>                  sweep config file (experiments/*.toml)
   --preset <fig2|fig3>                  paper-figure sweep preset
   --out <dir>                           output dir for sweep reports [target/figures]
@@ -63,9 +65,10 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
     match args.subcommand.as_deref().unwrap() {
         "run" => commands::run(&args),
         "sweep" => commands::sweep(&args),
+        "models" => commands::models(&args),
         "calibrate" => commands::calibrate_cmd(&args),
         "validate" => commands::validate(&args),
         "artifacts-check" => commands::artifacts_check(&args),
-        other => bail!("unknown command `{other}`; try --help"),
+        other => crate::bail!("unknown command `{other}`; try --help"),
     }
 }

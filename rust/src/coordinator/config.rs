@@ -1,106 +1,30 @@
 //! Experiment configuration: TOML files with CLI overrides.
 //!
-//! A sweep config names the model, the engine(s), the grid (task-size
-//! proxy values × worker counts × seeds) and the workload scale. Preset
-//! files for the paper's figures live in `experiments/` (`fig2.toml`,
-//! `fig3.toml`).
+//! A sweep config names the model (a **registry name** — bundled or
+//! user-registered), the engine, the grid (task-size proxy values ×
+//! worker counts × seeds) and the workload scale. Model-specific knobs go
+//! in the `[params]` table and reach the model factory as a
+//! [`Params`] bag. Preset files for the paper's figures live in
+//! `experiments/` (`fig2.toml`, `fig3.toml`).
 
 use std::path::Path;
-use std::str::FromStr;
 
-use anyhow::{bail, Context, Result};
-
+use crate::api::registry;
+use crate::api::Params;
+use crate::error::{Context, Result};
 use crate::util::toml::{parse, Value};
 
-/// Which MABS model.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum ModelKind {
-    /// Axelrod cultural dynamics (§4.1, Fig. 2).
-    Axelrod,
-    /// SIR disease spreading (§4.2, Fig. 3).
-    Sir,
-    /// Voter model (extra).
-    Voter,
-    /// Ising/Glauber (extra).
-    Ising,
-    /// Schelling segregation with moving agents (future-work extension).
-    Schelling,
-}
-
-impl FromStr for ModelKind {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Self> {
-        Ok(match s {
-            "axelrod" | "cultural" => ModelKind::Axelrod,
-            "sir" | "epidemic" => ModelKind::Sir,
-            "voter" => ModelKind::Voter,
-            "ising" => ModelKind::Ising,
-            "schelling" => ModelKind::Schelling,
-            other => bail!("unknown model `{other}` (axelrod|sir|voter|ising|schelling)"),
-        })
-    }
-}
-
-impl std::fmt::Display for ModelKind {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            ModelKind::Axelrod => "axelrod",
-            ModelKind::Sir => "sir",
-            ModelKind::Voter => "voter",
-            ModelKind::Ising => "ising",
-            ModelKind::Schelling => "schelling",
-        };
-        f.write_str(s)
-    }
-}
-
-/// Which execution engine.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum EngineKind {
-    /// The paper's adaptive protocol on real threads.
-    Parallel,
-    /// Canonical single-threaded execution.
-    Sequential,
-    /// The virtual-core testbed (reproduces multi-core figures on a
-    /// single-core host).
-    Virtual,
-    /// The barrier-based step-parallel baseline (synchronous models only).
-    Stepwise,
-}
-
-impl FromStr for EngineKind {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Self> {
-        Ok(match s {
-            "parallel" | "protocol" => EngineKind::Parallel,
-            "sequential" | "seq" => EngineKind::Sequential,
-            "virtual" | "vtime" => EngineKind::Virtual,
-            "stepwise" | "barrier" => EngineKind::Stepwise,
-            other => bail!("unknown engine `{other}` (parallel|sequential|virtual|stepwise)"),
-        })
-    }
-}
-
-impl std::fmt::Display for EngineKind {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let s = match self {
-            EngineKind::Parallel => "parallel",
-            EngineKind::Sequential => "sequential",
-            EngineKind::Virtual => "virtual",
-            EngineKind::Stepwise => "stepwise",
-        };
-        f.write_str(s)
-    }
-}
+pub use crate::api::EngineKind;
 
 /// A full sweep specification.
 #[derive(Clone, Debug)]
 pub struct SweepConfig {
-    /// Model under test.
-    pub model: ModelKind,
+    /// Registry name of the model under test.
+    pub model: String,
     /// Engine producing the T values.
     pub engine: EngineKind,
-    /// Task-size proxy values (`F` for Axelrod, `s` for SIR).
+    /// Task-size proxy values (`F` for Axelrod, `s` for SIR). Empty means
+    /// "use the model's registered default grid".
     pub sizes: Vec<usize>,
     /// Worker counts (the figures' `n`).
     pub workers: Vec<usize>,
@@ -108,23 +32,25 @@ pub struct SweepConfig {
     pub seeds: Vec<u64>,
     /// `C` — max creations per worker cycle (paper: 6, effect negligible).
     pub tasks_per_cycle: u32,
-    /// Number of agents `N` (0 = per-scale default).
+    /// Number of agents `N` (0 = per-scale model default).
     pub agents: usize,
-    /// Steps (0 = per-scale default).
+    /// Steps (0 = per-scale model default).
     pub steps: u64,
     /// Use the paper's full workload sizes.
     pub paper_scale: bool,
     /// Calibrate the virtual cost model from native microbenches instead
     /// of the built-in defaults.
     pub calibrate: bool,
+    /// Model-specific parameters forwarded to the registry factory.
+    pub params: Params,
 }
 
 impl Default for SweepConfig {
     fn default() -> Self {
         Self {
-            model: ModelKind::Axelrod,
+            model: "axelrod".to_string(),
             engine: EngineKind::Virtual,
-            sizes: vec![25, 50, 100, 200, 400, 800],
+            sizes: Vec::new(),
             workers: vec![1, 2, 3, 4, 5],
             seeds: vec![1, 2, 3, 4, 5],
             tasks_per_cycle: 6,
@@ -132,6 +58,7 @@ impl Default for SweepConfig {
             steps: 0,
             paper_scale: false,
             calibrate: false,
+            params: Params::new(),
         }
     }
 }
@@ -141,54 +68,52 @@ impl SweepConfig {
     pub fn preset(name: &str) -> Result<Self> {
         Ok(match name {
             "fig2" => Self {
-                model: ModelKind::Axelrod,
+                model: "axelrod".to_string(),
                 sizes: vec![25, 50, 100, 200, 400, 800],
                 ..Default::default()
             },
             "fig3" => Self {
-                model: ModelKind::Sir,
+                model: "sir".to_string(),
                 sizes: vec![10, 20, 50, 100, 200, 500, 1000],
                 ..Default::default()
             },
-            other => bail!("unknown preset `{other}` (fig2|fig3)"),
+            other => crate::bail!("unknown preset `{other}` (fig2|fig3)"),
         })
     }
 
-    /// Effective agent count for the current scale.
+    /// Effective agent count for the current scale (registry default when
+    /// unset).
     pub fn effective_agents(&self) -> usize {
         if self.agents != 0 {
             return self.agents;
         }
-        match (self.model, self.paper_scale) {
-            (ModelKind::Axelrod, true) => 10_000,
-            (ModelKind::Axelrod, false) => 2_000,
-            (ModelKind::Sir, true) => 4_000,
-            (ModelKind::Sir, false) => 4_000, // N is modest already
-            (ModelKind::Voter, _) => 2_000,
-            (ModelKind::Ising, _) => 64 * 64,
-            (ModelKind::Schelling, _) => 1_800,
-        }
+        registry::info(&self.model)
+            .map(|i| i.agents_for(self.paper_scale))
+            .unwrap_or(1_000)
     }
 
-    /// Effective step count for the current scale.
+    /// Effective step count for the current scale (registry default when
+    /// unset).
     pub fn effective_steps(&self) -> u64 {
         if self.steps != 0 {
             return self.steps;
         }
-        match (self.model, self.paper_scale) {
-            (ModelKind::Axelrod, true) => 2_000_000,
-            (ModelKind::Axelrod, false) => 60_000,
-            (ModelKind::Sir, true) => 3_000,
-            (ModelKind::Sir, false) => 120,
-            (ModelKind::Voter, _) => 100_000,
-            (ModelKind::Ising, _) => 100_000,
-            (ModelKind::Schelling, _) => 100_000,
-        }
+        registry::info(&self.model)
+            .map(|i| i.steps_for(self.paper_scale))
+            .unwrap_or(10_000)
     }
 
-    /// Load from a TOML file, then apply this config's non-default CLI
-    /// overrides on top? No — the file is the base; callers override
-    /// explicitly. Returns the parsed config.
+    /// The size grid: explicit values, or the model's registered default.
+    pub fn effective_sizes(&self) -> Vec<usize> {
+        if !self.sizes.is_empty() {
+            return self.sizes.clone();
+        }
+        registry::info(&self.model)
+            .map(|i| i.default_sizes)
+            .unwrap_or_else(|_| vec![1])
+    }
+
+    /// Load from a TOML file.
     pub fn from_file<P: AsRef<Path>>(path: P) -> Result<Self> {
         let text = std::fs::read_to_string(path.as_ref())
             .with_context(|| format!("reading {}", path.as_ref().display()))?;
@@ -197,10 +122,10 @@ impl SweepConfig {
 
     /// Parse from TOML text.
     pub fn from_toml(text: &str) -> Result<Self> {
-        let root = parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let root = parse(text)?;
         let mut cfg = SweepConfig::default();
         if let Some(v) = root.get("model") {
-            cfg.model = v.as_str().context("model must be a string")?.parse()?;
+            cfg.model = v.as_str().context("model must be a string")?.to_string();
         }
         if let Some(v) = root.get("engine") {
             cfg.engine = v.as_str().context("engine must be a string")?.parse()?;
@@ -229,25 +154,31 @@ impl SweepConfig {
         if let Some(v) = root.get("calibrate") {
             cfg.calibrate = v.as_bool().context("calibrate")?;
         }
+        if let Some(v) = root.get("params") {
+            cfg.params = Params::from_table(v.as_table().context("params must be a table")?);
+        }
         cfg.validate()?;
         Ok(cfg)
     }
 
-    /// Sanity checks.
+    /// Sanity checks (consults the global model registry, so a model
+    /// registered at runtime validates with zero coordinator edits).
     pub fn validate(&self) -> Result<()> {
-        if self.sizes.is_empty() || self.workers.is_empty() || self.seeds.is_empty() {
-            bail!("sizes, workers and seeds must be non-empty");
+        if self.workers.is_empty() || self.seeds.is_empty() {
+            crate::bail!("workers and seeds must be non-empty");
         }
         if self.workers.iter().any(|&w| w == 0 || w > 64) {
-            bail!("workers must be in 1..=64");
+            crate::bail!("workers must be in 1..=64");
         }
         if self.tasks_per_cycle == 0 {
-            bail!("tasks_per_cycle must be >= 1");
+            crate::bail!("tasks_per_cycle must be >= 1");
         }
-        if self.engine == EngineKind::Stepwise && self.model != ModelKind::Sir {
-            bail!(
-                "the stepwise baseline requires a synchronous model; only `sir` has one \
-                 (that is the paper's point about sequential-form models)"
+        let info = registry::info(&self.model)?;
+        if self.engine == EngineKind::Stepwise && !info.has_sync_form {
+            crate::bail!(
+                "the stepwise baseline requires a synchronous model; `{}` has none \
+                 (that is the paper's point about sequential-form models)",
+                self.model
             );
         }
         Ok(())
@@ -255,7 +186,12 @@ impl SweepConfig {
 }
 
 fn int_list(v: &Value, what: &str) -> Result<Vec<usize>> {
-    let arr = v.as_array().with_context(|| format!("{what} must be an array"))?;
+    let arr = v
+        .as_array()
+        .with_context(|| format!("{what} must be an array"))?;
+    if arr.is_empty() {
+        crate::bail!("{what} must be non-empty");
+    }
     arr.iter()
         .map(|x| {
             x.as_int()
@@ -289,38 +225,53 @@ seeds = [7]
 tasks_per_cycle = 2
 steps = 99
 paper_scale = false
+
+[params]
+p_si = 0.5
+degree = 10
 "#,
         )
         .unwrap();
-        assert_eq!(cfg.model, ModelKind::Sir);
+        assert_eq!(cfg.model, "sir");
         assert_eq!(cfg.engine, EngineKind::Virtual);
         assert_eq!(cfg.sizes, vec![10, 50]);
         assert_eq!(cfg.workers, vec![1, 4]);
         assert_eq!(cfg.seeds, vec![7]);
         assert_eq!(cfg.effective_steps(), 99);
+        assert_eq!(cfg.params.f64_or("p_si", 0.8).unwrap(), 0.5);
+        assert_eq!(cfg.params.usize_or("degree", 14).unwrap(), 10);
     }
 
     #[test]
-    fn stepwise_requires_sir() {
+    fn stepwise_requires_a_sync_model() {
         let err = SweepConfig::from_toml("model = \"axelrod\"\nengine = \"stepwise\"");
         assert!(err.is_err());
+        let ok = SweepConfig::from_toml("model = \"sir\"\nengine = \"stepwise\"");
+        assert!(ok.is_ok());
     }
 
     #[test]
-    fn scale_defaults() {
+    fn scale_defaults_come_from_the_registry() {
         let mut cfg = SweepConfig::default();
         assert_eq!(cfg.effective_agents(), 2_000);
         cfg.paper_scale = true;
         assert_eq!(cfg.effective_agents(), 10_000);
         assert_eq!(cfg.effective_steps(), 2_000_000);
+        assert_eq!(cfg.effective_sizes(), vec![25, 50, 100, 200, 400, 800]);
+        cfg.sizes = vec![3];
+        assert_eq!(cfg.effective_sizes(), vec![3]);
     }
 
     #[test]
-    fn model_and_engine_roundtrip() {
-        for m in ["axelrod", "sir", "voter", "ising"] {
-            let k: ModelKind = m.parse().unwrap();
-            assert_eq!(k.to_string(), m);
-        }
+    fn unknown_model_is_rejected_with_a_listing() {
+        let err = SweepConfig::from_toml("model = \"nope\"").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown model `nope`"), "{msg}");
+        assert!(msg.contains("axelrod"), "{msg}");
+    }
+
+    #[test]
+    fn engine_roundtrip() {
         for e in ["parallel", "sequential", "virtual", "stepwise"] {
             let k: EngineKind = e.parse().unwrap();
             assert_eq!(k.to_string(), e);

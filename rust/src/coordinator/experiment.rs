@@ -1,12 +1,12 @@
 //! The sweep grid runner: `sizes × workers × seeds`, with per-point SEM
 //! aggregation — the paper's experimental methodology.
 
-use anyhow::Result;
-
-use crate::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use crate::api::registry::{self, BuildCtx};
+use crate::coordinator::config::{EngineKind, SweepConfig};
 use crate::coordinator::runner::run_once;
+use crate::error::Result;
 use crate::util::stats::Online;
-use crate::vtime::{calibrate, calibrate_exec, CostModel};
+use crate::vtime::{calibrate, CostModel};
 
 /// Aggregated result for one `(size, workers)` grid point.
 #[derive(Clone, Debug)]
@@ -56,86 +56,40 @@ impl SweepResult {
 
 /// Build the cost model for a sweep: built-in defaults, or calibrated
 /// protocol costs plus a per-model exec-unit measurement at a
-/// representative size.
-pub fn sweep_cost_model(cfg: &SweepConfig) -> CostModel {
+/// representative size. Model-agnostic: the throwaway calibration
+/// instance comes from the registry and measures itself through
+/// [`crate::api::DynModel::calibrate_exec_unit`].
+pub fn sweep_cost_model(cfg: &SweepConfig) -> Result<CostModel> {
     if !cfg.calibrate {
-        return CostModel::default();
+        return Ok(CostModel::default());
     }
     let mut cost = calibrate();
     // Calibrate exec-unit cost on a mid-grid throwaway instance.
-    let size = cfg.sizes[cfg.sizes.len() / 2];
+    let sizes = cfg.effective_sizes();
+    let size = sizes.get(sizes.len() / 2).copied().unwrap_or(1);
     let sample = 4_000u64;
-    match cfg.model {
-        ModelKind::Axelrod => {
-            let m = crate::models::axelrod::AxelrodModel::new(
-                crate::models::axelrod::AxelrodParams {
-                    agents: cfg.effective_agents(),
-                    features: size,
-                    traits: 3,
-                    omega: 0.95,
-                    steps: sample,
-                },
-                0,
-            );
-            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
-        }
-        ModelKind::Sir => {
-            let m = crate::models::sir::SirModel::new(
-                crate::models::sir::SirParams {
-                    agents: cfg.effective_agents(),
-                    subset_size: size,
-                    steps: 8,
-                    ..Default::default()
-                },
-                0,
-            );
-            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
-        }
-        ModelKind::Voter => {
-            let m = crate::models::voter::VoterModel::new(
-                crate::sim::graph::ring_lattice(cfg.effective_agents(), 6),
-                crate::models::voter::VoterParams {
-                    opinions: 3,
-                    steps: sample,
-                },
-                0,
-            );
-            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
-        }
-        ModelKind::Ising => {
-            let m = crate::models::ising::IsingModel::new(
-                crate::models::ising::IsingParams {
-                    side: 48,
-                    temperature: 2.269,
-                    steps: sample,
-                },
-                0,
-            );
-            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
-        }
-        ModelKind::Schelling => {
-            let m = crate::models::schelling::SchellingModel::new(
-                crate::models::schelling::SchellingParams {
-                    side: 48,
-                    agents: 1_800,
-                    tolerance: 0.4,
-                    steps: sample,
-                },
-                0,
-            );
-            cost.exec_unit_ns = calibrate_exec(&m, sample, &cost).0;
-        }
-    }
-    cost
+    let throwaway = registry::build(
+        &cfg.model,
+        &BuildCtx {
+            size,
+            agents: cfg.effective_agents(),
+            steps: cfg.effective_steps(),
+            seed: 0,
+            params: cfg.params.clone(),
+        },
+    )?;
+    cost.exec_unit_ns = throwaway.calibrate_exec_unit(sample, &cost);
+    Ok(cost)
 }
 
 /// Run the full grid. Progress goes to the log; figure emission is the
 /// caller's job (`coordinator::report`).
 pub fn run_sweep(cfg: &SweepConfig) -> Result<SweepResult> {
     cfg.validate()?;
-    let cost = sweep_cost_model(cfg);
-    let mut points = Vec::with_capacity(cfg.sizes.len() * cfg.workers.len());
-    for &size in &cfg.sizes {
+    let cost = sweep_cost_model(cfg)?;
+    let sizes = cfg.effective_sizes();
+    let mut points = Vec::with_capacity(sizes.len() * cfg.workers.len());
+    for &size in &sizes {
         for &workers in &cfg.workers {
             if workers > 1 && cfg.engine == EngineKind::Sequential {
                 continue; // sequential has no worker dimension
@@ -186,7 +140,7 @@ mod tests {
 
     fn tiny_sweep(engine: EngineKind) -> SweepConfig {
         SweepConfig {
-            model: ModelKind::Sir,
+            model: "sir".to_string(),
             engine,
             sizes: vec![15, 60],
             workers: vec![1, 3],

@@ -13,6 +13,6 @@ pub mod experiment;
 pub mod report;
 pub mod runner;
 
-pub use config::{EngineKind, ModelKind, SweepConfig};
+pub use config::{EngineKind, SweepConfig};
 pub use experiment::{run_sweep, PointResult, SweepResult};
-pub use runner::{run_once, RunOutcome};
+pub use runner::{run_once, simulation_for, RunOutcome};

@@ -4,9 +4,8 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::Result;
-
 use crate::coordinator::experiment::SweepResult;
+use crate::error::Result;
 use crate::util::bench::fmt_secs;
 use crate::util::csv::Table;
 
@@ -17,7 +16,7 @@ pub fn long_table(res: &SweepResult) -> Table {
     ]);
     for p in &res.points {
         t.push([
-            res.config.model.to_string(),
+            res.config.model.clone(),
             res.config.engine.to_string(),
             p.size.to_string(),
             p.workers.to_string(),
@@ -84,12 +83,12 @@ pub fn write_report(res: &SweepResult, dir: &Path, stem: &str) -> Result<PathBuf
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+    use crate::coordinator::config::{EngineKind, SweepConfig};
     use crate::coordinator::experiment::run_sweep;
 
     fn result() -> SweepResult {
         run_sweep(&SweepConfig {
-            model: ModelKind::Sir,
+            model: "sir".to_string(),
             engine: EngineKind::Virtual,
             sizes: vec![20, 40],
             workers: vec![1, 2],

@@ -1,25 +1,19 @@
-//! Single-run dispatch: build the configured model, run it on the chosen
-//! engine, return timing + protocol counters + model observables.
+//! Single-run dispatch: one registry lookup + one engine dispatch through
+//! the [`Simulation`] facade. No per-model or per-engine matching happens
+//! here — a model registered at runtime is runnable from sweeps and the
+//! CLI with zero edits to this file.
 
-use anyhow::Result;
-
-use crate::coordinator::config::{EngineKind, ModelKind, SweepConfig};
-use crate::models::axelrod::{AxelrodModel, AxelrodParams};
-use crate::models::ising::{IsingModel, IsingParams};
-use crate::models::schelling::{SchellingModel, SchellingParams};
-use crate::models::sir::{SirModel, SirParams};
-use crate::models::voter::{VoterModel, VoterParams};
-use crate::protocol::{
-    ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine, WorkerStats,
-};
-use crate::sim::graph::ring_lattice;
-use crate::vtime::{CostModel, VirtualEngine};
+use crate::api::{SimOutcome, Simulation};
+use crate::coordinator::config::SweepConfig;
+use crate::error::Result;
+use crate::protocol::WorkerStats;
+use crate::vtime::CostModel;
 
 /// Outcome of one run.
 #[derive(Clone, Debug)]
 pub struct RunOutcome {
     /// The measured `T` in seconds (wall clock, or virtual time for the
-    /// virtual engine).
+    /// virtual engine — see `RunReport::basis`).
     pub time_s: f64,
     /// Aggregated protocol counters (zeroed for sequential/stepwise).
     pub totals: WorkerStats,
@@ -29,13 +23,38 @@ pub struct RunOutcome {
     pub observable: String,
 }
 
-fn outcome_from_report(report: &RunReport, observable: String) -> RunOutcome {
-    RunOutcome {
-        time_s: report.wall.as_secs_f64(),
-        totals: report.totals.clone(),
-        max_chain_len: report.chain.max_chain_len,
-        observable,
+impl From<SimOutcome> for RunOutcome {
+    fn from(out: SimOutcome) -> Self {
+        RunOutcome {
+            time_s: out.report.time_s,
+            totals: out.report.totals,
+            max_chain_len: out.report.chain.max_chain_len,
+            observable: out.observable,
+        }
     }
+}
+
+/// The facade invocation for one `(size, workers, seed)` point of a sweep.
+pub fn simulation_for(
+    cfg: &SweepConfig,
+    size: usize,
+    workers: usize,
+    seed: u64,
+    cost: &CostModel,
+) -> Simulation {
+    Simulation::builder()
+        .model(cfg.model.clone())
+        .engine(cfg.engine)
+        .workers(workers)
+        .tasks_per_cycle(cfg.tasks_per_cycle)
+        .seed(seed)
+        .agents(cfg.agents)
+        .steps(cfg.steps)
+        .size(size)
+        .paper_scale(cfg.paper_scale)
+        .params(cfg.params.clone())
+        .cost(*cost)
+        .build()
 }
 
 /// Run one `(size, workers, seed)` point of a sweep. `cost` supplies the
@@ -47,205 +66,19 @@ pub fn run_once(
     seed: u64,
     cost: &CostModel,
 ) -> Result<RunOutcome> {
-    let agents = cfg.effective_agents();
-    let steps = cfg.effective_steps();
-    match cfg.model {
-        ModelKind::Axelrod => {
-            let params = AxelrodParams {
-                agents,
-                features: size,
-                traits: 3,
-                omega: 0.95,
-                steps,
-            };
-            let model = AxelrodModel::new(params, seed ^ 0x1217);
-            let obs = |m: &AxelrodModel| format!("traits[0..4]={:?}", &m.snapshot()[..4]);
-            Ok(match cfg.engine {
-                EngineKind::Sequential => {
-                    let r = SequentialEngine::new(seed).run(&model);
-                    outcome_from_report(&r, obs(&model))
-                }
-                EngineKind::Parallel => {
-                    let r = ParallelEngine::new(ProtocolConfig {
-                        workers,
-                        tasks_per_cycle: cfg.tasks_per_cycle,
-                        seed,
-                        collect_timing: false,
-                    })
-                    .run(&model);
-                    outcome_from_report(&r, obs(&model))
-                }
-                EngineKind::Virtual => {
-                    let r = VirtualEngine {
-                        workers,
-                        tasks_per_cycle: cfg.tasks_per_cycle,
-                        seed,
-                        cost: *cost,
-                    }
-                    .run(&model);
-                    RunOutcome {
-                        time_s: r.virtual_time_s,
-                        totals: r.totals,
-                        max_chain_len: r.chain.max_chain_len,
-                        observable: obs(&model),
-                    }
-                }
-                EngineKind::Stepwise => anyhow::bail!("axelrod has no synchronous form"),
-            })
-        }
-        ModelKind::Sir => {
-            let params = SirParams {
-                agents,
-                subset_size: size,
-                steps,
-                ..SirParams::default()
-            };
-            let model = SirModel::new(params, seed ^ 0x51);
-            let obs = |m: &SirModel| {
-                let (s, i, r) = m.census();
-                format!("census S={s} I={i} R={r}")
-            };
-            Ok(match cfg.engine {
-                EngineKind::Sequential => {
-                    let r = SequentialEngine::new(seed).run(&model);
-                    outcome_from_report(&r, obs(&model))
-                }
-                EngineKind::Parallel => {
-                    let r = ParallelEngine::new(ProtocolConfig {
-                        workers,
-                        tasks_per_cycle: cfg.tasks_per_cycle,
-                        seed,
-                        collect_timing: false,
-                    })
-                    .run(&model);
-                    outcome_from_report(&r, obs(&model))
-                }
-                EngineKind::Virtual => {
-                    let r = VirtualEngine {
-                        workers,
-                        tasks_per_cycle: cfg.tasks_per_cycle,
-                        seed,
-                        cost: *cost,
-                    }
-                    .run(&model);
-                    RunOutcome {
-                        time_s: r.virtual_time_s,
-                        totals: r.totals,
-                        max_chain_len: r.chain.max_chain_len,
-                        observable: obs(&model),
-                    }
-                }
-                EngineKind::Stepwise => {
-                    let r = StepwiseEngine::new(workers, seed).run(&model);
-                    outcome_from_report(&r, obs(&model))
-                }
-            })
-        }
-        ModelKind::Voter => {
-            let model = VoterModel::new(
-                ring_lattice(agents, 6),
-                VoterParams {
-                    opinions: 3,
-                    steps,
-                },
-                seed ^ 0x70,
-            );
-            let obs = |m: &VoterModel| format!("tally={:?}", m.tally());
-            run_generic(cfg, &model, workers, seed, cost, obs(&model))
-        }
-        ModelKind::Ising => {
-            let side = (agents as f64).sqrt() as usize;
-            let model = IsingModel::new(
-                IsingParams {
-                    side: side.max(8),
-                    temperature: 2.269,
-                    steps,
-                },
-                seed ^ 0x15,
-            );
-            let obs = format!("m={:+.4}", model.magnetization());
-            run_generic(cfg, &model, workers, seed, cost, obs)
-        }
-        ModelKind::Schelling => {
-            // ~78% occupancy on the smallest torus that fits `agents`.
-            let side = ((agents as f64 / 0.78).sqrt().ceil() as usize).max(8);
-            let model = SchellingModel::new(
-                SchellingParams {
-                    side,
-                    agents,
-                    tolerance: 0.4,
-                    steps,
-                },
-                seed ^ 0x5C,
-            );
-            let out = run_generic(
-                cfg,
-                &model,
-                workers,
-                seed,
-                cost,
-                String::new(),
-            )?;
-            model
-                .check_consistency()
-                .map_err(|e| anyhow::anyhow!("schelling state corrupted: {e}"))?;
-            Ok(RunOutcome {
-                observable: format!("segregation={:.4}", model.segregation()),
-                ..out
-            })
-        }
-    }
-}
-
-fn run_generic<M: crate::model::Model>(
-    cfg: &SweepConfig,
-    model: &M,
-    workers: usize,
-    seed: u64,
-    cost: &CostModel,
-    observable: String,
-) -> Result<RunOutcome> {
-    Ok(match cfg.engine {
-        EngineKind::Sequential => {
-            let r = SequentialEngine::new(seed).run(model);
-            outcome_from_report(&r, observable)
-        }
-        EngineKind::Parallel => {
-            let r = ParallelEngine::new(ProtocolConfig {
-                workers,
-                tasks_per_cycle: cfg.tasks_per_cycle,
-                seed,
-                collect_timing: false,
-            })
-            .run(model);
-            outcome_from_report(&r, observable)
-        }
-        EngineKind::Virtual => {
-            let r = VirtualEngine {
-                workers,
-                tasks_per_cycle: cfg.tasks_per_cycle,
-                seed,
-                cost: *cost,
-            }
-            .run(model);
-            RunOutcome {
-                time_s: r.virtual_time_s,
-                totals: r.totals,
-                max_chain_len: r.chain.max_chain_len,
-                observable,
-            }
-        }
-        EngineKind::Stepwise => anyhow::bail!("model has no synchronous form"),
-    })
+    simulation_for(cfg, size, workers, seed, cost)
+        .run()
+        .map(RunOutcome::from)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::EngineKind;
 
-    fn tiny(model: ModelKind, engine: EngineKind) -> SweepConfig {
+    fn tiny(model: &str, engine: EngineKind) -> SweepConfig {
         SweepConfig {
-            model,
+            model: model.to_string(),
             engine,
             sizes: vec![10],
             workers: vec![2],
@@ -259,25 +92,32 @@ mod tests {
     #[test]
     fn all_models_run_on_all_legal_engines() {
         let cost = CostModel::default();
-        for model in [
-            ModelKind::Axelrod,
-            ModelKind::Sir,
-            ModelKind::Voter,
-            ModelKind::Ising,
-            ModelKind::Schelling,
-        ] {
-            for engine in [EngineKind::Sequential, EngineKind::Parallel, EngineKind::Virtual] {
-                let cfg = tiny(model, engine);
+        for model in crate::api::registry::model_names() {
+            for engine in [
+                EngineKind::Sequential,
+                EngineKind::Parallel,
+                EngineKind::Virtual,
+            ] {
+                let cfg = tiny(&model, engine);
                 let out = run_once(&cfg, 10, 2, 1, &cost)
                     .unwrap_or_else(|e| panic!("{model}/{engine}: {e}"));
                 assert!(out.time_s >= 0.0);
                 assert!(!out.observable.is_empty());
             }
+            // Stepwise runs exactly on the models that declare a sync form.
+            let cfg = tiny(&model, EngineKind::Stepwise);
+            let res = run_once(&cfg, 10, 2, 1, &cost);
+            let has_sync = crate::api::registry::info(&model).unwrap().has_sync_form;
+            assert_eq!(res.is_ok(), has_sync, "{model} stepwise");
         }
-        // Stepwise: sir only.
-        let cfg = tiny(ModelKind::Sir, EngineKind::Stepwise);
-        run_once(&cfg, 10, 2, 1, &cost).unwrap();
-        let cfg = tiny(ModelKind::Axelrod, EngineKind::Stepwise);
-        assert!(run_once(&cfg, 10, 2, 1, &cost).is_err());
+    }
+
+    #[test]
+    fn run_once_matches_direct_facade_use() {
+        let cost = CostModel::default();
+        let cfg = tiny("sir", EngineKind::Sequential);
+        let a = run_once(&cfg, 10, 1, 3, &cost).unwrap();
+        let b = simulation_for(&cfg, 10, 1, 3, &cost).run().unwrap();
+        assert_eq!(a.observable, b.observable);
     }
 }

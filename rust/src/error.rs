@@ -1,0 +1,234 @@
+//! Crate-local error type for the public API.
+//!
+//! The crate registry is offline in this build environment, so the error
+//! plumbing normally pulled from `anyhow`/`thiserror` is hand-rolled here:
+//! a single boxed-message error with an optional source chain, the
+//! [`Context`] extension trait for `Result`/`Option`, and the
+//! [`bail!`](crate::bail)/[`ensure!`](crate::ensure)/[`err!`](crate::err)
+//! macros. Every public fallible API in the crate returns
+//! [`crate::Result`], which is an alias for `Result<T, Error>`.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// The crate error: a message plus an optional chained source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Self {
+            msg: msg.into(),
+            source: None,
+        }
+    }
+
+    /// Build an error from any `std::error::Error` value.
+    pub fn new<E>(source: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Self {
+            msg: source.to_string(),
+            source: Some(Box::new(source)),
+        }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(self, msg: impl Into<String>) -> Self {
+        Self {
+            msg: msg.into(),
+            source: Some(Box::new(self)),
+        }
+    }
+
+    /// The full `outer: inner: ...` chain as one string.
+    pub fn chain(&self) -> String {
+        let mut out = self.msg.clone();
+        let mut cur: Option<&(dyn std::error::Error + 'static)> = self
+            .source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static));
+        while let Some(e) = cur {
+            out.push_str(": ");
+            out.push_str(&e.to_string());
+            cur = e.source();
+        }
+        out
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` prints the whole chain, like anyhow's alternate mode.
+            f.write_str(&self.chain())
+        } else {
+            f.write_str(&self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain())
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        self.source
+            .as_deref()
+            .map(|e| e as &(dyn std::error::Error + 'static))
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Self {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Self {
+        Error::msg(msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::new(e)
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error::new(e)
+    }
+}
+
+impl From<std::num::ParseIntError> for Error {
+    fn from(e: std::num::ParseIntError) -> Self {
+        Error::new(e)
+    }
+}
+
+impl From<std::num::ParseFloatError> for Error {
+    fn from(e: std::num::ParseFloatError) -> Self {
+        Error::new(e)
+    }
+}
+
+impl From<crate::util::cli::CliError> for Error {
+    fn from(e: crate::util::cli::CliError) -> Self {
+        Error::new(e)
+    }
+}
+
+impl From<crate::util::toml::ParseError> for Error {
+    fn from(e: crate::util::toml::ParseError) -> Self {
+        Error::new(e)
+    }
+}
+
+/// Attach context to fallible values (`Result`/`Option`), mirroring the
+/// `anyhow::Context` surface the crate used to rely on.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Wrap the error with a lazily-built message.
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| e.into().context(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn context_chains_and_alternate_prints_chain() {
+        let e: Error = Err::<(), _>(io_err())
+            .context("reading config")
+            .unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: gone");
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn option_context() {
+        let e = None::<u32>.with_context(|| "missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        fn f(x: u32) -> crate::Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+    }
+}

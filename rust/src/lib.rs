@@ -29,8 +29,15 @@
 //! * [`runtime`] — PJRT/XLA runtime loading the AOT-compiled JAX+Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and an XLA-backed task-execution
 //!   engine.
+//! * [`api`] — the public execution API: the object-safe [`Engine`]
+//!   trait over interchangeable backends, the dynamic model
+//!   [`api::registry`] (name + parameter bag → runnable model), and the
+//!   builder-style [`Simulation`] facade — the single entry point used by
+//!   the CLI, sweeps, benches and examples.
 //! * [`coordinator`] — experiment orchestration: config system, sweep grid
 //!   runner, reports.
+//! * [`error`] — the crate-local error type ([`Error`]/[`Result`]) every
+//!   public fallible API returns.
 //! * [`util`] — hand-rolled substrates (the crate registry is offline):
 //!   CLI args, bench harness, TOML-subset config parser, property-testing
 //!   mini-framework, statistics.
@@ -38,9 +45,11 @@
 //! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
 
+pub mod api;
 pub mod chain;
 pub mod cli;
 pub mod coordinator;
+pub mod error;
 pub mod model;
 pub mod models;
 pub mod protocol;
@@ -49,5 +58,11 @@ pub mod sim;
 pub mod util;
 pub mod vtime;
 
+pub use api::{
+    engine_for, BuildCtx, DynModel, Engine, EngineKind, ModelInfo, Params, Registry, Runnable,
+    SimOutcome, Simulation, SimulationBuilder,
+};
+pub use error::{Context, Error};
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;

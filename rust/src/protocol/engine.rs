@@ -7,7 +7,7 @@ use std::time::Instant;
 use crate::chain::Chain;
 use crate::model::Model;
 
-use super::stats::{ProtocolStats, RunReport, WorkerStats};
+use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 use super::worker::{worker_loop, RunCtx};
 
 /// Workflow parameters (§3.4: "workflow parameters are, notably, n, the
@@ -29,7 +29,9 @@ pub struct ProtocolConfig {
 impl Default for ProtocolConfig {
     fn default() -> Self {
         Self {
-            workers: 2,
+            workers: std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(2),
             tasks_per_cycle: 6,
             seed: 0,
             collect_timing: false,
@@ -100,7 +102,8 @@ impl ParallelEngine {
         RunReport {
             engine: "parallel",
             workers: self.cfg.workers,
-            wall,
+            time_s: wall.as_secs_f64(),
+            basis: TimeBasis::Wall,
             totals,
             per_worker,
             chain: ProtocolStats {

@@ -7,7 +7,7 @@ use std::time::Instant;
 use crate::model::{Model, TaskSource};
 use crate::sim::rng::TaskRng;
 
-use super::stats::{ProtocolStats, RunReport, WorkerStats};
+use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
 /// Single-threaded engine: executes tasks in creation order with the same
 /// per-task RNG streams as the parallel engine.
@@ -44,7 +44,8 @@ impl SequentialEngine {
         RunReport {
             engine: "sequential",
             workers: 1,
-            wall,
+            time_s: wall.as_secs_f64(),
+            basis: TimeBasis::Wall,
             totals: stats.clone(),
             per_worker: vec![stats],
             chain: ProtocolStats {

@@ -56,7 +56,29 @@ pub struct ProtocolStats {
     pub max_chain_len: usize,
 }
 
-/// Result of one engine run.
+/// How a report's `time_s` was measured.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeBasis {
+    /// Real wall-clock time (`Instant`-measured).
+    Wall,
+    /// Deterministic virtual time from the DES testbed's cost model.
+    Virtual,
+}
+
+impl std::fmt::Display for TimeBasis {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TimeBasis::Wall => "wall",
+            TimeBasis::Virtual => "virtual",
+        })
+    }
+}
+
+/// Result of one engine run — the *same* type for every engine, so the
+/// coordinator, benches and facade never special-case a backend. The
+/// paper's `T` is [`RunReport::time_s`]; [`RunReport::basis`] records
+/// whether it was measured on the wall clock or on the virtual testbed's
+/// deterministic clock.
 #[derive(Clone, Debug)]
 pub struct RunReport {
     /// Engine label (`"parallel"`, `"sequential"`, `"stepwise"`,
@@ -64,8 +86,11 @@ pub struct RunReport {
     pub engine: &'static str,
     /// Number of workers.
     pub workers: usize,
-    /// Wall-clock duration of the run (the paper's `T`).
-    pub wall: Duration,
+    /// Duration of the run in seconds (the paper's `T`), wall or virtual
+    /// per `basis`.
+    pub time_s: f64,
+    /// How `time_s` was measured.
+    pub basis: TimeBasis,
     /// Aggregated worker counters.
     pub totals: WorkerStats,
     /// Per-worker counters.
@@ -75,6 +100,12 @@ pub struct RunReport {
 }
 
 impl RunReport {
+    /// The run duration as a [`Duration`] (virtual reports round to
+    /// nanosecond resolution).
+    pub fn duration(&self) -> Duration {
+        Duration::from_secs_f64(self.time_s.max(0.0))
+    }
+
     /// Sum of per-worker counters (consistency helper for tests).
     pub fn recompute_totals(&self) -> WorkerStats {
         let mut t = WorkerStats::default();
@@ -101,10 +132,11 @@ impl RunReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} n={} wall={:?} executed={} created={} skipped={} passed={} retries={} cycles={} max_chain={}",
+            "{} n={} T={:?}({}) executed={} created={} skipped={} passed={} retries={} cycles={} max_chain={}",
             self.engine,
             self.workers,
-            self.wall,
+            self.duration(),
+            self.basis,
             self.totals.executed,
             self.totals.created,
             self.totals.skipped_dependent,
@@ -143,7 +175,8 @@ mod tests {
         let mut r = RunReport {
             engine: "test",
             workers: 1,
-            wall: Duration::ZERO,
+            time_s: 0.0,
+            basis: TimeBasis::Wall,
             totals: WorkerStats::default(),
             per_worker: vec![],
             chain: ProtocolStats::default(),

@@ -19,7 +19,7 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Barrier;
 use std::time::Instant;
 
-use super::stats::{ProtocolStats, RunReport, WorkerStats};
+use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
 /// A model in synchronous, phase-structured form.
 ///
@@ -129,7 +129,8 @@ impl StepwiseEngine {
         RunReport {
             engine: "stepwise",
             workers: n,
-            wall,
+            time_s: wall.as_secs_f64(),
+            basis: TimeBasis::Wall,
             totals: stats.clone(),
             per_worker: vec![stats],
             chain: ProtocolStats {

@@ -10,7 +10,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// One manifest entry.
 #[derive(Clone, Debug, PartialEq)]
@@ -38,7 +38,7 @@ impl ArtifactEntry {
             .get(key)
             .with_context(|| format!("artifact {}: missing meta key `{key}`", self.name))?;
         raw.parse::<T>()
-            .map_err(|e| anyhow::anyhow!("artifact {}: bad `{key}`={raw}: {e}", self.name))
+            .map_err(|e| crate::err!("artifact {}: bad `{key}`={raw}: {e}", self.name))
     }
 
     /// The `kind` field.

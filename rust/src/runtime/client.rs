@@ -8,7 +8,7 @@
 use std::path::Path;
 use std::sync::Mutex;
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// A PJRT client (CPU backend).
 pub struct XlaRuntime {
@@ -82,7 +82,7 @@ impl Executable {
     /// Execute and return the single output (errors if arity ≠ 1).
     pub fn call1(&self, args: &[xla::Literal]) -> Result<xla::Literal> {
         let mut out = self.call(args)?;
-        anyhow::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
+        crate::ensure!(out.len() == 1, "expected 1 output, got {}", out.len());
         Ok(out.pop().unwrap())
     }
 }

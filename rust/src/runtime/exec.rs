@@ -1,6 +1,6 @@
 //! Typed literal marshalling helpers for the PJRT boundary.
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 /// 1-D i32 literal from a slice.
 pub fn lit_i32(xs: &[i32]) -> xla::Literal {
@@ -9,7 +9,7 @@ pub fn lit_i32(xs: &[i32]) -> xla::Literal {
 
 /// 2-D i32 literal from row-major data.
 pub fn lit_i32_2d(xs: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
-    anyhow::ensure!(xs.len() == rows * cols, "shape mismatch");
+    crate::ensure!(xs.len() == rows * cols, "shape mismatch");
     xla::Literal::vec1(xs)
         .reshape(&[rows as i64, cols as i64])
         .context("reshape")

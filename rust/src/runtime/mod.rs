@@ -12,10 +12,26 @@
 //!   [`xla_engine::XlaAxelrodInteractor`]), validated bitwise against the
 //!   native models.
 
+//! The PJRT-backed pieces need the external `xla` crate and the PJRT
+//! shared library, which this offline build environment cannot fetch, so
+//! they are gated behind the `xla` cargo feature (off by default).
+//! Manifest parsing is pure Rust and always available.
+
 pub mod artifact;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod exec;
+#[cfg(feature = "xla")]
 pub mod xla_engine;
 
 pub use artifact::{ArtifactEntry, Manifest};
+#[cfg(feature = "xla")]
 pub use client::{Executable, XlaRuntime};
+
+#[cfg(feature = "xla")]
+impl From<xla::Error> for crate::error::Error {
+    fn from(e: xla::Error) -> Self {
+        crate::error::Error::msg(format!("xla: {e}"))
+    }
+}

@@ -13,7 +13,7 @@
 //! (b) the `xla_dispatch` bench quantifying exactly that gap; batch
 //! amortization is the production answer (see `axelrod_b32` artifact).
 
-use anyhow::{Context, Result};
+use crate::error::{Context, Result};
 
 use crate::model::Model;
 use crate::models::sir::{SirModel, SirPhase, SirRecord, SirSource, SirTask};
@@ -66,7 +66,7 @@ impl XlaAxelrodInteractor {
         u_interact: f64,
         u_pick: f64,
     ) -> Result<Vec<i32>> {
-        anyhow::ensure!(
+        crate::ensure!(
             src.len() == self.features && tgt.len() == self.features,
             "trait row length mismatch"
         );
@@ -116,7 +116,7 @@ impl XlaSirModel {
             ("p_rs", inner.params.p_rs),
         ] {
             let got = entry.get_parse::<f64>(key)?;
-            anyhow::ensure!(
+            crate::ensure!(
                 (got - expect).abs() < 1e-12,
                 "artifact {key}={got} != model {key}={expect}"
             );
@@ -148,7 +148,7 @@ impl XlaSirModel {
 
     fn compute_block_xla(&self, block: usize, rng: &mut TaskRng) -> Result<()> {
         let members = self.inner.partition().members(block);
-        anyhow::ensure!(
+        crate::ensure!(
             members.len() == self.block,
             "artifact block size {} != partition block {}",
             self.block,

@@ -28,18 +28,29 @@ pub struct Spec {
 }
 
 /// Errors from argument parsing/validation.
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum CliError {
     /// Option requires a value but none was supplied.
-    #[error("option --{0} requires a value")]
     MissingValue(String),
     /// Name not present in the spec.
-    #[error("unknown option --{0}")]
     Unknown(String),
     /// Failed to parse a typed option value.
-    #[error("invalid value for --{0}: `{1}` ({2})")]
     BadValue(String, String, String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+            CliError::Unknown(name) => write!(f, "unknown option --{name}"),
+            CliError::BadValue(name, value, why) => {
+                write!(f, "invalid value for --{name}: `{value}` ({why})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw tokens (without the program name) against a spec.

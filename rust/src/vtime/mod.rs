@@ -24,4 +24,4 @@ pub mod vengine;
 
 pub use calibrate::{calibrate, calibrate_exec, calibrated_for};
 pub use cost::CostModel;
-pub use vengine::{VirtualEngine, VirtualReport};
+pub use vengine::VirtualEngine;

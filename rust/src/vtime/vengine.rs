@@ -12,25 +12,10 @@ use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::model::{Model, Record, TaskSource};
-use crate::protocol::{ProtocolStats, WorkerStats};
+use crate::protocol::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 use crate::sim::rng::TaskRng;
 
 use super::cost::CostModel;
-
-/// Result of a virtual run.
-#[derive(Clone, Debug)]
-pub struct VirtualReport {
-    /// Number of virtual workers (cores).
-    pub workers: usize,
-    /// Virtual wall-clock time `T` in seconds (max over worker clocks).
-    pub virtual_time_s: f64,
-    /// Aggregated counters (same semantics as the real engine's).
-    pub totals: WorkerStats,
-    /// Per-worker counters.
-    pub per_worker: Vec<WorkerStats>,
-    /// Chain statistics.
-    pub chain: ProtocolStats,
-}
 
 /// Virtual-core engine configuration + entry point.
 #[derive(Clone, Copy, Debug)]
@@ -143,8 +128,11 @@ struct Des<'m, M: Model> {
 }
 
 impl VirtualEngine {
-    /// Run the model on the virtual testbed.
-    pub fn run<M: Model>(&self, model: &M) -> VirtualReport {
+    /// Run the model on the virtual testbed. Returns the same unified
+    /// [`RunReport`] as every other engine, with
+    /// [`TimeBasis::Virtual`] marking `time_s` as deterministic virtual
+    /// time (max over worker clocks).
+    pub fn run<M: Model>(&self, model: &M) -> RunReport {
         assert!(self.workers >= 1 && self.tasks_per_cycle >= 1);
         self.cost.validate().expect("invalid cost model");
 
@@ -205,9 +193,11 @@ impl VirtualEngine {
             per_worker.push(w.stats.clone());
             t_end = t_end.max(w.clock);
         }
-        VirtualReport {
+        RunReport {
+            engine: "virtual",
             workers: self.workers,
-            virtual_time_s: t_end * 1e-9,
+            time_s: t_end * 1e-9,
+            basis: TimeBasis::Virtual,
             totals,
             per_worker,
             chain: ProtocolStats {
@@ -528,7 +518,7 @@ mod tests {
     fn virtual_run_is_deterministic() {
         let run = || {
             let m = IncModel::with_work(800, 16, 50);
-            vengine(3, 9).run(&m).virtual_time_s
+            vengine(3, 9).run(&m).time_s
         };
         assert_eq!(run(), run());
     }
@@ -538,7 +528,7 @@ mod tests {
         // 64 cells, heavy tasks: plenty of parallelism.
         let t = |workers| {
             let m = IncModel::with_work(2000, 64, 2000);
-            vengine(workers, 1).run(&m).virtual_time_s
+            vengine(workers, 1).run(&m).time_s
         };
         let t1 = t(1);
         let t2 = t(2);
@@ -555,7 +545,7 @@ mod tests {
         // create/(create+exec)) is legitimate — large speedups are not.
         let t = |workers| {
             let m = IncModel::with_work(500, 1, 500);
-            vengine(workers, 2).run(&m).virtual_time_s
+            vengine(workers, 2).run(&m).time_s
         };
         let t1 = t(1);
         let t4 = t(4);
@@ -578,7 +568,7 @@ mod tests {
                 cost: CostModel::ideal(1.0),
             }
             .run(&m)
-            .virtual_time_s
+            .time_s
         };
         let t1 = t(1);
         let t4 = t(4);
@@ -597,7 +587,7 @@ mod tests {
         assert_eq!(rep.totals.executed, 600);
         assert_eq!(rep.chain.tasks_created, 600);
         assert!(rep.chain.max_chain_len >= 1);
-        assert!(rep.virtual_time_s > 0.0);
+        assert!(rep.time_s > 0.0);
         assert_eq!(rep.per_worker.len(), 3);
     }
 }

@@ -1,6 +1,6 @@
 //! Config system + CLI surface tests (the launcher layer).
 
-use adapar::coordinator::config::{EngineKind, ModelKind, SweepConfig};
+use adapar::coordinator::config::{EngineKind, SweepConfig};
 use adapar::coordinator::report::{figure_pivot, long_table};
 use adapar::coordinator::run_sweep;
 use adapar::util::cli::{Args, CliError, Spec};
@@ -45,7 +45,7 @@ fn preset_configs_run_end_to_end_scaled() {
         cfg.workers = vec![1, 2];
         cfg.seeds = vec![1];
         cfg.agents = 200;
-        cfg.steps = if cfg.model == ModelKind::Sir { 10 } else { 3_000 };
+        cfg.steps = if cfg.model == "sir" { 10 } else { 3_000 };
         cfg.engine = EngineKind::Virtual;
         let res = run_sweep(&cfg).unwrap();
         assert_eq!(res.points.len(), 4, "{preset}");
@@ -84,7 +84,7 @@ calibrate = true
 "#,
     )
     .unwrap();
-    assert_eq!(cfg.model, ModelKind::Voter);
+    assert_eq!(cfg.model, "voter");
     assert_eq!(cfg.engine, EngineKind::Parallel);
     assert_eq!(cfg.tasks_per_cycle, 3);
     assert_eq!(cfg.agents, 77);

@@ -62,7 +62,7 @@ fn prop_virtual_equals_sequential() {
             .run(&m);
             m.cells_snapshot() == expected
                 && rep.totals.executed == tasks as u64
-                && rep.virtual_time_s > 0.0
+                && rep.time_s > 0.0
         },
     );
 }

@@ -1,0 +1,266 @@
+//! The redesigned execution API, end to end: every registered model runs
+//! on every legal engine through the `Simulation` facade; unknown
+//! model/engine names produce listings of the valid ones; and — the
+//! acceptance test for the registry — a model the library does **not**
+//! bundle is registered at runtime and then driven through the
+//! coordinator's sweep machinery with zero coordinator edits.
+
+use adapar::api::registry as registry_api;
+use adapar::coordinator::config::SweepConfig;
+use adapar::coordinator::{run_once, run_sweep};
+use adapar::model::{Model, Record, TaskSource};
+use adapar::sim::rng::TaskRng;
+use adapar::sim::state::SharedSim;
+use adapar::util::u32set::U32Set;
+use adapar::vtime::CostModel;
+use adapar::{Engine, EngineKind, Simulation};
+
+#[test]
+fn every_registered_model_runs_on_every_legal_engine_via_the_facade() {
+    for model in registry_api::model_names() {
+        let info = registry_api::info(&model).unwrap();
+        let mut engines = vec![
+            EngineKind::Sequential,
+            EngineKind::Parallel,
+            EngineKind::Virtual,
+        ];
+        if info.has_sync_form {
+            engines.push(EngineKind::Stepwise);
+        }
+        for engine in engines {
+            let out = Simulation::builder()
+                .model(model.clone())
+                .engine(engine)
+                .workers(2)
+                .agents(120)
+                .steps(40)
+                .size(10)
+                .seed(1)
+                .run()
+                .unwrap_or_else(|e| panic!("{model}/{engine}: {e:#}"));
+            assert!(out.report.time_s >= 0.0, "{model}/{engine}");
+            assert!(!out.observable.is_empty(), "{model}/{engine}");
+            assert_eq!(out.report.engine, engine.to_string(), "{model}/{engine}");
+        }
+        // Engines the model does not support fail with a clear message.
+        if !info.has_sync_form {
+            let err = Simulation::builder()
+                .model(model.clone())
+                .engine(EngineKind::Stepwise)
+                .agents(120)
+                .steps(40)
+                .size(10)
+                .run()
+                .unwrap_err();
+            assert!(err.to_string().contains("no synchronous form"), "{model}");
+        }
+    }
+}
+
+#[test]
+fn unknown_names_list_the_valid_choices() {
+    let err = Simulation::builder().model("warpdrive").run().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("unknown model `warpdrive`"), "{msg}");
+    for name in registry_api::model_names() {
+        assert!(msg.contains(&name), "{msg} should list {name}");
+    }
+
+    let err = "teleport".parse::<EngineKind>().unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("unknown engine `teleport`"), "{msg}");
+    for engine in ["parallel", "sequential", "virtual", "stepwise"] {
+        assert!(msg.contains(engine), "{msg} should list {engine}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A model the library does not bundle: `blinker` — each task toggles one
+// cell of a shared bit array. Registered at runtime, then driven through
+// `run_once`/`run_sweep` exactly like a bundled model.
+// ---------------------------------------------------------------------------
+
+struct BlinkerModel {
+    cells: SharedSim<Vec<u8>>,
+    tasks: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Toggle {
+    cell: u32,
+}
+
+struct BlinkerRecord {
+    seen: U32Set,
+}
+
+impl Record for BlinkerRecord {
+    type Recipe = Toggle;
+    fn depends(&self, r: &Toggle) -> bool {
+        self.seen.contains(r.cell)
+    }
+    fn absorb(&mut self, r: &Toggle) {
+        self.seen.insert(r.cell);
+    }
+    fn reset(&mut self) {
+        self.seen.clear();
+    }
+}
+
+struct BlinkerSource {
+    next: u64,
+    tasks: u64,
+    cells: u32,
+}
+
+impl TaskSource for BlinkerSource {
+    type Recipe = Toggle;
+    fn next_task(&mut self) -> Option<Toggle> {
+        if self.next >= self.tasks {
+            return None;
+        }
+        // A deterministic but scattered cell sequence.
+        let cell = ((self.next * 7 + 3) % self.cells as u64) as u32;
+        self.next += 1;
+        Some(Toggle { cell })
+    }
+    fn size_hint(&self) -> Option<u64> {
+        Some(self.tasks)
+    }
+}
+
+impl Model for BlinkerModel {
+    type Recipe = Toggle;
+    type Record = BlinkerRecord;
+    type Source = BlinkerSource;
+
+    fn source(&self, _seed: u64) -> BlinkerSource {
+        BlinkerSource {
+            next: 0,
+            tasks: self.tasks,
+            cells: unsafe { self.cells.get() }.len() as u32,
+        }
+    }
+
+    fn record(&self) -> BlinkerRecord {
+        BlinkerRecord {
+            seen: U32Set::new(),
+        }
+    }
+
+    fn execute(&self, r: &Toggle, _rng: &mut TaskRng) {
+        unsafe {
+            let cells = self.cells.get_mut();
+            cells[r.cell as usize] ^= 1;
+        }
+    }
+}
+
+fn register_blinker_once() {
+    use std::sync::Once;
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let info = adapar::ModelInfo::new("blinker", "toggling bit array (test-only plug-in)")
+            .sizes(&[4, 16])
+            .agents(64, 64)
+            .steps(500, 500);
+        registry_api::register(info, |ctx| {
+            let model = BlinkerModel {
+                cells: SharedSim::new(vec![0u8; ctx.agents.max(1)]),
+                tasks: ctx.steps,
+            };
+            Ok(adapar::Runnable::new("blinker", model)
+                .observed(|m| {
+                    let ones = unsafe { m.cells.get() }.iter().filter(|&&c| c == 1).count();
+                    format!("ones={ones}")
+                })
+                .boxed())
+        })
+        .unwrap();
+    });
+}
+
+#[test]
+fn runtime_registered_model_runs_through_the_coordinator_unchanged() {
+    register_blinker_once();
+    let cost = CostModel::default();
+
+    // `run_once` — the coordinator's single-run dispatch — needs no edits.
+    let cfg = SweepConfig {
+        model: "blinker".to_string(),
+        engine: EngineKind::Parallel,
+        sizes: vec![4],
+        workers: vec![2],
+        seeds: vec![1],
+        ..Default::default()
+    };
+    cfg.validate().unwrap();
+    let out = run_once(&cfg, 4, 2, 1, &cost).unwrap();
+    assert_eq!(out.totals.executed, 500);
+    assert!(out.observable.starts_with("ones="), "{}", out.observable);
+
+    // Determinism across engines holds for the plug-in, too.
+    let observable = |engine| {
+        let cfg = SweepConfig {
+            engine,
+            ..cfg.clone()
+        };
+        run_once(&cfg, 4, 3, 9, &cost).unwrap().observable
+    };
+    let seq = observable(EngineKind::Sequential);
+    assert_eq!(observable(EngineKind::Parallel), seq);
+    assert_eq!(observable(EngineKind::Virtual), seq);
+
+    // The full sweep grid works off the registry defaults (empty `sizes`
+    // resolves to the model's registered grid).
+    let sweep = SweepConfig {
+        model: "blinker".to_string(),
+        engine: EngineKind::Virtual,
+        sizes: Vec::new(),
+        workers: vec![1, 2],
+        seeds: vec![1, 2],
+        ..Default::default()
+    };
+    let res = run_sweep(&sweep).unwrap();
+    assert_eq!(res.points.len(), 4, "2 default sizes × 2 worker counts");
+    assert!(res.points.iter().all(|p| p.mean_s > 0.0));
+}
+
+#[test]
+fn runtime_registered_model_parses_from_sweep_toml() {
+    register_blinker_once();
+    let cfg = SweepConfig::from_toml(
+        "model = \"blinker\"\nengine = \"virtual\"\nworkers = [2]\nseeds = [5]\n",
+    )
+    .unwrap();
+    assert_eq!(cfg.model, "blinker");
+    assert_eq!(cfg.effective_sizes(), vec![4, 16], "registry default grid");
+    assert_eq!(cfg.effective_agents(), 64);
+}
+
+#[test]
+fn boxed_engines_dispatch_uniformly() {
+    // The object-safe Engine surface: one loop, four backends, one report
+    // type.
+    let engines: Vec<Box<dyn Engine>> = vec![
+        adapar::engine_for(EngineKind::Sequential, 1, 6, 3, CostModel::default()),
+        adapar::engine_for(EngineKind::Parallel, 2, 6, 3, CostModel::default()),
+        adapar::engine_for(EngineKind::Virtual, 2, 6, 3, CostModel::default()),
+    ];
+    let model = registry_api::build(
+        "voter",
+        &adapar::BuildCtx {
+            size: 1,
+            agents: 100,
+            steps: 500,
+            seed: 3,
+            params: adapar::Params::new(),
+        },
+    )
+    .unwrap();
+    for engine in engines {
+        let report = engine.run(model.as_ref()).unwrap();
+        assert_eq!(report.engine, engine.name());
+        assert_eq!(report.totals.executed, 500, "{}", engine.name());
+    }
+}

@@ -50,7 +50,7 @@ fn virtual_axelrod_speedup_grows_with_task_size() {
             },
             2,
         );
-        engine(workers, 5).run(&m).virtual_time_s
+        engine(workers, 5).run(&m).time_s
     };
     let ratio_small = t(8, 1) / t(8, 4);
     let ratio_large = t(200, 1) / t(200, 4);
@@ -67,7 +67,7 @@ fn virtual_sir_fine_granularity_is_overhead_dominated() {
     // subsets (many tasks) must cost more wall-clock than the plateau.
     let t = |s: usize| {
         let m = SirModel::new(SirParams::scaled(s, 400, 30), 1);
-        engine(3, 7).run(&m).virtual_time_s
+        engine(3, 7).run(&m).time_s
     };
     let t_fine = t(5);
     let t_plateau = t(100);
@@ -81,7 +81,7 @@ fn virtual_sir_fine_granularity_is_overhead_dominated() {
 fn virtual_time_monotone_in_task_cost() {
     let t = |work: u32| {
         let m = IncModel::with_work(1500, 32, work);
-        engine(2, 1).run(&m).virtual_time_s
+        engine(2, 1).run(&m).time_s
     };
     assert!(t(10) < t(1000));
     assert!(t(1000) < t(50_000));
@@ -92,7 +92,7 @@ fn virtual_reports_are_reproducible() {
     let run = || {
         let m = SirModel::new(SirParams::scaled(20, 200, 30), 4);
         let r = engine(4, 9).run(&m);
-        (r.virtual_time_s, r.totals.executed, r.totals.skipped_dependent, r.chain.max_chain_len)
+        (r.time_s, r.totals.executed, r.totals.skipped_dependent, r.chain.max_chain_len)
     };
     assert_eq!(run(), run());
 }
