@@ -19,7 +19,7 @@ use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
 use adapar::sim::rng::{Rng, TaskRng};
 use adapar::sim::state::SharedSim;
 use adapar::util::u32set::U32Set;
-use adapar::{EngineKind, ModelInfo, Runnable, Simulation};
+use adapar::{EngineKind, ModelInfo, ObsValue, Runnable, Simulation};
 
 const GRID: usize = 64; // 64×64 torus
 
@@ -154,7 +154,12 @@ fn register_ants() -> adapar::Result<()> {
     registry::register(info, |ctx| {
         let model = build(ctx.seed, ctx.agents, ctx.steps);
         Ok(Runnable::new("ants", model)
-            .observed(|w| format!("total_pheromone={}", total_pheromone(w)))
+            .observed(|w| {
+                vec![(
+                    "total_pheromone".to_string(),
+                    ObsValue::Int(total_pheromone(w) as i64),
+                )]
+            })
             .boxed())
     })
 }

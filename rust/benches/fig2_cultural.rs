@@ -14,7 +14,7 @@
 //! faithfully-shaped scaled workload.
 
 use adapar::coordinator::config::{EngineKind, SweepConfig};
-use adapar::coordinator::report::{figure_pivot, long_table, write_report};
+use adapar::coordinator::report::{figure_pivot, long_table, write_bench_json, write_report};
 use adapar::coordinator::run_sweep;
 use adapar::models::axelrod::{AxelrodModel, AxelrodParams};
 use adapar::protocol::{ParallelEngine, ProtocolConfig};
@@ -82,6 +82,12 @@ fn main() -> adapar::Result<()> {
     }
     bench.write_csv()?;
     let _ = long_table(&res);
+    // Perf-trajectory artifact: the full grid as JSON. Deliberately
+    // written to the invocation directory (repo root under `cargo
+    // bench`), where per-PR tracking tooling picks BENCH_*.json up; the
+    // CLI sweep writes its copy under --out instead.
+    let bench_json = write_bench_json(&res, std::path::Path::new("BENCH_fig2.json"))?;
+    eprintln!("wrote {}", bench_json.display());
     adapar::ensure!(ok, "FIG2 acceptance criteria failed");
     eprintln!("fig2_cultural: all acceptance criteria PASS");
     Ok(())

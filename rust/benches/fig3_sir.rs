@@ -8,7 +8,7 @@
 //! extra workers may *hurt*.
 
 use adapar::coordinator::config::{EngineKind, SweepConfig};
-use adapar::coordinator::report::{figure_pivot, write_report};
+use adapar::coordinator::report::{figure_pivot, write_bench_json, write_report};
 use adapar::coordinator::run_sweep;
 use adapar::util::bench::fmt_secs;
 
@@ -70,6 +70,13 @@ fn main() -> adapar::Result<()> {
         if saturates { "PASS" } else { "FAIL" }
     );
     ok &= saturates;
+
+    // Perf-trajectory artifact: the full grid as JSON. Deliberately
+    // written to the invocation directory (repo root under `cargo
+    // bench`), where per-PR tracking tooling picks BENCH_*.json up; the
+    // CLI sweep writes its copy under --out instead.
+    let bench_json = write_bench_json(&res, std::path::Path::new("BENCH_fig3.json"))?;
+    eprintln!("wrote {}", bench_json.display());
 
     adapar::ensure!(ok, "FIG3 acceptance criteria failed");
     eprintln!("fig3_sir: all acceptance criteria PASS");

@@ -10,6 +10,7 @@
 use std::str::FromStr;
 
 use crate::api::model::DynModel;
+use crate::api::observe::Observer;
 use crate::error::{Error, Result};
 use crate::protocol::{
     ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine,
@@ -22,8 +23,20 @@ pub trait Engine: Send + Sync {
     /// `"virtual"`).
     fn name(&self) -> &'static str;
 
-    /// Run the model to completion.
-    fn run(&self, model: &dyn DynModel) -> Result<RunReport>;
+    /// Run the model to completion. With an [`Observer`], the engine
+    /// records epoch snapshots at quiescent points (the deterministic
+    /// trace contract of `api::observe`); with `None` it runs the
+    /// unmodified hot path.
+    fn run_observed(
+        &self,
+        model: &dyn DynModel,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport>;
+
+    /// Run the model to completion without observation.
+    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
+        self.run_observed(model, None)
+    }
 }
 
 impl Engine for SequentialEngine {
@@ -31,8 +44,12 @@ impl Engine for SequentialEngine {
         "sequential"
     }
 
-    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
-        Ok(model.run_sequential(self.seed))
+    fn run_observed(
+        &self,
+        model: &dyn DynModel,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
+        Ok(model.run_sequential(self.seed, obs))
     }
 }
 
@@ -41,8 +58,12 @@ impl Engine for ParallelEngine {
         "parallel"
     }
 
-    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
-        Ok(model.run_parallel(self.config()))
+    fn run_observed(
+        &self,
+        model: &dyn DynModel,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
+        Ok(model.run_parallel(self.config(), obs))
     }
 }
 
@@ -51,8 +72,12 @@ impl Engine for StepwiseEngine {
         "stepwise"
     }
 
-    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
-        model.run_stepwise(self.workers, self.seed)
+    fn run_observed(
+        &self,
+        model: &dyn DynModel,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
+        model.run_stepwise(self.workers, self.seed, obs)
     }
 }
 
@@ -61,14 +86,18 @@ impl Engine for VirtualEngine {
         "virtual"
     }
 
-    fn run(&self, model: &dyn DynModel) -> Result<RunReport> {
+    fn run_observed(
+        &self,
+        model: &dyn DynModel,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
         let cfg = ProtocolConfig {
             workers: self.workers,
             tasks_per_cycle: self.tasks_per_cycle,
             seed: self.seed,
             collect_timing: false,
         };
-        Ok(model.run_virtual(&cfg, &self.cost))
+        Ok(model.run_virtual(&cfg, &self.cost, obs))
     }
 }
 

@@ -9,6 +9,9 @@
 //!   unified [`crate::protocol::RunReport`].
 //! * [`model`] — [`DynModel`], the type-erased runnable model, and
 //!   [`Runnable`], the adapter that erases any [`crate::model::Model`].
+//! * [`observe`] — the typed observation pipeline: [`ObsValue`] metrics,
+//!   the [`Observable`] model trait, the [`Observer`]/[`Sink`] recorder,
+//!   and deterministic epoch snapshots across every engine.
 //! * [`registry`] — the dynamic model registry: name + parameter bag →
 //!   runnable model. The five bundled models self-register; downstream
 //!   crates register their own at runtime.
@@ -17,7 +20,7 @@
 //!   the examples.
 //!
 //! ```no_run
-//! use adapar::{EngineKind, Simulation};
+//! use adapar::{EngineKind, ObservePlan, Simulation};
 //!
 //! let out = Simulation::builder()
 //!     .model("sir")
@@ -25,17 +28,23 @@
 //!     .engine(EngineKind::Parallel)
 //!     .workers(4)
 //!     .seed(7)
+//!     .observe(ObservePlan::every(10_000))
 //!     .run()?;
 //! println!("T = {}s, {}", out.report.time_s, out.observable);
+//! println!("{} epoch frames", out.observable.len());
 //! # Ok::<(), adapar::error::Error>(())
 //! ```
 
 pub mod engine;
 pub mod model;
+pub mod observe;
 pub mod registry;
 pub mod simulation;
 
 pub use engine::{engine_for, Engine, EngineKind};
 pub use model::{DynModel, Runnable};
+pub use observe::{
+    Metrics, ObsFrame, ObsValue, Observable, Observations, ObservePlan, Observer, Sink, SinkSpec,
+};
 pub use registry::{BuildCtx, ModelInfo, Params, Registry};
 pub use simulation::{SimOutcome, Simulation, SimulationBuilder};

@@ -10,42 +10,64 @@
 //! code; adding an engine means one more method here and one [`Engine`]
 //! impl — never a per-model match.
 //!
+//! Every run entry point takes an optional [`Observer`]: with one, the
+//! engine records typed epoch snapshots (drained to quiescence, so the
+//! trace is deterministic across engines — see
+//! [`api::observe`](crate::api::observe)); without one, the engine runs
+//! the unmodified hot path.
+//!
 //! [`Engine`]: crate::api::Engine
 
+use crate::api::observe::{Metrics, Observable, Observer};
 use crate::error::Result;
-use crate::model::Model;
+use crate::model::{Model, TaskSource};
 use crate::protocol::{
     ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine, SyncModel,
 };
 use crate::vtime::{calibrate_exec, CostModel, VirtualEngine};
 
 /// An object-safe, engine-agnostic runnable model: [`Model`] with its
-/// associated types erased, plus the launcher-facing extras (observable,
-/// post-run consistency check, exec-cost calibration).
+/// associated types erased, plus the launcher-facing extras (typed
+/// observation, post-run consistency check, exec-cost calibration).
 pub trait DynModel: Send + Sync {
     /// Model name (registry key or ad-hoc label).
     fn name(&self) -> &str;
 
     /// Run on the canonical single-threaded engine.
-    fn run_sequential(&self, seed: u64) -> RunReport;
+    fn run_sequential(&self, seed: u64, obs: Option<&mut Observer>) -> RunReport;
 
     /// Run on the paper's adaptive parallel engine.
-    fn run_parallel(&self, cfg: &ProtocolConfig) -> RunReport;
+    fn run_parallel(&self, cfg: &ProtocolConfig, obs: Option<&mut Observer>) -> RunReport;
 
     /// Run on the virtual-core testbed with the given cost model.
-    fn run_virtual(&self, cfg: &ProtocolConfig, cost: &CostModel) -> RunReport;
+    fn run_virtual(
+        &self,
+        cfg: &ProtocolConfig,
+        cost: &CostModel,
+        obs: Option<&mut Observer>,
+    ) -> RunReport;
 
     /// Run on the barrier-based stepwise baseline. Errors unless the model
     /// has a synchronous (phase-structured) form — the paper's point about
     /// sequential-form models (§2).
-    fn run_stepwise(&self, workers: usize, seed: u64) -> Result<RunReport>;
+    fn run_stepwise(
+        &self,
+        workers: usize,
+        seed: u64,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport>;
 
     /// Whether the model has a synchronous form (can run stepwise).
     fn has_sync_form(&self) -> bool;
 
-    /// Human-readable post-run observable (e.g. an SIR census) used by
-    /// determinism validation and run summaries.
-    fn observable(&self) -> String;
+    /// Snapshot the model's typed metrics from quiescent state (empty if
+    /// the model exports none).
+    fn observe(&self) -> Metrics;
+
+    /// Expected total task count for a run at `seed`, if the model's
+    /// source knows it ([`TaskSource::size_hint`]); used to pre-size
+    /// observation traces and drive progress reporting.
+    fn task_count_hint(&self, seed: u64) -> Option<u64>;
 
     /// Post-run internal consistency check (e.g. Schelling's grid/position
     /// agreement). Default: nothing to check.
@@ -59,20 +81,35 @@ pub trait DynModel: Send + Sync {
 /// Adapter erasing a concrete [`Model`] into a [`DynModel`].
 ///
 /// Configure launcher-facing behaviour with the builder methods:
-/// [`observed`](Runnable::observed) attaches the observable,
-/// [`checked`](Runnable::checked) a post-run consistency check, and
-/// [`with_sync`](Runnable::with_sync) unlocks the stepwise engine for
-/// models that also implement [`SyncModel`].
+/// [`observable`](Runnable::observable) exports the model's
+/// [`Observable`] metrics (or [`observed`](Runnable::observed) attaches a
+/// custom probe), [`checked`](Runnable::checked) a post-run consistency
+/// check, and [`with_sync`](Runnable::with_sync) unlocks the stepwise
+/// engine for models that also implement [`SyncModel`].
 pub struct Runnable<M: Model> {
     name: String,
     model: M,
-    observe: Option<Box<dyn Fn(&M) -> String + Send + Sync>>,
+    probe: Option<Box<dyn Fn(&M) -> Metrics + Send + Sync>>,
     check: Option<Box<dyn Fn(&M) -> std::result::Result<(), String> + Send + Sync>>,
-    stepwise: Option<fn(&M, usize, u64) -> RunReport>,
+    stepwise: Option<StepwiseFn<M>>,
 }
 
-fn run_stepwise_impl<M: Model + SyncModel>(m: &M, workers: usize, seed: u64) -> RunReport {
-    StepwiseEngine::new(workers, seed).run(m)
+/// The monomorphized stepwise entry point stored by [`Runnable`] when the
+/// model has a synchronous form.
+type StepwiseFn<M> =
+    fn(&M, usize, u64, Option<(&dyn Fn() -> Metrics, &mut Observer)>) -> RunReport;
+
+fn run_stepwise_impl<M: Model + SyncModel>(
+    m: &M,
+    workers: usize,
+    seed: u64,
+    obs: Option<(&dyn Fn() -> Metrics, &mut Observer)>,
+) -> RunReport {
+    let engine = StepwiseEngine::new(workers, seed);
+    match obs {
+        None => engine.run(m),
+        Some((probe, observer)) => engine.run_observed(m, probe, observer),
+    }
 }
 
 impl<M: Model> Runnable<M> {
@@ -81,15 +118,26 @@ impl<M: Model> Runnable<M> {
         Self {
             name: name.into(),
             model,
-            observe: None,
+            probe: None,
             check: None,
             stepwise: None,
         }
     }
 
-    /// Attach the post-run observable.
-    pub fn observed(mut self, f: impl Fn(&M) -> String + Send + Sync + 'static) -> Self {
-        self.observe = Some(Box::new(f));
+    /// Export the model's own [`Observable`] metrics through the
+    /// observation pipeline.
+    pub fn observable(mut self) -> Self
+    where
+        M: Observable,
+    {
+        self.probe = Some(Box::new(|m: &M| m.observe()));
+        self
+    }
+
+    /// Attach a custom metric probe (for models that do not implement
+    /// [`Observable`], e.g. ad-hoc plug-ins).
+    pub fn observed(mut self, f: impl Fn(&M) -> Metrics + Send + Sync + 'static) -> Self {
+        self.probe = Some(Box::new(f));
         self
     }
 
@@ -120,6 +168,14 @@ impl<M: Model> Runnable<M> {
     pub fn boxed(self) -> Box<dyn DynModel> {
         Box::new(self)
     }
+
+    /// Snapshot via the attached probe (empty metrics without one).
+    fn probe_now(&self) -> Metrics {
+        match &self.probe {
+            Some(p) => p(&self.model),
+            None => Vec::new(),
+        }
+    }
 }
 
 impl<M: Model> DynModel for Runnable<M> {
@@ -127,27 +183,56 @@ impl<M: Model> DynModel for Runnable<M> {
         &self.name
     }
 
-    fn run_sequential(&self, seed: u64) -> RunReport {
-        SequentialEngine::new(seed).run(&self.model)
+    fn run_sequential(&self, seed: u64, obs: Option<&mut Observer>) -> RunReport {
+        let engine = SequentialEngine::new(seed);
+        match obs {
+            None => engine.run(&self.model),
+            Some(observer) => engine.run_observed(&self.model, &|| self.probe_now(), observer),
+        }
     }
 
-    fn run_parallel(&self, cfg: &ProtocolConfig) -> RunReport {
-        ParallelEngine::new(*cfg).run(&self.model)
+    fn run_parallel(&self, cfg: &ProtocolConfig, obs: Option<&mut Observer>) -> RunReport {
+        let engine = ParallelEngine::new(*cfg);
+        match obs {
+            None => engine.run(&self.model),
+            Some(observer) => engine.run_observed(&self.model, &|| self.probe_now(), observer),
+        }
     }
 
-    fn run_virtual(&self, cfg: &ProtocolConfig, cost: &CostModel) -> RunReport {
-        VirtualEngine {
+    fn run_virtual(
+        &self,
+        cfg: &ProtocolConfig,
+        cost: &CostModel,
+        obs: Option<&mut Observer>,
+    ) -> RunReport {
+        let engine = VirtualEngine {
             workers: cfg.workers,
             tasks_per_cycle: cfg.tasks_per_cycle,
             seed: cfg.seed,
             cost: *cost,
+        };
+        match obs {
+            None => engine.run(&self.model),
+            Some(observer) => engine.run_observed(&self.model, &|| self.probe_now(), observer),
         }
-        .run(&self.model)
     }
 
-    fn run_stepwise(&self, workers: usize, seed: u64) -> Result<RunReport> {
+    fn run_stepwise(
+        &self,
+        workers: usize,
+        seed: u64,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
         match self.stepwise {
-            Some(f) => Ok(f(&self.model, workers, seed)),
+            Some(f) => Ok(match obs {
+                None => f(&self.model, workers, seed, None),
+                Some(observer) => f(
+                    &self.model,
+                    workers,
+                    seed,
+                    Some((&|| self.probe_now(), observer)),
+                ),
+            }),
             None => Err(crate::err!(
                 "model `{}` has no synchronous form; the stepwise engine requires one \
                  (that is the paper's point about sequential-form models)",
@@ -160,11 +245,12 @@ impl<M: Model> DynModel for Runnable<M> {
         self.stepwise.is_some()
     }
 
-    fn observable(&self) -> String {
-        match &self.observe {
-            Some(f) => f(&self.model),
-            None => format!("{}: run complete", self.name),
-        }
+    fn observe(&self) -> Metrics {
+        self.probe_now()
+    }
+
+    fn task_count_hint(&self, seed: u64) -> Option<u64> {
+        self.model.source(seed).size_hint()
     }
 
     fn check_consistency(&self) -> Result<()> {
@@ -183,21 +269,30 @@ impl<M: Model> DynModel for Runnable<M> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::observe::{frame_count, ObsValue};
     use crate::model::testkit::IncModel;
 
     #[test]
     fn erased_model_runs_on_every_core_engine() {
         let dyn_model: Box<dyn DynModel> = Runnable::new("inc", IncModel::new(200, 8))
-            .observed(|m| format!("cells={:?}", &m.cells_snapshot()[..2]))
+            .observed(|m| {
+                vec![(
+                    "cell0".to_string(),
+                    ObsValue::Int(m.cells_snapshot()[0] as i64),
+                )]
+            })
             .boxed();
-        let seq = dyn_model.run_sequential(3);
+        let seq = dyn_model.run_sequential(3, None);
         assert_eq!(seq.totals.executed, 200);
-        let par = dyn_model.run_parallel(&ProtocolConfig {
-            workers: 2,
-            tasks_per_cycle: 6,
-            seed: 3,
-            collect_timing: false,
-        });
+        let par = dyn_model.run_parallel(
+            &ProtocolConfig {
+                workers: 2,
+                tasks_per_cycle: 6,
+                seed: 3,
+                collect_timing: false,
+            },
+            None,
+        );
         assert_eq!(par.totals.executed, 200);
         let virt = dyn_model.run_virtual(
             &ProtocolConfig {
@@ -207,12 +302,59 @@ mod tests {
                 collect_timing: false,
             },
             &CostModel::default(),
+            None,
         );
         assert_eq!(virt.totals.executed, 200);
         assert!(virt.time_s > 0.0);
-        assert!(dyn_model.observable().starts_with("cells="));
+        assert!(matches!(
+            dyn_model.observe().as_slice(),
+            [(name, ObsValue::Int(_))] if name == "cell0"
+        ));
+        assert_eq!(dyn_model.task_count_hint(3), Some(200));
         assert!(!dyn_model.has_sync_form());
-        assert!(dyn_model.run_stepwise(2, 3).is_err());
+        assert!(dyn_model.run_stepwise(2, 3, None).is_err());
         dyn_model.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn observed_runs_produce_the_same_trace_on_every_engine() {
+        let build = || {
+            Runnable::new("inc", IncModel::new(100, 8))
+                .observed(|m| {
+                    vec![(
+                        "cells".to_string(),
+                        ObsValue::Series(
+                            m.cells_snapshot().iter().map(|&c| c as f64).collect(),
+                        ),
+                    )]
+                })
+                .boxed()
+        };
+        let trace = |run: &dyn Fn(&dyn DynModel, &mut Observer)| {
+            let model = build();
+            let mut obs = Observer::new(30);
+            run(model.as_ref(), &mut obs);
+            obs.finish().unwrap()
+        };
+        let reference = trace(&|m, o| {
+            m.run_sequential(5, Some(o));
+        });
+        assert_eq!(reference.len() as u64, frame_count(30, 100), "0,30,60,90,100");
+        for workers in [1, 2, 4] {
+            let cfg = ProtocolConfig {
+                workers,
+                tasks_per_cycle: 6,
+                seed: 5,
+                collect_timing: false,
+            };
+            let got = trace(&|m, o| {
+                m.run_parallel(&cfg, Some(o));
+            });
+            assert_eq!(got, reference, "parallel n={workers}");
+            let got = trace(&|m, o| {
+                m.run_virtual(&cfg, &CostModel::default(), Some(o));
+            });
+            assert_eq!(got, reference, "virtual n={workers}");
+        }
     }
 }

@@ -1,0 +1,879 @@
+//! The typed observation pipeline: named metrics, deterministic epoch
+//! snapshots, and pluggable sinks.
+//!
+//! The paper's experiments are about *trajectories* (epidemic curves,
+//! cultural-domain counts over time), so observation is a first-class
+//! subsystem, not a post-run string:
+//!
+//! * [`ObsValue`] — a typed metric value (scalar / integer / series /
+//!   labelled counts).
+//! * [`Observable`] — implemented by models to export named typed metrics
+//!   from quiescent state (SIR census, Axelrod domain counts, Ising
+//!   magnetization, ...).
+//! * [`Observer`] — the engine-facing recorder: collects [`ObsFrame`]s at
+//!   a cadence of `every` canonical tasks (an *epoch*) and streams them to
+//!   attached [`Sink`]s (CSV, JSON-lines, progress line).
+//! * [`Observations`] — the finished trace carried by
+//!   [`SimOutcome`](crate::api::SimOutcome); structurally comparable
+//!   (`PartialEq`) and `Display`-compatible with the old stringly
+//!   observable.
+//! * [`EpochGate`] — a [`TaskSource`] adapter that marks epoch boundaries
+//!   every `N` canonical tasks by reporting (temporary) exhaustion, which
+//!   is how the chain engines reach quiescence before snapshotting.
+//!
+//! ## Determinism contract (DESIGN.md §5a)
+//!
+//! A frame at task count `t` is only ever taken when the executed tasks
+//! are exactly the canonical prefix `0..t` and no task is in flight. The
+//! parallel engine drains its chain at epoch boundaries, the virtual
+//! testbed drains its DES, and the stepwise baseline splits phases at the
+//! boundary block — so at a fixed seed the *whole trace* is bit-identical
+//! across engines and worker counts, not just the final state.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Context, Result};
+use crate::model::TaskSource;
+use crate::util::json::Json;
+
+/// A snapshot's payload: ordered `(metric name, value)` pairs.
+pub type Metrics = Vec<(String, ObsValue)>;
+
+/// A borrowed quiescent-state probe: engines call it only while no task
+/// is executing.
+pub type ObsProbe<'a> = &'a (dyn Fn() -> Metrics + 'a);
+
+/// One typed metric value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ObsValue {
+    /// A real-valued scalar (e.g. magnetization, segregation index).
+    Float(f64),
+    /// An integer scalar (e.g. number of cultural domains).
+    Int(i64),
+    /// A fixed-order series of reals (e.g. a per-bin histogram).
+    Series(Vec<f64>),
+    /// Labelled counts (e.g. the SIR census `S`/`I`/`R`).
+    Counts(Vec<(String, i64)>),
+}
+
+impl ObsValue {
+    /// Build a [`ObsValue::Counts`] from `(label, count)` pairs.
+    pub fn counts<L: Into<String>, I: IntoIterator<Item = (L, i64)>>(pairs: I) -> Self {
+        ObsValue::Counts(pairs.into_iter().map(|(l, c)| (l.into(), c)).collect())
+    }
+
+    /// The value as JSON (counts become an object, series an array).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ObsValue::Float(x) => Json::from(*x),
+            ObsValue::Int(i) => Json::from(*i),
+            ObsValue::Series(v) => Json::Arr(v.iter().map(|&x| Json::from(x)).collect()),
+            ObsValue::Counts(c) => {
+                Json::Obj(c.iter().map(|(l, n)| (l.clone(), Json::from(*n))).collect())
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for ObsValue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ObsValue::Float(x) => write!(f, "{x}"),
+            ObsValue::Int(i) => write!(f, "{i}"),
+            ObsValue::Series(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            ObsValue::Counts(c) => {
+                f.write_str("{")?;
+                for (i, (l, n)) in c.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(" ")?;
+                    }
+                    write!(f, "{l}={n}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+/// A model that exports named typed metrics.
+///
+/// Implementations read **quiescent** state only: the engines guarantee
+/// that [`observe`](Observable::observe) is never called while a task is
+/// executing (epoch boundaries drain first).
+pub trait Observable {
+    /// Snapshot the model's metrics, in a fixed order.
+    fn observe(&self) -> Metrics;
+}
+
+/// One snapshot of a run at an epoch boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsFrame {
+    /// Canonical task count at which the snapshot was taken (`0` is the
+    /// initial state, before any task executed).
+    pub tasks: u64,
+    /// The metric values, in the model's fixed order.
+    pub values: Metrics,
+}
+
+impl ObsFrame {
+    /// Value of a metric by name.
+    pub fn get(&self, name: &str) -> Option<&ObsValue> {
+        self.values.iter().find(|(n, _)| n == name).map(|(_, v)| v)
+    }
+}
+
+impl std::fmt::Display for ObsFrame {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.values.is_empty() {
+            return write!(f, "(no metrics)");
+        }
+        for (i, (name, value)) in self.values.iter().enumerate() {
+            if i > 0 {
+                f.write_str(" ")?;
+            }
+            write!(f, "{name}={value}")?;
+        }
+        Ok(())
+    }
+}
+
+/// A finished observation trace — the structured replacement for the old
+/// post-run `observable: String`.
+///
+/// Structurally comparable across engines (`PartialEq`); `Display` prints
+/// the final frame, so the old string uses (`println!`, equality in
+/// validation output) keep working.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Observations {
+    /// Epoch cadence in canonical tasks (`0` = final frame only).
+    pub every: u64,
+    /// Frames in task-count order; the last frame is the final state.
+    pub frames: Vec<ObsFrame>,
+}
+
+impl Observations {
+    /// An empty trace (no frames recorded).
+    pub fn empty() -> Self {
+        Self {
+            every: 0,
+            frames: Vec::new(),
+        }
+    }
+
+    /// Number of frames.
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    /// Whether no frames were recorded.
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    /// The final frame, if any.
+    pub fn final_frame(&self) -> Option<&ObsFrame> {
+        self.frames.last()
+    }
+
+    /// Final value of a metric by name.
+    pub fn value(&self, name: &str) -> Option<&ObsValue> {
+        self.final_frame().and_then(|f| f.get(name))
+    }
+
+    /// The `(tasks, value)` trajectory of one metric across all frames.
+    pub fn series(&self, name: &str) -> Vec<(u64, &ObsValue)> {
+        self.frames
+            .iter()
+            .filter_map(|f| f.get(name).map(|v| (f.tasks, v)))
+            .collect()
+    }
+
+    /// The whole trace as JSON: `{"every": N, "frames": [...]}`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("every".into(), Json::from(self.every)),
+            (
+                "frames".into(),
+                Json::Arr(
+                    self.frames
+                        .iter()
+                        .map(|f| {
+                            let mut fields = vec![("tasks".into(), Json::from(f.tasks))];
+                            fields.extend(
+                                f.values.iter().map(|(n, v)| (n.clone(), v.to_json())),
+                            );
+                            Json::Obj(fields)
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+impl std::fmt::Display for Observations {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.final_frame() {
+            Some(frame) => std::fmt::Display::fmt(frame, f),
+            None => f.write_str("(no observations)"),
+        }
+    }
+}
+
+/// Number of frames a full trace holds: the initial frame at `t = 0`,
+/// one per full epoch, and the final (possibly partial) epoch's frame.
+/// `every == 0` means "final frame only".
+pub fn frame_count(every: u64, total_tasks: u64) -> u64 {
+    if every == 0 || total_tasks == 0 {
+        return 1;
+    }
+    1 + total_tasks / every + u64::from(total_tasks % every != 0)
+}
+
+// ---------------------------------------------------------------------------
+// Sinks
+// ---------------------------------------------------------------------------
+
+/// A destination for frames, fed in task-count order during the run.
+pub trait Sink: Send {
+    /// Consume one frame.
+    fn record(&mut self, frame: &ObsFrame) -> Result<()>;
+
+    /// Flush at end of run.
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Flatten a frame into CSV column names: `tasks`, one column per
+/// scalar/series metric, one `metric.label` column per counts label.
+fn csv_columns(frame: &ObsFrame) -> Vec<String> {
+    let mut cols = vec!["tasks".to_string()];
+    for (name, value) in &frame.values {
+        match value {
+            ObsValue::Counts(c) => {
+                cols.extend(c.iter().map(|(l, _)| format!("{name}.{l}")));
+            }
+            _ => cols.push(name.clone()),
+        }
+    }
+    cols
+}
+
+/// Flatten a frame into CSV cells matching [`csv_columns`]'s order.
+fn csv_cells(frame: &ObsFrame) -> Vec<String> {
+    let mut cells = vec![frame.tasks.to_string()];
+    for (_, value) in &frame.values {
+        match value {
+            ObsValue::Float(x) => cells.push(format!("{x}")),
+            ObsValue::Int(i) => cells.push(format!("{i}")),
+            ObsValue::Series(v) => cells.push(
+                v.iter()
+                    .map(|x| format!("{x}"))
+                    .collect::<Vec<_>>()
+                    .join(";"),
+            ),
+            ObsValue::Counts(c) => cells.extend(c.iter().map(|(_, n)| n.to_string())),
+        }
+    }
+    cells
+}
+
+/// Open a buffered sink file, creating parent directories.
+fn create_sink_file(path: &Path) -> Result<Box<dyn Write + Send>> {
+    crate::util::create_parent_dirs(path)?;
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    Ok(Box::new(std::io::BufWriter::new(file)))
+}
+
+/// Streams frames as CSV rows (header derived from the first frame).
+pub struct CsvSink {
+    out: Box<dyn Write + Send>,
+    header: Option<Vec<String>>,
+}
+
+impl CsvSink {
+    /// Create (truncate) a CSV file, making parent directories.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Ok(Self::from_writer(create_sink_file(path.as_ref())?))
+    }
+
+    /// Stream to an arbitrary writer.
+    pub fn from_writer(out: Box<dyn Write + Send>) -> Self {
+        Self { out, header: None }
+    }
+}
+
+impl Sink for CsvSink {
+    fn record(&mut self, frame: &ObsFrame) -> Result<()> {
+        let cols = csv_columns(frame);
+        match &self.header {
+            None => {
+                writeln!(self.out, "{}", cols.join(","))?;
+                self.header = Some(cols);
+            }
+            Some(h) => crate::ensure!(
+                *h == cols,
+                "observation metrics changed shape mid-run (CSV sink): \
+                 had {h:?}, got {cols:?}"
+            ),
+        }
+        writeln!(self.out, "{}", csv_cells(frame).join(","))?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Streams frames as JSON-lines: one `{"tasks": N, "<metric>": ...}`
+/// object per line.
+pub struct JsonLinesSink {
+    out: Box<dyn Write + Send>,
+}
+
+impl JsonLinesSink {
+    /// Create (truncate) a `.jsonl` file, making parent directories.
+    pub fn create<P: AsRef<Path>>(path: P) -> Result<Self> {
+        Ok(Self::from_writer(create_sink_file(path.as_ref())?))
+    }
+
+    /// Stream to an arbitrary writer.
+    pub fn from_writer(out: Box<dyn Write + Send>) -> Self {
+        Self { out }
+    }
+}
+
+impl Sink for JsonLinesSink {
+    fn record(&mut self, frame: &ObsFrame) -> Result<()> {
+        let mut fields = vec![("tasks".to_string(), Json::from(frame.tasks))];
+        fields.extend(frame.values.iter().map(|(n, v)| (n.clone(), v.to_json())));
+        writeln!(self.out, "{}", Json::Obj(fields).render())?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Writes a progress line per frame to stderr; uses
+/// [`TaskSource::size_hint`] for a percentage when the total is known and
+/// falls back to a plain frame counter when it is not.
+pub struct ProgressSink {
+    total: Option<u64>,
+    frames_seen: u64,
+}
+
+impl ProgressSink {
+    /// `total` is the expected task count, if known.
+    pub fn new(total: Option<u64>) -> Self {
+        Self {
+            total,
+            frames_seen: 0,
+        }
+    }
+}
+
+impl Sink for ProgressSink {
+    fn record(&mut self, frame: &ObsFrame) -> Result<()> {
+        self.frames_seen += 1;
+        match self.total {
+            Some(total) if total > 0 => eprintln!(
+                "observe: {}/{} tasks ({:.0}%) {}",
+                frame.tasks,
+                total,
+                100.0 * frame.tasks as f64 / total as f64,
+                frame
+            ),
+            _ => eprintln!(
+                "observe: {} tasks (frame {}) {}",
+                frame.tasks, self.frames_seen, frame
+            ),
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Observer + plan
+// ---------------------------------------------------------------------------
+
+/// The engine-facing recorder: cadence, the in-memory trace, and any
+/// attached sinks. Engines call [`record`](Observer::record) only at
+/// quiescent points; [`finish`](Observer::finish) yields the trace.
+pub struct Observer {
+    every: u64,
+    frames: Vec<ObsFrame>,
+    sinks: Vec<Box<dyn Sink>>,
+    sink_error: Option<crate::error::Error>,
+}
+
+impl Observer {
+    /// A recorder with the given epoch cadence (`0` = final frame only).
+    pub fn new(every: u64) -> Self {
+        Self {
+            every,
+            frames: Vec::new(),
+            sinks: Vec::new(),
+            sink_error: None,
+        }
+    }
+
+    /// Attach a sink (builder style).
+    pub fn with_sink(mut self, sink: impl Sink + 'static) -> Self {
+        self.sinks.push(Box::new(sink));
+        self
+    }
+
+    /// Attach a boxed sink.
+    pub fn add_sink(&mut self, sink: Box<dyn Sink>) {
+        self.sinks.push(sink);
+    }
+
+    /// Epoch cadence in canonical tasks (`0` = final frame only).
+    pub fn every(&self) -> u64 {
+        self.every
+    }
+
+    /// The cadence as an [`EpochGate`] budget: cadence `0` ("final frame
+    /// only") becomes one unbounded epoch. All engines derive their epoch
+    /// length from this, so the contract lives in one place.
+    pub fn gate_cadence(&self) -> u64 {
+        if self.every == 0 {
+            u64::MAX
+        } else {
+            self.every
+        }
+    }
+
+    /// Record the initial frame (task count 0) — a no-op at cadence `0`,
+    /// which records the final frame only. Engines call this once before
+    /// executing anything.
+    pub fn record_initial(&mut self, probe: ObsProbe<'_>) {
+        if self.every > 0 {
+            self.record(0, probe());
+        }
+    }
+
+    /// Whether `executed` is an epoch boundary at this cadence. Task
+    /// count 0 is never a boundary — the initial frame is
+    /// [`record_initial`](Observer::record_initial)'s job.
+    pub fn due(&self, executed: u64) -> bool {
+        executed > 0 && self.every > 0 && executed % self.every == 0
+    }
+
+    /// Pre-size the trace from the source's
+    /// [`size_hint`](TaskSource::size_hint); a `None` hint is a no-op.
+    pub fn reserve_for(&mut self, total_tasks: Option<u64>) {
+        if let Some(total) = total_tasks {
+            // Cap the reservation: a bogus hint must not pre-allocate
+            // unbounded memory.
+            let n = frame_count(self.every, total).min(1 << 20);
+            self.frames.reserve(n as usize);
+        }
+    }
+
+    /// Record a frame at canonical task count `tasks`. A repeat of the
+    /// last frame's task count is skipped (the final boundary may
+    /// coincide with the last epoch). Sink errors are deferred to
+    /// [`finish`](Observer::finish).
+    pub fn record(&mut self, tasks: u64, values: Metrics) {
+        if self.frames.last().is_some_and(|f| f.tasks == tasks) {
+            return;
+        }
+        let frame = ObsFrame { tasks, values };
+        if self.sink_error.is_none() {
+            for sink in &mut self.sinks {
+                if let Err(e) = sink.record(&frame) {
+                    self.sink_error = Some(e);
+                    break;
+                }
+            }
+        }
+        self.frames.push(frame);
+    }
+
+    /// Frames recorded so far.
+    pub fn frames(&self) -> &[ObsFrame] {
+        &self.frames
+    }
+
+    /// Flush sinks and return the finished trace; surfaces any deferred
+    /// sink error.
+    pub fn finish(mut self) -> Result<Observations> {
+        if let Some(e) = self.sink_error.take() {
+            return Err(e.context("observation sink failed"));
+        }
+        for sink in &mut self.sinks {
+            sink.finish()?;
+        }
+        Ok(Observations {
+            every: self.every,
+            frames: self.frames,
+        })
+    }
+}
+
+/// Declarative sink configuration — kept on the (cloneable)
+/// [`Simulation`](crate::api::Simulation) and materialized at run time.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SinkSpec {
+    /// Write the trace as CSV to a file.
+    Csv(PathBuf),
+    /// Write the trace as JSON-lines to a file.
+    JsonLines(PathBuf),
+    /// Print a progress line per epoch to stderr.
+    Progress,
+}
+
+impl SinkSpec {
+    /// Materialize the sink. `total_tasks` is the run's
+    /// [`size_hint`](TaskSource::size_hint), used by the progress sink.
+    pub fn build(&self, total_tasks: Option<u64>) -> Result<Box<dyn Sink>> {
+        Ok(match self {
+            SinkSpec::Csv(path) => Box::new(CsvSink::create(path)?),
+            SinkSpec::JsonLines(path) => Box::new(JsonLinesSink::create(path)?),
+            SinkSpec::Progress => Box::new(ProgressSink::new(total_tasks)),
+        })
+    }
+}
+
+/// The builder-facing observation request: cadence plus sinks.
+///
+/// ```
+/// use adapar::ObservePlan;
+///
+/// let plan = ObservePlan::every(2_000).csv("target/epidemic.csv");
+/// assert!(plan.active());
+/// ```
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ObservePlan {
+    /// Epoch cadence in canonical tasks (`0` = final frame only).
+    pub every: u64,
+    /// Sinks to attach.
+    pub sinks: Vec<SinkSpec>,
+}
+
+impl ObservePlan {
+    /// A plan snapshotting every `n` canonical tasks.
+    pub fn every(n: u64) -> Self {
+        Self {
+            every: n,
+            sinks: Vec::new(),
+        }
+    }
+
+    /// Also write the trace as CSV to `path`.
+    pub fn csv<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.sinks.push(SinkSpec::Csv(path.into()));
+        self
+    }
+
+    /// Also write the trace as JSON-lines to `path`.
+    pub fn jsonl<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.sinks.push(SinkSpec::JsonLines(path.into()));
+        self
+    }
+
+    /// Also print a progress line per epoch to stderr.
+    pub fn progress(mut self) -> Self {
+        self.sinks.push(SinkSpec::Progress);
+        self
+    }
+
+    /// Whether the engines need epoch snapshots (cadence set).
+    pub fn active(&self) -> bool {
+        self.every > 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epoch gating of a task source
+// ---------------------------------------------------------------------------
+
+/// A [`TaskSource`] adapter that marks epoch boundaries: it hands out the
+/// inner source's tasks until the current epoch's budget is spent, then
+/// reports exhaustion. The engine drains to quiescence, snapshots, asks
+/// [`finished`](EpochGate::finished), and [`open`](EpochGate::open)s the
+/// next epoch.
+///
+/// The canonical task order — and with it every per-task RNG stream — is
+/// untouched by epoching: the only lookahead is the single task
+/// [`finished`](EpochGate::finished) may buffer, drawn at a quiescent
+/// boundary whose state is identical to the start of the next epoch.
+pub struct EpochGate<S: TaskSource> {
+    inner: S,
+    /// Task buffered by [`finished`](EpochGate::finished); served first.
+    pending: Option<S::Recipe>,
+    emitted: u64,
+    budget: u64,
+    inner_exhausted: bool,
+}
+
+impl<S: TaskSource> EpochGate<S> {
+    /// Wrap a source; the gate starts closed ([`open`](EpochGate::open)
+    /// the first epoch before running).
+    pub fn new(inner: S) -> Self {
+        Self {
+            inner,
+            pending: None,
+            emitted: 0,
+            budget: 0,
+            inner_exhausted: false,
+        }
+    }
+
+    /// Open the next epoch: allow `every` more tasks (`u64::MAX`-safe).
+    pub fn open(&mut self, every: u64) {
+        self.budget = self.emitted.saturating_add(every);
+    }
+
+    /// Canonical tasks emitted so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted
+    }
+
+    /// Whether the *inner* source is truly exhausted (as opposed to the
+    /// epoch budget being spent).
+    pub fn source_exhausted(&self) -> bool {
+        self.inner_exhausted
+    }
+
+    /// Whether the run is over: nothing buffered and the inner source has
+    /// no further task. Called by engines at a drained epoch boundary; it
+    /// may buffer one task so that a budget spent exactly at exhaustion
+    /// does not cost a spurious empty epoch.
+    pub fn finished(&mut self) -> bool {
+        if self.pending.is_some() {
+            return false;
+        }
+        if self.inner_exhausted {
+            return true;
+        }
+        match self.inner.next_task() {
+            Some(recipe) => {
+                self.pending = Some(recipe);
+                false
+            }
+            None => {
+                self.inner_exhausted = true;
+                true
+            }
+        }
+    }
+}
+
+impl<S: TaskSource> TaskSource for EpochGate<S> {
+    type Recipe = S::Recipe;
+
+    fn next_task(&mut self) -> Option<S::Recipe> {
+        if self.emitted >= self.budget {
+            return None;
+        }
+        if let Some(recipe) = self.pending.take() {
+            self.emitted += 1;
+            return Some(recipe);
+        }
+        if self.inner_exhausted {
+            return None;
+        }
+        match self.inner.next_task() {
+            Some(recipe) => {
+                self.emitted += 1;
+                Some(recipe)
+            }
+            None => {
+                self.inner_exhausted = true;
+                None
+            }
+        }
+    }
+
+    fn size_hint(&self) -> Option<u64> {
+        self.inner
+            .size_hint()
+            .map(|n| n + u64::from(self.pending.is_some()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_count_boundary_math() {
+        // Final-only cadence.
+        assert_eq!(frame_count(0, 400), 1);
+        // Exact division: 0, E, 2E, ..., T.
+        assert_eq!(frame_count(100, 400), 5);
+        // Partial last epoch adds one frame.
+        assert_eq!(frame_count(150, 400), 4); // 0, 150, 300, 400
+        // Epoch longer than the whole run: initial + final.
+        assert_eq!(frame_count(10_000, 400), 2);
+        // Degenerate runs.
+        assert_eq!(frame_count(10, 0), 1);
+        assert_eq!(frame_count(1, 3), 4); // 0, 1, 2, 3
+    }
+
+    #[test]
+    fn observer_dedups_coinciding_final_frame() {
+        let mut obs = Observer::new(100);
+        assert!(obs.due(100) && obs.due(200) && !obs.due(150) && !obs.due(0));
+        obs.record(0, vec![]);
+        obs.record(100, vec![]);
+        obs.record(200, vec![]);
+        obs.record(200, vec![]); // final boundary == last epoch
+        let trace = obs.finish().unwrap();
+        assert_eq!(trace.len(), 3);
+        assert_eq!(
+            trace.frames.iter().map(|f| f.tasks).collect::<Vec<_>>(),
+            vec![0, 100, 200]
+        );
+        assert_eq!(trace.every, 100);
+    }
+
+    #[test]
+    fn epoch_gate_budget_and_resume() {
+        struct Seq(u64, u64); // next, total
+        impl TaskSource for Seq {
+            type Recipe = u64;
+            fn next_task(&mut self) -> Option<u64> {
+                if self.0 >= self.1 {
+                    return None;
+                }
+                self.0 += 1;
+                Some(self.0 - 1)
+            }
+            fn size_hint(&self) -> Option<u64> {
+                Some(self.1 - self.0)
+            }
+        }
+        let mut gate = EpochGate::new(Seq(0, 10));
+        assert_eq!(gate.next_task(), None, "gate starts closed");
+        gate.open(4);
+        assert_eq!(
+            std::iter::from_fn(|| gate.next_task()).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        assert!(!gate.finished(), "more tasks remain (one gets buffered)");
+        assert_eq!(gate.emitted(), 4);
+        assert_eq!(gate.size_hint(), Some(6), "buffered task still counts");
+        gate.open(4);
+        assert_eq!(
+            std::iter::from_fn(|| gate.next_task()).collect::<Vec<_>>(),
+            vec![4, 5, 6, 7],
+            "the buffered task is served first, in canonical order"
+        );
+        assert!(!gate.finished());
+        gate.open(4); // partial final epoch
+        assert_eq!(
+            std::iter::from_fn(|| gate.next_task()).collect::<Vec<_>>(),
+            vec![8, 9]
+        );
+        assert!(gate.finished());
+        assert!(gate.source_exhausted());
+        assert_eq!(gate.emitted(), 10);
+        gate.open(4);
+        assert_eq!(gate.next_task(), None, "exhaustion is permanent");
+    }
+
+    #[test]
+    fn epoch_gate_exact_division_needs_no_extra_epoch() {
+        struct Seq(u64, u64);
+        impl TaskSource for Seq {
+            type Recipe = u64;
+            fn next_task(&mut self) -> Option<u64> {
+                if self.0 >= self.1 {
+                    return None;
+                }
+                self.0 += 1;
+                Some(self.0 - 1)
+            }
+        }
+        let mut gate = EpochGate::new(Seq(0, 8));
+        gate.open(8);
+        assert_eq!(std::iter::from_fn(|| gate.next_task()).count(), 8);
+        assert!(
+            gate.finished(),
+            "budget spent exactly at exhaustion must not cost an empty epoch"
+        );
+    }
+
+    #[test]
+    fn obsvalue_display_and_json() {
+        let census = ObsValue::counts([("S", 3), ("I", 2), ("R", 1)]);
+        assert_eq!(census.to_string(), "{S=3 I=2 R=1}");
+        assert_eq!(census.to_json().render(), r#"{"S":3,"I":2,"R":1}"#);
+        assert_eq!(ObsValue::Float(0.25).to_string(), "0.25");
+        assert_eq!(ObsValue::Int(-4).to_string(), "-4");
+        assert_eq!(ObsValue::Series(vec![1.0, 2.5]).to_string(), "[1,2.5]");
+        assert_eq!(
+            ObsValue::Series(vec![1.0, 2.5]).to_json().render(),
+            "[1,2.5]"
+        );
+    }
+
+    #[test]
+    fn frame_and_trace_display() {
+        let frame = ObsFrame {
+            tasks: 40,
+            values: vec![
+                ("census".into(), ObsValue::counts([("S", 9), ("I", 1)])),
+                ("m".into(), ObsValue::Float(0.5)),
+            ],
+        };
+        assert_eq!(frame.to_string(), "census={S=9 I=1} m=0.5");
+        let trace = Observations {
+            every: 20,
+            frames: vec![frame.clone()],
+        };
+        assert_eq!(trace.to_string(), frame.to_string());
+        assert_eq!(trace.value("m"), Some(&ObsValue::Float(0.5)));
+        assert_eq!(trace.series("m"), vec![(40, &ObsValue::Float(0.5))]);
+        assert_eq!(Observations::empty().to_string(), "(no observations)");
+    }
+
+    #[test]
+    fn csv_flattening() {
+        let frame = ObsFrame {
+            tasks: 7,
+            values: vec![
+                ("census".into(), ObsValue::counts([("S", 9), ("I", 1)])),
+                ("m".into(), ObsValue::Float(0.5)),
+                ("h".into(), ObsValue::Series(vec![1.0, 2.0])),
+            ],
+        };
+        assert_eq!(csv_columns(&frame), vec!["tasks", "census.S", "census.I", "m", "h"]);
+        assert_eq!(csv_cells(&frame), vec!["7", "9", "1", "0.5", "1;2"]);
+    }
+
+    #[test]
+    fn observations_json_shape() {
+        let trace = Observations {
+            every: 5,
+            frames: vec![ObsFrame {
+                tasks: 0,
+                values: vec![("m".into(), ObsValue::Int(3))],
+            }],
+        };
+        assert_eq!(
+            trace.to_json().render(),
+            r#"{"every":5,"frames":[{"tasks":0,"m":3}]}"#
+        );
+    }
+}

@@ -391,9 +391,7 @@ mod bundled {
                 steps: ctx.steps,
             };
             let model = AxelrodModel::new(params, ctx.seed ^ 0x1217);
-            Ok(Runnable::new("axelrod", model)
-                .observed(|m| format!("traits[0..4]={:?}", &m.snapshot()[..4]))
-                .boxed())
+            Ok(Runnable::new("axelrod", model).observable().boxed())
         })
     }
 
@@ -419,13 +417,7 @@ mod bundled {
                     .f64_or("initial_infected", SirParams::default().initial_infected)?,
             };
             let model = SirModel::new(params, ctx.seed ^ 0x51);
-            Ok(Runnable::new("sir", model)
-                .observed(|m| {
-                    let (s, i, r) = m.census();
-                    format!("census S={s} I={i} R={r}")
-                })
-                .with_sync()
-                .boxed())
+            Ok(Runnable::new("sir", model).observable().with_sync().boxed())
         })
     }
 
@@ -446,9 +438,7 @@ mod bundled {
                 },
                 ctx.seed ^ 0x70,
             );
-            Ok(Runnable::new("voter", model)
-                .observed(|m| format!("tally={:?}", m.tally()))
-                .boxed())
+            Ok(Runnable::new("voter", model).observable().boxed())
         })
     }
 
@@ -466,9 +456,7 @@ mod bundled {
                 steps: ctx.steps,
             };
             let model = IsingModel::new(params, ctx.seed ^ 0x15);
-            Ok(Runnable::new("ising", model)
-                .observed(|m| format!("m={:+.4}", m.magnetization()))
-                .boxed())
+            Ok(Runnable::new("ising", model).observable().boxed())
         })
     }
 
@@ -492,7 +480,7 @@ mod bundled {
             };
             let model = SchellingModel::new(params, ctx.seed ^ 0x5C);
             Ok(Runnable::new("schelling", model)
-                .observed(|m| format!("segregation={:.4}", m.segregation()))
+                .observable()
                 .checked(|m| m.check_consistency())
                 .boxed())
         })
@@ -556,7 +544,7 @@ mod tests {
             )
             .unwrap();
         assert_eq!(m.name(), "axelrod");
-        let rep = m.run_sequential(1);
+        let rep = m.run_sequential(1, None);
         assert_eq!(rep.totals.executed, 10);
     }
 

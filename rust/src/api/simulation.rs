@@ -3,7 +3,7 @@
 //! benches and the examples.
 //!
 //! ```no_run
-//! use adapar::{EngineKind, Simulation};
+//! use adapar::{EngineKind, ObservePlan, Simulation};
 //!
 //! let out = Simulation::builder()
 //!     .model("sir")
@@ -11,16 +11,25 @@
 //!     .engine(EngineKind::Parallel)
 //!     .workers(8)
 //!     .seed(7)
+//!     // Snapshot the typed metrics every 50k tasks → an epidemic curve.
+//!     .observe(ObservePlan::every(50_000).csv("target/epidemic.csv"))
 //!     .run()?;
 //! println!("{}: T={}s {}", out.report.engine, out.report.time_s, out.observable);
+//! for (tasks, census) in out.observable.series("census") {
+//!     println!("{tasks}: {census}");
+//! }
 //! # Ok::<(), adapar::error::Error>(())
 //! ```
 //!
 //! Models are resolved by name through the [registry](crate::api::registry),
 //! so anything registered there — bundled or user-defined — runs on any
-//! legal engine with no launcher edits.
+//! legal engine with no launcher edits. Observation traces are
+//! deterministic: the engines snapshot only at drained epoch boundaries,
+//! so the trace above is byte-identical across engines and worker counts
+//! at a fixed seed.
 
 use crate::api::engine::{engine_for, EngineKind};
+use crate::api::observe::{Observations, ObservePlan, Observer};
 use crate::api::registry::{self, BuildCtx, Params};
 use crate::error::Result;
 use crate::protocol::{ProtocolConfig, RunReport};
@@ -32,8 +41,10 @@ use crate::vtime::CostModel;
 pub struct SimOutcome {
     /// The engine's unified report (timings + protocol counters).
     pub report: RunReport,
-    /// The model's post-run observable.
-    pub observable: String,
+    /// The typed observation trace. Without an observation plan this
+    /// holds exactly one frame — the final state — so `Display` (and
+    /// structural comparison) replace the old post-run string.
+    pub observable: Observations,
 }
 
 /// A fully-specified single simulation. Build with
@@ -63,6 +74,8 @@ pub struct Simulation {
     pub params: Params,
     /// Cost model for the virtual testbed (None = built-in defaults).
     pub cost: Option<CostModel>,
+    /// Observation request: epoch cadence + sinks.
+    pub observe: ObservePlan,
 }
 
 impl Default for Simulation {
@@ -79,6 +92,7 @@ impl Default for Simulation {
             paper_scale: false,
             params: Params::new(),
             cost: None,
+            observe: ObservePlan::default(),
         }
     }
 }
@@ -91,8 +105,8 @@ impl Simulation {
         }
     }
 
-    /// Run to completion: registry lookup → engine dispatch → post-run
-    /// consistency check.
+    /// Run to completion: registry lookup → engine dispatch (with epoch
+    /// observation when requested) → post-run consistency check.
     pub fn run(&self) -> Result<SimOutcome> {
         let info = registry::info(&self.model)?;
         let ctx = BuildCtx {
@@ -124,11 +138,32 @@ impl Simulation {
             self.seed,
             self.cost.unwrap_or_default(),
         );
-        let report = engine.run(model.as_ref())?;
+
+        // Materialize the observation pipeline: the in-memory trace is
+        // always produced; sinks and pre-sizing come from the plan and
+        // the source's size hint. The hint builds a throwaway source, so
+        // it is only computed when something consumes it.
+        let mut observer = Observer::new(self.observe.every);
+        if self.observe.active() || !self.observe.sinks.is_empty() {
+            let hint = model.task_count_hint(self.seed);
+            observer.reserve_for(hint);
+            for spec in &self.observe.sinks {
+                observer.add_sink(spec.build(hint)?);
+            }
+        }
+
+        let report = if self.observe.active() {
+            engine.run_observed(model.as_ref(), Some(&mut observer))?
+        } else {
+            engine.run(model.as_ref())?
+        };
         model.check_consistency()?;
+        // The final frame: a no-op when the observed run already recorded
+        // it (same task count), the whole trace when cadence was 0.
+        observer.record(report.chain.tasks_executed, model.observe());
         Ok(SimOutcome {
             report,
-            observable: model.observable(),
+            observable: observer.finish()?,
         })
     }
 }
@@ -218,6 +253,19 @@ impl SimulationBuilder {
         self
     }
 
+    /// Request typed observation: epoch cadence plus sinks.
+    pub fn observe(mut self, plan: ObservePlan) -> Self {
+        self.sim.observe = plan;
+        self
+    }
+
+    /// Shorthand: snapshot every `n` canonical tasks (keeps any sinks
+    /// already configured via [`observe`](SimulationBuilder::observe)).
+    pub fn every(mut self, n: u64) -> Self {
+        self.sim.observe.every = n;
+        self
+    }
+
     /// Finish building without running.
     pub fn build(self) -> Simulation {
         self.sim
@@ -232,6 +280,7 @@ impl SimulationBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::observe::{frame_count, ObsValue};
 
     #[test]
     fn facade_runs_a_bundled_model_end_to_end() {
@@ -246,7 +295,14 @@ mod tests {
             .run()
             .unwrap();
         assert!(out.report.totals.executed > 0);
-        assert!(out.observable.starts_with("census"));
+        assert_eq!(out.observable.len(), 1, "no cadence → final frame only");
+        assert!(out.observable.to_string().starts_with("census="));
+        match out.observable.value("census") {
+            Some(ObsValue::Counts(c)) => {
+                assert_eq!(c.iter().map(|(_, n)| n).sum::<i64>(), 200);
+            }
+            other => panic!("expected census counts, got {other:?}"),
+        }
         assert_eq!(out.report.engine, "parallel");
     }
 
@@ -267,6 +323,35 @@ mod tests {
         let seq = run(EngineKind::Sequential);
         assert_eq!(run(EngineKind::Parallel), seq);
         assert_eq!(run(EngineKind::Virtual), seq);
+    }
+
+    #[test]
+    fn observed_facade_run_yields_a_multi_epoch_trace() {
+        let out = Simulation::builder()
+            .model("sir")
+            .engine(EngineKind::Parallel)
+            .workers(2)
+            .agents(200)
+            .steps(20)
+            .size(20)
+            .seed(7)
+            .observe(ObservePlan::every(64))
+            .run()
+            .unwrap();
+        let total = out.report.totals.executed;
+        assert_eq!(total, 20 * 2 * 10, "20 steps × 2 phases × 10 blocks");
+        assert_eq!(out.observable.len() as u64, frame_count(64, total));
+        assert_eq!(out.observable.frames[0].tasks, 0);
+        assert_eq!(out.observable.final_frame().unwrap().tasks, total);
+        // Conservation holds in every frame, not just the last.
+        for frame in &out.observable.frames {
+            match frame.get("census") {
+                Some(ObsValue::Counts(c)) => {
+                    assert_eq!(c.iter().map(|(_, n)| n).sum::<i64>(), 200, "{frame}");
+                }
+                other => panic!("expected census counts, got {other:?}"),
+            }
+        }
     }
 
     #[test]

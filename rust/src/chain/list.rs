@@ -128,6 +128,17 @@ impl<R> Chain<R> {
         self.exhausted.load(Ordering::Acquire)
     }
 
+    /// Clear the exhausted flag for another epoch of task creation.
+    ///
+    /// Used by the observed parallel run between epochs: an epoch-gated
+    /// source reports (temporary) exhaustion at the boundary so workers
+    /// drain the chain to quiescence; once the snapshot is taken the
+    /// engine re-opens the chain. **Quiescent use only** — must not race
+    /// task creation (no workers are running between epochs).
+    pub fn reopen(&self) {
+        self.exhausted.store(false, Ordering::Release);
+    }
+
     /// Append a task after `last` (which must be the node immediately
     /// before the tail).
     ///
@@ -430,6 +441,10 @@ mod tests {
     fn exhausted_flag() {
         let c: Chain<u32> = Chain::new();
         assert!(!c.exhausted());
+        c.set_exhausted();
+        assert!(c.exhausted());
+        c.reopen();
+        assert!(!c.exhausted(), "reopen clears the flag for the next epoch");
         c.set_exhausted();
         assert!(c.exhausted());
     }

@@ -5,13 +5,15 @@
 
 use std::path::PathBuf;
 
-use crate::api::{registry, EngineKind, Params, Simulation};
+use crate::api::observe::ObservePlan;
+use crate::api::{registry, EngineKind, Params, SimOutcome, Simulation};
 use crate::coordinator::config::SweepConfig;
-use crate::coordinator::report::{figure_pivot, write_report};
+use crate::coordinator::report::{figure_pivot, sweep_json, write_bench_json, write_report};
 use crate::coordinator::run_sweep;
 use crate::error::{Context, Result};
 use crate::util::bench::fmt_secs;
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::toml::Value;
 use crate::vtime::calibrate;
 
@@ -101,6 +103,40 @@ pub fn models(_args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Observation plan from `--every` / `--observe <file>`; a `.jsonl`
+/// suffix selects the JSON-lines sink, anything else gets CSV. The
+/// progress line (sized by the source's `size_hint`, counting frames when
+/// the hint is `None`) is attached for human runs with a cadence.
+fn observe_plan_from(args: &Args, with_progress: bool) -> Result<ObservePlan> {
+    let mut plan = ObservePlan::every(args.get_parse("every", 0u64)?);
+    if let Some(path) = args.get("observe") {
+        plan = if path.ends_with(".jsonl") {
+            plan.jsonl(path)
+        } else {
+            plan.csv(path)
+        };
+        crate::ensure!(
+            plan.active(),
+            "--observe needs a cadence: add --every <tasks>"
+        );
+    }
+    if plan.active() && with_progress {
+        plan = plan.progress();
+    }
+    Ok(plan)
+}
+
+/// The `--json` payload for one run.
+fn run_json(cfg: &SweepConfig, out: &SimOutcome, size: usize, seed: u64) -> Json {
+    Json::Obj(vec![
+        ("model".into(), Json::from(cfg.model.clone())),
+        ("size".into(), Json::from(size)),
+        ("seed".into(), Json::from(seed)),
+        ("report".into(), out.report.to_json()),
+        ("observations".into(), out.observable.to_json()),
+    ])
+}
+
 /// `adapar run` — one simulation through the facade, one line of truth.
 pub fn run(args: &Args) -> Result<()> {
     let cfg = sweep_config_from(args)?;
@@ -114,6 +150,8 @@ pub fn run(args: &Args) -> Result<()> {
         cfg.effective_sizes().first().copied().unwrap_or(1),
     )?;
     let seed = args.get_parse("seed", 1u64)?;
+    let json = args.has_flag("json");
+    let plan = observe_plan_from(args, !json)?;
     let out = Simulation::builder()
         .model(cfg.model.clone())
         .engine(engine)
@@ -125,7 +163,12 @@ pub fn run(args: &Args) -> Result<()> {
         .size(size)
         .paper_scale(cfg.paper_scale)
         .params(cfg.params.clone())
+        .observe(plan)
         .run()?;
+    if json {
+        println!("{}", run_json(&cfg, &out, size, seed).render());
+        return Ok(());
+    }
     println!(
         "model={} engine={engine} size={size} workers={workers} seed={seed}",
         cfg.model
@@ -141,12 +184,24 @@ pub fn run(args: &Args) -> Result<()> {
         out.report.totals.cycles,
         out.report.chain.max_chain_len
     );
+    if out.observable.len() > 1 {
+        println!(
+            "observations: {} frames (every {} tasks)",
+            out.observable.len(),
+            out.observable.every
+        );
+    }
     println!("observable: {}", out.observable);
     Ok(())
 }
 
 /// `adapar sweep` — the figure generator.
 pub fn sweep(args: &Args) -> Result<()> {
+    crate::ensure!(
+        args.get("every").is_none() && args.get("observe").is_none(),
+        "sweep aggregates timings and does not record per-run traces; \
+         use `run --every/--observe` for observation"
+    );
     let cfg = sweep_config_from(args)?;
     let stem = args
         .get("preset")
@@ -164,13 +219,23 @@ pub fn sweep(args: &Args) -> Result<()> {
         cfg.effective_steps()
     );
     let res = run_sweep(&cfg)?;
-    println!("{}", figure_pivot(&res).to_markdown());
+    if args.has_flag("json") {
+        println!("{}", sweep_json(&res).render());
+    } else {
+        println!("{}", figure_pivot(&res).to_markdown());
+    }
     let csv = write_report(&res, &out_dir, &stem)?;
     eprintln!(
         "wrote {} and {}",
         csv.display(),
         out_dir.join(format!("{stem}.md")).display()
     );
+    // Figure presets double as perf-trajectory benchmarks: emit the
+    // BENCH_*.json artifact alongside the figure data.
+    if let Some(preset) = args.get("preset") {
+        let bench = write_bench_json(&res, &out_dir.join(format!("BENCH_{preset}.json")))?;
+        eprintln!("wrote {}", bench.display());
+    }
     Ok(())
 }
 
@@ -192,7 +257,14 @@ pub fn calibrate_cmd(_args: &Args) -> Result<()> {
 }
 
 /// `adapar validate` — parallel == sequential, printed as a checklist.
+/// With `--every <n>` the comparison covers the whole epoch trace, not
+/// just the final state (the observation determinism contract).
 pub fn validate(args: &Args) -> Result<()> {
+    crate::ensure!(
+        args.get("observe").is_none(),
+        "validate compares traces in memory and writes no files; \
+         use `run --observe` to export one"
+    );
     let mut cfg = sweep_config_from(args)?;
     cfg.engine = EngineKind::Parallel;
     let workers = args.get_list::<usize>("workers", &[1, 2, 3, 4])?;
@@ -201,6 +273,7 @@ pub fn validate(args: &Args) -> Result<()> {
         cfg.effective_sizes().first().copied().unwrap_or(1),
     )?;
     let seed = args.get_parse("seed", 1u64)?;
+    let every = args.get_parse("every", 0u64)?;
     // Shrink default workloads: validation is about equality, not timing.
     if cfg.steps == 0 {
         cfg.steps = registry::info(&cfg.model)?.validate_steps;
@@ -219,11 +292,16 @@ pub fn validate(args: &Args) -> Result<()> {
             .steps(cfg.steps)
             .size(size)
             .params(cfg.params.clone())
+            .every(every)
             .run()
     };
 
     let reference = sim(EngineKind::Sequential, 1)?.observable;
-    println!("sequential reference: {reference}");
+    println!(
+        "sequential reference ({} frame{}): {reference}",
+        reference.len(),
+        if reference.len() == 1 { "" } else { "s" }
+    );
     let mut all_ok = true;
     for &n in &workers {
         let got = sim(EngineKind::Parallel, n)?.observable;
@@ -238,7 +316,7 @@ pub fn validate(args: &Args) -> Result<()> {
         println!("virtual  n=3: {} ({got})", if ok { "OK" } else { "MISMATCH" });
     }
     crate::ensure!(all_ok, "validation failed: engines disagree");
-    println!("validation passed: all engines agree on the model observable");
+    println!("validation passed: all engines agree on the observation trace");
     Ok(())
 }
 

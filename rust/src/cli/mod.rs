@@ -18,9 +18,9 @@ use crate::util::cli::{Args, Spec};
 const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
-        "c", "config", "preset", "out", "sample", "params",
+        "c", "config", "preset", "out", "sample", "params", "every", "observe",
     ],
-    flags: &["paper-scale", "calibrate", "help"],
+    flags: &["paper-scale", "calibrate", "help", "json"],
 };
 
 const USAGE: &str = "\
@@ -50,6 +50,9 @@ COMMON OPTIONS:
   --config <file.toml>                  sweep config file (experiments/*.toml)
   --preset <fig2|fig3>                  paper-figure sweep preset
   --out <dir>                           output dir for sweep reports [target/figures]
+  --every <n>                           run/validate: record typed observations every n tasks
+  --observe <file.csv|file.jsonl>       run: also stream the observation trace to a file
+  --json                                run/sweep: machine-readable JSON on stdout
   --paper-scale                         use the paper's full workload sizes
   --calibrate                           calibrate the virtual cost model first
   --help                                this text

@@ -8,6 +8,7 @@ use crate::coordinator::experiment::SweepResult;
 use crate::error::Result;
 use crate::util::bench::fmt_secs;
 use crate::util::csv::Table;
+use crate::util::json::Json;
 
 /// Long-form table: one row per grid point.
 pub fn long_table(res: &SweepResult) -> Table {
@@ -80,6 +81,73 @@ pub fn write_report(res: &SweepResult, dir: &Path, stem: &str) -> Result<PathBuf
     Ok(csv_path)
 }
 
+/// The whole sweep as one JSON object: the effective configuration, every
+/// grid point with its per-seed times, and the `T(1)/T(n_max)` speedups.
+/// This is the `--json` CLI payload and the `BENCH_*.json` schema.
+pub fn sweep_json(res: &SweepResult) -> Json {
+    let cfg = &res.config;
+    let n_max = res.points.iter().map(|p| p.workers).max().unwrap_or(1);
+    let mut sizes: Vec<usize> = res.points.iter().map(|p| p.size).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    let speedups: Vec<Json> = sizes
+        .iter()
+        .filter_map(|&size| {
+            res.speedup(size, n_max).map(|s| {
+                Json::Obj(vec![
+                    ("size".into(), Json::from(size)),
+                    ("workers".into(), Json::from(n_max)),
+                    ("speedup".into(), Json::from(s)),
+                ])
+            })
+        })
+        .collect();
+    Json::Obj(vec![
+        ("model".into(), Json::from(cfg.model.clone())),
+        ("engine".into(), Json::from(cfg.engine.to_string())),
+        ("agents".into(), Json::from(cfg.effective_agents())),
+        ("steps".into(), Json::from(cfg.effective_steps())),
+        ("paper_scale".into(), Json::from(cfg.paper_scale)),
+        (
+            "seeds".into(),
+            Json::Arr(cfg.seeds.iter().map(|&s| Json::from(s)).collect()),
+        ),
+        (
+            "points".into(),
+            Json::Arr(
+                res.points
+                    .iter()
+                    .map(|p| {
+                        Json::Obj(vec![
+                            ("size".into(), Json::from(p.size)),
+                            ("workers".into(), Json::from(p.workers)),
+                            ("mean_s".into(), Json::from(p.mean_s)),
+                            ("sem_s".into(), Json::from(p.sem_s)),
+                            (
+                                "times_s".into(),
+                                Json::Arr(p.times_s.iter().map(|&t| Json::from(t)).collect()),
+                            ),
+                            ("overhead".into(), Json::from(p.overhead)),
+                            ("max_chain".into(), Json::from(p.max_chain)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("speedups".into(), Json::Arr(speedups)),
+    ])
+}
+
+/// Write the sweep as a perf-trajectory artifact (`BENCH_fig2.json`,
+/// `BENCH_fig3.json`, ...); returns the path written.
+pub fn write_bench_json(res: &SweepResult, path: &Path) -> Result<PathBuf> {
+    crate::util::create_parent_dirs(path)?;
+    let mut text = sweep_json(res).render();
+    text.push('\n');
+    std::fs::write(path, text)?;
+    Ok(path.to_path_buf())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -117,6 +185,20 @@ mod tests {
         let md = t.to_markdown();
         assert!(md.contains("T(n=1)"));
         assert!(md.contains("T(1)/T(2)"));
+    }
+
+    #[test]
+    fn sweep_json_has_config_points_and_speedups() {
+        let res = result();
+        let json = sweep_json(&res).render();
+        assert!(json.starts_with(r#"{"model":"sir","engine":"virtual""#), "{json}");
+        assert!(json.contains(r#""points":[{"size":20,"workers":1"#), "{json}");
+        assert!(json.contains(r#""speedup":"#), "{json}");
+
+        let dir = std::env::temp_dir().join("adapar_bench_json_test");
+        let path = write_bench_json(&res, &dir.join("BENCH_unit.json")).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert_eq!(text.trim_end(), json);
     }
 
     #[test]

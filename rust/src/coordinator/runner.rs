@@ -3,6 +3,7 @@
 //! here — a model registered at runtime is runnable from sweeps and the
 //! CLI with zero edits to this file.
 
+use crate::api::observe::Observations;
 use crate::api::{SimOutcome, Simulation};
 use crate::coordinator::config::SweepConfig;
 use crate::error::Result;
@@ -19,8 +20,9 @@ pub struct RunOutcome {
     pub totals: WorkerStats,
     /// High-water chain length.
     pub max_chain_len: usize,
-    /// Human-readable model observable (e.g. SIR census) for sanity.
-    pub observable: String,
+    /// The typed observation trace (final frame only unless the sweep
+    /// requested a cadence) — structurally comparable across engines.
+    pub observations: Observations,
 }
 
 impl From<SimOutcome> for RunOutcome {
@@ -29,7 +31,7 @@ impl From<SimOutcome> for RunOutcome {
             time_s: out.report.time_s,
             totals: out.report.totals,
             max_chain_len: out.report.chain.max_chain_len,
-            observable: out.observable,
+            observations: out.observable,
         }
     }
 }
@@ -102,7 +104,7 @@ mod tests {
                 let out = run_once(&cfg, 10, 2, 1, &cost)
                     .unwrap_or_else(|e| panic!("{model}/{engine}: {e}"));
                 assert!(out.time_s >= 0.0);
-                assert!(!out.observable.is_empty());
+                assert!(!out.observations.is_empty());
             }
             // Stepwise runs exactly on the models that declare a sync form.
             let cfg = tiny(&model, EngineKind::Stepwise);
@@ -118,6 +120,6 @@ mod tests {
         let cfg = tiny("sir", EngineKind::Sequential);
         let a = run_once(&cfg, 10, 1, 3, &cost).unwrap();
         let b = simulation_for(&cfg, 10, 1, 3, &cost).run().unwrap();
-        assert_eq!(a.observable, b.observable);
+        assert_eq!(a.observations, b.observable);
     }
 }

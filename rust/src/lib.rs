@@ -31,9 +31,11 @@
 //!   engine.
 //! * [`api`] — the public execution API: the object-safe [`Engine`]
 //!   trait over interchangeable backends, the dynamic model
-//!   [`api::registry`] (name + parameter bag → runnable model), and the
-//!   builder-style [`Simulation`] facade — the single entry point used by
-//!   the CLI, sweeps, benches and examples.
+//!   [`api::registry`] (name + parameter bag → runnable model), the typed
+//!   observation pipeline ([`api::observe`]: named metrics, deterministic
+//!   epoch snapshots, CSV/JSON-lines sinks), and the builder-style
+//!   [`Simulation`] facade — the single entry point used by the CLI,
+//!   sweeps, benches and examples.
 //! * [`coordinator`] — experiment orchestration: config system, sweep grid
 //!   runner, reports.
 //! * [`error`] — the crate-local error type ([`Error`]/[`Result`]) every
@@ -59,8 +61,9 @@ pub mod util;
 pub mod vtime;
 
 pub use api::{
-    engine_for, BuildCtx, DynModel, Engine, EngineKind, ModelInfo, Params, Registry, Runnable,
-    SimOutcome, Simulation, SimulationBuilder,
+    engine_for, BuildCtx, DynModel, Engine, EngineKind, ModelInfo, ObsFrame, ObsValue, Observable,
+    Observations, ObservePlan, Observer, Params, Registry, Runnable, SimOutcome, Simulation,
+    SimulationBuilder,
 };
 pub use error::{Context, Error};
 

@@ -71,8 +71,10 @@ pub trait TaskSource: Send {
     /// define the canonical (sequential) task order.
     fn next_task(&mut self) -> Option<Self::Recipe>;
 
-    /// Optional hint: total number of tasks this source will produce, if
-    /// known (used for progress reporting only).
+    /// Optional hint: number of tasks this source will still produce, if
+    /// known. The observation pipeline uses it to pre-size epoch traces
+    /// and to drive the CLI progress line; callers must degrade
+    /// gracefully on `None`.
     fn size_hint(&self) -> Option<u64> {
         None
     }

@@ -172,6 +172,19 @@ impl AxelrodModel {
         &self.state
     }
 
+    /// Cultural-domain statistics: the number of distinct trait vectors
+    /// and the population of the most common one (quiescent use).
+    pub fn domain_stats(&self) -> (usize, usize) {
+        let state = unsafe { self.state.get() };
+        let f = self.params.features;
+        let mut counts: std::collections::HashMap<&[u8], usize> = std::collections::HashMap::new();
+        for row in state.raw().chunks_exact(f.max(1)) {
+            *counts.entry(row).or_insert(0) += 1;
+        }
+        let largest = counts.values().copied().max().unwrap_or(0);
+        (counts.len(), largest)
+    }
+
     /// Overwrite one agent's trait row (XLA task engine / integration
     /// tests; quiescent use only — not protocol-safe).
     pub fn write_agent_row(&self, agent: usize, row: &[i32]) {
@@ -180,6 +193,20 @@ impl AxelrodModel {
         for (dst, &v) in state.agent_mut(agent).iter_mut().zip(row) {
             *dst = v as u8;
         }
+    }
+}
+
+impl crate::api::observe::Observable for AxelrodModel {
+    /// Cultural-domain counts — the paper's Fig. 2 model's trajectory
+    /// quantity: how many distinct cultures survive, and how dominant the
+    /// largest one is.
+    fn observe(&self) -> crate::api::observe::Metrics {
+        use crate::api::observe::ObsValue;
+        let (domains, largest) = self.domain_stats();
+        vec![
+            ("domains".to_string(), ObsValue::Int(domains as i64)),
+            ("largest_domain".to_string(), ObsValue::Int(largest as i64)),
+        ]
     }
 }
 

@@ -134,6 +134,20 @@ impl Record for IsingRecord {
     }
 }
 
+impl crate::api::observe::Observable for IsingModel {
+    /// Magnetization and energy per site — the standard order parameters.
+    fn observe(&self) -> crate::api::observe::Metrics {
+        use crate::api::observe::ObsValue;
+        vec![
+            (
+                "magnetization".to_string(),
+                ObsValue::Float(self.magnetization()),
+            ),
+            ("energy".to_string(), ObsValue::Float(self.energy())),
+        ]
+    }
+}
+
 /// Source: uniform random sites.
 pub struct IsingSource {
     rng: Rng,

@@ -199,6 +199,22 @@ impl SchellingModel {
     }
 }
 
+impl crate::api::observe::Observable for SchellingModel {
+    /// The segregation order parameter plus the count of satisfied
+    /// agents.
+    fn observe(&self) -> crate::api::observe::Metrics {
+        use crate::api::observe::ObsValue;
+        let state = unsafe { self.state.get() };
+        let satisfied = (0..self.params.agents)
+            .filter(|&a| self.satisfied(state, state.pos[a], state.kind[a]))
+            .count();
+        vec![
+            ("segregation".to_string(), ObsValue::Float(self.segregation())),
+            ("satisfied".to_string(), ObsValue::Int(satisfied as i64)),
+        ]
+    }
+}
+
 /// Record: claimed cells (closed neighbourhoods of both task cells).
 pub struct SchellingRecord {
     cells: U32Set,

@@ -418,6 +418,21 @@ impl Model for SirModel {
     }
 }
 
+impl crate::api::observe::Observable for SirModel {
+    /// The epidemic census — the paper's Fig. 3 trajectory quantity.
+    fn observe(&self) -> crate::api::observe::Metrics {
+        let (s, i, r) = self.census();
+        vec![(
+            "census".to_string(),
+            crate::api::observe::ObsValue::counts([
+                ("S", s as i64),
+                ("I", i as i64),
+                ("R", r as i64),
+            ]),
+        )]
+    }
+}
+
 impl SyncModel for SirModel {
     fn steps(&self) -> u64 {
         self.params.steps

@@ -74,6 +74,29 @@ impl VoterModel {
     }
 }
 
+impl crate::api::observe::Observable for VoterModel {
+    /// Opinion census (labelled by opinion index) plus the number of
+    /// surviving opinions ("domains").
+    fn observe(&self) -> crate::api::observe::Metrics {
+        use crate::api::observe::ObsValue;
+        let tally = self.tally();
+        let surviving = tally.iter().filter(|&&n| n > 0).count();
+        vec![
+            (
+                "tally".to_string(),
+                ObsValue::Counts(
+                    tally
+                        .iter()
+                        .enumerate()
+                        .map(|(op, &n)| (op.to_string(), n as i64))
+                        .collect(),
+                ),
+            ),
+            ("opinions".to_string(), ObsValue::Int(surviving as i64)),
+        ]
+    }
+}
+
 /// Task payload.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct VoterStep {

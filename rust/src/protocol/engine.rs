@@ -4,6 +4,7 @@
 use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::api::observe::{EpochGate, ObsProbe, Observer};
 use crate::chain::Chain;
 use crate::model::Model;
 
@@ -60,8 +61,39 @@ impl ParallelEngine {
     /// Run `model` to completion (until its task source is exhausted and
     /// every created task has been executed).
     pub fn run<M: Model>(&self, model: &M) -> RunReport {
+        self.run_epochs(model, None)
+    }
+
+    /// Run with epoch snapshots: at every `observer.every()` canonical
+    /// tasks the engine stops task creation, lets the workers **drain the
+    /// chain to quiescence**, records a frame via `probe`, and resumes —
+    /// so the trace is bit-identical to the sequential engine's at the
+    /// same seed (DESIGN.md §5a). Snapshot time is included in the
+    /// reported wall time.
+    pub fn run_observed<M: Model>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)))
+    }
+
+    /// The single run loop: one iteration per epoch (exactly one epoch
+    /// when unobserved). Worker threads are scoped per epoch; the
+    /// coordinating thread snapshots between scopes, when no task is in
+    /// flight.
+    fn run_epochs<M: Model>(
+        &self,
+        model: &M,
+        mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+    ) -> RunReport {
+        let every = match &obs {
+            Some((_, o)) => o.gate_cadence(),
+            None => u64::MAX,
+        };
         let chain: Chain<M::Recipe> = Chain::new();
-        let source = Mutex::new(model.source(self.cfg.seed));
+        let source = Mutex::new(EpochGate::new(model.source(self.cfg.seed)));
         let ctx = RunCtx {
             chain: &chain,
             model,
@@ -70,30 +102,49 @@ impl ParallelEngine {
             tasks_per_cycle: self.cfg.tasks_per_cycle,
             collect_timing: self.cfg.collect_timing,
         };
+        let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
 
+        if let Some((probe, observer)) = obs.as_mut() {
+            observer.record_initial(*probe);
+        }
         let t0 = Instant::now();
-        let per_worker: Vec<WorkerStats> = if self.cfg.workers == 1 {
-            // Run in-place: a single worker needs no extra thread, which
-            // keeps T(n=1) free of spawn overhead.
-            vec![worker_loop(&ctx, 0)]
-        } else {
-            std::thread::scope(|s| {
-                let handles: Vec<_> = (0..self.cfg.workers)
-                    .map(|w| {
-                        let ctx_ref = &ctx;
-                        s.spawn(move || worker_loop(ctx_ref, w))
-                    })
-                    .collect();
-                handles
-                    .into_iter()
-                    .map(|h| h.join().expect("worker panicked"))
-                    .collect()
-            })
-        };
-        let wall = t0.elapsed();
+        loop {
+            source.lock().unwrap().open(every);
+            if self.cfg.workers == 1 {
+                // Run in-place: a single worker needs no extra thread,
+                // which keeps T(n=1) free of spawn overhead.
+                per_worker[0].merge(&worker_loop(&ctx, 0));
+            } else {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..self.cfg.workers)
+                        .map(|w| {
+                            let ctx_ref = &ctx;
+                            s.spawn(move || worker_loop(ctx_ref, w))
+                        })
+                        .collect();
+                    for (w, h) in handles.into_iter().enumerate() {
+                        per_worker[w].merge(&h.join().expect("worker panicked"));
+                    }
+                });
+            }
 
-        debug_assert!(chain.is_empty(), "run finished with live tasks");
-        debug_assert_eq!(chain.created(), chain.erased());
+            // Quiescent: the epoch's budget (or the source) ran out and
+            // every created task has been executed.
+            debug_assert!(chain.is_empty(), "epoch drained with live tasks");
+            debug_assert_eq!(chain.created(), chain.erased());
+            let done = {
+                let mut gate = source.lock().unwrap();
+                if let Some((probe, observer)) = obs.as_mut() {
+                    observer.record(gate.emitted(), probe());
+                }
+                gate.finished()
+            };
+            if done {
+                break;
+            }
+            chain.reopen();
+        }
+        let wall = t0.elapsed();
 
         let mut totals = WorkerStats::default();
         for w in &per_worker {

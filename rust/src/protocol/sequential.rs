@@ -4,6 +4,7 @@
 
 use std::time::Instant;
 
+use crate::api::observe::{ObsProbe, Observer};
 use crate::model::{Model, TaskSource};
 use crate::sim::rng::TaskRng;
 
@@ -25,13 +26,45 @@ impl SequentialEngine {
 
     /// Run to source exhaustion.
     pub fn run<M: Model>(&self, model: &M) -> RunReport {
+        self.run_epochs(model, None)
+    }
+
+    /// Run with epoch snapshots — the reference trace every parallel
+    /// engine must reproduce byte for byte. A frame is recorded at task
+    /// count 0, after every `observer.every()` executed tasks, and at the
+    /// end of the run (the final partial epoch).
+    pub fn run_observed<M: Model>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)))
+    }
+
+    fn run_epochs<M: Model>(
+        &self,
+        model: &M,
+        mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+    ) -> RunReport {
         let mut source = model.source(self.seed);
+        if let Some((probe, observer)) = obs.as_mut() {
+            observer.record_initial(*probe);
+        }
         let t0 = Instant::now();
         let mut executed = 0u64;
         while let Some(recipe) = source.next_task() {
             let mut rng = TaskRng::for_task(self.seed, executed);
             model.execute(&recipe, &mut rng);
             executed += 1;
+            if let Some((probe, observer)) = obs.as_mut() {
+                if observer.due(executed) {
+                    observer.record(executed, probe());
+                }
+            }
+        }
+        if let Some((probe, observer)) = obs.as_mut() {
+            observer.record(executed, probe());
         }
         let wall = t0.elapsed();
         let stats = WorkerStats {

@@ -7,6 +7,8 @@
 
 use std::time::Duration;
 
+use crate::util::json::Json;
+
 /// Counters collected by one worker across a run.
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
@@ -31,6 +33,24 @@ pub struct WorkerStats {
 }
 
 impl WorkerStats {
+    /// The counters as a JSON object (durations in seconds).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("cycles".into(), Json::from(self.cycles)),
+            ("executed".into(), Json::from(self.executed)),
+            ("created".into(), Json::from(self.created)),
+            (
+                "skipped_dependent".into(),
+                Json::from(self.skipped_dependent),
+            ),
+            ("passed_executing".into(), Json::from(self.passed_executing)),
+            ("erased_retries".into(), Json::from(self.erased_retries)),
+            ("idle_cycles".into(), Json::from(self.idle_cycles)),
+            ("exec_time_s".into(), Json::from(self.exec_time.as_secs_f64())),
+            ("busy_time_s".into(), Json::from(self.busy_time.as_secs_f64())),
+        ])
+    }
+
     /// Merge another worker's counters into this one.
     pub fn merge(&mut self, o: &WorkerStats) {
         self.cycles += o.cycles;
@@ -127,6 +147,34 @@ impl RunReport {
         } else {
             wasted as f64 / total as f64
         }
+    }
+
+    /// The whole report as a JSON object (for `--json` CLI output and
+    /// bench artifacts).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("engine".into(), Json::from(self.engine)),
+            ("workers".into(), Json::from(self.workers)),
+            ("time_s".into(), Json::from(self.time_s)),
+            ("basis".into(), Json::from(self.basis.to_string())),
+            ("totals".into(), self.totals.to_json()),
+            (
+                "per_worker".into(),
+                Json::Arr(self.per_worker.iter().map(WorkerStats::to_json).collect()),
+            ),
+            (
+                "chain".into(),
+                Json::Obj(vec![
+                    ("tasks_created".into(), Json::from(self.chain.tasks_created)),
+                    (
+                        "tasks_executed".into(),
+                        Json::from(self.chain.tasks_executed),
+                    ),
+                    ("max_chain_len".into(), Json::from(self.chain.max_chain_len)),
+                ]),
+            ),
+            ("overhead_ratio".into(), Json::from(self.overhead_ratio())),
+        ])
     }
 
     /// One-line human summary.

@@ -19,6 +19,8 @@ use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Barrier;
 use std::time::Instant;
 
+use crate::api::observe::{ObsProbe, Observer};
+
 use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
 /// A model in synchronous, phase-structured form.
@@ -140,6 +142,111 @@ impl StepwiseEngine {
             },
         }
     }
+
+    /// Run with epoch snapshots.
+    ///
+    /// Canonical task counting for a [`SyncModel`] is the lexicographic
+    /// `(step, phase, block)` order — the same order the model's chain
+    /// form emits tasks in (e.g. `SirSource`), which is what makes the
+    /// stepwise trace byte-identical to the chain engines' at a fixed
+    /// seed. When an epoch boundary falls *inside* a phase, the phase is
+    /// split at the boundary block: blocks `0..b` run (in parallel),
+    /// the engine joins to quiescence, records a frame, then runs blocks
+    /// `b..B`. Within-phase blocks are mutually independent, so splitting
+    /// never changes the computed state.
+    pub fn run_observed<M: SyncModel>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+    ) -> RunReport {
+        let every = observer.gate_cadence();
+        observer.record_initial(probe);
+        let t0 = Instant::now();
+        let steps = model.steps();
+        let phases = model.phases();
+        let mut executed = 0u64;
+        let mut next_boundary = every;
+        for step in 0..steps {
+            for phase in 0..phases {
+                let blocks = model.blocks(phase) as u64;
+                let mut b0 = 0u64;
+                while b0 < blocks {
+                    debug_assert!(executed < next_boundary);
+                    let b1 = blocks.min(b0 + (next_boundary - executed));
+                    self.run_block_range(model, step, phase, b0 as usize, b1 as usize);
+                    executed += b1 - b0;
+                    b0 = b1;
+                    if executed == next_boundary {
+                        observer.record(executed, probe());
+                        next_boundary = next_boundary.saturating_add(every);
+                    }
+                }
+            }
+        }
+        observer.record(executed, probe());
+        let wall = t0.elapsed();
+
+        let stats = WorkerStats {
+            cycles: steps,
+            executed,
+            created: executed,
+            busy_time: wall,
+            ..Default::default()
+        };
+        RunReport {
+            engine: "stepwise",
+            workers: self.workers,
+            time_s: wall.as_secs_f64(),
+            basis: TimeBasis::Wall,
+            totals: stats.clone(),
+            per_worker: vec![stats],
+            chain: ProtocolStats {
+                tasks_created: executed,
+                tasks_executed: executed,
+                max_chain_len: 0,
+            },
+        }
+    }
+
+    /// Execute blocks `b0..b1` of one phase, in parallel over the pool;
+    /// returns only once all of them completed (the scope join is the
+    /// phase/segment barrier).
+    ///
+    /// The observed path trades the unobserved run's persistent barrier
+    /// pool for per-segment scoped threads: the join *is* the quiescent
+    /// point the snapshot needs. The spawn overhead is part of the
+    /// observed run's reported `T` (like every other observation cost) —
+    /// compare timings with unobserved runs only. Thread count is capped
+    /// by the segment's block count so tiny segments stay cheap.
+    fn run_block_range<M: SyncModel>(
+        &self,
+        model: &M,
+        step: u64,
+        phase: usize,
+        b0: usize,
+        b1: usize,
+    ) {
+        let threads = self.workers.min(b1 - b0);
+        if threads <= 1 {
+            for block in b0..b1 {
+                model.run_block(self.seed, step, phase, block);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(b0);
+        std::thread::scope(|s| {
+            for _ in 0..threads {
+                s.spawn(|| loop {
+                    let block = next.fetch_add(1, Ordering::Relaxed);
+                    if block >= b1 {
+                        break;
+                    }
+                    model.run_block(self.seed, step, phase, block);
+                });
+            }
+        });
+    }
 }
 
 #[cfg(test)]
@@ -189,5 +296,41 @@ mod tests {
             assert_eq!(report.totals.executed, 25 * 2 * 17);
             assert_eq!(report.engine, "stepwise");
         }
+    }
+
+    #[test]
+    fn observed_run_splits_phases_at_exact_boundaries() {
+        use crate::api::observe::{frame_count, ObsValue, Observer};
+        // 17 blocks × 2 phases × 25 steps = 850 tasks; cadence 23 lands
+        // inside phases. The trace must be identical for every pool size
+        // and end with the same final state as the unobserved run.
+        let trace = |workers: usize| {
+            let m = TwoPhase {
+                cur: SharedSim::new(vec![0; 17]),
+                new: SharedSim::new(vec![0; 17]),
+                steps: 25,
+            };
+            let probe = || {
+                vec![(
+                    "sum".to_string(),
+                    ObsValue::Int(unsafe { m.cur.get() }.iter().sum::<u64>() as i64),
+                )]
+            };
+            let mut obs = Observer::new(23);
+            let report = StepwiseEngine::new(workers, 0).run_observed(&m, &probe, &mut obs);
+            assert_eq!(report.totals.executed, 850);
+            assert_eq!(unsafe { m.cur.get() }.clone(), vec![25u64; 17]);
+            obs.finish().unwrap()
+        };
+        let reference = trace(1);
+        assert_eq!(reference.len() as u64, frame_count(23, 850));
+        assert_eq!(reference.final_frame().unwrap().tasks, 850);
+        assert_eq!(
+            reference.value("sum"),
+            Some(&ObsValue::Int(25 * 17)),
+            "final sum"
+        );
+        assert_eq!(trace(2), reference);
+        assert_eq!(trace(4), reference);
     }
 }

@@ -41,13 +41,17 @@ use crate::sim::rng::TaskRng;
 use super::stats::WorkerStats;
 
 /// Shared, read-only worker context for one run.
-pub(crate) struct RunCtx<'a, M: Model> {
+///
+/// Generic over the source type `S` so the observed run can interpose an
+/// [`EpochGate`](crate::api::observe::EpochGate) without per-task dynamic
+/// dispatch; plain runs use `S = M::Source`.
+pub(crate) struct RunCtx<'a, M: Model, S: TaskSource<Recipe = M::Recipe>> {
     /// The chain.
     pub chain: &'a Chain<M::Recipe>,
     /// The model (shared state lives inside).
     pub model: &'a M,
     /// The serialized task source ("global, model-specific routine").
-    pub source: &'a Mutex<M::Source>,
+    pub source: &'a Mutex<S>,
     /// Simulation seed (drives per-task RNG streams).
     pub seed: u64,
     /// `C`: maximum tasks created per worker cycle.
@@ -66,7 +70,10 @@ enum Processed {
 }
 
 /// Run one worker to completion. Returns its statistics.
-pub(crate) fn worker_loop<M: Model>(ctx: &RunCtx<'_, M>, worker_id: usize) -> WorkerStats {
+pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
+    ctx: &RunCtx<'_, M, S>,
+    worker_id: usize,
+) -> WorkerStats {
     let _ = worker_id; // reserved for tracing
     let mut stats = WorkerStats::default();
     let mut record = ctx.model.record();
@@ -161,8 +168,8 @@ pub(crate) fn worker_loop<M: Model>(ctx: &RunCtx<'_, M>, worker_id: usize) -> Wo
 }
 
 /// Handle an arrival at a live task node (visitor slot held).
-fn process<M: Model>(
-    ctx: &RunCtx<'_, M>,
+fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
+    ctx: &RunCtx<'_, M, S>,
     node: &std::sync::Arc<crate::chain::Node<M::Recipe>>,
     record: &mut M::Record,
     stats: &mut WorkerStats,

@@ -12,13 +12,28 @@
 //! * [`stats`] — online and batch statistics (Welford, SEM, percentiles).
 //! * [`histogram`] — log-bucketed latency histograms.
 //! * [`csv`] — CSV/markdown table emitters for figure data.
+//! * [`json`] — a minimal JSON value/emitter for `--json` output, the
+//!   observation JSON-lines sink, and `BENCH_*.json` perf artifacts.
 //! * [`log`] — leveled stderr logging controlled by `ADAPAR_LOG`.
+
+/// Create `path`'s parent directories if it has any (no-op for bare
+/// file names). Shared by every artifact writer (observation sinks,
+/// sweep reports, bench JSON).
+pub fn create_parent_dirs(path: &std::path::Path) -> std::io::Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    Ok(())
+}
 
 pub mod bench;
 pub mod bitset;
 pub mod cli;
 pub mod csv;
 pub mod histogram;
+pub mod json;
 pub mod log;
 pub mod prop;
 pub mod stats;

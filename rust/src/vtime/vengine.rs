@@ -11,6 +11,7 @@
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, VecDeque};
 
+use crate::api::observe::{EpochGate, ObsProbe, Observer};
 use crate::model::{Model, Record, TaskSource};
 use crate::protocol::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 use crate::sim::rng::TaskRng;
@@ -118,7 +119,7 @@ struct Des<'m, M: Model> {
     nodes: Vec<VNode<M::Recipe>>,
     workers: Vec<VWorker<M::Record>>,
     heap: BinaryHeap<Ev>,
-    source: M::Source,
+    source: EpochGate<M::Source>,
     exhausted: bool,
     live: usize,
     max_live: usize,
@@ -133,8 +134,34 @@ impl VirtualEngine {
     /// [`TimeBasis::Virtual`] marking `time_s` as deterministic virtual
     /// time (max over worker clocks).
     pub fn run<M: Model>(&self, model: &M) -> RunReport {
+        self.run_epochs(model, None)
+    }
+
+    /// Run with epoch snapshots: at every `observer.every()` canonical
+    /// tasks the DES's gated source reports (temporary) exhaustion, the
+    /// event loop drains to quiescence, a frame is recorded, and the
+    /// virtual workers resume at their current clocks — fully
+    /// deterministic, like everything else in the testbed.
+    pub fn run_observed<M: Model>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)))
+    }
+
+    fn run_epochs<M: Model>(
+        &self,
+        model: &M,
+        mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+    ) -> RunReport {
         assert!(self.workers >= 1 && self.tasks_per_cycle >= 1);
         self.cost.validate().expect("invalid cost model");
+        let every = match &obs {
+            Some((_, o)) => o.gate_cadence(),
+            None => u64::MAX,
+        };
 
         let mut des = Des {
             model,
@@ -144,7 +171,7 @@ impl VirtualEngine {
             nodes: Vec::with_capacity(64),
             workers: Vec::with_capacity(self.workers),
             heap: BinaryHeap::new(),
-            source: model.source(self.seed),
+            source: EpochGate::new(model.source(self.seed)),
             exhausted: false,
             live: 0,
             max_live: 0,
@@ -183,7 +210,27 @@ impl VirtualEngine {
             des.heap.push(Ev { time: 0.0, wid: w });
         }
 
-        des.run_to_completion();
+        if let Some((probe, observer)) = obs.as_mut() {
+            observer.record_initial(*probe);
+        }
+        loop {
+            des.source.open(every);
+            des.run_to_completion();
+            // Quiescent: every created task executed, all workers parked.
+            if let Some((probe, observer)) = obs.as_mut() {
+                observer.record(des.source.emitted(), probe());
+            }
+            if des.source.finished() {
+                break;
+            }
+            // Resume the next epoch: clear the per-epoch exhaustion and
+            // re-arm every worker at its current virtual clock.
+            des.exhausted = false;
+            for w in 0..self.workers {
+                des.workers[w].phase = Phase::StartCycle;
+                des.push(w);
+            }
+        }
 
         let mut totals = WorkerStats::default();
         let mut per_worker = Vec::with_capacity(self.workers);

@@ -13,7 +13,7 @@ use adapar::sim::rng::TaskRng;
 use adapar::sim::state::SharedSim;
 use adapar::util::u32set::U32Set;
 use adapar::vtime::CostModel;
-use adapar::{Engine, EngineKind, Simulation};
+use adapar::{Engine, EngineKind, ObsValue, Simulation};
 
 #[test]
 fn every_registered_model_runs_on_every_legal_engine_via_the_facade() {
@@ -40,6 +40,10 @@ fn every_registered_model_runs_on_every_legal_engine_via_the_facade() {
                 .unwrap_or_else(|e| panic!("{model}/{engine}: {e:#}"));
             assert!(out.report.time_s >= 0.0, "{model}/{engine}");
             assert!(!out.observable.is_empty(), "{model}/{engine}");
+            assert!(
+                !out.observable.final_frame().unwrap().values.is_empty(),
+                "{model}/{engine}: bundled models must export typed metrics"
+            );
             assert_eq!(out.report.engine, engine.to_string(), "{model}/{engine}");
         }
         // Engines the model does not support fail with a clear message.
@@ -172,7 +176,7 @@ fn register_blinker_once() {
             Ok(adapar::Runnable::new("blinker", model)
                 .observed(|m| {
                     let ones = unsafe { m.cells.get() }.iter().filter(|&&c| c == 1).count();
-                    format!("ones={ones}")
+                    vec![("ones".to_string(), ObsValue::Int(ones as i64))]
                 })
                 .boxed())
         })
@@ -197,7 +201,15 @@ fn runtime_registered_model_runs_through_the_coordinator_unchanged() {
     cfg.validate().unwrap();
     let out = run_once(&cfg, 4, 2, 1, &cost).unwrap();
     assert_eq!(out.totals.executed, 500);
-    assert!(out.observable.starts_with("ones="), "{}", out.observable);
+    assert!(
+        out.observations.to_string().starts_with("ones="),
+        "{}",
+        out.observations
+    );
+    assert!(matches!(
+        out.observations.value("ones"),
+        Some(ObsValue::Int(_))
+    ));
 
     // Determinism across engines holds for the plug-in, too.
     let observable = |engine| {
@@ -205,7 +217,7 @@ fn runtime_registered_model_runs_through_the_coordinator_unchanged() {
             engine,
             ..cfg.clone()
         };
-        run_once(&cfg, 4, 3, 9, &cost).unwrap().observable
+        run_once(&cfg, 4, 3, 9, &cost).unwrap().observations
     };
     let seq = observable(EngineKind::Sequential);
     assert_eq!(observable(EngineKind::Parallel), seq);
