@@ -2,10 +2,10 @@
 //!
 //! Every backend — the paper's adaptive [`ParallelEngine`], the
 //! [`SequentialEngine`] ground truth, the related-work [`StepwiseEngine`]
-//! baseline and the [`VirtualEngine`] testbed — implements `Engine` and
-//! returns the *same* [`RunReport`], so launcher code (facade, sweeps,
-//! CLI) dispatches through one `&dyn Engine` and never matches on the
-//! backend.
+//! baseline, the [`VirtualEngine`] testbed and the sharded adaptive
+//! [`ShardedEngine`] — implements `Engine` and returns the *same*
+//! [`RunReport`], so launcher code (facade, sweeps, CLI) dispatches
+//! through one `&dyn Engine` and never matches on the backend.
 
 use std::str::FromStr;
 
@@ -15,12 +15,13 @@ use crate::error::{Error, Result};
 use crate::protocol::{
     ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine,
 };
+use crate::sched::{ShardedConfig, ShardedEngine};
 use crate::vtime::{CostModel, VirtualEngine};
 
 /// An execution backend able to run any [`DynModel`].
 pub trait Engine: Send + Sync {
     /// Engine label (`"parallel"`, `"sequential"`, `"stepwise"`,
-    /// `"virtual"`).
+    /// `"virtual"`, `"sharded"`).
     fn name(&self) -> &'static str;
 
     /// Run the model to completion. With an [`Observer`], the engine
@@ -81,6 +82,20 @@ impl Engine for StepwiseEngine {
     }
 }
 
+impl Engine for ShardedEngine {
+    fn name(&self) -> &'static str {
+        "sharded"
+    }
+
+    fn run_observed(
+        &self,
+        model: &dyn DynModel,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
+        model.run_sharded(self.config(), obs)
+    }
+}
+
 impl Engine for VirtualEngine {
     fn name(&self) -> &'static str {
         "virtual"
@@ -113,15 +128,19 @@ pub enum EngineKind {
     Virtual,
     /// The barrier-based step-parallel baseline (synchronous models only).
     Stepwise,
+    /// The sharded adaptive scheduler: per-shard chains + spillover +
+    /// epoch-boundary rebalancing (shardable models only).
+    Sharded,
 }
 
 impl EngineKind {
     /// Every selectable engine.
-    pub const ALL: [EngineKind; 4] = [
+    pub const ALL: [EngineKind; 5] = [
         EngineKind::Parallel,
         EngineKind::Sequential,
         EngineKind::Virtual,
         EngineKind::Stepwise,
+        EngineKind::Sharded,
     ];
 
     /// Canonical names, for error listings.
@@ -142,6 +161,7 @@ impl FromStr for EngineKind {
             "sequential" | "seq" => EngineKind::Sequential,
             "virtual" | "vtime" => EngineKind::Virtual,
             "stepwise" | "barrier" => EngineKind::Stepwise,
+            "sharded" | "shards" => EngineKind::Sharded,
             other => {
                 return Err(crate::err!(
                     "unknown engine `{other}`; valid engines: {}",
@@ -159,6 +179,7 @@ impl std::fmt::Display for EngineKind {
             EngineKind::Sequential => "sequential",
             EngineKind::Virtual => "virtual",
             EngineKind::Stepwise => "stepwise",
+            EngineKind::Sharded => "sharded",
         })
     }
 }
@@ -181,6 +202,12 @@ pub fn engine_for(
             collect_timing: false,
         })),
         EngineKind::Stepwise => Box::new(StepwiseEngine::new(workers, seed)),
+        EngineKind::Sharded => Box::new(ShardedEngine::new(ShardedConfig {
+            workers,
+            tasks_per_cycle,
+            seed,
+            ..Default::default()
+        })),
         EngineKind::Virtual => Box::new(VirtualEngine {
             workers,
             tasks_per_cycle,

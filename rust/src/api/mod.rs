@@ -5,8 +5,8 @@
 //! interface); this module makes the *launcher* side equally agnostic:
 //!
 //! * [`engine`] — the object-safe [`Engine`] trait implemented by every
-//!   backend (parallel, sequential, stepwise, virtual), all returning the
-//!   unified [`crate::protocol::RunReport`].
+//!   backend (parallel, sequential, stepwise, virtual, sharded), all
+//!   returning the unified [`crate::protocol::RunReport`].
 //! * [`model`] — [`DynModel`], the type-erased runnable model, and
 //!   [`Runnable`], the adapter that erases any [`crate::model::Model`].
 //! * [`observe`] — the typed observation pipeline: [`ObsValue`] metrics,

@@ -24,6 +24,7 @@ use crate::model::{Model, TaskSource};
 use crate::protocol::{
     ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine, SyncModel,
 };
+use crate::sched::{ShardableModel, ShardedConfig, ShardedEngine};
 use crate::vtime::{calibrate_exec, CostModel, VirtualEngine};
 
 /// An object-safe, engine-agnostic runnable model: [`Model`] with its
@@ -57,8 +58,21 @@ pub trait DynModel: Send + Sync {
         obs: Option<&mut Observer>,
     ) -> Result<RunReport>;
 
+    /// Run on the sharded adaptive scheduler. Errors unless the model
+    /// exposes a footprint topology
+    /// ([`ShardableModel`], unlocked via
+    /// [`Runnable::with_sharding`]).
+    fn run_sharded(
+        &self,
+        cfg: &ShardedConfig,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport>;
+
     /// Whether the model has a synchronous form (can run stepwise).
     fn has_sync_form(&self) -> bool;
+
+    /// Whether the model exposes a footprint topology (can run sharded).
+    fn has_sharded_form(&self) -> bool;
 
     /// Snapshot the model's typed metrics from quiescent state (empty if
     /// the model exports none).
@@ -92,12 +106,18 @@ pub struct Runnable<M: Model> {
     probe: Option<Box<dyn Fn(&M) -> Metrics + Send + Sync>>,
     check: Option<Box<dyn Fn(&M) -> std::result::Result<(), String> + Send + Sync>>,
     stepwise: Option<StepwiseFn<M>>,
+    sharded: Option<ShardedFn<M>>,
 }
 
 /// The monomorphized stepwise entry point stored by [`Runnable`] when the
 /// model has a synchronous form.
 type StepwiseFn<M> =
     fn(&M, usize, u64, Option<(&dyn Fn() -> Metrics, &mut Observer)>) -> RunReport;
+
+/// The monomorphized sharded entry point stored by [`Runnable`] when the
+/// model exposes a footprint topology.
+type ShardedFn<M> =
+    fn(&M, &ShardedConfig, Option<(&dyn Fn() -> Metrics, &mut Observer)>) -> RunReport;
 
 fn run_stepwise_impl<M: Model + SyncModel>(
     m: &M,
@@ -106,6 +126,18 @@ fn run_stepwise_impl<M: Model + SyncModel>(
     obs: Option<(&dyn Fn() -> Metrics, &mut Observer)>,
 ) -> RunReport {
     let engine = StepwiseEngine::new(workers, seed);
+    match obs {
+        None => engine.run(m),
+        Some((probe, observer)) => engine.run_observed(m, probe, observer),
+    }
+}
+
+fn run_sharded_impl<M: ShardableModel>(
+    m: &M,
+    cfg: &ShardedConfig,
+    obs: Option<(&dyn Fn() -> Metrics, &mut Observer)>,
+) -> RunReport {
+    let engine = ShardedEngine::new(*cfg);
     match obs {
         None => engine.run(m),
         Some((probe, observer)) => engine.run_observed(m, probe, observer),
@@ -121,6 +153,7 @@ impl<M: Model> Runnable<M> {
             probe: None,
             check: None,
             stepwise: None,
+            sharded: None,
         }
     }
 
@@ -156,6 +189,16 @@ impl<M: Model> Runnable<M> {
         M: SyncModel,
     {
         self.stepwise = Some(run_stepwise_impl::<M>);
+        self
+    }
+
+    /// Unlock the sharded adaptive scheduler (requires a footprint
+    /// topology).
+    pub fn with_sharding(mut self) -> Self
+    where
+        M: ShardableModel,
+    {
+        self.sharded = Some(run_sharded_impl::<M>);
         self
     }
 
@@ -241,8 +284,34 @@ impl<M: Model> DynModel for Runnable<M> {
         }
     }
 
+    fn run_sharded(
+        &self,
+        cfg: &ShardedConfig,
+        obs: Option<&mut Observer>,
+    ) -> Result<RunReport> {
+        match self.sharded {
+            Some(f) => Ok(match obs {
+                None => f(&self.model, cfg, None),
+                Some(observer) => f(
+                    &self.model,
+                    cfg,
+                    Some((&|| self.probe_now(), observer)),
+                ),
+            }),
+            None => Err(crate::err!(
+                "model `{}` exposes no footprint topology; the sharded engine needs \
+                 ShardableModel (wrap it with Runnable::with_sharding)",
+                self.name
+            )),
+        }
+    }
+
     fn has_sync_form(&self) -> bool {
         self.stepwise.is_some()
+    }
+
+    fn has_sharded_form(&self) -> bool {
+        self.sharded.is_some()
     }
 
     fn observe(&self) -> Metrics {
@@ -313,7 +382,26 @@ mod tests {
         assert_eq!(dyn_model.task_count_hint(3), Some(200));
         assert!(!dyn_model.has_sync_form());
         assert!(dyn_model.run_stepwise(2, 3, None).is_err());
+        assert!(!dyn_model.has_sharded_form(), "sharding is opt-in");
+        assert!(dyn_model.run_sharded(&ShardedConfig::default(), None).is_err());
         dyn_model.check_consistency().unwrap();
+    }
+
+    #[test]
+    fn with_sharding_unlocks_the_sharded_engine() {
+        let dyn_model: Box<dyn DynModel> = Runnable::new("inc", IncModel::new(300, 8))
+            .with_sharding()
+            .boxed();
+        assert!(dyn_model.has_sharded_form());
+        let cfg = ShardedConfig {
+            workers: 2,
+            seed: 3,
+            ..Default::default()
+        };
+        let report = dyn_model.run_sharded(&cfg, None).unwrap();
+        assert_eq!(report.engine, "sharded");
+        assert_eq!(report.totals.executed, 300);
+        assert!(report.sched.is_some());
     }
 
     #[test]

@@ -129,6 +129,8 @@ pub struct ModelInfo {
     pub validate_steps: u64,
     /// Whether the model has a synchronous form (stepwise-capable).
     pub has_sync_form: bool,
+    /// Whether the model exposes a footprint topology (sharded-capable).
+    pub has_sharded_form: bool,
 }
 
 impl ModelInfo {
@@ -146,6 +148,7 @@ impl ModelInfo {
             paper_steps: 10_000,
             validate_steps: 10_000,
             has_sync_form: false,
+            has_sharded_form: false,
         }
     }
 
@@ -184,6 +187,12 @@ impl ModelInfo {
     /// Mark the model stepwise-capable.
     pub fn sync(mut self) -> Self {
         self.has_sync_form = true;
+        self
+    }
+
+    /// Mark the model sharded-capable.
+    pub fn sharded(mut self) -> Self {
+        self.has_sharded_form = true;
         self
     }
 
@@ -381,7 +390,8 @@ mod bundled {
             .sizes(&[25, 50, 100, 200, 400, 800])
             .agents(2_000, 10_000)
             .steps(60_000, 2_000_000)
-            .validate_steps(20_000);
+            .validate_steps(20_000)
+            .sharded();
         r.register(info, |ctx| {
             let params = AxelrodParams {
                 agents: ctx.agents,
@@ -391,7 +401,10 @@ mod bundled {
                 steps: ctx.steps,
             };
             let model = AxelrodModel::new(params, ctx.seed ^ 0x1217);
-            Ok(Runnable::new("axelrod", model).observable().boxed())
+            Ok(Runnable::new("axelrod", model)
+                .observable()
+                .with_sharding()
+                .boxed())
         })
     }
 
@@ -402,7 +415,8 @@ mod bundled {
             .agents(4_000, 4_000)
             .steps(120, 3_000)
             .validate_steps(60)
-            .sync();
+            .sync()
+            .sharded();
         r.register(info, |ctx| {
             let params = SirParams {
                 agents: ctx.agents,
@@ -417,7 +431,11 @@ mod bundled {
                     .f64_or("initial_infected", SirParams::default().initial_infected)?,
             };
             let model = SirModel::new(params, ctx.seed ^ 0x51);
-            Ok(Runnable::new("sir", model).observable().with_sync().boxed())
+            Ok(Runnable::new("sir", model)
+                .observable()
+                .with_sync()
+                .with_sharding()
+                .boxed())
         })
     }
 
@@ -426,7 +444,8 @@ mod bundled {
             .sizes(&[1])
             .agents(2_000, 2_000)
             .steps(100_000, 100_000)
-            .validate_steps(20_000);
+            .validate_steps(20_000)
+            .sharded();
         r.register(info, |ctx| {
             let degree = ctx.params.usize_or("degree", 6)?;
             let opinions = ctx.params.usize_or("opinions", 3)? as u8;
@@ -438,7 +457,10 @@ mod bundled {
                 },
                 ctx.seed ^ 0x70,
             );
-            Ok(Runnable::new("voter", model).observable().boxed())
+            Ok(Runnable::new("voter", model)
+                .observable()
+                .with_sharding()
+                .boxed())
         })
     }
 
@@ -501,6 +523,15 @@ mod tests {
         assert!(r.contains("cultural"), "alias resolves");
         assert!(r.info("sir").unwrap().has_sync_form);
         assert!(!r.info("axelrod").unwrap().has_sync_form);
+        for (name, sharded) in [
+            ("sir", true),
+            ("voter", true),
+            ("axelrod", true),
+            ("ising", false),
+            ("schelling", false),
+        ] {
+            assert_eq!(r.info(name).unwrap().has_sharded_form, sharded, "{name}");
+        }
     }
 
     #[test]

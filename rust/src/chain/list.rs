@@ -147,6 +147,15 @@ impl<R> Chain<R> {
     /// slot; the former pins `last` (it cannot be erased under us), the
     /// latter serializes appends.
     pub fn append_after(&self, last: &Arc<Node<R>>, recipe: R) -> Arc<Node<R>> {
+        self.link_before_tail(last, recipe)
+    }
+
+    /// The shared linking body of [`append_after`](Chain::append_after)
+    /// and [`append_tail`](Chain::append_tail): build a pre-linked node,
+    /// publish it after `last`, update `tail.prev` and the counters. The
+    /// caller guarantees `last` is pinned (visitor slot or erase lock)
+    /// and that appends are serialized.
+    fn link_before_tail(&self, last: &Arc<Node<R>>, recipe: R) -> Arc<Node<R>> {
         let seq = self.created.fetch_add(1, Ordering::AcqRel);
         // Pre-linked construction: the node is unpublished, so its own
         // link lock is not needed (perf: one fewer lock round-trip).
@@ -155,7 +164,7 @@ impl<R> Chain<R> {
             let mut ll = last.links.lock().unwrap();
             debug_assert!(
                 ll.next.as_ref().is_some_and(|n| Arc::ptr_eq(n, &self.tail)),
-                "append_after: `last` is not the last node"
+                "append: `last` is not the last node"
             );
             ll.next = Some(node.clone());
         }
@@ -170,6 +179,34 @@ impl<R> Chain<R> {
             self.max_len.fetch_max(len, Ordering::Relaxed);
         }
         node
+    }
+
+    /// Append a task at the tail **without taking visitor slots** — the
+    /// sharded scheduler's append path (DESIGN.md §7).
+    ///
+    /// The classic [`append_after`](Chain::append_after) discipline pins
+    /// the last node via its visitor slot, which only works when the
+    /// appender is the worker located there. The sharded splitter appends
+    /// to *other* workers' chains while those workers hold slots in them,
+    /// so it pins the last node with the **erase lock** instead: unlinks
+    /// are excluded, hence `tail.prev` cannot be erased or displaced
+    /// mid-append (displacement by a concurrent append is excluded by the
+    /// caller's own serialization — see the locking contract).
+    ///
+    /// # Locking contract
+    /// Callers must serialize `append_tail` invocations on one chain
+    /// externally (the splitter holds its router mutex across the call).
+    /// No visitor slot is required, so appenders never wait on traversing
+    /// workers and vice versa.
+    pub fn append_tail(&self, recipe: R) -> Arc<Node<R>> {
+        let _erase = self.erase_lock.lock().unwrap();
+        let last = {
+            let tl = self.tail.links.lock().unwrap();
+            tl.prev
+                .upgrade()
+                .expect("tail.prev target is kept alive by the forward chain")
+        };
+        self.link_before_tail(&last, recipe)
     }
 
     /// Unlink an executed task node and mark it erased.
@@ -434,6 +471,72 @@ mod tests {
         assert!(chain.is_empty());
         assert_eq!(chain.created(), 3 * iters);
         assert_eq!(chain.erased(), 3 * iters);
+        assert_eq!(chain.validate().unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn append_tail_matches_slot_based_appends() {
+        let c: Chain<u32> = Chain::new();
+        let a = append(&c, 1); // slot-based
+        let b = c.append_tail(2); // lock-based
+        let d = append(&c, 3);
+        assert_eq!(c.validate().unwrap(), vec![0, 1, 2]);
+        assert_eq!((a.seq(), b.seq(), d.seq()), (0, 1, 2));
+        for n in [a, b, d] {
+            n.visitor.acquire();
+            n.begin_execution();
+            c.unlink(&n);
+            n.visitor.release();
+        }
+        assert!(c.is_empty());
+        assert_eq!(c.validate().unwrap(), Vec::<u64>::new());
+    }
+
+    #[test]
+    fn append_tail_races_unlink_safely() {
+        // One thread appends (serialized appender, like the splitter),
+        // another executes+unlinks from the front: the erase lock keeps
+        // the structure consistent without visitor-slot handshakes.
+        let chain: std::sync::Arc<Chain<u64>> = std::sync::Arc::new(Chain::new());
+        let n = 4_000u64;
+        std::thread::scope(|s| {
+            {
+                let chain = chain.clone();
+                s.spawn(move || {
+                    for i in 0..n {
+                        chain.append_tail(i);
+                    }
+                });
+            }
+            {
+                let chain = chain.clone();
+                s.spawn(move || {
+                    let mut done = 0u64;
+                    while done < n {
+                        let first = {
+                            let hl = chain.head().links.lock().unwrap();
+                            hl.next.clone().unwrap()
+                        };
+                        if chain.is_tail(&first) {
+                            std::thread::yield_now();
+                            continue;
+                        }
+                        first.visitor.acquire();
+                        if first.state() == crate::chain::NodeState::Erased {
+                            first.visitor.release();
+                            continue;
+                        }
+                        first.begin_execution();
+                        chain.unlink(&first);
+                        first.visitor.release();
+                        done += 1;
+                    }
+                });
+            }
+        });
+        assert!(chain.is_empty());
+        assert_eq!(chain.created(), n);
+        assert_eq!(chain.erased(), n);
         assert_eq!(chain.validate().unwrap(), Vec::<u64>::new());
     }
 

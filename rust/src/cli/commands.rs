@@ -86,11 +86,14 @@ pub fn models(_args: &Args) -> Result<()> {
     println!("registered models:");
     for name in registry::model_names() {
         let info = registry::info(&name)?;
-        let engines = if info.has_sync_form {
-            "parallel|sequential|virtual|stepwise"
-        } else {
-            "parallel|sequential|virtual"
-        };
+        let mut engines = vec!["parallel", "sequential", "virtual"];
+        if info.has_sync_form {
+            engines.push("stepwise");
+        }
+        if info.has_sharded_form {
+            engines.push("sharded");
+        }
+        let engines = engines.join("|");
         println!("  {:<10} {}", info.name, info.summary);
         println!(
             "  {:<10}   engines: {engines}; defaults: N={}, steps={}, sizes={:?}",
@@ -184,6 +187,35 @@ pub fn run(args: &Args) -> Result<()> {
         out.report.totals.cycles,
         out.report.chain.max_chain_len
     );
+    if out.report.per_worker.len() > 1 {
+        let loads: Vec<String> = out
+            .report
+            .per_worker
+            .iter()
+            .map(|w| format!("w{}:{}", w.worker, w.executed))
+            .collect();
+        println!("per-worker executed: {}", loads.join(" "));
+    }
+    if let Some(sched) = &out.report.sched {
+        println!(
+            "sched: shards={} local={} boundary={} ({:.1}%) migrations={} \
+             rebalances={} edge_cut={}",
+            sched.shards,
+            sched.local_tasks,
+            sched.boundary_tasks,
+            sched.boundary_ratio() * 100.0,
+            sched.migrations,
+            sched.rebalances,
+            sched.edge_cut
+        );
+        let loads: Vec<String> = sched
+            .per_shard_executed
+            .iter()
+            .enumerate()
+            .map(|(s, n)| format!("s{s}:{n}"))
+            .collect();
+        println!("per-shard executed: {}", loads.join(" "));
+    }
     if out.observable.len() > 1 {
         println!(
             "observations: {} frames (every {} tasks)",
@@ -308,6 +340,14 @@ pub fn validate(args: &Args) -> Result<()> {
         let ok = got == reference;
         all_ok &= ok;
         println!("parallel n={n}: {} ({got})", if ok { "OK" } else { "MISMATCH" });
+    }
+    if registry::info(&cfg.model)?.has_sharded_form {
+        for &n in &workers {
+            let got = sim(EngineKind::Sharded, n)?.observable;
+            let ok = got == reference;
+            all_ok &= ok;
+            println!("sharded  n={n}: {} ({got})", if ok { "OK" } else { "MISMATCH" });
+        }
     }
     {
         let got = sim(EngineKind::Virtual, 3)?.observable;

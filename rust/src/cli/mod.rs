@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! adapar run        --model sir --engine parallel --workers 4 --size 50
+//! adapar run        --model sir --engine sharded  --workers 4 --size 50
 //! adapar sweep      --preset fig3 [--engine virtual] [--out target/figures]
 //! adapar sweep      --config experiments/fig2.toml
 //! adapar models
@@ -39,7 +40,7 @@ COMMANDS:
 
 COMMON OPTIONS:
   --model <name>                        any registered model (see `adapar models`) [axelrod]
-  --engine <parallel|sequential|virtual|stepwise>
+  --engine <parallel|sequential|virtual|stepwise|sharded>
                                         execution engine [run: parallel, sweep: virtual]
   --workers <n | list>                  worker count(s) [run: 2, sweep: 1,2,3,4,5]
   --size <s> / --sizes <list>           task-size proxy (F or s)

@@ -181,6 +181,13 @@ impl SweepConfig {
                 self.model
             );
         }
+        if self.engine == EngineKind::Sharded && !info.has_sharded_form {
+            crate::bail!(
+                "the sharded engine requires a footprint topology; `{}` exposes none \
+                 (implement ShardableModel and register with with_sharding)",
+                self.model
+            );
+        }
         Ok(())
     }
 }
@@ -272,7 +279,7 @@ degree = 10
 
     #[test]
     fn engine_roundtrip() {
-        for e in ["parallel", "sequential", "virtual", "stepwise"] {
+        for e in ["parallel", "sequential", "virtual", "stepwise", "sharded"] {
             let k: EngineKind = e.parse().unwrap();
             assert_eq!(k.to_string(), e);
         }

@@ -111,6 +111,11 @@ mod tests {
             let res = run_once(&cfg, 10, 2, 1, &cost);
             let has_sync = crate::api::registry::info(&model).unwrap().has_sync_form;
             assert_eq!(res.is_ok(), has_sync, "{model} stepwise");
+            // Sharded runs exactly on the models that expose a topology.
+            let cfg = tiny(&model, EngineKind::Sharded);
+            let res = run_once(&cfg, 10, 2, 1, &cost);
+            let has_sharded = crate::api::registry::info(&model).unwrap().has_sharded_form;
+            assert_eq!(res.is_ok(), has_sharded, "{model} sharded");
         }
     }
 

@@ -26,6 +26,11 @@
 //! * [`vtime`] — the virtual-core testbed: a deterministic discrete-event
 //!   simulation of the protocol with a calibrated cost model (reproduces
 //!   the paper's multi-core figures on a single-core host).
+//! * [`sched`] — the sharded adaptive scheduler: per-shard chains over a
+//!   BFS edge-cut partition of the model's footprint topology, a
+//!   spillover chain with dependence-preserving fences for cross-shard
+//!   tasks, and an EWMA-cost-driven rebalancer migrating blocks between
+//!   shards at epoch boundaries (`--engine sharded`).
 //! * [`runtime`] — PJRT/XLA runtime loading the AOT-compiled JAX+Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) and an XLA-backed task-execution
 //!   engine.
@@ -56,6 +61,7 @@ pub mod model;
 pub mod models;
 pub mod protocol;
 pub mod runtime;
+pub mod sched;
 pub mod sim;
 pub mod util;
 pub mod vtime;
@@ -66,6 +72,7 @@ pub use api::{
     SimulationBuilder,
 };
 pub use error::{Context, Error};
+pub use sched::{ShardableModel, ShardedConfig, ShardedEngine};
 
 /// Crate-wide result type.
 pub type Result<T> = error::Result<T>;

@@ -138,6 +138,19 @@ impl Model for IncModel {
     }
 }
 
+impl crate::sched::ShardableModel for IncModel {
+    /// Cells are independent (conflicts are same-cell only), so the
+    /// topology is edgeless: the BFS partitioner falls back to contiguous
+    /// index ranges and every task is shard-local.
+    fn sched_topology(&self) -> crate::sim::graph::Csr {
+        crate::sim::graph::Csr::from_edges(self.n_cells as usize, &[])
+    }
+
+    fn footprint(&self, r: &IncRecipe, out: &mut Vec<u32>) {
+        out.push(r.cell);
+    }
+}
+
 /// Convenience: build a fresh [`IncModel`].
 pub fn fresh_inc_model(tasks: u64, n_cells: u32) -> IncModel {
     IncModel::new(tasks, n_cells)

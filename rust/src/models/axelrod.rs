@@ -196,6 +196,28 @@ impl AxelrodModel {
     }
 }
 
+impl crate::sched::ShardableModel for AxelrodModel {
+    /// Axelrod pairs are drawn from the complete graph — there is no
+    /// locality to exploit, and materializing K_N is pointless — so the
+    /// topology is edgeless: the BFS partitioner degrades to contiguous
+    /// agent ranges and most interactions become spillover traffic.
+    /// `sharded` on Axelrod is therefore a correctness/stress
+    /// configuration (exercised by rust/tests/sharded.rs), not a
+    /// performance one.
+    fn sched_topology(&self) -> crate::sim::graph::Csr {
+        crate::sim::graph::Csr::from_edges(self.params.agents, &[])
+    }
+
+    /// An interaction reads `{source, target}` and writes `{target}`;
+    /// the target leads as the home block (it is the written agent).
+    fn footprint(&self, r: &Interaction, out: &mut Vec<u32>) {
+        out.push(r.target);
+        if r.source != r.target {
+            out.push(r.source);
+        }
+    }
+}
+
 impl crate::api::observe::Observable for AxelrodModel {
     /// Cultural-domain counts — the paper's Fig. 2 model's trajectory
     /// quantity: how many distinct cultures survive, and how dominant the

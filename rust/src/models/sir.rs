@@ -124,6 +124,9 @@ pub struct SirModel {
     pub params: SirParams,
     graph: Csr,
     partition: Partition,
+    /// The aggregate (block-adjacency) graph; doubles as the sharded
+    /// scheduler's footprint topology.
+    aggregate: Csr,
     /// Per-block dependence mask: `{b} ∪ neighbours(b)` in the aggregate
     /// graph. Shared with every worker record.
     masks: std::sync::Arc<Vec<BitSet>>,
@@ -170,6 +173,7 @@ impl SirModel {
             params,
             graph,
             partition,
+            aggregate: agg,
             masks: std::sync::Arc::new(masks),
             state: SharedSim::new(SirState { cur, new }),
             setup_cost,
@@ -415,6 +419,24 @@ impl Model for SirModel {
             SirPhase::Compute => members * (1.0 + self.params.degree as f64 * 0.5),
             SirPhase::Swap => members * 0.25,
         }
+    }
+}
+
+impl crate::sched::ShardableModel for SirModel {
+    /// Footprint blocks are the model's own agent subsets; their
+    /// interaction topology is the aggregate graph (ring-like for the
+    /// paper's configuration, so BFS sharding yields near-contiguous
+    /// runs of subsets with narrow seams between shards).
+    fn sched_topology(&self) -> Csr {
+        self.aggregate.clone()
+    }
+
+    /// Conservative footprint of either phase: `{b} ∪ neighbours(b)` in
+    /// the aggregate graph — exactly the mask [`SirRecord::depends`]
+    /// tests against, so disjoint footprints imply independence.
+    fn footprint(&self, r: &SirTask, out: &mut Vec<u32>) {
+        out.push(r.block);
+        out.extend_from_slice(self.aggregate.neighbors(r.block as usize));
     }
 }
 

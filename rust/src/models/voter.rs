@@ -74,6 +74,24 @@ impl VoterModel {
     }
 }
 
+impl crate::sched::ShardableModel for VoterModel {
+    /// Footprint blocks are the agents themselves; the interaction
+    /// topology is the voter graph (speakers are always neighbours of
+    /// their listener, so BFS sharding keeps most pairs shard-local).
+    fn sched_topology(&self) -> crate::sim::graph::Csr {
+        (*self.graph).clone()
+    }
+
+    /// A step reads `{speaker, listener}` and writes `{listener}`; the
+    /// listener leads as the home block (it is the written agent).
+    fn footprint(&self, r: &VoterStep, out: &mut Vec<u32>) {
+        out.push(r.listener);
+        if r.speaker != r.listener {
+            out.push(r.speaker);
+        }
+    }
+}
+
 impl crate::api::observe::Observable for VoterModel {
     /// Opinion census (labelled by opinion index) plus the number of
     /// surviving opinions ("domains").

@@ -103,6 +103,9 @@ impl ParallelEngine {
             collect_timing: self.cfg.collect_timing,
         };
         let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
+        for (w, s) in per_worker.iter_mut().enumerate() {
+            s.worker = w;
+        }
 
         if let Some((probe, observer)) = obs.as_mut() {
             observer.record_initial(*probe);
@@ -162,6 +165,7 @@ impl ParallelEngine {
                 tasks_executed: chain.erased(),
                 max_chain_len: chain.max_len(),
             },
+            sched: None,
         }
     }
 }

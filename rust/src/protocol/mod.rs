@@ -20,5 +20,5 @@ pub mod worker;
 
 pub use engine::{ParallelEngine, ProtocolConfig};
 pub use sequential::SequentialEngine;
-pub use stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
+pub use stats::{ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats};
 pub use stepwise::{StepwiseEngine, SyncModel};

@@ -86,6 +86,7 @@ impl SequentialEngine {
                 tasks_executed: executed,
                 max_chain_len: 1,
             },
+            sched: None,
         }
     }
 }

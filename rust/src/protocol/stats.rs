@@ -12,6 +12,11 @@ use crate::util::json::Json;
 /// Counters collected by one worker across a run.
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStats {
+    /// Id of the worker that produced these counters (position in
+    /// `RunReport::per_worker`; meaningless on merged totals, whose JSON
+    /// serialization therefore omits it). Surfaced in the `--json`
+    /// report so per-worker load imbalance is visible in run output.
+    pub worker: usize,
     /// Completed chain-exploration cycles.
     pub cycles: u64,
     /// Tasks executed (and erased) by this worker.
@@ -33,9 +38,23 @@ pub struct WorkerStats {
 }
 
 impl WorkerStats {
-    /// The counters as a JSON object (durations in seconds).
+    /// The counters as a JSON object (durations in seconds), including
+    /// the worker id — the per-worker serialization.
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields = vec![("worker".into(), Json::from(self.worker))];
+        fields.extend(self.counter_fields());
+        Json::Obj(fields)
+    }
+
+    /// The counters as a JSON object **without** a worker id — the
+    /// serialization for merged totals, where an id would misattribute
+    /// the aggregate to worker 0.
+    pub fn to_json_totals(&self) -> Json {
+        Json::Obj(self.counter_fields())
+    }
+
+    fn counter_fields(&self) -> Vec<(String, Json)> {
+        vec![
             ("cycles".into(), Json::from(self.cycles)),
             ("executed".into(), Json::from(self.executed)),
             ("created".into(), Json::from(self.created)),
@@ -48,10 +67,11 @@ impl WorkerStats {
             ("idle_cycles".into(), Json::from(self.idle_cycles)),
             ("exec_time_s".into(), Json::from(self.exec_time.as_secs_f64())),
             ("busy_time_s".into(), Json::from(self.busy_time.as_secs_f64())),
-        ])
+        ]
     }
 
-    /// Merge another worker's counters into this one.
+    /// Merge another worker's counters into this one. The `worker` id is
+    /// left untouched (merged totals keep their own identity).
     pub fn merge(&mut self, o: &WorkerStats) {
         self.cycles += o.cycles;
         self.executed += o.executed;
@@ -74,6 +94,71 @@ pub struct ProtocolStats {
     pub tasks_executed: u64,
     /// High-water mark of the chain length.
     pub max_chain_len: usize,
+}
+
+/// Sharded-scheduler telemetry, attached to [`RunReport::sched`] by the
+/// sharded engine only (every other engine reports `None`). Quantifies
+/// the shard decomposition (edge cut, local/boundary split) and the
+/// adaptive loop (migrations per rebalance epoch) — the observability
+/// counterpart of DESIGN.md §7.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SchedStats {
+    /// Number of shards (per-shard chains).
+    pub shards: usize,
+    /// Topology edges crossing the *initial* shard assignment (BFS
+    /// partitioner quality metric).
+    pub edge_cut: usize,
+    /// Tasks whose footprint stayed inside one shard.
+    pub local_tasks: u64,
+    /// Cross-shard tasks routed through the spillover chain.
+    pub boundary_tasks: u64,
+    /// Completed-fence unlinks performed by shard owners.
+    pub fence_clears: u64,
+    /// Spillover tasks passed because a touched shard was not yet clear.
+    pub spill_blocked: u64,
+    /// Block→shard migrations performed by the rebalancer.
+    pub migrations: u64,
+    /// Epoch boundaries at which the rebalancer ran.
+    pub rebalances: u64,
+    /// Local tasks executed per shard (spillover executions are counted
+    /// in `boundary_tasks`, not here) — the per-shard load-imbalance view.
+    pub per_shard_executed: Vec<u64>,
+}
+
+impl SchedStats {
+    /// Fraction of tasks that crossed shards (the spillover ratio).
+    pub fn boundary_ratio(&self) -> f64 {
+        let total = self.local_tasks + self.boundary_tasks;
+        if total == 0 {
+            0.0
+        } else {
+            self.boundary_tasks as f64 / total as f64
+        }
+    }
+
+    /// The telemetry as a JSON object (for `--json` and bench artifacts).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("shards".into(), Json::from(self.shards)),
+            ("edge_cut".into(), Json::from(self.edge_cut)),
+            ("local_tasks".into(), Json::from(self.local_tasks)),
+            ("boundary_tasks".into(), Json::from(self.boundary_tasks)),
+            ("boundary_ratio".into(), Json::from(self.boundary_ratio())),
+            ("fence_clears".into(), Json::from(self.fence_clears)),
+            ("spill_blocked".into(), Json::from(self.spill_blocked)),
+            ("migrations".into(), Json::from(self.migrations)),
+            ("rebalances".into(), Json::from(self.rebalances)),
+            (
+                "per_shard_executed".into(),
+                Json::Arr(
+                    self.per_shard_executed
+                        .iter()
+                        .map(|&n| Json::from(n))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
 }
 
 /// How a report's `time_s` was measured.
@@ -117,6 +202,8 @@ pub struct RunReport {
     pub per_worker: Vec<WorkerStats>,
     /// Chain statistics.
     pub chain: ProtocolStats,
+    /// Sharded-scheduler telemetry (`Some` only for the sharded engine).
+    pub sched: Option<SchedStats>,
 }
 
 impl RunReport {
@@ -150,14 +237,15 @@ impl RunReport {
     }
 
     /// The whole report as a JSON object (for `--json` CLI output and
-    /// bench artifacts).
+    /// bench artifacts). The `sched` telemetry object appears only for
+    /// sharded runs.
     pub fn to_json(&self) -> Json {
-        Json::Obj(vec![
+        let mut fields = vec![
             ("engine".into(), Json::from(self.engine)),
             ("workers".into(), Json::from(self.workers)),
             ("time_s".into(), Json::from(self.time_s)),
             ("basis".into(), Json::from(self.basis.to_string())),
-            ("totals".into(), self.totals.to_json()),
+            ("totals".into(), self.totals.to_json_totals()),
             (
                 "per_worker".into(),
                 Json::Arr(self.per_worker.iter().map(WorkerStats::to_json).collect()),
@@ -174,7 +262,11 @@ impl RunReport {
                 ]),
             ),
             ("overhead_ratio".into(), Json::from(self.overhead_ratio())),
-        ])
+        ];
+        if let Some(sched) = &self.sched {
+            fields.push(("sched".into(), sched.to_json()));
+        }
+        Json::Obj(fields)
     }
 
     /// One-line human summary.
@@ -228,10 +320,49 @@ mod tests {
             totals: WorkerStats::default(),
             per_worker: vec![],
             chain: ProtocolStats::default(),
+            sched: None,
         };
         assert_eq!(r.overhead_ratio(), 0.0);
         r.totals.executed = 10;
         r.totals.skipped_dependent = 10;
         assert!((r.overhead_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn worker_id_survives_merge_and_reaches_json() {
+        let mut a = WorkerStats {
+            worker: 3,
+            executed: 1,
+            ..Default::default()
+        };
+        let b = WorkerStats {
+            worker: 9,
+            executed: 2,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.worker, 3, "merge keeps the receiver's identity");
+        assert_eq!(a.executed, 3);
+        assert!(a.to_json().render().contains("\"worker\":3"));
+        assert!(
+            !a.to_json_totals().render().contains("worker"),
+            "merged totals must not claim a worker identity"
+        );
+    }
+
+    #[test]
+    fn sched_stats_ratio_and_json() {
+        let s = SchedStats {
+            shards: 4,
+            local_tasks: 75,
+            boundary_tasks: 25,
+            per_shard_executed: vec![20, 19, 18, 18],
+            ..Default::default()
+        };
+        assert!((s.boundary_ratio() - 0.25).abs() < 1e-12);
+        let json = s.to_json().render();
+        assert!(json.contains("\"shards\":4"), "{json}");
+        assert!(json.contains("\"per_shard_executed\":[20,19,18,18]"), "{json}");
+        assert_eq!(SchedStats::default().boundary_ratio(), 0.0);
     }
 }

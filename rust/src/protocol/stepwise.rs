@@ -140,6 +140,7 @@ impl StepwiseEngine {
                 tasks_executed: executed,
                 max_chain_len: 0,
             },
+            sched: None,
         }
     }
 
@@ -206,6 +207,7 @@ impl StepwiseEngine {
                 tasks_executed: executed,
                 max_chain_len: 0,
             },
+            sched: None,
         }
     }
 

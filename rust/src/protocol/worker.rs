@@ -74,8 +74,10 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     ctx: &RunCtx<'_, M, S>,
     worker_id: usize,
 ) -> WorkerStats {
-    let _ = worker_id; // reserved for tracing
-    let mut stats = WorkerStats::default();
+    let mut stats = WorkerStats {
+        worker: worker_id,
+        ..Default::default()
+    };
     let mut record = ctx.model.record();
     let loop_start = Instant::now();
 

@@ -1,0 +1,194 @@
+//! Per-block cost telemetry and the EWMA cost model driving the
+//! rebalancer.
+//!
+//! Workers time every `Model::execute` call (the per-task timing that
+//! `WorkerStats::exec_time` already aggregates) and bill it to the task's
+//! *home block* through the lock-free [`CostProbe`]. At each quiescent
+//! epoch boundary the engine drains the probe into the [`BlockCost`]
+//! model: an exponentially-weighted moving average of ns-per-task and
+//! tasks-per-epoch per block, whose product is the block's *load* — the
+//! quantity the rebalancer equalizes across shards. EWMA smoothing makes
+//! the loop graceful under heterogeneous, drifting per-agent cost (e.g.
+//! Axelrod's trait-dependent work): one noisy epoch cannot trigger a
+//! migration storm, yet persistent skew is tracked within a few epochs.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::shard::ShardMap;
+
+/// Lock-free per-block execution-time accumulator, written by workers on
+/// the hot path and drained by the engine between epochs.
+pub struct CostProbe {
+    cells: Vec<Cell>,
+}
+
+#[derive(Default)]
+struct Cell {
+    ns: AtomicU64,
+    tasks: AtomicU64,
+}
+
+impl CostProbe {
+    /// A probe over `blocks` footprint blocks.
+    pub fn new(blocks: usize) -> Self {
+        let mut cells = Vec::with_capacity(blocks);
+        cells.resize_with(blocks, Cell::default);
+        Self { cells }
+    }
+
+    /// Number of blocks tracked.
+    pub fn blocks(&self) -> usize {
+        self.cells.len()
+    }
+
+    /// Bill `ns` nanoseconds of execution to `block` (relaxed ordering:
+    /// the counters are only read at quiescent boundaries, after the
+    /// worker joins).
+    #[inline]
+    pub fn record(&self, block: u32, ns: u64) {
+        let cell = &self.cells[block as usize];
+        cell.ns.fetch_add(ns, Ordering::Relaxed);
+        cell.tasks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Drain one epoch's `(tasks, ns)` per block, resetting the counters.
+    pub fn drain(&self) -> Vec<(u64, u64)> {
+        self.cells
+            .iter()
+            .map(|c| (c.tasks.swap(0, Ordering::Relaxed), c.ns.swap(0, Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+/// EWMA per-block cost model: `cost(b)` ≈ expected ns per task of block
+/// `b`, `rate(b)` ≈ tasks of block `b` per epoch. `load(b) = cost · rate`
+/// is the block's expected work per epoch.
+pub struct BlockCost {
+    alpha: f64,
+    cost_ns: Vec<f64>,
+    rate: Vec<f64>,
+    seen: Vec<bool>,
+}
+
+impl BlockCost {
+    /// A model over `blocks` blocks with smoothing factor `alpha`
+    /// (weight of the newest epoch, in `(0, 1]`).
+    pub fn new(blocks: usize, alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self {
+            alpha,
+            cost_ns: vec![0.0; blocks],
+            rate: vec![0.0; blocks],
+            seen: vec![false; blocks],
+        }
+    }
+
+    /// Fold one epoch's probe readings into the averages. The first
+    /// observation of a block seeds its EWMA directly (no bias toward the
+    /// zero prior); the task rate decays for blocks idle this epoch.
+    pub fn update(&mut self, probe: &CostProbe) {
+        debug_assert_eq!(probe.blocks(), self.cost_ns.len());
+        for (b, (tasks, ns)) in probe.drain().into_iter().enumerate() {
+            if tasks > 0 {
+                let mean = ns as f64 / tasks as f64;
+                self.cost_ns[b] = if self.seen[b] {
+                    self.alpha * mean + (1.0 - self.alpha) * self.cost_ns[b]
+                } else {
+                    self.seen[b] = true;
+                    mean
+                };
+            }
+            self.rate[b] = self.alpha * tasks as f64 + (1.0 - self.alpha) * self.rate[b];
+        }
+    }
+
+    /// Expected ns per task of `block` (0 until first observed).
+    #[inline]
+    pub fn cost_ns(&self, block: usize) -> f64 {
+        self.cost_ns[block]
+    }
+
+    /// Smoothed tasks per epoch of `block`.
+    #[inline]
+    pub fn rate(&self, block: usize) -> f64 {
+        self.rate[block]
+    }
+
+    /// Expected work (ns) of `block` per epoch.
+    #[inline]
+    pub fn load(&self, block: usize) -> f64 {
+        self.cost_ns[block] * self.rate[block]
+    }
+
+    /// Expected work per shard under `map` — the imbalance view the
+    /// rebalancer equalizes.
+    pub fn shard_loads(&self, map: &ShardMap) -> Vec<f64> {
+        debug_assert_eq!(map.blocks(), self.cost_ns.len());
+        let mut loads = vec![0.0; map.shards()];
+        for b in 0..map.blocks() {
+            loads[map.shard_of(b as u32) as usize] += self.load(b);
+        }
+        loads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::graph::{bfs_partition, ring_lattice};
+
+    #[test]
+    fn probe_accumulates_and_drains() {
+        let probe = CostProbe::new(3);
+        probe.record(0, 100);
+        probe.record(0, 300);
+        probe.record(2, 50);
+        assert_eq!(probe.drain(), vec![(2, 400), (0, 0), (1, 50)]);
+        assert_eq!(probe.drain(), vec![(0, 0); 3], "drain resets");
+    }
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let probe = CostProbe::new(1);
+        let mut cost = BlockCost::new(1, 0.5);
+        assert_eq!(cost.load(0), 0.0);
+
+        probe.record(0, 1000);
+        cost.update(&probe);
+        assert!((cost.cost_ns(0) - 1000.0).abs() < 1e-9, "first epoch seeds");
+        assert!((cost.rate(0) - 0.5).abs() < 1e-9, "rate EWMA from zero prior");
+
+        probe.record(0, 3000);
+        cost.update(&probe);
+        // cost: 0.5·3000 + 0.5·1000 = 2000
+        assert!((cost.cost_ns(0) - 2000.0).abs() < 1e-9);
+
+        // Idle epoch: cost holds, rate decays.
+        let rate_before = cost.rate(0);
+        cost.update(&probe);
+        assert!((cost.cost_ns(0) - 2000.0).abs() < 1e-9);
+        assert!(cost.rate(0) < rate_before);
+    }
+
+    #[test]
+    fn shard_loads_sum_block_loads() {
+        let g = ring_lattice(4, 2);
+        let map = super::super::shard::ShardMap::from_partition(&bfs_partition(&g, 2));
+        let probe = CostProbe::new(4);
+        let mut cost = BlockCost::new(4, 1.0);
+        for b in 0..4u32 {
+            probe.record(b, 100 * (b as u64 + 1));
+        }
+        cost.update(&probe);
+        let loads = cost.shard_loads(&map);
+        assert_eq!(loads.len(), 2);
+        let total: f64 = loads.iter().sum();
+        assert!((total - (100.0 + 200.0 + 300.0 + 400.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_alpha_rejected() {
+        let _ = BlockCost::new(1, 0.0);
+    }
+}

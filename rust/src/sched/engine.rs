@@ -1,0 +1,963 @@
+//! The sharded adaptive engine: per-shard chains, a spillover chain for
+//! cross-shard tasks, and the epoch-boundary rebalance loop.
+//!
+//! ## Architecture (DESIGN.md §7)
+//!
+//! * The model's footprint topology is partitioned once with the greedy
+//!   BFS edge-cut partitioner into `shards` balanced blocks-of-blocks;
+//!   each shard owns a [`Chain`] and each worker owns the shards
+//!   congruent to its id (one shard per worker by default).
+//! * A mutex-serialized splitter draws tasks from the epoch-gated
+//!   source in canonical order and routes each to its shard chain, or —
+//!   when its footprint crosses shards — to the spillover chain with a
+//!   fence in every touched shard chain.
+//! * Shard owners run the ordinary worker–chain cycle over their own
+//!   chain, with two fence rules: an incomplete fence is absorbed (so
+//!   later conflicting local tasks wait), a completed fence is unlinked
+//!   in passing. Every worker also polls the spillover chain; a boundary
+//!   task executes only when, in each touched shard chain, everything
+//!   ahead of its fence is complete (checked by a slot-free walk whose
+//!   `true` verdict is exact and whose races only yield conservative
+//!   `false`s).
+//! * At each quiescent epoch boundary the engine folds the per-block
+//!   execution timings into the EWMA [`BlockCost`] model and lets the
+//!   [`Rebalancer`] migrate blocks between shards — the adaptive loop
+//!   that keeps heterogeneous per-agent cost balanced. Routing changes
+//!   never touch canonical task order or per-task RNG streams, so final
+//!   states and epoch traces stay byte-identical to the sequential
+//!   engine (rust/tests/sharded.rs).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::api::observe::{ObsProbe, Observer};
+use crate::chain::{Chain, Node, NodeState};
+use crate::model::{Model, Record};
+use crate::protocol::{ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats};
+use crate::sim::graph::{bfs_partition, edge_cut};
+use crate::sim::rng::TaskRng;
+
+use super::cost::{BlockCost, CostProbe};
+use super::rebalance::Rebalancer;
+use super::shard::{Boundary, ShardItem, ShardMap, ShardableModel, Splitter};
+
+/// Sharded-engine workflow parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardedConfig {
+    /// Number of workers (one dedicated thread each).
+    pub workers: usize,
+    /// `C` — maximum splitter pulls per worker cycle (the chain
+    /// protocol's creation cap, applied to routing).
+    pub tasks_per_cycle: u32,
+    /// Simulation seed (canonical creation + per-task execution streams).
+    pub seed: u64,
+    /// Number of shards; `0` means one per worker. Clamped to the
+    /// topology's block count.
+    pub shards: usize,
+    /// Epoch length in canonical tasks for *unobserved* runs — the
+    /// rebalance cadence (`0` disables epoching: one epoch, no
+    /// adaptation). Observed runs epoch at the observer's cadence
+    /// instead, rebalancing at those same boundaries.
+    pub rebalance_every: u64,
+    /// EWMA smoothing factor for the per-block cost model.
+    pub alpha: f64,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        Self {
+            workers: std::thread::available_parallelism()
+                .map(std::num::NonZeroUsize::get)
+                .unwrap_or(2),
+            tasks_per_cycle: 6,
+            seed: 0,
+            shards: 0,
+            rebalance_every: 8_192,
+            alpha: 0.4,
+        }
+    }
+}
+
+/// The sharded adaptive engine.
+pub struct ShardedEngine {
+    cfg: ShardedConfig,
+}
+
+impl ShardedEngine {
+    /// Create an engine with the given configuration.
+    pub fn new(cfg: ShardedConfig) -> Self {
+        assert!(cfg.workers >= 1, "need at least one worker");
+        assert!(cfg.tasks_per_cycle >= 1, "C must be at least 1");
+        assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { cfg }
+    }
+
+    /// Configuration accessor.
+    pub fn config(&self) -> &ShardedConfig {
+        &self.cfg
+    }
+
+    /// Run `model` to completion.
+    pub fn run<M: ShardableModel>(&self, model: &M) -> RunReport {
+        self.run_epochs(model, None)
+    }
+
+    /// Run with epoch snapshots at the observer's cadence; frames are
+    /// taken at drained quiescent boundaries, so the trace is
+    /// byte-identical to the sequential engine's at the same seed.
+    pub fn run_observed<M: ShardableModel>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)))
+    }
+
+    fn run_epochs<M: ShardableModel>(
+        &self,
+        model: &M,
+        mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+    ) -> RunReport {
+        let topology = model.sched_topology();
+        let blocks = topology.n();
+        assert!(blocks > 0, "sharded engine needs at least one footprint block");
+        let requested = if self.cfg.shards == 0 {
+            self.cfg.workers
+        } else {
+            self.cfg.shards
+        };
+        let shards = requested.clamp(1, blocks);
+        let partition = bfs_partition(&topology, shards);
+        let cut = edge_cut(&topology, &partition);
+        let map = ShardMap::from_partition(&partition);
+
+        let every = match &obs {
+            Some((_, o)) => o.gate_cadence(),
+            None if self.cfg.rebalance_every == 0 => u64::MAX,
+            None => self.cfg.rebalance_every,
+        };
+
+        let chains: Vec<Chain<ShardItem<M::Recipe>>> =
+            (0..shards).map(|_| Chain::new()).collect();
+        let spill: Chain<Arc<Boundary<M::Recipe>>> = Chain::new();
+        let splitter = Mutex::new(Splitter::<M>::new(model.source(self.cfg.seed), map));
+        let costs = CostProbe::new(blocks);
+        let closed = AtomicBool::new(false);
+        let per_shard_executed: Vec<AtomicU64> =
+            (0..shards).map(|_| AtomicU64::new(0)).collect();
+        // Backpressure: routing stops while this many tasks are live, so
+        // a worker with a drained chain cannot pump the whole epoch into
+        // the busy shards' chains (which would make every traversal and
+        // readiness walk O(epoch)). Generous enough to keep all workers
+        // and shards fed.
+        let backlog_cap = (shards.max(self.cfg.workers) * self.cfg.tasks_per_cycle as usize * 8)
+            .max(256);
+        let ctx = ShardCtx {
+            model,
+            chains: &chains,
+            spill: &spill,
+            splitter: &splitter,
+            closed: &closed,
+            costs: &costs,
+            per_shard_executed: &per_shard_executed,
+            workers: self.cfg.workers,
+            seed: self.cfg.seed,
+            tasks_per_cycle: self.cfg.tasks_per_cycle,
+            backlog_cap,
+        };
+
+        let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
+        for (w, s) in per_worker.iter_mut().enumerate() {
+            s.worker = w;
+        }
+        let mut sched = SchedStats {
+            shards,
+            edge_cut: cut,
+            per_shard_executed: vec![0; shards],
+            ..Default::default()
+        };
+        let mut cost_model = BlockCost::new(blocks, self.cfg.alpha);
+        let rebalancer = Rebalancer::default();
+
+        if let Some((probe, observer)) = obs.as_mut() {
+            observer.record_initial(*probe);
+        }
+        let t0 = Instant::now();
+        loop {
+            closed.store(false, Ordering::Release);
+            splitter.lock().unwrap().open(every);
+            if self.cfg.workers == 1 {
+                let (ws, sw) = sharded_worker(&ctx, 0);
+                per_worker[0].merge(&ws);
+                sched.fence_clears += sw.fence_clears;
+                sched.spill_blocked += sw.spill_blocked;
+            } else {
+                std::thread::scope(|s| {
+                    let handles: Vec<_> = (0..self.cfg.workers)
+                        .map(|w| {
+                            let ctx_ref = &ctx;
+                            s.spawn(move || sharded_worker(ctx_ref, w))
+                        })
+                        .collect();
+                    for (w, h) in handles.into_iter().enumerate() {
+                        let (ws, sw) = h.join().expect("sharded worker panicked");
+                        per_worker[w].merge(&ws);
+                        sched.fence_clears += sw.fence_clears;
+                        sched.spill_blocked += sw.spill_blocked;
+                    }
+                });
+            }
+
+            // Quiescent: every routed task (and fence) is gone.
+            debug_assert!(chains.iter().all(Chain::is_empty), "epoch left live tasks");
+            debug_assert!(spill.is_empty(), "epoch left live boundary tasks");
+            let done = {
+                let mut sp = splitter.lock().unwrap();
+                if let Some((probe, observer)) = obs.as_mut() {
+                    observer.record(sp.emitted(), probe());
+                }
+                let done = sp.finished();
+                if !done && every != u64::MAX {
+                    // Close the adaptive loop: fold this epoch's per-block
+                    // timings into the EWMA model, then migrate blocks.
+                    cost_model.update(&costs);
+                    sched.migrations +=
+                        rebalancer.rebalance(sp.map_mut(), &cost_model, &topology);
+                    sched.rebalances += 1;
+                }
+                done
+            };
+            if done {
+                break;
+            }
+        }
+        let wall = t0.elapsed();
+
+        let splitter = splitter.into_inner().unwrap();
+        let (local, boundary) = splitter.counts();
+        sched.local_tasks = local;
+        sched.boundary_tasks = boundary;
+        for (slot, counter) in sched.per_shard_executed.iter_mut().zip(&per_shard_executed) {
+            *slot = counter.load(Ordering::Relaxed);
+        }
+        let mut totals = WorkerStats::default();
+        for w in &per_worker {
+            totals.merge(w);
+        }
+        let max_chain_len = chains
+            .iter()
+            .map(Chain::max_len)
+            .chain(std::iter::once(spill.max_len()))
+            .max()
+            .unwrap_or(0);
+        RunReport {
+            engine: "sharded",
+            workers: self.cfg.workers,
+            time_s: wall.as_secs_f64(),
+            basis: TimeBasis::Wall,
+            totals,
+            per_worker,
+            chain: ProtocolStats {
+                tasks_created: local + boundary,
+                tasks_executed: local + boundary,
+                max_chain_len,
+            },
+            sched: Some(sched),
+        }
+    }
+}
+
+/// Shared, read-only context for one sharded run.
+struct ShardCtx<'a, M: ShardableModel> {
+    model: &'a M,
+    chains: &'a [Chain<ShardItem<M::Recipe>>],
+    spill: &'a Chain<Arc<Boundary<M::Recipe>>>,
+    splitter: &'a Mutex<Splitter<M>>,
+    /// Set (under the splitter mutex) when the epoch's task budget — or
+    /// the source — is exhausted; no append happens afterwards.
+    closed: &'a AtomicBool,
+    costs: &'a CostProbe,
+    per_shard_executed: &'a [AtomicU64],
+    workers: usize,
+    seed: u64,
+    tasks_per_cycle: u32,
+    /// Live-task ceiling across all chains: routing pauses above it.
+    backlog_cap: usize,
+}
+
+impl<M: ShardableModel> ShardCtx<'_, M> {
+    /// Route one task through the splitter; `false` (and `closed`) once
+    /// the epoch is out of tasks. Safe to call while holding a visitor
+    /// slot: the splitter's appends take no visitor slots
+    /// ([`Chain::append_tail`]), so appenders and traversers never wait
+    /// on each other.
+    fn pull(&self) -> bool {
+        let mut sp = self.splitter.lock().unwrap();
+        if sp.pull(self.model, self.chains, self.spill) {
+            true
+        } else {
+            self.closed.store(true, Ordering::Release);
+            false
+        }
+    }
+
+    /// Whether this epoch is over: no more routing will happen (`closed`
+    /// is observed first, so chains can only shrink afterwards) and every
+    /// chain has drained.
+    fn epoch_done(&self) -> bool {
+        self.closed.load(Ordering::Acquire)
+            && self.spill.is_empty()
+            && self.chains.iter().all(Chain::is_empty)
+    }
+
+    /// Whether routing should pause: enough tasks are already live.
+    /// Purely a throttle — execution drains the backlog and pulls
+    /// resume, so this cannot deadlock the epoch.
+    fn backlog_full(&self) -> bool {
+        let live: usize = self.chains.iter().map(Chain::len).sum::<usize>() + self.spill.len();
+        live >= self.backlog_cap
+    }
+}
+
+/// Sharded-specific per-worker counters (folded into
+/// [`SchedStats`] by the engine).
+#[derive(Default)]
+struct SchedWorker {
+    fence_clears: u64,
+    spill_blocked: u64,
+}
+
+/// Outcome of one shard/spill cycle.
+enum Cycle {
+    /// Executed a task (the cycle ends, per the protocol).
+    Executed,
+    /// Traversed to the end without executing.
+    Idle,
+}
+
+/// Run one sharded worker to completion of the current epoch.
+fn sharded_worker<M: ShardableModel>(
+    ctx: &ShardCtx<'_, M>,
+    worker_id: usize,
+) -> (WorkerStats, SchedWorker) {
+    let shards = ctx.chains.len();
+    // Static ownership: worker w owns the shards congruent to w. With
+    // shards == workers (the default) that is exactly one chain each;
+    // extra workers beyond the shard count serve the spillover chain and
+    // keep the splitter fed.
+    let own: Vec<usize> = (worker_id..shards).step_by(ctx.workers).collect();
+    let mut stats = WorkerStats {
+        worker: worker_id,
+        ..Default::default()
+    };
+    let mut sw = SchedWorker::default();
+    let mut record = ctx.model.record();
+    let loop_start = Instant::now();
+
+    loop {
+        let mut did_work = false;
+        for &s in &own {
+            did_work |= matches!(
+                shard_cycle(ctx, s, &mut record, &mut stats, &mut sw),
+                Cycle::Executed
+            );
+        }
+        did_work |= matches!(
+            spill_cycle(ctx, &mut record, &mut stats, &mut sw),
+            Cycle::Executed
+        );
+        if !did_work && !ctx.closed.load(Ordering::Acquire) && !ctx.backlog_full() {
+            // Idle while the epoch still has tasks: pull one ourselves so
+            // shard-less workers (workers > shards) and workers whose
+            // chain ran dry keep the pipeline fed.
+            if ctx.pull() {
+                stats.created += 1;
+                did_work = true;
+            }
+        }
+        if !did_work {
+            if ctx.epoch_done() {
+                break;
+            }
+            stats.idle_cycles += 1;
+            std::thread::yield_now();
+        }
+    }
+
+    stats.busy_time = loop_start.elapsed();
+    (stats, sw)
+}
+
+/// One protocol cycle over shard `s`'s chain: traverse from the head,
+/// clearing completed fences, absorbing incomplete ones, executing the
+/// first dependence-free local task; at the tail, route up to `C` more
+/// tasks through the splitter.
+fn shard_cycle<M: ShardableModel>(
+    ctx: &ShardCtx<'_, M>,
+    s: usize,
+    record: &mut M::Record,
+    stats: &mut WorkerStats,
+    sw: &mut SchedWorker,
+) -> Cycle {
+    let chain = &ctx.chains[s];
+    record.reset();
+    stats.cycles += 1;
+    let mut pulled: u32 = 0;
+    chain.head().visitor.acquire();
+    let mut current = chain.head().clone();
+    loop {
+        let next = match current.next() {
+            Some(n) => n,
+            None => unreachable!("live non-tail node must have a successor"),
+        };
+
+        if chain.is_tail(&next) {
+            // --- routing path --------------------------------------
+            if pulled >= ctx.tasks_per_cycle
+                || ctx.closed.load(Ordering::Acquire)
+                || ctx.backlog_full()
+            {
+                current.visitor.release();
+                return Cycle::Idle;
+            }
+            if ctx.pull() {
+                pulled += 1;
+                stats.created += 1;
+                // The task may have landed right after `current` (then
+                // the next iteration walks onto it) or on another chain.
+                continue;
+            }
+            current.visitor.release();
+            return Cycle::Idle;
+        }
+
+        // --- advance path ------------------------------------------
+        next.visitor.acquire();
+        if next.state() == NodeState::Erased {
+            next.visitor.release();
+            stats.erased_retries += 1;
+            continue;
+        }
+        if let ShardItem::Fence(b) = next.recipe() {
+            if b.done() {
+                // Clear the completed fence *from behind* (keeping
+                // `current`'s slot): the unlink empties the fence's own
+                // links, so the traversal could not continue from it.
+                next.begin_execution();
+                chain.unlink(&next);
+                next.visitor.release();
+                sw.fence_clears += 1;
+                continue; // current.next was rewired by the unlink
+            }
+        }
+        current.visitor.release();
+        current = next;
+        match current.recipe() {
+            ShardItem::Fence(b) => {
+                // Incomplete boundary task: everything after it that
+                // conflicts must wait for it — absorb and pass, exactly
+                // like passing a task another worker is executing.
+                record.absorb(&b.recipe);
+                stats.passed_executing += 1;
+            }
+            ShardItem::Local { seq, block, recipe } => match current.state() {
+                NodeState::Executing => {
+                    record.absorb(recipe);
+                    stats.passed_executing += 1;
+                }
+                NodeState::Pending => {
+                    if record.depends(recipe) {
+                        record.absorb(recipe);
+                        stats.skipped_dependent += 1;
+                    } else {
+                        execute_and_unlink(ctx, chain, &current, *seq, *block, stats);
+                        ctx.per_shard_executed[s].fetch_add(1, Ordering::Relaxed);
+                        return Cycle::Executed;
+                    }
+                }
+                NodeState::Erased => unreachable!("arrival at erased nodes is retried earlier"),
+            },
+        }
+    }
+}
+
+/// Claim, execute (timing the execution into the cost probe), and erase
+/// a chain node standing for canonical task `seq`. The caller holds the
+/// node's visitor slot and has established independence.
+fn execute_and_unlink<M: ShardableModel, R>(
+    ctx: &ShardCtx<'_, M>,
+    chain: &Chain<R>,
+    node: &Arc<Node<R>>,
+    seq: u64,
+    block: u32,
+    stats: &mut WorkerStats,
+) where
+    R: ShardRecipe<M>,
+{
+    node.begin_execution();
+    node.visitor.release();
+
+    let mut rng = TaskRng::for_task(ctx.seed, seq);
+    let t0 = Instant::now();
+    ctx.model.execute(R::model_recipe(node.recipe()), &mut rng);
+    let dt = t0.elapsed();
+    stats.exec_time += dt;
+    ctx.costs.record(block, dt.as_nanos() as u64);
+    R::publish_done(node.recipe());
+
+    node.visitor.acquire();
+    chain.unlink(node);
+    node.visitor.release();
+    stats.executed += 1;
+}
+
+/// Internal bridge letting [`execute_and_unlink`] serve both chain
+/// flavours: shard chains (items) and the spillover chain (boundaries).
+trait ShardRecipe<M: ShardableModel> {
+    fn model_recipe(&self) -> &M::Recipe;
+    /// Post-execution publication (boundary tasks flip their done flag).
+    fn publish_done(&self);
+}
+
+impl<M: ShardableModel> ShardRecipe<M> for ShardItem<M::Recipe> {
+    fn model_recipe(&self) -> &M::Recipe {
+        self.recipe()
+    }
+    fn publish_done(&self) {}
+}
+
+impl<M: ShardableModel> ShardRecipe<M> for Arc<Boundary<M::Recipe>> {
+    fn model_recipe(&self) -> &M::Recipe {
+        &self.recipe
+    }
+    fn publish_done(&self) {
+        self.mark_done();
+    }
+}
+
+/// One cycle over the spillover chain: execute the first boundary task
+/// that is record-independent *and* whose touched shards are clear.
+fn spill_cycle<M: ShardableModel>(
+    ctx: &ShardCtx<'_, M>,
+    record: &mut M::Record,
+    stats: &mut WorkerStats,
+    sw: &mut SchedWorker,
+) -> Cycle {
+    let chain = ctx.spill;
+    if chain.is_empty() {
+        return Cycle::Idle; // cheap fast path: locality means few boundary tasks
+    }
+    record.reset();
+    stats.cycles += 1;
+    chain.head().visitor.acquire();
+    let mut current = chain.head().clone();
+    loop {
+        let next = match current.next() {
+            Some(n) => n,
+            None => unreachable!("live non-tail node must have a successor"),
+        };
+        if chain.is_tail(&next) {
+            current.visitor.release();
+            return Cycle::Idle;
+        }
+        next.visitor.acquire();
+        if next.state() == NodeState::Erased {
+            next.visitor.release();
+            stats.erased_retries += 1;
+            continue;
+        }
+        current.visitor.release();
+        current = next;
+        let boundary = current.recipe();
+        match current.state() {
+            NodeState::Executing => {
+                record.absorb(&boundary.recipe);
+                stats.passed_executing += 1;
+            }
+            NodeState::Pending => {
+                if record.depends(&boundary.recipe) {
+                    record.absorb(&boundary.recipe);
+                    stats.skipped_dependent += 1;
+                } else if !fences_clear(ctx, boundary) {
+                    // A touched shard still has live work ahead of our
+                    // fence: defer, but absorb so later boundary tasks
+                    // stay ordered behind us.
+                    record.absorb(&boundary.recipe);
+                    sw.spill_blocked += 1;
+                } else {
+                    let (seq, block) = (boundary.seq, boundary.block);
+                    execute_and_unlink(ctx, chain, &current, seq, block, stats);
+                    return Cycle::Executed;
+                }
+            }
+            NodeState::Erased => unreachable!("arrival at erased nodes is retried earlier"),
+        }
+    }
+}
+
+/// Is every item ahead of `b`'s fence complete, in every shard chain `b`
+/// touches?
+///
+/// Slot-free walk over link-pointer snapshots: pointers are only ever
+/// rewired around *erased* nodes (appends happen strictly at the tail,
+/// behind the fence), so the walk can skip completed work but never a
+/// live node — a `true` verdict is exact. Races with concurrent unlinks
+/// at worst dead-end the walk (an erased node's links are cleared), which
+/// restarts it from the head, bounded; on exhausting the bound the walk
+/// answers a conservative `false` and the caller retries next cycle.
+fn fences_clear<M: ShardableModel>(
+    ctx: &ShardCtx<'_, M>,
+    b: &Arc<Boundary<M::Recipe>>,
+) -> bool {
+    'shards: for &s in &b.shards {
+        let chain = &ctx.chains[s as usize];
+        let mut restarts = 0u32;
+        let mut node = chain.head().clone();
+        loop {
+            let Some(next) = node.next() else {
+                // The node under us was just erased: restart (bounded).
+                restarts += 1;
+                if restarts > 8 {
+                    return false;
+                }
+                node = chain.head().clone();
+                continue;
+            };
+            if chain.is_tail(&next) {
+                // Our own fence is live (b is incomplete, and we hold its
+                // spillover slot), so a walk that never skips live nodes
+                // must meet it before the tail; answer conservatively if
+                // that reasoning is ever violated.
+                if cfg!(debug_assertions) {
+                    unreachable!("live fence not found in its shard chain");
+                }
+                return false;
+            }
+            if next.state() == NodeState::Erased {
+                restarts += 1;
+                if restarts > 8 {
+                    return false;
+                }
+                node = chain.head().clone();
+                continue;
+            }
+            match next.recipe() {
+                ShardItem::Local { .. } => return false,
+                ShardItem::Fence(f) => {
+                    if Arc::ptr_eq(f, b) {
+                        continue 'shards; // reached our fence: shard clear
+                    }
+                    if !f.done() {
+                        return false;
+                    }
+                    node = next; // step over the completed fence
+                }
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testkit::IncModel;
+    use crate::model::{Model, TaskSource};
+    use crate::protocol::SequentialEngine;
+    use crate::sim::graph::{ring_lattice, Csr};
+    use crate::sim::rng::Rng;
+    use crate::sim::state::SharedSim;
+    use crate::util::u32set::U32Set;
+
+    fn cfg(workers: usize, seed: u64) -> ShardedConfig {
+        ShardedConfig {
+            workers,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn inc_model_matches_sequential_across_worker_counts() {
+        let seed = 9;
+        let expected = {
+            let m = IncModel::new(2_000, 16);
+            SequentialEngine::new(seed).run(&m);
+            m.cells_snapshot()
+        };
+        for workers in [1, 2, 4] {
+            let m = IncModel::new(2_000, 16);
+            let report = ShardedEngine::new(cfg(workers, seed)).run(&m);
+            assert_eq!(m.cells_snapshot(), expected, "n={workers} diverged");
+            assert_eq!(report.totals.executed, 2_000);
+            assert_eq!(report.chain.tasks_executed, 2_000);
+            assert_eq!(report.engine, "sharded");
+            let sched = report.sched.as_ref().unwrap();
+            assert_eq!(sched.boundary_tasks, 0, "single-cell footprints are local");
+            assert_eq!(sched.local_tasks, 2_000);
+            assert_eq!(
+                sched.per_shard_executed.iter().sum::<u64>(),
+                2_000,
+                "every local execution is attributed to a shard"
+            );
+        }
+    }
+
+    /// Pairwise mixing model with tunable cross-shard traffic: each task
+    /// reads *and* writes two cells on a ring, mostly nearby (local after
+    /// BFS sharding) but with a fraction of long-range pairs that must
+    /// travel the spillover chain. Updates are non-commutative, so any
+    /// ordering violation between conflicting tasks changes the result.
+    struct PairModel {
+        cells: SharedSim<Vec<u64>>,
+        n: u32,
+        tasks: u64,
+        far_fraction: f64,
+        /// Extra busy-work iterations for tasks whose first cell falls in
+        /// the first quarter of the ring (skewed-cost knob for rebalance
+        /// tests; 0 = uniform).
+        hot_work: u32,
+    }
+
+    impl PairModel {
+        fn new(tasks: u64, n: u32, far_fraction: f64, hot_work: u32) -> Self {
+            Self {
+                cells: SharedSim::new(vec![1; n as usize]),
+                n,
+                tasks,
+                far_fraction,
+                hot_work,
+            }
+        }
+
+        fn snapshot(&self) -> Vec<u64> {
+            unsafe { self.cells.get() }.clone()
+        }
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    struct PairStep {
+        a: u32,
+        b: u32,
+    }
+
+    struct PairRecord {
+        touched: U32Set,
+    }
+
+    impl crate::model::Record for PairRecord {
+        type Recipe = PairStep;
+        fn depends(&self, r: &PairStep) -> bool {
+            self.touched.contains(r.a) || self.touched.contains(r.b)
+        }
+        fn absorb(&mut self, r: &PairStep) {
+            self.touched.insert(r.a);
+            self.touched.insert(r.b);
+        }
+        fn reset(&mut self) {
+            self.touched.clear();
+        }
+    }
+
+    struct PairSource {
+        rng: Rng,
+        left: u64,
+        n: u32,
+        far_fraction: f64,
+    }
+
+    impl TaskSource for PairSource {
+        type Recipe = PairStep;
+        fn next_task(&mut self) -> Option<PairStep> {
+            if self.left == 0 {
+                return None;
+            }
+            self.left -= 1;
+            let a = self.rng.below(self.n as u64) as u32;
+            let b = if self.rng.bernoulli(self.far_fraction) {
+                (a + self.n / 2) % self.n // antipodal: crosses any BFS cut
+            } else {
+                (a + 1) % self.n // neighbour: local except at seams
+            };
+            Some(PairStep { a, b })
+        }
+        fn size_hint(&self) -> Option<u64> {
+            Some(self.left)
+        }
+    }
+
+    impl Model for PairModel {
+        type Recipe = PairStep;
+        type Record = PairRecord;
+        type Source = PairSource;
+
+        fn source(&self, seed: u64) -> PairSource {
+            PairSource {
+                rng: Rng::stream(seed, 0x9A1F),
+                left: self.tasks,
+                n: self.n,
+                far_fraction: self.far_fraction,
+            }
+        }
+
+        fn record(&self) -> PairRecord {
+            PairRecord {
+                touched: U32Set::new(),
+            }
+        }
+
+        fn execute(&self, r: &PairStep, rng: &mut TaskRng) {
+            let mut v = rng.below(1 << 20);
+            let work = if r.a < self.n / 4 { self.hot_work } else { 0 };
+            for _ in 0..work {
+                v = v.wrapping_mul(0x9E37_79B9_7F4A_7C15).rotate_left(13) ^ 0x5A5A;
+            }
+            // SAFETY: record discipline — no concurrent task touches
+            // cells `a` or `b` (both are in the conservative footprint).
+            unsafe {
+                let cells = self.cells.get_mut();
+                let (a, b) = (r.a as usize, r.b as usize);
+                cells[a] = cells[a].wrapping_mul(3).wrapping_add(cells[b]).wrapping_add(v);
+                if a != b {
+                    cells[b] = cells[b].wrapping_mul(5) ^ cells[a];
+                }
+            }
+        }
+    }
+
+    impl ShardableModel for PairModel {
+        fn sched_topology(&self) -> Csr {
+            ring_lattice(self.n as usize, 2)
+        }
+        fn footprint(&self, r: &PairStep, out: &mut Vec<u32>) {
+            out.push(r.a);
+            if r.b != r.a {
+                out.push(r.b);
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_tasks_flow_through_the_spillover_chain_deterministically() {
+        let seed = 21;
+        let build = || PairModel::new(3_000, 64, 0.25, 0);
+        let expected = {
+            let m = build();
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [1, 2, 4] {
+            let m = build();
+            let report = ShardedEngine::new(cfg(workers, seed)).run(&m);
+            assert_eq!(m.snapshot(), expected, "n={workers} diverged");
+            let sched = report.sched.as_ref().unwrap();
+            assert_eq!(sched.local_tasks + sched.boundary_tasks, 3_000);
+            if workers > 1 {
+                assert!(
+                    sched.boundary_tasks > 0,
+                    "antipodal pairs must cross shards: {sched:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn aggressive_rebalancing_preserves_determinism() {
+        let seed = 5;
+        let build = || PairModel::new(4_000, 64, 0.1, 40);
+        let expected = {
+            let m = build();
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [2, 4] {
+            let m = build();
+            let report = ShardedEngine::new(ShardedConfig {
+                workers,
+                seed,
+                rebalance_every: 256, // many epochs, many rebalance points
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), expected, "n={workers} diverged under rebalancing");
+            let sched = report.sched.as_ref().unwrap();
+            assert!(sched.rebalances > 0, "short epochs must hit the rebalancer");
+        }
+    }
+
+    #[test]
+    fn observed_sharded_run_reproduces_the_sequential_trace() {
+        use crate::api::observe::{Metrics, ObsValue, Observer};
+        let seed = 13;
+        let build = || PairModel::new(1_500, 48, 0.2, 0);
+        fn sum_metric(m: &PairModel) -> Metrics {
+            let sum = m.snapshot().iter().fold(0u64, |acc, &c| acc.wrapping_add(c));
+            vec![("sum".to_string(), ObsValue::Int(sum as i64))]
+        }
+        let reference = {
+            let m = build();
+            let probe = || sum_metric(&m);
+            let mut obs = Observer::new(200);
+            SequentialEngine::new(seed).run_observed(&m, &probe, &mut obs);
+            obs.finish().unwrap()
+        };
+        assert!(reference.len() > 3, "cadence must produce several frames");
+        for workers in [1, 2, 4] {
+            let m = build();
+            let probe = || sum_metric(&m);
+            let mut obs = Observer::new(200);
+            ShardedEngine::new(cfg(workers, seed)).run_observed(&m, &probe, &mut obs);
+            let got = obs.finish().unwrap();
+            assert_eq!(got, reference, "sharded n={workers} trace diverged");
+        }
+    }
+
+    #[test]
+    fn more_workers_than_shards_and_vice_versa() {
+        let seed = 3;
+        let expected = {
+            let m = IncModel::new(900, 12);
+            SequentialEngine::new(seed).run(&m);
+            m.cells_snapshot()
+        };
+        // 4 workers, 2 shards: shard-less workers only serve the splitter
+        // and the spillover chain.
+        let m = IncModel::new(900, 12);
+        ShardedEngine::new(ShardedConfig {
+            workers: 4,
+            shards: 2,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.cells_snapshot(), expected);
+        // 2 workers, 6 shards: each worker round-robins over 3 chains.
+        let m = IncModel::new(900, 12);
+        let report = ShardedEngine::new(ShardedConfig {
+            workers: 2,
+            shards: 6,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.cells_snapshot(), expected);
+        assert_eq!(report.sched.as_ref().unwrap().shards, 6);
+    }
+
+    #[test]
+    fn shards_clamp_to_block_count() {
+        // 3 cells but 8 requested shards: clamps to 3.
+        let m = IncModel::new(200, 3);
+        let report = ShardedEngine::new(ShardedConfig {
+            workers: 2,
+            shards: 8,
+            seed: 1,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(report.sched.as_ref().unwrap().shards, 3);
+        assert_eq!(report.totals.executed, 200);
+    }
+}

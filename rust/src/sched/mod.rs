@@ -1,0 +1,32 @@
+//! The sharded adaptive scheduler (DESIGN.md §7).
+//!
+//! Scales the worker–chain protocol past one global chain: the model's
+//! agent/block graph is partitioned with a greedy BFS edge-cut
+//! partitioner ([`crate::sim::graph::bfs_partition`]), each shard gets
+//! its own [`crate::chain::Chain`] owned by a worker, and cross-shard
+//! tasks flow through a small spillover chain whose *fences* preserve the
+//! protocol's dependence discipline — final states and epoch observation
+//! traces stay byte-identical to the sequential engine at a fixed seed.
+//! An EWMA per-block cost model, fed by the per-task execution timings,
+//! drives a rebalancer that migrates blocks between shards at
+//! epoch-quiescence boundaries: the paper's "adaptive, yet graceful"
+//! behaviour under heterogeneous per-agent cost, applied to shard
+//! ownership.
+//!
+//! * [`shard`] — the [`ShardableModel`] capability (topology +
+//!   conservative per-task footprints), shard-chain items and fences, the
+//!   block→shard map, and the serialized splitter/router.
+//! * [`cost`] — lock-free per-block timing probe + the EWMA cost model.
+//! * [`rebalance`] — the epoch-boundary migration policy.
+//! * [`engine`] — [`ShardedEngine`], registered as the fifth engine
+//!   (`--engine sharded`).
+
+pub mod cost;
+pub mod engine;
+pub mod rebalance;
+pub mod shard;
+
+pub use cost::{BlockCost, CostProbe};
+pub use engine::{ShardedConfig, ShardedEngine};
+pub use rebalance::Rebalancer;
+pub use shard::{Boundary, ShardItem, ShardMap, ShardableModel};

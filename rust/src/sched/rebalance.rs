@@ -1,0 +1,171 @@
+//! Epoch-boundary rebalancer: greedy block migration between shards,
+//! driven by the EWMA cost model.
+//!
+//! Runs only at quiescent points — every chain is drained, no fence is
+//! in flight — so reassigning a block can never reorder in-flight work;
+//! it merely changes how the *next* epoch's tasks are routed. Canonical
+//! task order and per-task RNG streams are untouched, which is why an
+//! adaptively rebalanced run stays byte-identical to the sequential
+//! engine (rust/tests/sharded.rs asserts this with an aggressive
+//! rebalance cadence).
+//!
+//! The policy is deliberately simple (diffusion-style): repeatedly move
+//! one block from the heaviest shard to the lightest, preferring blocks
+//! adjacent to the destination in the topology (keeps the edge cut — and
+//! with it the spillover rate — low) and never overshooting (only blocks
+//! whose load is at most half the gap move, so every move strictly
+//! reduces the imbalance).
+
+use crate::sim::graph::Csr;
+
+use super::cost::BlockCost;
+use super::shard::ShardMap;
+
+/// Migration policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct Rebalancer {
+    /// Maximum block moves per epoch boundary (bounds the boundary's
+    /// cost and the per-epoch routing churn).
+    pub max_moves: usize,
+    /// Minimum relative imbalance `(max − min) / mean` that triggers any
+    /// move — below it the assignment is considered balanced.
+    pub threshold: f64,
+}
+
+impl Default for Rebalancer {
+    fn default() -> Self {
+        Self {
+            max_moves: 8,
+            threshold: 0.2,
+        }
+    }
+}
+
+impl Rebalancer {
+    /// Migrate up to `max_moves` blocks; returns the number of moves.
+    /// **Quiescent use only.**
+    pub fn rebalance(&self, map: &mut ShardMap, cost: &BlockCost, topology: &Csr) -> u64 {
+        if map.shards() < 2 {
+            return 0;
+        }
+        let mut moves = 0u64;
+        for _ in 0..self.max_moves {
+            let loads = cost.shard_loads(map);
+            let (hi, lo) = extremes(&loads);
+            let gap = loads[hi] - loads[lo];
+            let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+            if gap <= self.threshold * mean || gap <= 0.0 {
+                break;
+            }
+            // Candidate: a block of the heavy shard with nonzero load at
+            // most half the gap (guaranteed strict improvement), ranked
+            // by (adjacent-to-destination, load) so the move both evens
+            // the loads and keeps the cut small.
+            let mut best: Option<(u32, bool, f64)> = None;
+            if map.blocks_in(hi as u32) <= 1 {
+                break; // cannot empty the heavy shard
+            }
+            for b in 0..map.blocks() as u32 {
+                if map.shard_of(b) != hi as u32 {
+                    continue;
+                }
+                let load = cost.load(b as usize);
+                if load <= 0.0 || load > gap / 2.0 {
+                    continue;
+                }
+                let adjacent = topology
+                    .neighbors(b as usize)
+                    .iter()
+                    .any(|&u| map.shard_of(u) == lo as u32);
+                let better = best.is_none_or(|(_, best_adj, best_load)| {
+                    (adjacent, load) > (best_adj, best_load)
+                });
+                if better {
+                    best = Some((b, adjacent, load));
+                }
+            }
+            match best {
+                Some((block, _, _)) => {
+                    map.migrate(block, lo as u32);
+                    moves += 1;
+                }
+                None => break,
+            }
+        }
+        moves
+    }
+}
+
+/// Indices of the largest and smallest entries.
+fn extremes(loads: &[f64]) -> (usize, usize) {
+    let mut hi = 0;
+    let mut lo = 0;
+    for (i, &l) in loads.iter().enumerate() {
+        if l > loads[hi] {
+            hi = i;
+        }
+        if l < loads[lo] {
+            lo = i;
+        }
+    }
+    (hi, lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::cost::CostProbe;
+    use crate::sim::graph::{bfs_partition, ring_lattice};
+
+    fn loaded_map(weights: &[u64], shards: usize) -> (ShardMap, BlockCost, Csr) {
+        let g = ring_lattice(weights.len(), 2);
+        let map = ShardMap::from_partition(&bfs_partition(&g, shards));
+        let probe = CostProbe::new(weights.len());
+        for (b, &w) in weights.iter().enumerate() {
+            probe.record(b as u32, w);
+        }
+        let mut cost = BlockCost::new(weights.len(), 1.0);
+        cost.update(&probe);
+        (map, cost, g)
+    }
+
+    #[test]
+    fn balanced_loads_trigger_no_moves() {
+        let (mut map, cost, g) = loaded_map(&[100; 8], 2);
+        let moved = Rebalancer::default().rebalance(&mut map, &cost, &g);
+        assert_eq!(moved, 0);
+    }
+
+    #[test]
+    fn skewed_loads_migrate_toward_balance() {
+        // Blocks 0..4 on shard 0 are 10× heavier; the rebalancer must
+        // shift work to shard 1 and strictly reduce the imbalance.
+        let weights = [1000, 1000, 1000, 1000, 100, 100, 100, 100];
+        let (mut map, cost, g) = loaded_map(&weights, 2);
+        let before = cost.shard_loads(&map);
+        let gap_before = (before[0] - before[1]).abs();
+        let moved = Rebalancer::default().rebalance(&mut map, &cost, &g);
+        assert!(moved > 0, "imbalance must trigger migration");
+        let after = cost.shard_loads(&map);
+        let gap_after = (after[0] - after[1]).abs();
+        assert!(gap_after < gap_before, "{before:?} -> {after:?}");
+        assert!(map.blocks_in(0) >= 1 && map.blocks_in(1) >= 1);
+    }
+
+    #[test]
+    fn single_shard_is_a_noop() {
+        let (mut map, cost, g) = loaded_map(&[5, 500, 50, 5], 1);
+        assert_eq!(Rebalancer::default().rebalance(&mut map, &cost, &g), 0);
+    }
+
+    #[test]
+    fn moves_are_bounded() {
+        let weights: Vec<u64> = (0..32).map(|b| if b < 16 { 900 } else { 1 }).collect();
+        let (mut map, cost, g) = loaded_map(&weights, 4);
+        let policy = Rebalancer {
+            max_moves: 2,
+            threshold: 0.0,
+        };
+        assert!(policy.rebalance(&mut map, &cost, &g) <= 2);
+    }
+}

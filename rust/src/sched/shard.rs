@@ -1,0 +1,363 @@
+//! Sharding substrate: the [`ShardableModel`] capability, shard-chain
+//! items (local tasks and fences), cross-shard [`Boundary`] tasks, the
+//! dynamic block→shard [`ShardMap`], and the serialized splitter router.
+//!
+//! ## Why fences preserve the dependence discipline
+//!
+//! The single-chain protocol orders any two conflicting tasks by chain
+//! position (= canonical creation order). Sharding splits the chain, so
+//! the order must be re-established wherever a conflict can cross the
+//! split. The splitter routes every task by its conservative *footprint*
+//! (the set of blocks it may read or write):
+//!
+//! * footprint inside one shard → a **local** item on that shard's chain;
+//! * footprint spanning shards → a **boundary** task on the spillover
+//!   chain, plus a **fence** at the canonical position in *every* touched
+//!   shard chain.
+//!
+//! Conflicting task pairs then fall into four cases (DESIGN.md §7):
+//! local/local in one shard (ordinary chain order), boundary before local
+//! (the local's worker absorbs the incomplete fence and skips), local
+//! before boundary (the boundary's readiness walk sees the live local
+//! ahead of its fence and defers), and boundary/boundary (spillover chain
+//! order). Routing never touches canonical task numbering or per-task RNG
+//! streams, so final states — and epoch traces — stay byte-identical to
+//! the sequential engine.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use crate::api::observe::EpochGate;
+use crate::chain::Chain;
+use crate::model::{Model, TaskSource};
+use crate::sim::graph::{Csr, Partition};
+
+/// A model the sharded engine can partition: it exposes an interaction
+/// topology over *footprint blocks* and, per task, the conservative set
+/// of blocks the task may touch.
+///
+/// # Contract
+/// If [`Record::depends`](crate::model::Record::depends) can ever order
+/// two recipes (in either absorption direction), their footprints must
+/// intersect. Disjoint footprints ⇒ the tasks commute. The sharded
+/// engine's correctness argument (DESIGN.md §7) rests on exactly this
+/// implication; `rust/tests/sharded.rs` enforces it empirically via
+/// byte-identity with the sequential engine.
+pub trait ShardableModel: Model {
+    /// The interaction topology over footprint blocks, used (only) to
+    /// compute a low-edge-cut shard assignment. Models without locality
+    /// (e.g. Axelrod's complete pair graph) may return an edgeless graph;
+    /// sharding then still runs correctly, just with heavy spillover.
+    fn sched_topology(&self) -> Csr;
+
+    /// Push the conservative footprint of `recipe` into `out` (cleared by
+    /// the caller). Must push at least one block; the **first** entry is
+    /// the task's *home* block, used for cost attribution by the EWMA
+    /// cost model.
+    fn footprint(&self, recipe: &Self::Recipe, out: &mut Vec<u32>);
+}
+
+/// A cross-shard task: lives on the spillover chain, with a fence at its
+/// canonical position in every touched shard chain.
+#[derive(Debug)]
+pub struct Boundary<R> {
+    /// Canonical task sequence number (drives the per-task RNG stream).
+    pub seq: u64,
+    /// Home block (cost attribution).
+    pub block: u32,
+    /// The model recipe.
+    pub recipe: R,
+    /// Sorted ids of the shards holding a fence for this task.
+    pub shards: Vec<u32>,
+    done: AtomicBool,
+}
+
+impl<R> Boundary<R> {
+    /// Whether the boundary task has finished executing (its fences can
+    /// be cleared and its state effects are visible — the `Release` store
+    /// in `mark_done` pairs with this `Acquire`).
+    #[inline]
+    pub fn done(&self) -> bool {
+        self.done.load(Ordering::Acquire)
+    }
+
+    /// Publish completion. Called exactly once, by the executing worker,
+    /// after [`Model::execute`] returns.
+    #[inline]
+    pub(crate) fn mark_done(&self) {
+        self.done.store(true, Ordering::Release);
+    }
+}
+
+/// One item of a shard chain: a task local to the shard, or a fence
+/// standing in for a cross-shard task.
+#[derive(Clone, Debug)]
+pub enum ShardItem<R> {
+    /// A task whose whole footprint lies inside this shard.
+    Local {
+        /// Canonical task sequence number (drives the RNG stream).
+        seq: u64,
+        /// Home block (cost attribution).
+        block: u32,
+        /// The model recipe.
+        recipe: R,
+    },
+    /// Marker for a boundary task: incomplete ⇒ absorbed by passing
+    /// workers (ordering every later conflicting local task after the
+    /// boundary task); complete ⇒ unlinked on encounter.
+    Fence(Arc<Boundary<R>>),
+}
+
+impl<R> ShardItem<R> {
+    /// The model recipe this item stands for (fences expose the boundary
+    /// task's recipe for record absorption).
+    #[inline]
+    pub fn recipe(&self) -> &R {
+        match self {
+            ShardItem::Local { recipe, .. } => recipe,
+            ShardItem::Fence(b) => &b.recipe,
+        }
+    }
+}
+
+/// Dynamic block→shard assignment. Built from a [`Partition`] of the
+/// topology; mutated only by the rebalancer at quiescent epoch
+/// boundaries (no chain holds a task while the map changes, so routing
+/// within one epoch is always consistent with one assignment).
+#[derive(Clone, Debug)]
+pub struct ShardMap {
+    shard_of: Vec<u32>,
+    counts: Vec<usize>,
+}
+
+impl ShardMap {
+    /// Adopt a partition's block→shard assignment.
+    pub fn from_partition(p: &Partition) -> Self {
+        let shard_of: Vec<u32> = (0..p.n()).map(|b| p.block_of(b)).collect();
+        let mut counts = vec![0usize; p.blocks()];
+        for &s in &shard_of {
+            counts[s as usize] += 1;
+        }
+        Self { shard_of, counts }
+    }
+
+    /// Number of shards.
+    #[inline]
+    pub fn shards(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Number of blocks.
+    #[inline]
+    pub fn blocks(&self) -> usize {
+        self.shard_of.len()
+    }
+
+    /// Shard owning `block`.
+    #[inline]
+    pub fn shard_of(&self, block: u32) -> u32 {
+        self.shard_of[block as usize]
+    }
+
+    /// Number of blocks currently assigned to `shard`.
+    #[inline]
+    pub fn blocks_in(&self, shard: u32) -> usize {
+        self.counts[shard as usize]
+    }
+
+    /// Reassign `block` to shard `to`. **Quiescent use only** (the
+    /// rebalancer, between epochs).
+    pub(crate) fn migrate(&mut self, block: u32, to: u32) {
+        let from = self.shard_of[block as usize] as usize;
+        debug_assert!(self.counts[from] > 1, "migration must not empty a shard");
+        self.counts[from] -= 1;
+        self.counts[to as usize] += 1;
+        self.shard_of[block as usize] = to;
+    }
+}
+
+/// The serialized task router: draws tasks from the epoch-gated source in
+/// canonical order and appends each — still under the router's lock, so
+/// every chain receives a canonical-order subsequence — to its shard
+/// chain, or, for a cross-shard footprint, to the spillover chain with a
+/// fence in every touched shard chain. Fences are appended *before* the
+/// spillover entry, so a boundary task is never visible in the spillover
+/// chain without its fences in place.
+pub(crate) struct Splitter<M: ShardableModel> {
+    gate: EpochGate<M::Source>,
+    map: ShardMap,
+    footprint: Vec<u32>,
+    shard_set: Vec<u32>,
+    local_tasks: u64,
+    boundary_tasks: u64,
+}
+
+impl<M: ShardableModel> Splitter<M> {
+    pub(crate) fn new(source: M::Source, map: ShardMap) -> Self {
+        Self {
+            gate: EpochGate::new(source),
+            map,
+            footprint: Vec::with_capacity(8),
+            shard_set: Vec::with_capacity(4),
+            local_tasks: 0,
+            boundary_tasks: 0,
+        }
+    }
+
+    /// Open the next epoch (`every` more canonical tasks).
+    pub(crate) fn open(&mut self, every: u64) {
+        self.gate.open(every);
+    }
+
+    /// Canonical tasks routed so far.
+    pub(crate) fn emitted(&self) -> u64 {
+        self.gate.emitted()
+    }
+
+    /// Whether the run is over (delegates to the gate at a quiescent
+    /// epoch boundary).
+    pub(crate) fn finished(&mut self) -> bool {
+        self.gate.finished()
+    }
+
+    /// `(local, boundary)` routing counters.
+    pub(crate) fn counts(&self) -> (u64, u64) {
+        (self.local_tasks, self.boundary_tasks)
+    }
+
+    /// Mutable assignment access for the rebalancer (quiescent use).
+    pub(crate) fn map_mut(&mut self) -> &mut ShardMap {
+        &mut self.map
+    }
+
+    /// Route one task. Returns `false` when the epoch budget (or the
+    /// source) is exhausted. Must be called under external serialization
+    /// (the engine wraps the splitter in a mutex), which also serializes
+    /// the [`Chain::append_tail`] calls per the chain's locking contract.
+    pub(crate) fn pull(
+        &mut self,
+        model: &M,
+        chains: &[Chain<ShardItem<M::Recipe>>],
+        spill: &Chain<Arc<Boundary<M::Recipe>>>,
+    ) -> bool {
+        let Some(recipe) = self.gate.next_task() else {
+            return false;
+        };
+        let seq = self.gate.emitted() - 1;
+        self.footprint.clear();
+        model.footprint(&recipe, &mut self.footprint);
+        assert!(
+            !self.footprint.is_empty(),
+            "footprint must name at least one block"
+        );
+        let home = self.footprint[0];
+        self.shard_set.clear();
+        for &b in &self.footprint {
+            let s = self.map.shard_of(b);
+            if !self.shard_set.contains(&s) {
+                self.shard_set.push(s);
+            }
+        }
+        if let &[only] = &self.shard_set[..] {
+            chains[only as usize].append_tail(ShardItem::Local {
+                seq,
+                block: home,
+                recipe,
+            });
+            self.local_tasks += 1;
+        } else {
+            self.shard_set.sort_unstable();
+            let boundary = Arc::new(Boundary {
+                seq,
+                block: home,
+                recipe,
+                shards: self.shard_set.clone(),
+                done: AtomicBool::new(false),
+            });
+            for &s in &boundary.shards {
+                chains[s as usize].append_tail(ShardItem::Fence(boundary.clone()));
+            }
+            spill.append_tail(boundary);
+            self.boundary_tasks += 1;
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chain::NodeState;
+    use crate::model::testkit::IncModel;
+    use crate::sim::graph::{bfs_partition, ring_lattice};
+
+    #[test]
+    fn shard_map_tracks_migrations() {
+        let g = ring_lattice(12, 2);
+        let p = bfs_partition(&g, 3);
+        let mut map = ShardMap::from_partition(&p);
+        assert_eq!(map.shards(), 3);
+        assert_eq!(map.blocks(), 12);
+        assert_eq!(
+            (0..3).map(|s| map.blocks_in(s)).sum::<usize>(),
+            12,
+            "counts partition the blocks"
+        );
+        let block = (0..12).find(|&b| map.shard_of(b) == 0).unwrap();
+        let before = map.blocks_in(0);
+        map.migrate(block, 2);
+        assert_eq!(map.shard_of(block), 2);
+        assert_eq!(map.blocks_in(0), before - 1);
+    }
+
+    #[test]
+    fn boundary_done_flag() {
+        let b: Boundary<u32> = Boundary {
+            seq: 5,
+            block: 0,
+            recipe: 7,
+            shards: vec![0, 1],
+            done: AtomicBool::new(false),
+        };
+        assert!(!b.done());
+        b.mark_done();
+        assert!(b.done());
+    }
+
+    #[test]
+    fn splitter_routes_single_block_footprints_locally() {
+        // IncModel footprints are single cells → every task is local and
+        // chains receive canonical-order subsequences.
+        let model = IncModel::new(50, 8);
+        let topo = <IncModel as ShardableModel>::sched_topology(&model);
+        let map = ShardMap::from_partition(&bfs_partition(&topo, 2));
+        let mut splitter: Splitter<IncModel> = Splitter::new(model.source(3), map);
+        let chains: Vec<Chain<ShardItem<_>>> = (0..2).map(|_| Chain::new()).collect();
+        let spill = Chain::new();
+        splitter.open(u64::MAX);
+        while splitter.pull(&model, &chains, &spill) {}
+        assert_eq!(splitter.emitted(), 50);
+        assert_eq!(splitter.counts(), (50, 0));
+        assert!(spill.is_empty());
+        assert_eq!(chains[0].len() + chains[1].len(), 50);
+        // Per-chain canonical order: walk each chain and check `seq`
+        // strictly increases.
+        for chain in &chains {
+            let mut last = None;
+            let mut node = chain.head().clone();
+            loop {
+                let next = node.next().unwrap();
+                if chain.is_tail(&next) {
+                    break;
+                }
+                assert_eq!(next.state(), NodeState::Pending);
+                let ShardItem::Local { seq, .. } = next.recipe() else {
+                    panic!("expected local item");
+                };
+                assert!(last.is_none_or(|l| l < *seq), "canonical order violated");
+                last = Some(*seq);
+                node = next;
+            }
+        }
+    }
+}

@@ -15,4 +15,6 @@ mod partition;
 pub use aggregate::aggregate_graph;
 pub use csr::Csr;
 pub use generators::{complete, erdos_renyi, lattice2d, ring_lattice, watts_strogatz};
-pub use partition::{contiguous_partition, round_robin_partition, Partition};
+pub use partition::{
+    bfs_partition, contiguous_partition, edge_cut, round_robin_partition, Partition,
+};

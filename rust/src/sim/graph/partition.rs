@@ -1,6 +1,11 @@
 //! Vertex partitions — the SIR experiment's "partition of the system into
 //! equal subsets, fixed throughout the simulation" (§4.2). The subset size
 //! is the experiment's task-size proxy `s` and sets the chain granularity.
+//! [`bfs_partition`] additionally serves the sharded scheduler: it
+//! partitions a model's footprint topology into balanced, low-edge-cut
+//! shards (DESIGN.md §7).
+
+use super::Csr;
 
 /// A partition of `n` vertices into blocks.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -73,6 +78,75 @@ pub fn round_robin_partition(n: usize, b: usize) -> Partition {
     Partition::from_assignment(assignment)
 }
 
+/// Greedy BFS edge-cut partition into `parts` balanced blocks.
+///
+/// Each block grows breadth-first from the lowest-index unassigned seed
+/// vertex until it reaches its balanced target size (`⌈remaining/parts
+/// left⌉`, so block sizes differ by at most one); when a block's frontier
+/// dries up (disconnected graph, or the component is exhausted) growth
+/// continues from the next unassigned seed. On graphs with locality
+/// (rings, lattices, small worlds) the blocks come out near-contiguous,
+/// so few edges cross blocks — the sharded scheduler's shard assignment
+/// (DESIGN.md §7). On an edgeless graph the BFS never fires and the
+/// result degrades gracefully to [`contiguous_partition`]-style index
+/// ranges.
+pub fn bfs_partition(g: &Csr, parts: usize) -> Partition {
+    let n = g.n();
+    assert!(parts >= 1 && parts <= n, "need 1 <= parts <= n");
+    const UNASSIGNED: u32 = u32::MAX;
+    let mut assign = vec![UNASSIGNED; n];
+    let mut assigned = 0usize;
+    let mut next_seed = 0usize;
+    let mut queue = std::collections::VecDeque::new();
+    for p in 0..parts {
+        // Balanced target: spreading the remainder keeps every later
+        // block non-empty (the loop invariant `remaining >= parts left`).
+        let target = (n - assigned).div_ceil(parts - p);
+        queue.clear();
+        let mut size = 0usize;
+        while size < target {
+            let v = match queue.pop_front() {
+                Some(v) => v,
+                None => {
+                    while next_seed < n && assign[next_seed] != UNASSIGNED {
+                        next_seed += 1;
+                    }
+                    debug_assert!(next_seed < n, "targets sum to n");
+                    next_seed
+                }
+            };
+            if assign[v] != UNASSIGNED {
+                continue; // stale frontier entry
+            }
+            assign[v] = p as u32;
+            size += 1;
+            assigned += 1;
+            for &u in g.neighbors(v) {
+                if assign[u as usize] == UNASSIGNED {
+                    queue.push_back(u as usize);
+                }
+            }
+        }
+    }
+    debug_assert_eq!(assigned, n);
+    Partition::from_assignment(assign)
+}
+
+/// Number of edges of `g` whose endpoints lie in different blocks of `p` —
+/// the partition-quality metric the BFS partitioner minimizes greedily.
+pub fn edge_cut(g: &Csr, p: &Partition) -> usize {
+    assert_eq!(g.n(), p.n());
+    let mut crossing = 0usize;
+    for (v, nbrs) in g.iter() {
+        let bv = p.block_of(v);
+        crossing += nbrs
+            .iter()
+            .filter(|&&u| p.block_of(u as usize) != bv)
+            .count();
+    }
+    crossing / 2 // every undirected edge was seen from both endpoints
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -106,5 +180,57 @@ mod tests {
     #[should_panic]
     fn empty_block_rejected() {
         let _ = Partition::from_assignment(vec![0, 2]); // block 1 missing
+    }
+
+    #[test]
+    fn bfs_partition_is_balanced_and_total() {
+        use crate::sim::graph::ring_lattice;
+        for (n, parts) in [(10, 3), (100, 4), (97, 5), (16, 16)] {
+            let g = ring_lattice(n, 4);
+            let p = bfs_partition(&g, parts);
+            assert_eq!(p.blocks(), parts, "n={n} parts={parts}");
+            assert_eq!(p.n(), n);
+            let sizes: Vec<usize> = (0..parts).map(|b| p.members(b).len()).collect();
+            assert_eq!(sizes.iter().sum::<usize>(), n);
+            let (lo, hi) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(hi - lo <= 1, "unbalanced: {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn bfs_partition_beats_round_robin_on_a_ring() {
+        use crate::sim::graph::ring_lattice;
+        let g = ring_lattice(120, 6);
+        let bfs = bfs_partition(&g, 4);
+        let rr = round_robin_partition(120, 4);
+        // BFS growth keeps blocks near-contiguous: the cut stays within a
+        // small multiple of the 4 seams' reach (measured: 28 here), while
+        // round-robin cuts all 360 edges.
+        assert!(edge_cut(&g, &bfs) <= 40, "cut = {}", edge_cut(&g, &bfs));
+        assert!(edge_cut(&g, &bfs) < edge_cut(&g, &rr));
+    }
+
+    #[test]
+    fn bfs_partition_handles_edgeless_graphs() {
+        // No edges: BFS never fires; blocks fall back to index ranges.
+        let g = Csr::from_edges(10, &[]);
+        let p = bfs_partition(&g, 3);
+        assert_eq!(p.blocks(), 3);
+        assert_eq!(p.members(0), &[0, 1, 2, 3]);
+        assert_eq!(p.members(1), &[4, 5, 6]);
+        assert_eq!(p.members(2), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn bfs_partition_one_part_and_all_parts() {
+        use crate::sim::graph::ring_lattice;
+        let g = ring_lattice(12, 2);
+        let whole = bfs_partition(&g, 1);
+        assert_eq!(whole.blocks(), 1);
+        assert_eq!(edge_cut(&g, &whole), 0);
+        let atoms = bfs_partition(&g, 12);
+        assert_eq!(atoms.blocks(), 12);
+        assert_eq!(atoms.max_block_size(), 1);
+        assert_eq!(edge_cut(&g, &atoms), g.m());
     }
 }

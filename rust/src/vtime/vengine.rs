@@ -205,7 +205,10 @@ impl VirtualEngine {
                 record: model.record(),
                 created_this_cycle: 0,
                 cycle_had_work: false,
-                stats: WorkerStats::default(),
+                stats: WorkerStats {
+                    worker: w,
+                    ..Default::default()
+                },
             });
             des.heap.push(Ev { time: 0.0, wid: w });
         }
@@ -252,6 +255,7 @@ impl VirtualEngine {
                 tasks_executed: des.erased,
                 max_chain_len: des.max_live,
             },
+            sched: None,
         }
     }
 }

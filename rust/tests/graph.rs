@@ -1,0 +1,260 @@
+//! Unit/property tests for the `sim/graph` toolkit: generator structural
+//! invariants (symmetric adjacency, degree sums, no self-loops), the
+//! aggregate (quotient) graph's exactness, and partition invariants —
+//! including the BFS edge-cut partitioner feeding the sharded scheduler.
+
+use adapar::sim::graph::{
+    aggregate_graph, bfs_partition, complete, contiguous_partition, edge_cut, erdos_renyi,
+    lattice2d, ring_lattice, round_robin_partition, watts_strogatz, Csr, Partition,
+};
+use adapar::sim::rng::Rng;
+use adapar::util::prop::{check, ranged_f64, ranged_usize, Config, Gen, PairOf};
+
+/// Structural invariants every generator must satisfy: symmetric
+/// neighbour lists, degree sum = 2m, sorted unique neighbours, no
+/// self-loops.
+fn assert_well_formed(g: &Csr) {
+    let mut degree_sum = 0usize;
+    for (v, nbrs) in g.iter() {
+        degree_sum += nbrs.len();
+        for w in nbrs.windows(2) {
+            assert!(w[0] < w[1], "neighbours of {v} not sorted-unique");
+        }
+        for &u in nbrs {
+            assert_ne!(u as usize, v, "self-loop at {v}");
+            assert!(
+                g.neighbors(u as usize).contains(&(v as u32)),
+                "edge {v}->{u} not symmetric"
+            );
+        }
+    }
+    assert_eq!(degree_sum, 2 * g.m(), "degree sum must be twice the edges");
+}
+
+/// Partition invariants: every vertex in exactly one block, members
+/// agree with block_of, no empty blocks, dense block ids.
+fn assert_valid_partition(p: &Partition, n: usize) {
+    assert_eq!(p.n(), n);
+    let mut seen = vec![false; n];
+    for b in 0..p.blocks() {
+        assert!(!p.members(b).is_empty(), "block {b} empty");
+        for &v in p.members(b) {
+            assert_eq!(p.block_of(v as usize), b as u32);
+            assert!(!seen[v as usize], "vertex {v} in two blocks");
+            seen[v as usize] = true;
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "vertex missing from all blocks");
+}
+
+#[test]
+fn generators_produce_well_formed_graphs() {
+    // Ring lattices across sizes/degrees (degree must stay even, < n).
+    check(
+        "ring lattice well-formed",
+        Config::default(),
+        PairOf(ranged_usize(8, 200), ranged_usize(1, 3)),
+        |&(n, half)| {
+            let g = ring_lattice(n, 2 * half);
+            assert_well_formed(&g);
+            g.n() == n && (0..n).all(|v| g.degree(v) == 2 * half)
+        },
+    );
+    // Erdős–Rényi: exact edge count, well-formed.
+    check(
+        "erdos-renyi well-formed",
+        Config {
+            cases: 32,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(5, 60), ranged_usize(0, 40)),
+        |&(n, m)| {
+            let m = m.min(n * (n - 1) / 2);
+            let g = erdos_renyi(n, m, &mut Rng::new((n * 31 + m) as u64));
+            assert_well_formed(&g);
+            g.n() == n && g.m() == m
+        },
+    );
+    // Watts–Strogatz: rewiring must preserve well-formedness and stay
+    // close to the ring's edge count (saturation may drop a few).
+    check(
+        "watts-strogatz well-formed",
+        Config {
+            cases: 32,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(10, 100), ranged_f64(0.0, 1.0)),
+        |&(n, beta)| {
+            let g = watts_strogatz(n, 4, beta, &mut Rng::new(n as u64));
+            assert_well_formed(&g);
+            g.n() == n && g.m() <= 2 * n + 8 && g.m() + 8 >= 2 * n
+        },
+    );
+    let g = lattice2d(7);
+    assert_well_formed(&g);
+    assert_eq!(g.m(), 2 * 49);
+    let g = complete(9);
+    assert_well_formed(&g);
+    assert_eq!(g.m(), 36);
+}
+
+#[test]
+fn aggregate_graph_is_exactly_the_crossing_relation() {
+    // Property: blocks p≠q are adjacent in the aggregate graph iff some
+    // edge of g crosses them (checked by brute force), and the aggregate
+    // itself is well-formed.
+    check(
+        "aggregate = crossing relation",
+        Config {
+            cases: 40,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(6, 60), ranged_usize(2, 6)),
+        |&(n, blocks)| {
+            let m = (n * 2).min(n * (n - 1) / 2);
+            let g = erdos_renyi(n, m, &mut Rng::new(n as u64 * 7 + blocks as u64));
+            let s = n.div_ceil(blocks);
+            let p = contiguous_partition(n, s);
+            let a = aggregate_graph(&g, &p);
+            assert_well_formed(&a);
+            assert_eq!(a.n(), p.blocks());
+            for bp in 0..p.blocks() {
+                for bq in 0..p.blocks() {
+                    if bp == bq {
+                        continue;
+                    }
+                    let crossing = g.iter().any(|(v, nbrs)| {
+                        p.block_of(v) == bp as u32
+                            && nbrs.iter().any(|&u| p.block_of(u as usize) == bq as u32)
+                    });
+                    if a.has_edge(bp, bq) != crossing {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn aggregate_degree_is_bounded_by_block_count() {
+    let g = ring_lattice(200, 8);
+    let p = contiguous_partition(200, 20);
+    let a = aggregate_graph(&g, &p);
+    for b in 0..a.n() {
+        assert!(a.degree(b) < a.n(), "quotient degree bound");
+    }
+    // Reach 4 < block size 20: each block touches exactly its two arc
+    // neighbours.
+    for b in 0..a.n() {
+        assert_eq!(a.degree(b), 2);
+    }
+}
+
+#[test]
+fn partitions_satisfy_block_invariants() {
+    check(
+        "contiguous/round-robin/bfs partitions valid",
+        Config {
+            cases: 48,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(4, 120), ranged_usize(1, 8)),
+        |&(n, k)| {
+            let k = k.min(n);
+            let contiguous = contiguous_partition(n, n.div_ceil(k));
+            assert_valid_partition(&contiguous, n);
+            let rr = round_robin_partition(n, k);
+            assert_valid_partition(&rr, n);
+            let g = ring_lattice(n.max(4), 2);
+            let bfs = bfs_partition(&g, k.min(g.n()));
+            assert_valid_partition(&bfs, g.n());
+            assert_eq!(bfs.blocks(), k.min(g.n()));
+            // Balance: BFS block sizes differ by at most one.
+            let sizes: Vec<usize> = (0..bfs.blocks()).map(|b| bfs.members(b).len()).collect();
+            sizes.iter().max().unwrap() - sizes.iter().min().unwrap() <= 1
+        },
+    );
+}
+
+#[test]
+fn bfs_partition_cut_quality_on_local_topologies() {
+    // On graphs with locality the BFS partitioner must not be worse than
+    // the pessimal round-robin assignment.
+    check(
+        "bfs cut <= round robin cut",
+        Config {
+            cases: 32,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(16, 160), ranged_usize(2, 6)),
+        |&(n, k)| {
+            let g = ring_lattice(n, 4);
+            let bfs = bfs_partition(&g, k);
+            let rr = round_robin_partition(n, k);
+            edge_cut(&g, &bfs) <= edge_cut(&g, &rr)
+        },
+    );
+}
+
+#[test]
+fn edge_cut_extremes() {
+    let g = ring_lattice(30, 2);
+    assert_eq!(edge_cut(&g, &contiguous_partition(30, 30)), 0, "one block");
+    assert_eq!(
+        edge_cut(&g, &round_robin_partition(30, 30)),
+        g.m(),
+        "singleton blocks cut everything"
+    );
+}
+
+/// A tiny custom generator exercising `Gen` directly: random graphs as
+/// edge lists (the shrinker drops edges), validating `Csr::from_edges`
+/// against its own accessors.
+struct EdgeList {
+    n: usize,
+}
+
+impl Gen for EdgeList {
+    type Value = Vec<(u32, u32)>;
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        let mut set = std::collections::BTreeSet::new();
+        let m = rng.index(2 * self.n);
+        while set.len() < m {
+            let (a, b) = rng.distinct_pair(self.n);
+            set.insert((a.min(b) as u32, a.max(b) as u32));
+        }
+        set.into_iter().collect()
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        (0..v.len())
+            .map(|i| {
+                let mut c = v.clone();
+                c.remove(i);
+                c
+            })
+            .collect()
+    }
+}
+
+#[test]
+fn csr_roundtrips_arbitrary_edge_lists() {
+    let n = 24;
+    check(
+        "csr roundtrip",
+        Config {
+            cases: 48,
+            ..Default::default()
+        },
+        EdgeList { n },
+        |edges| {
+            let g = Csr::from_edges(n, edges);
+            assert_well_formed(&g);
+            g.m() == edges.len()
+                && edges
+                    .iter()
+                    .all(|&(a, b)| g.has_edge(a as usize, b as usize))
+        },
+    );
+}

@@ -27,6 +27,9 @@ fn every_registered_model_runs_on_every_legal_engine_via_the_facade() {
         if info.has_sync_form {
             engines.push(EngineKind::Stepwise);
         }
+        if info.has_sharded_form {
+            engines.push(EngineKind::Sharded);
+        }
         for engine in engines {
             let out = Simulation::builder()
                 .model(model.clone())
@@ -58,6 +61,20 @@ fn every_registered_model_runs_on_every_legal_engine_via_the_facade() {
                 .unwrap_err();
             assert!(err.to_string().contains("no synchronous form"), "{model}");
         }
+        if !info.has_sharded_form {
+            let err = Simulation::builder()
+                .model(model.clone())
+                .engine(EngineKind::Sharded)
+                .agents(120)
+                .steps(40)
+                .size(10)
+                .run()
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("no footprint topology"),
+                "{model}: {err}"
+            );
+        }
     }
 }
 
@@ -73,7 +90,7 @@ fn unknown_names_list_the_valid_choices() {
     let err = "teleport".parse::<EngineKind>().unwrap_err();
     let msg = err.to_string();
     assert!(msg.contains("unknown engine `teleport`"), "{msg}");
-    for engine in ["parallel", "sequential", "virtual", "stepwise"] {
+    for engine in ["parallel", "sequential", "virtual", "stepwise", "sharded"] {
         assert!(msg.contains(engine), "{msg} should list {engine}");
     }
 }

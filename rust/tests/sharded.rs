@@ -1,0 +1,198 @@
+//! Acceptance suite for the sharded adaptive scheduler (ISSUE 3):
+//! the `sharded` engine must produce **byte-identical final states and
+//! epoch observation traces** to the sequential engine for SIR, Axelrod
+//! and voter at fixed seeds, across worker counts.
+//!
+//! CI runs this suite once per worker count (`ADAPAR_SHARDED_WORKERS`
+//! pins the count for the matrix job); locally, all of 1/2/4 run.
+
+use adapar::models::axelrod::{AxelrodModel, AxelrodParams};
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::models::voter::{VoterModel, VoterParams};
+use adapar::protocol::SequentialEngine;
+use adapar::sim::graph::ring_lattice;
+use adapar::{EngineKind, ShardedConfig, ShardedEngine, Simulation};
+
+/// Worker counts under test: all of 1/2/4, or the single count pinned by
+/// `ADAPAR_SHARDED_WORKERS` (the CI matrix).
+fn worker_counts() -> Vec<usize> {
+    match std::env::var("ADAPAR_SHARDED_WORKERS") {
+        Ok(v) => vec![v.parse().expect("ADAPAR_SHARDED_WORKERS must be a number")],
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+/// Facade-level trace comparison: run `model` observed at `every` on the
+/// sequential engine, then assert the sharded engine reproduces the
+/// trace exactly at each worker count.
+fn assert_traces_match(model: &str, agents: usize, steps: u64, size: usize, every: u64) {
+    let run = |engine: EngineKind, workers: usize| {
+        Simulation::builder()
+            .model(model)
+            .engine(engine)
+            .workers(workers)
+            .agents(agents)
+            .steps(steps)
+            .size(size)
+            .seed(17)
+            .every(every)
+            .run()
+            .unwrap_or_else(|e| panic!("{model}/{engine}: {e}"))
+            .observable
+    };
+    let reference = run(EngineKind::Sequential, 1);
+    assert!(
+        reference.len() > 2,
+        "{model}: cadence {every} must yield a multi-frame trace"
+    );
+    for workers in worker_counts() {
+        let got = run(EngineKind::Sharded, workers);
+        assert_eq!(got, reference, "{model} sharded n={workers} trace diverged");
+    }
+}
+
+#[test]
+fn sir_trace_is_byte_identical_to_sequential() {
+    assert_traces_match("sir", 400, 40, 25, 500);
+}
+
+#[test]
+fn axelrod_trace_is_byte_identical_to_sequential() {
+    // Complete-graph pairs: nearly everything crosses shards, stressing
+    // the spillover chain and its fences.
+    assert_traces_match("axelrod", 80, 4_000, 12, 1_000);
+}
+
+#[test]
+fn voter_trace_is_byte_identical_to_sequential() {
+    assert_traces_match("voter", 300, 8_000, 1, 2_000);
+}
+
+#[test]
+fn sir_final_states_match_across_granularities() {
+    for s in [10usize, 30, 150] {
+        let params = SirParams::scaled(s, 300, 40);
+        let seed = 13;
+        let reference = {
+            let m = SirModel::new(params, 5);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in worker_counts() {
+            let m = SirModel::new(params, 5);
+            let report = ShardedEngine::new(ShardedConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "s={s} n={workers} diverged");
+            assert_eq!(report.totals.executed, report.chain.tasks_executed);
+        }
+    }
+}
+
+#[test]
+fn axelrod_final_states_match_with_heavy_spillover() {
+    let params = AxelrodParams {
+        agents: 60,
+        features: 10,
+        traits: 3,
+        omega: 0.95,
+        steps: 5_000,
+    };
+    let seed = 29;
+    let reference = {
+        let m = AxelrodModel::new(params, 3);
+        SequentialEngine::new(seed).run(&m);
+        m.snapshot()
+    };
+    for workers in worker_counts() {
+        let m = AxelrodModel::new(params, 3);
+        let report = ShardedEngine::new(ShardedConfig {
+            workers,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.snapshot(), reference, "n={workers} diverged");
+        let sched = report.sched.as_ref().unwrap();
+        assert_eq!(sched.local_tasks + sched.boundary_tasks, 5_000);
+        if workers > 1 {
+            assert!(
+                sched.boundary_tasks > 0,
+                "complete-graph pairs must cross shards: {sched:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn voter_final_states_match_under_aggressive_rebalancing() {
+    let seed = 7;
+    let make = || {
+        VoterModel::new(
+            ring_lattice(240, 6),
+            VoterParams {
+                opinions: 3,
+                steps: 12_000,
+            },
+            11,
+        )
+    };
+    let reference = {
+        let m = make();
+        SequentialEngine::new(seed).run(&m);
+        m.snapshot()
+    };
+    for workers in worker_counts() {
+        let m = make();
+        let report = ShardedEngine::new(ShardedConfig {
+            workers,
+            seed,
+            rebalance_every: 512, // force many epoch boundaries + migrations
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.snapshot(), reference, "n={workers} diverged");
+        let sched = report.sched.as_ref().unwrap();
+        assert!(sched.rebalances > 0, "short epochs must hit the rebalancer");
+    }
+}
+
+#[test]
+fn sharded_report_carries_sched_telemetry_through_the_facade() {
+    let out = Simulation::builder()
+        .model("sir")
+        .engine(EngineKind::Sharded)
+        .workers(2)
+        .agents(200)
+        .steps(20)
+        .size(20)
+        .seed(7)
+        .run()
+        .unwrap();
+    assert_eq!(out.report.engine, "sharded");
+    let sched = out.report.sched.as_ref().expect("sharded reports telemetry");
+    assert_eq!(sched.local_tasks + sched.boundary_tasks, 20 * 2 * 10);
+    assert!(out.report.to_json().render().contains("\"sched\""));
+    // Per-worker ids are wired through to the report.
+    for (w, stats) in out.report.per_worker.iter().enumerate() {
+        assert_eq!(stats.worker, w);
+    }
+}
+
+#[test]
+fn sharded_refuses_models_without_a_topology() {
+    let err = Simulation::builder()
+        .model("ising")
+        .engine(EngineKind::Sharded)
+        .agents(100)
+        .steps(50)
+        .run()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("no footprint topology"),
+        "{err}"
+    );
+}
