@@ -12,13 +12,22 @@
 //! Emits `BENCH_sched.json` into the invocation directory (repo root
 //! under `cargo bench`), where per-PR perf tracking — and the CI artifact
 //! upload — pick `BENCH_*.json` files up.
+//!
+//! A second section exercises the **lattice workloads** (ISSUE 4): Ising
+//! and bounded-relocation Schelling on a 256² torus, sharded with the
+//! grid partitioner vs the forced BFS baseline at 1/2/4/8 workers,
+//! emitting `BENCH_grid.json`. Its hard acceptance is deterministic —
+//! the grid partition's edge cut must not exceed BFS's on any lattice
+//! workload — while throughput ratios are report-only.
 
 use std::time::Instant;
 
 use adapar::model::{Model, Record, TaskSource};
+use adapar::models::ising::{IsingModel, IsingParams};
+use adapar::models::schelling::{SchellingModel, SchellingParams};
 use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
-use adapar::sched::{ShardableModel, ShardedConfig, ShardedEngine};
-use adapar::sim::graph::{ring_lattice, Csr};
+use adapar::sched::{PartitionPolicy, ShardableModel, ShardedConfig, ShardedEngine};
+use adapar::sim::graph::{bfs_partition, edge_cut, grid_partition, ring_lattice, Csr};
 use adapar::sim::rng::TaskRng;
 use adapar::sim::state::SharedSim;
 use adapar::util::json::Json;
@@ -208,6 +217,185 @@ fn measure(engine: &str, workers: usize, skewed: bool, reference: u64) -> f64 {
     best
 }
 
+// ---------------------------------------------------------------------------
+// BENCH_grid: lattice workloads, grid vs BFS partition (ISSUE 4)
+// ---------------------------------------------------------------------------
+
+/// Lattice side for the grid bench (n = side² ≥ 256² footprint blocks).
+const GRID_SIDE: usize = 256;
+const GRID_SEED: u64 = 71;
+const GRID_SAMPLES: usize = 2;
+
+/// One lattice workload through the sharded engine: sequential
+/// reference checksum, per-shard-count cut comparison (hard acceptance:
+/// grid ≤ BFS), and timed grid-vs-BFS sharded runs at 1/2/4/8 workers.
+/// Returns `(workload json, cuts all ok)`.
+fn grid_workload<M, B, S>(name: &str, tasks: u64, build: B, checksum: S) -> (Json, bool)
+where
+    M: ShardableModel,
+    B: Fn() -> M,
+    S: Fn(&M) -> u64,
+{
+    let reference = {
+        let model = build();
+        SequentialEngine::new(GRID_SEED).run(&model);
+        checksum(&model)
+    };
+
+    let topology = build().sched_topology();
+    let mut cuts = Vec::new();
+    let mut cuts_ok = true;
+    for shards in [1usize, 2, 4, 8] {
+        let grid = edge_cut(&topology, &grid_partition(GRID_SIDE, GRID_SIDE, shards));
+        let bfs = edge_cut(&topology, &bfs_partition(&topology, shards));
+        let ok = grid <= bfs;
+        cuts_ok &= ok;
+        eprintln!("{name:<10} shards={shards}: edge cut grid={grid} bfs={bfs}");
+        cuts.push(Json::Obj(vec![
+            ("shards".into(), Json::from(shards)),
+            ("grid".into(), Json::from(grid)),
+            ("bfs".into(), Json::from(bfs)),
+            ("ok".into(), Json::from(ok)),
+        ]));
+    }
+
+    let mut runs = Vec::new();
+    let mut grid_tp_n4 = 0.0f64;
+    let mut bfs_tp_n4 = 0.0f64;
+    for workers in [1usize, 2, 4, 8] {
+        for (policy, label) in [
+            (PartitionPolicy::Auto, "grid"),
+            (PartitionPolicy::ForceGeneral, "bfs"),
+        ] {
+            let mut best = f64::INFINITY;
+            for _ in 0..GRID_SAMPLES {
+                let model = build();
+                let t0 = Instant::now();
+                let report = ShardedEngine::new(ShardedConfig {
+                    workers,
+                    seed: GRID_SEED,
+                    partition: policy,
+                    ..Default::default()
+                })
+                .run(&model);
+                best = best.min(t0.elapsed().as_secs_f64());
+                assert_eq!(
+                    checksum(&model),
+                    reference,
+                    "{name} {label} n={workers} diverged from sequential"
+                );
+                let sched = report.sched.expect("sharded runs report telemetry");
+                assert_eq!(sched.partition, label, "policy must reach the partitioner");
+            }
+            let throughput = tasks as f64 / best;
+            eprintln!(
+                "{name:<10} partition={label:<4} n={workers}: {best:.4}s  \
+                 ({throughput:.0} tasks/s)"
+            );
+            if workers == 4 {
+                if label == "grid" {
+                    grid_tp_n4 = throughput;
+                } else {
+                    bfs_tp_n4 = throughput;
+                }
+            }
+            runs.push(Json::Obj(vec![
+                ("partition".into(), Json::from(label)),
+                ("workers".into(), Json::from(workers)),
+                ("tasks".into(), Json::from(tasks)),
+                ("time_s".into(), Json::from(best)),
+                ("throughput_tasks_per_s".into(), Json::from(throughput)),
+            ]));
+        }
+    }
+    let speedup = grid_tp_n4 / bfs_tp_n4;
+    eprintln!("{name:<10} grid/bfs throughput at n=4 = {speedup:.2}x (report-only)");
+    (
+        Json::Obj(vec![
+            ("model".into(), Json::from(name)),
+            ("side".into(), Json::from(GRID_SIDE)),
+            ("blocks".into(), Json::from(GRID_SIDE * GRID_SIDE)),
+            ("cuts".into(), Json::Arr(cuts)),
+            ("runs".into(), Json::Arr(runs)),
+            ("grid_over_bfs_throughput_n4".into(), Json::from(speedup)),
+        ]),
+        cuts_ok,
+    )
+}
+
+fn bench_grid() -> adapar::Result<()> {
+    eprintln!("== BENCH_grid: lattice workloads at {GRID_SIDE}², grid vs BFS partition ==");
+    let ising_tasks = 150_000u64;
+    let (ising_json, ising_ok) = grid_workload(
+        "ising",
+        ising_tasks,
+        || {
+            IsingModel::new(
+                IsingParams {
+                    side: GRID_SIDE,
+                    temperature: 2.269,
+                    steps: ising_tasks,
+                },
+                9,
+            )
+        },
+        |m| {
+            m.snapshot()
+                .iter()
+                .fold(0u64, |acc, &s| acc.rotate_left(1).wrapping_add(s as u8 as u64))
+        },
+    );
+    let schelling_tasks = 120_000u64;
+    let (schelling_json, schelling_ok) = grid_workload(
+        "schelling",
+        schelling_tasks,
+        || {
+            SchellingModel::new(
+                SchellingParams {
+                    side: GRID_SIDE,
+                    agents: 51_000, // ~78% occupancy
+                    tolerance: 0.4,
+                    steps: schelling_tasks,
+                    move_radius: 2,
+                },
+                9,
+            )
+        },
+        |m| {
+            m.snapshot()
+                .iter()
+                .fold(0u64, |acc, &c| acc.rotate_left(1).wrapping_add(c as u64))
+        },
+    );
+
+    let pass = ising_ok && schelling_ok;
+    let json = Json::Obj(vec![
+        ("bench".into(), Json::from("grid")),
+        (
+            "workloads".into(),
+            Json::Arr(vec![ising_json, schelling_json]),
+        ),
+        (
+            "acceptance".into(),
+            Json::Obj(vec![
+                ("grid_cut_le_bfs_everywhere".into(), Json::from(pass)),
+                ("pass".into(), Json::from(pass)),
+            ]),
+        ),
+    ]);
+    let path = std::path::Path::new("BENCH_grid.json");
+    std::fs::write(path, json.render())?;
+    eprintln!("wrote {}", path.display());
+    // The cut comparison is deterministic (no wall clocks involved), so
+    // it is a hard gate even in CI's lenient mode.
+    adapar::ensure!(
+        pass,
+        "grid partition lost the edge-cut comparison on a lattice workload"
+    );
+    eprintln!("bench_grid: acceptance PASS");
+    Ok(())
+}
+
 fn main() -> adapar::Result<()> {
     let tasks = ROUNDS * BLOCKS as u64;
     eprintln!("== BENCH_sched: parallel vs sharded, {tasks} tasks/run ==");
@@ -295,5 +483,6 @@ fn main() -> adapar::Result<()> {
     } else {
         eprintln!("bench_sched: acceptance PASS");
     }
-    Ok(())
+
+    bench_grid()
 }

@@ -143,11 +143,23 @@ impl EngineKind {
         EngineKind::Sharded,
     ];
 
+    /// Canonical engine name — the single source every listing prints,
+    /// `Display` renders and [`FromStr`] accepts.
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Parallel => "parallel",
+            EngineKind::Sequential => "sequential",
+            EngineKind::Virtual => "virtual",
+            EngineKind::Stepwise => "stepwise",
+            EngineKind::Sharded => "sharded",
+        }
+    }
+
     /// Canonical names, for error listings.
     pub fn names() -> String {
         Self::ALL
             .iter()
-            .map(|k| k.to_string())
+            .map(|k| k.name())
             .collect::<Vec<_>>()
             .join("|")
     }
@@ -174,13 +186,7 @@ impl FromStr for EngineKind {
 
 impl std::fmt::Display for EngineKind {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.write_str(match self {
-            EngineKind::Parallel => "parallel",
-            EngineKind::Sequential => "sequential",
-            EngineKind::Virtual => "virtual",
-            EngineKind::Stepwise => "stepwise",
-            EngineKind::Sharded => "sharded",
-        })
+        f.write_str(self.name())
     }
 }
 

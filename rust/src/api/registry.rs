@@ -196,6 +196,29 @@ impl ModelInfo {
         self
     }
 
+    /// Names of the engines this model supports, in [`EngineKind::ALL`]
+    /// order — the single source of truth for the CLI listings and the
+    /// cross-engine conformance matrix.
+    ///
+    /// [`EngineKind::ALL`]: crate::api::EngineKind::ALL
+    pub fn engines(&self) -> Vec<&'static str> {
+        crate::api::EngineKind::ALL
+            .iter()
+            .filter(|&&k| self.supports(k))
+            .map(|&k| k.name())
+            .collect()
+    }
+
+    /// Whether the model can run on `kind` (stepwise needs a synchronous
+    /// form, sharded a footprint topology; every model runs on the rest).
+    pub fn supports(&self, kind: crate::api::EngineKind) -> bool {
+        match kind {
+            crate::api::EngineKind::Stepwise => self.has_sync_form,
+            crate::api::EngineKind::Sharded => self.has_sharded_form,
+            _ => true,
+        }
+    }
+
     /// Agent count for a scale.
     pub fn agents_for(&self, paper_scale: bool) -> usize {
         if paper_scale {
@@ -302,6 +325,14 @@ impl Registry {
         self.entries.keys().cloned().collect()
     }
 
+    /// Metadata of every registered model, in name order — the
+    /// registry-driven iteration surface the conformance matrix and the
+    /// CLI listings are built on (any future registration is
+    /// automatically covered).
+    pub fn models(&self) -> Vec<ModelInfo> {
+        self.entries.values().map(|e| e.info.clone()).collect()
+    }
+
     /// Whether a name (or alias) is registered.
     pub fn contains(&self, name: &str) -> bool {
         self.resolve(name).is_ok()
@@ -354,6 +385,11 @@ pub fn build(name: &str, ctx: &BuildCtx) -> Result<Box<dyn DynModel>> {
 /// Names of all globally-registered models.
 pub fn model_names() -> Vec<String> {
     global().read().unwrap().names()
+}
+
+/// Metadata of every globally-registered model, in name order.
+pub fn models() -> Vec<ModelInfo> {
+    global().read().unwrap().models()
 }
 
 /// Whether a name (or alias) is globally registered.
@@ -469,7 +505,8 @@ mod bundled {
             .sizes(&[1])
             .agents(64 * 64, 64 * 64)
             .steps(100_000, 100_000)
-            .validate_steps(20_000);
+            .validate_steps(20_000)
+            .sharded();
         r.register(info, |ctx| {
             let side = ((ctx.agents as f64).sqrt() as usize).max(8);
             let params = IsingParams {
@@ -478,7 +515,10 @@ mod bundled {
                 steps: ctx.steps,
             };
             let model = IsingModel::new(params, ctx.seed ^ 0x15);
-            Ok(Runnable::new("ising", model).observable().boxed())
+            Ok(Runnable::new("ising", model)
+                .observable()
+                .with_sharding()
+                .boxed())
         })
     }
 
@@ -490,7 +530,8 @@ mod bundled {
         .sizes(&[1])
         .agents(1_800, 1_800)
         .steps(100_000, 100_000)
-        .validate_steps(20_000);
+        .validate_steps(20_000)
+        .sharded();
         r.register(info, |ctx| {
             // ~78% occupancy on the smallest torus that fits `agents`.
             let side = ((ctx.agents as f64 / 0.78).sqrt().ceil() as usize).max(8);
@@ -499,11 +540,15 @@ mod bundled {
                 agents: ctx.agents,
                 tolerance: ctx.params.f64_or("tolerance", 0.4)?,
                 steps: ctx.steps,
+                // 0 keeps the classic unbounded relocation; sharded runs
+                // want a bound (e.g. --move-radius 2) for locality.
+                move_radius: ctx.params.usize_or("move_radius", 0)?,
             };
             let model = SchellingModel::new(params, ctx.seed ^ 0x5C);
             Ok(Runnable::new("schelling", model)
                 .observable()
                 .checked(|m| m.check_consistency())
+                .with_sharding()
                 .boxed())
         })
     }
@@ -523,15 +568,36 @@ mod tests {
         assert!(r.contains("cultural"), "alias resolves");
         assert!(r.info("sir").unwrap().has_sync_form);
         assert!(!r.info("axelrod").unwrap().has_sync_form);
-        for (name, sharded) in [
-            ("sir", true),
-            ("voter", true),
-            ("axelrod", true),
-            ("ising", false),
-            ("schelling", false),
-        ] {
-            assert_eq!(r.info(name).unwrap().has_sharded_form, sharded, "{name}");
+        for name in ["sir", "voter", "axelrod", "ising", "schelling"] {
+            assert!(r.info(name).unwrap().has_sharded_form, "{name}");
         }
+        let infos = r.models();
+        assert_eq!(
+            infos.iter().map(|i| i.name.as_str()).collect::<Vec<_>>(),
+            r.names(),
+            "models() iterates in name order"
+        );
+    }
+
+    #[test]
+    fn model_info_reports_engine_support() {
+        use crate::api::EngineKind;
+        let r = Registry::bundled();
+        let sir = r.info("sir").unwrap();
+        assert_eq!(
+            sir.engines(),
+            vec!["parallel", "sequential", "virtual", "stepwise", "sharded"]
+        );
+        assert!(sir.supports(EngineKind::Stepwise));
+        let ising = r.info("ising").unwrap();
+        assert_eq!(
+            ising.engines(),
+            vec!["parallel", "sequential", "virtual", "sharded"]
+        );
+        assert!(!ising.supports(EngineKind::Stepwise));
+        assert!(ising.supports(EngineKind::Sharded));
+        let bare = ModelInfo::new("bare", "no capabilities");
+        assert_eq!(bare.engines(), vec!["parallel", "sequential", "virtual"]);
     }
 
     #[test]

@@ -77,30 +77,32 @@ fn sweep_config_from(args: &Args) -> Result<SweepConfig> {
     // Per-key override on top of the config file's [params] table, like
     // every other CLI option.
     cfg.params.merge(&params_from(args)?);
+    // `--move-radius` is common enough (the lattice quickstart) to get a
+    // first-class flag on top of the generic `--params` bag.
+    if args.get("move-radius").is_some() {
+        let r = args.get_parse("move-radius", 0usize)?;
+        cfg.params.set("move_radius", r as i64);
+    }
     cfg.validate()?;
     Ok(cfg)
 }
 
-/// `adapar models` — list every registered model with its defaults.
+/// `adapar models` — list every registered model with an explicit
+/// engine-support column (sourced from [`ModelInfo::engines`], the same
+/// capability data the conformance matrix iterates) and its defaults.
+///
+/// [`ModelInfo::engines`]: crate::api::ModelInfo::engines
 pub fn models(_args: &Args) -> Result<()> {
     println!("registered models:");
-    for name in registry::model_names() {
-        let info = registry::info(&name)?;
-        let mut engines = vec!["parallel", "sequential", "virtual"];
-        if info.has_sync_form {
-            engines.push("stepwise");
-        }
-        if info.has_sharded_form {
-            engines.push("sharded");
-        }
-        let engines = engines.join("|");
-        println!("  {:<10} {}", info.name, info.summary);
+    println!("  {:<10} {:<46} summary", "name", "engines");
+    for info in registry::models() {
+        println!("  {:<10} {:<46} {}", info.name, info.engines().join("|"), info.summary);
         println!(
-            "  {:<10}   engines: {engines}; defaults: N={}, steps={}, sizes={:?}",
-            "", info.default_agents, info.default_steps, info.default_sizes
+            "  {:<10} {:<46} defaults: N={}, steps={}, sizes={:?}",
+            "", "", info.default_agents, info.default_steps, info.default_sizes
         );
         if !info.aliases.is_empty() {
-            println!("  {:<10}   aliases: {}", "", info.aliases.join(", "));
+            println!("  {:<10} {:<46} aliases: {}", "", "", info.aliases.join(", "));
         }
     }
     Ok(())
@@ -198,9 +200,10 @@ pub fn run(args: &Args) -> Result<()> {
     }
     if let Some(sched) = &out.report.sched {
         println!(
-            "sched: shards={} local={} boundary={} ({:.1}%) migrations={} \
+            "sched: shards={} partition={} local={} boundary={} ({:.1}%) migrations={} \
              rebalances={} edge_cut={}",
             sched.shards,
+            sched.partition,
             sched.local_tasks,
             sched.boundary_tasks,
             sched.boundary_ratio() * 100.0,
@@ -334,29 +337,33 @@ pub fn validate(args: &Args) -> Result<()> {
         reference.len(),
         if reference.len() == 1 { "" } else { "s" }
     );
+    // Engine rows come from the registry's capability data, so a model
+    // gaining (or losing) an engine automatically changes its checklist.
+    let info = registry::info(&cfg.model)?;
     let mut all_ok = true;
-    for &n in &workers {
-        let got = sim(EngineKind::Parallel, n)?.observable;
+    let mut row = |engine: EngineKind, n: usize| -> Result<()> {
+        let got = sim(engine, n)?.observable;
         let ok = got == reference;
         all_ok &= ok;
-        println!("parallel n={n}: {} ({got})", if ok { "OK" } else { "MISMATCH" });
-    }
-    if registry::info(&cfg.model)?.has_sharded_form {
+        println!(
+            "{:<10} n={n}: {} ({got})",
+            engine.to_string(),
+            if ok { "OK" } else { "MISMATCH" }
+        );
+        Ok(())
+    };
+    for engine in [EngineKind::Parallel, EngineKind::Stepwise, EngineKind::Sharded] {
+        if !info.supports(engine) {
+            println!("{:<10} (unsupported: not in the model's engine set)", engine.to_string());
+            continue;
+        }
         for &n in &workers {
-            let got = sim(EngineKind::Sharded, n)?.observable;
-            let ok = got == reference;
-            all_ok &= ok;
-            println!("sharded  n={n}: {} ({got})", if ok { "OK" } else { "MISMATCH" });
+            row(engine, n)?;
         }
     }
-    {
-        let got = sim(EngineKind::Virtual, 3)?.observable;
-        let ok = got == reference;
-        all_ok &= ok;
-        println!("virtual  n=3: {} ({got})", if ok { "OK" } else { "MISMATCH" });
-    }
+    row(EngineKind::Virtual, 3)?;
     crate::ensure!(all_ok, "validation failed: engines disagree");
-    println!("validation passed: all engines agree on the observation trace");
+    println!("validation passed: all supported engines agree on the observation trace");
     Ok(())
 }
 

@@ -19,7 +19,7 @@ use crate::util::cli::{Args, Spec};
 const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
-        "c", "config", "preset", "out", "sample", "params", "every", "observe",
+        "c", "config", "preset", "out", "sample", "params", "every", "observe", "move-radius",
     ],
     flags: &["paper-scale", "calibrate", "help", "json"],
 };
@@ -48,6 +48,8 @@ COMMON OPTIONS:
   --steps <n> / --agents <n>            workload overrides
   --c <n>                               tasks-per-cycle cap C [6]
   --params <k=v,k2=v2>                  model-specific parameters (registry bag)
+  --move-radius <r>                     schelling: bound relocations to Chebyshev radius r
+                                        (0 = unbounded; >0 makes sharded runs mostly local)
   --config <file.toml>                  sweep config file (experiments/*.toml)
   --preset <fig2|fig3>                  paper-figure sweep preset
   --out <dir>                           output dir for sweep reports [target/figures]

@@ -72,7 +72,7 @@ pub use api::{
     SimulationBuilder,
 };
 pub use error::{Context, Error};
-pub use sched::{ShardableModel, ShardedConfig, ShardedEngine};
+pub use sched::{PartitionHint, PartitionPolicy, ShardableModel, ShardedConfig, ShardedEngine};
 
 /// Crate-wide result type.
 pub type Result<T> = error::Result<T>;

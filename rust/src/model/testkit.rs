@@ -9,6 +9,18 @@ use crate::sim::rng::{Rng, TaskRng};
 use crate::sim::state::SharedSim;
 use crate::util::u32set::U32Set;
 
+/// Worker counts for the determinism/conformance matrices: all of 1/2/4,
+/// or the single count pinned by `ADAPAR_SHARDED_WORKERS` (the CI matrix
+/// jobs set it so each runner covers one count). Shared by
+/// `rust/tests/sharded.rs` and `rust/tests/conformance.rs` so the pinning
+/// contract lives in one place.
+pub fn env_worker_counts() -> Vec<usize> {
+    match std::env::var("ADAPAR_SHARDED_WORKERS") {
+        Ok(v) => vec![v.parse().expect("ADAPAR_SHARDED_WORKERS must be a number")],
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
 /// Random-increment model: each task touches one cell chosen by the
 /// creation stream and applies a non-commutative update derived from the
 /// task stream. Two tasks conflict iff they touch the same cell, so

@@ -19,6 +19,18 @@
 //! disjoint cannot observe each other's agents at all — dependence
 //! checking stays purely structural, and the determinism suite covers the
 //! model like the stationary ones.
+//!
+//! ## Bounded relocation (`move_radius`)
+//!
+//! With the default `move_radius = 0` the destination cell is drawn
+//! uniformly over the whole torus — the classic unbounded dynamics, but
+//! a worst case for the sharded scheduler (almost every footprint spans
+//! shards). Setting `move_radius = r > 0` restricts each relocation
+//! attempt to a destination within Chebyshev radius `r` of the source,
+//! drawn at creation. The task footprint stays the same conservative
+//! two-block union `N⁺(from) ∪ N⁺(to)` — now two nearby 3×3 blocks, so
+//! under a grid shard tiling most attempts are shard-local and the
+//! sharded engine scales on the lattice (DESIGN.md §7a).
 
 use crate::model::{Model, Record, TaskSource};
 use crate::sim::rng::{Rng, TaskRng};
@@ -36,6 +48,9 @@ pub struct SchellingParams {
     pub tolerance: f64,
     /// Relocation attempts (== tasks).
     pub steps: u64,
+    /// Bounded relocation: destinations are drawn within this Chebyshev
+    /// radius of the source (`0` = unbounded, the classic dynamics).
+    pub move_radius: usize,
 }
 
 impl Default for SchellingParams {
@@ -45,6 +60,7 @@ impl Default for SchellingParams {
             agents: 1_800, // ~78% occupancy
             tolerance: 0.4,
             steps: 100_000,
+            move_radius: 0,
         }
     }
 }
@@ -84,6 +100,10 @@ impl SchellingModel {
     pub fn new(params: SchellingParams, init_seed: u64) -> Self {
         let cells = params.side * params.side;
         assert!(params.agents < cells, "need vacancies");
+        assert!(
+            2 * params.move_radius < params.side,
+            "move_radius box must fit the torus (2r < side)"
+        );
         let mut rng = Rng::stream(init_seed, 0x5CE1);
         let mut cell_ids: Vec<u32> = (0..cells as u32).collect();
         rng.shuffle(&mut cell_ids);
@@ -199,6 +219,41 @@ impl SchellingModel {
     }
 }
 
+impl crate::sched::ShardableModel for SchellingModel {
+    /// Footprint blocks are the torus cells; the 4-neighbour lattice is
+    /// enough for partitioning (the diagonal reads only widen footprints,
+    /// never the cut-relevant adjacency structure), and the grid hint
+    /// selects the strip/block tiling.
+    fn sched_topology(&self) -> crate::sim::graph::Csr {
+        crate::sim::graph::lattice2d(self.params.side)
+    }
+
+    /// Exactly the cells [`SchellingRecord`] claims: the closed 3×3
+    /// neighbourhoods of both task cells. `depends` true in either
+    /// absorption direction means the two unions intersect, so the
+    /// footprint contract holds for bounded *and* unbounded relocation
+    /// (the bounded variant merely keeps the two blocks adjacent, hence
+    /// mostly shard-local under the grid tiling). `from` leads as the
+    /// home block (it hosts the moving agent).
+    fn footprint(&self, r: &MoveAttempt, out: &mut Vec<u32>) {
+        out.push(r.from);
+        for base in [r.from, r.to] {
+            for nb in Self::neighborhood(self.params.side, base) {
+                if !out.contains(&nb) {
+                    out.push(nb);
+                }
+            }
+        }
+    }
+
+    fn partition_hint(&self) -> crate::sched::PartitionHint {
+        crate::sched::PartitionHint::Grid {
+            rows: self.params.side,
+            cols: self.params.side,
+        }
+    }
+}
+
 impl crate::api::observe::Observable for SchellingModel {
     /// The segregation order parameter plus the count of satisfied
     /// agents.
@@ -248,11 +303,15 @@ impl Record for SchellingRecord {
     }
 }
 
-/// Source: two uniform random cells per attempt; no state reads.
+/// Source: a uniform source cell plus a destination — uniform over the
+/// whole torus (unbounded), or uniform over the Chebyshev-radius box
+/// around the source (bounded relocation). No state reads either way.
 pub struct SchellingSource {
     rng: Rng,
     remaining: u64,
     cells: usize,
+    side: usize,
+    move_radius: usize,
 }
 
 impl TaskSource for SchellingSource {
@@ -262,10 +321,28 @@ impl TaskSource for SchellingSource {
             return None;
         }
         self.remaining -= 1;
-        let (from, to) = self.rng.distinct_pair(self.cells);
+        if self.move_radius == 0 {
+            let (from, to) = self.rng.distinct_pair(self.cells);
+            return Some(MoveAttempt {
+                from: from as u32,
+                to: to as u32,
+            });
+        }
+        // Bounded: `to` uniform over the (2r+1)² box around `from`,
+        // excluding the centre (one draw, centre index skipped, so the
+        // RNG schedule is a fixed two draws per attempt).
+        let (r, d) = (self.move_radius, 2 * self.move_radius + 1);
+        let from = self.rng.index(self.cells);
+        let mut k = self.rng.index(d * d - 1);
+        if k >= r * d + r {
+            k += 1; // skip the centre offset (0, 0)
+        }
+        let (fr, fc) = (from / self.side, from % self.side);
+        let tr = (fr + self.side + k / d - r) % self.side;
+        let tc = (fc + self.side + k % d - r) % self.side;
         Some(MoveAttempt {
             from: from as u32,
-            to: to as u32,
+            to: (tr * self.side + tc) as u32,
         })
     }
     fn size_hint(&self) -> Option<u64> {
@@ -283,6 +360,8 @@ impl Model for SchellingModel {
             rng: Rng::stream(seed, 0x5E11),
             remaining: self.params.steps,
             cells: self.params.side * self.params.side,
+            side: self.params.side,
+            move_radius: self.params.move_radius,
         }
     }
 
@@ -330,6 +409,7 @@ mod tests {
             agents: 180,
             tolerance: 0.5,
             steps,
+            move_radius: 0,
         }
     }
 
@@ -395,6 +475,78 @@ mod tests {
         assert!(!rec.depends(&MoveAttempt { from: 136, to: 204 }));
         rec.reset();
         assert!(!rec.depends(&MoveAttempt { from: 0, to: 100 }));
+    }
+
+    #[test]
+    fn bounded_source_stays_within_the_radius() {
+        let params = SchellingParams {
+            move_radius: 2,
+            ..small(500)
+        };
+        let m = SchellingModel::new(params, 4);
+        let mut src = m.source(8);
+        let side = params.side as i64;
+        let mut seen = 0;
+        while let Some(t) = src.next_task() {
+            seen += 1;
+            assert_ne!(t.from, t.to, "centre offset must be skipped");
+            let (fr, fc) = (t.from as i64 / side, t.from as i64 % side);
+            let (tr, tc) = (t.to as i64 / side, t.to as i64 % side);
+            let wrap = |d: i64| d.rem_euclid(side).min((-d).rem_euclid(side));
+            assert!(
+                wrap(tr - fr) <= 2 && wrap(tc - fc) <= 2,
+                "{t:?} escapes the radius-2 box"
+            );
+        }
+        assert_eq!(seen, 500);
+    }
+
+    #[test]
+    fn bounded_dynamics_match_bitwise_across_engines() {
+        let params = SchellingParams {
+            move_radius: 2,
+            ..small(20_000)
+        };
+        let seed = 31;
+        let reference = {
+            let m = SchellingModel::new(params, 6);
+            SequentialEngine::new(seed).run(&m);
+            m.check_consistency().unwrap();
+            m.snapshot()
+        };
+        for workers in [2, 4] {
+            let m = SchellingModel::new(params, 6);
+            ParallelEngine::new(ProtocolConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "parallel n={workers}");
+        }
+        for workers in [1, 2, 4] {
+            use crate::sched::{ShardedConfig, ShardedEngine};
+            let m = SchellingModel::new(params, 6);
+            let report = ShardedEngine::new(ShardedConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "sharded n={workers}");
+            m.check_consistency().unwrap();
+            let sched = report.sched.as_ref().unwrap();
+            assert_eq!(sched.partition, "grid");
+            // On this small 16-torus the radius-2 footprints span ~1/4 of
+            // a strip, so only the 2-shard split keeps a clear local
+            // majority (narrower strips cut more boxes).
+            if workers == 2 {
+                assert!(
+                    sched.local_tasks > sched.boundary_tasks,
+                    "radius-2 moves must be mostly shard-local: {sched:?}"
+                );
+            }
+        }
     }
 
     #[test]

@@ -105,9 +105,13 @@ pub struct ProtocolStats {
 pub struct SchedStats {
     /// Number of shards (per-shard chains).
     pub shards: usize,
-    /// Topology edges crossing the *initial* shard assignment (BFS
-    /// partitioner quality metric).
+    /// Topology edges crossing the *initial* shard assignment (the
+    /// partitioner's quality metric).
     pub edge_cut: usize,
+    /// Partitioner that built the initial assignment (`"grid"` for the
+    /// lattice-native tiling, `"bfs"` for the generic edge-cut growth;
+    /// empty on defaulted stats).
+    pub partition: &'static str,
     /// Tasks whose footprint stayed inside one shard.
     pub local_tasks: u64,
     /// Cross-shard tasks routed through the spillover chain.
@@ -141,6 +145,7 @@ impl SchedStats {
         Json::Obj(vec![
             ("shards".into(), Json::from(self.shards)),
             ("edge_cut".into(), Json::from(self.edge_cut)),
+            ("partition".into(), Json::from(self.partition)),
             ("local_tasks".into(), Json::from(self.local_tasks)),
             ("boundary_tasks".into(), Json::from(self.boundary_tasks)),
             ("boundary_ratio".into(), Json::from(self.boundary_ratio())),

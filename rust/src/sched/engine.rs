@@ -3,10 +3,12 @@
 //!
 //! ## Architecture (DESIGN.md §7)
 //!
-//! * The model's footprint topology is partitioned once with the greedy
-//!   BFS edge-cut partitioner into `shards` balanced blocks-of-blocks;
-//!   each shard owns a [`Chain`] and each worker owns the shards
-//!   congruent to its id (one shard per worker by default).
+//! * The model's footprint topology is partitioned once into `shards`
+//!   balanced blocks-of-blocks, dispatching on the model's
+//!   [`PartitionHint`]: lattice models get the strip/block grid tiling,
+//!   everything else the greedy BFS edge-cut partitioner. Each shard
+//!   owns a [`Chain`] and each worker owns the shards congruent to its
+//!   id (one shard per worker by default).
 //! * A mutex-serialized splitter draws tasks from the epoch-gated
 //!   source in canonical order and routes each to its shard chain, or —
 //!   when its footprint crosses shards — to the spillover chain with a
@@ -35,12 +37,24 @@ use crate::api::observe::{ObsProbe, Observer};
 use crate::chain::{Chain, Node, NodeState};
 use crate::model::{Model, Record};
 use crate::protocol::{ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats};
-use crate::sim::graph::{bfs_partition, edge_cut};
+use crate::sim::graph::{bfs_partition, edge_cut, grid_partition, Partition};
 use crate::sim::rng::TaskRng;
 
 use super::cost::{BlockCost, CostProbe};
 use super::rebalance::Rebalancer;
-use super::shard::{Boundary, ShardItem, ShardMap, ShardableModel, Splitter};
+use super::shard::{Boundary, PartitionHint, ShardItem, ShardMap, ShardableModel, Splitter};
+
+/// Which partitioner the engine uses for the initial shard assignment.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PartitionPolicy {
+    /// Follow the model's [`PartitionHint`] (grid tiling on lattices,
+    /// BFS otherwise) — the production default.
+    #[default]
+    Auto,
+    /// Ignore the hint and always BFS-partition — the comparison
+    /// baseline for benches and ablations.
+    ForceGeneral,
+}
 
 /// Sharded-engine workflow parameters.
 #[derive(Clone, Copy, Debug)]
@@ -62,6 +76,8 @@ pub struct ShardedConfig {
     pub rebalance_every: u64,
     /// EWMA smoothing factor for the per-block cost model.
     pub alpha: f64,
+    /// Partitioner selection (see [`PartitionPolicy`]).
+    pub partition: PartitionPolicy,
 }
 
 impl Default for ShardedConfig {
@@ -75,6 +91,7 @@ impl Default for ShardedConfig {
             shards: 0,
             rebalance_every: 8_192,
             alpha: 0.4,
+            partition: PartitionPolicy::Auto,
         }
     }
 }
@@ -129,7 +146,25 @@ impl ShardedEngine {
             self.cfg.shards
         };
         let shards = requested.clamp(1, blocks);
-        let partition = bfs_partition(&topology, shards);
+        // Partitioner dispatch: the model's hint picks the lattice-native
+        // tiling when the footprint blocks form a grid; the policy knob
+        // lets benches force the generic baseline for comparison.
+        let hint = match self.cfg.partition {
+            PartitionPolicy::ForceGeneral => PartitionHint::General,
+            PartitionPolicy::Auto => model.partition_hint(),
+        };
+        let (partition, strategy): (Partition, &'static str) = match hint {
+            PartitionHint::Grid { rows, cols } if rows * cols == blocks => {
+                (grid_partition(rows, cols, shards), "grid")
+            }
+            PartitionHint::Grid { rows, cols } => {
+                // A hint that disagrees with the topology is a model bug:
+                // loud in debug builds, graceful BFS fallback in release.
+                debug_assert_eq!(rows * cols, blocks, "grid hint disagrees with topology");
+                (bfs_partition(&topology, shards), "bfs")
+            }
+            PartitionHint::General => (bfs_partition(&topology, shards), "bfs"),
+        };
         let cut = edge_cut(&topology, &partition);
         let map = ShardMap::from_partition(&partition);
 
@@ -175,6 +210,7 @@ impl ShardedEngine {
         let mut sched = SchedStats {
             shards,
             edge_cut: cut,
+            partition: strategy,
             per_shard_executed: vec![0; shards],
             ..Default::default()
         };
@@ -719,6 +755,9 @@ mod tests {
         /// the first quarter of the ring (skewed-cost knob for rebalance
         /// tests; 0 = uniform).
         hot_work: u32,
+        /// Partitioning strategy advertised to the engine (the dynamics
+        /// are hint-independent, so any hint must yield identical state).
+        hint: PartitionHint,
     }
 
     impl PairModel {
@@ -729,7 +768,15 @@ mod tests {
                 tasks,
                 far_fraction,
                 hot_work,
+                hint: PartitionHint::General,
             }
+        }
+
+        /// Advertise the cells as a `rows × cols` grid.
+        fn grid_hint(mut self, rows: usize, cols: usize) -> Self {
+            assert_eq!(rows * cols, self.n as usize);
+            self.hint = PartitionHint::Grid { rows, cols };
+            self
         }
 
         fn snapshot(&self) -> Vec<u64> {
@@ -837,6 +884,40 @@ mod tests {
                 out.push(r.b);
             }
         }
+        fn partition_hint(&self) -> PartitionHint {
+            self.hint
+        }
+    }
+
+    #[test]
+    fn partition_hint_dispatch_and_policy_override() {
+        let seed = 11;
+        let expected = {
+            let m = PairModel::new(1_000, 64, 0.1, 0);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        // Grid hint: the engine tiles the 8×8 block grid.
+        let m = PairModel::new(1_000, 64, 0.1, 0).grid_hint(8, 8);
+        let report = ShardedEngine::new(cfg(2, seed)).run(&m);
+        assert_eq!(m.snapshot(), expected, "grid-tiled run diverged");
+        assert_eq!(report.sched.as_ref().unwrap().partition, "grid");
+        // ForceGeneral overrides the hint back to BFS.
+        let m = PairModel::new(1_000, 64, 0.1, 0).grid_hint(8, 8);
+        let report = ShardedEngine::new(ShardedConfig {
+            workers: 2,
+            seed,
+            partition: PartitionPolicy::ForceGeneral,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.snapshot(), expected, "forced-BFS run diverged");
+        assert_eq!(report.sched.as_ref().unwrap().partition, "bfs");
+        // No hint → the generic partitioner.
+        let m = PairModel::new(1_000, 64, 0.1, 0);
+        let report = ShardedEngine::new(cfg(2, seed)).run(&m);
+        assert_eq!(m.snapshot(), expected);
+        assert_eq!(report.sched.as_ref().unwrap().partition, "bfs");
     }
 
     #[test]

@@ -27,6 +27,6 @@ pub mod rebalance;
 pub mod shard;
 
 pub use cost::{BlockCost, CostProbe};
-pub use engine::{ShardedConfig, ShardedEngine};
+pub use engine::{PartitionPolicy, ShardedConfig, ShardedEngine};
 pub use rebalance::Rebalancer;
-pub use shard::{Boundary, ShardItem, ShardMap, ShardableModel};
+pub use shard::{Boundary, PartitionHint, ShardItem, ShardMap, ShardableModel};

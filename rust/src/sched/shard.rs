@@ -32,6 +32,26 @@ use crate::chain::Chain;
 use crate::model::{Model, TaskSource};
 use crate::sim::graph::{Csr, Partition};
 
+/// A model's preferred partitioning strategy for its footprint topology,
+/// dispatched on by the sharded engine when building the initial shard
+/// assignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionHint {
+    /// No exploitable structure: the greedy BFS edge-cut partitioner.
+    General,
+    /// The footprint blocks form a `rows × cols` lattice in row-major
+    /// order (`block = r * cols + c`): the engine uses
+    /// [`grid_partition`](crate::sim::graph::grid_partition)'s
+    /// strip/block tiling, whose contiguous rectangular shards cut no
+    /// more lattice edges than BFS growth ever does.
+    Grid {
+        /// Lattice rows.
+        rows: usize,
+        /// Lattice columns.
+        cols: usize,
+    },
+}
+
 /// A model the sharded engine can partition: it exposes an interaction
 /// topology over *footprint blocks* and, per task, the conservative set
 /// of blocks the task may touch.
@@ -55,6 +75,15 @@ pub trait ShardableModel: Model {
     /// the task's *home* block, used for cost attribution by the EWMA
     /// cost model.
     fn footprint(&self, recipe: &Self::Recipe, out: &mut Vec<u32>);
+
+    /// How the engine should partition
+    /// [`sched_topology`](Self::sched_topology) into shards. Lattice
+    /// models
+    /// override this with [`PartitionHint::Grid`]; the default keeps the
+    /// generic BFS edge-cut partitioner.
+    fn partition_hint(&self) -> PartitionHint {
+        PartitionHint::General
+    }
 }
 
 /// A cross-shard task: lives on the spillover chain, with a fence at its

@@ -16,5 +16,6 @@ pub use aggregate::aggregate_graph;
 pub use csr::Csr;
 pub use generators::{complete, erdos_renyi, lattice2d, ring_lattice, watts_strogatz};
 pub use partition::{
-    bfs_partition, contiguous_partition, edge_cut, round_robin_partition, Partition,
+    bfs_partition, contiguous_partition, edge_cut, grid_partition, round_robin_partition,
+    Partition,
 };

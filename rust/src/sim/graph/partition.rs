@@ -3,7 +3,10 @@
 //! is the experiment's task-size proxy `s` and sets the chain granularity.
 //! [`bfs_partition`] additionally serves the sharded scheduler: it
 //! partitions a model's footprint topology into balanced, low-edge-cut
-//! shards (DESIGN.md §7).
+//! shards (DESIGN.md §7). [`grid_partition`] is the lattice-native
+//! alternative: on 2D grids a strip/block tiling has provably lower cuts
+//! than BFS growth and guarantees contiguous rectangular shards
+//! (DESIGN.md §7a).
 
 use super::Csr;
 
@@ -132,6 +135,103 @@ pub fn bfs_partition(g: &Csr, parts: usize) -> Partition {
     Partition::from_assignment(assign)
 }
 
+/// Split `total` into `parts` contiguous spans whose sizes differ by at
+/// most one (larger spans first); every span is non-empty when
+/// `total >= parts`.
+fn split_even(total: usize, parts: usize) -> Vec<usize> {
+    debug_assert!(parts >= 1 && total >= parts);
+    let (base, extra) = (total / parts, total % parts);
+    (0..parts)
+        .map(|i| base + usize::from(i < extra))
+        .collect()
+}
+
+/// Grid-native partition of a `rows × cols` lattice (vertices in
+/// row-major order, `v = r * cols + c`) into `parts` **contiguous
+/// rectangular tiles**: rows are split into `pr` horizontal stripes of
+/// near-equal height, and each stripe's columns into its share of
+/// near-equal-width ranges. Every stripe-count candidate from pure row
+/// strips (`pr = parts`) through blocks to pure column strips
+/// (`pr = 1`) is scored under a **bounded-imbalance rule**: only
+/// candidates whose largest tile is within 25% of the best achievable
+/// largest tile compete (with uniform per-block cost the largest shard
+/// bounds the makespan, and the rebalancer's per-epoch move budget
+/// cannot repair a lopsided initial assignment), and among those the
+/// exact torus edge cut decides (row seams cut `cols` vertical edges
+/// each, column seams cut the stripe height). On lattice topologies
+/// the winner's cut never exceeds the generic [`bfs_partition`]'s
+/// ragged growth (property-tested in `rust/tests/graph.rs`).
+///
+/// Guarantees: exactly `parts` tiles, each a full rectangle (hence
+/// connected under 4-neighbour adjacency, without needing the torus
+/// wrap); stripe heights differ by at most one row, and tile widths
+/// within a stripe differ by at most one column.
+pub fn grid_partition(rows: usize, cols: usize, parts: usize) -> Partition {
+    assert!(rows >= 1 && cols >= 1, "need a non-empty grid");
+    assert!(
+        parts >= 1 && parts <= rows * cols,
+        "need 1 <= parts <= rows*cols"
+    );
+    // Candidate: `pr` stripes, stripe i carrying q[i] tiles. Feasible
+    // when the widest demand fits the columns; parts <= rows*cols
+    // guarantees at least one feasible pr.
+    struct Candidate {
+        q: Vec<usize>,
+        heights: Vec<usize>,
+        cut: usize,
+        max_tile: usize,
+    }
+    let mut cands = Vec::new();
+    for pr in 1..=parts.min(rows) {
+        let q = split_even(parts, pr);
+        if q[0] > cols {
+            continue; // a stripe would need more tiles than columns
+        }
+        let heights = split_even(rows, pr);
+        let mut cut = if pr > 1 { pr * cols } else { 0 };
+        let mut max_tile = 0usize;
+        for (&h, &qi) in heights.iter().zip(&q) {
+            if qi > 1 {
+                cut += qi * h;
+            }
+            max_tile = max_tile.max(h * cols.div_ceil(qi));
+        }
+        cands.push(Candidate {
+            q,
+            heights,
+            cut,
+            max_tile,
+        });
+    }
+    let best_max = cands
+        .iter()
+        .map(|c| c.max_tile)
+        .min()
+        .expect("parts <= rows*cols leaves a feasible stripe count");
+    let Candidate { q, heights, .. } = cands
+        .into_iter()
+        .filter(|c| 4 * c.max_tile <= 5 * best_max)
+        .min_by_key(|c| (c.cut, c.max_tile))
+        .expect("the best-balanced candidate always passes its own bound");
+    let mut assign = vec![0u32; rows * cols];
+    let mut tile = 0u32;
+    let mut r0 = 0usize;
+    for (h, qi) in heights.into_iter().zip(q) {
+        let mut c0 = 0usize;
+        for w in split_even(cols, qi) {
+            for r in r0..r0 + h {
+                for c in c0..c0 + w {
+                    assign[r * cols + c] = tile;
+                }
+            }
+            c0 += w;
+            tile += 1;
+        }
+        r0 += h;
+    }
+    Partition::from_assignment(assign)
+}
+
 /// Number of edges of `g` whose endpoints lie in different blocks of `p` —
 /// the partition-quality metric the BFS partitioner minimizes greedily.
 pub fn edge_cut(g: &Csr, p: &Partition) -> usize {
@@ -219,6 +319,71 @@ mod tests {
         assert_eq!(p.members(0), &[0, 1, 2, 3]);
         assert_eq!(p.members(1), &[4, 5, 6]);
         assert_eq!(p.members(2), &[7, 8, 9]);
+    }
+
+    #[test]
+    fn grid_partition_tiles_are_rectangles() {
+        use crate::sim::graph::lattice2d;
+        let p = grid_partition(8, 8, 4);
+        assert_eq!(p.blocks(), 4);
+        assert_eq!(p.n(), 64);
+        // A ragged 3-stripe decomposition would shave the cut to 30, but
+        // its 24-cell tile is 1.5× the ideal 16 — outside the 25%
+        // imbalance bound — so a perfectly balanced cut-32 tiling wins.
+        for b in 0..4 {
+            assert_eq!(p.members(b).len(), 16, "tiles must be perfectly balanced");
+            let rows: Vec<usize> = p.members(b).iter().map(|&v| v as usize / 8).collect();
+            let cols: Vec<usize> = p.members(b).iter().map(|&v| v as usize % 8).collect();
+            let (r0, r1) = (*rows.iter().min().unwrap(), *rows.iter().max().unwrap());
+            let (c0, c1) = (*cols.iter().min().unwrap(), *cols.iter().max().unwrap());
+            assert_eq!(
+                (r1 - r0 + 1) * (c1 - c0 + 1),
+                p.members(b).len(),
+                "tile {b} is not a full rectangle"
+            );
+        }
+        let g = lattice2d(8);
+        assert_eq!(edge_cut(&g, &p), 32);
+        assert_eq!(p.max_block_size(), 16);
+    }
+
+    #[test]
+    fn grid_partition_prefers_strips_when_blocks_cannot_tile() {
+        use crate::sim::graph::lattice2d;
+        // parts = 3 on 9×9: three 3-row strips (cut 27) beat any ragged
+        // mixed decomposition (>= 28).
+        let p = grid_partition(9, 9, 3);
+        let g = lattice2d(9);
+        assert_eq!(edge_cut(&g, &p), 27);
+        let sizes: Vec<usize> = (0..3).map(|b| p.members(b).len()).collect();
+        assert_eq!(sizes, vec![27, 27, 27]);
+    }
+
+    #[test]
+    fn grid_partition_handles_rectangles_and_extremes() {
+        let p = grid_partition(4, 10, 5);
+        assert_eq!(p.blocks(), 5);
+        assert_eq!(p.n(), 40);
+        let whole = grid_partition(6, 6, 1);
+        assert_eq!(whole.blocks(), 1);
+        let atoms = grid_partition(3, 4, 12);
+        assert_eq!(atoms.blocks(), 12);
+        assert_eq!(atoms.max_block_size(), 1);
+        // parts larger than both side lengths still tiles (ragged stripes).
+        let p = grid_partition(4, 4, 7);
+        assert_eq!(p.blocks(), 7);
+        assert!(p.max_block_size() <= 4);
+    }
+
+    #[test]
+    fn split_even_is_balanced_and_total() {
+        for (total, parts) in [(10, 3), (8, 8), (7, 2), (100, 7)] {
+            let spans = split_even(total, parts);
+            assert_eq!(spans.len(), parts);
+            assert_eq!(spans.iter().sum::<usize>(), total);
+            let (lo, hi) = (spans.iter().min().unwrap(), spans.iter().max().unwrap());
+            assert!(hi - lo <= 1 && *lo >= 1, "{spans:?}");
+        }
     }
 
     #[test]

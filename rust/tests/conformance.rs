@@ -1,0 +1,164 @@
+//! Cross-engine conformance matrix (ISSUE 4): every model in the
+//! registry × every engine it supports × worker counts × seeds must
+//! produce the **same epoch observation trace** as the sequential
+//! engine — frames are taken only at drained quiescent boundaries, so
+//! trace equality is the facade-level statement of byte-identical state
+//! evolution (DESIGN.md §5a).
+//!
+//! The matrix is driven through `registry::models()` and
+//! `ModelInfo::supports`, so any future model registration is covered
+//! automatically (asserted below by registering one at runtime). It
+//! subsumes — without replacing — the per-model assertions in
+//! `rust/tests/sharded.rs` and `rust/tests/observe.rs`.
+//!
+//! CI runs this suite once per worker count (`ADAPAR_SHARDED_WORKERS`
+//! pins the count for the matrix job); locally, all of 1/2/4 run.
+
+use adapar::api::registry::{self, Params};
+use adapar::model::testkit::{env_worker_counts as worker_counts, IncModel};
+use adapar::{EngineKind, ModelInfo, ObsValue, Runnable, SimOutcome, Simulation};
+
+const SEEDS: [u64; 2] = [11, 29];
+
+/// Shrunk per-model workload: conformance is about equality, not timing,
+/// so cap the registry defaults at a few thousand tasks. Works for any
+/// future registration too (everything derives from its `ModelInfo`).
+fn workload(info: &ModelInfo) -> (usize, u64, usize) {
+    let agents = info.default_agents.clamp(1, 360);
+    let steps = info.validate_steps.clamp(1, 4_000);
+    let size = info.default_sizes.first().copied().unwrap_or(1).min(25);
+    (agents, steps, size)
+}
+
+fn run(
+    info: &ModelInfo,
+    engine: EngineKind,
+    workers: usize,
+    seed: u64,
+    every: u64,
+    params: &Params,
+) -> SimOutcome {
+    let (agents, steps, size) = workload(info);
+    Simulation::builder()
+        .model(info.name.clone())
+        .engine(engine)
+        .workers(workers)
+        .agents(agents)
+        .steps(steps)
+        .size(size)
+        .seed(seed)
+        .params(params.clone())
+        .every(every)
+        .run()
+        .unwrap_or_else(|e| panic!("{}/{engine} n={workers} seed={seed}: {e}", info.name))
+}
+
+/// Parameter variants per model: the registry defaults for everyone,
+/// plus the bounded-relocation Schelling the sharded engine is built
+/// for (ISSUE 4's acceptance workload).
+fn variants(info: &ModelInfo) -> Vec<(&'static str, Params)> {
+    let mut out = vec![("defaults", Params::new())];
+    if info.name == "schelling" {
+        let mut bounded = Params::new();
+        bounded.set("move_radius", 2i64);
+        out.push(("move_radius=2", bounded));
+    }
+    out
+}
+
+/// The matrix body for one model: sequential reference trace (at a
+/// cadence yielding several frames) vs every supported engine × worker
+/// count × seed.
+fn assert_model_conforms(info: &ModelInfo) {
+    for (label, params) in variants(info) {
+        for &seed in &SEEDS {
+            // Size the cadence from an unobserved sequential run so the
+            // trace has ~4 frames regardless of the model's task shape.
+            let total = run(info, EngineKind::Sequential, 1, seed, 0, &params)
+                .report
+                .chain
+                .tasks_executed;
+            assert!(total > 0, "{}: empty workload", info.name);
+            let every = (total / 4).max(1);
+            let reference = run(info, EngineKind::Sequential, 1, seed, every, &params).observable;
+            assert!(
+                reference.len() > 2,
+                "{} [{label}]: cadence {every} must yield a multi-frame trace",
+                info.name
+            );
+            for &engine in &EngineKind::ALL {
+                if engine == EngineKind::Sequential || !info.supports(engine) {
+                    continue;
+                }
+                for &workers in &worker_counts() {
+                    let got = run(info, engine, workers, seed, every, &params).observable;
+                    assert_eq!(
+                        got, reference,
+                        "{} [{label}] {engine} n={workers} seed={seed}: trace diverged",
+                        info.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_registered_model_conforms_on_every_supported_engine() {
+    let infos = registry::models();
+    assert!(infos.len() >= 5, "bundled models must be registered");
+    for info in &infos {
+        assert_model_conforms(info);
+    }
+}
+
+#[test]
+fn sharded_lattice_models_are_covered_by_the_matrix() {
+    // ISSUE 4's acceptance: ising and bounded-relocation schelling run
+    // sharded and byte-identical. The matrix above covers them because
+    // the registry says so — pin that fact here so a capability
+    // regression fails loudly instead of silently shrinking the matrix.
+    for name in ["ising", "schelling"] {
+        let info = registry::info(name).unwrap();
+        assert!(
+            info.supports(EngineKind::Sharded),
+            "{name} must be sharded-capable"
+        );
+        assert!(info.engines().contains(&"sharded"), "{name}");
+    }
+}
+
+#[test]
+fn runtime_registrations_enter_the_matrix() {
+    // A model registered at runtime — sharding capability included —
+    // must be covered by exactly the same machinery, proving the matrix
+    // extends to future models with zero test edits.
+    registry::register(
+        ModelInfo::new("conformance-probe", "runtime-registered matrix probe")
+            .agents(24, 24)
+            .steps(600, 600)
+            .validate_steps(600)
+            .sharded(),
+        |ctx| {
+            Ok(Runnable::new(
+                "conformance-probe",
+                IncModel::new(ctx.steps.max(1), 24),
+            )
+            .observed(|m| {
+                vec![(
+                    "cells".to_string(),
+                    ObsValue::Series(m.cells_snapshot().iter().map(|&c| c as f64).collect()),
+                )]
+            })
+            .with_sharding()
+            .boxed())
+        },
+    )
+    .expect("fresh name registers");
+    let info = registry::models()
+        .into_iter()
+        .find(|i| i.name == "conformance-probe")
+        .expect("registry-driven iteration sees the new model");
+    assert!(info.supports(EngineKind::Sharded));
+    assert_model_conforms(&info);
+}

@@ -5,7 +5,8 @@
 
 use adapar::sim::graph::{
     aggregate_graph, bfs_partition, complete, contiguous_partition, edge_cut, erdos_renyi,
-    lattice2d, ring_lattice, round_robin_partition, watts_strogatz, Csr, Partition,
+    grid_partition, lattice2d, ring_lattice, round_robin_partition, watts_strogatz, Csr,
+    Partition,
 };
 use adapar::sim::rng::Rng;
 use adapar::util::prop::{check, ranged_f64, ranged_usize, Config, Gen, PairOf};
@@ -194,6 +195,106 @@ fn bfs_partition_cut_quality_on_local_topologies() {
             let bfs = bfs_partition(&g, k);
             let rr = round_robin_partition(n, k);
             edge_cut(&g, &bfs) <= edge_cut(&g, &rr)
+        },
+    );
+}
+
+/// The row range, column range and size of one grid-partition shard, in
+/// unwrapped grid coordinates.
+fn shard_box(p: &Partition, cols: usize, b: usize) -> (usize, usize, usize, usize, usize) {
+    let rows_of: Vec<usize> = p.members(b).iter().map(|&v| v as usize / cols).collect();
+    let cols_of: Vec<usize> = p.members(b).iter().map(|&v| v as usize % cols).collect();
+    (
+        *rows_of.iter().min().unwrap(),
+        *rows_of.iter().max().unwrap(),
+        *cols_of.iter().min().unwrap(),
+        *cols_of.iter().max().unwrap(),
+        p.members(b).len(),
+    )
+}
+
+#[test]
+fn grid_partition_shards_are_contiguous_rectangles() {
+    // Every shard must be a *full* rectangle in unwrapped grid
+    // coordinates — which implies 4-neighbour contiguity without even
+    // using the torus wrap (ISSUE 4's contiguity guarantee).
+    check(
+        "grid shards are full rectangles",
+        Config {
+            cases: 48,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(4, 24), ranged_usize(1, 8)),
+        |&(side, parts)| {
+            let p = grid_partition(side, side, parts);
+            assert_valid_partition(&p, side * side);
+            assert_eq!(p.blocks(), parts);
+            for b in 0..parts {
+                let (r0, r1, c0, c1, size) = shard_box(&p, side, b);
+                assert_eq!(
+                    (r1 - r0 + 1) * (c1 - c0 + 1),
+                    size,
+                    "side={side} parts={parts}: shard {b} is not a full rectangle"
+                );
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn grid_partition_balances_within_stripes() {
+    // Stripe heights differ by at most one row, and the widths of the
+    // shards sharing a row stripe differ by at most one column — the
+    // "balance within one row/column stripe" contract.
+    check(
+        "grid stripe balance",
+        Config {
+            cases: 48,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(4, 24), ranged_usize(1, 8)),
+        |&(side, parts)| {
+            let p = grid_partition(side, side, parts);
+            let boxes: Vec<_> = (0..parts).map(|b| shard_box(&p, side, b)).collect();
+            let heights: Vec<usize> = boxes.iter().map(|&(r0, r1, ..)| r1 - r0 + 1).collect();
+            assert!(
+                heights.iter().max().unwrap() - heights.iter().min().unwrap() <= 1,
+                "side={side} parts={parts}: stripe heights {heights:?}"
+            );
+            for (i, &(r0, r1, c0, c1, _)) in boxes.iter().enumerate() {
+                for &(s0, s1, d0, d1, _) in &boxes[i + 1..] {
+                    if (r0, r1) == (s0, s1) {
+                        let (w, v) = (c1 - c0 + 1, d1 - d0 + 1);
+                        assert!(
+                            w.abs_diff(v) <= 1,
+                            "side={side} parts={parts}: widths {w} vs {v} in one stripe"
+                        );
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn grid_partition_cut_never_exceeds_bfs_on_lattices() {
+    // The lattice-native tiling must never lose to the generic BFS
+    // growth on the topology it specializes — ISSUE 4's acceptance
+    // property, over varied side lengths and shard counts.
+    check(
+        "grid cut <= bfs cut on lattice2d",
+        Config {
+            cases: 48,
+            ..Default::default()
+        },
+        PairOf(ranged_usize(4, 24), ranged_usize(1, 8)),
+        |&(side, parts)| {
+            let g = lattice2d(side);
+            let grid = grid_partition(side, side, parts);
+            let bfs = bfs_partition(&g, parts);
+            edge_cut(&g, &grid) <= edge_cut(&g, &bfs)
         },
     );
 }

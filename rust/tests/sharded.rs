@@ -1,31 +1,38 @@
-//! Acceptance suite for the sharded adaptive scheduler (ISSUE 3):
-//! the `sharded` engine must produce **byte-identical final states and
-//! epoch observation traces** to the sequential engine for SIR, Axelrod
-//! and voter at fixed seeds, across worker counts.
+//! Acceptance suite for the sharded adaptive scheduler (ISSUE 3 +
+//! ISSUE 4's lattice models): the `sharded` engine must produce
+//! **byte-identical final states and epoch observation traces** to the
+//! sequential engine for SIR, Axelrod, voter, Ising and
+//! bounded-relocation Schelling at fixed seeds, across worker counts.
+//! The registry-driven matrix in `rust/tests/conformance.rs` extends
+//! the same property to every registered model × engine combination.
 //!
 //! CI runs this suite once per worker count (`ADAPAR_SHARDED_WORKERS`
 //! pins the count for the matrix job); locally, all of 1/2/4 run.
 
+use adapar::api::registry::{self, Params};
+use adapar::model::testkit::{env_worker_counts as worker_counts, IncModel};
 use adapar::models::axelrod::{AxelrodModel, AxelrodParams};
 use adapar::models::sir::{SirModel, SirParams};
 use adapar::models::voter::{VoterModel, VoterParams};
 use adapar::protocol::SequentialEngine;
 use adapar::sim::graph::ring_lattice;
-use adapar::{EngineKind, ShardedConfig, ShardedEngine, Simulation};
-
-/// Worker counts under test: all of 1/2/4, or the single count pinned by
-/// `ADAPAR_SHARDED_WORKERS` (the CI matrix).
-fn worker_counts() -> Vec<usize> {
-    match std::env::var("ADAPAR_SHARDED_WORKERS") {
-        Ok(v) => vec![v.parse().expect("ADAPAR_SHARDED_WORKERS must be a number")],
-        Err(_) => vec![1, 2, 4],
-    }
-}
+use adapar::{EngineKind, ModelInfo, Runnable, ShardedConfig, ShardedEngine, Simulation};
 
 /// Facade-level trace comparison: run `model` observed at `every` on the
 /// sequential engine, then assert the sharded engine reproduces the
 /// trace exactly at each worker count.
 fn assert_traces_match(model: &str, agents: usize, steps: u64, size: usize, every: u64) {
+    assert_traces_match_with(model, agents, steps, size, every, Params::new());
+}
+
+fn assert_traces_match_with(
+    model: &str,
+    agents: usize,
+    steps: u64,
+    size: usize,
+    every: u64,
+    params: Params,
+) {
     let run = |engine: EngineKind, workers: usize| {
         Simulation::builder()
             .model(model)
@@ -35,6 +42,7 @@ fn assert_traces_match(model: &str, agents: usize, steps: u64, size: usize, ever
             .steps(steps)
             .size(size)
             .seed(17)
+            .params(params.clone())
             .every(every)
             .run()
             .unwrap_or_else(|e| panic!("{model}/{engine}: {e}"))
@@ -66,6 +74,20 @@ fn axelrod_trace_is_byte_identical_to_sequential() {
 #[test]
 fn voter_trace_is_byte_identical_to_sequential() {
     assert_traces_match("voter", 300, 8_000, 1, 2_000);
+}
+
+#[test]
+fn ising_trace_is_byte_identical_to_sequential() {
+    // 2D lattice: the grid hint routes the engine to the strip/block
+    // tiling (ISSUE 4's lattice-native sharding).
+    assert_traces_match("ising", 256, 6_000, 1, 1_500);
+}
+
+#[test]
+fn bounded_schelling_trace_is_byte_identical_to_sequential() {
+    let mut params = Params::new();
+    params.set("move_radius", 2i64);
+    assert_traces_match_with("schelling", 300, 8_000, 1, 2_000, params);
 }
 
 #[test]
@@ -184,8 +206,16 @@ fn sharded_report_carries_sched_telemetry_through_the_facade() {
 
 #[test]
 fn sharded_refuses_models_without_a_topology() {
+    // Every bundled model is shard-capable now, so register a test
+    // double that deliberately omits `with_sharding` — the capability
+    // gate must still refuse it with a clear message.
+    registry::register(
+        ModelInfo::new("no-topology", "test double without a footprint topology"),
+        |ctx| Ok(Runnable::new("no-topology", IncModel::new(ctx.steps.max(1), 8)).boxed()),
+    )
+    .expect("fresh name registers");
     let err = Simulation::builder()
-        .model("ising")
+        .model("no-topology")
         .engine(EngineKind::Sharded)
         .agents(100)
         .steps(50)
