@@ -176,7 +176,7 @@ fn main() -> adapar::Result<()> {
         workers: 4,
         tasks_per_cycle: 6,
         seed,
-        collect_timing: false,
+        ..Default::default()
     })
     .run(&world);
 

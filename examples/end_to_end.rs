@@ -48,7 +48,7 @@ fn main() -> adapar::Result<()> {
                 workers: n,
                 tasks_per_cycle: 6,
                 seed,
-                collect_timing: false,
+                ..Default::default()
             })
             .run(&m);
             assert_eq!(m.snapshot(), reference);

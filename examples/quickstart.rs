@@ -94,7 +94,7 @@ fn main() -> adapar::Result<()> {
         workers: 4,
         tasks_per_cycle: 6, // the paper's C
         seed,
-        collect_timing: false,
+        ..Default::default()
     })
     .run(&direct);
     assert_eq!(reference.snapshot(), direct.snapshot());

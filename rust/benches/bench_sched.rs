@@ -6,7 +6,7 @@
 //! writing its own block, with tunable per-block busy work. *Uniform*
 //! gives every block the same cost; *skewed* makes the first quarter of
 //! the ring 8× heavier — the heterogeneous-cost regime the sharded
-//! engine's EWMA rebalancer (DESIGN.md §7) is built for: the hot blocks
+//! engine's EWMA rebalancer (DESIGN.md §8) is built for: the hot blocks
 //! start concentrated in one shard and migrate out at epoch boundaries.
 //!
 //! Emits `BENCH_sched.json` into the invocation directory (repo root

@@ -44,7 +44,7 @@ fn main() -> adapar::Result<()> {
     println!("{}", figure_pivot(&res).to_markdown());
     write_report(&res, std::path::Path::new("target/bench-data"), "fig2_virtual")?;
 
-    // Acceptance criteria from DESIGN.md §8.
+    // Acceptance criteria from DESIGN.md §9.
     let mut ok = true;
     for &f in &cfg.sizes {
         let t1 = res.point(f, 1).unwrap().mean_s;
@@ -75,7 +75,7 @@ fn main() -> adapar::Result<()> {
                 workers: 1,
                 tasks_per_cycle: 6,
                 seed,
-                collect_timing: false,
+                ..Default::default()
             })
             .run(&m)
         });

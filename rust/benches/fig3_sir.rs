@@ -2,7 +2,7 @@
 //! time T vs task-size proxy s (agents per subset), one curve per worker
 //! count n ∈ {1..5}.
 //!
-//! Expected shape (paper §4.2 / DESIGN.md §8): sharp T decrease with s at
+//! Expected shape (paper §4.2 / DESIGN.md §9): sharp T decrease with s at
 //! small s (protocol overhead per agent ∝ 1/s), then stabilization; in the
 //! plateau T decreases with n, saturating around n = 4; at very small s
 //! extra workers may *hurt*.
@@ -49,7 +49,7 @@ fn main() -> adapar::Result<()> {
         );
     }
 
-    // Acceptance criteria (DESIGN.md §8).
+    // Acceptance criteria (DESIGN.md §9).
     let mut ok = true;
     let fine = res.point(10, 3).unwrap().mean_s;
     let plateau = res.point(200, 3).unwrap().mean_s;

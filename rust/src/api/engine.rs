@@ -109,6 +109,7 @@ impl Engine for VirtualEngine {
         let cfg = ProtocolConfig {
             workers: self.workers,
             tasks_per_cycle: self.tasks_per_cycle,
+            batch: 1, // the DES models unbatched creation
             seed: self.seed,
             collect_timing: false,
         };
@@ -190,12 +191,14 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
-/// Build a boxed engine for a kind and workflow parameters. `cost` is
-/// only consulted by the virtual testbed.
+/// Build a boxed engine for a kind and workflow parameters. `batch` is
+/// the chain engines' creation/routing batch size `B`; `cost` is only
+/// consulted by the virtual testbed.
 pub fn engine_for(
     kind: EngineKind,
     workers: usize,
     tasks_per_cycle: u32,
+    batch: u32,
     seed: u64,
     cost: CostModel,
 ) -> Box<dyn Engine> {
@@ -204,6 +207,7 @@ pub fn engine_for(
         EngineKind::Parallel => Box::new(ParallelEngine::new(ProtocolConfig {
             workers,
             tasks_per_cycle,
+            batch,
             seed,
             collect_timing: false,
         })),
@@ -211,6 +215,7 @@ pub fn engine_for(
         EngineKind::Sharded => Box::new(ShardedEngine::new(ShardedConfig {
             workers,
             tasks_per_cycle,
+            batch,
             seed,
             ..Default::default()
         })),

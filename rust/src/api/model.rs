@@ -358,7 +358,7 @@ mod tests {
                 workers: 2,
                 tasks_per_cycle: 6,
                 seed: 3,
-                collect_timing: false,
+                ..Default::default()
             },
             None,
         );
@@ -368,7 +368,7 @@ mod tests {
                 workers: 3,
                 tasks_per_cycle: 6,
                 seed: 3,
-                collect_timing: false,
+                ..Default::default()
             },
             &CostModel::default(),
             None,
@@ -433,7 +433,7 @@ mod tests {
                 workers,
                 tasks_per_cycle: 6,
                 seed: 5,
-                collect_timing: false,
+                ..Default::default()
             };
             let got = trace(&|m, o| {
                 m.run_parallel(&cfg, Some(o));

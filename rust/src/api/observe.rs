@@ -21,7 +21,7 @@
 //!   every `N` canonical tasks by reporting (temporary) exhaustion, which
 //!   is how the chain engines reach quiescence before snapshotting.
 //!
-//! ## Determinism contract (DESIGN.md §5a)
+//! ## Determinism contract (DESIGN.md §6a)
 //!
 //! A frame at task count `t` is only ever taken when the executed tasks
 //! are exactly the canonical prefix `0..t` and no task is in flight. The

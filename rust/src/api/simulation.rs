@@ -60,6 +60,10 @@ pub struct Simulation {
     pub workers: usize,
     /// Per-cycle creation cap `C`.
     pub tasks_per_cycle: u32,
+    /// Creation/routing batch size `B` (tasks linked per tail-lock
+    /// acquisition on the chain engines; `1` = classic unbatched
+    /// protocol). Trace-invariant: any value yields the same results.
+    pub batch: u32,
     /// Simulation seed.
     pub seed: u64,
     /// Agent count `N` (0 = model default).
@@ -85,6 +89,7 @@ impl Default for Simulation {
             engine: EngineKind::Parallel,
             workers: ProtocolConfig::default().workers,
             tasks_per_cycle: 6,
+            batch: ProtocolConfig::default().batch,
             seed: 1,
             agents: 0,
             steps: 0,
@@ -130,11 +135,13 @@ impl Simulation {
         };
         crate::ensure!(self.workers >= 1, "workers must be >= 1");
         crate::ensure!(self.tasks_per_cycle >= 1, "tasks_per_cycle must be >= 1");
+        crate::ensure!(self.batch >= 1, "batch must be >= 1");
         let model = registry::build(&self.model, &ctx)?;
         let engine = engine_for(
             self.engine,
             self.workers,
             self.tasks_per_cycle,
+            self.batch,
             self.seed,
             self.cost.unwrap_or_default(),
         );
@@ -202,6 +209,13 @@ impl SimulationBuilder {
     /// Per-cycle creation cap `C`.
     pub fn tasks_per_cycle(mut self, c: u32) -> Self {
         self.sim.tasks_per_cycle = c;
+        self
+    }
+
+    /// Creation/routing batch size `B` (`1` = classic unbatched
+    /// protocol; results are identical at any value).
+    pub fn batch(mut self, b: u32) -> Self {
+        self.sim.batch = b;
         self
     }
 
@@ -352,6 +366,34 @@ mod tests {
                 other => panic!("expected census counts, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn batch_flows_from_builder_to_report_and_is_result_invariant() {
+        let run = |batch| {
+            Simulation::builder()
+                .model("voter")
+                .engine(EngineKind::Parallel)
+                .workers(2)
+                .agents(120)
+                .steps(1_500)
+                .seed(4)
+                .batch(batch)
+                .run()
+                .unwrap()
+        };
+        let b1 = run(1);
+        let b64 = run(64);
+        assert_eq!(b1.report.chain.batch, 1);
+        assert_eq!(b64.report.chain.batch, 64);
+        assert_eq!(
+            b1.observable, b64.observable,
+            "batching must not change results"
+        );
+        assert!(
+            b1.report.to_json().render().contains("\"batch\":1"),
+            "batch must surface in --json reports"
+        );
     }
 
     #[test]

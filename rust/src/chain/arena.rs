@@ -1,0 +1,322 @@
+//! The node arena: a chunked slab of node slots addressed by
+//! generation-tagged [`Handle`]s, with an intrusive lock-free free list
+//! so steady-state execution allocates nothing (DESIGN.md §3).
+//!
+//! Design constraints:
+//!
+//! * **Stable addresses.** Workers hold `&Slot` references across
+//!   blocking operations, so growth must never move existing slots: the
+//!   slab is a sequence of doubling chunks (`OnceLock`-published, so
+//!   readers pay one atomic load), not a reallocating `Vec`.
+//! * **Single allocator, single releaser.** Allocation is serialized by
+//!   the chain's creation discipline (tail visitor slot, or the
+//!   splitter/erase lock) and release by the erase lock — but the two
+//!   race *each other*, so the free list is a tagged Treiber stack
+//!   (the tag makes the pop CAS immune to index reuse).
+//! * **Stale handles are detectable.** Every slot carries a generation
+//!   counter bumped at erase; a [`Handle`] pairs the slot index with the
+//!   generation observed at link time, so any later dereference can be
+//!   validated (the chain layer does this on arrival and in slot-free
+//!   walks — see DESIGN.md §3 for why this kills the recycling ABA).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::node::Slot;
+
+/// Maximum number of slab chunks. Chunk 0 holds the pre-sized capacity
+/// `c0`; chunk `k ≥ 1` holds `c0 << (k - 1)` slots, so the total
+/// addressable capacity is `c0 << (MAX_CHUNKS - 1)` — far beyond the
+/// `u32` index space for any real pre-size.
+const MAX_CHUNKS: usize = 27;
+
+/// A generation-tagged reference to an arena slot.
+///
+/// Handles are plain data: copying one neither pins nor leaks anything.
+/// A handle is *live* while its generation matches the slot's; erasing
+/// the node bumps the slot generation, invalidating every outstanding
+/// handle to that incarnation at once.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct Handle {
+    pub(crate) idx: u32,
+    pub(crate) gen: u32,
+}
+
+impl Handle {
+    /// The null handle (unlinked ends).
+    pub const NONE: Handle = Handle {
+        idx: u32::MAX,
+        gen: 0,
+    };
+
+    /// Whether this is the null handle.
+    #[inline]
+    pub fn is_none(self) -> bool {
+        self.idx == u32::MAX
+    }
+
+    /// The slot index (diagnostics / tests; slot reuse means two handles
+    /// may share an index while differing in generation).
+    #[inline]
+    pub fn index(self) -> u32 {
+        self.idx
+    }
+
+    /// The generation tag observed when the handle was created.
+    #[inline]
+    pub fn generation(self) -> u32 {
+        self.gen
+    }
+}
+
+/// The slab. See the module docs for the concurrency contract.
+pub struct Arena<R> {
+    /// `log2` of chunk 0's capacity.
+    c0_shift: u32,
+    chunks: [OnceLock<Box<[Slot<R>]>>; MAX_CHUNKS],
+    /// Bump pointer over never-used slots (allocator-only).
+    next_fresh: AtomicU32,
+    /// Treiber head: `(tag << 32) | idx`, idx `u32::MAX` = empty.
+    free: AtomicU64,
+    /// Slots currently backed by initialized chunks.
+    capacity: AtomicU32,
+    /// Slots currently allocated (live incarnations, incl. sentinels).
+    in_use: AtomicU32,
+    /// High-water mark of `in_use`.
+    high_water: AtomicU32,
+    /// Allocations served from the free list (recycle counter).
+    recycled: AtomicU64,
+}
+
+impl<R> std::fmt::Debug for Arena<R> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Arena")
+            .field("capacity", &self.capacity())
+            .field("in_use", &self.in_use.load(Ordering::Relaxed))
+            .field("high_water", &self.high_water())
+            .field("recycled", &self.recycled())
+            .finish()
+    }
+}
+
+impl<R> Arena<R> {
+    /// An arena whose first chunk holds at least `cap_hint` slots
+    /// (clamped to a sane range and rounded up to a power of two). The
+    /// first chunk is allocated eagerly, so a well-hinted run never
+    /// grows.
+    pub fn with_capacity(cap_hint: usize) -> Self {
+        let c0 = cap_hint.clamp(64, 1 << 22).next_power_of_two();
+        let arena = Arena {
+            c0_shift: c0.trailing_zeros(),
+            chunks: std::array::from_fn(|_| OnceLock::new()),
+            next_fresh: AtomicU32::new(0),
+            free: AtomicU64::new(u32::MAX as u64),
+            capacity: AtomicU32::new(0),
+            in_use: AtomicU32::new(0),
+            high_water: AtomicU32::new(0),
+            recycled: AtomicU64::new(0),
+        };
+        arena.init_chunk(0);
+        arena
+    }
+
+    /// Locate `idx` in the chunked slab: chunk 0 spans `[0, c0)`, chunk
+    /// `k ≥ 1` spans `[c0 << (k-1), c0 << k)` — so the chunk index falls
+    /// out of `floor(log2(idx))`.
+    #[inline]
+    fn locate(&self, idx: u32) -> (usize, usize) {
+        debug_assert_ne!(idx, u32::MAX, "dereferencing the null handle");
+        if idx < (1u32 << self.c0_shift) {
+            (0, idx as usize)
+        } else {
+            let top = 31 - idx.leading_zeros(); // floor(log2(idx)) ≥ c0_shift
+            let chunk = (top - self.c0_shift + 1) as usize;
+            (chunk, (idx - (1u32 << top)) as usize)
+        }
+    }
+
+    /// Number of slots chunk `c` holds.
+    fn chunk_len(&self, c: usize) -> usize {
+        if c == 0 {
+            1usize << self.c0_shift
+        } else {
+            1usize << (self.c0_shift as usize + c - 1)
+        }
+    }
+
+    fn init_chunk(&self, c: usize) {
+        assert!(c < MAX_CHUNKS, "arena exhausted the u32 index space");
+        self.chunks[c].get_or_init(|| {
+            let n = self.chunk_len(c);
+            self.capacity.fetch_add(n as u32, Ordering::Relaxed);
+            (0..n).map(|_| Slot::new()).collect()
+        });
+    }
+
+    /// The slot behind `idx`. The chunk is always initialized before any
+    /// handle with that index escapes the allocator.
+    #[inline]
+    pub(crate) fn slot(&self, idx: u32) -> &Slot<R> {
+        let (c, off) = self.locate(idx);
+        let chunk = self.chunks[c]
+            .get()
+            .expect("handle into an uninitialized arena chunk");
+        &chunk[off]
+    }
+
+    /// Take a slot: recycled from the free list when possible, fresh
+    /// otherwise (growing the slab by a doubling chunk if needed).
+    ///
+    /// # Concurrency contract
+    /// At most one thread allocates at a time (the chain's creation
+    /// discipline); allocation may race [`release`](Arena::release).
+    pub(crate) fn alloc(&self) -> u32 {
+        let idx = match self.pop_free() {
+            Some(idx) => {
+                self.recycled.fetch_add(1, Ordering::Relaxed);
+                idx
+            }
+            None => {
+                let idx = self.next_fresh.load(Ordering::Relaxed);
+                if idx >= self.capacity.load(Ordering::Relaxed) {
+                    let (c, _) = self.locate(idx);
+                    self.init_chunk(c);
+                }
+                self.next_fresh.store(idx + 1, Ordering::Relaxed);
+                idx
+            }
+        };
+        let used = self.in_use.fetch_add(1, Ordering::Relaxed) + 1;
+        // Check-before-RMW: the high-water mark rarely moves.
+        if used > self.high_water.load(Ordering::Relaxed) {
+            self.high_water.fetch_max(used, Ordering::Relaxed);
+        }
+        idx
+    }
+
+    /// Return a slot to the free list.
+    ///
+    /// # Concurrency contract
+    /// At most one thread releases at a time (the erase lock); release
+    /// may race [`alloc`](Arena::alloc).
+    pub(crate) fn release(&self, idx: u32) {
+        self.in_use.fetch_sub(1, Ordering::Relaxed);
+        self.push_free(idx);
+    }
+
+    fn pop_free(&self) -> Option<u32> {
+        let mut head = self.free.load(Ordering::Acquire);
+        loop {
+            let idx = head as u32;
+            if idx == u32::MAX {
+                return None;
+            }
+            let next = self.slot(idx).free_next.load(Ordering::Relaxed);
+            let tagged = (head >> 32).wrapping_add(1) & 0xFFFF_FFFF;
+            let tagged = (tagged << 32) | next as u64;
+            match self.free.compare_exchange_weak(
+                head,
+                tagged,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return Some(idx),
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    fn push_free(&self, idx: u32) {
+        let mut head = self.free.load(Ordering::Acquire);
+        loop {
+            self.slot(idx).free_next.store(head as u32, Ordering::Relaxed);
+            let tagged = (head >> 32).wrapping_add(1) & 0xFFFF_FFFF;
+            let tagged = (tagged << 32) | idx as u64;
+            match self.free.compare_exchange_weak(
+                head,
+                tagged,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            ) {
+                Ok(_) => return,
+                Err(h) => head = h,
+            }
+        }
+    }
+
+    /// Slots currently backed by allocated chunks.
+    pub fn capacity(&self) -> usize {
+        self.capacity.load(Ordering::Relaxed) as usize
+    }
+
+    /// High-water mark of simultaneously live slots (incl. sentinels).
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::Relaxed) as usize
+    }
+
+    /// Allocations served by recycling a freed slot.
+    pub fn recycled(&self) -> u64 {
+        self.recycled.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locate_covers_chunk_boundaries() {
+        let a: Arena<u32> = Arena::with_capacity(64);
+        assert_eq!(a.locate(0), (0, 0));
+        assert_eq!(a.locate(63), (0, 63));
+        assert_eq!(a.locate(64), (1, 0)); // chunk 1: [64, 128)
+        assert_eq!(a.locate(127), (1, 63));
+        assert_eq!(a.locate(128), (2, 0)); // chunk 2: [128, 256)
+        assert_eq!(a.locate(255), (2, 127));
+        assert_eq!(a.locate(256), (3, 0));
+    }
+
+    #[test]
+    fn alloc_is_dense_then_recycles() {
+        let a: Arena<u32> = Arena::with_capacity(8); // clamps to 64
+        assert_eq!(a.capacity(), 64);
+        let i0 = a.alloc();
+        let i1 = a.alloc();
+        assert_eq!((i0, i1), (0, 1));
+        a.release(i0);
+        assert_eq!(a.alloc(), 0, "freed slot is reused before fresh ones");
+        assert_eq!(a.recycled(), 1);
+        assert_eq!(a.high_water(), 2);
+    }
+
+    #[test]
+    fn growth_past_the_first_chunk() {
+        let a: Arena<u32> = Arena::with_capacity(64);
+        for expect in 0..200u32 {
+            assert_eq!(a.alloc(), expect);
+        }
+        assert!(a.capacity() >= 200);
+        assert_eq!(a.high_water(), 200);
+        // Every allocated slot is addressable.
+        for idx in 0..200u32 {
+            let _ = a.slot(idx);
+        }
+    }
+
+    #[test]
+    fn free_list_is_lifo_and_tagged() {
+        let a: Arena<u32> = Arena::with_capacity(64);
+        let i: Vec<u32> = (0..4).map(|_| a.alloc()).collect();
+        a.release(i[1]);
+        a.release(i[3]);
+        assert_eq!(a.alloc(), i[3], "LIFO reuse");
+        assert_eq!(a.alloc(), i[1]);
+        assert_eq!(a.recycled(), 2);
+    }
+
+    #[test]
+    fn null_handle_is_none() {
+        assert!(Handle::NONE.is_none());
+        assert!(!Handle { idx: 0, gen: 0 }.is_none());
+    }
+}

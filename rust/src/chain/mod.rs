@@ -1,25 +1,36 @@
 //! The task chain (paper §3.3): a bidirectional linked list of tasks with
 //! head/tail sentinels, traversed concurrently by workers under a
-//! lock-coupling discipline.
+//! lock-coupling discipline — stored in an index-based node **arena**
+//! with generation-tagged handles, slot recycling and batched task
+//! creation (DESIGN.md §3).
 //!
 //! Lock inventory (mapping to the paper's locks):
 //!
 //! | Paper | Here |
 //! |---|---|
-//! | "dedicated mutex lock attached to each task" (waiting of one worker behind another) | [`node::Occupancy`] — the per-node *visitor slot* |
+//! | "dedicated mutex lock attached to each task" (waiting of one worker behind another) | [`node::Occupancy`] — the per-slot *visitor slot* |
 //! | "enter-lock" (task creation when the chain is empty) | the **head sentinel's** visitor slot: entering workers serialize on it, and an empty chain is just `head ↔ tail`, so creation-from-empty uses the ordinary creation path |
-//! | "erase-lock" (at most one erase at a time) | [`list::Chain::erase_lock`] |
+//! | "erase-lock" (at most one erase at a time) | [`list::Chain::unlink`]'s internal erase lock |
 //!
-//! Additional, implementation-level locks: each node carries a tiny `links`
-//! mutex guarding its prev/next pointers (the paper's C++ can rely on
-//! word-sized pointer stores; Rust's memory model requires the accesses to
-//! be synchronized). Link locks are *leaf* locks — never held while
+//! Additional, implementation-level locks: each slot carries a tiny link
+//! mutex guarding its prev/next handles (the paper's C++ can rely on
+//! word-sized pointer stores; Rust's memory model requires the accesses
+//! to be synchronized). Link locks are *leaf* locks — never held while
 //! blocking on anything else — so they cannot participate in deadlock
-//! cycles. See `protocol::worker` for the full traversal state machine and
-//! DESIGN.md §6 for the consistency argument.
+//! cycles.
+//!
+//! Nodes are addressed by [`Handle`]s — a `u32` slot index plus the
+//! generation tag observed at link time. Erasing a node bumps the slot's
+//! generation and returns it to the chain's free list, so steady-state
+//! execution allocates nothing; every dereference that cannot pin the
+//! node validates the tag first, which is what makes recycling safe (the
+//! ABA argument in DESIGN.md §3). See `protocol::worker` for the full
+//! traversal state machine and DESIGN.md §6 for the consistency argument.
 
+pub mod arena;
 pub mod list;
 pub mod node;
 
+pub use arena::Handle;
 pub use list::Chain;
-pub use node::{Node, NodeState};
+pub use node::{NodeKind, NodeState};

@@ -1,8 +1,19 @@
-//! Chain nodes: sentinels and task nodes, with their two per-node
-//! synchronization devices (visitor slot + link lock).
+//! Chain node storage: the per-slot state machine (lifecycle state,
+//! generation tag, visitor slot, link lock, inline recipe cell).
+//!
+//! Since the arena refactor (DESIGN.md §3) a "node" is not an owned
+//! allocation but a **slot** in the chain's [`Arena`](super::arena::Arena),
+//! addressed by a generation-tagged [`Handle`](super::arena::Handle).
+//! The slot carries the same two synchronization devices as the old
+//! `Arc`-based node — the visitor slot and the link lock — plus the
+//! generation counter that makes recycling safe (see the safety notes on
+//! the crate-private `Slot` type below).
 
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::cell::UnsafeCell;
+use std::sync::atomic::{AtomicU32, AtomicU8, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use super::arena::Handle;
 
 /// Lifecycle of a task node. Sentinels stay `Pending` forever.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -13,13 +24,15 @@ pub enum NodeState {
     /// A worker is executing the task (workers may pass it, absorbing its
     /// recipe).
     Executing = 1,
-    /// Executed and unlinked; any visitor that reaches it must retry from
-    /// its previous position.
+    /// Executed and unlinked; its slot is on the free list. Visitors
+    /// detect this via the generation tag, not this state (a recycled
+    /// slot is `Pending` again) — the state exists for the brief
+    /// erased-but-not-yet-reused window and for assertions.
     Erased = 2,
 }
 
 impl NodeState {
-    fn from_u8(v: u8) -> NodeState {
+    pub(crate) fn from_u8(v: u8) -> NodeState {
         match v {
             0 => NodeState::Pending,
             1 => NodeState::Executing,
@@ -38,6 +51,10 @@ impl NodeState {
 /// worker located at a node blocks others from arriving; a worker
 /// *executing* a node has released the slot (paper: workers may move past a
 /// task that is being executed).
+///
+/// The device belongs to the **slot**, not the node incarnation: it is
+/// never reset on recycle. A worker that acquires the slot of a recycled
+/// node detects the staleness by the generation tag and releases again.
 ///
 /// Perf (EXPERIMENTS.md §Perf #1): slot operations happen on every
 /// traversal step, so the common uncontended case is a single CAS; the
@@ -104,7 +121,9 @@ impl Occupancy {
     }
 }
 
-/// Node kind. The chain always contains exactly one `Head` and one `Tail`.
+/// Node kind. The chain always contains exactly one `Head` and one `Tail`;
+/// they live in the arena's first two slots, so the kind is a property of
+/// the slot index and needs no storage.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum NodeKind {
     /// Start sentinel ("start of the chain"): never executed, never erased.
@@ -115,128 +134,105 @@ pub enum NodeKind {
     Task,
 }
 
-/// prev/next pointers, guarded by the node's link lock.
-#[derive(Debug)]
-pub struct Links<R> {
-    /// Weak to avoid `prev` cycles; upgraded only under the erase lock.
-    pub prev: Weak<Node<R>>,
-    /// Strong forward pointer; `None` only for the tail sentinel and for
-    /// erased (unlinked) nodes.
-    pub next: Option<Arc<Node<R>>>,
+/// prev/next handles, guarded by the slot's link lock. [`Handle::NONE`]
+/// marks an unlinked end (erased slots, the head's prev, the tail's next).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Links {
+    pub(crate) prev: Handle,
+    pub(crate) next: Handle,
 }
 
-/// A chain node. `R` is the model's recipe type.
+/// The fields of a slot that belong to one node *incarnation*: written at
+/// allocation (before publication), cleared at erase. See the safety
+/// argument on [`Slot`].
 #[derive(Debug)]
-pub struct Node<R> {
-    /// Total order along the chain: head = 0, task i = i + 1, tail =
-    /// `u64::MAX`. Insertion happens only at the tail, so chain position
-    /// order and `order` agree; link locks are always taken in ascending
-    /// `order`, which makes lock ordering trivially acyclic.
-    pub(crate) order: u64,
-    /// Task sequence number (creation index, 0-based); meaningless for
+pub(crate) struct Meta<R> {
+    /// Task sequence number (creation index, 0-based); `u64::MAX` for
     /// sentinels. Drives the per-task RNG stream.
     pub(crate) seq: u64,
-    pub(crate) kind: NodeKind,
-    state: AtomicU8,
-    pub(crate) visitor: Occupancy,
-    pub(crate) links: Mutex<Links<R>>,
-    /// Immutable after creation; `None` for sentinels.
+    /// The recipe; `None` for sentinels and erased slots.
     pub(crate) recipe: Option<R>,
 }
 
-impl<R> Node<R> {
-    pub(crate) fn sentinel(kind: NodeKind, order: u64) -> Arc<Self> {
-        Arc::new(Node {
-            order,
-            seq: u64::MAX,
-            kind,
+/// One arena slot. `R` is the model's recipe type.
+///
+/// # Safety argument (recipe/meta access under recycling)
+///
+/// `meta` sits in an `UnsafeCell` and is mutated at exactly two points,
+/// both while holding the slot's `links` mutex:
+///
+/// 1. **allocation** ([`Chain::fill_tail`](super::Chain::fill_tail) /
+///    [`append_tail`](super::Chain::append_tail)): the slot is off the
+///    free list and unpublished, so no handle to *this incarnation*
+///    exists yet;
+/// 2. **erase** ([`Chain::unlink`](super::Chain::unlink)): the erasing
+///    worker holds the visitor slot (so no located worker can be
+///    borrowing `meta`) and bumps `gen` under the same lock.
+///
+/// Readers fall into two classes:
+///
+/// * **pinned readers** hold the visitor slot, or have claimed execution
+///   (`Executing` state — only the claimant can erase). The incarnation
+///   cannot be erased under them, so `meta` is stable and the unguarded
+///   read ([`Chain::recipe`](super::Chain::recipe)) is race-free. The
+///   happens-before edge to the allocation writes runs through the link
+///   mutex of the node that published the handle.
+/// * **validated readers** take the slot's `links` mutex and compare
+///   `gen` against their handle's tag
+///   ([`Chain::with_recipe`](super::Chain::with_recipe)): a match under
+///   the lock proves the incarnation is still live, and the lock excludes
+///   both mutation points for the duration of the read.
+pub(crate) struct Slot<R> {
+    /// Incarnation counter, bumped at erase (under `links`). A handle is
+    /// valid iff its tag equals this value.
+    pub(crate) gen: AtomicU32,
+    /// Lifecycle state of the current incarnation.
+    pub(crate) state: AtomicU8,
+    /// The visitor slot (location mutual exclusion).
+    pub(crate) visitor: Occupancy,
+    /// prev/next of the current incarnation.
+    pub(crate) links: Mutex<Links>,
+    /// Intrusive free-list link (valid only while the slot is free).
+    pub(crate) free_next: AtomicU32,
+    /// Incarnation data; see the safety argument above.
+    pub(crate) meta: UnsafeCell<Meta<R>>,
+}
+
+// SAFETY: all shared access to `meta` follows the discipline documented
+// on the struct; every other field is a sync primitive or an atomic.
+unsafe impl<R: Send> Send for Slot<R> {}
+unsafe impl<R: Send + Sync> Sync for Slot<R> {}
+
+impl<R> Slot<R> {
+    /// A fresh, free slot (generation 0, no incarnation).
+    pub(crate) fn new() -> Self {
+        Slot {
+            gen: AtomicU32::new(0),
             state: AtomicU8::new(NodeState::Pending as u8),
             visitor: Occupancy::default(),
             links: Mutex::new(Links {
-                prev: Weak::new(),
-                next: None,
+                prev: Handle::NONE,
+                next: Handle::NONE,
             }),
-            recipe: None,
-        })
-    }
-
-    pub(crate) fn task(seq: u64, recipe: R) -> Arc<Self> {
-        Self::task_linked(seq, recipe, Weak::new(), None)
-    }
-
-    /// Build a task node with its links pre-set — the node is not yet
-    /// published, so no lock is needed (EXPERIMENTS.md §Perf #2).
-    pub(crate) fn task_linked(
-        seq: u64,
-        recipe: R,
-        prev: Weak<Node<R>>,
-        next: Option<Arc<Node<R>>>,
-    ) -> Arc<Self> {
-        Arc::new(Node {
-            order: seq + 1,
-            seq,
-            kind: NodeKind::Task,
-            state: AtomicU8::new(NodeState::Pending as u8),
-            visitor: Occupancy::default(),
-            links: Mutex::new(Links { prev, next }),
-            recipe: Some(recipe),
-        })
+            free_next: AtomicU32::new(u32::MAX),
+            meta: UnsafeCell::new(Meta {
+                seq: u64::MAX,
+                recipe: None,
+            }),
+        }
     }
 
     /// Current lifecycle state.
     #[inline]
-    pub fn state(&self) -> NodeState {
+    pub(crate) fn load_state(&self) -> NodeState {
         NodeState::from_u8(self.state.load(Ordering::Acquire))
-    }
-
-    /// Transition `Pending → Executing`. Caller must hold the visitor slot
-    /// (only the located worker may claim execution), which serializes the
-    /// transition.
-    #[inline]
-    pub(crate) fn begin_execution(&self) {
-        debug_assert_eq!(self.kind, NodeKind::Task);
-        let prev = self.state.swap(NodeState::Executing as u8, Ordering::AcqRel);
-        debug_assert_eq!(prev, NodeState::Pending as u8, "double execution");
-    }
-
-    /// Transition to `Erased`. Caller must hold the visitor slot and the
-    /// erase lock.
-    #[inline]
-    pub(crate) fn mark_erased(&self) {
-        let prev = self.state.swap(NodeState::Erased as u8, Ordering::AcqRel);
-        debug_assert_eq!(prev, NodeState::Executing as u8, "erase before execute");
-    }
-
-    /// Node kind.
-    #[inline]
-    pub fn kind(&self) -> NodeKind {
-        self.kind
-    }
-
-    /// Task sequence number (panics on sentinels).
-    #[inline]
-    pub fn seq(&self) -> u64 {
-        debug_assert_eq!(self.kind, NodeKind::Task);
-        self.seq
-    }
-
-    /// The recipe (panics on sentinels). Immutable after creation, so this
-    /// is safe to read while another worker executes the task.
-    #[inline]
-    pub fn recipe(&self) -> &R {
-        self.recipe.as_ref().expect("sentinel has no recipe")
-    }
-
-    /// Snapshot of the forward pointer.
-    #[inline]
-    pub(crate) fn next(&self) -> Option<Arc<Node<R>>> {
-        self.links.lock().unwrap().next.clone()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
     use std::time::Duration;
 
     #[test]
@@ -263,23 +259,11 @@ mod tests {
     }
 
     #[test]
-    fn node_state_transitions() {
-        let n = Node::task(0, 42u32);
-        assert_eq!(n.state(), NodeState::Pending);
-        n.visitor.acquire();
-        n.begin_execution();
-        assert_eq!(n.state(), NodeState::Executing);
-        n.mark_erased();
-        assert_eq!(n.state(), NodeState::Erased);
-        assert_eq!(*n.recipe(), 42);
-        assert_eq!(n.seq(), 0);
-    }
-
-    #[test]
-    fn sentinel_orders() {
-        let h = Node::<u32>::sentinel(NodeKind::Head, 0);
-        let t = Node::<u32>::sentinel(NodeKind::Tail, u64::MAX);
-        assert!(h.order < Node::task(0, 1u32).order);
-        assert!(Node::task(1_000_000, 1u32).order < t.order);
+    fn fresh_slot_shape() {
+        let s: Slot<u32> = Slot::new();
+        assert_eq!(s.load_state(), NodeState::Pending);
+        assert_eq!(s.gen.load(Ordering::Relaxed), 0);
+        let l = s.links.lock().unwrap();
+        assert!(l.prev.is_none() && l.next.is_none());
     }
 }

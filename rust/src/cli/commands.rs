@@ -66,6 +66,7 @@ fn sweep_config_from(args: &Args) -> Result<SweepConfig> {
     cfg.workers = args.get_list::<usize>("workers", &cfg.workers)?;
     cfg.seeds = args.get_list::<u64>("seeds", &cfg.seeds)?;
     cfg.tasks_per_cycle = args.get_parse("c", cfg.tasks_per_cycle)?;
+    cfg.batch = args.get_parse("batch", cfg.batch)?;
     cfg.agents = args.get_parse("agents", cfg.agents)?;
     cfg.steps = args.get_parse("steps", cfg.steps)?;
     if args.has_flag("paper-scale") {
@@ -162,6 +163,7 @@ pub fn run(args: &Args) -> Result<()> {
         .engine(engine)
         .workers(workers)
         .tasks_per_cycle(cfg.tasks_per_cycle)
+        .batch(cfg.batch)
         .seed(seed)
         .agents(cfg.agents)
         .steps(cfg.steps)
@@ -189,6 +191,17 @@ pub fn run(args: &Args) -> Result<()> {
         out.report.totals.cycles,
         out.report.chain.max_chain_len
     );
+    if out.report.chain.tail_locks > 0 {
+        println!(
+            "chain: batch={} tail_locks={} tasks/lock={:.1} arena={}/{} slots ({} recycled)",
+            out.report.chain.batch,
+            out.report.chain.tail_locks,
+            out.report.chain.tasks_per_tail_lock(),
+            out.report.chain.arena_high_water,
+            out.report.chain.arena_capacity,
+            out.report.chain.arena_recycled
+        );
+    }
     if out.report.per_worker.len() > 1 {
         let loads: Vec<String> = out
             .report
@@ -322,6 +335,7 @@ pub fn validate(args: &Args) -> Result<()> {
             .engine(engine)
             .workers(workers)
             .tasks_per_cycle(cfg.tasks_per_cycle)
+            .batch(cfg.batch)
             .seed(seed)
             .agents(cfg.agents)
             .steps(cfg.steps)

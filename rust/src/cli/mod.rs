@@ -19,7 +19,8 @@ use crate::util::cli::{Args, Spec};
 const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
-        "c", "config", "preset", "out", "sample", "params", "every", "observe", "move-radius",
+        "c", "batch", "config", "preset", "out", "sample", "params", "every", "observe",
+        "move-radius",
     ],
     flags: &["paper-scale", "calibrate", "help", "json"],
 };
@@ -47,6 +48,9 @@ COMMON OPTIONS:
   --seeds <list> / --seed <s>           simulation seeds
   --steps <n> / --agents <n>            workload overrides
   --c <n>                               tasks-per-cycle cap C [6]
+  --batch <n>                           creation batch size B: tasks linked per tail-lock
+                                        acquisition, clamped to the cycle's remaining C
+                                        (1 = classic protocol; results identical at any B)
   --params <k=v,k2=v2>                  model-specific parameters (registry bag)
   --move-radius <r>                     schelling: bound relocations to Chebyshev radius r
                                         (0 = unbounded; >0 makes sharded runs mostly local)

@@ -32,6 +32,10 @@ pub struct SweepConfig {
     pub seeds: Vec<u64>,
     /// `C` — max creations per worker cycle (paper: 6, effect negligible).
     pub tasks_per_cycle: u32,
+    /// `B` — creation/routing batch size on the chain engines (tasks
+    /// linked per tail-lock acquisition; results are identical at any
+    /// value, only lock amortization changes).
+    pub batch: u32,
     /// Number of agents `N` (0 = per-scale model default).
     pub agents: usize,
     /// Steps (0 = per-scale model default).
@@ -54,6 +58,7 @@ impl Default for SweepConfig {
             workers: vec![1, 2, 3, 4, 5],
             seeds: vec![1, 2, 3, 4, 5],
             tasks_per_cycle: 6,
+            batch: crate::protocol::DEFAULT_BATCH,
             agents: 0,
             steps: 0,
             paper_scale: false,
@@ -142,6 +147,9 @@ impl SweepConfig {
         if let Some(v) = root.get("tasks_per_cycle") {
             cfg.tasks_per_cycle = v.as_int().context("tasks_per_cycle")? as u32;
         }
+        if let Some(v) = root.get("batch") {
+            cfg.batch = v.as_int().context("batch")? as u32;
+        }
         if let Some(v) = root.get("agents") {
             cfg.agents = v.as_int().context("agents")? as usize;
         }
@@ -172,6 +180,9 @@ impl SweepConfig {
         }
         if self.tasks_per_cycle == 0 {
             crate::bail!("tasks_per_cycle must be >= 1");
+        }
+        if self.batch == 0 {
+            crate::bail!("batch must be >= 1");
         }
         let info = registry::info(&self.model)?;
         if self.engine == EngineKind::Stepwise && !info.has_sync_form {

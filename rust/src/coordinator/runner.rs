@@ -49,6 +49,7 @@ pub fn simulation_for(
         .engine(cfg.engine)
         .workers(workers)
         .tasks_per_cycle(cfg.tasks_per_cycle)
+        .batch(cfg.batch)
         .seed(seed)
         .agents(cfg.agents)
         .steps(cfg.steps)

@@ -10,7 +10,10 @@
 //! depends on:
 //!
 //! * [`chain`] — the task chain: a lock-coupled doubly-linked list with
-//!   head/tail sentinels, per-task occupancy + link locks, and an erase lock.
+//!   head/tail sentinels, per-task occupancy + link locks, and an erase
+//!   lock — stored in an index-based node arena with generation-tagged
+//!   handles, slot recycling (steady-state execution allocates nothing)
+//!   and batched task creation (`--batch`).
 //! * [`model`] — the model plug-in interface: [`model::Recipe`],
 //!   [`model::Record`], [`model::TaskSource`] (the paper's *recipe* /
 //!   *record* concepts, §3.5).

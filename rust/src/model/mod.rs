@@ -71,10 +71,41 @@ pub trait TaskSource: Send {
     /// define the canonical (sequential) task order.
     fn next_task(&mut self) -> Option<Self::Recipe>;
 
+    /// Create up to `max` tasks in one call, pushing them onto `buf` in
+    /// canonical order; returns how many were produced. The chain
+    /// engines use this to link a whole batch under a single tail-lock
+    /// acquisition ([`Chain::fill_tail`](crate::chain::Chain::fill_tail)).
+    ///
+    /// Producing fewer than `max` means the source — or, for epoch-gated
+    /// sources, the current epoch's budget — is exhausted *for now*;
+    /// batches therefore never cross an epoch boundary.
+    ///
+    /// The provided implementation drains [`next_task`]
+    /// (every bundled source uses it); overrides must be observationally
+    /// identical — same tasks, same order, same internal RNG draws — so
+    /// that the canonical task order is independent of the batch size
+    /// (DESIGN.md §3).
+    ///
+    /// [`next_task`]: TaskSource::next_task
+    fn next_batch(&mut self, buf: &mut Vec<Self::Recipe>, max: usize) -> usize {
+        let mut produced = 0;
+        while produced < max {
+            match self.next_task() {
+                Some(recipe) => {
+                    buf.push(recipe);
+                    produced += 1;
+                }
+                None => break,
+            }
+        }
+        produced
+    }
+
     /// Optional hint: number of tasks this source will still produce, if
     /// known. The observation pipeline uses it to pre-size epoch traces
-    /// and to drive the CLI progress line; callers must degrade
-    /// gracefully on `None`.
+    /// and the CLI progress line; the chain engines use it (together
+    /// with `DynModel::task_count_hint`) to pre-size the node arena.
+    /// Callers must degrade gracefully on `None`.
     fn size_hint(&self) -> Option<u64> {
         None
     }
@@ -214,6 +245,23 @@ mod tests {
         }
         assert_eq!(seq, 10);
         assert_eq!(m.cells.into_inner(), vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn next_batch_drains_in_canonical_order() {
+        let m = CounterModel {
+            cells: crate::sim::state::SharedSim::new(vec![0; 4]),
+            tasks: 10,
+        };
+        let mut src = m.source(0);
+        let mut buf = Vec::new();
+        assert_eq!(src.next_batch(&mut buf, 4), 4);
+        assert_eq!(src.next_batch(&mut buf, 4), 4);
+        assert_eq!(src.next_batch(&mut buf, 4), 2, "short batch at exhaustion");
+        assert_eq!(src.next_batch(&mut buf, 4), 0);
+        let cells: Vec<u32> = buf.iter().map(|r| r.cell).collect();
+        let want: Vec<u32> = (0..10u32).map(|i| i % 4).collect();
+        assert_eq!(cells, want, "batching must preserve the canonical order");
     }
 
     #[test]

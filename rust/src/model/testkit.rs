@@ -21,6 +21,18 @@ pub fn env_worker_counts() -> Vec<usize> {
     }
 }
 
+/// Creation batch sizes `B` for the conformance matrix: both extremes
+/// (`1` = the classic unbatched protocol, `64` = deep batching), or the
+/// single size pinned by `ADAPAR_BATCH` (the CI matrix jobs set it so
+/// each runner covers one size). Shared by `rust/tests/conformance.rs`
+/// and `rust/tests/chain.rs`.
+pub fn env_batches() -> Vec<u32> {
+    match std::env::var("ADAPAR_BATCH") {
+        Ok(v) => vec![v.parse().expect("ADAPAR_BATCH must be a number")],
+        Err(_) => vec![1, 64],
+    }
+}
+
 /// Random-increment model: each task touches one cell chosen by the
 /// creation stream and applies a non-commutative update derived from the
 /// task stream. Two tasks conflict iff they touch the same cell, so

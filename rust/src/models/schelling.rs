@@ -30,7 +30,7 @@
 //! drawn at creation. The task footprint stays the same conservative
 //! two-block union `N⁺(from) ∪ N⁺(to)` — now two nearby 3×3 blocks, so
 //! under a grid shard tiling most attempts are shard-local and the
-//! sharded engine scales on the lattice (DESIGN.md §7a).
+//! sharded engine scales on the lattice (DESIGN.md §8a).
 
 use crate::model::{Model, Record, TaskSource};
 use crate::sim::rng::{Rng, TaskRng};

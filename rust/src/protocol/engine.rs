@@ -6,10 +6,20 @@ use std::time::Instant;
 
 use crate::api::observe::{EpochGate, ObsProbe, Observer};
 use crate::chain::Chain;
-use crate::model::Model;
+use crate::model::{Model, TaskSource};
 
 use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 use super::worker::{worker_loop, RunCtx};
+
+/// Default creation batch size `B` (tasks linked per tail-lock
+/// acquisition; the effective batch is additionally clamped by the
+/// cycle's remaining `C` allowance — at the paper-default `C = 6` that
+/// makes 6 the default effective batch). Tuned so the tail lock stops
+/// being the creation bottleneck at high worker counts while a batch
+/// still stays well below a cache page of recipes; `--batch 1`
+/// restores the classic one-task-per-acquisition protocol byte for
+/// byte.
+pub const DEFAULT_BATCH: u32 = 16;
 
 /// Workflow parameters (§3.4: "workflow parameters are, notably, n, the
 /// number of workers, and C, the maximum number of created tasks per
@@ -19,7 +29,15 @@ pub struct ProtocolConfig {
     /// `n` — number of workers (one dedicated thread each).
     pub workers: usize,
     /// `C` — maximum tasks created per worker per cycle (paper default 6).
+    /// Exact: batches are clamped to the cycle's remaining allowance,
+    /// so `C` bounds per-cycle chain growth regardless of `B`.
     pub tasks_per_cycle: u32,
+    /// `B` — maximum tasks linked per tail-lock acquisition
+    /// ([`Chain::fill_tail`]); the effective batch is `min(B, remaining
+    /// C)`, so deep batching needs `C ≥ B`. Any value yields the same
+    /// canonical task order and the same final state; only lock
+    /// amortization changes (DESIGN.md §3).
+    pub batch: u32,
     /// Simulation seed (drives creation and per-task execution streams).
     pub seed: u64,
     /// Whether to time each task execution (small overhead; off for
@@ -34,9 +52,30 @@ impl Default for ProtocolConfig {
                 .map(std::num::NonZeroUsize::get)
                 .unwrap_or(2),
             tasks_per_cycle: 6,
+            batch: DEFAULT_BATCH,
             seed: 0,
             collect_timing: false,
         }
+    }
+}
+
+/// Arena pre-size for a chain run: the slab only ever needs to hold the
+/// *live* tasks (erased slots recycle), which the creation discipline
+/// bounds at roughly `workers · max(C, B)` — padded ×4 for bursts — and
+/// the source's [`size_hint`](TaskSource::size_hint) bounds from above
+/// (a 100-task run should not reserve thousands of slots). A low
+/// estimate costs amortized chunk growth, never correctness.
+pub(crate) fn chain_capacity(
+    hint: Option<u64>,
+    workers: usize,
+    tasks_per_cycle: u32,
+    batch: u32,
+) -> usize {
+    let per_worker = tasks_per_cycle.max(batch).max(1) as usize;
+    let live_estimate = workers.max(1).saturating_mul(per_worker).saturating_mul(4);
+    match hint {
+        Some(total) => total.min(live_estimate as u64) as usize,
+        None => live_estimate,
     }
 }
 
@@ -50,6 +89,7 @@ impl ParallelEngine {
     pub fn new(cfg: ProtocolConfig) -> Self {
         assert!(cfg.workers >= 1, "need at least one worker");
         assert!(cfg.tasks_per_cycle >= 1, "C must be at least 1");
+        assert!(cfg.batch >= 1, "B must be at least 1");
         Self { cfg }
     }
 
@@ -68,7 +108,7 @@ impl ParallelEngine {
     /// tasks the engine stops task creation, lets the workers **drain the
     /// chain to quiescence**, records a frame via `probe`, and resumes —
     /// so the trace is bit-identical to the sequential engine's at the
-    /// same seed (DESIGN.md §5a). Snapshot time is included in the
+    /// same seed (DESIGN.md §6a). Snapshot time is included in the
     /// reported wall time.
     pub fn run_observed<M: Model>(
         &self,
@@ -92,14 +132,23 @@ impl ParallelEngine {
             Some((_, o)) => o.gate_cadence(),
             None => u64::MAX,
         };
-        let chain: Chain<M::Recipe> = Chain::new();
-        let source = Mutex::new(EpochGate::new(model.source(self.cfg.seed)));
+        let inner_source = model.source(self.cfg.seed);
+        // Pre-size the node arena from the source's own forecast — the
+        // previously launcher-only `size_hint` now shapes the hot path.
+        let chain: Chain<M::Recipe> = Chain::with_capacity(chain_capacity(
+            inner_source.size_hint(),
+            self.cfg.workers,
+            self.cfg.tasks_per_cycle,
+            self.cfg.batch,
+        ));
+        let source = Mutex::new(EpochGate::new(inner_source));
         let ctx = RunCtx {
             chain: &chain,
             model,
             source: &source,
             seed: self.cfg.seed,
             tasks_per_cycle: self.cfg.tasks_per_cycle,
+            batch: self.cfg.batch,
             collect_timing: self.cfg.collect_timing,
         };
         let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
@@ -164,6 +213,11 @@ impl ParallelEngine {
                 tasks_created: chain.created(),
                 tasks_executed: chain.erased(),
                 max_chain_len: chain.max_len(),
+                tail_locks: chain.tail_locks(),
+                batch: self.cfg.batch,
+                arena_capacity: chain.arena_capacity(),
+                arena_high_water: chain.arena_high_water(),
+                arena_recycled: chain.arena_recycled(),
             },
             sched: None,
         }
@@ -240,6 +294,14 @@ mod tests {
         assert!(report.chain.max_chain_len >= 1);
         assert!(report.totals.cycles >= 300, "each execution ends a cycle");
         assert!(report.summary().contains("parallel"));
+        assert_eq!(report.chain.batch, DEFAULT_BATCH);
+        assert!(report.chain.tail_locks > 0);
+        assert!(
+            report.chain.tail_locks <= report.chain.tasks_created,
+            "each creation lock links at least one task"
+        );
+        assert!(report.chain.arena_capacity >= report.chain.arena_high_water);
+        assert!(report.chain.arena_high_water >= 2, "sentinels always live");
     }
 
     #[test]
@@ -255,6 +317,76 @@ mod tests {
             .run(&model);
             assert_eq!(report.totals.executed, 400, "C={c}");
         }
+    }
+
+    #[test]
+    fn every_batch_size_is_state_identical() {
+        let seed = 17;
+        let expected = run_sequentially(&fresh(1500, 8), seed);
+        for batch in [1, 2, 7, 16, 64] {
+            for workers in [1, 2, 4] {
+                let model = fresh(1500, 8);
+                let report = ParallelEngine::new(ProtocolConfig {
+                    workers,
+                    tasks_per_cycle: 64, // C ≥ B: every batch size binds
+                    batch,
+                    seed,
+                    ..Default::default()
+                })
+                .run(&model);
+                assert_eq!(
+                    model.cells_snapshot(),
+                    expected,
+                    "B={batch} n={workers} diverged"
+                );
+                assert_eq!(report.chain.batch, batch);
+            }
+        }
+    }
+
+    #[test]
+    fn batching_amortizes_tail_locks() {
+        let locks_at = |batch: u32| {
+            let model = fresh(4_000, 64);
+            let report = ParallelEngine::new(ProtocolConfig {
+                workers: 1,
+                tasks_per_cycle: 64,
+                batch,
+                seed: 5,
+                ..Default::default()
+            })
+            .run(&model);
+            assert_eq!(report.totals.executed, 4_000);
+            report.chain.tail_locks
+        };
+        let b1 = locks_at(1);
+        let b64 = locks_at(64);
+        assert!(
+            b64 * 10 <= b1,
+            "B=64 must take ≥10× fewer creation locks than B=1: {b64} vs {b1}"
+        );
+    }
+
+    #[test]
+    fn arena_recycles_instead_of_growing() {
+        let model = fresh(10_000, 16);
+        let report = ParallelEngine::new(ProtocolConfig {
+            workers: 2,
+            seed: 9,
+            ..Default::default()
+        })
+        .run(&model);
+        assert_eq!(report.totals.executed, 10_000);
+        assert!(
+            report.chain.arena_capacity < 10_000,
+            "slab must stay far below one slot per task: {}",
+            report.chain.arena_capacity
+        );
+        assert!(
+            report.chain.arena_recycled > 9_000,
+            "steady state must recycle: {}",
+            report.chain.arena_recycled
+        );
     }
 
     #[test]
@@ -275,5 +407,14 @@ mod tests {
         // Note: skipped/passed counters are timing-dependent (they require
         // true interleaving, which a single-core host provides only via
         // preemption), so the assertion here is determinism, not counters.
+    }
+
+    #[test]
+    fn capacity_heuristic_respects_hint_and_floor() {
+        assert_eq!(chain_capacity(Some(10), 4, 6, 16), 10, "small run, small slab");
+        let est = chain_capacity(None, 4, 6, 16);
+        assert_eq!(est, 4 * 16 * 4);
+        assert_eq!(chain_capacity(Some(1 << 40), 4, 6, 16), est, "hint caps at live estimate");
+        assert_eq!(chain_capacity(Some(0), 1, 1, 1), 0, "arena clamps internally");
     }
 }

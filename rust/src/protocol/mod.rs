@@ -18,7 +18,7 @@ pub mod stats;
 pub mod stepwise;
 pub mod worker;
 
-pub use engine::{ParallelEngine, ProtocolConfig};
+pub use engine::{ParallelEngine, ProtocolConfig, DEFAULT_BATCH};
 pub use sequential::SequentialEngine;
 pub use stats::{ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats};
 pub use stepwise::{StepwiseEngine, SyncModel};

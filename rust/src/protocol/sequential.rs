@@ -85,6 +85,8 @@ impl SequentialEngine {
                 tasks_created: executed,
                 tasks_executed: executed,
                 max_chain_len: 1,
+                batch: 1,
+                ..Default::default()
             },
             sched: None,
         }

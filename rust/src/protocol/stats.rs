@@ -94,13 +94,52 @@ pub struct ProtocolStats {
     pub tasks_executed: u64,
     /// High-water mark of the chain length.
     pub max_chain_len: usize,
+    /// Creation-lock acquisitions across all chains — each amortizes a
+    /// whole batch of task creations (`Chain::fill_tail`), so
+    /// `tasks_created / tail_locks` is the batching payoff. `0` for
+    /// engines without a chain (sequential, stepwise, virtual).
+    pub tail_locks: u64,
+    /// Creation batch size `B` the run was configured with (`1` for
+    /// engines the knob does not apply to).
+    pub batch: u32,
+    /// Arena slots backed by memory at end of run, summed over all
+    /// chains (each includes its two sentinels).
+    pub arena_capacity: usize,
+    /// High-water mark of simultaneously live arena slots, summed over
+    /// all chains — `arena_high_water / arena_capacity` is the peak
+    /// occupancy.
+    pub arena_high_water: usize,
+    /// Node allocations served by recycling an erased slot instead of
+    /// fresh memory (the steady-state no-allocation guarantee in action).
+    pub arena_recycled: u64,
+}
+
+impl ProtocolStats {
+    /// Average tasks linked per creation-lock acquisition (`0.0` when no
+    /// creation lock was ever taken).
+    pub fn tasks_per_tail_lock(&self) -> f64 {
+        if self.tail_locks == 0 {
+            0.0
+        } else {
+            self.tasks_created as f64 / self.tail_locks as f64
+        }
+    }
+
+    /// Peak arena occupancy in `[0, 1]` (`0.0` for chainless engines).
+    pub fn arena_occupancy(&self) -> f64 {
+        if self.arena_capacity == 0 {
+            0.0
+        } else {
+            self.arena_high_water as f64 / self.arena_capacity as f64
+        }
+    }
 }
 
 /// Sharded-scheduler telemetry, attached to [`RunReport::sched`] by the
 /// sharded engine only (every other engine reports `None`). Quantifies
 /// the shard decomposition (edge cut, local/boundary split) and the
 /// adaptive loop (migrations per rebalance epoch) — the observability
-/// counterpart of DESIGN.md §7.
+/// counterpart of DESIGN.md §8.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct SchedStats {
     /// Number of shards (per-shard chains).
@@ -127,6 +166,13 @@ pub struct SchedStats {
     /// Local tasks executed per shard (spillover executions are counted
     /// in `boundary_tasks`, not here) — the per-shard load-imbalance view.
     pub per_shard_executed: Vec<u64>,
+    /// Creation-lock acquisitions per shard chain (the spillover chain's
+    /// share is `RunReport.chain.tail_locks` minus this vector's sum) —
+    /// the per-shard view of the batching amortization.
+    pub per_shard_tail_locks: Vec<u64>,
+    /// Peak arena occupancy across the shard + spillover chains
+    /// (high-water live slots / backed capacity, in `[0, 1]`).
+    pub arena_occupancy: f64,
 }
 
 impl SchedStats {
@@ -162,6 +208,16 @@ impl SchedStats {
                         .collect(),
                 ),
             ),
+            (
+                "per_shard_tail_locks".into(),
+                Json::Arr(
+                    self.per_shard_tail_locks
+                        .iter()
+                        .map(|&n| Json::from(n))
+                        .collect(),
+                ),
+            ),
+            ("arena_occupancy".into(), Json::from(self.arena_occupancy)),
         ])
     }
 }
@@ -264,6 +320,28 @@ impl RunReport {
                         Json::from(self.chain.tasks_executed),
                     ),
                     ("max_chain_len".into(), Json::from(self.chain.max_chain_len)),
+                    ("batch".into(), Json::from(self.chain.batch)),
+                    ("tail_locks".into(), Json::from(self.chain.tail_locks)),
+                    (
+                        "tasks_per_tail_lock".into(),
+                        Json::from(self.chain.tasks_per_tail_lock()),
+                    ),
+                    (
+                        "arena_capacity".into(),
+                        Json::from(self.chain.arena_capacity),
+                    ),
+                    (
+                        "arena_high_water".into(),
+                        Json::from(self.chain.arena_high_water),
+                    ),
+                    (
+                        "arena_recycled".into(),
+                        Json::from(self.chain.arena_recycled),
+                    ),
+                    (
+                        "arena_occupancy".into(),
+                        Json::from(self.chain.arena_occupancy()),
+                    ),
                 ]),
             ),
             ("overhead_ratio".into(), Json::from(self.overhead_ratio())),
@@ -277,7 +355,7 @@ impl RunReport {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "{} n={} T={:?}({}) executed={} created={} skipped={} passed={} retries={} cycles={} max_chain={}",
+            "{} n={} T={:?}({}) executed={} created={} skipped={} passed={} retries={} cycles={} max_chain={} batch={} tail_locks={}",
             self.engine,
             self.workers,
             self.duration(),
@@ -289,6 +367,8 @@ impl RunReport {
             self.totals.erased_retries,
             self.totals.cycles,
             self.chain.max_chain_len,
+            self.chain.batch,
+            self.chain.tail_locks,
         )
     }
 }
@@ -353,6 +433,38 @@ mod tests {
             !a.to_json_totals().render().contains("worker"),
             "merged totals must not claim a worker identity"
         );
+    }
+
+    #[test]
+    fn chain_telemetry_derivations() {
+        let s = ProtocolStats {
+            tasks_created: 640,
+            tail_locks: 10,
+            arena_capacity: 128,
+            arena_high_water: 32,
+            batch: 64,
+            ..Default::default()
+        };
+        assert!((s.tasks_per_tail_lock() - 64.0).abs() < 1e-12);
+        assert!((s.arena_occupancy() - 0.25).abs() < 1e-12);
+        let empty = ProtocolStats::default();
+        assert_eq!(empty.tasks_per_tail_lock(), 0.0);
+        assert_eq!(empty.arena_occupancy(), 0.0);
+        let r = RunReport {
+            engine: "test",
+            workers: 1,
+            time_s: 0.0,
+            basis: TimeBasis::Wall,
+            totals: WorkerStats::default(),
+            per_worker: vec![],
+            chain: s,
+            sched: None,
+        };
+        let json = r.to_json().render();
+        assert!(json.contains("\"batch\":64"), "{json}");
+        assert!(json.contains("\"tail_locks\":10"), "{json}");
+        assert!(json.contains("\"tasks_per_tail_lock\":64"), "{json}");
+        assert!(json.contains("\"arena_recycled\":0"), "{json}");
     }
 
     #[test]

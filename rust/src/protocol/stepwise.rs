@@ -139,6 +139,8 @@ impl StepwiseEngine {
                 tasks_created: executed,
                 tasks_executed: executed,
                 max_chain_len: 0,
+                batch: 1,
+                ..Default::default()
             },
             sched: None,
         }
@@ -206,6 +208,8 @@ impl StepwiseEngine {
                 tasks_created: executed,
                 tasks_executed: executed,
                 max_chain_len: 0,
+                batch: 1,
+                ..Default::default()
             },
             sched: None,
         }

@@ -8,8 +8,14 @@
 //!   it — then erases it and returns to the start of the chain; or
 //! * **absorbs** its recipe into the record and moves on.
 //!
-//! At the tail it may create new tasks (at most `C` per cycle); a cycle
-//! ends after an execution, or at the tail when no task can be created.
+//! At the tail it may create new tasks; creation is **batched**: one
+//! tail-slot acquisition links up to `min(B, C - created_this_cycle)`
+//! tasks drawn from the source in one go (`Chain::fill_tail`) — the
+//! batch never exceeds the cycle's remaining creation allowance, so `C`
+//! bounds per-cycle chain growth exactly as in the classic protocol,
+//! and `B = 1` reproduces the one-task-per-acquisition behaviour byte
+//! for byte. A cycle ends after an execution, or at the tail when no
+//! task can be created.
 //!
 //! ## Traversal discipline (deadlock freedom)
 //!
@@ -22,19 +28,22 @@
 //! except on leaf link locks). See `chain` module docs for the lock
 //! inventory and DESIGN.md §6 for the consistency argument.
 //!
-//! ## Arrival-at-erased retry
+//! ## Arrival-at-stale retry
 //!
-//! A worker that blocked on a node's slot may find the node `Erased` when
-//! it finally acquires it (the executor erased it in between). It still
-//! holds its previous node's slot, so it simply re-reads that node's `next`
-//! pointer — updated by the unlink — and retries. Erased nodes are never
-//! traversed through.
+//! A worker that blocked on a node's slot may find the node gone when it
+//! finally acquires it: the executor erased it in between, and with the
+//! arena the slot may even host a *different* task already. The
+//! generation tag on the worker's handle detects both cases exactly
+//! (`Chain::stale`). The worker still holds its previous node's slot, so
+//! it simply re-reads that node's `next` pointer — updated by the
+//! unlink — and retries. Erased nodes are never traversed through, and a
+//! recycled slot can never be mistaken for the node that used to live
+//! there (the ABA argument in DESIGN.md §3).
 
 use std::sync::Mutex;
 use std::time::Instant;
 
-use crate::chain::node::NodeKind;
-use crate::chain::{Chain, NodeState};
+use crate::chain::{Chain, Handle, NodeKind, NodeState};
 use crate::model::{Model, Record, TaskSource};
 use crate::sim::rng::TaskRng;
 
@@ -54,8 +63,10 @@ pub(crate) struct RunCtx<'a, M: Model, S: TaskSource<Recipe = M::Recipe>> {
     pub source: &'a Mutex<S>,
     /// Simulation seed (drives per-task RNG streams).
     pub seed: u64,
-    /// `C`: maximum tasks created per worker cycle.
+    /// `C`: maximum tasks created per worker cycle (checked per batch).
     pub tasks_per_cycle: u32,
+    /// `B`: maximum tasks linked per tail-lock acquisition.
+    pub batch: u32,
     /// Whether to time each `Model::execute` call (adds two `Instant`
     /// reads per task; off for timing-sensitive benches).
     pub collect_timing: bool,
@@ -79,6 +90,11 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
         ..Default::default()
     };
     let mut record = ctx.model.record();
+    let batch = ctx.batch.max(1) as usize;
+    // Reused batch buffer: after its one-time growth to `B` the creation
+    // path performs no allocation (recipes move from here into arena
+    // slots).
+    let mut scratch: Vec<M::Recipe> = Vec::with_capacity(batch);
     let loop_start = Instant::now();
 
     'cycle: loop {
@@ -89,64 +105,66 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
 
         // Enter the chain: the head sentinel's visitor slot doubles as the
         // paper's enter-lock.
-        ctx.chain.head().visitor.acquire();
-        let mut current = ctx.chain.head().clone();
+        ctx.chain.acquire(ctx.chain.head());
+        let mut current = ctx.chain.head();
         // Invariant: we hold `current`'s visitor slot, `current` is live.
         loop {
-            let next = match current.next() {
-                Some(n) => n,
-                None => unreachable!("live non-tail node must have a successor"),
-            };
+            let next = ctx.chain.next(current);
+            debug_assert!(!next.is_none(), "live non-tail node must have a successor");
 
-            if ctx.chain.is_tail(&next) {
+            if ctx.chain.is_tail(next) {
                 // --- creation path -------------------------------------
                 if created_this_cycle >= ctx.tasks_per_cycle || ctx.chain.exhausted() {
-                    current.visitor.release();
+                    ctx.chain.release(current);
                     break; // cycle ends: "reached the end and cannot create"
                 }
-                ctx.chain.tail().visitor.acquire();
+                ctx.chain.acquire(ctx.chain.tail());
                 // Poll the source while holding the tail slot: creations
                 // are serialized, so the creation stream's draw order (and
-                // hence the whole chain order) is deterministic.
-                let recipe = ctx.source.lock().unwrap().next_task();
-                match recipe {
-                    None => {
-                        ctx.chain.set_exhausted();
-                        ctx.chain.tail().visitor.release();
-                        current.visitor.release();
-                        break; // cycle ends
-                    }
-                    Some(recipe) => {
-                        let node = ctx.chain.append_after(&current, recipe);
-                        ctx.chain.tail().visitor.release();
-                        created_this_cycle += 1;
-                        stats.created += 1;
-                        // Move onto the new node. Uncontended: nobody can
-                        // read `current.next` while we hold current's slot.
-                        node.visitor.acquire();
-                        current.visitor.release();
-                        current = node;
-                        match process(ctx, &current, &mut record, &mut stats) {
-                            Processed::ExecutedCycleEnds => continue 'cycle,
-                            Processed::Absorbed => continue,
-                        }
-                    }
+                // hence the whole chain order) is deterministic;
+                // `fill_tail` links the batch in exactly the drawn order.
+                // The batch is clamped to the cycle's remaining `C`
+                // allowance, so batching never loosens the growth cap.
+                let want = batch.min((ctx.tasks_per_cycle - created_this_cycle) as usize);
+                debug_assert!(scratch.is_empty());
+                let got = ctx.source.lock().unwrap().next_batch(&mut scratch, want);
+                if got == 0 {
+                    ctx.chain.set_exhausted();
+                    ctx.chain.release(ctx.chain.tail());
+                    ctx.chain.release(current);
+                    break; // cycle ends
+                }
+                let first = ctx.chain.fill_tail(current, &mut scratch);
+                ctx.chain.release(ctx.chain.tail());
+                created_this_cycle += got as u32;
+                stats.created += got as u64;
+                // Move onto the first created node. Effectively
+                // uncontended: nobody can read `current.next` while we
+                // hold current's slot (at worst the slot's previous
+                // eraser is a moment from releasing it).
+                ctx.chain.acquire(first);
+                ctx.chain.release(current);
+                current = first;
+                match process(ctx, current, &mut record, &mut stats) {
+                    Processed::ExecutedCycleEnds => continue 'cycle,
+                    Processed::Absorbed => continue,
                 }
             }
 
             // --- advance path ------------------------------------------
-            next.visitor.acquire();
-            if next.state() == NodeState::Erased {
-                // Executor erased it while we waited; its unlink already
+            ctx.chain.acquire(next);
+            if ctx.chain.stale(next) {
+                // The executor erased it while we waited (the slot may
+                // already host a different task); its unlink already
                 // rewired `current.next`, so retry from where we stand.
-                next.visitor.release();
+                ctx.chain.release(next);
                 stats.erased_retries += 1;
                 continue;
             }
-            current.visitor.release();
+            ctx.chain.release(current);
             current = next;
-            debug_assert_eq!(current.kind(), NodeKind::Task);
-            match process(ctx, &current, &mut record, &mut stats) {
+            debug_assert_eq!(ctx.chain.kind(current), NodeKind::Task);
+            match process(ctx, current, &mut record, &mut stats) {
                 Processed::ExecutedCycleEnds => continue 'cycle,
                 Processed::Absorbed => continue,
             }
@@ -172,47 +190,61 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
 /// Handle an arrival at a live task node (visitor slot held).
 fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     ctx: &RunCtx<'_, M, S>,
-    node: &std::sync::Arc<crate::chain::Node<M::Recipe>>,
+    node: Handle,
     record: &mut M::Record,
     stats: &mut WorkerStats,
 ) -> Processed {
-    match node.state() {
+    match ctx.chain.state(node) {
         NodeState::Executing => {
             // Another worker is executing it: absorb and pass (§3.3).
-            record.absorb(node.recipe());
+            // SAFETY: we hold `node`'s visitor slot, so its incarnation
+            // cannot be erased (nor its recipe freed) under us.
+            record.absorb(unsafe { ctx.chain.recipe(node) });
             stats.passed_executing += 1;
             Processed::Absorbed
         }
         NodeState::Pending => {
-            if record.depends(node.recipe()) {
-                record.absorb(node.recipe());
+            // SAFETY: visitor slot held (as above).
+            let depends = record.depends(unsafe { ctx.chain.recipe(node) });
+            if depends {
+                // SAFETY: visitor slot held (as above).
+                record.absorb(unsafe { ctx.chain.recipe(node) });
                 stats.skipped_dependent += 1;
                 Processed::Absorbed
             } else {
-                // Execute. Claim the task (we hold the visitor slot, so the
-                // transition is ours alone), then free the slot so other
-                // workers can pass the executing task.
-                node.begin_execution();
-                node.visitor.release();
+                // Execute. Claim the task (we hold the visitor slot, so
+                // the transition is ours alone), then free the slot so
+                // other workers can pass the executing task.
+                ctx.chain.begin_execution(node);
+                // SAFETY: `Executing` is claimed by us and only the
+                // claimant erases a node, so `node` stays live — and its
+                // recipe allocated — through the execution below even
+                // though we release the slot.
+                let seq = unsafe { ctx.chain.seq(node) };
+                ctx.chain.release(node);
 
-                let mut rng = TaskRng::for_task(ctx.seed, node.seq());
+                let mut rng = TaskRng::for_task(ctx.seed, seq);
+                // SAFETY: as above — execution claimant keeps the node
+                // live.
+                let recipe = unsafe { ctx.chain.recipe(node) };
                 if ctx.collect_timing {
                     let t0 = Instant::now();
-                    ctx.model.execute(node.recipe(), &mut rng);
+                    ctx.model.execute(recipe, &mut rng);
                     stats.exec_time += t0.elapsed();
                 } else {
-                    ctx.model.execute(node.recipe(), &mut rng);
+                    ctx.model.execute(recipe, &mut rng);
                 }
 
                 // Erase: re-acquire our node's slot (waiting out any worker
-                // currently passing it), unlink under the erase lock.
-                node.visitor.acquire();
+                // currently passing it), unlink under the erase lock. The
+                // slot goes back to the arena's free list.
+                ctx.chain.acquire(node);
                 ctx.chain.unlink(node);
-                node.visitor.release();
+                ctx.chain.release(node);
                 stats.executed += 1;
                 Processed::ExecutedCycleEnds
             }
         }
-        NodeState::Erased => unreachable!("arrival at erased nodes is retried earlier"),
+        NodeState::Erased => unreachable!("stale arrivals are retried earlier"),
     }
 }

@@ -1,7 +1,7 @@
 //! The sharded adaptive engine: per-shard chains, a spillover chain for
 //! cross-shard tasks, and the epoch-boundary rebalance loop.
 //!
-//! ## Architecture (DESIGN.md §7)
+//! ## Architecture (DESIGN.md §8)
 //!
 //! * The model's footprint topology is partitioned once into `shards`
 //!   balanced blocks-of-blocks, dispatching on the model's
@@ -10,17 +10,18 @@
 //!   owns a [`Chain`] and each worker owns the shards congruent to its
 //!   id (one shard per worker by default).
 //! * A mutex-serialized splitter draws tasks from the epoch-gated
-//!   source in canonical order and routes each to its shard chain, or —
-//!   when its footprint crosses shards — to the spillover chain with a
-//!   fence in every touched shard chain.
+//!   source in canonical order — up to `batch` per router-lock hold —
+//!   and routes each to its shard chain, or — when its footprint
+//!   crosses shards — to the spillover chain with a fence in every
+//!   touched shard chain.
 //! * Shard owners run the ordinary worker–chain cycle over their own
 //!   chain, with two fence rules: an incomplete fence is absorbed (so
 //!   later conflicting local tasks wait), a completed fence is unlinked
 //!   in passing. Every worker also polls the spillover chain; a boundary
 //!   task executes only when, in each touched shard chain, everything
-//!   ahead of its fence is complete (checked by a slot-free walk whose
-//!   `true` verdict is exact and whose races only yield conservative
-//!   `false`s).
+//!   ahead of its fence is complete (checked by a slot-free walk over
+//!   generation-validated link snapshots whose `true` verdict is exact
+//!   and whose races only yield conservative `false`s).
 //! * At each quiescent epoch boundary the engine folds the per-block
 //!   execution timings into the EWMA [`BlockCost`] model and lets the
 //!   [`Rebalancer`] migrate blocks between shards — the adaptive loop
@@ -34,9 +35,12 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::api::observe::{ObsProbe, Observer};
-use crate::chain::{Chain, Node, NodeState};
-use crate::model::{Model, Record};
-use crate::protocol::{ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats};
+use crate::chain::{Chain, Handle, NodeState};
+use crate::model::{Model, Record, TaskSource};
+use crate::protocol::engine::chain_capacity;
+use crate::protocol::{
+    ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats, DEFAULT_BATCH,
+};
 use crate::sim::graph::{bfs_partition, edge_cut, grid_partition, Partition};
 use crate::sim::rng::TaskRng;
 
@@ -62,8 +66,13 @@ pub struct ShardedConfig {
     /// Number of workers (one dedicated thread each).
     pub workers: usize,
     /// `C` — maximum splitter pulls per worker cycle (the chain
-    /// protocol's creation cap, applied to routing).
+    /// protocol's creation cap, applied to routing; checked per batch).
     pub tasks_per_cycle: u32,
+    /// `B` — maximum tasks routed per splitter-lock hold (the sharded
+    /// engine's batching knob); the effective batch is `min(B,
+    /// remaining C)`, so deep batching needs `C ≥ B`. Routing order is
+    /// canonical at any value; only lock amortization changes.
+    pub batch: u32,
     /// Simulation seed (canonical creation + per-task execution streams).
     pub seed: u64,
     /// Number of shards; `0` means one per worker. Clamped to the
@@ -87,6 +96,7 @@ impl Default for ShardedConfig {
                 .map(std::num::NonZeroUsize::get)
                 .unwrap_or(2),
             tasks_per_cycle: 6,
+            batch: DEFAULT_BATCH,
             seed: 0,
             shards: 0,
             rebalance_every: 8_192,
@@ -106,6 +116,7 @@ impl ShardedEngine {
     pub fn new(cfg: ShardedConfig) -> Self {
         assert!(cfg.workers >= 1, "need at least one worker");
         assert!(cfg.tasks_per_cycle >= 1, "C must be at least 1");
+        assert!(cfg.batch >= 1, "B must be at least 1");
         assert!(cfg.alpha > 0.0 && cfg.alpha <= 1.0, "alpha must be in (0, 1]");
         Self { cfg }
     }
@@ -174,10 +185,23 @@ impl ShardedEngine {
             None => self.cfg.rebalance_every,
         };
 
-        let chains: Vec<Chain<ShardItem<M::Recipe>>> =
-            (0..shards).map(|_| Chain::new()).collect();
-        let spill: Chain<Arc<Boundary<M::Recipe>>> = Chain::new();
-        let splitter = Mutex::new(Splitter::<M>::new(model.source(self.cfg.seed), map));
+        let source = model.source(self.cfg.seed);
+        // Pre-size every chain's arena: each holds a slice of the live
+        // backlog, so a couple of workers' worth of slots per chain is
+        // ample; the source hint caps tiny runs (same heuristic as the
+        // single-chain engine).
+        let size_hint = source.size_hint();
+        let per_chain_cap = chain_capacity(
+            size_hint,
+            2,
+            self.cfg.tasks_per_cycle,
+            self.cfg.batch,
+        );
+        let chains: Vec<Chain<ShardItem<M::Recipe>>> = (0..shards)
+            .map(|_| Chain::with_capacity(per_chain_cap))
+            .collect();
+        let spill: Chain<Arc<Boundary<M::Recipe>>> = Chain::with_capacity(per_chain_cap);
+        let splitter = Mutex::new(Splitter::<M>::new(source, map));
         let costs = CostProbe::new(blocks);
         let closed = AtomicBool::new(false);
         let per_shard_executed: Vec<AtomicU64> =
@@ -200,6 +224,7 @@ impl ShardedEngine {
             workers: self.cfg.workers,
             seed: self.cfg.seed,
             tasks_per_cycle: self.cfg.tasks_per_cycle,
+            batch: self.cfg.batch,
             backlog_cap,
         };
 
@@ -278,6 +303,20 @@ impl ShardedEngine {
         for (slot, counter) in sched.per_shard_executed.iter_mut().zip(&per_shard_executed) {
             *slot = counter.load(Ordering::Relaxed);
         }
+        sched.per_shard_tail_locks = chains.iter().map(Chain::tail_locks).collect();
+        let arena_capacity = chains.iter().map(Chain::arena_capacity).sum::<usize>()
+            + spill.arena_capacity();
+        let arena_high_water = chains.iter().map(Chain::arena_high_water).sum::<usize>()
+            + spill.arena_high_water();
+        sched.arena_occupancy = if arena_capacity == 0 {
+            0.0
+        } else {
+            arena_high_water as f64 / arena_capacity as f64
+        };
+        let tail_locks =
+            chains.iter().map(Chain::tail_locks).sum::<u64>() + spill.tail_locks();
+        let arena_recycled = chains.iter().map(Chain::arena_recycled).sum::<u64>()
+            + spill.arena_recycled();
         let mut totals = WorkerStats::default();
         for w in &per_worker {
             totals.merge(w);
@@ -299,6 +338,11 @@ impl ShardedEngine {
                 tasks_created: local + boundary,
                 tasks_executed: local + boundary,
                 max_chain_len,
+                tail_locks,
+                batch: self.cfg.batch,
+                arena_capacity,
+                arena_high_water,
+                arena_recycled,
             },
             sched: Some(sched),
         }
@@ -319,24 +363,29 @@ struct ShardCtx<'a, M: ShardableModel> {
     workers: usize,
     seed: u64,
     tasks_per_cycle: u32,
+    /// `B`: max tasks routed per router-lock hold.
+    batch: u32,
     /// Live-task ceiling across all chains: routing pauses above it.
     backlog_cap: usize,
 }
 
 impl<M: ShardableModel> ShardCtx<'_, M> {
-    /// Route one task through the splitter; `false` (and `closed`) once
-    /// the epoch is out of tasks. Safe to call while holding a visitor
-    /// slot: the splitter's appends take no visitor slots
-    /// ([`Chain::append_tail`]), so appenders and traversers never wait
-    /// on each other.
-    fn pull(&self) -> bool {
+    /// Route up to `min(B, budget)` tasks through the splitter under one
+    /// router-lock hold — `budget` is the caller's remaining per-cycle
+    /// allowance, so batching never loosens the `C` cap; returns how
+    /// many were routed (and raises `closed` once the epoch is out of
+    /// tasks — a short batch is the exhaustion signal). Safe to call
+    /// while holding a visitor slot: the splitter's appends take no
+    /// visitor slots ([`Chain::append_tail`]), so appenders and
+    /// traversers never wait on each other.
+    fn pull(&self, budget: u32) -> u32 {
+        let want = self.batch.min(budget).max(1);
         let mut sp = self.splitter.lock().unwrap();
-        if sp.pull(self.model, self.chains, self.spill) {
-            true
-        } else {
+        let got = sp.pull_batch(self.model, self.chains, self.spill, want);
+        if got < want {
             self.closed.store(true, Ordering::Release);
-            false
         }
+        got
     }
 
     /// Whether this epoch is over: no more routing will happen (`closed`
@@ -405,11 +454,13 @@ fn sharded_worker<M: ShardableModel>(
             Cycle::Executed
         );
         if !did_work && !ctx.closed.load(Ordering::Acquire) && !ctx.backlog_full() {
-            // Idle while the epoch still has tasks: pull one ourselves so
-            // shard-less workers (workers > shards) and workers whose
-            // chain ran dry keep the pipeline fed.
-            if ctx.pull() {
-                stats.created += 1;
+            // Idle while the epoch still has tasks: pull a batch ourselves
+            // (one cycle's allowance) so shard-less workers (workers >
+            // shards) and workers whose chain ran dry keep the pipeline
+            // fed.
+            let got = ctx.pull(ctx.tasks_per_cycle);
+            if got > 0 {
+                stats.created += got as u64;
                 did_work = true;
             }
         }
@@ -429,7 +480,7 @@ fn sharded_worker<M: ShardableModel>(
 /// One protocol cycle over shard `s`'s chain: traverse from the head,
 /// clearing completed fences, absorbing incomplete ones, executing the
 /// first dependence-free local task; at the tail, route up to `C` more
-/// tasks through the splitter.
+/// tasks (in batches of `B`) through the splitter.
 fn shard_cycle<M: ShardableModel>(
     ctx: &ShardCtx<'_, M>,
     s: usize,
@@ -441,56 +492,60 @@ fn shard_cycle<M: ShardableModel>(
     record.reset();
     stats.cycles += 1;
     let mut pulled: u32 = 0;
-    chain.head().visitor.acquire();
-    let mut current = chain.head().clone();
+    chain.acquire(chain.head());
+    let mut current = chain.head();
     loop {
-        let next = match current.next() {
-            Some(n) => n,
-            None => unreachable!("live non-tail node must have a successor"),
-        };
+        let next = chain.next(current);
+        debug_assert!(!next.is_none(), "live non-tail node must have a successor");
 
-        if chain.is_tail(&next) {
+        if chain.is_tail(next) {
             // --- routing path --------------------------------------
             if pulled >= ctx.tasks_per_cycle
                 || ctx.closed.load(Ordering::Acquire)
                 || ctx.backlog_full()
             {
-                current.visitor.release();
+                chain.release(current);
                 return Cycle::Idle;
             }
-            if ctx.pull() {
-                pulled += 1;
-                stats.created += 1;
-                // The task may have landed right after `current` (then
-                // the next iteration walks onto it) or on another chain.
+            let got = ctx.pull(ctx.tasks_per_cycle - pulled);
+            if got > 0 {
+                pulled += got;
+                stats.created += got as u64;
+                // The tasks may have landed right after `current` (then
+                // the next iteration walks onto them) or on other chains.
                 continue;
             }
-            current.visitor.release();
+            chain.release(current);
             return Cycle::Idle;
         }
 
         // --- advance path ------------------------------------------
-        next.visitor.acquire();
-        if next.state() == NodeState::Erased {
-            next.visitor.release();
+        chain.acquire(next);
+        if chain.stale(next) {
+            chain.release(next);
             stats.erased_retries += 1;
             continue;
         }
-        if let ShardItem::Fence(b) = next.recipe() {
-            if b.done() {
-                // Clear the completed fence *from behind* (keeping
-                // `current`'s slot): the unlink empties the fence's own
-                // links, so the traversal could not continue from it.
-                next.begin_execution();
-                chain.unlink(&next);
-                next.visitor.release();
-                sw.fence_clears += 1;
-                continue; // current.next was rewired by the unlink
-            }
+        // Clear a completed fence *from behind* (keeping `current`'s
+        // slot): the unlink empties the fence's own links, so the
+        // traversal could not continue from it.
+        // SAFETY: we hold `next`'s visitor slot, so its incarnation
+        // cannot be erased (nor its recipe freed) under us.
+        let completed_fence = match unsafe { chain.recipe(next) } {
+            ShardItem::Fence(b) => b.done(),
+            ShardItem::Local { .. } => false,
+        };
+        if completed_fence {
+            chain.begin_execution(next);
+            chain.unlink(next);
+            chain.release(next);
+            sw.fence_clears += 1;
+            continue; // current.next was rewired by the unlink
         }
-        current.visitor.release();
+        chain.release(current);
         current = next;
-        match current.recipe() {
+        // SAFETY: we hold `current`'s visitor slot (as above).
+        match unsafe { chain.recipe(current) } {
             ShardItem::Fence(b) => {
                 // Incomplete boundary task: everything after it that
                 // conflicts must wait for it — absorb and pass, exactly
@@ -498,7 +553,7 @@ fn shard_cycle<M: ShardableModel>(
                 record.absorb(&b.recipe);
                 stats.passed_executing += 1;
             }
-            ShardItem::Local { seq, block, recipe } => match current.state() {
+            ShardItem::Local { seq, block, recipe } => match chain.state(current) {
                 NodeState::Executing => {
                     record.absorb(recipe);
                     stats.passed_executing += 1;
@@ -508,12 +563,13 @@ fn shard_cycle<M: ShardableModel>(
                         record.absorb(recipe);
                         stats.skipped_dependent += 1;
                     } else {
-                        execute_and_unlink(ctx, chain, &current, *seq, *block, stats);
+                        let (seq, block) = (*seq, *block);
+                        execute_and_unlink(ctx, chain, current, seq, block, stats);
                         ctx.per_shard_executed[s].fetch_add(1, Ordering::Relaxed);
                         return Cycle::Executed;
                     }
                 }
-                NodeState::Erased => unreachable!("arrival at erased nodes is retried earlier"),
+                NodeState::Erased => unreachable!("stale arrivals are retried earlier"),
             },
         }
     }
@@ -525,27 +581,31 @@ fn shard_cycle<M: ShardableModel>(
 fn execute_and_unlink<M: ShardableModel, R>(
     ctx: &ShardCtx<'_, M>,
     chain: &Chain<R>,
-    node: &Arc<Node<R>>,
+    node: Handle,
     seq: u64,
     block: u32,
     stats: &mut WorkerStats,
 ) where
     R: ShardRecipe<M>,
 {
-    node.begin_execution();
-    node.visitor.release();
+    chain.begin_execution(node);
+    chain.release(node);
 
     let mut rng = TaskRng::for_task(ctx.seed, seq);
     let t0 = Instant::now();
-    ctx.model.execute(R::model_recipe(node.recipe()), &mut rng);
+    // SAFETY: `Executing` is claimed by us and only the claimant erases
+    // a node, so the recipe stays allocated through the execution even
+    // though the visitor slot is released.
+    let item = unsafe { chain.recipe(node) };
+    ctx.model.execute(R::model_recipe(item), &mut rng);
     let dt = t0.elapsed();
     stats.exec_time += dt;
     ctx.costs.record(block, dt.as_nanos() as u64);
-    R::publish_done(node.recipe());
+    R::publish_done(item);
 
-    node.visitor.acquire();
+    chain.acquire(node);
     chain.unlink(node);
-    node.visitor.release();
+    chain.release(node);
     stats.executed += 1;
 }
 
@@ -587,27 +647,27 @@ fn spill_cycle<M: ShardableModel>(
     }
     record.reset();
     stats.cycles += 1;
-    chain.head().visitor.acquire();
-    let mut current = chain.head().clone();
+    chain.acquire(chain.head());
+    let mut current = chain.head();
     loop {
-        let next = match current.next() {
-            Some(n) => n,
-            None => unreachable!("live non-tail node must have a successor"),
-        };
-        if chain.is_tail(&next) {
-            current.visitor.release();
+        let next = chain.next(current);
+        debug_assert!(!next.is_none(), "live non-tail node must have a successor");
+        if chain.is_tail(next) {
+            chain.release(current);
             return Cycle::Idle;
         }
-        next.visitor.acquire();
-        if next.state() == NodeState::Erased {
-            next.visitor.release();
+        chain.acquire(next);
+        if chain.stale(next) {
+            chain.release(next);
             stats.erased_retries += 1;
             continue;
         }
-        current.visitor.release();
+        chain.release(current);
         current = next;
-        let boundary = current.recipe();
-        match current.state() {
+        // SAFETY: we hold `current`'s visitor slot, so its incarnation
+        // cannot be erased (nor its recipe freed) under us.
+        let boundary = unsafe { chain.recipe(current) };
+        match chain.state(current) {
             NodeState::Executing => {
                 record.absorb(&boundary.recipe);
                 stats.passed_executing += 1;
@@ -624,25 +684,39 @@ fn spill_cycle<M: ShardableModel>(
                     sw.spill_blocked += 1;
                 } else {
                     let (seq, block) = (boundary.seq, boundary.block);
-                    execute_and_unlink(ctx, chain, &current, seq, block, stats);
+                    execute_and_unlink(ctx, chain, current, seq, block, stats);
                     return Cycle::Executed;
                 }
             }
-            NodeState::Erased => unreachable!("arrival at erased nodes is retried earlier"),
+            NodeState::Erased => unreachable!("stale arrivals are retried earlier"),
         }
     }
+}
+
+/// What the readiness walk saw at one shard-chain position.
+enum Walked {
+    /// A live local task ahead of our fence.
+    Local,
+    /// Our own fence.
+    Ours,
+    /// Someone else's completed fence (step over it).
+    DoneFence,
+    /// Someone else's incomplete fence.
+    LiveFence,
 }
 
 /// Is every item ahead of `b`'s fence complete, in every shard chain `b`
 /// touches?
 ///
-/// Slot-free walk over link-pointer snapshots: pointers are only ever
-/// rewired around *erased* nodes (appends happen strictly at the tail,
-/// behind the fence), so the walk can skip completed work but never a
-/// live node — a `true` verdict is exact. Races with concurrent unlinks
-/// at worst dead-end the walk (an erased node's links are cleared), which
-/// restarts it from the head, bounded; on exhausting the bound the walk
-/// answers a conservative `false` and the caller retries next cycle.
+/// Slot-free walk over generation-validated link snapshots: pointers are
+/// only ever rewired around *erased* nodes (appends happen strictly at
+/// the tail, behind the fence), so the walk can skip completed work but
+/// never a live node — a `true` verdict is exact. Races with concurrent
+/// unlinks at worst invalidate a handle mid-walk (the validated reads
+/// return `None` — a recycled slot can never be misread thanks to the
+/// generation tag), which restarts the walk from the head, bounded; on
+/// exhausting the bound the walk answers a conservative `false` and the
+/// caller retries next cycle.
 fn fences_clear<M: ShardableModel>(
     ctx: &ShardCtx<'_, M>,
     b: &Arc<Boundary<M::Recipe>>,
@@ -650,18 +724,18 @@ fn fences_clear<M: ShardableModel>(
     'shards: for &s in &b.shards {
         let chain = &ctx.chains[s as usize];
         let mut restarts = 0u32;
-        let mut node = chain.head().clone();
+        let mut node = chain.head();
         loop {
-            let Some(next) = node.next() else {
+            let Some(next) = chain.next_validated(node) else {
                 // The node under us was just erased: restart (bounded).
                 restarts += 1;
                 if restarts > 8 {
                     return false;
                 }
-                node = chain.head().clone();
+                node = chain.head();
                 continue;
             };
-            if chain.is_tail(&next) {
+            if chain.is_tail(next) {
                 // Our own fence is live (b is incomplete, and we hold its
                 // spillover slot), so a walk that never skips live nodes
                 // must meet it before the tail; answer conservatively if
@@ -671,25 +745,31 @@ fn fences_clear<M: ShardableModel>(
                 }
                 return false;
             }
-            if next.state() == NodeState::Erased {
-                restarts += 1;
-                if restarts > 8 {
-                    return false;
-                }
-                node = chain.head().clone();
-                continue;
-            }
-            match next.recipe() {
-                ShardItem::Local { .. } => return false,
+            let seen = chain.with_recipe(next, |item| match item {
+                ShardItem::Local { .. } => Walked::Local,
                 ShardItem::Fence(f) => {
                     if Arc::ptr_eq(f, b) {
-                        continue 'shards; // reached our fence: shard clear
+                        Walked::Ours
+                    } else if f.done() {
+                        Walked::DoneFence
+                    } else {
+                        Walked::LiveFence
                     }
-                    if !f.done() {
+                }
+            });
+            match seen {
+                None => {
+                    // `next` was erased between the pointer read and the
+                    // recipe read: restart (bounded).
+                    restarts += 1;
+                    if restarts > 8 {
                         return false;
                     }
-                    node = next; // step over the completed fence
+                    node = chain.head();
                 }
+                Some(Walked::Local) | Some(Walked::LiveFence) => return false,
+                Some(Walked::Ours) => continue 'shards, // reached our fence: shard clear
+                Some(Walked::DoneFence) => node = next, // step over the completed fence
             }
         }
     }
@@ -738,6 +818,17 @@ mod tests {
                 2_000,
                 "every local execution is attributed to a shard"
             );
+            assert_eq!(
+                sched.per_shard_tail_locks.len(),
+                sched.shards,
+                "per-shard creation-lock telemetry covers every shard"
+            );
+            assert!(
+                sched.arena_occupancy > 0.0 && sched.arena_occupancy <= 1.0,
+                "occupancy is a ratio: {}",
+                sched.arena_occupancy
+            );
+            assert!(report.chain.tail_locks > 0);
         }
     }
 
@@ -940,6 +1031,32 @@ mod tests {
                     sched.boundary_tasks > 0,
                     "antipodal pairs must cross shards: {sched:?}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn every_routing_batch_size_is_state_identical() {
+        let seed = 23;
+        let build = || PairModel::new(2_000, 64, 0.2, 0);
+        let expected = {
+            let m = build();
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for batch in [1, 7, 64] {
+            for workers in [1, 2, 4] {
+                let m = build();
+                let report = ShardedEngine::new(ShardedConfig {
+                    workers,
+                    seed,
+                    tasks_per_cycle: 64, // C ≥ B: every batch size binds
+                    batch,
+                    ..Default::default()
+                })
+                .run(&m);
+                assert_eq!(m.snapshot(), expected, "B={batch} n={workers} diverged");
+                assert_eq!(report.chain.batch, batch);
             }
         }
     }

@@ -1,4 +1,4 @@
-//! The sharded adaptive scheduler (DESIGN.md §7).
+//! The sharded adaptive scheduler (DESIGN.md §8).
 //!
 //! Scales the worker–chain protocol past one global chain: the model's
 //! agent/block graph is partitioned with a greedy BFS edge-cut

@@ -15,7 +15,7 @@
 //!   chain, plus a **fence** at the canonical position in *every* touched
 //!   shard chain.
 //!
-//! Conflicting task pairs then fall into four cases (DESIGN.md §7):
+//! Conflicting task pairs then fall into four cases (DESIGN.md §8):
 //! local/local in one shard (ordinary chain order), boundary before local
 //! (the local's worker absorbs the incomplete fence and skips), local
 //! before boundary (the boundary's readiness walk sees the live local
@@ -60,7 +60,7 @@ pub enum PartitionHint {
 /// If [`Record::depends`](crate::model::Record::depends) can ever order
 /// two recipes (in either absorption direction), their footprints must
 /// intersect. Disjoint footprints ⇒ the tasks commute. The sharded
-/// engine's correctness argument (DESIGN.md §7) rests on exactly this
+/// engine's correctness argument (DESIGN.md §8) rests on exactly this
 /// implication; `rust/tests/sharded.rs` enforces it empirically via
 /// byte-identity with the sequential engine.
 pub trait ShardableModel: Model {
@@ -259,6 +259,25 @@ impl<M: ShardableModel> Splitter<M> {
         &mut self.map
     }
 
+    /// Route up to `max` tasks under one router-lock hold — the sharded
+    /// engine's batching knob (`ShardedConfig.batch`): canonical draw
+    /// order is untouched, only the serialization per routed task is
+    /// amortized. Returns how many tasks were routed; fewer than `max`
+    /// means the epoch budget (or the source) is exhausted.
+    pub(crate) fn pull_batch(
+        &mut self,
+        model: &M,
+        chains: &[Chain<ShardItem<M::Recipe>>],
+        spill: &Chain<Arc<Boundary<M::Recipe>>>,
+        max: u32,
+    ) -> u32 {
+        let mut routed = 0;
+        while routed < max && self.pull(model, chains, spill) {
+            routed += 1;
+        }
+        routed
+    }
+
     /// Route one task. Returns `false` when the epoch budget (or the
     /// source) is exhausted. Must be called under external serialization
     /// (the engine wraps the splitter in a mutex), which also serializes
@@ -373,20 +392,41 @@ mod tests {
         // strictly increases.
         for chain in &chains {
             let mut last = None;
-            let mut node = chain.head().clone();
+            let mut node = chain.head();
             loop {
-                let next = node.next().unwrap();
-                if chain.is_tail(&next) {
+                let next = chain.next(node);
+                if chain.is_tail(next) {
                     break;
                 }
-                assert_eq!(next.state(), NodeState::Pending);
-                let ShardItem::Local { seq, .. } = next.recipe() else {
-                    panic!("expected local item");
-                };
-                assert!(last.is_none_or(|l| l < *seq), "canonical order violated");
-                last = Some(*seq);
+                assert_eq!(chain.state(next), NodeState::Pending);
+                let seq = chain
+                    .with_recipe(next, |item| {
+                        let ShardItem::Local { seq, .. } = item else {
+                            panic!("expected local item");
+                        };
+                        *seq
+                    })
+                    .expect("quiescent chain has no stale links");
+                assert!(last.is_none_or(|l| l < seq), "canonical order violated");
+                last = Some(seq);
                 node = next;
             }
         }
+    }
+
+    #[test]
+    fn pull_batch_routes_under_one_lock_hold_and_reports_exhaustion() {
+        let model = IncModel::new(10, 4);
+        let topo = <IncModel as ShardableModel>::sched_topology(&model);
+        let map = ShardMap::from_partition(&bfs_partition(&topo, 2));
+        let mut splitter: Splitter<IncModel> = Splitter::new(model.source(1), map);
+        let chains: Vec<Chain<ShardItem<_>>> = (0..2).map(|_| Chain::new()).collect();
+        let spill = Chain::new();
+        splitter.open(u64::MAX);
+        assert_eq!(splitter.pull_batch(&model, &chains, &spill, 4), 4);
+        assert_eq!(splitter.pull_batch(&model, &chains, &spill, 8), 6, "short = exhausted");
+        assert_eq!(splitter.pull_batch(&model, &chains, &spill, 8), 0);
+        assert_eq!(splitter.emitted(), 10);
+        assert_eq!(chains[0].len() + chains[1].len(), 10);
     }
 }

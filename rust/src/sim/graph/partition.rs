@@ -3,10 +3,10 @@
 //! is the experiment's task-size proxy `s` and sets the chain granularity.
 //! [`bfs_partition`] additionally serves the sharded scheduler: it
 //! partitions a model's footprint topology into balanced, low-edge-cut
-//! shards (DESIGN.md §7). [`grid_partition`] is the lattice-native
+//! shards (DESIGN.md §8). [`grid_partition`] is the lattice-native
 //! alternative: on 2D grids a strip/block tiling has provably lower cuts
 //! than BFS growth and guarantees contiguous rectangular shards
-//! (DESIGN.md §7a).
+//! (DESIGN.md §8a).
 
 use super::Csr;
 
@@ -90,7 +90,7 @@ pub fn round_robin_partition(n: usize, b: usize) -> Partition {
 /// continues from the next unassigned seed. On graphs with locality
 /// (rings, lattices, small worlds) the blocks come out near-contiguous,
 /// so few edges cross blocks — the sharded scheduler's shard assignment
-/// (DESIGN.md §7). On an edgeless graph the BFS never fires and the
+/// (DESIGN.md §8). On an edgeless graph the BFS never fires and the
 /// result degrades gracefully to [`contiguous_partition`]-style index
 /// ranges.
 pub fn bfs_partition(g: &Csr, parts: usize) -> Partition {

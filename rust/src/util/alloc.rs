@@ -1,0 +1,107 @@
+//! A counting global allocator for allocation-profiling benches.
+//!
+//! The arena refactor's acceptance criterion is *zero steady-state
+//! allocations in the execution loop* (DESIGN.md §3); asserting that
+//! needs byte-accurate numbers, not intuition. `bench_chain` installs
+//! [`Counting`] as the global allocator when built with the
+//! `bench-alloc` cargo feature and reads the counters around each run:
+//!
+//! ```ignore
+//! #[cfg(feature = "bench-alloc")]
+//! #[global_allocator]
+//! static ALLOC: adapar::util::alloc::Counting = adapar::util::alloc::Counting;
+//! ```
+//!
+//! The type is always compiled (it is plain code with no cost unless
+//! installed); only the *installation* is feature-gated, because a
+//! global allocator affects every test and bench in the build.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
+static ALLOCATION_COUNT: AtomicU64 = AtomicU64::new(0);
+
+/// [`System`] allocator wrapper that counts allocations and bytes.
+/// Deallocations are *not* subtracted: the counters measure allocation
+/// traffic (what the acceptance criterion bounds), not live heap size.
+pub struct Counting;
+
+// SAFETY: delegates verbatim to `System`; the counters are simple
+// relaxed atomics with no allocation of their own.
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        // Count only the growth: shrinks and in-place moves are not new
+        // allocation traffic in any sense the benches care about.
+        if new_size > layout.size() {
+            ALLOCATED_BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+            ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+/// Total bytes requested from the allocator so far (monotonic).
+pub fn allocated_bytes() -> u64 {
+    ALLOCATED_BYTES.load(Ordering::Relaxed)
+}
+
+/// Total allocation calls so far (monotonic).
+pub fn allocation_count() -> u64 {
+    ALLOCATION_COUNT.load(Ordering::Relaxed)
+}
+
+/// Counter snapshot for before/after deltas.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AllocSnapshot {
+    /// Bytes requested so far.
+    pub bytes: u64,
+    /// Allocation calls so far.
+    pub count: u64,
+}
+
+/// Take a snapshot of both counters.
+pub fn snapshot() -> AllocSnapshot {
+    AllocSnapshot {
+        bytes: allocated_bytes(),
+        count: allocation_count(),
+    }
+}
+
+/// The counter delta since `earlier`.
+pub fn since(earlier: AllocSnapshot) -> AllocSnapshot {
+    let now = snapshot();
+    AllocSnapshot {
+        bytes: now.bytes.saturating_sub(earlier.bytes),
+        count: now.count.saturating_sub(earlier.count),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshots_are_monotonic_deltas() {
+        // The counting allocator is not installed in test builds (the
+        // counters may stay flat, or move if another build installed
+        // it); either way the delta arithmetic must be monotonic and
+        // never underflow.
+        let a = snapshot();
+        let b = snapshot();
+        assert!(b.bytes >= a.bytes && b.count >= a.count);
+        let d = since(a);
+        assert!(d.bytes >= b.bytes - a.bytes);
+        assert!(since(snapshot()).bytes <= snapshot().bytes);
+    }
+}

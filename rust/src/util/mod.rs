@@ -28,6 +28,7 @@ pub fn create_parent_dirs(path: &std::path::Path) -> std::io::Result<()> {
     Ok(())
 }
 
+pub mod alloc;
 pub mod bench;
 pub mod bitset;
 pub mod cli;

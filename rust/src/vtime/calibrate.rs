@@ -59,22 +59,21 @@ pub fn calibrate() -> CostModel {
         }
     });
 
-    // Chain structural ops: append then unlink, amortized per task.
+    // Chain structural ops: append then unlink, amortized per task. The
+    // chain stays at one live task, so after the first iteration every
+    // append recycles a slot — exactly the steady-state path.
     let chain: Chain<u32> = Chain::new();
     let structural = time_per_iter(N / 4, || {
-        let last = {
-            let tl = chain.tail().links.lock().unwrap();
-            tl.prev.upgrade().unwrap()
-        };
-        last.visitor.acquire();
-        chain.tail().visitor.acquire();
-        let node = chain.append_after(&last, 7);
-        chain.tail().visitor.release();
-        last.visitor.release();
-        node.visitor.acquire();
-        node.begin_execution();
-        chain.unlink(&node);
-        node.visitor.release();
+        let last = chain.head(); // the chain is empty between iterations
+        chain.acquire(last);
+        chain.acquire(chain.tail());
+        let node = chain.append_after(last, 7);
+        chain.release(chain.tail());
+        chain.release(last);
+        chain.acquire(node);
+        chain.begin_execution(node);
+        chain.unlink(node);
+        chain.release(node);
     });
     // Roughly: an append (alloc + 3 link locks) costs ~60% of the pair, an
     // unlink (erase lock + 3 link locks, no alloc) ~40%.

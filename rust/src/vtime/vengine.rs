@@ -254,6 +254,8 @@ impl VirtualEngine {
                 tasks_created: des.created,
                 tasks_executed: des.erased,
                 max_chain_len: des.max_live,
+                batch: 1,
+                ..Default::default()
             },
             sched: None,
         }

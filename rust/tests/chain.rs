@@ -1,0 +1,277 @@
+//! Arena-chain invariants (ISSUE 5): free-list reuse, generation-tag
+//! staleness detection, leak-freedom after teardown — plus multi-worker
+//! stress runs asserting that the creation batch size `B` is invisible
+//! in final states *and* whole observation traces (the chain engines
+//! must stay byte-identical to sequential at every batch size).
+
+use std::sync::Arc;
+
+use adapar::api::observe::Observer;
+use adapar::chain::{Chain, Handle, NodeState};
+use adapar::model::testkit::{env_batches, env_worker_counts, IncModel};
+use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine};
+
+/// Worker-style append through the public slot API.
+fn append<R>(chain: &Chain<R>, recipe: R) -> Handle {
+    let mut last = chain.head();
+    loop {
+        let next = chain.next(last);
+        if chain.is_tail(next) {
+            break;
+        }
+        last = next;
+    }
+    chain.acquire(last);
+    chain.acquire(chain.tail());
+    let node = chain.append_after(last, recipe);
+    chain.release(chain.tail());
+    chain.release(last);
+    node
+}
+
+/// Execute-and-erase through the public slot API.
+fn erase<R>(chain: &Chain<R>, h: Handle) {
+    chain.acquire(h);
+    chain.begin_execution(h);
+    chain.release(h);
+    chain.acquire(h);
+    chain.unlink(h);
+    chain.release(h);
+}
+
+// ---------------------------------------------------------------------------
+// Arena invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn free_list_reuse_keeps_the_arena_flat() {
+    let chain: Chain<u64> = Chain::with_capacity(8);
+    let cap0 = chain.arena_capacity();
+    let mut reused_indices = std::collections::HashSet::new();
+    for i in 0..5_000 {
+        let h = append(&chain, i);
+        reused_indices.insert(h.index());
+        erase(&chain, h);
+    }
+    assert_eq!(
+        chain.arena_capacity(),
+        cap0,
+        "steady-state execution must not grow the slab"
+    );
+    assert_eq!(
+        reused_indices.len(),
+        1,
+        "a single-task steady state cycles one slot"
+    );
+    assert_eq!(chain.arena_recycled(), 4_999, "every alloc after the first reuses");
+    assert!(chain.arena_high_water() <= 3, "2 sentinels + 1 live task");
+    assert_eq!(chain.created(), 5_000);
+    assert_eq!(chain.erased(), 5_000);
+}
+
+#[test]
+fn generation_tags_catch_stale_handles() {
+    let chain: Chain<u32> = Chain::new();
+    let a = append(&chain, 1);
+    assert!(!chain.stale(a));
+    assert_eq!(chain.state(a), NodeState::Pending);
+    erase(&chain, a);
+    assert!(chain.stale(a), "erased ⇒ stale");
+    assert_eq!(chain.next_validated(a), None, "no validated walk through it");
+    assert_eq!(chain.with_recipe(a, |r| *r), None, "no validated recipe read");
+
+    // Recycle the slot into a *different* task: the old handle must stay
+    // stale even though the slot is live again — this is exactly the ABA
+    // the generation tag kills.
+    let b = append(&chain, 2);
+    assert_eq!(b.index(), a.index(), "slot is recycled");
+    assert_ne!(b.generation(), a.generation());
+    assert!(chain.stale(a), "old incarnation stays dead");
+    assert!(!chain.stale(b));
+    assert_eq!(chain.with_recipe(b, |r| *r), Some(2));
+}
+
+#[test]
+fn no_leak_after_teardown() {
+    // Recipes are Arc clones of one sentinel value: every path — erased
+    // tasks (freed at unlink), live tasks (freed when the chain drops),
+    // free-list residents — must give its reference back.
+    let canary = Arc::new(());
+    {
+        let chain: Chain<Arc<()>> = Chain::new();
+        let mut live = Vec::new();
+        for i in 0..100 {
+            let h = append(&chain, canary.clone());
+            if i % 2 == 0 {
+                erase(&chain, h);
+            } else {
+                live.push(h);
+            }
+        }
+        assert_eq!(
+            Arc::strong_count(&canary),
+            1 + live.len(),
+            "erased nodes must drop their recipes at unlink, not at teardown"
+        );
+        drop(chain);
+    }
+    assert_eq!(Arc::strong_count(&canary), 1, "teardown leaks nothing");
+}
+
+#[test]
+fn batched_append_is_equivalent_to_singles() {
+    let singles: Chain<u32> = Chain::new();
+    for i in 0..10 {
+        append(&singles, i);
+    }
+    let batched: Chain<u32> = Chain::new();
+    batched.acquire(batched.head());
+    batched.acquire(batched.tail());
+    let mut buf: Vec<u32> = (0..10).collect();
+    batched.fill_tail(batched.head(), &mut buf);
+    batched.release(batched.tail());
+    batched.release(batched.head());
+
+    assert_eq!(singles.validate().unwrap(), batched.validate().unwrap());
+    assert_eq!(batched.tail_locks(), 1, "one lock for the whole batch");
+    assert_eq!(singles.tail_locks(), 10);
+}
+
+// ---------------------------------------------------------------------------
+// Multi-worker stress: trace identity across batch sizes
+// ---------------------------------------------------------------------------
+
+const STRESS_BATCHES: [u32; 3] = [1, 7, 64];
+
+#[test]
+fn stress_final_state_is_identical_at_batch_1_7_64() {
+    let seed = 0xBA7C4;
+    let tasks = 6_000;
+    let expected = {
+        let m = IncModel::new(tasks, 12);
+        SequentialEngine::new(seed).run(&m);
+        m.cells_snapshot()
+    };
+    for &batch in &STRESS_BATCHES {
+        for &workers in &env_worker_counts() {
+            let m = IncModel::new(tasks, 12);
+            let report = ParallelEngine::new(ProtocolConfig {
+                workers,
+                tasks_per_cycle: 64, // C ≥ B: let every batch size bind
+                batch,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(
+                m.cells_snapshot(),
+                expected,
+                "B={batch} n={workers} diverged"
+            );
+            assert_eq!(report.totals.executed, tasks);
+            assert_eq!(report.chain.batch, batch);
+        }
+    }
+}
+
+#[test]
+fn stress_observation_traces_are_identical_at_batch_1_7_64() {
+    // Epoch gating means batches must stop at epoch boundaries; a whole
+    // trace comparison catches any batch that leaks across.
+    let seed = 31;
+    let tasks = 3_000;
+    let trace = |workers: usize, batch: u32| {
+        let m = IncModel::new(tasks, 8);
+        let probe = || {
+            vec![(
+                "cells".to_string(),
+                adapar::ObsValue::Series(
+                    m.cells_snapshot().iter().map(|&c| c as f64).collect(),
+                ),
+            )]
+        };
+        let mut obs = Observer::new(230); // boundaries land mid-batch for B=64
+        if workers == 0 {
+            SequentialEngine::new(seed).run_observed(&m, &probe, &mut obs);
+        } else {
+            ParallelEngine::new(ProtocolConfig {
+                workers,
+                tasks_per_cycle: 64, // C ≥ B: let every batch size bind
+                batch,
+                seed,
+                ..Default::default()
+            })
+            .run_observed(&m, &probe, &mut obs);
+        }
+        obs.finish().unwrap()
+    };
+    let reference = trace(0, 1);
+    assert!(reference.len() > 10, "cadence must yield many frames");
+    for &batch in &STRESS_BATCHES {
+        for &workers in &env_worker_counts() {
+            assert_eq!(
+                trace(workers, batch),
+                reference,
+                "B={batch} n={workers} trace diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn stress_heavy_contention_across_batches() {
+    // Single cell: every task conflicts with every other — the hardest
+    // ordering regime. Batching must not reorder conflicting tasks.
+    let seed = 5;
+    let expected = {
+        let m = IncModel::new(800, 1);
+        SequentialEngine::new(seed).run(&m);
+        m.cells_snapshot()
+    };
+    for &batch in &STRESS_BATCHES {
+        let m = IncModel::new(800, 1);
+        ParallelEngine::new(ProtocolConfig {
+            workers: 4,
+            tasks_per_cycle: 64, // C ≥ B: let every batch size bind
+            batch,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.cells_snapshot(), expected, "B={batch} diverged");
+    }
+}
+
+#[test]
+fn batching_amortizes_tail_locks_by_an_order_of_magnitude() {
+    let locks = |batch: u32| {
+        let m = IncModel::new(8_000, 64);
+        let report = ParallelEngine::new(ProtocolConfig {
+            workers: 2,
+            tasks_per_cycle: 64,
+            batch,
+            seed: 3,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(report.totals.executed, 8_000);
+        (report.chain.tail_locks, report.chain.tasks_per_tail_lock())
+    };
+    let (locks_1, per_1) = locks(1);
+    let (locks_64, per_64) = locks(64);
+    assert!(per_1 <= 1.0 + 1e-9, "B=1 links one task per lock");
+    assert!(
+        locks_64 * 10 <= locks_1,
+        "B=64 must cut creation locks ≥10×: {locks_64} vs {locks_1}"
+    );
+    assert!(per_64 > 10.0, "B=64 must amortize >10 tasks/lock: {per_64}");
+}
+
+#[test]
+fn env_pinned_batches_cover_the_ci_matrix() {
+    // The CI conformance job pins ADAPAR_BATCH ∈ {1, 64}; locally both
+    // run. Either way the helper must yield at least one legal size.
+    let batches = env_batches();
+    assert!(!batches.is_empty());
+    assert!(batches.iter().all(|&b| b >= 1));
+}

@@ -148,7 +148,7 @@ fn second_worker_passes_executing_and_skips_dependent() {
         workers: 2,
         tasks_per_cycle: 6,
         seed: 0,
-        collect_timing: false,
+        ..Default::default()
     })
     .run(&model);
     releaser.join().unwrap();
@@ -193,7 +193,7 @@ fn gated_order_is_preserved_for_conflicting_tasks() {
             workers: 3,
             tasks_per_cycle: 2,
             seed: 1,
-            collect_timing: false,
+            ..Default::default()
         })
         .run(&model);
         releaser.join().unwrap();

@@ -77,6 +77,7 @@ sizes = [1]
 workers = [2, 4]
 seeds = [9, 10]
 tasks_per_cycle = 3
+batch = 4
 agents = 77
 steps = 123
 paper_scale = true
@@ -87,6 +88,7 @@ calibrate = true
     assert_eq!(cfg.model, "voter");
     assert_eq!(cfg.engine, EngineKind::Parallel);
     assert_eq!(cfg.tasks_per_cycle, 3);
+    assert_eq!(cfg.batch, 4);
     assert_eq!(cfg.agents, 77);
     assert_eq!(cfg.effective_agents(), 77);
     assert_eq!(cfg.effective_steps(), 123);
@@ -98,5 +100,6 @@ fn invalid_configs_are_rejected() {
     assert!(SweepConfig::from_toml("model = \"nope\"").is_err());
     assert!(SweepConfig::from_toml("engine = \"nope\"").is_err());
     assert!(SweepConfig::from_toml("workers = []").is_err());
+    assert!(SweepConfig::from_toml("batch = 0").is_err());
     assert!(SweepConfig::from_toml("model = \"ising\"\nengine = \"stepwise\"").is_err());
 }

@@ -3,7 +3,7 @@
 //! produce the **same epoch observation trace** as the sequential
 //! engine — frames are taken only at drained quiescent boundaries, so
 //! trace equality is the facade-level statement of byte-identical state
-//! evolution (DESIGN.md §5a).
+//! evolution (DESIGN.md §6a).
 //!
 //! The matrix is driven through `registry::models()` and
 //! `ModelInfo::supports`, so any future model registration is covered
@@ -12,10 +12,12 @@
 //! `rust/tests/sharded.rs` and `rust/tests/observe.rs`.
 //!
 //! CI runs this suite once per worker count (`ADAPAR_SHARDED_WORKERS`
-//! pins the count for the matrix job); locally, all of 1/2/4 run.
+//! pins the count for the matrix job) and once per creation batch size
+//! (`ADAPAR_BATCH` ∈ {1, 64} — the arena-chain batching knob must be
+//! invisible in every trace); locally, all of 1/2/4 × {1, 64} run.
 
 use adapar::api::registry::{self, Params};
-use adapar::model::testkit::{env_worker_counts as worker_counts, IncModel};
+use adapar::model::testkit::{env_batches, env_worker_counts as worker_counts, IncModel};
 use adapar::{EngineKind, ModelInfo, ObsValue, Runnable, SimOutcome, Simulation};
 
 const SEEDS: [u64; 2] = [11, 29];
@@ -34,6 +36,7 @@ fn run(
     info: &ModelInfo,
     engine: EngineKind,
     workers: usize,
+    batch: u32,
     seed: u64,
     every: u64,
     params: &Params,
@@ -43,6 +46,10 @@ fn run(
         .model(info.name.clone())
         .engine(engine)
         .workers(workers)
+        // The effective batch is min(B, remaining C): raise C alongside
+        // deep batches so the B = 64 axis genuinely exercises them.
+        .tasks_per_cycle(batch.max(6))
+        .batch(batch)
         .agents(agents)
         .steps(steps)
         .size(size)
@@ -50,7 +57,9 @@ fn run(
         .params(params.clone())
         .every(every)
         .run()
-        .unwrap_or_else(|e| panic!("{}/{engine} n={workers} seed={seed}: {e}", info.name))
+        .unwrap_or_else(|e| {
+            panic!("{}/{engine} n={workers} B={batch} seed={seed}: {e}", info.name)
+        })
 }
 
 /// Parameter variants per model: the registry defaults for everyone,
@@ -74,13 +83,14 @@ fn assert_model_conforms(info: &ModelInfo) {
         for &seed in &SEEDS {
             // Size the cadence from an unobserved sequential run so the
             // trace has ~4 frames regardless of the model's task shape.
-            let total = run(info, EngineKind::Sequential, 1, seed, 0, &params)
+            let total = run(info, EngineKind::Sequential, 1, 1, seed, 0, &params)
                 .report
                 .chain
                 .tasks_executed;
             assert!(total > 0, "{}: empty workload", info.name);
             let every = (total / 4).max(1);
-            let reference = run(info, EngineKind::Sequential, 1, seed, every, &params).observable;
+            let reference =
+                run(info, EngineKind::Sequential, 1, 1, seed, every, &params).observable;
             assert!(
                 reference.len() > 2,
                 "{} [{label}]: cadence {every} must yield a multi-frame trace",
@@ -90,13 +100,24 @@ fn assert_model_conforms(info: &ModelInfo) {
                 if engine == EngineKind::Sequential || !info.supports(engine) {
                     continue;
                 }
+                // The batch axis only exercises the chain engines; the
+                // chainless ones (stepwise, virtual) accept-and-ignore
+                // the knob, so one batch value suffices for them.
+                let batches = match engine {
+                    EngineKind::Parallel | EngineKind::Sharded => env_batches(),
+                    _ => vec![1],
+                };
                 for &workers in &worker_counts() {
-                    let got = run(info, engine, workers, seed, every, &params).observable;
-                    assert_eq!(
-                        got, reference,
-                        "{} [{label}] {engine} n={workers} seed={seed}: trace diverged",
-                        info.name
-                    );
+                    for &batch in &batches {
+                        let got =
+                            run(info, engine, workers, batch, seed, every, &params).observable;
+                        assert_eq!(
+                            got, reference,
+                            "{} [{label}] {engine} n={workers} B={batch} seed={seed}: \
+                             trace diverged",
+                            info.name
+                        );
+                    }
                 }
             }
         }

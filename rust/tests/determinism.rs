@@ -17,7 +17,7 @@ fn cfg(workers: usize, seed: u64, c: u32) -> ProtocolConfig {
         workers,
         tasks_per_cycle: c,
         seed,
-        collect_timing: false,
+        ..Default::default()
     }
 }
 

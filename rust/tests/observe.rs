@@ -1,4 +1,4 @@
-//! The observation determinism contract (DESIGN.md §5a): at a fixed seed
+//! The observation determinism contract (DESIGN.md §6a): at a fixed seed
 //! the *whole epoch trace* — not just the final state — is byte-identical
 //! across the sequential reference, the parallel engine at any worker
 //! count, the stepwise baseline (where legal) and the virtual testbed.

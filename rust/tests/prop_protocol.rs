@@ -31,7 +31,7 @@ fn prop_parallel_equals_sequential() {
                 workers,
                 tasks_per_cycle: 6,
                 seed,
-                collect_timing: false,
+                ..Default::default()
             })
             .run(&m);
             m.cells_snapshot() == expected && rep.totals.executed == tasks as u64
@@ -85,7 +85,7 @@ fn prop_c_parameter_never_changes_results() {
                 workers: 3,
                 tasks_per_cycle: c as u32,
                 seed,
-                collect_timing: false,
+                ..Default::default()
             })
             .run(&m);
             m.cells_snapshot() == expected
@@ -106,7 +106,7 @@ fn prop_counters_balance() {
                 workers,
                 tasks_per_cycle: 6,
                 seed: 1,
-                collect_timing: false,
+                ..Default::default()
             })
             .run(&m);
             let per_worker_sum: u64 = rep.per_worker.iter().map(|w| w.executed).sum();

@@ -272,9 +272,9 @@ fn boxed_engines_dispatch_uniformly() {
     // The object-safe Engine surface: one loop, four backends, one report
     // type.
     let engines: Vec<Box<dyn Engine>> = vec![
-        adapar::engine_for(EngineKind::Sequential, 1, 6, 3, CostModel::default()),
-        adapar::engine_for(EngineKind::Parallel, 2, 6, 3, CostModel::default()),
-        adapar::engine_for(EngineKind::Virtual, 2, 6, 3, CostModel::default()),
+        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 3, CostModel::default()),
+        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 3, CostModel::default()),
+        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 3, CostModel::default()),
     ];
     let model = registry_api::build(
         "voter",
