@@ -19,6 +19,7 @@
 //! [`Engine`]: crate::api::Engine
 
 use crate::api::observe::{Metrics, Observable, Observer};
+use crate::chaos::FaultHook;
 use crate::error::Result;
 use crate::model::{Model, TaskSource};
 use crate::protocol::{
@@ -47,6 +48,29 @@ pub trait DynModel: Send + Sync {
         cost: &CostModel,
         obs: Option<&mut Observer>,
     ) -> RunReport;
+
+    /// Run on the virtual-core testbed under fault injection
+    /// ([`FaultHook`], DESIGN.md §10): stalls/jitter advance worker
+    /// clocks and cost skews scale the cost model, once per epoch
+    /// boundary. The soak runner's virtual-engine entry point.
+    fn run_virtual_chaos(
+        &self,
+        cfg: &ProtocolConfig,
+        cost: &CostModel,
+        obs: Option<&mut Observer>,
+        hook: &mut FaultHook,
+    ) -> RunReport;
+
+    /// Run on the sharded adaptive scheduler under fault injection
+    /// (capped wall stalls, cost-probe skew, boundary invariant checks
+    /// recording into the hook). Errors unless the model is
+    /// sharded-capable, like [`DynModel::run_sharded`].
+    fn run_sharded_chaos(
+        &self,
+        cfg: &ShardedConfig,
+        obs: Option<&mut Observer>,
+        hook: &mut FaultHook,
+    ) -> Result<RunReport>;
 
     /// Run on the barrier-based stepwise baseline. Errors unless the model
     /// has a synchronous (phase-structured) form — the paper's point about
@@ -107,6 +131,7 @@ pub struct Runnable<M: Model> {
     check: Option<Box<dyn Fn(&M) -> std::result::Result<(), String> + Send + Sync>>,
     stepwise: Option<StepwiseFn<M>>,
     sharded: Option<ShardedFn<M>>,
+    sharded_chaos: Option<ShardedChaosFn<M>>,
 }
 
 /// The monomorphized stepwise entry point stored by [`Runnable`] when the
@@ -118,6 +143,15 @@ type StepwiseFn<M> =
 /// model exposes a footprint topology.
 type ShardedFn<M> =
     fn(&M, &ShardedConfig, Option<(&dyn Fn() -> Metrics, &mut Observer)>) -> RunReport;
+
+/// The monomorphized sharded chaos entry point (stored alongside
+/// [`ShardedFn`] by [`Runnable::with_sharding`]).
+type ShardedChaosFn<M> = fn(
+    &M,
+    &ShardedConfig,
+    Option<(&dyn Fn() -> Metrics, &mut Observer)>,
+    &mut FaultHook,
+) -> RunReport;
 
 fn run_stepwise_impl<M: Model + SyncModel>(
     m: &M,
@@ -144,6 +178,19 @@ fn run_sharded_impl<M: ShardableModel>(
     }
 }
 
+fn run_sharded_chaos_impl<M: ShardableModel>(
+    m: &M,
+    cfg: &ShardedConfig,
+    obs: Option<(&dyn Fn() -> Metrics, &mut Observer)>,
+    hook: &mut FaultHook,
+) -> RunReport {
+    let engine = ShardedEngine::new(*cfg);
+    match obs {
+        None => engine.run_chaos(m, hook),
+        Some((probe, observer)) => engine.run_chaos_observed(m, probe, observer, hook),
+    }
+}
+
 impl<M: Model> Runnable<M> {
     /// Wrap a model under a display name.
     pub fn new(name: impl Into<String>, model: M) -> Self {
@@ -154,6 +201,7 @@ impl<M: Model> Runnable<M> {
             check: None,
             stepwise: None,
             sharded: None,
+            sharded_chaos: None,
         }
     }
 
@@ -199,6 +247,7 @@ impl<M: Model> Runnable<M> {
         M: ShardableModel,
     {
         self.sharded = Some(run_sharded_impl::<M>);
+        self.sharded_chaos = Some(run_sharded_chaos_impl::<M>);
         self
     }
 
@@ -257,6 +306,51 @@ impl<M: Model> DynModel for Runnable<M> {
         match obs {
             None => engine.run(&self.model),
             Some(observer) => engine.run_observed(&self.model, &|| self.probe_now(), observer),
+        }
+    }
+
+    fn run_virtual_chaos(
+        &self,
+        cfg: &ProtocolConfig,
+        cost: &CostModel,
+        obs: Option<&mut Observer>,
+        hook: &mut FaultHook,
+    ) -> RunReport {
+        let engine = VirtualEngine {
+            workers: cfg.workers,
+            tasks_per_cycle: cfg.tasks_per_cycle,
+            seed: cfg.seed,
+            cost: *cost,
+        };
+        match obs {
+            None => engine.run_chaos(&self.model, hook),
+            Some(observer) => {
+                engine.run_chaos_observed(&self.model, &|| self.probe_now(), observer, hook)
+            }
+        }
+    }
+
+    fn run_sharded_chaos(
+        &self,
+        cfg: &ShardedConfig,
+        obs: Option<&mut Observer>,
+        hook: &mut FaultHook,
+    ) -> Result<RunReport> {
+        match self.sharded_chaos {
+            Some(f) => Ok(match obs {
+                None => f(&self.model, cfg, None, hook),
+                Some(observer) => f(
+                    &self.model,
+                    cfg,
+                    Some((&|| self.probe_now(), observer)),
+                    hook,
+                ),
+            }),
+            None => Err(crate::err!(
+                "model `{}` exposes no footprint topology; the sharded engine needs \
+                 ShardableModel (wrap it with Runnable::with_sharding)",
+                self.name
+            )),
         }
     }
 

@@ -254,6 +254,13 @@ impl<R> Arena<R> {
         self.high_water.load(Ordering::Relaxed) as usize
     }
 
+    /// Slots currently live (allocated and not released). A drained
+    /// chain holds exactly its two sentinels — the chaos harness's
+    /// leak-freedom invariant reads this at teardown (DESIGN.md §10).
+    pub fn live(&self) -> usize {
+        self.in_use.load(Ordering::Relaxed) as usize
+    }
+
     /// Allocations served by recycling a freed slot.
     pub fn recycled(&self) -> u64 {
         self.recycled.load(Ordering::Relaxed)

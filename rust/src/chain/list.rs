@@ -304,6 +304,13 @@ impl<R> Chain<R> {
         self.arena.recycled()
     }
 
+    /// Arena slots currently live. A drained chain holds exactly its
+    /// two sentinels; the chaos harness's leak-freedom checker sums
+    /// this across chains at teardown (DESIGN.md §10).
+    pub fn arena_live(&self) -> usize {
+        self.arena.live()
+    }
+
     /// Mark the task source as exhausted (no more tasks will ever appear).
     pub fn set_exhausted(&self) {
         self.exhausted.store(true, Ordering::Release);

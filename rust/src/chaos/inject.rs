@@ -1,0 +1,258 @@
+//! The injection side of the chaos harness (DESIGN.md §10).
+//!
+//! A [`FaultHook`] turns a [`FaultPlan`] into concrete per-epoch
+//! injections and collects invariant violations the engines detect
+//! while it is installed. Engines accept the hook as an
+//! `Option<&mut FaultHook>` and consult it **at epoch boundaries
+//! only** — the chain inner loop gains zero per-task branches when no
+//! plan is installed, and the per-worker stall is read once per epoch
+//! at worker start-up, outside the cycle loop.
+//!
+//! All draws come from [`Rng::stream`] keyed by the plan seed and the
+//! epoch index, so an injection schedule is a pure function of
+//! `(plan, epoch, workers)` and any failure replays exactly.
+
+use crate::chaos::invariant::{Invariant, Violation};
+use crate::chaos::plan::{CostSkew, FaultPlan};
+use crate::sim::rng::Rng;
+use crate::vtime::CostModel;
+use std::time::Duration;
+
+/// Domain constant separating chaos RNG streams from every simulation
+/// stream (the task domain is `0x7A5C_0000_5EED_0001`).
+const CHAOS_DOMAIN: u64 = 0x7A5C_0000_C4A0_5001;
+
+/// Wall-clock engines cap each injected sleep at 2 ms so a soak sweep
+/// stays fast; virtual engines apply the full virtual duration.
+const WALL_CAP_NS: u64 = 2_000_000;
+
+/// The faults one epoch injects, fully resolved per worker.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochFaults {
+    /// Per-worker stall, virtual nanoseconds (explicit [`FaultPlan::stalls`]
+    /// entries matching this epoch, summed).
+    pub stall_ns: Vec<f64>,
+    /// Per-worker order-perturbation draw in `[0, order_jitter_ns)`.
+    pub jitter_ns: Vec<f64>,
+    /// Mean cost-skew multiplier, for engines without per-block costs.
+    pub exec_scale: f64,
+    /// The raw per-block skews, for the sharded engine's cost probe.
+    pub skews: Vec<CostSkew>,
+    /// Fence/spillover stagger (wall engines: `worker * fence_delay_ns`).
+    pub fence_delay_ns: u64,
+}
+
+impl EpochFaults {
+    /// True when this epoch injects nothing at all.
+    pub fn is_noop(&self) -> bool {
+        self.stall_ns.iter().all(|&ns| ns == 0.0)
+            && self.jitter_ns.iter().all(|&ns| ns == 0.0)
+            && self.exec_scale == 1.0
+            && self.skews.is_empty()
+            && self.fence_delay_ns == 0
+    }
+
+    /// Total virtual delay for one worker (stall + jitter).
+    pub fn delay_ns(&self, worker: usize) -> f64 {
+        self.stall_ns.get(worker).copied().unwrap_or(0.0)
+            + self.jitter_ns.get(worker).copied().unwrap_or(0.0)
+    }
+
+    /// Wall-clock sleeps for thread engines: the virtual delay plus the
+    /// fence stagger, each capped at 2 ms.
+    pub fn wall_stalls(&self) -> Vec<Duration> {
+        (0..self.stall_ns.len())
+            .map(|w| {
+                let ns = self.delay_ns(w) as u64 + self.fence_delay_ns * w as u64;
+                Duration::from_nanos(ns.min(WALL_CAP_NS))
+            })
+            .collect()
+    }
+
+    /// The base cost model with this epoch's mean skew folded into the
+    /// execution costs (used by the virtual engine, which has no
+    /// per-block cost table).
+    pub fn scaled_cost(&self, base: &CostModel) -> CostModel {
+        let mut c = *base;
+        c.exec_fixed_ns *= self.exec_scale;
+        c.exec_unit_ns *= self.exec_scale;
+        c
+    }
+}
+
+/// Mutable injection state threaded through an engine run: the plan, an
+/// epoch counter, and the violations detected while injecting.
+#[derive(Clone, Debug)]
+pub struct FaultHook {
+    plan: FaultPlan,
+    epoch: u64,
+    violations: Vec<Violation>,
+}
+
+impl FaultHook {
+    /// Install a plan. `FaultHook::new(plan).into()` is the usual call
+    /// shape at an engine's `run_chaos` entry point.
+    pub fn new(plan: FaultPlan) -> Self {
+        Self {
+            plan,
+            epoch: 0,
+            violations: Vec::new(),
+        }
+    }
+
+    /// The installed plan.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Epochs injected so far.
+    pub fn epochs(&self) -> u64 {
+        self.epoch
+    }
+
+    /// The epoch cadence an unobserved chaos run should use: the plan's
+    /// override when set, the engine default otherwise. Observed runs
+    /// must keep the observer's cadence (trace identity is defined at
+    /// observation boundaries), so engines only consult this when no
+    /// observer is attached.
+    pub fn every_or(&self, default_every: u64) -> u64 {
+        if self.plan.every > 0 {
+            self.plan.every
+        } else {
+            default_every
+        }
+    }
+
+    /// Resolve the next epoch's faults and advance the epoch counter.
+    /// Deterministic: stream `(plan.seed ^ CHAOS_DOMAIN, epoch)` feeds
+    /// the jitter draws, one per worker in worker order.
+    pub fn next_epoch(&mut self, workers: usize) -> EpochFaults {
+        let epoch = self.epoch;
+        self.epoch += 1;
+        let mut stall_ns = vec![0.0; workers];
+        for s in &self.plan.stalls {
+            if s.epoch == epoch && s.worker < workers {
+                stall_ns[s.worker] += s.ns;
+            }
+        }
+        let mut rng = Rng::stream(self.plan.seed ^ CHAOS_DOMAIN, epoch);
+        let jitter_ns = (0..workers)
+            .map(|_| {
+                if self.plan.order_jitter_ns > 0.0 {
+                    rng.unit_f64() * self.plan.order_jitter_ns
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+        let exec_scale = if self.plan.cost_skew.is_empty() {
+            1.0
+        } else {
+            self.plan.cost_skew.iter().map(|c| c.mul).sum::<f64>()
+                / self.plan.cost_skew.len() as f64
+        };
+        EpochFaults {
+            stall_ns,
+            jitter_ns,
+            exec_scale,
+            skews: self.plan.cost_skew.clone(),
+            fence_delay_ns: self.plan.fence_delay_ns,
+        }
+    }
+
+    /// Record an invariant violation detected at an epoch boundary.
+    pub fn record_violation(&mut self, invariant: Invariant, detail: impl Into<String>) {
+        self.violations.push(Violation {
+            invariant,
+            detail: detail.into(),
+        });
+    }
+
+    /// Violations recorded so far.
+    pub fn violations(&self) -> &[Violation] {
+        &self.violations
+    }
+
+    /// Drain the recorded violations (used after a run completes).
+    pub fn take_violations(&mut self) -> Vec<Violation> {
+        std::mem::take(&mut self.violations)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::plan::bundled_plan;
+
+    #[test]
+    fn schedule_is_deterministic_in_plan_and_epoch() {
+        let plan = bundled_plan("jitter").unwrap();
+        let mut a = FaultHook::new(plan.clone());
+        let mut b = FaultHook::new(plan);
+        for _ in 0..5 {
+            assert_eq!(a.next_epoch(4), b.next_epoch(4));
+        }
+    }
+
+    #[test]
+    fn stalls_land_on_their_epoch_and_worker() {
+        let plan = FaultPlan::new("s", 9).stall(1, 2, 500.0).stall(1, 2, 250.0);
+        let mut hook = FaultHook::new(plan);
+        assert!(hook.next_epoch(2).is_noop()); // epoch 0
+        assert!(hook.next_epoch(2).is_noop()); // epoch 1
+        let f = hook.next_epoch(2); // epoch 2
+        assert_eq!(f.stall_ns, vec![0.0, 750.0]);
+        assert!(hook.next_epoch(2).is_noop()); // epoch 3
+    }
+
+    #[test]
+    fn out_of_range_workers_are_ignored() {
+        let plan = FaultPlan::new("wide", 9).stall(7, 0, 500.0);
+        let mut hook = FaultHook::new(plan);
+        assert!(hook.next_epoch(2).is_noop());
+    }
+
+    #[test]
+    fn jitter_draws_are_bounded_and_distinct() {
+        let mut hook = FaultHook::new(FaultPlan::new("j", 3).jitter(100.0));
+        let f = hook.next_epoch(4);
+        for &j in &f.jitter_ns {
+            assert!((0.0..100.0).contains(&j));
+        }
+        assert!(
+            f.jitter_ns.windows(2).any(|w| w[0] != w[1]),
+            "independent draws per worker"
+        );
+    }
+
+    #[test]
+    fn exec_scale_is_the_mean_multiplier() {
+        let mut hook = FaultHook::new(FaultPlan::new("k", 1).skew(0, 3.0).skew(1, 1.0));
+        let f = hook.next_epoch(1);
+        assert!((f.exec_scale - 2.0).abs() < 1e-12);
+        let base = CostModel::default();
+        let scaled = f.scaled_cost(&base);
+        assert!((scaled.exec_unit_ns - base.exec_unit_ns * 2.0).abs() < 1e-12);
+        assert!((scaled.visit_ns - base.visit_ns).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wall_stalls_are_capped_and_staggered() {
+        let mut hook = FaultHook::new(
+            FaultPlan::new("w", 1).stall(0, 0, 10_000_000_000.0).fence_delay(1_000),
+        );
+        let f = hook.next_epoch(3);
+        let stalls = f.wall_stalls();
+        assert_eq!(stalls[0], Duration::from_nanos(WALL_CAP_NS));
+        assert_eq!(stalls[1], Duration::from_nanos(1_000));
+        assert_eq!(stalls[2], Duration::from_nanos(2_000));
+    }
+
+    #[test]
+    fn every_override_applies_only_when_set() {
+        let hook = FaultHook::new(FaultPlan::new("e", 1).with_every(64));
+        assert_eq!(hook.every_or(u64::MAX), 64);
+        let hook = FaultHook::new(FaultPlan::new("e", 1));
+        assert_eq!(hook.every_or(512), 512);
+    }
+}

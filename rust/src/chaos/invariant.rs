@@ -1,0 +1,244 @@
+//! Runtime invariant checkers for injected runs (DESIGN.md §10).
+//!
+//! Each checker turns one of the protocol's correctness statements into
+//! a function over observable run artifacts:
+//!
+//! | invariant | statement | evidence |
+//! |---|---|---|
+//! | trace identity | every engine's epoch trace is byte-identical to the sequential oracle | [`Observations`] equality |
+//! | task conservation | every created task is executed exactly once | `tasks_created == tasks_executed` |
+//! | arena leak-freedom | at teardown only the chain sentinels are live | `arena_live == 2 × chains` |
+//! | fence discipline | no task executes before its fence clears; all fences clear by quiescence | in-engine boundary check (generation-tagged handles) |
+//! | rebalancer convergence | ≤ `max_moves` migrations per epoch, load gap non-increasing | in-engine boundary check |
+//!
+//! The first three are checked here, post-run, from the
+//! [`RunReport`]/[`Observations`] a chaos run returns. The last two need
+//! in-flight state and are checked inside `sched/engine.rs` at epoch
+//! boundaries whenever a [`crate::chaos::FaultHook`] is installed,
+//! recording [`Violation`]s into the hook.
+
+use crate::api::Observations;
+use crate::protocol::RunReport;
+use std::fmt;
+
+/// The invariant a [`Violation`] breaks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Invariant {
+    /// Epoch trace differs from the sequential oracle.
+    TraceIdentity,
+    /// Created and executed task counts diverge.
+    TaskConservation,
+    /// Arena slots beyond the sentinels are live at teardown.
+    ArenaLeakFree,
+    /// A fence failed to clear by quiescence, or a chain drained dirty.
+    FenceDiscipline,
+    /// The rebalancer migrated too much or widened the load gap.
+    RebalanceConvergence,
+}
+
+impl fmt::Display for Invariant {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Invariant::TraceIdentity => "trace-identity",
+            Invariant::TaskConservation => "task-conservation",
+            Invariant::ArenaLeakFree => "arena-leak-free",
+            Invariant::FenceDiscipline => "fence-discipline",
+            Invariant::RebalanceConvergence => "rebalance-convergence",
+        })
+    }
+}
+
+/// One detected invariant violation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Violation {
+    /// Which invariant broke.
+    pub invariant: Invariant,
+    /// Human-readable evidence (first diverging frame, counts, ...).
+    pub detail: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.invariant, self.detail)
+    }
+}
+
+/// Compare an injected run's trace against the sequential oracle.
+/// `label` names the run in the violation detail (engine, workers, seed).
+pub fn check_trace(label: &str, reference: &Observations, got: &Observations) -> Option<Violation> {
+    if got == reference {
+        return None;
+    }
+    let detail = if got.len() != reference.len() {
+        format!(
+            "{label}: trace has {} frames, oracle has {}",
+            got.len(),
+            reference.len()
+        )
+    } else {
+        let at = reference
+            .frames
+            .iter()
+            .zip(&got.frames)
+            .position(|(a, b)| a != b)
+            .unwrap_or(0);
+        format!(
+            "{label}: first divergence at frame {at} (tasks={}): got `{}`, oracle `{}`",
+            reference.frames[at].tasks, got.frames[at], reference.frames[at]
+        )
+    };
+    Some(Violation {
+        invariant: Invariant::TraceIdentity,
+        detail,
+    })
+}
+
+/// Sentinel slots expected live at teardown: two per chain (head +
+/// tail). The sharded engine runs `shards` chains plus the spillover
+/// chain; the chain engines run one.
+pub fn expected_live(report: &RunReport) -> usize {
+    let chains = match &report.sched {
+        Some(s) => s.shards + 1,
+        None => 1,
+    };
+    2 * chains
+}
+
+/// Post-run report checks: task conservation and arena leak-freedom.
+/// Engines that do not use the arena (sequential, stepwise, virtual)
+/// report `arena_live == 0` and skip the leak check.
+pub fn check_report(label: &str, report: &RunReport) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let chain = &report.chain;
+    if chain.tasks_created != chain.tasks_executed {
+        out.push(Violation {
+            invariant: Invariant::TaskConservation,
+            detail: format!(
+                "{label}: created {} tasks but executed {}",
+                chain.tasks_created, chain.tasks_executed
+            ),
+        });
+    }
+    if chain.arena_live > 0 {
+        let expected = expected_live(report);
+        if chain.arena_live != expected {
+            out.push(Violation {
+                invariant: Invariant::ArenaLeakFree,
+                detail: format!(
+                    "{label}: {} arena slots live at teardown, expected {expected} \
+                     sentinels (high water {}, recycled {})",
+                    chain.arena_live, chain.arena_high_water, chain.arena_recycled
+                ),
+            });
+        }
+        if chain.arena_high_water < chain.arena_live {
+            out.push(Violation {
+                invariant: Invariant::ArenaLeakFree,
+                detail: format!(
+                    "{label}: high water {} below live count {}",
+                    chain.arena_high_water, chain.arena_live
+                ),
+            });
+        }
+    }
+    out
+}
+
+/// All post-run checks for one injected run: trace identity against the
+/// oracle plus the report invariants.
+pub fn check_run(
+    label: &str,
+    reference: &Observations,
+    got: &Observations,
+    report: &RunReport,
+) -> Vec<Violation> {
+    let mut out = Vec::new();
+    out.extend(check_trace(label, reference, got));
+    out.extend(check_report(label, report));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::observe::ObsFrame;
+    use crate::api::ObsValue;
+    use crate::protocol::{ProtocolStats, SchedStats};
+
+    fn trace(vals: &[i64]) -> Observations {
+        Observations {
+            every: 10,
+            frames: vals
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| ObsFrame {
+                    tasks: 10 * i as u64,
+                    values: vec![("m".to_string(), ObsValue::Int(v))],
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn identical_traces_pass() {
+        assert!(check_trace("x", &trace(&[1, 2, 3]), &trace(&[1, 2, 3])).is_none());
+    }
+
+    #[test]
+    fn divergence_names_the_first_bad_frame() {
+        let v = check_trace("x", &trace(&[1, 2, 3]), &trace(&[1, 9, 3])).unwrap();
+        assert_eq!(v.invariant, Invariant::TraceIdentity);
+        assert!(v.detail.contains("frame 1"), "{}", v.detail);
+    }
+
+    #[test]
+    fn length_mismatch_is_reported() {
+        let v = check_trace("x", &trace(&[1, 2, 3]), &trace(&[1, 2])).unwrap();
+        assert!(v.detail.contains("2 frames"), "{}", v.detail);
+    }
+
+    fn report(live: usize, shards: Option<usize>) -> RunReport {
+        RunReport {
+            engine: "test",
+            workers: 2,
+            time_s: 0.0,
+            basis: crate::protocol::TimeBasis::Wall,
+            totals: Default::default(),
+            per_worker: vec![],
+            chain: ProtocolStats {
+                tasks_created: 100,
+                tasks_executed: 100,
+                arena_live: live,
+                arena_high_water: 40,
+                ..Default::default()
+            },
+            sched: shards.map(|s| SchedStats {
+                shards: s,
+                ..Default::default()
+            }),
+        }
+    }
+
+    #[test]
+    fn sentinel_only_teardown_passes() {
+        assert!(check_report("x", &report(2, None)).is_empty());
+        assert!(check_report("x", &report(8, Some(3))).is_empty());
+        // Engines without an arena report zero and skip the check.
+        assert!(check_report("x", &report(0, None)).is_empty());
+    }
+
+    #[test]
+    fn leaked_slot_is_caught() {
+        let vs = check_report("x", &report(3, None));
+        assert_eq!(vs.len(), 1);
+        assert_eq!(vs[0].invariant, Invariant::ArenaLeakFree);
+    }
+
+    #[test]
+    fn task_loss_is_caught() {
+        let mut r = report(2, None);
+        r.chain.tasks_executed = 99;
+        let vs = check_report("x", &r);
+        assert_eq!(vs[0].invariant, Invariant::TaskConservation);
+    }
+}

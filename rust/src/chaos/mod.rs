@@ -1,0 +1,34 @@
+//! Deterministic chaos harness (DESIGN.md §10).
+//!
+//! Four pieces, one contract:
+//!
+//! * [`plan`] — seeded, declarative [`FaultPlan`]s (worker stalls,
+//!   per-block cost skews, order jitter, fence delays) that serialize
+//!   to the crate's TOML subset, so any failure is a committable repro.
+//! * [`inject`] — the [`FaultHook`] engines accept as an
+//!   `Option<&mut FaultHook>` and consult **at epoch boundaries only**;
+//!   with no plan installed the chain hot path carries zero extra
+//!   per-task branches.
+//! * [`invariant`] — runtime checkers turning the protocol's
+//!   correctness statements (trace identity vs the sequential oracle,
+//!   task conservation, arena leak-freedom, fence discipline,
+//!   rebalancer convergence) into [`Violation`]s.
+//! * [`soak`] — the seed-sweep runner: seeds × fault plans × registry
+//!   models, with bisection-based shrinking of a failing `(seed, plan)`
+//!   pair down to a minimized repro TOML (`cli soak`).
+//!
+//! The contract under test is the determinism guarantee of DESIGN.md §5:
+//! injected schedules may reorder dispatch arbitrarily, but canonical
+//! creation order and per-task RNG streams pin final states and epoch
+//! traces byte-identical to the sequential engine — under *every* fault
+//! plan.
+
+pub mod inject;
+pub mod invariant;
+pub mod plan;
+pub mod soak;
+
+pub use inject::{EpochFaults, FaultHook};
+pub use invariant::{Invariant, Violation};
+pub use plan::{CostSkew, FaultPlan, StallFault};
+pub use soak::{SoakConfig, SoakFailure, SoakReport};

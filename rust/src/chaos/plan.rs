@@ -1,0 +1,445 @@
+//! Declarative, seeded fault plans (DESIGN.md §10).
+//!
+//! A [`FaultPlan`] is the committable unit of chaos: a named, seeded
+//! description of every injection the harness performs during a run —
+//! worker stalls of bounded virtual duration, per-block cost-skew
+//! multipliers, dependence-respecting task-order perturbations, and
+//! spillover/fence delays. Plans serialize to the crate's TOML subset
+//! ([`FaultPlan::to_toml`]) and parse back ([`FaultPlan::from_toml`])
+//! through [`crate::util::toml`], so a failing `(seed, plan)` pair
+//! shrinks to a small file that can be committed and replayed
+//! byte-for-byte.
+//!
+//! The TOML shape uses **parallel scalar arrays** rather than
+//! array-of-tables — the config parser deliberately rejects `[[...]]`:
+//!
+//! ```toml
+//! [plan]
+//! name = "stalls"
+//! seed = 7
+//! every = 256
+//! order_jitter_ns = 50.0
+//! fence_delay_ns = 20000
+//!
+//! [stalls]
+//! worker = [0, 1]
+//! epoch = [2, 3]
+//! ns = [50000.0, 80000.0]
+//!
+//! [cost_skew]
+//! block = [0, 3]
+//! mul = [8.0, 0.0]
+//! ```
+
+use crate::error::Result;
+use crate::util::toml::{self, Value};
+use std::fmt::Write as _;
+
+/// A bounded virtual-duration stall of one worker at one epoch boundary.
+///
+/// The virtual engine adds `ns` to the worker's clock before the epoch
+/// runs; the wall-clock engines sleep a capped equivalent. Out-of-range
+/// worker indices are ignored by every engine, so a plan shrunk on a
+/// wide run stays valid on a narrow one.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StallFault {
+    /// Worker index the stall applies to.
+    pub worker: usize,
+    /// Epoch index at whose boundary the stall is injected.
+    pub epoch: u64,
+    /// Stall duration in virtual nanoseconds.
+    pub ns: f64,
+}
+
+/// A per-block cost-skew multiplier.
+///
+/// The sharded engine feeds `mul` into the EWMA cost probe as a
+/// synthetic observation (perturbing the rebalancer's view of block
+/// cost); the virtual engine folds the mean multiplier into its
+/// execution costs. `mul = 0.0` models a zero-cost block; large values
+/// model pathological hot spots.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostSkew {
+    /// Block (shard-map cell) index.
+    pub block: u32,
+    /// Cost multiplier (must be finite and non-negative).
+    pub mul: f64,
+}
+
+/// A seeded, declarative fault plan — see the module docs for the
+/// serialized shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Human-readable plan name (used in repro file names and reports).
+    pub name: String,
+    /// Seed for the plan's own RNG streams (jitter draws); independent
+    /// of the simulation seed so the same plan can sweep many runs.
+    pub seed: u64,
+    /// Epoch cadence override for unobserved runs (0 = engine default).
+    /// Observed runs keep the observer's cadence: trace identity is
+    /// defined at observation boundaries.
+    pub every: u64,
+    /// Amplitude (virtual ns) of the per-epoch, per-worker order
+    /// perturbation: each worker's clock is advanced by a deterministic
+    /// draw in `[0, amplitude)`, reordering dispatch without touching
+    /// the dependence relation (the protocol's discipline makes every
+    /// interleaving dependence-respecting by construction).
+    pub order_jitter_ns: f64,
+    /// Spillover/fence delay: wall engines stagger worker starts by
+    /// `worker_index * fence_delay_ns` (capped); the sharded engine
+    /// thereby delays fence clearance windows.
+    pub fence_delay_ns: u64,
+    /// Worker stalls.
+    pub stalls: Vec<StallFault>,
+    /// Per-block cost skews.
+    pub cost_skew: Vec<CostSkew>,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self {
+            name: String::new(),
+            seed: 0,
+            every: 0,
+            order_jitter_ns: 0.0,
+            fence_delay_ns: 0,
+            stalls: Vec::new(),
+            cost_skew: Vec::new(),
+        }
+    }
+}
+
+impl FaultPlan {
+    /// An empty (benign) plan with a name and seed.
+    pub fn new(name: impl Into<String>, seed: u64) -> Self {
+        Self {
+            name: name.into(),
+            seed,
+            ..Self::default()
+        }
+    }
+
+    /// Add a worker stall.
+    pub fn stall(mut self, worker: usize, epoch: u64, ns: f64) -> Self {
+        self.stalls.push(StallFault { worker, epoch, ns });
+        self
+    }
+
+    /// Add a per-block cost skew.
+    pub fn skew(mut self, block: u32, mul: f64) -> Self {
+        self.cost_skew.push(CostSkew { block, mul });
+        self
+    }
+
+    /// Set the order-jitter amplitude.
+    pub fn jitter(mut self, ns: f64) -> Self {
+        self.order_jitter_ns = ns;
+        self
+    }
+
+    /// Set the fence/spillover delay.
+    pub fn fence_delay(mut self, ns: u64) -> Self {
+        self.fence_delay_ns = ns;
+        self
+    }
+
+    /// Set the epoch-cadence override.
+    pub fn with_every(mut self, every: u64) -> Self {
+        self.every = every;
+        self
+    }
+
+    /// Number of individually removable faults — the unit the shrinker
+    /// minimizes (each stall, each skew, jitter, and the fence delay).
+    pub fn fault_count(&self) -> usize {
+        self.stalls.len()
+            + self.cost_skew.len()
+            + usize::from(self.order_jitter_ns > 0.0)
+            + usize::from(self.fence_delay_ns > 0)
+    }
+
+    /// True when the plan injects nothing.
+    pub fn is_benign(&self) -> bool {
+        self.fault_count() == 0
+    }
+
+    /// Numeric sanity: finite, non-negative durations and multipliers.
+    pub fn validate(&self) -> Result<()> {
+        crate::ensure!(
+            self.order_jitter_ns.is_finite() && self.order_jitter_ns >= 0.0,
+            "plan `{}`: order_jitter_ns = {} is invalid",
+            self.name,
+            self.order_jitter_ns
+        );
+        for s in &self.stalls {
+            crate::ensure!(
+                s.ns.is_finite() && s.ns >= 0.0,
+                "plan `{}`: stall ns = {} is invalid",
+                self.name,
+                s.ns
+            );
+        }
+        for c in &self.cost_skew {
+            crate::ensure!(
+                c.mul.is_finite() && c.mul >= 0.0,
+                "plan `{}`: cost multiplier {} is invalid",
+                self.name,
+                c.mul
+            );
+        }
+        Ok(())
+    }
+
+    /// Serialize to the TOML subset the crate's parser accepts (module
+    /// docs show the shape). Round-trips through [`FaultPlan::from_toml`].
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        out.push_str("[plan]\n");
+        let _ = writeln!(out, "name = \"{}\"", escape(&self.name));
+        let _ = writeln!(out, "seed = {}", self.seed as i64);
+        let _ = writeln!(out, "every = {}", self.every as i64);
+        let _ = writeln!(out, "order_jitter_ns = {:?}", self.order_jitter_ns);
+        let _ = writeln!(out, "fence_delay_ns = {}", self.fence_delay_ns as i64);
+        if !self.stalls.is_empty() {
+            out.push_str("\n[stalls]\n");
+            let _ = writeln!(
+                out,
+                "worker = [{}]",
+                join(self.stalls.iter().map(|s| s.worker.to_string()))
+            );
+            let _ = writeln!(
+                out,
+                "epoch = [{}]",
+                join(self.stalls.iter().map(|s| (s.epoch as i64).to_string()))
+            );
+            let _ = writeln!(
+                out,
+                "ns = [{}]",
+                join(self.stalls.iter().map(|s| format!("{:?}", s.ns)))
+            );
+        }
+        if !self.cost_skew.is_empty() {
+            out.push_str("\n[cost_skew]\n");
+            let _ = writeln!(
+                out,
+                "block = [{}]",
+                join(self.cost_skew.iter().map(|c| c.block.to_string()))
+            );
+            let _ = writeln!(
+                out,
+                "mul = [{}]",
+                join(self.cost_skew.iter().map(|c| format!("{:?}", c.mul)))
+            );
+        }
+        out
+    }
+
+    /// Parse a plan from its TOML form.
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let root = toml::parse(text).map_err(|e| crate::err!("fault plan: {e}"))?;
+        let plan = root
+            .get("plan")
+            .and_then(Value::as_table)
+            .ok_or_else(|| crate::err!("fault plan: missing [plan] table"))?;
+        let mut out = FaultPlan {
+            name: plan
+                .get("name")
+                .and_then(Value::as_str)
+                .unwrap_or_default()
+                .to_string(),
+            seed: get_u64(&root, "plan.seed")?.unwrap_or(0),
+            every: get_u64(&root, "plan.every")?.unwrap_or(0),
+            order_jitter_ns: get_f64(&root, "plan.order_jitter_ns")?.unwrap_or(0.0),
+            fence_delay_ns: get_u64(&root, "plan.fence_delay_ns")?.unwrap_or(0),
+            stalls: Vec::new(),
+            cost_skew: Vec::new(),
+        };
+        if root.get("stalls").is_some() {
+            let worker = int_array(&root, "stalls.worker")?;
+            let epoch = int_array(&root, "stalls.epoch")?;
+            let ns = float_array(&root, "stalls.ns")?;
+            crate::ensure!(
+                worker.len() == epoch.len() && worker.len() == ns.len(),
+                "fault plan: [stalls] arrays must have equal lengths \
+                 (worker {}, epoch {}, ns {})",
+                worker.len(),
+                epoch.len(),
+                ns.len()
+            );
+            for i in 0..worker.len() {
+                out.stalls.push(StallFault {
+                    worker: worker[i] as usize,
+                    epoch: epoch[i] as u64,
+                    ns: ns[i],
+                });
+            }
+        }
+        if root.get("cost_skew").is_some() {
+            let block = int_array(&root, "cost_skew.block")?;
+            let mul = float_array(&root, "cost_skew.mul")?;
+            crate::ensure!(
+                block.len() == mul.len(),
+                "fault plan: [cost_skew] arrays must have equal lengths \
+                 (block {}, mul {})",
+                block.len(),
+                mul.len()
+            );
+            for i in 0..block.len() {
+                out.cost_skew.push(CostSkew {
+                    block: block[i] as u32,
+                    mul: mul[i],
+                });
+            }
+        }
+        out.validate()?;
+        Ok(out)
+    }
+}
+
+/// The canonical plan suite the soak runner sweeps by default: worker
+/// stalls, cost skew against the rebalancer, and pure order jitter.
+/// Amplitudes are sized against the default [`crate::vtime::CostModel`]
+/// (creation ≈ 250 ns, execution ≈ 5–200 ns) so each plan genuinely
+/// reorders dispatch.
+pub fn bundled() -> Vec<FaultPlan> {
+    vec![
+        FaultPlan::new("stalls", 0x57A1_1ED5)
+            .stall(0, 1, 45_000.0)
+            .stall(1, 2, 90_000.0)
+            .stall(0, 3, 20_000.0)
+            .stall(2, 2, 65_000.0)
+            .fence_delay(10_000),
+        FaultPlan::new("skew", 0x5CA1_ED00)
+            .skew(0, 8.0)
+            .skew(1, 0.25)
+            .skew(2, 16.0)
+            .skew(3, 0.0)
+            .jitter(120.0),
+        FaultPlan::new("jitter", 0x71_77E4).jitter(750.0).fence_delay(5_000),
+    ]
+}
+
+/// Look a bundled plan up by name.
+pub fn bundled_plan(name: &str) -> Option<FaultPlan> {
+    bundled().into_iter().find(|p| p.name == name)
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            c => vec![c],
+        })
+        .collect()
+}
+
+fn join(items: impl Iterator<Item = String>) -> String {
+    items.collect::<Vec<_>>().join(", ")
+}
+
+fn get_u64(root: &Value, path: &str) -> Result<Option<u64>> {
+    match root.get(path) {
+        None => Ok(None),
+        Some(v) => v
+            .as_int()
+            .map(|i| Some(i as u64))
+            .ok_or_else(|| crate::err!("fault plan: `{path}` must be an integer")),
+    }
+}
+
+fn get_f64(root: &Value, path: &str) -> Result<Option<f64>> {
+    match root.get(path) {
+        None => Ok(None),
+        Some(v) => v
+            .as_float()
+            .map(Some)
+            .ok_or_else(|| crate::err!("fault plan: `{path}` must be a number")),
+    }
+}
+
+fn int_array(root: &Value, path: &str) -> Result<Vec<i64>> {
+    let arr = root
+        .get(path)
+        .and_then(Value::as_array)
+        .ok_or_else(|| crate::err!("fault plan: `{path}` must be an array"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_int()
+                .ok_or_else(|| crate::err!("fault plan: `{path}` must hold integers"))
+        })
+        .collect()
+}
+
+fn float_array(root: &Value, path: &str) -> Result<Vec<f64>> {
+    let arr = root
+        .get(path)
+        .and_then(Value::as_array)
+        .ok_or_else(|| crate::err!("fault plan: `{path}` must be an array"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_float()
+                .ok_or_else(|| crate::err!("fault plan: `{path}` must hold numbers"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bundled_plans_round_trip_through_toml() {
+        for plan in bundled() {
+            plan.validate().unwrap();
+            assert!(!plan.is_benign(), "{}", plan.name);
+            let text = plan.to_toml();
+            let back = FaultPlan::from_toml(&text)
+                .unwrap_or_else(|e| panic!("{}: {e}\n{text}", plan.name));
+            assert_eq!(back, plan, "round-trip of `{}`\n{text}", plan.name);
+        }
+    }
+
+    #[test]
+    fn empty_plan_round_trips() {
+        let plan = FaultPlan::new("noop", 7);
+        assert!(plan.is_benign());
+        assert_eq!(FaultPlan::from_toml(&plan.to_toml()).unwrap(), plan);
+    }
+
+    #[test]
+    fn large_seeds_round_trip_via_wrapping_cast() {
+        let plan = FaultPlan::new("big", u64::MAX - 3);
+        assert_eq!(FaultPlan::from_toml(&plan.to_toml()).unwrap().seed, plan.seed);
+    }
+
+    #[test]
+    fn rejects_mismatched_parallel_arrays() {
+        let text = "[plan]\nseed = 1\n[stalls]\nworker = [0, 1]\nepoch = [0]\nns = [1.0, 2.0]\n";
+        assert!(FaultPlan::from_toml(text).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_plan_table() {
+        assert!(FaultPlan::from_toml("seed = 1\n").is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_amplitudes() {
+        let plan = FaultPlan::new("bad", 1).jitter(f64::NAN);
+        assert!(plan.validate().is_err());
+        let neg = FaultPlan::new("neg", 1).stall(0, 0, -1.0);
+        assert!(neg.validate().is_err());
+    }
+
+    #[test]
+    fn fault_count_counts_every_removable_unit() {
+        let plan = FaultPlan::new("p", 1)
+            .stall(0, 0, 1.0)
+            .skew(0, 2.0)
+            .jitter(10.0)
+            .fence_delay(5);
+        assert_eq!(plan.fault_count(), 4);
+    }
+}

@@ -1,0 +1,495 @@
+//! The seed-sweep soak runner (DESIGN.md §10, `cli soak`).
+//!
+//! Sweeps `seeds × fault plans × registry models`, running each
+//! combination under injection on the virtual-time engine and (for
+//! sharded-capable models) the sharded adaptive scheduler, and checks
+//! every run against the sequential oracle with the
+//! [`invariant`](crate::chaos::invariant) suite. A failing
+//! `(seed, plan)` pair is **shrunk** — delta-debugging over the plan's
+//! removable faults — to a minimized plan, serialized as a repro TOML
+//! whose comment header records the model, seed, worker count, and the
+//! violations observed, so the failure can be committed and replayed.
+//!
+//! Everything is deterministic: seeds derive from `base_seed` by a
+//! fixed mix, plans are seeded, and the engines under test are the
+//! deterministic ones — a red soak reproduces byte-for-byte.
+
+use std::fmt::Write as _;
+
+use crate::api::observe::Observer;
+use crate::api::registry::{self, BuildCtx, ModelInfo};
+use crate::api::{DynModel, Observations};
+use crate::chaos::inject::FaultHook;
+use crate::chaos::invariant::{self, Invariant, Violation};
+use crate::chaos::plan::{self, FaultPlan};
+use crate::error::Result;
+use crate::protocol::ProtocolConfig;
+use crate::sched::ShardedConfig;
+use crate::util::json::Json;
+use crate::vtime::CostModel;
+
+/// What one soak sweep covers.
+#[derive(Clone, Debug)]
+pub struct SoakConfig {
+    /// Registry model names (must be sharded-capable — the soak
+    /// exercises the sharded engine alongside the virtual one).
+    pub models: Vec<String>,
+    /// Fault plans to inject (default: [`plan::bundled`]).
+    pub plans: Vec<FaultPlan>,
+    /// Number of simulation seeds swept per (model, plan).
+    pub seeds: u64,
+    /// Base of the seed derivation (each swept seed is a fixed mix of
+    /// this and the sweep index).
+    pub base_seed: u64,
+    /// Worker count for the injected runs.
+    pub workers: usize,
+}
+
+impl Default for SoakConfig {
+    fn default() -> Self {
+        Self {
+            models: vec!["sir".into(), "voter".into(), "ising".into()],
+            plans: plan::bundled(),
+            seeds: 8,
+            base_seed: 0xADA9,
+            workers: 3,
+        }
+    }
+}
+
+/// One failing `(model, seed, plan)` combination, with its minimized
+/// repro.
+#[derive(Clone, Debug)]
+pub struct SoakFailure {
+    /// Registry model name.
+    pub model: String,
+    /// Simulation seed of the failing run.
+    pub seed: u64,
+    /// Name of the originally-failing plan.
+    pub plan: String,
+    /// Violations the original plan produced.
+    pub violations: Vec<Violation>,
+    /// The plan after shrinking (still failing, minimal).
+    pub shrunk: FaultPlan,
+    /// The committable repro file: comment header + shrunk plan TOML.
+    pub repro_toml: String,
+}
+
+/// Outcome of one soak sweep.
+#[derive(Clone, Debug, Default)]
+pub struct SoakReport {
+    /// `(model, seed, plan)` combinations checked.
+    pub runs: u64,
+    /// Combinations that violated an invariant, minimized.
+    pub failures: Vec<SoakFailure>,
+}
+
+impl SoakReport {
+    /// Whether the sweep was green.
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        if self.ok() {
+            format!("soak: {} injected runs, all invariants held", self.runs)
+        } else {
+            format!(
+                "soak: {} injected runs, {} FAILED (first: {})",
+                self.runs,
+                self.failures.len(),
+                self.failures[0].violations[0]
+            )
+        }
+    }
+
+    /// Machine-readable form for `cli soak --json`.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("runs".into(), Json::from(self.runs)),
+            ("ok".into(), Json::from(self.ok())),
+            (
+                "failures".into(),
+                Json::Arr(
+                    self.failures
+                        .iter()
+                        .map(|f| {
+                            Json::Obj(vec![
+                                ("model".into(), Json::from(f.model.clone())),
+                                ("seed".into(), Json::from(f.seed)),
+                                ("plan".into(), Json::from(f.plan.clone())),
+                                (
+                                    "violations".into(),
+                                    Json::Arr(
+                                        f.violations
+                                            .iter()
+                                            .map(|v| Json::from(v.to_string()))
+                                            .collect(),
+                                    ),
+                                ),
+                                (
+                                    "shrunk_faults".into(),
+                                    Json::from(f.shrunk.fault_count()),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The soak's per-model workload: registry defaults clamped to a small,
+/// fast shape (the conformance matrix's philosophy — coverage breadth
+/// over run length).
+#[derive(Clone, Copy, Debug)]
+struct Workload {
+    size: usize,
+    agents: usize,
+    steps: u64,
+    cadence: u64,
+}
+
+fn workload(info: &ModelInfo) -> Workload {
+    let steps = info.validate_steps.clamp(1, 2_400);
+    Workload {
+        size: info.default_sizes.first().copied().unwrap_or(1).min(25),
+        agents: info.default_agents.min(360),
+        steps,
+        cadence: (steps / 4).max(1),
+    }
+}
+
+fn build(name: &str, wl: &Workload, seed: u64) -> Result<Box<dyn DynModel>> {
+    registry::build(
+        name,
+        &BuildCtx {
+            size: wl.size,
+            agents: wl.agents,
+            steps: wl.steps,
+            seed,
+            params: Default::default(),
+        },
+    )
+}
+
+/// Derive the i-th swept simulation seed from the base (golden-ratio
+/// mix, so nearby indices land on unrelated streams).
+fn derive_seed(base: u64, i: u64) -> u64 {
+    base.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+/// Sequential oracle trace for one (model, seed).
+fn oracle(name: &str, wl: &Workload, seed: u64) -> Result<Observations> {
+    let m = build(name, wl, seed)?;
+    let mut obs = Observer::new(wl.cadence);
+    m.run_sequential(seed, Some(&mut obs));
+    obs.finish()
+}
+
+/// Run one `(model, seed, plan)` combination on both injected engines
+/// and collect every violation (post-run checks + in-engine boundary
+/// checks recorded into the hook).
+fn check_combo(
+    name: &str,
+    wl: &Workload,
+    seed: u64,
+    p: &FaultPlan,
+    workers: usize,
+    reference: &Observations,
+) -> Result<Vec<Violation>> {
+    let mut out = Vec::new();
+
+    // Virtual-time engine: full virtual-duration injections.
+    let m = build(name, wl, seed)?;
+    let mut hook = FaultHook::new(p.clone());
+    let mut obs = Observer::new(wl.cadence);
+    let vcfg = ProtocolConfig {
+        workers,
+        seed,
+        ..Default::default()
+    };
+    let report = m.run_virtual_chaos(&vcfg, &CostModel::default(), Some(&mut obs), &mut hook);
+    let label = format!("{name} virtual n={workers} seed={seed} plan={}", p.name);
+    out.extend(invariant::check_run(&label, reference, &obs.finish()?, &report));
+    out.extend(hook.take_violations());
+    if let Err(e) = m.check_consistency() {
+        out.push(Violation {
+            invariant: Invariant::TraceIdentity,
+            detail: format!("{label}: {e}"),
+        });
+    }
+
+    // Sharded adaptive scheduler: capped wall stalls + probe skew.
+    let m = build(name, wl, seed)?;
+    let mut hook = FaultHook::new(p.clone());
+    let mut obs = Observer::new(wl.cadence);
+    let scfg = ShardedConfig {
+        workers,
+        seed,
+        ..Default::default()
+    };
+    let report = m.run_sharded_chaos(&scfg, Some(&mut obs), &mut hook)?;
+    let label = format!("{name} sharded n={workers} seed={seed} plan={}", p.name);
+    out.extend(invariant::check_run(&label, reference, &obs.finish()?, &report));
+    out.extend(hook.take_violations());
+    if let Err(e) = m.check_consistency() {
+        out.push(Violation {
+            invariant: Invariant::TraceIdentity,
+            detail: format!("{label}: {e}"),
+        });
+    }
+    Ok(out)
+}
+
+/// Run a soak sweep. Deterministic in the config; a non-empty
+/// [`SoakReport::failures`] carries minimized repro TOMLs.
+pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
+    crate::ensure!(cfg.seeds > 0, "soak needs at least one seed");
+    crate::ensure!(!cfg.models.is_empty(), "soak needs at least one model");
+    crate::ensure!(!cfg.plans.is_empty(), "soak needs at least one fault plan");
+    crate::ensure!(cfg.workers >= 1, "soak needs at least one worker");
+    for p in &cfg.plans {
+        p.validate()?;
+    }
+    let mut report = SoakReport::default();
+    for name in &cfg.models {
+        let info = registry::info(name)?;
+        crate::ensure!(
+            info.has_sharded_form,
+            "soak model `{name}` must be sharded-capable (the sweep covers the sharded engine)"
+        );
+        let wl = workload(&info);
+        for i in 0..cfg.seeds {
+            let seed = derive_seed(cfg.base_seed, i);
+            let reference = oracle(name, &wl, seed)?;
+            for p in &cfg.plans {
+                report.runs += 1;
+                let violations = check_combo(name, &wl, seed, p, cfg.workers, &reference)?;
+                if violations.is_empty() {
+                    continue;
+                }
+                // Red: minimize the plan against the same (model, seed)
+                // and package the repro.
+                let shrunk = shrink(p, |cand| {
+                    check_combo(name, &wl, seed, cand, cfg.workers, &reference)
+                        .map(|v| !v.is_empty())
+                        .unwrap_or(true)
+                });
+                let repro_toml = repro_toml(name, seed, cfg.workers, &shrunk, &violations);
+                report.failures.push(SoakFailure {
+                    model: name.clone(),
+                    seed,
+                    plan: p.name.clone(),
+                    violations,
+                    shrunk,
+                    repro_toml,
+                });
+            }
+        }
+    }
+    Ok(report)
+}
+
+/// Minimize a failing plan: delta-debug the stall and skew lists, then
+/// drop the scalar faults (jitter, fence delay) if the failure
+/// survives without them. `still_fails` must return `true` while the
+/// candidate plan still reproduces the failure; the returned plan is
+/// 1-minimal over [`FaultPlan::fault_count`] units (removing any single
+/// remaining fault makes the failure vanish — or the test was flaky,
+/// which seeded determinism rules out).
+pub fn shrink(p: &FaultPlan, mut still_fails: impl FnMut(&FaultPlan) -> bool) -> FaultPlan {
+    let mut best = p.clone();
+    let stalls = ddmin(&best.stalls, |cand| {
+        let mut probe = best.clone();
+        probe.stalls = cand.to_vec();
+        still_fails(&probe)
+    });
+    best.stalls = stalls;
+    let skews = ddmin(&best.cost_skew, |cand| {
+        let mut probe = best.clone();
+        probe.cost_skew = cand.to_vec();
+        still_fails(&probe)
+    });
+    best.cost_skew = skews;
+    if best.order_jitter_ns > 0.0 {
+        let mut probe = best.clone();
+        probe.order_jitter_ns = 0.0;
+        if still_fails(&probe) {
+            best = probe;
+        }
+    }
+    if best.fence_delay_ns > 0 {
+        let mut probe = best.clone();
+        probe.fence_delay_ns = 0;
+        if still_fails(&probe) {
+            best = probe;
+        }
+    }
+    best
+}
+
+/// Classic ddmin over a list: repeatedly remove chunks (bisection down
+/// to singletons) while the failure persists. `fails` receives a
+/// candidate subset and answers whether the failure still reproduces.
+fn ddmin<T: Clone>(items: &[T], mut fails: impl FnMut(&[T]) -> bool) -> Vec<T> {
+    let mut cur = items.to_vec();
+    if cur.is_empty() {
+        return cur;
+    }
+    let mut chunk = cur.len().div_ceil(2);
+    loop {
+        let mut removed_any = false;
+        let mut i = 0;
+        while i < cur.len() {
+            let end = (i + chunk).min(cur.len());
+            let candidate: Vec<T> = cur[..i].iter().chain(&cur[end..]).cloned().collect();
+            if fails(&candidate) {
+                cur = candidate;
+                removed_any = true;
+                // Keep `i`: the next chunk slid into this index.
+            } else {
+                i = end;
+            }
+        }
+        if chunk == 1 {
+            if !removed_any || cur.is_empty() {
+                return cur;
+            }
+        } else {
+            chunk /= 2;
+        }
+    }
+}
+
+/// The committable repro file: a comment header naming the failing
+/// combination and the violations, followed by the shrunk plan's TOML
+/// (comments are legal in the crate's TOML subset, so the file parses
+/// back with [`FaultPlan::from_toml`] as-is).
+pub fn repro_toml(
+    model: &str,
+    seed: u64,
+    workers: usize,
+    shrunk: &FaultPlan,
+    violations: &[Violation],
+) -> String {
+    let mut out = String::new();
+    out.push_str("# adapar chaos repro (DESIGN.md \u{a7}10)\n");
+    let _ = writeln!(out, "# model = {model}, sim seed = {seed}, workers = {workers}");
+    out.push_str("# violations under the original plan:\n");
+    for v in violations {
+        let _ = writeln!(out, "#   {}", v.to_string().replace('\n', " "));
+    }
+    out.push('\n');
+    out.push_str(&shrunk.to_toml());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chaos::plan::StallFault;
+
+    #[test]
+    fn ddmin_minimizes_to_the_triggering_element() {
+        let items: Vec<u32> = (0..9).collect();
+        let mut calls = 0;
+        let min = ddmin(&items, |cand| {
+            calls += 1;
+            cand.contains(&5)
+        });
+        assert_eq!(min, vec![5]);
+        assert!(calls < 64, "bisection, not brute force: {calls} calls");
+    }
+
+    #[test]
+    fn ddmin_keeps_a_required_pair() {
+        let items: Vec<u32> = (0..8).collect();
+        let min = ddmin(&items, |cand| cand.contains(&1) && cand.contains(&6));
+        assert_eq!(min, vec![1, 6]);
+    }
+
+    #[test]
+    fn ddmin_of_an_unfailing_list_returns_it_unchanged() {
+        // Defensive: `fails` is false even for the full list (flaky
+        // caller); ddmin must not loop forever or empty the list.
+        let items = vec![1, 2, 3];
+        assert_eq!(ddmin(&items, |_| false), items);
+    }
+
+    #[test]
+    fn shrink_isolates_the_culprit_fault() {
+        let p = FaultPlan::new("wide", 3)
+            .stall(0, 0, 10.0)
+            .stall(1, 2, 20.0)
+            .stall(2, 4, 30.0)
+            .skew(0, 2.0)
+            .jitter(50.0)
+            .fence_delay(100);
+        // The "engine" fails iff a stall on worker 1 is injected.
+        let min = shrink(&p, |cand| cand.stalls.iter().any(|s| s.worker == 1));
+        assert_eq!(
+            min.stalls,
+            vec![StallFault {
+                worker: 1,
+                epoch: 2,
+                ns: 20.0
+            }]
+        );
+        assert!(min.cost_skew.is_empty());
+        assert_eq!(min.order_jitter_ns, 0.0);
+        assert_eq!(min.fence_delay_ns, 0);
+        assert_eq!(min.fault_count(), 1);
+    }
+
+    #[test]
+    fn shrink_keeps_scalar_faults_that_matter() {
+        let p = FaultPlan::new("j", 3).stall(0, 0, 10.0).jitter(50.0);
+        let min = shrink(&p, |cand| cand.order_jitter_ns > 0.0);
+        assert!(min.stalls.is_empty());
+        assert_eq!(min.order_jitter_ns, 50.0);
+        assert_eq!(min.fault_count(), 1);
+    }
+
+    #[test]
+    fn repro_header_is_comment_only_and_parses_back() {
+        let shrunk = FaultPlan::new("min", 7).stall(1, 2, 500.0);
+        let v = vec![Violation {
+            invariant: Invariant::TraceIdentity,
+            detail: "diverged".into(),
+        }];
+        let text = repro_toml("sir", 42, 4, &shrunk, &v);
+        assert!(text.starts_with('#'));
+        assert!(text.contains("model = sir, sim seed = 42, workers = 4"));
+        assert_eq!(FaultPlan::from_toml(&text).unwrap(), shrunk);
+    }
+
+    #[test]
+    fn derived_seeds_are_distinct() {
+        let seeds: Vec<u64> = (0..32).map(|i| derive_seed(0xADA9, i)).collect();
+        let mut dedup = seeds.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), seeds.len());
+    }
+
+    #[test]
+    fn tiny_sweep_over_sir_is_green() {
+        // One model, one seed, the bundled plans: the determinism
+        // contract must hold under every injection (the full sweep is
+        // rust/tests/chaos.rs and the nightly CI soak).
+        let report = run(&SoakConfig {
+            models: vec!["sir".into()],
+            seeds: 1,
+            workers: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(report.runs, 3, "one seed x three bundled plans");
+        assert!(report.ok(), "{}", report.summary());
+        assert!(report.summary().contains("all invariants held"));
+        assert!(report.to_json().render().contains("\"ok\":true"));
+    }
+}

@@ -381,6 +381,80 @@ pub fn validate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `adapar soak` — the chaos sweep (DESIGN.md §10): `--seeds` seeds ×
+/// bundled fault plans × sharded-capable registry models, each run
+/// under injection on the virtual-time and sharded engines and checked
+/// against the sequential oracle by the invariant suite. A failing
+/// `(seed, plan)` pair is shrunk to a minimized plan and written as a
+/// committable repro TOML under `--out`; the command then returns an
+/// error (nonzero exit) so CI fails and uploads the repros.
+pub fn soak(args: &Args) -> Result<()> {
+    use crate::chaos::{plan, soak};
+    use crate::model::testkit::env_soak_seeds;
+
+    let defaults = soak::SoakConfig::default();
+    let plans = match args.get("plans") {
+        None => defaults.plans,
+        Some(raw) => raw
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|name| {
+                plan::bundled_plan(name.trim())
+                    .with_context(|| format!("unknown bundled fault plan `{name}`"))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let cfg = soak::SoakConfig {
+        models: args.get_list::<String>("models", &defaults.models)?,
+        plans,
+        seeds: args.get_parse("seeds", env_soak_seeds(defaults.seeds))?,
+        base_seed: args.get_parse("seed", defaults.base_seed)?,
+        workers: args.get_parse("workers", defaults.workers)?,
+    };
+
+    let report = soak::run(&cfg)?;
+
+    if !report.ok() {
+        let out_dir = PathBuf::from(args.get("out").unwrap_or("target/soak"));
+        std::fs::create_dir_all(&out_dir)
+            .with_context(|| format!("creating {}", out_dir.display()))?;
+        for f in &report.failures {
+            let path = out_dir.join(format!("repro-{}-{}-{:#x}.toml", f.model, f.plan, f.seed));
+            std::fs::write(&path, &f.repro_toml)
+                .with_context(|| format!("writing {}", path.display()))?;
+            eprintln!("wrote {}", path.display());
+        }
+    }
+
+    if args.has_flag("json") {
+        println!("{}", report.to_json().render());
+    } else {
+        println!("{}", report.summary());
+        for f in &report.failures {
+            println!(
+                "  FAIL model={} seed={:#x} plan={} ({} violation{}, shrunk to {} fault{})",
+                f.model,
+                f.seed,
+                f.plan,
+                f.violations.len(),
+                if f.violations.len() == 1 { "" } else { "s" },
+                f.shrunk.fault_count(),
+                if f.shrunk.fault_count() == 1 { "" } else { "s" },
+            );
+            for v in &f.violations {
+                println!("    {v}");
+            }
+        }
+    }
+
+    crate::ensure!(
+        report.ok(),
+        "soak found {} invariant-violating combination(s); repros written",
+        report.failures.len()
+    );
+    Ok(())
+}
+
 /// `adapar artifacts-check` — compile all AOT artifacts, smoke-test one.
 #[cfg(feature = "xla")]
 pub fn artifacts_check(_args: &Args) -> Result<()> {

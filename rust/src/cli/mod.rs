@@ -20,7 +20,7 @@ const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
         "c", "batch", "config", "preset", "out", "sample", "params", "every", "observe",
-        "move-radius",
+        "move-radius", "models", "plans",
     ],
     flags: &["paper-scale", "calibrate", "help", "json"],
 };
@@ -37,6 +37,8 @@ COMMANDS:
   models           list every registered model (bundled + user-registered)
   calibrate        measure this machine's protocol micro-action costs
   validate         assert parallel == sequential bit-for-bit for a model
+  soak             chaos sweep: seeds × fault plans × models under injection,
+                   shrinking any failure to a committable repro TOML
   artifacts-check  compile every AOT artifact and smoke-test the XLA path
 
 COMMON OPTIONS:
@@ -57,6 +59,10 @@ COMMON OPTIONS:
   --config <file.toml>                  sweep config file (experiments/*.toml)
   --preset <fig2|fig3>                  paper-figure sweep preset
   --out <dir>                           output dir for sweep reports [target/figures]
+  --models <list>                       soak: registry models to sweep [sir,voter,ising]
+  --plans <list>                        soak: bundled fault plans [stalls,skew,jitter]
+  --seeds <n>                           soak: seeds per (model, plan); env ADAPAR_SOAK_SEEDS
+                                        overrides the default [8]
   --every <n>                           run/validate: record typed observations every n tasks
   --observe <file.csv|file.jsonl>       run: also stream the observation trace to a file
   --json                                run/sweep: machine-readable JSON on stdout
@@ -78,6 +84,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "models" => commands::models(&args),
         "calibrate" => commands::calibrate_cmd(&args),
         "validate" => commands::validate(&args),
+        "soak" => commands::soak(&args),
         "artifacts-check" => commands::artifacts_check(&args),
         other => crate::bail!("unknown command `{other}`; try --help"),
     }

@@ -44,6 +44,11 @@
 //!   epoch snapshots, CSV/JSON-lines sinks), and the builder-style
 //!   [`Simulation`] facade — the single entry point used by the CLI,
 //!   sweeps, benches and examples.
+//! * [`chaos`] — the deterministic chaos harness: seeded declarative
+//!   fault plans (stalls, cost skews, jitter, fence delays) injected at
+//!   epoch boundaries, invariant checkers against the sequential
+//!   oracle, and a seed-sweep soak runner with ddmin shrinking of
+//!   failures to committable repro TOMLs (`cli soak`).
 //! * [`coordinator`] — experiment orchestration: config system, sweep grid
 //!   runner, reports.
 //! * [`error`] — the crate-local error type ([`Error`]/[`Result`]) every
@@ -57,6 +62,7 @@
 
 pub mod api;
 pub mod chain;
+pub mod chaos;
 pub mod cli;
 pub mod coordinator;
 pub mod error;

@@ -33,6 +33,18 @@ pub fn env_batches() -> Vec<u32> {
     }
 }
 
+/// Seed count for soak sweeps: the full-depth default, or the count
+/// pinned by `ADAPAR_SOAK_SEEDS` (PR-gate CI sets a small value so the
+/// chaos sweep stays fast; the nightly soak job leaves it unset and
+/// passes `--seeds 32` to `cli soak` instead). Shared by
+/// `rust/tests/chaos.rs` and `cli soak`.
+pub fn env_soak_seeds(default: u64) -> u64 {
+    match std::env::var("ADAPAR_SOAK_SEEDS") {
+        Ok(v) => v.parse().expect("ADAPAR_SOAK_SEEDS must be a number"),
+        Err(_) => default,
+    }
+}
+
 /// Random-increment model: each task touches one cell chosen by the
 /// creation stream and applies a non-commutative update derived from the
 /// task stream. Two tasks conflict iff they touch the same cell, so
@@ -175,6 +187,130 @@ impl crate::sched::ShardableModel for IncModel {
     }
 }
 
+/// Stall-schedule model: an [`IncModel`]-style cell updater whose
+/// *declared* per-task cost (`task_work`) cycles through a configurable
+/// schedule in creation order. The chaos harness and cost-model tests
+/// use it to feed the EWMA probes known-extreme distributions (zero-cost
+/// tasks, 1000× skew, alternating spikes) without touching wall time —
+/// the cost is declarative, the body stays O(1).
+pub struct StallModel {
+    inner: IncModel,
+    /// Cost schedule; task `i` (creation order) declares
+    /// `costs[i % costs.len()]`.
+    pub costs: Vec<f64>,
+}
+
+impl StallModel {
+    /// Fresh model over `n_cells` cells with the given cost schedule.
+    /// An empty schedule means unit cost everywhere.
+    pub fn new(tasks: u64, n_cells: u32, costs: Vec<f64>) -> Self {
+        Self {
+            inner: IncModel::new(tasks, n_cells),
+            costs,
+        }
+    }
+
+    /// Snapshot the cell array (requires no concurrent run).
+    pub fn cells_snapshot(&self) -> Vec<u64> {
+        self.inner.cells_snapshot()
+    }
+
+    /// The cost task `seq` declares.
+    pub fn cost_at(&self, seq: u64) -> f64 {
+        if self.costs.is_empty() {
+            1.0
+        } else {
+            self.costs[(seq % self.costs.len() as u64) as usize]
+        }
+    }
+}
+
+/// Recipe: target cell plus the creation-order sequence number that
+/// pins the task's place in the cost schedule.
+#[derive(Clone, Debug)]
+pub struct StallRecipe {
+    /// Target cell.
+    pub cell: u32,
+    /// Creation-order index (drives the cost schedule).
+    pub seq: u64,
+}
+
+/// Source: wraps [`IncSource`] and stamps each recipe with its
+/// creation-order index.
+pub struct StallSource {
+    inner: IncSource,
+    seq: u64,
+}
+
+impl TaskSource for StallSource {
+    type Recipe = StallRecipe;
+    fn next_task(&mut self) -> Option<StallRecipe> {
+        let r = self.inner.next_task()?;
+        let seq = self.seq;
+        self.seq += 1;
+        Some(StallRecipe { cell: r.cell, seq })
+    }
+    fn size_hint(&self) -> Option<u64> {
+        self.inner.size_hint()
+    }
+}
+
+/// Record: same same-cell conflict structure as [`IncRecord`].
+pub struct StallRecord {
+    seen: U32Set,
+}
+
+impl Record for StallRecord {
+    type Recipe = StallRecipe;
+    fn depends(&self, r: &StallRecipe) -> bool {
+        self.seen.contains(r.cell)
+    }
+    fn absorb(&mut self, r: &StallRecipe) {
+        self.seen.insert(r.cell);
+    }
+    fn reset(&mut self) {
+        self.seen.clear();
+    }
+}
+
+impl Model for StallModel {
+    type Recipe = StallRecipe;
+    type Record = StallRecord;
+    type Source = StallSource;
+
+    fn source(&self, seed: u64) -> StallSource {
+        StallSource {
+            inner: self.inner.source(seed),
+            seq: 0,
+        }
+    }
+
+    fn record(&self) -> StallRecord {
+        StallRecord { seen: U32Set::new() }
+    }
+
+    fn execute(&self, r: &StallRecipe, rng: &mut TaskRng) {
+        self.inner.execute(
+            &IncRecipe { cell: r.cell },
+            rng,
+        );
+    }
+
+    fn task_work(&self, r: &StallRecipe) -> f64 {
+        self.cost_at(r.seq)
+    }
+}
+
+impl crate::sched::ShardableModel for StallModel {
+    fn sched_topology(&self) -> crate::sim::graph::Csr {
+        crate::sched::ShardableModel::sched_topology(&self.inner)
+    }
+
+    fn footprint(&self, r: &StallRecipe, out: &mut Vec<u32>) {
+        out.push(r.cell);
+    }
+}
+
 /// Convenience: build a fresh [`IncModel`].
 pub fn fresh_inc_model(tasks: u64, n_cells: u32) -> IncModel {
     IncModel::new(tasks, n_cells)
@@ -207,5 +343,23 @@ mod tests {
         let r = IncRecipe { cell: 0 };
         assert_eq!(m0.task_work(&r), 1.0);
         assert_eq!(m9.task_work(&r), 10.0);
+    }
+
+    #[test]
+    fn stall_model_cycles_its_cost_schedule() {
+        let m = StallModel::new(7, 4, vec![0.0, 5.0, 1000.0]);
+        let mut s = m.source(1);
+        let mut seen = Vec::new();
+        while let Some(r) = s.next_task() {
+            seen.push(m.task_work(&r));
+        }
+        assert_eq!(seen, vec![0.0, 5.0, 1000.0, 0.0, 5.0, 1000.0, 0.0]);
+    }
+
+    #[test]
+    fn stall_model_with_empty_schedule_is_unit_cost() {
+        let m = StallModel::new(2, 2, Vec::new());
+        let r = StallRecipe { cell: 0, seq: 17 };
+        assert_eq!(m.task_work(&r), 1.0);
     }
 }

@@ -2,10 +2,11 @@
 //! model to completion.
 
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::api::observe::{EpochGate, ObsProbe, Observer};
 use crate::chain::Chain;
+use crate::chaos::FaultHook;
 use crate::model::{Model, TaskSource};
 
 use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
@@ -101,7 +102,7 @@ impl ParallelEngine {
     /// Run `model` to completion (until its task source is exhausted and
     /// every created task has been executed).
     pub fn run<M: Model>(&self, model: &M) -> RunReport {
-        self.run_epochs(model, None)
+        self.run_epochs(model, None, None)
     }
 
     /// Run with epoch snapshots: at every `observer.every()` canonical
@@ -116,7 +117,27 @@ impl ParallelEngine {
         probe: ObsProbe<'_>,
         observer: &mut Observer,
     ) -> RunReport {
-        self.run_epochs(model, Some((probe, observer)))
+        self.run_epochs(model, Some((probe, observer)), None)
+    }
+
+    /// Run under fault injection (DESIGN.md §10): each epoch's stalls
+    /// become capped wall-clock sleeps taken by each worker **once**, at
+    /// epoch start-up, perturbing the thread interleaving without adding
+    /// any per-task branch. Determinism does not depend on timing, so an
+    /// injected run must still match the sequential oracle exactly.
+    pub fn run_chaos<M: Model>(&self, model: &M, hook: &mut FaultHook) -> RunReport {
+        self.run_epochs(model, None, Some(hook))
+    }
+
+    /// [`run_chaos`](Self::run_chaos) with epoch snapshots.
+    pub fn run_chaos_observed<M: Model>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+        hook: &mut FaultHook,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)), Some(hook))
     }
 
     /// The single run loop: one iteration per epoch (exactly one epoch
@@ -127,10 +148,14 @@ impl ParallelEngine {
         &self,
         model: &M,
         mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+        mut hook: Option<&mut FaultHook>,
     ) -> RunReport {
         let every = match &obs {
             Some((_, o)) => o.gate_cadence(),
-            None => u64::MAX,
+            None => match &hook {
+                Some(h) => h.every_or(u64::MAX),
+                None => u64::MAX,
+            },
         };
         let inner_source = model.source(self.cfg.seed);
         // Pre-size the node arena from the source's own forecast — the
@@ -142,15 +167,6 @@ impl ParallelEngine {
             self.cfg.batch,
         ));
         let source = Mutex::new(EpochGate::new(inner_source));
-        let ctx = RunCtx {
-            chain: &chain,
-            model,
-            source: &source,
-            seed: self.cfg.seed,
-            tasks_per_cycle: self.cfg.tasks_per_cycle,
-            batch: self.cfg.batch,
-            collect_timing: self.cfg.collect_timing,
-        };
         let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
         for (w, s) in per_worker.iter_mut().enumerate() {
             s.worker = w;
@@ -161,6 +177,23 @@ impl ParallelEngine {
         }
         let t0 = Instant::now();
         loop {
+            // Epoch-boundary injection: resolve this epoch's wall stalls
+            // (empty on clean runs) and hand them to the workers through
+            // the context — consulted once per worker per epoch.
+            let stalls: Vec<Duration> = match hook.as_mut() {
+                Some(h) => h.next_epoch(self.cfg.workers).wall_stalls(),
+                None => Vec::new(),
+            };
+            let ctx = RunCtx {
+                chain: &chain,
+                model,
+                source: &source,
+                seed: self.cfg.seed,
+                tasks_per_cycle: self.cfg.tasks_per_cycle,
+                batch: self.cfg.batch,
+                collect_timing: self.cfg.collect_timing,
+                stalls: &stalls,
+            };
             source.lock().unwrap().open(every);
             if self.cfg.workers == 1 {
                 // Run in-place: a single worker needs no extra thread,
@@ -218,6 +251,7 @@ impl ParallelEngine {
                 arena_capacity: chain.arena_capacity(),
                 arena_high_water: chain.arena_high_water(),
                 arena_recycled: chain.arena_recycled(),
+                arena_live: chain.arena_live(),
             },
             sched: None,
         }
@@ -407,6 +441,30 @@ mod tests {
         // Note: skipped/passed counters are timing-dependent (they require
         // true interleaving, which a single-core host provides only via
         // preemption), so the assertion here is determinism, not counters.
+    }
+
+    #[test]
+    fn injected_runs_stay_state_identical_and_leak_free() {
+        use crate::chaos::{plan, FaultHook};
+        let seed = 13;
+        let expected = run_sequentially(&fresh(1200, 8), seed);
+        for p in plan::bundled() {
+            let model = fresh(1200, 8);
+            let mut hook = FaultHook::new(p.clone().with_every(300));
+            let report = ParallelEngine::new(ProtocolConfig {
+                workers: 3,
+                seed,
+                ..Default::default()
+            })
+            .run_chaos(&model, &mut hook);
+            assert_eq!(model.cells_snapshot(), expected, "plan `{}`", p.name);
+            assert_eq!(
+                report.chain.arena_live, 2,
+                "plan `{}`: only the sentinels may be live at teardown",
+                p.name
+            );
+            assert!(hook.epochs() >= 2, "plan `{}` must span epochs", p.name);
+        }
     }
 
     #[test]

@@ -112,6 +112,11 @@ pub struct ProtocolStats {
     /// Node allocations served by recycling an erased slot instead of
     /// fresh memory (the steady-state no-allocation guarantee in action).
     pub arena_recycled: u64,
+    /// Arena slots still live at teardown, summed over all chains. A
+    /// drained run holds exactly its sentinels (two per chain), so any
+    /// excess is a leaked node — the chaos harness's leak-freedom
+    /// invariant (DESIGN.md §10). `0` for engines without an arena.
+    pub arena_live: usize,
 }
 
 impl ProtocolStats {
@@ -173,6 +178,11 @@ pub struct SchedStats {
     /// Peak arena occupancy across the shard + spillover chains
     /// (high-water live slots / backed capacity, in `[0, 1]`).
     pub arena_occupancy: f64,
+    /// Cycles a worker spent starved by the splitter's live-task
+    /// ceiling (backlog full across all shards). The livelock guard
+    /// bypass-pulls after a bounded starvation streak, so this counts
+    /// pressure, not deadlock.
+    pub backpressure_stalls: u64,
 }
 
 impl SchedStats {
@@ -218,6 +228,10 @@ impl SchedStats {
                 ),
             ),
             ("arena_occupancy".into(), Json::from(self.arena_occupancy)),
+            (
+                "backpressure_stalls".into(),
+                Json::from(self.backpressure_stalls),
+            ),
         ])
     }
 }
@@ -338,6 +352,7 @@ impl RunReport {
                         "arena_recycled".into(),
                         Json::from(self.chain.arena_recycled),
                     ),
+                    ("arena_live".into(), Json::from(self.chain.arena_live)),
                     (
                         "arena_occupancy".into(),
                         Json::from(self.chain.arena_occupancy()),

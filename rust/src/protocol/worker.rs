@@ -41,7 +41,7 @@
 //! there (the ABA argument in DESIGN.md §3).
 
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::chain::{Chain, Handle, NodeKind, NodeState};
 use crate::model::{Model, Record, TaskSource};
@@ -70,6 +70,11 @@ pub(crate) struct RunCtx<'a, M: Model, S: TaskSource<Recipe = M::Recipe>> {
     /// Whether to time each `Model::execute` call (adds two `Instant`
     /// reads per task; off for timing-sensitive benches).
     pub collect_timing: bool,
+    /// Per-worker start-up stall for this epoch (chaos harness,
+    /// DESIGN.md §10). Empty on clean runs; consulted exactly once per
+    /// `worker_loop` call — i.e. once per epoch, before the cycle loop —
+    /// so the per-task hot path carries no injection branch.
+    pub stalls: &'a [Duration],
 }
 
 /// Outcome of processing an arrived-at node within a cycle.
@@ -95,6 +100,12 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     // path performs no allocation (recipes move from here into arena
     // slots).
     let mut scratch: Vec<M::Recipe> = Vec::with_capacity(batch);
+    // Chaos-harness stall: one check per epoch, never per task.
+    if let Some(d) = ctx.stalls.get(worker_id) {
+        if !d.is_zero() {
+            std::thread::sleep(*d);
+        }
+    }
     let loop_start = Instant::now();
 
     'cycle: loop {

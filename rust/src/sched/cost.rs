@@ -191,4 +191,83 @@ mod tests {
     fn zero_alpha_rejected() {
         let _ = BlockCost::new(1, 0.0);
     }
+
+    #[test]
+    fn zero_cost_blocks_carry_zero_load() {
+        // Chaos skew mul = 0.0 bills 0 ns per task; the block must read
+        // as free (load 0) without poisoning the EWMA with NaN.
+        let probe = CostProbe::new(2);
+        let mut cost = BlockCost::new(2, 0.5);
+        probe.record(0, 0);
+        probe.record(0, 0);
+        probe.record(1, 500);
+        cost.update(&probe);
+        assert_eq!(cost.cost_ns(0), 0.0);
+        assert_eq!(cost.load(0), 0.0);
+        assert!(cost.load(1) > 0.0);
+        assert!(cost.load(0).is_finite() && cost.cost_ns(0).is_finite());
+    }
+
+    #[test]
+    fn extreme_skew_orders_loads_by_magnitude() {
+        // A 1e6x cost skew between blocks (chaos "skew" plan territory)
+        // must survive the EWMA with the ordering and ratio intact.
+        let probe = CostProbe::new(2);
+        let mut cost = BlockCost::new(2, 1.0);
+        probe.record(0, 1);
+        probe.record(1, 1_000_000);
+        cost.update(&probe);
+        assert!(cost.load(1) > cost.load(0));
+        assert!((cost.load(1) / cost.load(0) - 1e6).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ewma_saturates_at_the_steady_state() {
+        // Feeding the same epoch forever must converge to that epoch's
+        // mean (fixed point), not drift or overshoot.
+        let probe = CostProbe::new(1);
+        let mut cost = BlockCost::new(1, 0.25);
+        for _ in 0..200 {
+            for _ in 0..4 {
+                probe.record(0, 800);
+            }
+            cost.update(&probe);
+        }
+        assert!((cost.cost_ns(0) - 800.0).abs() < 1e-6, "cost fixed point");
+        assert!((cost.rate(0) - 4.0).abs() < 1e-6, "rate fixed point");
+        // One outlier epoch moves the average by at most alpha's weight.
+        probe.record(0, 8_000_000);
+        cost.update(&probe);
+        assert!(cost.cost_ns(0) <= 0.25 * 8_000_000.0 + 0.75 * 800.0 + 1e-6);
+    }
+
+    #[test]
+    fn probe_survives_huge_accumulations() {
+        // Sub-u64-overflow but far beyond realistic epochs: the drain
+        // path must not wrap or lose counts.
+        let probe = CostProbe::new(1);
+        for _ in 0..1000 {
+            probe.record(0, u32::MAX as u64);
+        }
+        let drained = probe.drain();
+        assert_eq!(drained[0].0, 1000);
+        assert_eq!(drained[0].1, 1000 * (u32::MAX as u64));
+    }
+
+    #[test]
+    fn rate_decays_toward_zero_for_idle_blocks() {
+        // Saturation in the other direction: a block that stops seeing
+        // tasks must have its load fade so the rebalancer can reclaim it.
+        let probe = CostProbe::new(1);
+        let mut cost = BlockCost::new(1, 0.5);
+        probe.record(0, 1000);
+        cost.update(&probe);
+        let initial = cost.load(0);
+        assert!(initial > 0.0);
+        for _ in 0..40 {
+            cost.update(&probe);
+        }
+        assert!(cost.load(0) < initial * 1e-9, "idle load must decay");
+        assert_eq!(cost.cost_ns(0), 1000.0, "per-task cost memory persists");
+    }
 }

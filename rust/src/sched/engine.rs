@@ -32,10 +32,11 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::api::observe::{ObsProbe, Observer};
 use crate::chain::{Chain, Handle, NodeState};
+use crate::chaos::{FaultHook, Invariant};
 use crate::model::{Model, Record, TaskSource};
 use crate::protocol::engine::chain_capacity;
 use crate::protocol::{
@@ -128,7 +129,7 @@ impl ShardedEngine {
 
     /// Run `model` to completion.
     pub fn run<M: ShardableModel>(&self, model: &M) -> RunReport {
-        self.run_epochs(model, None)
+        self.run_epochs(model, None, None)
     }
 
     /// Run with epoch snapshots at the observer's cadence; frames are
@@ -140,13 +141,35 @@ impl ShardedEngine {
         probe: ObsProbe<'_>,
         observer: &mut Observer,
     ) -> RunReport {
-        self.run_epochs(model, Some((probe, observer)))
+        self.run_epochs(model, Some((probe, observer)), None)
+    }
+
+    /// Run with a chaos [`FaultHook`] installed (DESIGN.md §10): worker
+    /// stalls and fence staggers become capped wall sleeps at each
+    /// epoch's start, cost skews feed synthetic probe observations, and
+    /// the engine's boundary invariants (fence discipline, rebalancer
+    /// convergence) report into the hook instead of only debug asserts.
+    pub fn run_chaos<M: ShardableModel>(&self, model: &M, hook: &mut FaultHook) -> RunReport {
+        self.run_epochs(model, None, Some(hook))
+    }
+
+    /// Chaos run with epoch observation (the soak runner's shape: inject
+    /// faults while snapshotting the trace for byte-comparison).
+    pub fn run_chaos_observed<M: ShardableModel>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+        hook: &mut FaultHook,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)), Some(hook))
     }
 
     fn run_epochs<M: ShardableModel>(
         &self,
         model: &M,
         mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+        mut hook: Option<&mut FaultHook>,
     ) -> RunReport {
         let topology = model.sched_topology();
         let blocks = topology.n();
@@ -181,7 +204,10 @@ impl ShardedEngine {
 
         let every = match &obs {
             Some((_, o)) => o.gate_cadence(),
-            None if self.cfg.rebalance_every == 0 => u64::MAX,
+            None if self.cfg.rebalance_every == 0 => match hook.as_ref() {
+                Some(h) => h.every_or(u64::MAX),
+                None => u64::MAX,
+            },
             None => self.cfg.rebalance_every,
         };
 
@@ -247,19 +273,40 @@ impl ShardedEngine {
         }
         let t0 = Instant::now();
         loop {
+            // Chaos injection happens here, at the epoch boundary, and
+            // nowhere else: resolve this epoch's faults once, turn them
+            // into per-worker start-up sleeps, and feed the cost skews
+            // into the probe so the EWMA model and rebalancer see a
+            // perturbed view. `stalls` is empty on clean runs, so the
+            // workers' one-shot check reads an empty slice.
+            let stalls: Vec<Duration> = match hook.as_mut() {
+                Some(h) => {
+                    let faults = h.next_epoch(self.cfg.workers);
+                    for skew in &faults.skews {
+                        if (skew.block as usize) < blocks {
+                            costs.record(skew.block, (skew.mul * 1_000.0).max(0.0) as u64);
+                        }
+                    }
+                    faults.wall_stalls()
+                }
+                None => Vec::new(),
+            };
             closed.store(false, Ordering::Release);
             splitter.lock().unwrap().open(every);
             if self.cfg.workers == 1 {
-                let (ws, sw) = sharded_worker(&ctx, 0);
+                let (ws, sw) =
+                    sharded_worker(&ctx, 0, stalls.first().copied().unwrap_or_default());
                 per_worker[0].merge(&ws);
                 sched.fence_clears += sw.fence_clears;
                 sched.spill_blocked += sw.spill_blocked;
+                sched.backpressure_stalls += sw.backpressure_stalls;
             } else {
                 std::thread::scope(|s| {
                     let handles: Vec<_> = (0..self.cfg.workers)
                         .map(|w| {
                             let ctx_ref = &ctx;
-                            s.spawn(move || sharded_worker(ctx_ref, w))
+                            let stall = stalls.get(w).copied().unwrap_or_default();
+                            s.spawn(move || sharded_worker(ctx_ref, w, stall))
                         })
                         .collect();
                     for (w, h) in handles.into_iter().enumerate() {
@@ -267,6 +314,7 @@ impl ShardedEngine {
                         per_worker[w].merge(&ws);
                         sched.fence_clears += sw.fence_clears;
                         sched.spill_blocked += sw.spill_blocked;
+                        sched.backpressure_stalls += sw.backpressure_stalls;
                     }
                 });
             }
@@ -274,6 +322,21 @@ impl ShardedEngine {
             // Quiescent: every routed task (and fence) is gone.
             debug_assert!(chains.iter().all(Chain::is_empty), "epoch left live tasks");
             debug_assert!(spill.is_empty(), "epoch left live boundary tasks");
+            if let Some(h) = hook.as_mut() {
+                // Fence discipline, checked in release builds too while a
+                // hook is installed: a quiescent boundary must leave no
+                // live task, fence, or boundary node in any chain.
+                if !chains.iter().all(Chain::is_empty) || !spill.is_empty() {
+                    h.record_violation(
+                        Invariant::FenceDiscipline,
+                        format!(
+                            "epoch boundary left live nodes: chains={:?} spill={}",
+                            chains.iter().map(Chain::len).collect::<Vec<_>>(),
+                            spill.len()
+                        ),
+                    );
+                }
+            }
             let done = {
                 let mut sp = splitter.lock().unwrap();
                 if let Some((probe, observer)) = obs.as_mut() {
@@ -284,9 +347,39 @@ impl ShardedEngine {
                     // Close the adaptive loop: fold this epoch's per-block
                     // timings into the EWMA model, then migrate blocks.
                     cost_model.update(&costs);
-                    sched.migrations +=
-                        rebalancer.rebalance(sp.map_mut(), &cost_model, &topology);
+                    let gap_before = hook
+                        .as_ref()
+                        .map(|_| load_gap(&cost_model.shard_loads(sp.map_mut())));
+                    let moves = rebalancer.rebalance(sp.map_mut(), &cost_model, &topology);
+                    sched.migrations += moves;
                     sched.rebalances += 1;
+                    if let Some(h) = hook.as_mut() {
+                        // Rebalancer convergence: the per-epoch move count
+                        // is capped and each move strictly narrows the
+                        // modelled shard-load gap, so the gap never widens
+                        // across a boundary.
+                        if moves > rebalancer.max_moves as u64 {
+                            h.record_violation(
+                                Invariant::RebalanceConvergence,
+                                format!(
+                                    "rebalancer moved {moves} blocks, above its cap of {}",
+                                    rebalancer.max_moves
+                                ),
+                            );
+                        }
+                        let gap_after = load_gap(&cost_model.shard_loads(sp.map_mut()));
+                        if let Some(before) = gap_before {
+                            if gap_after > before + 1e-9 {
+                                h.record_violation(
+                                    Invariant::RebalanceConvergence,
+                                    format!(
+                                        "shard-load gap widened across a rebalance: \
+                                         {before:.1} -> {gap_after:.1} ns"
+                                    ),
+                                );
+                            }
+                        }
+                    }
                 }
                 done
             };
@@ -317,6 +410,10 @@ impl ShardedEngine {
             chains.iter().map(Chain::tail_locks).sum::<u64>() + spill.tail_locks();
         let arena_recycled = chains.iter().map(Chain::arena_recycled).sum::<u64>()
             + spill.arena_recycled();
+        // Drained, every chain (shards + spillover) holds exactly its two
+        // sentinels; anything above that is a leaked slot (DESIGN.md §10).
+        let arena_live =
+            chains.iter().map(Chain::arena_live).sum::<usize>() + spill.arena_live();
         let mut totals = WorkerStats::default();
         for w in &per_worker {
             totals.merge(w);
@@ -343,6 +440,7 @@ impl ShardedEngine {
                 arena_capacity,
                 arena_high_water,
                 arena_recycled,
+                arena_live,
             },
             sched: Some(sched),
         }
@@ -406,12 +504,32 @@ impl<M: ShardableModel> ShardCtx<'_, M> {
     }
 }
 
+/// Spread of the modelled per-shard loads (max − min); the rebalancer's
+/// convergence invariant says it never widens across a boundary.
+fn load_gap(loads: &[f64]) -> f64 {
+    let max = loads.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let min = loads.iter().copied().fold(f64::INFINITY, f64::min);
+    if loads.is_empty() {
+        0.0
+    } else {
+        max - min
+    }
+}
+
+/// Consecutive starved idle cycles (idle worker, epoch open, backlog at
+/// its ceiling) a worker tolerates before bypassing the live-task
+/// ceiling for a single task — the livelock guard in
+/// [`sharded_worker`].
+const BACKPRESSURE_PATIENCE: u32 = 64;
+
 /// Sharded-specific per-worker counters (folded into
 /// [`SchedStats`] by the engine).
 #[derive(Default)]
 struct SchedWorker {
     fence_clears: u64,
     spill_blocked: u64,
+    /// Idle cycles spent pressed against the live-task ceiling.
+    backpressure_stalls: u64,
 }
 
 /// Outcome of one shard/spill cycle.
@@ -422,10 +540,14 @@ enum Cycle {
     Idle,
 }
 
-/// Run one sharded worker to completion of the current epoch.
+/// Run one sharded worker to completion of the current epoch. `stall`
+/// is the chaos harness's injected start-up sleep for this epoch
+/// (zero on clean runs) — applied once here, never inside the cycle
+/// loop, so the per-task hot path carries no injection branch.
 fn sharded_worker<M: ShardableModel>(
     ctx: &ShardCtx<'_, M>,
     worker_id: usize,
+    stall: Duration,
 ) -> (WorkerStats, SchedWorker) {
     let shards = ctx.chains.len();
     // Static ownership: worker w owns the shards congruent to w. With
@@ -439,8 +561,14 @@ fn sharded_worker<M: ShardableModel>(
     };
     let mut sw = SchedWorker::default();
     let mut record = ctx.model.record();
+    if !stall.is_zero() {
+        std::thread::sleep(stall);
+    }
     let loop_start = Instant::now();
 
+    // Starvation streak: consecutive idle cycles spent against the
+    // live-task ceiling while the epoch still has tasks to route.
+    let mut starved: u32 = 0;
     loop {
         let mut did_work = false;
         for &s in &own {
@@ -453,18 +581,41 @@ fn sharded_worker<M: ShardableModel>(
             spill_cycle(ctx, &mut record, &mut stats, &mut sw),
             Cycle::Executed
         );
-        if !did_work && !ctx.closed.load(Ordering::Acquire) && !ctx.backlog_full() {
-            // Idle while the epoch still has tasks: pull a batch ourselves
-            // (one cycle's allowance) so shard-less workers (workers >
-            // shards) and workers whose chain ran dry keep the pipeline
-            // fed.
-            let got = ctx.pull(ctx.tasks_per_cycle);
-            if got > 0 {
-                stats.created += got as u64;
-                did_work = true;
+        if !did_work && !ctx.closed.load(Ordering::Acquire) {
+            if !ctx.backlog_full() {
+                // Idle while the epoch still has tasks: pull a batch
+                // ourselves (one cycle's allowance) so shard-less workers
+                // (workers > shards) and workers whose chain ran dry keep
+                // the pipeline fed.
+                let got = ctx.pull(ctx.tasks_per_cycle);
+                if got > 0 {
+                    stats.created += got as u64;
+                    did_work = true;
+                }
+            } else {
+                // Pressed against the live-task ceiling while idle.
+                // Normally other workers' executions drain the backlog
+                // and routing resumes — but if every worker idles here
+                // simultaneously (all live tasks dependence- or
+                // fence-blocked from this worker's view), nobody routes
+                // and the ceiling becomes a livelock. After a bounded
+                // starvation streak, bypass it for a single task so the
+                // canonical front keeps moving; the splitter still routes
+                // in canonical order, so determinism is untouched.
+                sw.backpressure_stalls += 1;
+                starved += 1;
+                if starved >= BACKPRESSURE_PATIENCE {
+                    let got = ctx.pull(1);
+                    if got > 0 {
+                        stats.created += got as u64;
+                        did_work = true;
+                    }
+                }
             }
         }
-        if !did_work {
+        if did_work {
+            starved = 0;
+        } else {
             if ctx.epoch_done() {
                 break;
             }
@@ -1142,6 +1293,79 @@ mod tests {
         .run(&m);
         assert_eq!(m.cells_snapshot(), expected);
         assert_eq!(report.sched.as_ref().unwrap().shards, 6);
+    }
+
+    #[test]
+    fn injected_sharded_runs_stay_state_identical_and_leak_free() {
+        use crate::chaos::{plan, FaultHook};
+        let seed = 31;
+        let build = || PairModel::new(2_000, 64, 0.2, 0);
+        let expected = {
+            let m = build();
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for p in plan::bundled() {
+            for workers in [1, 2, 4] {
+                let m = build();
+                let mut hook = FaultHook::new(p.clone());
+                let report = ShardedEngine::new(ShardedConfig {
+                    workers,
+                    seed,
+                    rebalance_every: 250, // several epochs, several boundaries
+                    ..Default::default()
+                })
+                .run_chaos(&m, &mut hook);
+                assert_eq!(
+                    m.snapshot(),
+                    expected,
+                    "plan={} n={workers} diverged under injection",
+                    p.name
+                );
+                assert_eq!(report.totals.executed, 2_000);
+                assert!(hook.epochs() >= 2, "plan={} must span several epochs", p.name);
+                assert!(
+                    hook.violations().is_empty(),
+                    "clean engine must raise no violations: {:?}",
+                    hook.violations()
+                );
+                let shards = report.sched.as_ref().unwrap().shards;
+                assert_eq!(
+                    report.chain.arena_live,
+                    2 * (shards + 1),
+                    "drained chains hold exactly their sentinels"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backpressure_stalls_are_counted_and_guarded() {
+        // One hot serial shard (single cell → one block → one shard) with
+        // more workers than shards: the shard-less workers fill the
+        // backlog to its ceiling, then idle against it while the owner
+        // drains serially — exactly the regime the livelock guard and
+        // its counter cover.
+        let seed = 41;
+        let expected = {
+            let m = IncModel::with_work(1_200, 1, 400);
+            SequentialEngine::new(seed).run(&m);
+            m.cells_snapshot()
+        };
+        let m = IncModel::with_work(1_200, 1, 400);
+        let report = ShardedEngine::new(ShardedConfig {
+            workers: 4,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.cells_snapshot(), expected, "backpressure run diverged");
+        let sched = report.sched.as_ref().unwrap();
+        assert_eq!(sched.shards, 1, "single-cell topology clamps to one shard");
+        assert!(
+            sched.backpressure_stalls > 0,
+            "idle workers pressed against a full backlog must be counted: {sched:?}"
+        );
     }
 
     #[test]

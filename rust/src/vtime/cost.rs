@@ -130,4 +130,53 @@ mod tests {
         neg.visit_ns = -1.0;
         assert!(neg.validate().is_err());
     }
+
+    #[test]
+    fn zero_work_tasks_still_pay_the_fixed_cost() {
+        // Zero-cost blocks (chaos plans set mul = 0.0) must not produce
+        // zero-duration executions: the DES relies on exec_fixed_ns to
+        // keep virtual time advancing.
+        let c = CostModel::default();
+        assert_eq!(c.exec_ns(0.0), c.exec_fixed_ns);
+        assert!(c.exec_ns(0.0) > 0.0);
+        let ideal = CostModel::ideal(2.0);
+        assert_eq!(ideal.exec_ns(0.0), 0.0, "ideal machine may be free");
+    }
+
+    #[test]
+    fn extreme_skew_stays_finite_and_monotone() {
+        // A 0x/1e6x chaos skew spans 9+ orders of magnitude; the affine
+        // map must stay finite and strictly ordered across all of it.
+        let c = CostModel::default();
+        let works = [0.0, 1.0, 1e3, 1e6, 1e9];
+        let costs: Vec<f64> = works.iter().map(|&w| c.exec_ns(w)).collect();
+        for w in costs.windows(2) {
+            assert!(w[0] < w[1], "exec_ns must grow with work: {costs:?}");
+            assert!(w[1].is_finite());
+        }
+    }
+
+    #[test]
+    fn validate_rejects_nan_and_infinite_costs() {
+        let mut nan = CostModel::default();
+        nan.exec_unit_ns = f64::NAN;
+        assert!(nan.validate().is_err());
+        let mut inf = CostModel::default();
+        inf.create_ns = f64::INFINITY;
+        assert!(inf.validate().is_err());
+    }
+
+    #[test]
+    fn scaled_models_keep_cost_ratios() {
+        // Chaos exec-scale injection multiplies exec_unit_ns; the shape
+        // of the figures depends only on ratios, so scaling must commute
+        // with exec_ns up to the fixed part.
+        let base = CostModel::default();
+        let mut scaled = base;
+        scaled.exec_unit_ns *= 16.0;
+        scaled.validate().unwrap();
+        let w = 37.0;
+        let expected = base.exec_fixed_ns + 16.0 * base.exec_unit_ns * w;
+        assert!((scaled.exec_ns(w) - expected).abs() < 1e-9);
+    }
 }

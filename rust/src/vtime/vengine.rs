@@ -12,6 +12,7 @@ use std::cmp::Ordering as CmpOrdering;
 use std::collections::{BinaryHeap, VecDeque};
 
 use crate::api::observe::{EpochGate, ObsProbe, Observer};
+use crate::chaos::FaultHook;
 use crate::model::{Model, Record, TaskSource};
 use crate::protocol::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 use crate::sim::rng::TaskRng;
@@ -134,7 +135,7 @@ impl VirtualEngine {
     /// [`TimeBasis::Virtual`] marking `time_s` as deterministic virtual
     /// time (max over worker clocks).
     pub fn run<M: Model>(&self, model: &M) -> RunReport {
-        self.run_epochs(model, None)
+        self.run_epochs(model, None, None)
     }
 
     /// Run with epoch snapshots: at every `observer.every()` canonical
@@ -148,19 +149,46 @@ impl VirtualEngine {
         probe: ObsProbe<'_>,
         observer: &mut Observer,
     ) -> RunReport {
-        self.run_epochs(model, Some((probe, observer)))
+        self.run_epochs(model, Some((probe, observer)), None)
+    }
+
+    /// Run under fault injection (DESIGN.md §10): the hook is consulted
+    /// once per epoch boundary — worker clocks are advanced by the
+    /// epoch's stalls/jitter and the cost model is scaled by the mean
+    /// skew before the epoch's events run. The DES event loop itself is
+    /// untouched, so an injected run is exactly as deterministic as a
+    /// clean one.
+    pub fn run_chaos<M: Model>(&self, model: &M, hook: &mut FaultHook) -> RunReport {
+        self.run_epochs(model, None, Some(hook))
+    }
+
+    /// [`run_chaos`](Self::run_chaos) with epoch snapshots; the
+    /// observer's cadence wins over the plan's `every` override (trace
+    /// identity is defined at observation boundaries).
+    pub fn run_chaos_observed<M: Model>(
+        &self,
+        model: &M,
+        probe: ObsProbe<'_>,
+        observer: &mut Observer,
+        hook: &mut FaultHook,
+    ) -> RunReport {
+        self.run_epochs(model, Some((probe, observer)), Some(hook))
     }
 
     fn run_epochs<M: Model>(
         &self,
         model: &M,
         mut obs: Option<(ObsProbe<'_>, &mut Observer)>,
+        mut hook: Option<&mut FaultHook>,
     ) -> RunReport {
         assert!(self.workers >= 1 && self.tasks_per_cycle >= 1);
         self.cost.validate().expect("invalid cost model");
         let every = match &obs {
             Some((_, o)) => o.gate_cadence(),
-            None => u64::MAX,
+            None => match &hook {
+                Some(h) => h.every_or(u64::MAX),
+                None => u64::MAX,
+            },
         };
 
         let mut des = Des {
@@ -217,6 +245,17 @@ impl VirtualEngine {
             observer.record_initial(*probe);
         }
         loop {
+            // Epoch-boundary injection: stalls and jitter advance worker
+            // clocks (pending heap events keep earlier stamps, which the
+            // dispatch assert permits); skew rescales execution costs
+            // from the pristine base each epoch.
+            if let Some(h) = hook.as_mut() {
+                let faults = h.next_epoch(self.workers);
+                for w in 0..self.workers {
+                    des.workers[w].clock += faults.delay_ns(w);
+                }
+                des.cost = faults.scaled_cost(&self.cost);
+            }
             des.source.open(every);
             des.run_to_completion();
             // Quiescent: every created task executed, all workers parked.
@@ -630,6 +669,39 @@ mod tests {
             speedup > 3.3,
             "ideal machine should give near-linear speedup, got {speedup:.2}"
         );
+    }
+
+    #[test]
+    fn injected_runs_preserve_sequential_state() {
+        use crate::chaos::{plan, FaultHook};
+        let seed = 5;
+        let expected = {
+            let m = IncModel::new(1200, 8);
+            SequentialEngine::new(seed).run(&m);
+            m.cells_snapshot()
+        };
+        for p in plan::bundled() {
+            let m = IncModel::new(1200, 8);
+            let mut hook = FaultHook::new(p.clone().with_every(200));
+            let rep = vengine(3, seed).run_chaos(&m, &mut hook);
+            assert_eq!(m.cells_snapshot(), expected, "plan `{}`", p.name);
+            assert_eq!(rep.chain.tasks_executed, 1200, "plan `{}`", p.name);
+            assert!(hook.epochs() >= 2, "plan `{}` must span epochs", p.name);
+            assert!(hook.violations().is_empty(), "plan `{}`", p.name);
+        }
+    }
+
+    #[test]
+    fn injected_stalls_are_deterministic_and_cost_time() {
+        use crate::chaos::{FaultHook, FaultPlan};
+        let run = |ns: f64| {
+            let m = IncModel::with_work(600, 16, 50);
+            let mut hook =
+                FaultHook::new(FaultPlan::new("s", 1).stall(0, 0, ns).with_every(100));
+            vengine(2, 3).run_chaos(&m, &mut hook).time_s
+        };
+        assert_eq!(run(5_000.0), run(5_000.0));
+        assert!(run(500_000.0) > run(0.0), "a long stall must show up in T");
     }
 
     #[test]

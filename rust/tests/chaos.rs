@@ -1,0 +1,170 @@
+//! Chaos-harness acceptance suite (DESIGN.md §10).
+//!
+//! Two statements, end to end:
+//!
+//! 1. **The contract holds.** A seed sweep (`ADAPAR_SOAK_SEEDS` bounds
+//!    the depth on PR gates; the nightly CI soak goes wider via
+//!    `cli soak --seeds 32`) over the bundled fault plans and three
+//!    sharded-capable registry models stays byte-identical to the
+//!    sequential oracle on both injected engines.
+//! 2. **The harness would catch a breach.** A deliberately-broken
+//!    test-only engine variant — the real virtual engine, except a
+//!    stall on one specific worker flips its RNG seeding, emulating a
+//!    fault-dependent scheduling bug — is caught by the invariant
+//!    checkers, shrunk by ddmin to exactly the triggering fault, and
+//!    the emitted repro TOML parses back and still reproduces.
+
+use adapar::api::registry::{self, BuildCtx};
+use adapar::api::{DynModel, Observations, Observer};
+use adapar::chaos::plan::bundled_plan;
+use adapar::chaos::{invariant, soak, FaultHook, FaultPlan, Invariant, Violation};
+use adapar::model::testkit::env_soak_seeds;
+use adapar::protocol::ProtocolConfig;
+use adapar::vtime::CostModel;
+
+// ---------------------------------------------------------------- sweep
+
+#[test]
+fn seed_sweep_is_byte_identical_across_models_and_plans() {
+    let seeds = env_soak_seeds(4);
+    let cfg = soak::SoakConfig {
+        models: vec!["sir".into(), "voter".into(), "ising".into()],
+        seeds,
+        workers: 3,
+        ..Default::default()
+    };
+    let plans = cfg.plans.len() as u64;
+    let report = soak::run(&cfg).unwrap();
+    assert_eq!(report.runs, 3 * seeds * plans, "full grid covered");
+    assert!(report.ok(), "{}", report.summary());
+}
+
+#[test]
+fn soak_rejects_models_without_a_sharded_form() {
+    let cfg = soak::SoakConfig {
+        models: vec!["no-such-model".into()],
+        seeds: 1,
+        ..Default::default()
+    };
+    assert!(soak::run(&cfg).is_err(), "unknown model must not pass silently");
+}
+
+// ------------------------------------------------- broken engine variant
+
+/// Simulation seed of the broken-variant scenario (arbitrary, fixed).
+const SIM_SEED: u64 = 7;
+/// The worker whose injected stall trips the planted bug.
+const BUG_WORKER: usize = 1;
+
+fn build_sir(seed: u64) -> Box<dyn DynModel> {
+    registry::build(
+        "sir",
+        &BuildCtx {
+            size: 2,
+            agents: 300,
+            steps: 60,
+            seed,
+            params: Default::default(),
+        },
+    )
+    .unwrap()
+}
+
+fn oracle() -> Observations {
+    let m = build_sir(SIM_SEED);
+    let mut obs = Observer::new(15);
+    m.run_sequential(SIM_SEED, Some(&mut obs));
+    obs.finish().unwrap()
+}
+
+fn bug_triggered(p: &FaultPlan) -> bool {
+    p.stalls.iter().any(|s| s.worker == BUG_WORKER)
+}
+
+/// The deliberately-broken test-only engine variant: dispatches to the
+/// real virtual engine, but a plan stalling [`BUG_WORKER`] flips the
+/// run's RNG seeding — the signature of a bug that only one injected
+/// schedule exposes. Returns every violation the harness raises.
+fn broken_engine_violations(p: &FaultPlan, reference: &Observations) -> Vec<Violation> {
+    let exec_seed = if bug_triggered(p) { SIM_SEED + 1 } else { SIM_SEED };
+    let m = build_sir(SIM_SEED);
+    let mut hook = FaultHook::new(p.clone());
+    let mut obs = Observer::new(15);
+    let cfg = ProtocolConfig {
+        workers: 3,
+        seed: exec_seed,
+        ..Default::default()
+    };
+    let report = m.run_virtual_chaos(&cfg, &CostModel::default(), Some(&mut obs), &mut hook);
+    let mut out = invariant::check_run(
+        "broken-sir virtual n=3",
+        reference,
+        &obs.finish().unwrap(),
+        &report,
+    );
+    out.extend(hook.take_violations());
+    out
+}
+
+#[test]
+fn broken_engine_is_caught_shrunk_and_reproduced() {
+    let reference = oracle();
+
+    // The clean variant (bug dormant) passes: no crying wolf.
+    let benign = FaultPlan::new("benign", 99).stall(0, 1, 10_000.0);
+    assert!(
+        broken_engine_violations(&benign, &reference).is_empty(),
+        "a non-triggering plan must stay green"
+    );
+
+    // A wide plan containing the triggering stall is caught.
+    let wide = FaultPlan::new("wide", 99)
+        .stall(0, 1, 10_000.0)
+        .stall(BUG_WORKER, 2, 25_000.0)
+        .stall(2, 3, 40_000.0)
+        .skew(0, 4.0)
+        .jitter(100.0)
+        .fence_delay(5_000);
+    let violations = broken_engine_violations(&wide, &reference);
+    assert!(!violations.is_empty(), "the planted bug must be caught");
+    assert!(
+        violations
+            .iter()
+            .any(|v| v.invariant == Invariant::TraceIdentity),
+        "divergence must surface as a trace-identity violation: {violations:?}"
+    );
+
+    // ddmin shrinks the plan to exactly the triggering fault.
+    let shrunk = soak::shrink(&wide, |cand| {
+        !broken_engine_violations(cand, &reference).is_empty()
+    });
+    assert_eq!(shrunk.fault_count(), 1, "1-minimal repro: {shrunk:?}");
+    assert_eq!(shrunk.stalls.len(), 1);
+    assert_eq!(shrunk.stalls[0].worker, BUG_WORKER);
+    assert!(shrunk.cost_skew.is_empty());
+    assert_eq!(shrunk.order_jitter_ns, 0.0);
+    assert_eq!(shrunk.fence_delay_ns, 0);
+
+    // The repro TOML is committable: it parses back as-is (comment
+    // header included) and the parsed plan still reproduces the bug.
+    let toml = soak::repro_toml("sir", SIM_SEED, 3, &shrunk, &violations);
+    let parsed = FaultPlan::from_toml(&toml).unwrap();
+    assert_eq!(parsed, shrunk);
+    assert!(
+        !broken_engine_violations(&parsed, &reference).is_empty(),
+        "the minimized repro must still fail"
+    );
+}
+
+// -------------------------------------------------------- bundled plans
+
+#[test]
+fn bundled_plans_resolve_by_name_and_validate() {
+    for name in ["stalls", "skew", "jitter"] {
+        let p = bundled_plan(name).expect(name);
+        assert_eq!(p.name, name);
+        p.validate().unwrap();
+        assert!(p.fault_count() > 0, "bundled plan `{name}` must inject");
+    }
+    assert!(bundled_plan("nope").is_none());
+}
