@@ -1,0 +1,28 @@
+# Task runner recipes (https://github.com/casey/just). CI mirrors these;
+# plain `cargo` equivalents are listed in README.md for hosts without just.
+
+default: test
+
+build:
+    cargo build --release
+
+test:
+    cargo test -q
+
+# The perf-trajectory benches CI uploads as artifacts (lenient: wall-clock
+# gates report instead of failing on noisy machines).
+bench:
+    ADAPAR_BENCH_LENIENT=1 cargo bench --bench bench_sched
+    ADAPAR_BENCH_LENIENT=1 cargo bench --bench bench_chain --features bench-alloc
+
+# Compare the current tree's deterministic structural metrics (and
+# advisory wall-clock) against the committed run-over-run baseline.
+perf-diff:
+    cargo run --release -- perf-diff --ledger experiments/ledger/BENCH_baseline.json
+
+# Regenerate the committed baseline from this machine: re-runs the ledger
+# scenarios (single-worker, fixed seeds — bit-reproducible) and pins every
+# metric, including wall-clock. Review and commit the result.
+ledger-update:
+    cargo run --release -- perf-diff --update --ledger experiments/ledger/BENCH_baseline.json
+    git diff --stat experiments/ledger/BENCH_baseline.json

@@ -220,11 +220,43 @@ fn main() -> adapar::Result<()> {
         }
     }
 
+    // Structural section: the perf-ledger scenarios (single-worker,
+    // seeded, wall-clock-free apart from the advisory `wall_s` field).
+    // These are the exact rows `adapar perf-diff` gates against
+    // `experiments/ledger/BENCH_baseline.json`.
+    let structural: Vec<Json> = adapar::coordinator::ledger::collect()?
+        .into_iter()
+        .map(|b| {
+            eprintln!(
+                "ledger   {}: {}",
+                b.name,
+                b.metrics
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v}"))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            );
+            Json::Obj(vec![
+                ("name".into(), Json::from(b.name)),
+                (
+                    "metrics".into(),
+                    Json::Obj(
+                        b.metrics
+                            .into_iter()
+                            .map(|(k, v)| (k, Json::from(v)))
+                            .collect(),
+                    ),
+                ),
+            ])
+        })
+        .collect();
+
     let alloc_pass = bytes_per_task_n1.map(|b| b < 16.0);
     let json = Json::Obj(vec![
         ("bench".into(), Json::from("chain")),
         ("configs".into(), Json::Arr(configs)),
         ("alloc".into(), Json::Arr(alloc_rows)),
+        ("structural".into(), Json::Arr(structural)),
         (
             "acceptance".into(),
             Json::Obj(vec![

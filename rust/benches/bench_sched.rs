@@ -442,12 +442,59 @@ fn main() -> adapar::Result<()> {
         }
     }
 
+    // Structural pass: one single-worker sharded run per workload. With
+    // n=1 every counter is deterministic (no thread interleaving), so
+    // these rows are comparable run-over-run without any wall clock —
+    // the same discipline the perf ledger gates on.
+    let mut structural = Vec::new();
+    for skewed in [false, true] {
+        let model = RingBlockModel::new(BLOCKS, ROUNDS, workload(skewed));
+        let report = ShardedEngine::new(ShardedConfig {
+            workers: 1,
+            seed: 42,
+            rebalance_every: 2_048,
+            ..Default::default()
+        })
+        .run(&model);
+        let sched = report.sched.expect("sharded runs report telemetry");
+        eprintln!(
+            "structural workload={:<7}: local={} boundary={} edge_cut={} migrations={} \
+             tail_locks={} arena_high_water={}",
+            if skewed { "skewed" } else { "uniform" },
+            sched.local_tasks,
+            sched.boundary_tasks,
+            sched.edge_cut,
+            sched.migrations,
+            report.chain.tail_locks,
+            report.chain.arena_high_water
+        );
+        structural.push(Json::Obj(vec![
+            (
+                "workload".into(),
+                Json::from(if skewed { "skewed" } else { "uniform" }),
+            ),
+            ("tasks_executed".into(), Json::from(report.chain.tasks_executed)),
+            ("local_tasks".into(), Json::from(sched.local_tasks)),
+            ("boundary_tasks".into(), Json::from(sched.boundary_tasks)),
+            ("edge_cut".into(), Json::from(sched.edge_cut)),
+            ("migrations".into(), Json::from(sched.migrations)),
+            ("rebalances".into(), Json::from(sched.rebalances)),
+            ("tail_locks".into(), Json::from(report.chain.tail_locks)),
+            (
+                "arena_high_water".into(),
+                Json::from(report.chain.arena_high_water),
+            ),
+            ("arena_occupancy".into(), Json::from(sched.arena_occupancy)),
+        ]));
+    }
+
     let ratio = sharded_tp_skew4 / parallel_tp_skew4;
     let json = Json::Obj(vec![
         ("bench".into(), Json::from("sched")),
         ("blocks".into(), Json::from(BLOCKS)),
         ("rounds".into(), Json::from(ROUNDS)),
         ("configs".into(), Json::Arr(configs)),
+        ("structural".into(), Json::Arr(structural)),
         (
             "acceptance".into(),
             Json::Obj(vec![

@@ -16,6 +16,7 @@ use crate::protocol::{
     ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine,
 };
 use crate::sched::{ShardedConfig, ShardedEngine};
+use crate::telemetry::TelemetryMode;
 use crate::vtime::{CostModel, VirtualEngine};
 
 /// An execution backend able to run any [`DynModel`].
@@ -111,7 +112,7 @@ impl Engine for VirtualEngine {
             tasks_per_cycle: self.tasks_per_cycle,
             batch: 1, // the DES models unbatched creation
             seed: self.seed,
-            collect_timing: false,
+            ..Default::default()
         };
         Ok(model.run_virtual(&cfg, &self.cost, obs))
     }
@@ -193,7 +194,8 @@ impl std::fmt::Display for EngineKind {
 
 /// Build a boxed engine for a kind and workflow parameters. `batch` is
 /// the chain engines' creation/routing batch size `B`; `cost` is only
-/// consulted by the virtual testbed.
+/// consulted by the virtual testbed; `telemetry` selects the (inert)
+/// histogram-sampling mode on the threaded engines.
 pub fn engine_for(
     kind: EngineKind,
     workers: usize,
@@ -201,6 +203,7 @@ pub fn engine_for(
     batch: u32,
     seed: u64,
     cost: CostModel,
+    telemetry: TelemetryMode,
 ) -> Box<dyn Engine> {
     match kind {
         EngineKind::Sequential => Box::new(SequentialEngine::new(seed)),
@@ -210,6 +213,7 @@ pub fn engine_for(
             batch,
             seed,
             collect_timing: false,
+            telemetry,
         })),
         EngineKind::Stepwise => Box::new(StepwiseEngine::new(workers, seed)),
         EngineKind::Sharded => Box::new(ShardedEngine::new(ShardedConfig {
@@ -217,6 +221,7 @@ pub fn engine_for(
             tasks_per_cycle,
             batch,
             seed,
+            telemetry,
             ..Default::default()
         })),
         EngineKind::Virtual => Box::new(VirtualEngine {

@@ -409,6 +409,100 @@ impl Sink for ProgressSink {
     }
 }
 
+/// Moves a wrapped sink's I/O onto a dedicated writer thread behind a
+/// bounded channel, so the coordinating thread never blocks on disk
+/// inside an epoch fence (it only pays a frame clone + channel send).
+///
+/// Output is **byte-identical** to the wrapped sink run synchronously:
+/// there is exactly one consumer and the channel is FIFO, so frames
+/// reach the inner sink in record order. [`finish`](Sink::finish) is
+/// the flush fence — it closes the channel, joins the writer (which
+/// runs the inner sink's `finish`), and surfaces any deferred write
+/// error. A full channel applies backpressure (the send blocks) rather
+/// than dropping frames: observation output is lossless by contract,
+/// unlike telemetry ring samples.
+///
+/// Dropping an unfinished `AsyncSink` still closes the channel and
+/// joins the writer — the error-path guard that leaves complete,
+/// parseable files behind a failed run (errors are swallowed; `Drop`
+/// cannot surface them).
+pub struct AsyncSink {
+    tx: Option<std::sync::mpsc::SyncSender<ObsFrame>>,
+    writer: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl AsyncSink {
+    /// Default channel depth (frames buffered before backpressure).
+    pub const DEFAULT_DEPTH: usize = 256;
+
+    /// Wrap `inner`, spawning the writer thread.
+    pub fn new(inner: Box<dyn Sink>) -> Self {
+        Self::with_depth(inner, Self::DEFAULT_DEPTH)
+    }
+
+    /// Wrap `inner` with an explicit channel depth (min 1).
+    pub fn with_depth(mut inner: Box<dyn Sink>, depth: usize) -> Self {
+        let (tx, rx) = std::sync::mpsc::sync_channel::<ObsFrame>(depth.max(1));
+        let writer = std::thread::Builder::new()
+            .name("adapar-obs-sink".to_string())
+            .spawn(move || -> Result<()> {
+                // Frames drain in FIFO order; the loop ends when every
+                // sender is dropped (finish or the drop guard).
+                for frame in rx {
+                    inner.record(&frame)?;
+                }
+                inner.finish()
+            })
+            .expect("spawn observation sink writer");
+        Self {
+            tx: Some(tx),
+            writer: Some(writer),
+        }
+    }
+
+    /// Close the channel and join the writer; idempotent.
+    fn join(&mut self) -> Result<()> {
+        drop(self.tx.take());
+        match self.writer.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| crate::error::Error::msg("observation sink writer panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Sink for AsyncSink {
+    fn record(&mut self, frame: &ObsFrame) -> Result<()> {
+        let Some(tx) = &self.tx else {
+            return Err(crate::error::Error::msg(
+                "record after observation sink finished",
+            ));
+        };
+        if tx.send(frame.clone()).is_err() {
+            // The writer exited early — its deferred error is the real
+            // diagnosis, not the broken channel.
+            return match self.join() {
+                Ok(()) => Err(crate::error::Error::msg(
+                    "observation sink writer exited early",
+                )),
+                Err(e) => Err(e),
+            };
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.join()
+    }
+}
+
+impl Drop for AsyncSink {
+    fn drop(&mut self) {
+        let _ = self.join();
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Observer + plan
 // ---------------------------------------------------------------------------
@@ -522,10 +616,26 @@ impl Observer {
         for sink in &mut self.sinks {
             sink.finish()?;
         }
+        // Finished cleanly — disarm the drop guard so sinks are not
+        // flushed twice.
+        self.sinks.clear();
         Ok(Observations {
             every: self.every,
-            frames: self.frames,
+            frames: std::mem::take(&mut self.frames),
         })
+    }
+}
+
+impl Drop for Observer {
+    /// Error-path guard: a run that unwinds past [`finish`](Observer::finish)
+    /// (engine error, `?` in the caller) still flushes and closes every
+    /// sink, so red runs leave complete CSV/JSON-lines files behind.
+    /// Errors are swallowed — `Drop` has nowhere to surface them, and the
+    /// original failure is the diagnosis the user needs.
+    fn drop(&mut self) {
+        for sink in &mut self.sinks {
+            let _ = sink.finish();
+        }
     }
 }
 
@@ -544,12 +654,17 @@ pub enum SinkSpec {
 impl SinkSpec {
     /// Materialize the sink. `total_tasks` is the run's
     /// [`size_hint`](TaskSource::size_hint), used by the progress sink.
+    ///
+    /// Every variant is wrapped in an [`AsyncSink`], so file and terminal
+    /// I/O happens off the coordinating thread; output bytes and order
+    /// are identical to the synchronous sink.
     pub fn build(&self, total_tasks: Option<u64>) -> Result<Box<dyn Sink>> {
-        Ok(match self {
+        let inner: Box<dyn Sink> = match self {
             SinkSpec::Csv(path) => Box::new(CsvSink::create(path)?),
             SinkSpec::JsonLines(path) => Box::new(JsonLinesSink::create(path)?),
             SinkSpec::Progress => Box::new(ProgressSink::new(total_tasks)),
-        })
+        };
+        Ok(Box::new(AsyncSink::new(inner)))
     }
 }
 

@@ -33,6 +33,7 @@ use crate::api::observe::{Observations, ObservePlan, Observer};
 use crate::api::registry::{self, BuildCtx, Params};
 use crate::error::Result;
 use crate::protocol::{ProtocolConfig, RunReport};
+use crate::telemetry::TelemetryMode;
 use crate::util::toml::Value;
 use crate::vtime::CostModel;
 
@@ -80,6 +81,9 @@ pub struct Simulation {
     pub cost: Option<CostModel>,
     /// Observation request: epoch cadence + sinks.
     pub observe: ObservePlan,
+    /// Telemetry sampling mode (semantically inert; defaults from
+    /// `ADAPAR_TELEMETRY`).
+    pub telemetry: TelemetryMode,
 }
 
 impl Default for Simulation {
@@ -98,6 +102,7 @@ impl Default for Simulation {
             params: Params::new(),
             cost: None,
             observe: ObservePlan::default(),
+            telemetry: TelemetryMode::env_default(),
         }
     }
 }
@@ -144,6 +149,7 @@ impl Simulation {
             self.batch,
             self.seed,
             self.cost.unwrap_or_default(),
+            self.telemetry,
         );
 
         // Materialize the observation pipeline: the in-memory trace is
@@ -270,6 +276,13 @@ impl SimulationBuilder {
     /// Request typed observation: epoch cadence plus sinks.
     pub fn observe(mut self, plan: ObservePlan) -> Self {
         self.sim.observe = plan;
+        self
+    }
+
+    /// Telemetry sampling mode (inert — results are identical in any
+    /// mode; only the report's `telemetry` histograms change).
+    pub fn telemetry(mut self, mode: TelemetryMode) -> Self {
+        self.sim.telemetry = mode;
         self
     }
 

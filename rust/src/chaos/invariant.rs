@@ -216,6 +216,7 @@ mod tests {
                 shards: s,
                 ..Default::default()
             }),
+            telemetry: None,
         }
     }
 

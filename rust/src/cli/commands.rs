@@ -8,6 +8,7 @@ use std::path::PathBuf;
 use crate::api::observe::ObservePlan;
 use crate::api::{registry, EngineKind, Params, SimOutcome, Simulation};
 use crate::coordinator::config::SweepConfig;
+use crate::coordinator::ledger;
 use crate::coordinator::report::{figure_pivot, sweep_json, write_bench_json, write_report};
 use crate::coordinator::run_sweep;
 use crate::error::{Context, Result};
@@ -158,6 +159,10 @@ pub fn run(args: &Args) -> Result<()> {
     let seed = args.get_parse("seed", 1u64)?;
     let json = args.has_flag("json");
     let plan = observe_plan_from(args, !json)?;
+    let telemetry = args.get_parse(
+        "telemetry",
+        crate::telemetry::TelemetryMode::env_default(),
+    )?;
     let out = Simulation::builder()
         .model(cfg.model.clone())
         .engine(engine)
@@ -171,6 +176,7 @@ pub fn run(args: &Args) -> Result<()> {
         .paper_scale(cfg.paper_scale)
         .params(cfg.params.clone())
         .observe(plan)
+        .telemetry(telemetry)
         .run()?;
     if json {
         println!("{}", run_json(&cfg, &out, size, seed).render());
@@ -451,6 +457,85 @@ pub fn soak(args: &Args) -> Result<()> {
         report.ok(),
         "soak found {} invariant-violating combination(s); repros written",
         report.failures.len()
+    );
+    Ok(())
+}
+
+/// `adapar perf-diff` — the run-over-run perf gate. Runs the fixed
+/// deterministic ledger scenarios, compares against the committed
+/// baseline (`--ledger`), and exits nonzero on any structural or schema
+/// regression. Wall-clock drift is tolerance-checked and only reported
+/// under `--lenient` / `ADAPAR_BENCH_LENIENT=1` (the CI default, since
+/// runner machines vary). `--update` regenerates the baseline instead of
+/// gating; `--seed-regression` deliberately perturbs one pinned metric
+/// so CI can prove the gate actually fails.
+pub fn perf_diff(args: &Args) -> Result<()> {
+    let ledger_path = PathBuf::from(
+        args.get("ledger")
+            .unwrap_or("experiments/ledger/BENCH_baseline.json"),
+    );
+    eprintln!("perf-diff: running ledger scenarios (deterministic, single-worker)...");
+    let mut fresh = ledger::collect()?;
+
+    if args.has_flag("update") {
+        let tolerance = ledger::Ledger::load(&ledger_path)
+            .map(|l| l.tolerance)
+            .unwrap_or(ledger::DEFAULT_TOLERANCE);
+        let updated = ledger::Ledger::pinned(&fresh, tolerance);
+        updated.write(&ledger_path)?;
+        println!("perf-diff: wrote {} (all metrics pinned)", ledger_path.display());
+        return Ok(());
+    }
+
+    let base = ledger::Ledger::load(&ledger_path)?;
+    if args.has_flag("seed-regression") {
+        let which = ledger::seed_regression(&base, &mut fresh)?;
+        eprintln!("perf-diff: seeded a fake regression in {which}");
+    }
+    let lenient = args.has_flag("lenient")
+        || std::env::var("ADAPAR_BENCH_LENIENT").is_ok_and(|v| v != "0" && !v.is_empty());
+    let diff = ledger::diff(&base, &fresh, lenient);
+
+    if let Some(path) = args.get("report") {
+        let path = PathBuf::from(path);
+        crate::util::create_parent_dirs(&path)?;
+        let mut text = diff.to_json().render();
+        text.push('\n');
+        std::fs::write(&path, text)
+            .with_context(|| format!("writing diff report {}", path.display()))?;
+        eprintln!("perf-diff: wrote report {}", path.display());
+    }
+
+    if args.has_flag("json") {
+        println!("{}", diff.to_json().render());
+    } else {
+        for n in &diff.notes {
+            println!("  ok    {n}");
+        }
+        for w in &diff.warnings {
+            println!("  warn  {w}");
+        }
+        for f in &diff.failures {
+            println!("  FAIL  {f}");
+        }
+    }
+    if base.provisional {
+        eprintln!(
+            "perf-diff: baseline is provisional (unpinned metrics); \
+             run `just ledger-update` on a reference machine to pin it"
+        );
+    }
+    crate::ensure!(
+        diff.ok(),
+        "perf-diff: {} regression(s) against {}",
+        diff.failures.len(),
+        ledger_path.display()
+    );
+    println!(
+        "perf-diff: ok ({} checked, {} warning(s)) against {}",
+        diff.notes.len(),
+        diff.warnings.len(),
+        ledger_path.display()
     );
     Ok(())
 }

@@ -20,9 +20,11 @@ const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
         "c", "batch", "config", "preset", "out", "sample", "params", "every", "observe",
-        "move-radius", "models", "plans",
+        "move-radius", "models", "plans", "telemetry", "ledger", "report",
     ],
-    flags: &["paper-scale", "calibrate", "help", "json"],
+    flags: &[
+        "paper-scale", "calibrate", "help", "json", "update", "seed-regression", "lenient",
+    ],
 };
 
 const USAGE: &str = "\
@@ -39,6 +41,9 @@ COMMANDS:
   validate         assert parallel == sequential bit-for-bit for a model
   soak             chaos sweep: seeds × fault plans × models under injection,
                    shrinking any failure to a committable repro TOML
+  perf-diff        compare fresh deterministic bench metrics against a
+                   committed ledger baseline (structural = hard gate,
+                   wall-clock = tolerance)
   artifacts-check  compile every AOT artifact and smoke-test the XLA path
 
 COMMON OPTIONS:
@@ -65,6 +70,16 @@ COMMON OPTIONS:
                                         overrides the default [8]
   --every <n>                           run/validate: record typed observations every n tasks
   --observe <file.csv|file.jsonl>       run: also stream the observation trace to a file
+  --telemetry <on|off|saturate>         histogram sampling mode (inert: results identical
+                                        in any mode); env ADAPAR_TELEMETRY sets the default
+  --ledger <file.json>                  perf-diff: baseline ledger
+                                        [experiments/ledger/BENCH_baseline.json]
+  --report <file.json>                  perf-diff: also write the diff report as JSON
+  --update                              perf-diff: regenerate the baseline from fresh metrics
+  --seed-regression                     perf-diff: perturb one pinned metric (CI self-test;
+                                        the diff must then exit nonzero)
+  --lenient                             perf-diff: report wall-clock drift instead of failing
+                                        (env ADAPAR_BENCH_LENIENT=1 does the same)
   --json                                run/sweep: machine-readable JSON on stdout
   --paper-scale                         use the paper's full workload sizes
   --calibrate                           calibrate the virtual cost model first
@@ -85,6 +100,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "calibrate" => commands::calibrate_cmd(&args),
         "validate" => commands::validate(&args),
         "soak" => commands::soak(&args),
+        "perf-diff" => commands::perf_diff(&args),
         "artifacts-check" => commands::artifacts_check(&args),
         other => crate::bail!("unknown command `{other}`; try --help"),
     }

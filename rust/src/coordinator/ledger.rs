@@ -1,0 +1,512 @@
+//! The run-over-run perf ledger behind `adapar perf-diff`.
+//!
+//! A ledger is a committed JSON baseline of **structural** metrics from
+//! a fixed set of deterministic single-worker workloads: task counts,
+//! tail-lock counts, chain depth, arena occupancy, edge cut — numbers
+//! that depend only on the protocol, never on the clock. Because the
+//! workloads are seeded and single-worker, every metric is reproducible
+//! bit-for-bit on any machine, so the diff is a **hard gate**: a changed
+//! structural value means the protocol's behavior changed, and the PR
+//! either updates the baseline deliberately (`perf-diff --update`, the
+//! `just ledger-update` target) or fixes the regression.
+//!
+//! Wall-clock (`wall_s`) rides along for trend visibility but is noisy
+//! and machine-dependent, so it is compared against a relative
+//! `tolerance` and only *reported* when `--lenient` (or
+//! `ADAPAR_BENCH_LENIENT=1`, the CI default) is set.
+//!
+//! A `null` in the baseline marks a metric as **unpinned**: the diff
+//! prints the fresh value without gating on it. The committed seed
+//! baseline pins only hand-derivable task counts and leaves the rest
+//! unpinned until a toolchain run regenerates it.
+
+use std::path::Path;
+
+use crate::api::{EngineKind, Simulation};
+use crate::error::{Context, Result};
+use crate::protocol::RunReport;
+use crate::util::json::Json;
+
+/// Ledger schema version; bumped on any metric/shape change.
+pub const SCHEMA: i64 = 1;
+
+/// Default relative tolerance for wall-clock comparisons.
+pub const DEFAULT_TOLERANCE: f64 = 0.25;
+
+/// Fresh metrics for one named bench scenario, in canonical key order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchMetrics {
+    /// Scenario name (the ledger's bench key).
+    pub name: String,
+    /// `(metric, value)` pairs; `wall_*` keys are wall-clock, everything
+    /// else is structural.
+    pub metrics: Vec<(String, f64)>,
+}
+
+/// Whether a metric key is wall-clock (tolerance-compared) rather than
+/// structural (exact-compared).
+pub fn is_wall_metric(key: &str) -> bool {
+    key.starts_with("wall_")
+}
+
+fn chain_metrics(report: &RunReport) -> Vec<(String, f64)> {
+    vec![
+        ("tasks_created".into(), report.chain.tasks_created as f64),
+        ("tasks_executed".into(), report.chain.tasks_executed as f64),
+        ("tail_locks".into(), report.chain.tail_locks as f64),
+        ("max_chain_len".into(), report.chain.max_chain_len as f64),
+        (
+            "arena_high_water".into(),
+            report.chain.arena_high_water as f64,
+        ),
+        ("arena_recycled".into(), report.chain.arena_recycled as f64),
+        ("wall_s".into(), report.time_s),
+    ]
+}
+
+fn sched_metrics(report: &RunReport) -> Vec<(String, f64)> {
+    let sched = report.sched.as_ref().expect("sharded run reports sched");
+    vec![
+        ("tasks_created".into(), report.chain.tasks_created as f64),
+        ("tasks_executed".into(), report.chain.tasks_executed as f64),
+        ("local_tasks".into(), sched.local_tasks as f64),
+        ("boundary_tasks".into(), sched.boundary_tasks as f64),
+        ("edge_cut".into(), sched.edge_cut as f64),
+        ("migrations".into(), sched.migrations as f64),
+        ("rebalances".into(), sched.rebalances as f64),
+        ("tail_locks".into(), report.chain.tail_locks as f64),
+        (
+            "arena_high_water".into(),
+            report.chain.arena_high_water as f64,
+        ),
+        ("wall_s".into(), report.time_s),
+    ]
+}
+
+/// Run every ledger scenario and return its metrics. Scenarios are
+/// single-worker and seeded, so the structural metrics are deterministic
+/// on any host; only `wall_s` varies run to run.
+pub fn collect() -> Result<Vec<BenchMetrics>> {
+    let chain = |model: &str, agents: usize, steps: u64, size: usize, seed: u64| {
+        Simulation::builder()
+            .model(model)
+            .engine(EngineKind::Parallel)
+            .workers(1)
+            .batch(16)
+            .agents(agents)
+            .steps(steps)
+            .size(size)
+            .seed(seed)
+            .run()
+    };
+    let voter = chain("voter", 240, 4_000, 0, 7)?;
+    let sir = chain("sir", 200, 50, 20, 11)?;
+    let sched = Simulation::builder()
+        .model("voter")
+        .engine(EngineKind::Sharded)
+        .workers(1)
+        .batch(16)
+        .agents(240)
+        .steps(4_000)
+        .seed(7)
+        .run()?;
+    Ok(vec![
+        BenchMetrics {
+            name: "chain_voter".into(),
+            metrics: chain_metrics(&voter.report),
+        },
+        BenchMetrics {
+            name: "chain_sir".into(),
+            metrics: chain_metrics(&sir.report),
+        },
+        BenchMetrics {
+            name: "sched_voter".into(),
+            metrics: sched_metrics(&sched.report),
+        },
+    ])
+}
+
+/// A parsed baseline ledger.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Ledger {
+    /// Schema version (must equal [`SCHEMA`]).
+    pub schema: i64,
+    /// `true` while the baseline still carries unpinned (`null`) values.
+    pub provisional: bool,
+    /// Relative wall-clock tolerance.
+    pub tolerance: f64,
+    /// `(bench, [(metric, pinned value)])`; `None` = unpinned.
+    pub benches: Vec<(String, Vec<(String, Option<f64>)>)>,
+}
+
+impl Ledger {
+    /// Parse a ledger from JSON text.
+    pub fn from_json_text(text: &str) -> Result<Ledger> {
+        let root = Json::parse(text).map_err(crate::error::Error::msg)?;
+        let schema = root
+            .get("schema")
+            .and_then(Json::as_i64)
+            .ok_or("ledger is missing a numeric `schema` field")?;
+        let provisional = matches!(root.get("provisional"), Some(Json::Bool(true)));
+        let tolerance = root
+            .get("tolerance")
+            .and_then(Json::as_f64)
+            .unwrap_or(DEFAULT_TOLERANCE);
+        let mut benches = Vec::new();
+        for (name, entry) in root
+            .get("benches")
+            .and_then(Json::as_obj)
+            .ok_or("ledger is missing the `benches` object")?
+        {
+            let mut metrics = Vec::new();
+            for (key, value) in entry
+                .as_obj()
+                .ok_or_else(|| format!("ledger bench `{name}` is not an object"))?
+            {
+                let pinned = match value {
+                    Json::Null => None,
+                    v => Some(v.as_f64().ok_or_else(|| {
+                        format!("ledger metric `{name}.{key}` is not a number or null")
+                    })?),
+                };
+                metrics.push((key.clone(), pinned));
+            }
+            benches.push((name.clone(), metrics));
+        }
+        Ok(Ledger {
+            schema,
+            provisional,
+            tolerance,
+            benches,
+        })
+    }
+
+    /// Load a ledger file.
+    pub fn load(path: &Path) -> Result<Ledger> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading ledger {}", path.display()))?;
+        Self::from_json_text(&text)
+            .with_context(|| format!("parsing ledger {}", path.display()))
+    }
+
+    /// A fully-pinned ledger from fresh metrics (the `--update` output).
+    pub fn pinned(fresh: &[BenchMetrics], tolerance: f64) -> Ledger {
+        Ledger {
+            schema: SCHEMA,
+            provisional: false,
+            tolerance,
+            benches: fresh
+                .iter()
+                .map(|b| {
+                    (
+                        b.name.clone(),
+                        b.metrics.iter().map(|(k, v)| (k.clone(), Some(*v))).collect(),
+                    )
+                })
+                .collect(),
+        }
+    }
+
+    /// The ledger as a JSON tree (field order is canonical, so
+    /// regeneration is byte-stable).
+    pub fn to_json(&self) -> Json {
+        Json::Obj(vec![
+            ("schema".into(), Json::from(self.schema)),
+            ("provisional".into(), Json::from(self.provisional)),
+            ("tolerance".into(), Json::from(self.tolerance)),
+            (
+                "benches".into(),
+                Json::Obj(
+                    self.benches
+                        .iter()
+                        .map(|(name, metrics)| {
+                            (
+                                name.clone(),
+                                Json::Obj(
+                                    metrics
+                                        .iter()
+                                        .map(|(k, v)| {
+                                            (
+                                                k.clone(),
+                                                match v {
+                                                    None => Json::Null,
+                                                    Some(x) => Json::from(*x),
+                                                },
+                                            )
+                                        })
+                                        .collect(),
+                                ),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Write the ledger (trailing newline, parent dirs created).
+    pub fn write(&self, path: &Path) -> Result<()> {
+        crate::util::create_parent_dirs(path)?;
+        let mut text = self.to_json().render();
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing ledger {}", path.display()))
+    }
+}
+
+/// Outcome of one baseline-vs-fresh comparison.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Diff {
+    /// Hard failures: schema mismatches and structural regressions (and
+    /// over-tolerance wall-clock when not lenient).
+    pub failures: Vec<String>,
+    /// Report-only findings (over-tolerance wall-clock under lenient).
+    pub warnings: Vec<String>,
+    /// Informational lines: matches and unpinned metrics.
+    pub notes: Vec<String>,
+}
+
+impl Diff {
+    /// Whether the gate passes.
+    pub fn ok(&self) -> bool {
+        self.failures.is_empty()
+    }
+
+    /// The diff as a JSON report artifact.
+    pub fn to_json(&self) -> Json {
+        let arr = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::from(s.clone())).collect());
+        Json::Obj(vec![
+            ("ok".into(), Json::from(self.ok())),
+            ("failures".into(), arr(&self.failures)),
+            ("warnings".into(), arr(&self.warnings)),
+            ("notes".into(), arr(&self.notes)),
+        ])
+    }
+}
+
+/// Compare fresh metrics against a baseline. Structural metrics must
+/// match a pinned baseline value exactly; `wall_*` metrics compare
+/// within `base.tolerance` (a miss is a warning under `lenient`, a
+/// failure otherwise); bench/metric sets must agree exactly (schema
+/// gate).
+pub fn diff(base: &Ledger, fresh: &[BenchMetrics], lenient: bool) -> Diff {
+    let mut d = Diff::default();
+    if base.schema != SCHEMA {
+        d.failures.push(format!(
+            "schema mismatch: ledger has {}, this binary expects {SCHEMA} \
+             (regenerate with `perf-diff --update`)",
+            base.schema
+        ));
+        return d;
+    }
+    for (name, _) in &base.benches {
+        if !fresh.iter().any(|b| &b.name == name) {
+            d.failures
+                .push(format!("bench `{name}` is in the ledger but no longer runs"));
+        }
+    }
+    for b in fresh {
+        let Some((_, baseline)) = base.benches.iter().find(|(n, _)| n == &b.name) else {
+            d.failures
+                .push(format!("bench `{}` is not in the ledger", b.name));
+            continue;
+        };
+        for (key, _) in baseline {
+            if !b.metrics.iter().any(|(k, _)| k == key) {
+                d.failures
+                    .push(format!("metric `{}.{key}` is pinned but no longer emitted", b.name));
+            }
+        }
+        for (key, got) in &b.metrics {
+            let Some((_, pinned)) = baseline.iter().find(|(k, _)| k == key) else {
+                d.failures
+                    .push(format!("metric `{}.{key}` is not in the ledger", b.name));
+                continue;
+            };
+            match (pinned, is_wall_metric(key)) {
+                (None, _) => d
+                    .notes
+                    .push(format!("{}.{key}: unpinned (fresh {got})", b.name)),
+                (Some(want), false) => {
+                    if got == want {
+                        d.notes.push(format!("{}.{key}: {got} (match)", b.name));
+                    } else {
+                        d.failures.push(format!(
+                            "{}.{key}: structural regression — baseline {want}, got {got}",
+                            b.name
+                        ));
+                    }
+                }
+                (Some(want), true) => {
+                    let rel = if *want == 0.0 {
+                        if *got == 0.0 {
+                            0.0
+                        } else {
+                            f64::INFINITY
+                        }
+                    } else {
+                        (got - want).abs() / want.abs()
+                    };
+                    if rel <= base.tolerance {
+                        d.notes.push(format!(
+                            "{}.{key}: {got:.6}s vs {want:.6}s ({:+.1}%, within tolerance)",
+                            b.name,
+                            100.0 * (got - want) / want.abs()
+                        ));
+                    } else {
+                        let line = format!(
+                            "{}.{key}: wall-clock drift — baseline {want:.6}s, got {got:.6}s \
+                             ({:.0}% > {:.0}% tolerance)",
+                            b.name,
+                            100.0 * rel,
+                            100.0 * base.tolerance
+                        );
+                        if lenient {
+                            d.warnings.push(line);
+                        } else {
+                            d.failures.push(line);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    d
+}
+
+/// Perturb the first pinned structural metric in `fresh` (the CI
+/// self-test: proves the gate exits nonzero on a seeded regression).
+/// Errors if the baseline pins nothing structural.
+pub fn seed_regression(base: &Ledger, fresh: &mut [BenchMetrics]) -> Result<String> {
+    for b in fresh.iter_mut() {
+        let Some((_, baseline)) = base.benches.iter().find(|(n, _)| n == &b.name) else {
+            continue;
+        };
+        for (key, got) in b.metrics.iter_mut() {
+            let pinned = baseline
+                .iter()
+                .any(|(k, v)| k == key && v.is_some() && !is_wall_metric(k));
+            if pinned {
+                *got += 1.0;
+                return Ok(format!("{}.{key}", b.name));
+            }
+        }
+    }
+    crate::bail!("cannot seed a regression: the ledger pins no structural metric")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fresh() -> Vec<BenchMetrics> {
+        vec![BenchMetrics {
+            name: "b".into(),
+            metrics: vec![
+                ("tasks_executed".into(), 100.0),
+                ("wall_s".into(), 1.0),
+            ],
+        }]
+    }
+
+    fn base(executed: Option<f64>, wall: Option<f64>) -> Ledger {
+        Ledger {
+            schema: SCHEMA,
+            provisional: false,
+            tolerance: 0.25,
+            benches: vec![(
+                "b".into(),
+                vec![("tasks_executed".into(), executed), ("wall_s".into(), wall)],
+            )],
+        }
+    }
+
+    #[test]
+    fn ledger_json_round_trips() {
+        let l = base(Some(100.0), None);
+        let back = Ledger::from_json_text(&l.to_json().render()).unwrap();
+        assert_eq!(back, l);
+    }
+
+    #[test]
+    fn matching_structural_metrics_pass() {
+        let d = diff(&base(Some(100.0), None), &fresh(), false);
+        assert!(d.ok(), "{:?}", d.failures);
+        assert!(d.notes.iter().any(|n| n.contains("match")));
+        assert!(d.notes.iter().any(|n| n.contains("unpinned")));
+    }
+
+    #[test]
+    fn structural_mismatch_is_a_hard_failure_even_when_lenient() {
+        let d = diff(&base(Some(99.0), None), &fresh(), true);
+        assert!(!d.ok());
+        assert!(d.failures[0].contains("structural regression"), "{:?}", d.failures);
+    }
+
+    #[test]
+    fn wall_drift_is_lenient_dependent() {
+        let strict = diff(&base(Some(100.0), Some(0.5)), &fresh(), false);
+        assert!(!strict.ok());
+        let lenient = diff(&base(Some(100.0), Some(0.5)), &fresh(), true);
+        assert!(lenient.ok());
+        assert_eq!(lenient.warnings.len(), 1);
+        let close = diff(&base(Some(100.0), Some(0.9)), &fresh(), false);
+        assert!(close.ok(), "within 25% tolerance: {:?}", close.failures);
+    }
+
+    #[test]
+    fn schema_and_shape_mismatches_fail() {
+        let mut wrong = base(Some(100.0), None);
+        wrong.schema = SCHEMA + 1;
+        assert!(!diff(&wrong, &fresh(), true).ok());
+
+        let mut extra = base(Some(100.0), None);
+        extra.benches[0].1.push(("gone".into(), Some(1.0)));
+        let d = diff(&extra, &fresh(), true);
+        assert!(d.failures.iter().any(|f| f.contains("no longer emitted")), "{:?}", d.failures);
+
+        let renamed = Ledger {
+            benches: vec![("other".into(), vec![])],
+            ..base(None, None)
+        };
+        let d = diff(&renamed, &fresh(), true);
+        assert!(d.failures.iter().any(|f| f.contains("no longer runs")));
+        assert!(d.failures.iter().any(|f| f.contains("not in the ledger")));
+    }
+
+    #[test]
+    fn seeded_regression_perturbs_a_pinned_structural_metric() {
+        let b = base(Some(100.0), None);
+        let mut f = fresh();
+        let which = seed_regression(&b, &mut f).unwrap();
+        assert_eq!(which, "b.tasks_executed");
+        assert_eq!(f[0].metrics[0].1, 101.0);
+        assert!(!diff(&b, &f, true).ok());
+
+        let unpinned = base(None, Some(1.0));
+        assert!(seed_regression(&unpinned, &mut fresh()).is_err());
+    }
+
+    #[test]
+    fn collect_produces_deterministic_structural_metrics() {
+        let a = collect().unwrap();
+        let b = collect().unwrap();
+        assert_eq!(a.len(), 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.name, y.name);
+            for ((k, vx), (_, vy)) in x.metrics.iter().zip(&y.metrics) {
+                if !is_wall_metric(k) {
+                    assert_eq!(vx, vy, "{}.{k} must be deterministic", x.name);
+                }
+            }
+        }
+        // The hand-derivable pins in the committed baseline.
+        let by_name = |n: &str| a.iter().find(|b| b.name == n).unwrap();
+        let metric = |b: &BenchMetrics, k: &str| {
+            b.metrics.iter().find(|(key, _)| key == k).unwrap().1
+        };
+        assert_eq!(metric(by_name("chain_voter"), "tasks_executed"), 4_000.0);
+        assert_eq!(metric(by_name("chain_sir"), "tasks_executed"), 2_000.0);
+        assert_eq!(metric(by_name("sched_voter"), "tasks_executed"), 4_000.0);
+    }
+}

@@ -7,12 +7,17 @@
 //!   simulation instances with different starting seeds").
 //! * [`report`] — figure-series tables (markdown pivot + CSV).
 //! * [`runner`] — single-run dispatch across engines and models.
+//! * [`ledger`] — the run-over-run perf ledger behind `adapar perf-diff`
+//!   (deterministic structural metrics hard-gated against a committed
+//!   baseline; wall-clock compared leniently).
 
 pub mod config;
 pub mod experiment;
+pub mod ledger;
 pub mod report;
 pub mod runner;
 
 pub use config::{EngineKind, SweepConfig};
 pub use experiment::{run_sweep, PointResult, SweepResult};
+pub use ledger::{BenchMetrics, Ledger};
 pub use runner::{run_once, simulation_for, RunOutcome};

@@ -44,6 +44,11 @@
 //!   epoch snapshots, CSV/JSON-lines sinks), and the builder-style
 //!   [`Simulation`] facade — the single entry point used by the CLI,
 //!   sweeps, benches and examples.
+//! * [`telemetry`] — the always-on metrics core: a [`MetricsRegistry`]
+//!   of named instruments, per-worker SPSC sample rings drained by a
+//!   background aggregator into mergeable percentile histograms, and
+//!   the [`TelemetrySnapshot`] every engine attaches to its report —
+//!   semantically inert by construction (DESIGN.md §11).
 //! * [`chaos`] — the deterministic chaos harness: seeded declarative
 //!   fault plans (stalls, cost skews, jitter, fence delays) injected at
 //!   epoch boundaries, invariant checkers against the sequential
@@ -72,6 +77,7 @@ pub mod protocol;
 pub mod runtime;
 pub mod sched;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 pub mod vtime;
 
@@ -82,6 +88,7 @@ pub use api::{
 };
 pub use error::{Context, Error};
 pub use sched::{PartitionHint, PartitionPolicy, ShardableModel, ShardedConfig, ShardedEngine};
+pub use telemetry::{MetricsRegistry, TelemetryMode, TelemetrySnapshot};
 
 /// Crate-wide result type.
 pub type Result<T> = error::Result<T>;

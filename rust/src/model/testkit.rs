@@ -33,6 +33,32 @@ pub fn env_batches() -> Vec<u32> {
     }
 }
 
+/// Telemetry modes for the conformance matrix: all three (sampling on,
+/// off, and saturated 4-slot rings), or the single mode pinned by
+/// `ADAPAR_TELEMETRY_MODES`. Telemetry is semantically inert, so every
+/// mode must leave every trace byte-identical — this axis is the test of
+/// that claim. Shared by `rust/tests/conformance.rs` and
+/// `rust/tests/telemetry.rs`.
+pub fn env_telemetry_modes() -> Vec<crate::telemetry::TelemetryMode> {
+    use crate::telemetry::TelemetryMode;
+    match std::env::var("ADAPAR_TELEMETRY_MODES") {
+        Ok(v) => v
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .expect("ADAPAR_TELEMETRY_MODES must list on|off|saturate")
+            })
+            .collect(),
+        Err(_) => vec![
+            TelemetryMode::On,
+            TelemetryMode::Off,
+            TelemetryMode::Saturated,
+        ],
+    }
+}
+
 /// Seed count for soak sweeps: the full-depth default, or the count
 /// pinned by `ADAPAR_SOAK_SEEDS` (PR-gate CI sets a small value so the
 /// chaos sweep stays fast; the nightly soak job leaves it unset and

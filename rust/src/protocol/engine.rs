@@ -8,8 +8,9 @@ use crate::api::observe::{EpochGate, ObsProbe, Observer};
 use crate::chain::Chain;
 use crate::chaos::FaultHook;
 use crate::model::{Model, TaskSource};
+use crate::telemetry::{MetricsRegistry, TelemetryMode};
 
-use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
+use super::stats::{ProtocolStats, RunReport, StdInstruments, TimeBasis, WorkerStats};
 use super::worker::{worker_loop, RunCtx};
 
 /// Default creation batch size `B` (tasks linked per tail-lock
@@ -44,6 +45,10 @@ pub struct ProtocolConfig {
     /// Whether to time each task execution (small overhead; off for
     /// timing-sensitive benches, on for profiling).
     pub collect_timing: bool,
+    /// Ring/aggregator layer mode (the lossless counter layer is always
+    /// on). Semantically inert: any value yields the identical trace
+    /// (DESIGN.md §11). Defaults from `ADAPAR_TELEMETRY`.
+    pub telemetry: TelemetryMode,
 }
 
 impl Default for ProtocolConfig {
@@ -56,6 +61,7 @@ impl Default for ProtocolConfig {
             batch: DEFAULT_BATCH,
             seed: 0,
             collect_timing: false,
+            telemetry: TelemetryMode::env_default(),
         }
     }
 }
@@ -167,10 +173,13 @@ impl ParallelEngine {
             self.cfg.batch,
         ));
         let source = Mutex::new(EpochGate::new(inner_source));
-        let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
-        for (w, s) in per_worker.iter_mut().enumerate() {
-            s.worker = w;
-        }
+        // The registry is the single source of truth for run statistics:
+        // workers publish onto their rows at each epoch's end, and the
+        // report's `per_worker`/`chain` stats are views reconstructed
+        // from the final snapshot.
+        let mut reg = MetricsRegistry::new();
+        let ids = StdInstruments::register(&mut reg);
+        let tele = reg.start(self.cfg.workers, self.cfg.telemetry);
 
         if let Some((probe, observer)) = obs.as_mut() {
             observer.record_initial(*probe);
@@ -198,17 +207,19 @@ impl ParallelEngine {
             if self.cfg.workers == 1 {
                 // Run in-place: a single worker needs no extra thread,
                 // which keeps T(n=1) free of spawn overhead.
-                per_worker[0].merge(&worker_loop(&ctx, 0));
+                worker_loop(&ctx, 0, tele.handle(0), &ids);
             } else {
                 std::thread::scope(|s| {
                     let handles: Vec<_> = (0..self.cfg.workers)
                         .map(|w| {
                             let ctx_ref = &ctx;
-                            s.spawn(move || worker_loop(ctx_ref, w))
+                            let ids_ref = &ids;
+                            let h = tele.handle(w);
+                            s.spawn(move || worker_loop(ctx_ref, w, h, ids_ref))
                         })
                         .collect();
-                    for (w, h) in handles.into_iter().enumerate() {
-                        per_worker[w].merge(&h.join().expect("worker panicked"));
+                    for h in handles {
+                        h.join().expect("worker panicked");
                     }
                 });
             }
@@ -231,6 +242,28 @@ impl ParallelEngine {
         }
         let wall = t0.elapsed();
 
+        // Publish the end-of-run chain/arena stats onto the global row,
+        // fence the aggregator (workers are joined — every publish and
+        // every ring sample is visible), and rebuild the report's stats
+        // as views over the snapshot.
+        ids.publish_chain(
+            &tele,
+            &ProtocolStats {
+                tasks_created: chain.created(),
+                tasks_executed: chain.erased(),
+                max_chain_len: chain.max_len(),
+                tail_locks: chain.tail_locks(),
+                batch: self.cfg.batch,
+                arena_capacity: chain.arena_capacity(),
+                arena_high_water: chain.arena_high_water(),
+                arena_recycled: chain.arena_recycled(),
+                arena_live: chain.arena_live(),
+            },
+        );
+        let snap = tele.finish();
+        let per_worker: Vec<WorkerStats> = (0..self.cfg.workers)
+            .map(|w| WorkerStats::from_snapshot(&snap, w))
+            .collect();
         let mut totals = WorkerStats::default();
         for w in &per_worker {
             totals.merge(w);
@@ -242,18 +275,9 @@ impl ParallelEngine {
             basis: TimeBasis::Wall,
             totals,
             per_worker,
-            chain: ProtocolStats {
-                tasks_created: chain.created(),
-                tasks_executed: chain.erased(),
-                max_chain_len: chain.max_len(),
-                tail_locks: chain.tail_locks(),
-                batch: self.cfg.batch,
-                arena_capacity: chain.arena_capacity(),
-                arena_high_water: chain.arena_high_water(),
-                arena_recycled: chain.arena_recycled(),
-                arena_live: chain.arena_live(),
-            },
+            chain: ProtocolStats::from_snapshot(&snap, self.cfg.batch),
             sched: None,
+            telemetry: Some(snap),
         }
     }
 }

@@ -20,5 +20,7 @@ pub mod worker;
 
 pub use engine::{ParallelEngine, ProtocolConfig, DEFAULT_BATCH};
 pub use sequential::SequentialEngine;
-pub use stats::{ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats};
+pub use stats::{
+    post_hoc_snapshot, ProtocolStats, RunReport, SchedStats, StdInstruments, TimeBasis, WorkerStats,
+};
 pub use stepwise::{StepwiseEngine, SyncModel};

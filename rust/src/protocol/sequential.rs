@@ -8,7 +8,7 @@ use crate::api::observe::{ObsProbe, Observer};
 use crate::model::{Model, TaskSource};
 use crate::sim::rng::TaskRng;
 
-use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
+use super::stats::{post_hoc_snapshot, ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
 /// Single-threaded engine: executes tasks in creation order with the same
 /// per-task RNG streams as the parallel engine.
@@ -74,20 +74,23 @@ impl SequentialEngine {
             busy_time: wall,
             ..Default::default()
         };
+        let chain = ProtocolStats {
+            tasks_created: executed,
+            tasks_executed: executed,
+            max_chain_len: 1,
+            batch: 1,
+            ..Default::default()
+        };
+        let per_worker = vec![stats.clone()];
         RunReport {
             engine: "sequential",
             workers: 1,
             time_s: wall.as_secs_f64(),
             basis: TimeBasis::Wall,
-            totals: stats.clone(),
-            per_worker: vec![stats],
-            chain: ProtocolStats {
-                tasks_created: executed,
-                tasks_executed: executed,
-                max_chain_len: 1,
-                batch: 1,
-                ..Default::default()
-            },
+            totals: stats,
+            telemetry: Some(post_hoc_snapshot(&per_worker, &chain)),
+            per_worker,
+            chain,
             sched: None,
         }
     }

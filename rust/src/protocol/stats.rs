@@ -7,6 +7,9 @@
 
 use std::time::Duration;
 
+use crate::telemetry::{
+    CounterId, HistId, MetricsRegistry, TelemetryCore, TelemetrySnapshot, WorkerTelemetry,
+};
 use crate::util::json::Json;
 
 /// Counters collected by one worker across a run.
@@ -83,6 +86,152 @@ impl WorkerStats {
         self.exec_time += o.exec_time;
         self.busy_time += o.busy_time;
     }
+
+    /// Reconstruct worker `w`'s counters from a registry snapshot — the
+    /// "stats are a view over the registry" direction: engines publish
+    /// through [`StdInstruments`] and read back through this.
+    pub fn from_snapshot(snap: &TelemetrySnapshot, w: usize) -> Self {
+        WorkerStats {
+            worker: w,
+            cycles: snap.counter_worker("worker.cycles", w),
+            executed: snap.counter_worker("worker.executed", w),
+            created: snap.counter_worker("worker.created", w),
+            skipped_dependent: snap.counter_worker("worker.skipped_dependent", w),
+            passed_executing: snap.counter_worker("worker.passed_executing", w),
+            erased_retries: snap.counter_worker("worker.erased_retries", w),
+            idle_cycles: snap.counter_worker("worker.idle_cycles", w),
+            exec_time: Duration::from_nanos(snap.counter_worker("worker.exec_time_ns", w)),
+            busy_time: Duration::from_nanos(snap.counter_worker("worker.busy_time_ns", w)),
+        }
+    }
+}
+
+/// The standard instrument set every chain engine publishes through:
+/// the per-worker protocol counters (`worker.*`), the chain/arena
+/// counters (`chain.*`), and the two hot-path sample streams
+/// (`chain.batch_fill` — tasks linked per tail-lock hold — and
+/// `chain.exec_ns` — per-task execution nanoseconds, sampled only when
+/// timing collection is on). [`WorkerStats`]/[`ProtocolStats`] are
+/// reconstructed from the resulting snapshot, so the registry is the
+/// single source of truth for run statistics.
+#[derive(Clone, Copy, Debug)]
+pub struct StdInstruments {
+    /// `worker.cycles`
+    pub cycles: CounterId,
+    /// `worker.executed`
+    pub executed: CounterId,
+    /// `worker.created`
+    pub created: CounterId,
+    /// `worker.skipped_dependent`
+    pub skipped_dependent: CounterId,
+    /// `worker.passed_executing`
+    pub passed_executing: CounterId,
+    /// `worker.erased_retries`
+    pub erased_retries: CounterId,
+    /// `worker.idle_cycles`
+    pub idle_cycles: CounterId,
+    /// `worker.exec_time_ns`
+    pub exec_time_ns: CounterId,
+    /// `worker.busy_time_ns`
+    pub busy_time_ns: CounterId,
+    /// `chain.tasks_created`
+    pub chain_tasks_created: CounterId,
+    /// `chain.tasks_executed`
+    pub chain_tasks_executed: CounterId,
+    /// `chain.max_chain_len`
+    pub chain_max_chain_len: CounterId,
+    /// `chain.tail_locks`
+    pub chain_tail_locks: CounterId,
+    /// `chain.arena_capacity`
+    pub chain_arena_capacity: CounterId,
+    /// `chain.arena_high_water`
+    pub chain_arena_high_water: CounterId,
+    /// `chain.arena_recycled`
+    pub chain_arena_recycled: CounterId,
+    /// `chain.arena_live`
+    pub chain_arena_live: CounterId,
+    /// `chain.batch_fill` — tasks linked per tail-lock acquisition.
+    pub batch_fill: HistId,
+    /// `chain.exec_ns` — per-task execution time in nanoseconds.
+    pub exec_ns: HistId,
+}
+
+/// Saturating `Duration` → nanoseconds for counter publication.
+fn duration_ns(d: Duration) -> u64 {
+    u64::try_from(d.as_nanos()).unwrap_or(u64::MAX)
+}
+
+impl StdInstruments {
+    /// Register the standard instrument set.
+    pub fn register(reg: &mut MetricsRegistry) -> Self {
+        StdInstruments {
+            cycles: reg.counter("worker.cycles"),
+            executed: reg.counter("worker.executed"),
+            created: reg.counter("worker.created"),
+            skipped_dependent: reg.counter("worker.skipped_dependent"),
+            passed_executing: reg.counter("worker.passed_executing"),
+            erased_retries: reg.counter("worker.erased_retries"),
+            idle_cycles: reg.counter("worker.idle_cycles"),
+            exec_time_ns: reg.counter("worker.exec_time_ns"),
+            busy_time_ns: reg.counter("worker.busy_time_ns"),
+            chain_tasks_created: reg.counter("chain.tasks_created"),
+            chain_tasks_executed: reg.counter("chain.tasks_executed"),
+            chain_max_chain_len: reg.counter("chain.max_chain_len"),
+            chain_tail_locks: reg.counter("chain.tail_locks"),
+            chain_arena_capacity: reg.counter("chain.arena_capacity"),
+            chain_arena_high_water: reg.counter("chain.arena_high_water"),
+            chain_arena_recycled: reg.counter("chain.arena_recycled"),
+            chain_arena_live: reg.counter("chain.arena_live"),
+            batch_fill: reg.histogram("chain.batch_fill"),
+            exec_ns: reg.histogram("chain.exec_ns"),
+        }
+    }
+
+    /// Publish one worker's accumulated counters onto its registry row
+    /// (called once per epoch at the end of the worker loop — off the
+    /// per-task hot path).
+    pub fn publish_worker(&self, t: &WorkerTelemetry<'_>, s: &WorkerStats) {
+        t.add(self.cycles, s.cycles);
+        t.add(self.executed, s.executed);
+        t.add(self.created, s.created);
+        t.add(self.skipped_dependent, s.skipped_dependent);
+        t.add(self.passed_executing, s.passed_executing);
+        t.add(self.erased_retries, s.erased_retries);
+        t.add(self.idle_cycles, s.idle_cycles);
+        t.add(self.exec_time_ns, duration_ns(s.exec_time));
+        t.add(self.busy_time_ns, duration_ns(s.busy_time));
+    }
+
+    /// Publish end-of-run chain/arena statistics onto the engine-global
+    /// row.
+    pub fn publish_chain(&self, core: &TelemetryCore, chain: &ProtocolStats) {
+        core.record(self.chain_tasks_created, chain.tasks_created);
+        core.record(self.chain_tasks_executed, chain.tasks_executed);
+        core.record(self.chain_max_chain_len, chain.max_chain_len as u64);
+        core.record(self.chain_tail_locks, chain.tail_locks);
+        core.record(self.chain_arena_capacity, chain.arena_capacity as u64);
+        core.record(self.chain_arena_high_water, chain.arena_high_water as u64);
+        core.record(self.chain_arena_recycled, chain.arena_recycled);
+        core.record(self.chain_arena_live, chain.arena_live as u64);
+    }
+}
+
+/// Post-hoc registry publication for engines without live per-worker
+/// publishers (sequential, stepwise, virtual): feed the already-merged
+/// stats through a counters-only registry so their reports carry the
+/// same coherent `telemetry` object as the chain engines.
+pub fn post_hoc_snapshot(
+    per_worker: &[WorkerStats],
+    chain: &ProtocolStats,
+) -> TelemetrySnapshot {
+    let mut reg = MetricsRegistry::new();
+    let ids = StdInstruments::register(&mut reg);
+    let core = reg.start(per_worker.len(), crate::telemetry::TelemetryMode::Off);
+    for (w, s) in per_worker.iter().enumerate() {
+        ids.publish_worker(&core.handle(w), s);
+    }
+    ids.publish_chain(&core, chain);
+    core.finish()
 }
 
 /// Chain-level statistics for a run.
@@ -136,6 +285,23 @@ impl ProtocolStats {
             0.0
         } else {
             self.arena_high_water as f64 / self.arena_capacity as f64
+        }
+    }
+
+    /// Reconstruct the chain statistics from a registry snapshot (the
+    /// view counterpart of [`StdInstruments::publish_chain`]). `batch`
+    /// is configuration, not measurement, so it is passed through.
+    pub fn from_snapshot(snap: &TelemetrySnapshot, batch: u32) -> Self {
+        ProtocolStats {
+            tasks_created: snap.counter("chain.tasks_created"),
+            tasks_executed: snap.counter("chain.tasks_executed"),
+            max_chain_len: snap.counter("chain.max_chain_len") as usize,
+            tail_locks: snap.counter("chain.tail_locks"),
+            batch,
+            arena_capacity: snap.counter("chain.arena_capacity") as usize,
+            arena_high_water: snap.counter("chain.arena_high_water") as usize,
+            arena_recycled: snap.counter("chain.arena_recycled"),
+            arena_live: snap.counter("chain.arena_live") as usize,
         }
     }
 }
@@ -279,6 +445,11 @@ pub struct RunReport {
     pub chain: ProtocolStats,
     /// Sharded-scheduler telemetry (`Some` only for the sharded engine).
     pub sched: Option<SchedStats>,
+    /// The full registry snapshot the stats above are views of: every
+    /// named counter (per worker + global) and every ring-sampled
+    /// histogram, rendered as one coherent `telemetry` object in
+    /// `--json`. `None` only on hand-built reports (tests).
+    pub telemetry: Option<TelemetrySnapshot>,
 }
 
 impl RunReport {
@@ -364,6 +535,9 @@ impl RunReport {
         if let Some(sched) = &self.sched {
             fields.push(("sched".into(), sched.to_json()));
         }
+        if let Some(telemetry) = &self.telemetry {
+            fields.push(("telemetry".into(), telemetry.to_json()));
+        }
         Json::Obj(fields)
     }
 
@@ -421,6 +595,7 @@ mod tests {
             per_worker: vec![],
             chain: ProtocolStats::default(),
             sched: None,
+            telemetry: None,
         };
         assert_eq!(r.overhead_ratio(), 0.0);
         r.totals.executed = 10;
@@ -474,6 +649,7 @@ mod tests {
             per_worker: vec![],
             chain: s,
             sched: None,
+            telemetry: None,
         };
         let json = r.to_json().render();
         assert!(json.contains("\"batch\":64"), "{json}");

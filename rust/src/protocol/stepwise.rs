@@ -21,7 +21,7 @@ use std::time::Instant;
 
 use crate::api::observe::{ObsProbe, Observer};
 
-use super::stats::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
+use super::stats::{post_hoc_snapshot, ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
 /// A model in synchronous, phase-structured form.
 ///
@@ -128,20 +128,23 @@ impl StepwiseEngine {
             busy_time: wall,
             ..Default::default()
         };
+        let chain = ProtocolStats {
+            tasks_created: executed,
+            tasks_executed: executed,
+            max_chain_len: 0,
+            batch: 1,
+            ..Default::default()
+        };
+        let per_worker = vec![stats.clone()];
         RunReport {
             engine: "stepwise",
             workers: n,
             time_s: wall.as_secs_f64(),
             basis: TimeBasis::Wall,
-            totals: stats.clone(),
-            per_worker: vec![stats],
-            chain: ProtocolStats {
-                tasks_created: executed,
-                tasks_executed: executed,
-                max_chain_len: 0,
-                batch: 1,
-                ..Default::default()
-            },
+            totals: stats,
+            telemetry: Some(post_hoc_snapshot(&per_worker, &chain)),
+            per_worker,
+            chain,
             sched: None,
         }
     }
@@ -197,20 +200,23 @@ impl StepwiseEngine {
             busy_time: wall,
             ..Default::default()
         };
+        let chain = ProtocolStats {
+            tasks_created: executed,
+            tasks_executed: executed,
+            max_chain_len: 0,
+            batch: 1,
+            ..Default::default()
+        };
+        let per_worker = vec![stats.clone()];
         RunReport {
             engine: "stepwise",
             workers: self.workers,
             time_s: wall.as_secs_f64(),
             basis: TimeBasis::Wall,
-            totals: stats.clone(),
-            per_worker: vec![stats],
-            chain: ProtocolStats {
-                tasks_created: executed,
-                tasks_executed: executed,
-                max_chain_len: 0,
-                batch: 1,
-                ..Default::default()
-            },
+            totals: stats,
+            telemetry: Some(post_hoc_snapshot(&per_worker, &chain)),
+            per_worker,
+            chain,
             sched: None,
         }
     }

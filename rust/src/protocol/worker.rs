@@ -46,8 +46,9 @@ use std::time::{Duration, Instant};
 use crate::chain::{Chain, Handle, NodeKind, NodeState};
 use crate::model::{Model, Record, TaskSource};
 use crate::sim::rng::TaskRng;
+use crate::telemetry::WorkerTelemetry;
 
-use super::stats::WorkerStats;
+use super::stats::{StdInstruments, WorkerStats};
 
 /// Shared, read-only worker context for one run.
 ///
@@ -85,11 +86,16 @@ enum Processed {
     Absorbed,
 }
 
-/// Run one worker to completion. Returns its statistics.
+/// Run one worker to completion. Statistics accumulate locally and are
+/// published onto the worker's registry row once, at the end — one
+/// batch of relaxed counter adds per epoch, nothing per task. The only
+/// per-task telemetry is the (wait-free, drop-on-full) ring sample.
 pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     ctx: &RunCtx<'_, M, S>,
     worker_id: usize,
-) -> WorkerStats {
+    tele: WorkerTelemetry<'_>,
+    ids: &StdInstruments,
+) {
     let mut stats = WorkerStats {
         worker: worker_id,
         ..Default::default()
@@ -147,6 +153,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 }
                 let first = ctx.chain.fill_tail(current, &mut scratch);
                 ctx.chain.release(ctx.chain.tail());
+                tele.sample(ids.batch_fill, got as u64);
                 created_this_cycle += got as u32;
                 stats.created += got as u64;
                 // Move onto the first created node. Effectively
@@ -156,7 +163,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 ctx.chain.acquire(first);
                 ctx.chain.release(current);
                 current = first;
-                match process(ctx, current, &mut record, &mut stats) {
+                match process(ctx, current, &mut record, &mut stats, &tele, ids) {
                     Processed::ExecutedCycleEnds => continue 'cycle,
                     Processed::Absorbed => continue,
                 }
@@ -175,7 +182,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
             ctx.chain.release(current);
             current = next;
             debug_assert_eq!(ctx.chain.kind(current), NodeKind::Task);
-            match process(ctx, current, &mut record, &mut stats) {
+            match process(ctx, current, &mut record, &mut stats, &tele, ids) {
                 Processed::ExecutedCycleEnds => continue 'cycle,
                 Processed::Absorbed => continue,
             }
@@ -195,7 +202,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     }
 
     stats.busy_time = loop_start.elapsed();
-    stats
+    ids.publish_worker(&tele, &stats);
 }
 
 /// Handle an arrival at a live task node (visitor slot held).
@@ -204,6 +211,8 @@ fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     node: Handle,
     record: &mut M::Record,
     stats: &mut WorkerStats,
+    tele: &WorkerTelemetry<'_>,
+    ids: &StdInstruments,
 ) -> Processed {
     match ctx.chain.state(node) {
         NodeState::Executing => {
@@ -241,7 +250,9 @@ fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 if ctx.collect_timing {
                     let t0 = Instant::now();
                     ctx.model.execute(recipe, &mut rng);
-                    stats.exec_time += t0.elapsed();
+                    let dt = t0.elapsed();
+                    tele.sample(ids.exec_ns, u64::try_from(dt.as_nanos()).unwrap_or(u64::MAX));
+                    stats.exec_time += dt;
                 } else {
                     ctx.model.execute(recipe, &mut rng);
                 }

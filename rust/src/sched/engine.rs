@@ -40,10 +40,11 @@ use crate::chaos::{FaultHook, Invariant};
 use crate::model::{Model, Record, TaskSource};
 use crate::protocol::engine::chain_capacity;
 use crate::protocol::{
-    ProtocolStats, RunReport, SchedStats, TimeBasis, WorkerStats, DEFAULT_BATCH,
+    ProtocolStats, RunReport, SchedStats, StdInstruments, TimeBasis, WorkerStats, DEFAULT_BATCH,
 };
 use crate::sim::graph::{bfs_partition, edge_cut, grid_partition, Partition};
 use crate::sim::rng::TaskRng;
+use crate::telemetry::{CounterId, HistId, MetricsRegistry, TelemetryCore, TelemetryMode, WorkerTelemetry};
 
 use super::cost::{BlockCost, CostProbe};
 use super::rebalance::Rebalancer;
@@ -88,6 +89,10 @@ pub struct ShardedConfig {
     pub alpha: f64,
     /// Partitioner selection (see [`PartitionPolicy`]).
     pub partition: PartitionPolicy,
+    /// Ring/aggregator layer mode (the lossless counter layer is always
+    /// on). Semantically inert: any value yields the identical trace
+    /// (DESIGN.md §11). Defaults from `ADAPAR_TELEMETRY`.
+    pub telemetry: TelemetryMode,
 }
 
 impl Default for ShardedConfig {
@@ -103,6 +108,7 @@ impl Default for ShardedConfig {
             rebalance_every: 8_192,
             alpha: 0.4,
             partition: PartitionPolicy::Auto,
+            telemetry: TelemetryMode::env_default(),
         }
     }
 }
@@ -254,10 +260,14 @@ impl ShardedEngine {
             backlog_cap,
         };
 
-        let mut per_worker = vec![WorkerStats::default(); self.cfg.workers];
-        for (w, s) in per_worker.iter_mut().enumerate() {
-            s.worker = w;
-        }
+        // The registry is the single source of truth for worker-side
+        // statistics: workers publish onto their rows at each epoch's
+        // end, and the report's `per_worker`/`chain` stats — plus the
+        // worker-side `SchedStats` counters — are views reconstructed
+        // from the final snapshot.
+        let mut reg = MetricsRegistry::new();
+        let ids = SchedInstruments::register(&mut reg, shards);
+        let tele = reg.start(self.cfg.workers, self.cfg.telemetry);
         let mut sched = SchedStats {
             shards,
             edge_cut: cut,
@@ -294,27 +304,26 @@ impl ShardedEngine {
             closed.store(false, Ordering::Release);
             splitter.lock().unwrap().open(every);
             if self.cfg.workers == 1 {
-                let (ws, sw) =
-                    sharded_worker(&ctx, 0, stalls.first().copied().unwrap_or_default());
-                per_worker[0].merge(&ws);
-                sched.fence_clears += sw.fence_clears;
-                sched.spill_blocked += sw.spill_blocked;
-                sched.backpressure_stalls += sw.backpressure_stalls;
+                sharded_worker(
+                    &ctx,
+                    0,
+                    stalls.first().copied().unwrap_or_default(),
+                    tele.handle(0),
+                    &ids,
+                );
             } else {
                 std::thread::scope(|s| {
                     let handles: Vec<_> = (0..self.cfg.workers)
                         .map(|w| {
                             let ctx_ref = &ctx;
+                            let ids_ref = &ids;
+                            let h = tele.handle(w);
                             let stall = stalls.get(w).copied().unwrap_or_default();
-                            s.spawn(move || sharded_worker(ctx_ref, w, stall))
+                            s.spawn(move || sharded_worker(ctx_ref, w, stall, h, ids_ref))
                         })
                         .collect();
-                    for (w, h) in handles.into_iter().enumerate() {
-                        let (ws, sw) = h.join().expect("sharded worker panicked");
-                        per_worker[w].merge(&ws);
-                        sched.fence_clears += sw.fence_clears;
-                        sched.spill_blocked += sw.spill_blocked;
-                        sched.backpressure_stalls += sw.backpressure_stalls;
+                    for h in handles {
+                        h.join().expect("sharded worker panicked");
                     }
                 });
             }
@@ -414,24 +423,19 @@ impl ShardedEngine {
         // sentinels; anything above that is a leaked slot (DESIGN.md §10).
         let arena_live =
             chains.iter().map(Chain::arena_live).sum::<usize>() + spill.arena_live();
-        let mut totals = WorkerStats::default();
-        for w in &per_worker {
-            totals.merge(w);
-        }
         let max_chain_len = chains
             .iter()
             .map(Chain::max_len)
             .chain(std::iter::once(spill.max_len()))
             .max()
             .unwrap_or(0);
-        RunReport {
-            engine: "sharded",
-            workers: self.cfg.workers,
-            time_s: wall.as_secs_f64(),
-            basis: TimeBasis::Wall,
-            totals,
-            per_worker,
-            chain: ProtocolStats {
+
+        // Publish the engine-side stats onto the global row, fence the
+        // aggregator (workers are joined), and rebuild the worker-side
+        // stats as views over the snapshot.
+        ids.std.publish_chain(
+            &tele,
+            &ProtocolStats {
                 tasks_created: local + boundary,
                 tasks_executed: local + boundary,
                 max_chain_len,
@@ -442,7 +446,29 @@ impl ShardedEngine {
                 arena_recycled,
                 arena_live,
             },
+        );
+        ids.publish_engine(&tele, &sched);
+        let snap = tele.finish();
+        sched.fence_clears = snap.counter("sched.fence_clears");
+        sched.spill_blocked = snap.counter("sched.spill_blocked");
+        sched.backpressure_stalls = snap.counter("sched.backpressure_stalls");
+        let per_worker: Vec<WorkerStats> = (0..self.cfg.workers)
+            .map(|w| WorkerStats::from_snapshot(&snap, w))
+            .collect();
+        let mut totals = WorkerStats::default();
+        for w in &per_worker {
+            totals.merge(w);
+        }
+        RunReport {
+            engine: "sharded",
+            workers: self.cfg.workers,
+            time_s: wall.as_secs_f64(),
+            basis: TimeBasis::Wall,
+            totals,
+            per_worker,
+            chain: ProtocolStats::from_snapshot(&snap, self.cfg.batch),
             sched: Some(sched),
+            telemetry: Some(snap),
         }
     }
 }
@@ -522,6 +548,78 @@ fn load_gap(loads: &[f64]) -> f64 {
 /// [`sharded_worker`].
 const BACKPRESSURE_PATIENCE: u32 = 64;
 
+/// The sharded engine's instrument set: the chain engines' standard
+/// `worker.*`/`chain.*` instruments plus the `sched.*` counters backing
+/// [`SchedStats`] — including per-shard keys (`sched.shard{k}.executed`,
+/// `sched.shard{k}.tail_locks`) and per-shard routing-batch histograms
+/// (`sched.shard{k}.batch_fill`; pulls not attributable to one shard's
+/// tail sample `sched.route.batch_fill`). [`SchedStats`] worker-side
+/// counters are views over the snapshot of these.
+struct SchedInstruments {
+    std: StdInstruments,
+    local_tasks: CounterId,
+    boundary_tasks: CounterId,
+    fence_clears: CounterId,
+    spill_blocked: CounterId,
+    backpressure_stalls: CounterId,
+    migrations: CounterId,
+    rebalances: CounterId,
+    edge_cut: CounterId,
+    shards: CounterId,
+    /// `sched.shard{k}.executed` — local executions attributed to shard k.
+    shard_executed: Vec<CounterId>,
+    /// `sched.shard{k}.tail_locks` — creation-lock holds on shard k's chain.
+    shard_tail_locks: Vec<CounterId>,
+    /// `sched.shard{k}.batch_fill` — tasks routed per pull at shard k's tail.
+    shard_fill: Vec<HistId>,
+    /// `sched.route.batch_fill` — idle-path / livelock-bypass pulls.
+    route_fill: HistId,
+}
+
+impl SchedInstruments {
+    fn register(reg: &mut MetricsRegistry, shards: usize) -> Self {
+        SchedInstruments {
+            std: StdInstruments::register(reg),
+            local_tasks: reg.counter("sched.local_tasks"),
+            boundary_tasks: reg.counter("sched.boundary_tasks"),
+            fence_clears: reg.counter("sched.fence_clears"),
+            spill_blocked: reg.counter("sched.spill_blocked"),
+            backpressure_stalls: reg.counter("sched.backpressure_stalls"),
+            migrations: reg.counter("sched.migrations"),
+            rebalances: reg.counter("sched.rebalances"),
+            edge_cut: reg.counter("sched.edge_cut"),
+            shards: reg.counter("sched.shards"),
+            shard_executed: (0..shards)
+                .map(|k| reg.counter(&format!("sched.shard{k}.executed")))
+                .collect(),
+            shard_tail_locks: (0..shards)
+                .map(|k| reg.counter(&format!("sched.shard{k}.tail_locks")))
+                .collect(),
+            shard_fill: (0..shards)
+                .map(|k| reg.histogram(&format!("sched.shard{k}.batch_fill")))
+                .collect(),
+            route_fill: reg.histogram("sched.route.batch_fill"),
+        }
+    }
+
+    /// Publish the engine-side (non-worker) sched counters onto the
+    /// global row at the end of the run.
+    fn publish_engine(&self, core: &TelemetryCore, sched: &SchedStats) {
+        core.record(self.local_tasks, sched.local_tasks);
+        core.record(self.boundary_tasks, sched.boundary_tasks);
+        core.record(self.migrations, sched.migrations);
+        core.record(self.rebalances, sched.rebalances);
+        core.record(self.edge_cut, sched.edge_cut as u64);
+        core.record(self.shards, sched.shards as u64);
+        for (id, &n) in self.shard_executed.iter().zip(&sched.per_shard_executed) {
+            core.record(*id, n);
+        }
+        for (id, &n) in self.shard_tail_locks.iter().zip(&sched.per_shard_tail_locks) {
+            core.record(*id, n);
+        }
+    }
+}
+
 /// Sharded-specific per-worker counters (folded into
 /// [`SchedStats`] by the engine).
 #[derive(Default)]
@@ -548,7 +646,9 @@ fn sharded_worker<M: ShardableModel>(
     ctx: &ShardCtx<'_, M>,
     worker_id: usize,
     stall: Duration,
-) -> (WorkerStats, SchedWorker) {
+    tele: WorkerTelemetry<'_>,
+    ids: &SchedInstruments,
+) {
     let shards = ctx.chains.len();
     // Static ownership: worker w owns the shards congruent to w. With
     // shards == workers (the default) that is exactly one chain each;
@@ -573,12 +673,12 @@ fn sharded_worker<M: ShardableModel>(
         let mut did_work = false;
         for &s in &own {
             did_work |= matches!(
-                shard_cycle(ctx, s, &mut record, &mut stats, &mut sw),
+                shard_cycle(ctx, s, &mut record, &mut stats, &mut sw, &tele, ids),
                 Cycle::Executed
             );
         }
         did_work |= matches!(
-            spill_cycle(ctx, &mut record, &mut stats, &mut sw),
+            spill_cycle(ctx, &mut record, &mut stats, &mut sw, &tele, ids),
             Cycle::Executed
         );
         if !did_work && !ctx.closed.load(Ordering::Acquire) {
@@ -589,6 +689,7 @@ fn sharded_worker<M: ShardableModel>(
                 // the pipeline fed.
                 let got = ctx.pull(ctx.tasks_per_cycle);
                 if got > 0 {
+                    tele.sample(ids.route_fill, got as u64);
                     stats.created += got as u64;
                     did_work = true;
                 }
@@ -607,6 +708,7 @@ fn sharded_worker<M: ShardableModel>(
                 if starved >= BACKPRESSURE_PATIENCE {
                     let got = ctx.pull(1);
                     if got > 0 {
+                        tele.sample(ids.route_fill, got as u64);
                         stats.created += got as u64;
                         did_work = true;
                     }
@@ -625,7 +727,11 @@ fn sharded_worker<M: ShardableModel>(
     }
 
     stats.busy_time = loop_start.elapsed();
-    (stats, sw)
+    // One registry publish per epoch — off the per-task hot path.
+    ids.std.publish_worker(&tele, &stats);
+    tele.add(ids.fence_clears, sw.fence_clears);
+    tele.add(ids.spill_blocked, sw.spill_blocked);
+    tele.add(ids.backpressure_stalls, sw.backpressure_stalls);
 }
 
 /// One protocol cycle over shard `s`'s chain: traverse from the head,
@@ -638,6 +744,8 @@ fn shard_cycle<M: ShardableModel>(
     record: &mut M::Record,
     stats: &mut WorkerStats,
     sw: &mut SchedWorker,
+    tele: &WorkerTelemetry<'_>,
+    ids: &SchedInstruments,
 ) -> Cycle {
     let chain = &ctx.chains[s];
     record.reset();
@@ -660,6 +768,7 @@ fn shard_cycle<M: ShardableModel>(
             }
             let got = ctx.pull(ctx.tasks_per_cycle - pulled);
             if got > 0 {
+                tele.sample(ids.shard_fill[s], got as u64);
                 pulled += got;
                 stats.created += got as u64;
                 // The tasks may have landed right after `current` (then
@@ -715,7 +824,7 @@ fn shard_cycle<M: ShardableModel>(
                         stats.skipped_dependent += 1;
                     } else {
                         let (seq, block) = (*seq, *block);
-                        execute_and_unlink(ctx, chain, current, seq, block, stats);
+                        execute_and_unlink(ctx, chain, current, seq, block, stats, tele, ids);
                         ctx.per_shard_executed[s].fetch_add(1, Ordering::Relaxed);
                         return Cycle::Executed;
                     }
@@ -736,6 +845,8 @@ fn execute_and_unlink<M: ShardableModel, R>(
     seq: u64,
     block: u32,
     stats: &mut WorkerStats,
+    tele: &WorkerTelemetry<'_>,
+    ids: &SchedInstruments,
 ) where
     R: ShardRecipe<M>,
 {
@@ -751,6 +862,7 @@ fn execute_and_unlink<M: ShardableModel, R>(
     ctx.model.execute(R::model_recipe(item), &mut rng);
     let dt = t0.elapsed();
     stats.exec_time += dt;
+    tele.sample(ids.std.exec_ns, u64::try_from(dt.as_nanos()).unwrap_or(u64::MAX));
     ctx.costs.record(block, dt.as_nanos() as u64);
     R::publish_done(item);
 
@@ -791,6 +903,8 @@ fn spill_cycle<M: ShardableModel>(
     record: &mut M::Record,
     stats: &mut WorkerStats,
     sw: &mut SchedWorker,
+    tele: &WorkerTelemetry<'_>,
+    ids: &SchedInstruments,
 ) -> Cycle {
     let chain = ctx.spill;
     if chain.is_empty() {
@@ -835,7 +949,7 @@ fn spill_cycle<M: ShardableModel>(
                     sw.spill_blocked += 1;
                 } else {
                     let (seq, block) = (boundary.seq, boundary.block);
-                    execute_and_unlink(ctx, chain, current, seq, block, stats);
+                    execute_and_unlink(ctx, chain, current, seq, block, stats, tele, ids);
                     return Cycle::Executed;
                 }
             }

@@ -1,0 +1,594 @@
+//! Always-on, semantically inert metrics core (DESIGN.md §11).
+//!
+//! Layering:
+//!
+//! * [`MetricsRegistry`] — a build-time list of named instruments
+//!   (counters and histograms). Engines register what they publish,
+//!   then [`MetricsRegistry::start`] freezes the set into a
+//!   [`TelemetryCore`] for one run.
+//! * [`TelemetryCore`] — per-worker counter rows (lossless; one relaxed
+//!   `fetch_add` per publish, touched off the per-task hot path) plus
+//!   per-worker SPSC sample [`Ring`]s (lossy-but-counted; one push per
+//!   sample) drained by a background aggregator thread into mergeable
+//!   [`LogHistogram`]s keyed per worker.
+//! * [`TelemetrySnapshot`] — the immutable post-run view.
+//!   `ProtocolStats`/`SchedStats` are reconstructed *from* it (see
+//!   `protocol::stats`), and `--json` renders it as one coherent
+//!   `telemetry` object.
+//!
+//! **Inertness contract:** nothing here feeds back into execution.
+//! Counters are write-only until [`TelemetryCore::finish`]; a full ring
+//! drops samples (counted) instead of blocking; the aggregator reads
+//! only telemetry state. Engines therefore stay trace-identical to
+//! sequential with telemetry on, off, or under ring saturation — the
+//! conformance matrix asserts exactly that
+//! (`rust/tests/conformance.rs`).
+//!
+//! The counter layer is always on (it *is* the stats plumbing now);
+//! [`TelemetryMode`] — default from `ADAPAR_TELEMETRY` — controls only
+//! the ring/aggregator layer.
+
+mod ring;
+
+pub use ring::Ring;
+
+use crate::util::histogram::LogHistogram;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Ring/aggregator layer mode for one run. The lossless counter layer
+/// runs in every mode.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TelemetryMode {
+    /// Rings at production capacity, aggregator thread on (default).
+    #[default]
+    On,
+    /// No rings, no aggregator thread; histograms come back empty.
+    Off,
+    /// Tiny rings that overflow almost immediately — a test mode
+    /// proving saturation stays inert (drops counted, trace unchanged).
+    Saturated,
+}
+
+impl TelemetryMode {
+    /// Mode from `ADAPAR_TELEMETRY` (`off`/`0`/`false` → [`Off`],
+    /// `saturate`/`saturated` → [`Saturated`], anything else / unset →
+    /// [`On`]).
+    ///
+    /// [`Off`]: TelemetryMode::Off
+    /// [`Saturated`]: TelemetryMode::Saturated
+    pub fn env_default() -> Self {
+        match std::env::var("ADAPAR_TELEMETRY").as_deref() {
+            Ok("off") | Ok("0") | Ok("false") => TelemetryMode::Off,
+            Ok("saturate") | Ok("saturated") => TelemetryMode::Saturated,
+            _ => TelemetryMode::On,
+        }
+    }
+
+    /// Ring capacity implied by the mode (0 = no rings).
+    pub fn ring_capacity(self) -> usize {
+        match self {
+            TelemetryMode::On => 4096,
+            TelemetryMode::Off => 0,
+            TelemetryMode::Saturated => 4,
+        }
+    }
+
+    /// Short label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            TelemetryMode::On => "on",
+            TelemetryMode::Off => "off",
+            TelemetryMode::Saturated => "saturated",
+        }
+    }
+}
+
+impl std::str::FromStr for TelemetryMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "on" | "1" | "true" => Ok(TelemetryMode::On),
+            "off" | "0" | "false" => Ok(TelemetryMode::Off),
+            "saturate" | "saturated" => Ok(TelemetryMode::Saturated),
+            _ => Err(format!("unknown telemetry mode `{s}` (on|off|saturate)")),
+        }
+    }
+}
+
+/// Handle to a registered lossless counter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CounterId(u32);
+
+/// Handle to a registered histogram (ring-sampled, lossy-but-counted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HistId(u32);
+
+/// Build-time registry of named instruments. Names are free-form but
+/// the convention is dotted prefixes (`worker.*`, `chain.*`,
+/// `sched.*`); registration is idempotent per name.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Vec<String>,
+    hists: Vec<String>,
+}
+
+impl MetricsRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or look up) a lossless counter.
+    pub fn counter(&mut self, name: &str) -> CounterId {
+        if let Some(i) = self.counters.iter().position(|n| n == name) {
+            return CounterId(i as u32);
+        }
+        self.counters.push(name.to_string());
+        CounterId((self.counters.len() - 1) as u32)
+    }
+
+    /// Register (or look up) a histogram.
+    pub fn histogram(&mut self, name: &str) -> HistId {
+        if let Some(i) = self.hists.iter().position(|n| n == name) {
+            return HistId(i as u32);
+        }
+        self.hists.push(name.to_string());
+        HistId((self.hists.len() - 1) as u32)
+    }
+
+    /// Freeze the instrument set and allocate run state for `workers`
+    /// publishers (plus one engine-global row). Spawns the background
+    /// aggregator thread iff `mode` enables rings and at least one
+    /// histogram is registered.
+    pub fn start(self, workers: usize, mode: TelemetryMode) -> TelemetryCore {
+        let n_c = self.counters.len();
+        let counters: Vec<Box<[AtomicU64]>> = (0..=workers)
+            .map(|_| (0..n_c).map(|_| AtomicU64::new(0)).collect())
+            .collect();
+        let (rings, agg) = if mode.ring_capacity() > 0 && !self.hists.is_empty() {
+            let rings: Vec<Arc<Ring>> = (0..workers)
+                .map(|_| Arc::new(Ring::new(mode.ring_capacity())))
+                .collect();
+            let stop = Arc::new(AtomicBool::new(false));
+            let t_rings = rings.clone();
+            let t_stop = Arc::clone(&stop);
+            let n_h = self.hists.len();
+            let thread = std::thread::Builder::new()
+                .name("adapar-telemetry".to_string())
+                .spawn(move || aggregate_loop(&t_rings, &t_stop, n_h))
+                .expect("spawn telemetry aggregator");
+            (rings, Some(AggHandle { stop, thread }))
+        } else {
+            (Vec::new(), None)
+        };
+        TelemetryCore {
+            mode,
+            workers,
+            counter_names: self.counters,
+            hist_names: self.hists,
+            counters,
+            rings,
+            agg,
+        }
+    }
+}
+
+/// The background aggregator: periodically drain every worker's ring
+/// into per-(histogram, worker) [`LogHistogram`]s; on the stop signal,
+/// drain once more and return. The stop flag is checked *before* the
+/// drain, so everything pushed before [`TelemetryCore::finish`] (the
+/// shutdown fence — workers are already joined) lands in the final
+/// histograms.
+fn aggregate_loop(
+    rings: &[Arc<Ring>],
+    stop: &AtomicBool,
+    n_hists: usize,
+) -> Vec<Vec<LogHistogram>> {
+    let mut hists = vec![vec![LogHistogram::new(); rings.len()]; n_hists];
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        for (w, ring) in rings.iter().enumerate() {
+            ring.drain(|id, v| {
+                if let Some(h) = hists.get_mut(id as usize) {
+                    h[w].record(v);
+                }
+            });
+        }
+        if stopping {
+            return hists;
+        }
+        std::thread::park_timeout(Duration::from_micros(200));
+    }
+}
+
+struct AggHandle {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<Vec<Vec<LogHistogram>>>,
+}
+
+/// Frozen instrument set plus live run state: per-worker counter rows,
+/// per-worker sample rings, and the aggregator thread. Shared by
+/// reference with scoped worker threads (all interior state is atomic).
+pub struct TelemetryCore {
+    mode: TelemetryMode,
+    workers: usize,
+    counter_names: Vec<String>,
+    hist_names: Vec<String>,
+    /// `workers + 1` rows of `n_counters` cells; the extra last row is
+    /// the engine-global publisher ([`TelemetryCore::record`]).
+    counters: Vec<Box<[AtomicU64]>>,
+    rings: Vec<Arc<Ring>>,
+    agg: Option<AggHandle>,
+}
+
+impl TelemetryCore {
+    /// The run's ring/aggregator mode.
+    pub fn mode(&self) -> TelemetryMode {
+        self.mode
+    }
+
+    /// Publisher handle for worker `w` (its counter row + its ring).
+    pub fn handle(&self, worker: usize) -> WorkerTelemetry<'_> {
+        debug_assert!(worker < self.workers);
+        WorkerTelemetry { core: self, worker }
+    }
+
+    /// Engine-global counter publish (partition metadata, end-of-run
+    /// chain stats — anything not attributable to one worker).
+    pub fn record(&self, id: CounterId, delta: u64) {
+        if delta != 0 {
+            self.counters[self.workers][id.0 as usize].fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    /// Stop the aggregator (final drain included), read every counter
+    /// row, and freeze the run's telemetry. Call only after all worker
+    /// threads have been joined — that join is the fence making every
+    /// publish visible here.
+    pub fn finish(self) -> TelemetrySnapshot {
+        let TelemetryCore {
+            mode,
+            workers,
+            counter_names,
+            hist_names,
+            counters,
+            rings,
+            agg,
+        } = self;
+        let by_hist = match agg {
+            Some(a) => {
+                a.stop.store(true, Ordering::Release);
+                a.thread.thread().unpark();
+                a.thread.join().expect("telemetry aggregator panicked")
+            }
+            None => Vec::new(),
+        };
+        let snapshot_counters = counter_names
+            .into_iter()
+            .enumerate()
+            .map(|(i, name)| {
+                let rows: Vec<u64> = counters
+                    .iter()
+                    .map(|row| row[i].load(Ordering::Relaxed))
+                    .collect();
+                (name, rows)
+            })
+            .collect();
+        let hists = hist_names
+            .into_iter()
+            .enumerate()
+            .map(|(i, name)| (name, by_hist.get(i).cloned().unwrap_or_default()))
+            .collect();
+        TelemetrySnapshot {
+            mode,
+            workers,
+            counters: snapshot_counters,
+            hists,
+            ring_capacity: rings.first().map_or(0, |r| r.capacity()),
+            dropped: rings.iter().map(|r| r.dropped()).collect(),
+        }
+    }
+}
+
+/// A worker's publishing handle: both operations are wait-free and
+/// never feed back into execution.
+#[derive(Clone, Copy)]
+pub struct WorkerTelemetry<'a> {
+    core: &'a TelemetryCore,
+    worker: usize,
+}
+
+impl WorkerTelemetry<'_> {
+    /// Lossless counter add (one relaxed `fetch_add` on this worker's
+    /// private row).
+    #[inline]
+    pub fn add(&self, id: CounterId, delta: u64) {
+        if delta != 0 {
+            self.core.counters[self.worker][id.0 as usize].fetch_add(delta, Ordering::Relaxed);
+        }
+    }
+
+    /// Push one histogram sample into this worker's ring. Dropped
+    /// (and counted) if the ring is full or the mode disables rings.
+    #[inline]
+    pub fn sample(&self, id: HistId, value: u64) {
+        if let Some(ring) = self.core.rings.get(self.worker) {
+            ring.push(id.0, value);
+        }
+    }
+}
+
+/// Immutable end-of-run telemetry: every counter (per worker row +
+/// engine-global row), every histogram (per worker, mergeable), and the
+/// ring drop accounting.
+#[derive(Clone, Debug, Default)]
+pub struct TelemetrySnapshot {
+    mode: TelemetryMode,
+    workers: usize,
+    /// `(name, rows)` — `rows.len() == workers + 1`, last row global.
+    counters: Vec<(String, Vec<u64>)>,
+    /// `(name, per-worker histograms)` (empty vec when rings were off).
+    hists: Vec<(String, Vec<LogHistogram>)>,
+    ring_capacity: usize,
+    dropped: Vec<u64>,
+}
+
+impl TelemetrySnapshot {
+    /// Publisher (worker) count the run used.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The run's ring/aggregator mode.
+    pub fn mode(&self) -> TelemetryMode {
+        self.mode
+    }
+
+    /// Counter total across all rows (0 for unknown names).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.rows(name)
+            .map(|rows| rows.iter().fold(0u64, |a, &v| a.saturating_add(v)))
+            .unwrap_or(0)
+    }
+
+    /// Counter value on worker `w`'s row (0 for unknown names).
+    pub fn counter_worker(&self, name: &str, w: usize) -> u64 {
+        self.rows(name).and_then(|rows| rows.get(w).copied()).unwrap_or(0)
+    }
+
+    /// All counters whose name starts with `prefix`, as
+    /// `(name, total)` in registration order.
+    pub fn counters_prefixed(&self, prefix: &str) -> Vec<(&str, u64)> {
+        self.counters
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(n, rows)| {
+                (
+                    n.as_str(),
+                    rows.iter().fold(0u64, |a, &v| a.saturating_add(v)),
+                )
+            })
+            .collect()
+    }
+
+    /// Merged (all-worker) histogram, `None` for unknown names and
+    /// `Some(empty)` when rings were off.
+    pub fn histogram(&self, name: &str) -> Option<LogHistogram> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, per_w)| {
+            let mut merged = LogHistogram::new();
+            for h in per_w {
+                merged.merge(h);
+            }
+            merged
+        })
+    }
+
+    /// Worker `w`'s histogram for `name`, if rings were on.
+    pub fn histogram_worker(&self, name: &str, w: usize) -> Option<&LogHistogram> {
+        self.hists
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, per_w)| per_w.get(w))
+    }
+
+    /// Samples dropped across all rings.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.iter().sum()
+    }
+
+    fn rows(&self, name: &str) -> Option<&[u64]> {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, rows)| rows.as_slice())
+    }
+
+    /// Render the whole snapshot as one JSON object (the `--json`
+    /// report's `telemetry` field). Deterministic field order
+    /// (registration order).
+    pub fn to_json(&self) -> Json {
+        let counters = self
+            .counters
+            .iter()
+            .map(|(name, rows)| {
+                let total = rows.iter().fold(0u64, |a, &v| a.saturating_add(v));
+                let worker_rows = &rows[..self.workers.min(rows.len())];
+                let mut obj = vec![("total".to_string(), Json::from(total))];
+                if worker_rows.iter().any(|&v| v != 0) {
+                    obj.push((
+                        "per_worker".to_string(),
+                        Json::Arr(worker_rows.iter().map(|&v| Json::from(v)).collect()),
+                    ));
+                }
+                (name.clone(), Json::Obj(obj))
+            })
+            .collect();
+        let hists = self
+            .hists
+            .iter()
+            .map(|(name, per_w)| {
+                let mut merged = LogHistogram::new();
+                for h in per_w {
+                    merged.merge(h);
+                }
+                let buckets = merged
+                    .buckets()
+                    .into_iter()
+                    .map(|(edge, c)| Json::Arr(vec![Json::from(edge), Json::from(c)]))
+                    .collect();
+                (
+                    name.clone(),
+                    Json::Obj(vec![
+                        ("count".to_string(), Json::from(merged.count())),
+                        ("mean".to_string(), Json::from(merged.mean())),
+                        ("p50".to_string(), Json::from(merged.p50())),
+                        ("p90".to_string(), Json::from(merged.p90())),
+                        ("p99".to_string(), Json::from(merged.p99())),
+                        ("buckets".to_string(), Json::Arr(buckets)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::Obj(vec![
+            ("mode".to_string(), Json::from(self.mode.label())),
+            ("workers".to_string(), Json::from(self.workers)),
+            ("counters".to_string(), Json::Obj(counters)),
+            ("histograms".to_string(), Json::Obj(hists)),
+            (
+                "rings".to_string(),
+                Json::Obj(vec![
+                    ("capacity".to_string(), Json::from(self.ring_capacity)),
+                    (
+                        "dropped".to_string(),
+                        Json::Arr(self.dropped.iter().map(|&d| Json::from(d)).collect()),
+                    ),
+                    ("dropped_total".to_string(), Json::from(self.dropped_total())),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registration_is_idempotent_per_name() {
+        let mut reg = MetricsRegistry::new();
+        let a = reg.counter("x.a");
+        let b = reg.counter("x.b");
+        assert_ne!(a, b);
+        assert_eq!(reg.counter("x.a"), a);
+        let h = reg.histogram("x.h");
+        assert_eq!(reg.histogram("x.h"), h);
+    }
+
+    #[test]
+    fn counters_accumulate_per_worker_and_globally() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("t.count");
+        let core = reg.start(2, TelemetryMode::Off);
+        core.handle(0).add(c, 3);
+        core.handle(1).add(c, 4);
+        core.record(c, 10);
+        let snap = core.finish();
+        assert_eq!(snap.counter("t.count"), 17);
+        assert_eq!(snap.counter_worker("t.count", 0), 3);
+        assert_eq!(snap.counter_worker("t.count", 1), 4);
+        assert_eq!(snap.counter("unknown"), 0);
+        assert_eq!(
+            snap.counters_prefixed("t."),
+            vec![("t.count", 17)]
+        );
+    }
+
+    #[test]
+    fn aggregator_final_flush_loses_no_pre_fence_samples() {
+        let mut reg = MetricsRegistry::new();
+        let h = reg.histogram("t.lat");
+        let core = reg.start(2, TelemetryMode::On);
+        // Publish from real threads, then join — the engine's shutdown
+        // fence. Everything pushed before finish() must survive even if
+        // the aggregator never woke up mid-run.
+        std::thread::scope(|s| {
+            for w in 0..2 {
+                let t = core.handle(w);
+                s.spawn(move || {
+                    for v in 0..1000u64 {
+                        t.sample(h, v);
+                    }
+                });
+            }
+        });
+        let snap = core.finish();
+        let merged = snap.histogram("t.lat").unwrap();
+        assert_eq!(
+            merged.count() + snap.dropped_total(),
+            2000,
+            "every pre-fence sample is either aggregated or counted as dropped"
+        );
+        assert_eq!(snap.dropped_total(), 0, "4096-slot rings cannot overflow here");
+        assert_eq!(snap.histogram_worker("t.lat", 0).unwrap().count(), 1000);
+    }
+
+    #[test]
+    fn saturated_mode_drops_and_counts_without_blocking() {
+        let mut reg = MetricsRegistry::new();
+        let h = reg.histogram("t.lat");
+        let core = reg.start(1, TelemetryMode::Saturated);
+        let t = core.handle(0);
+        for v in 0..10_000u64 {
+            t.sample(h, v); // must never block
+        }
+        let snap = core.finish();
+        let merged = snap.histogram("t.lat").unwrap();
+        assert_eq!(merged.count() + snap.dropped_total(), 10_000);
+        assert!(snap.dropped_total() > 0, "a 4-slot ring must overflow");
+    }
+
+    #[test]
+    fn off_mode_spawns_nothing_and_reports_empty_histograms() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("t.count");
+        let h = reg.histogram("t.lat");
+        let core = reg.start(1, TelemetryMode::Off);
+        core.handle(0).add(c, 1);
+        core.handle(0).sample(h, 99); // silently inert
+        let snap = core.finish();
+        assert_eq!(snap.counter("t.count"), 1, "counters are always on");
+        assert!(snap.histogram("t.lat").unwrap().is_empty());
+        assert_eq!(snap.dropped_total(), 0);
+    }
+
+    #[test]
+    fn snapshot_json_is_one_coherent_object() {
+        let mut reg = MetricsRegistry::new();
+        let c = reg.counter("chain.tail_locks");
+        reg.histogram("chain.batch_fill");
+        let core = reg.start(1, TelemetryMode::Off);
+        core.record(c, 7);
+        let rendered = core.finish().to_json().render();
+        assert!(rendered.contains("\"counters\""));
+        assert!(rendered.contains("\"chain.tail_locks\":{\"total\":7}"));
+        assert!(rendered.contains("\"histograms\""));
+        assert!(rendered.contains("\"rings\""));
+        assert!(rendered.contains("\"mode\":\"off\""));
+    }
+
+    #[test]
+    fn mode_parses_from_str_and_env_shapes() {
+        assert_eq!("on".parse::<TelemetryMode>().unwrap(), TelemetryMode::On);
+        assert_eq!("off".parse::<TelemetryMode>().unwrap(), TelemetryMode::Off);
+        assert_eq!(
+            "saturate".parse::<TelemetryMode>().unwrap(),
+            TelemetryMode::Saturated
+        );
+        assert!("bogus".parse::<TelemetryMode>().is_err());
+        assert_eq!(TelemetryMode::Off.ring_capacity(), 0);
+        assert!(TelemetryMode::On.ring_capacity() > TelemetryMode::Saturated.ring_capacity());
+    }
+}

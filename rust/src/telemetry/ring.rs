@@ -1,0 +1,180 @@
+//! Fixed-capacity SPSC sample rings (the telemetry hot path).
+//!
+//! One ring per worker: the worker is the only producer, the background
+//! aggregator the only consumer. A push is two relaxed stores plus one
+//! release store of the tail — no locks, no allocation, no CAS loop. A
+//! full ring **drops** the sample (counted in [`Ring::dropped`]) rather
+//! than blocking or overwriting: telemetry loss is acceptable, telemetry
+//! back-pressure on the protocol is not (the inertness contract,
+//! DESIGN.md §11).
+//!
+//! Every slot is an atomic, so even a (buggy) second producer cannot
+//! cause undefined behaviour — only garbled samples.
+
+use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
+
+/// A single-producer single-consumer ring of `(instrument, value)`
+/// samples with drop-counting overflow behaviour.
+pub struct Ring {
+    /// Index mask (capacity is a power of two).
+    mask: usize,
+    /// Instrument id per slot.
+    meta: Box<[AtomicU32]>,
+    /// Sample value per slot.
+    vals: Box<[AtomicU64]>,
+    /// Consumer cursor (monotonic, wrapped by `mask` on access).
+    head: AtomicUsize,
+    /// Producer cursor.
+    tail: AtomicUsize,
+    /// Samples rejected because the ring was full.
+    dropped: AtomicU64,
+}
+
+impl Ring {
+    /// Ring with at least `capacity` slots (rounded up to a power of
+    /// two, minimum 2).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        Self {
+            mask: cap - 1,
+            meta: (0..cap).map(|_| AtomicU32::new(0)).collect(),
+            vals: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            head: AtomicUsize::new(0),
+            tail: AtomicUsize::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    /// Slot count.
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Producer side: push one sample. Returns `false` (and counts a
+    /// drop) when the ring is full. Never blocks.
+    #[inline]
+    pub fn push(&self, instrument: u32, value: u64) -> bool {
+        let tail = self.tail.load(Ordering::Relaxed);
+        // Acquire pairs with the consumer's release store of `head`: a
+        // reused slot is only written after the consumer has finished
+        // reading it.
+        let head = self.head.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) > self.mask {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        let i = tail & self.mask;
+        self.meta[i].store(instrument, Ordering::Relaxed);
+        self.vals[i].store(value, Ordering::Relaxed);
+        // Release publishes the slot contents to the consumer's acquire
+        // load of `tail`.
+        self.tail.store(tail.wrapping_add(1), Ordering::Release);
+        true
+    }
+
+    /// Consumer side: drain all currently published samples into `f`,
+    /// in push order. Returns how many were drained.
+    pub fn drain(&self, mut f: impl FnMut(u32, u64)) -> usize {
+        let mut h = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Acquire);
+        let n = tail.wrapping_sub(h);
+        while h != tail {
+            let i = h & self.mask;
+            f(self.meta[i].load(Ordering::Relaxed), self.vals[i].load(Ordering::Relaxed));
+            h = h.wrapping_add(1);
+        }
+        // Release hands the consumed slots back to the producer.
+        self.head.store(h, Ordering::Release);
+        n
+    }
+
+    /// Samples rejected so far because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Published-but-undrained sample count (for tests).
+    pub fn len(&self) -> usize {
+        self.tail
+            .load(Ordering::Acquire)
+            .wrapping_sub(self.head.load(Ordering::Acquire))
+    }
+
+    /// Whether no samples are waiting.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_then_drain_preserves_order() {
+        let r = Ring::new(8);
+        for v in 0..5u64 {
+            assert!(r.push(7, v));
+        }
+        assert_eq!(r.len(), 5);
+        let mut got = Vec::new();
+        assert_eq!(r.drain(|id, v| got.push((id, v))), 5);
+        assert_eq!(got, vec![(7, 0), (7, 1), (7, 2), (7, 3), (7, 4)]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn overflow_drops_and_counts_without_corruption() {
+        let r = Ring::new(4);
+        let mut accepted = 0;
+        for v in 0..100u64 {
+            if r.push(1, v) {
+                accepted += 1;
+            }
+        }
+        assert_eq!(accepted, 4, "capacity bounds accepted pushes");
+        assert_eq!(r.dropped(), 96, "every rejected push is counted");
+        // The accepted prefix survives intact — overwrite-free.
+        let mut got = Vec::new();
+        r.drain(|_, v| got.push(v));
+        assert_eq!(got, vec![0, 1, 2, 3]);
+        // Space freed by the drain is usable again.
+        assert!(r.push(1, 42));
+        let mut got = Vec::new();
+        r.drain(|_, v| got.push(v));
+        assert_eq!(got, vec![42]);
+        assert_eq!(r.dropped(), 96);
+    }
+
+    #[test]
+    fn capacity_rounds_up_to_power_of_two() {
+        assert_eq!(Ring::new(0).capacity(), 2);
+        assert_eq!(Ring::new(5).capacity(), 8);
+        assert_eq!(Ring::new(8).capacity(), 8);
+    }
+
+    #[test]
+    fn concurrent_producer_consumer_loses_nothing_when_paced() {
+        use std::sync::Arc;
+        let r = Arc::new(Ring::new(64));
+        let p = Arc::clone(&r);
+        let producer = std::thread::spawn(move || {
+            let mut pushed = 0u64;
+            for v in 0..10_000u64 {
+                while !p.push(0, v) {
+                    std::thread::yield_now();
+                }
+                pushed += 1;
+            }
+            pushed
+        });
+        let mut seen = Vec::new();
+        while seen.len() < 10_000 {
+            r.drain(|_, v| seen.push(v));
+            std::hint::spin_loop();
+        }
+        assert_eq!(producer.join().unwrap(), 10_000);
+        assert_eq!(seen, (0..10_000u64).collect::<Vec<_>>());
+        assert_eq!(r.dropped(), 0);
+    }
+}

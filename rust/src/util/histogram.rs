@@ -5,7 +5,12 @@
 //! a lock acquisition and a full simulation run.
 
 /// A histogram with geometric (power-of-two) buckets over `u64` values.
-#[derive(Clone, Debug)]
+///
+/// Merging is associative and commutative (bucket-wise saturating
+/// addition), so per-worker histograms drained by the telemetry
+/// aggregator can be folded in any order — the merged result is
+/// independent of drain interleaving.
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct LogHistogram {
     /// counts[i] counts values v with 2^i <= v < 2^(i+1); counts[0] also
     /// includes v == 0.
@@ -42,14 +47,29 @@ impl LogHistogram {
     /// Record one value.
     #[inline]
     pub fn record(&mut self, v: u64) {
-        self.counts[Self::bucket(v)] += 1;
-        self.total += 1;
-        self.sum += v as u128;
+        self.record_many(v, 1);
+    }
+
+    /// Record `n` occurrences of `v` at once (the aggregator's folding
+    /// path). Counts saturate at `u64::MAX` instead of wrapping, so a
+    /// pathological merge chain degrades to a pinned count rather than
+    /// silently losing 2^64 samples.
+    #[inline]
+    pub fn record_many(&mut self, v: u64, n: u64) {
+        let b = Self::bucket(v);
+        self.counts[b] = self.counts[b].saturating_add(n);
+        self.total = self.total.saturating_add(n);
+        self.sum = self.sum.saturating_add(v as u128 * n as u128);
     }
 
     /// Number of recorded values.
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Whether nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
     }
 
     /// Mean of recorded values (0 if empty).
@@ -78,13 +98,29 @@ impl LogHistogram {
         u64::MAX
     }
 
-    /// Merge another histogram into this one.
+    /// Median (upper bucket edge, like [`LogHistogram::quantile`]).
+    pub fn p50(&self) -> u64 {
+        self.quantile(0.50)
+    }
+
+    /// 90th percentile (upper bucket edge).
+    pub fn p90(&self) -> u64 {
+        self.quantile(0.90)
+    }
+
+    /// 99th percentile (upper bucket edge).
+    pub fn p99(&self) -> u64 {
+        self.quantile(0.99)
+    }
+
+    /// Merge another histogram into this one (saturating, associative,
+    /// commutative).
     pub fn merge(&mut self, other: &LogHistogram) {
         for i in 0..64 {
-            self.counts[i] += other.counts[i];
+            self.counts[i] = self.counts[i].saturating_add(other.counts[i]);
         }
-        self.total += other.total;
-        self.sum += other.sum;
+        self.total = self.total.saturating_add(other.total);
+        self.sum = self.sum.saturating_add(other.sum);
     }
 
     /// Non-empty buckets as `(lower_edge, count)` pairs, ascending.
@@ -141,5 +177,89 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert_eq!(a.buckets().len(), 2);
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut c = LogHistogram::new();
+        for v in [0u64, 1, 7, 63] {
+            a.record(v);
+        }
+        for v in [64u64, 65, 4096] {
+            b.record(v);
+        }
+        c.record_many(u64::MAX, 3);
+
+        // (a ⊕ b) ⊕ c
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        // a ⊕ (b ⊕ c)
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge must be associative");
+
+        // b ⊕ a == a ⊕ b
+        let mut ba = b.clone();
+        ba.merge(&a);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        assert_eq!(ab, ba, "merge must be commutative");
+    }
+
+    #[test]
+    fn bucket_boundaries_split_powers_of_two() {
+        // Exactly at a power of two a value starts a new bucket; one
+        // below it stays in the previous bucket.
+        for k in 1..63usize {
+            let edge = 1u64 << k;
+            assert_eq!(LogHistogram::bucket(edge), k, "2^{k} opens bucket {k}");
+            assert_eq!(
+                LogHistogram::bucket(edge - 1),
+                k - 1,
+                "2^{k}-1 stays in bucket {}",
+                k - 1
+            );
+        }
+        let mut h = LogHistogram::new();
+        h.record(64); // bucket 6: [64, 128)
+        assert_eq!(h.buckets(), vec![(64, 1)]);
+        assert_eq!(h.quantile(1.0), 128, "upper edge of [64,128)");
+        let mut top = LogHistogram::new();
+        top.record(u64::MAX); // bucket 63 has no finite upper edge
+        assert_eq!(top.quantile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn counts_saturate_instead_of_wrapping() {
+        let mut h = LogHistogram::new();
+        h.record_many(8, u64::MAX);
+        h.record_many(8, 5); // would wrap without saturation
+        assert_eq!(h.count(), u64::MAX);
+        assert_eq!(h.buckets(), vec![(8, u64::MAX)]);
+
+        let mut other = LogHistogram::new();
+        other.record_many(8, u64::MAX);
+        h.merge(&other);
+        assert_eq!(h.count(), u64::MAX, "merge saturates too");
+        // Percentiles stay sane at the saturation point.
+        assert_eq!(h.p50(), 16);
+        assert_eq!(h.p99(), 16);
+    }
+
+    #[test]
+    fn percentile_shorthands_match_quantile() {
+        let mut h = LogHistogram::new();
+        for v in 0..1000u64 {
+            h.record(v);
+        }
+        assert_eq!(h.p50(), h.quantile(0.50));
+        assert_eq!(h.p90(), h.quantile(0.90));
+        assert_eq!(h.p99(), h.quantile(0.99));
+        assert!(h.p50() <= h.p90() && h.p90() <= h.p99());
     }
 }

@@ -282,20 +282,25 @@ impl VirtualEngine {
             per_worker.push(w.stats.clone());
             t_end = t_end.max(w.clock);
         }
+        let chain = ProtocolStats {
+            tasks_created: des.created,
+            tasks_executed: des.erased,
+            max_chain_len: des.max_live,
+            batch: 1,
+            ..Default::default()
+        };
         RunReport {
             engine: "virtual",
             workers: self.workers,
             time_s: t_end * 1e-9,
             basis: TimeBasis::Virtual,
             totals,
+            telemetry: Some(crate::protocol::stats::post_hoc_snapshot(
+                &per_worker,
+                &chain,
+            )),
             per_worker,
-            chain: ProtocolStats {
-                tasks_created: des.created,
-                tasks_executed: des.erased,
-                max_chain_len: des.max_live,
-                batch: 1,
-                ..Default::default()
-            },
+            chain,
             sched: None,
         }
     }

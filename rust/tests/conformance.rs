@@ -150,6 +150,56 @@ fn sharded_lattice_models_are_covered_by_the_matrix() {
 }
 
 #[test]
+fn telemetry_modes_are_invisible_in_every_trace() {
+    // ISSUE 7's conformance axis: the telemetry sampling layer must be
+    // semantically inert — the epoch trace is byte-identical with rings
+    // on, off, or saturated down to 4 slots, on every chain engine.
+    // (`ADAPAR_TELEMETRY_MODES` pins the axis for CI sharding.)
+    use adapar::model::testkit::env_telemetry_modes;
+    use adapar::TelemetryMode;
+    for name in ["voter", "sir"] {
+        let info = registry::info(name).unwrap();
+        let (agents, steps, size) = workload(&info);
+        let run = |engine: EngineKind, workers: usize, mode: TelemetryMode| {
+            Simulation::builder()
+                .model(info.name.clone())
+                .engine(engine)
+                .workers(workers)
+                .tasks_per_cycle(8)
+                .batch(8)
+                .agents(agents)
+                .steps(steps)
+                .size(size)
+                .seed(17)
+                .every(256)
+                .telemetry(mode)
+                .run()
+                .unwrap_or_else(|e| {
+                    panic!("{name}/{engine} n={workers} telemetry={}: {e}", mode.label())
+                })
+                .observable
+        };
+        let reference = run(EngineKind::Sequential, 1, TelemetryMode::On);
+        assert!(reference.len() > 1, "{name}: need a multi-frame trace");
+        for mode in env_telemetry_modes() {
+            for &engine in &[EngineKind::Parallel, EngineKind::Sharded] {
+                if !info.supports(engine) {
+                    continue;
+                }
+                for &workers in &worker_counts() {
+                    assert_eq!(
+                        run(engine, workers, mode),
+                        reference,
+                        "{name} {engine} n={workers} telemetry={}: trace diverged",
+                        mode.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn runtime_registrations_enter_the_matrix() {
     // A model registered at runtime — sharding capability included —
     // must be covered by exactly the same machinery, proving the matrix

@@ -271,10 +271,11 @@ fn runtime_registered_model_parses_from_sweep_toml() {
 fn boxed_engines_dispatch_uniformly() {
     // The object-safe Engine surface: one loop, four backends, one report
     // type.
+    let tele = adapar::TelemetryMode::env_default();
     let engines: Vec<Box<dyn Engine>> = vec![
-        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 3, CostModel::default()),
-        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 3, CostModel::default()),
-        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 3, CostModel::default()),
+        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 3, CostModel::default(), tele),
+        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 3, CostModel::default(), tele),
+        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 3, CostModel::default(), tele),
     ];
     let model = registry_api::build(
         "voter",

@@ -1,0 +1,287 @@
+//! Telemetry subsystem integration tests (ISSUE 7): the inertness
+//! contract (the sampling layer never changes results — on, off or
+//! saturated), ring-overflow accounting, aggregator shutdown fencing,
+//! the async sink's byte-identity guarantee, and the error-path drop
+//! guard that leaves complete sink files behind red runs.
+
+use adapar::api::observe::{AsyncSink, JsonLinesSink, ObsFrame, ObsValue, Observer, Sink, SinkSpec};
+use adapar::model::testkit::env_telemetry_modes;
+use adapar::telemetry::MetricsRegistry;
+use adapar::util::json::Json;
+use adapar::{EngineKind, ObservePlan, Simulation, TelemetryMode};
+
+fn voter(engine: EngineKind, workers: usize, mode: TelemetryMode) -> adapar::SimOutcome {
+    Simulation::builder()
+        .model("voter")
+        .engine(engine)
+        .workers(workers)
+        .batch(16)
+        .tasks_per_cycle(16)
+        .agents(240)
+        .steps(4_000)
+        .seed(7)
+        .observe(ObservePlan::every(512))
+        .telemetry(mode)
+        .run()
+        .unwrap_or_else(|e| panic!("voter/{engine} n={workers} {}: {e}", mode.label()))
+}
+
+/// The inertness contract, engine by engine: the observation trace (and
+/// the lossless counters) are identical whether the ring/histogram layer
+/// is on, off, or saturated down to 4-slot rings.
+#[test]
+fn telemetry_mode_is_semantically_inert() {
+    let reference = voter(EngineKind::Sequential, 1, TelemetryMode::On);
+    for mode in env_telemetry_modes() {
+        for (engine, workers) in [
+            (EngineKind::Sequential, 1),
+            (EngineKind::Parallel, 3),
+            (EngineKind::Sharded, 2),
+        ] {
+            let got = voter(engine, workers, mode);
+            assert_eq!(
+                got.observable,
+                reference.observable,
+                "{engine} n={workers} telemetry={}: trace diverged from sequential",
+                mode.label()
+            );
+            assert_eq!(
+                got.report.totals.executed, reference.report.totals.executed,
+                "{engine} telemetry={}: executed-count drift",
+                mode.label()
+            );
+            let snap = got
+                .report
+                .telemetry
+                .as_ref()
+                .unwrap_or_else(|| panic!("{engine}: report must carry a telemetry snapshot"));
+            // Chainless engines publish post-hoc (counters only), so
+            // their snapshot always reports mode "off".
+            if engine != EngineKind::Sequential {
+                assert_eq!(snap.mode(), mode);
+            }
+        }
+    }
+}
+
+/// Saturated mode (4-slot rings) must drop samples on a real workload —
+/// and that loss must stay confined to histograms: counters stay exact
+/// and the trace stays byte-identical. The sharded engine samples
+/// `exec_ns` on every task, so 4000 tasks give a dense stream no 4-slot
+/// ring can absorb.
+#[test]
+fn saturated_rings_drop_samples_without_touching_results() {
+    let on = voter(EngineKind::Sharded, 2, TelemetryMode::On);
+    let sat = voter(EngineKind::Sharded, 2, TelemetryMode::Saturated);
+    assert_eq!(sat.observable, on.observable, "saturation changed the trace");
+    let snap = sat.report.telemetry.as_ref().unwrap();
+    assert!(
+        snap.dropped_total() > 0,
+        "4-slot rings under 4000 per-task samples must overflow"
+    );
+    // The lossless layer is untouched by ring overflow.
+    assert_eq!(snap.counter("worker.executed"), 4_000);
+    assert_eq!(snap.counter("chain.tasks_executed"), 4_000);
+    // Off mode reports no rings at all — dropped stays zero.
+    let off = voter(EngineKind::Sharded, 2, TelemetryMode::Off);
+    assert_eq!(off.report.telemetry.as_ref().unwrap().dropped_total(), 0);
+}
+
+/// Every push is either merged into a histogram or counted as dropped —
+/// ring overflow is accounting, never silent loss or blocking.
+#[test]
+fn ring_overflow_conserves_every_sample() {
+    let mut reg = MetricsRegistry::new();
+    let h = reg.histogram("t.samples");
+    let core = reg.start(1, TelemetryMode::Saturated); // 4-slot ring
+    let total = 10_000u64;
+    {
+        let t = core.handle(0);
+        for v in 0..total {
+            t.sample(h, v);
+        }
+    }
+    let snap = core.finish();
+    let merged = snap.histogram("t.samples").expect("registered histogram");
+    assert_eq!(
+        merged.count() + snap.dropped_total(),
+        total,
+        "push conservation: merged + dropped must equal pushed"
+    );
+    assert!(
+        snap.dropped_total() > 0,
+        "a 4-slot ring cannot absorb 10k samples"
+    );
+}
+
+/// The shutdown fence: everything pushed before `finish` lands in the
+/// final histograms when the ring has room — the aggregator's last drain
+/// runs after the stop flag, losing nothing.
+#[test]
+fn aggregator_shutdown_drains_every_pre_fence_sample() {
+    let mut reg = MetricsRegistry::new();
+    let h = reg.histogram("t.fenced");
+    let c = reg.counter("t.count");
+    let core = reg.start(2, TelemetryMode::On); // 4096-slot rings
+    for w in 0..2 {
+        let t = core.handle(w);
+        for v in 0..1_000u64 {
+            t.sample(h, v + 1);
+            t.add(c, 1);
+        }
+    }
+    core.record(c, 5); // engine-global row
+    let snap = core.finish();
+    assert_eq!(snap.dropped_total(), 0, "rings never filled");
+    assert_eq!(snap.histogram("t.fenced").unwrap().count(), 2_000);
+    assert_eq!(snap.histogram_worker("t.fenced", 0).unwrap().count(), 1_000);
+    assert_eq!(snap.counter("t.count"), 2_005);
+    assert_eq!(snap.counter_worker("t.count", 1), 1_000);
+    // Counters survive Off mode too — they are the stats plumbing, not
+    // an optional layer.
+    let mut reg = MetricsRegistry::new();
+    let c = reg.counter("t.count");
+    let core = reg.start(1, TelemetryMode::Off);
+    core.handle(0).add(c, 7);
+    assert_eq!(core.finish().counter("t.count"), 7);
+}
+
+fn frames(n: u64) -> Vec<ObsFrame> {
+    (0..n)
+        .map(|i| ObsFrame {
+            tasks: i * 100,
+            values: vec![
+                ("m".into(), ObsValue::Float(i as f64 / 3.0)),
+                (
+                    "census".into(),
+                    ObsValue::counts([("S", 10 - i as i64), ("I", i as i64)]),
+                ),
+            ],
+        })
+        .collect()
+}
+
+/// The async adapter's contract: output bytes are identical to running
+/// the wrapped sink synchronously (one consumer, FIFO channel).
+#[test]
+fn async_sink_output_is_byte_identical_to_sync() {
+    let dir = std::env::temp_dir().join("adapar_telemetry_async_sink_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let sync_path = dir.join("sync.jsonl");
+    let async_path = dir.join("async.jsonl");
+
+    let mut sync_sink = JsonLinesSink::create(&sync_path).unwrap();
+    let mut async_sink =
+        AsyncSink::with_depth(Box::new(JsonLinesSink::create(&async_path).unwrap()), 2);
+    for frame in frames(10) {
+        sync_sink.record(&frame).unwrap();
+        async_sink.record(&frame).unwrap();
+    }
+    sync_sink.finish().unwrap();
+    async_sink.finish().unwrap();
+    async_sink.finish().unwrap(); // the flush fence is idempotent
+
+    let sync_bytes = std::fs::read(&sync_path).unwrap();
+    let async_bytes = std::fs::read(&async_path).unwrap();
+    assert!(!sync_bytes.is_empty());
+    assert_eq!(sync_bytes, async_bytes, "async output must match sync byte-for-byte");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The error-path guard (ISSUE satellite): dropping an unfinished
+/// `Observer` — what happens when an engine error unwinds past
+/// `finish` — still flushes and closes every attached sink, so a red
+/// run leaves a complete, parseable JSON-lines file.
+#[test]
+fn dropped_observer_leaves_complete_sink_files() {
+    let dir = std::env::temp_dir().join("adapar_telemetry_drop_guard_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("red_run.jsonl");
+    {
+        let mut obs = Observer::new(1);
+        obs.add_sink(SinkSpec::JsonLines(path.clone()).build(None).unwrap());
+        for frame in frames(5) {
+            obs.record(frame.tasks, frame.values);
+        }
+        // No `finish`: the run "failed" here. Drop must flush anyway.
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 5, "all recorded frames must reach the file");
+    for line in lines {
+        let obj = Json::parse(line).expect("every line must be complete JSON");
+        assert!(matches!(obj, Json::Obj(_)));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite 1: the `--json` report carries one coherent `telemetry`
+/// object, and the legacy stats blocks are exact views over it.
+#[test]
+fn report_stats_are_views_over_the_registry_snapshot() {
+    let out = voter(EngineKind::Sharded, 2, TelemetryMode::On);
+    let report = &out.report;
+    let snap = report.telemetry.as_ref().unwrap();
+
+    assert_eq!(snap.counter("worker.executed"), report.totals.executed);
+    assert_eq!(snap.counter("worker.created"), report.totals.created);
+    for (w, per) in report.per_worker.iter().enumerate() {
+        assert_eq!(snap.counter_worker("worker.executed", w), per.executed);
+    }
+    assert_eq!(snap.counter("chain.tasks_executed"), report.chain.tasks_executed);
+    assert_eq!(snap.counter("chain.tail_locks"), report.chain.tail_locks);
+
+    let sched = report.sched.as_ref().expect("sharded run has sched stats");
+    assert_eq!(snap.counter("sched.local_tasks"), sched.local_tasks);
+    assert_eq!(snap.counter("sched.boundary_tasks"), sched.boundary_tasks);
+    assert_eq!(
+        snap.counter("sched.backpressure_stalls"),
+        sched.backpressure_stalls
+    );
+    for (k, &locks) in sched.per_shard_tail_locks.iter().enumerate() {
+        assert_eq!(
+            snap.counter(&format!("sched.shard{k}.tail_locks")),
+            locks,
+            "shard {k} tail-lock view"
+        );
+    }
+
+    let json = report.to_json().render();
+    assert!(json.contains("\"telemetry\":{"), "{json}");
+    assert!(json.contains("\"counters\":{"), "{json}");
+    assert!(json.contains("\"histograms\":{"), "{json}");
+    assert!(json.contains("\"dropped_total\":"), "{json}");
+}
+
+/// Chainless engines publish post-hoc, so their reports carry the same
+/// coherent snapshot shape as the chain engines.
+#[test]
+fn chainless_engines_carry_snapshots_too() {
+    for engine in [EngineKind::Sequential, EngineKind::Virtual] {
+        let out = voter(engine, 1, TelemetryMode::On);
+        let snap = out.report.telemetry.as_ref().unwrap();
+        assert_eq!(
+            snap.counter("worker.executed"),
+            out.report.totals.executed,
+            "{engine}"
+        );
+        assert_eq!(snap.dropped_total(), 0, "{engine}: no rings, no drops");
+    }
+}
+
+/// TelemetryMode parsing round-trips the CLI/env spellings.
+#[test]
+fn telemetry_mode_parses_cli_spellings() {
+    assert_eq!("on".parse::<TelemetryMode>().unwrap(), TelemetryMode::On);
+    assert_eq!("off".parse::<TelemetryMode>().unwrap(), TelemetryMode::Off);
+    assert_eq!(
+        "saturate".parse::<TelemetryMode>().unwrap(),
+        TelemetryMode::Saturated
+    );
+    assert_eq!(
+        "saturated".parse::<TelemetryMode>().unwrap(),
+        TelemetryMode::Saturated
+    );
+    assert!("loud".parse::<TelemetryMode>().is_err());
+    assert_eq!(TelemetryMode::default(), TelemetryMode::On);
+}
