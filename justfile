@@ -22,7 +22,9 @@ perf-diff:
 
 # Regenerate the committed baseline from this machine: re-runs the ledger
 # scenarios (single-worker, fixed seeds — bit-reproducible) and pins every
-# metric, including wall-clock. Review and commit the result.
+# metric, including wall-clock (ADAPAR_PIN_WALL — only run this on a
+# reference machine; a bare `perf-diff --update` leaves wall_* unpinned).
+# Review and commit the result.
 ledger-update:
-    cargo run --release -- perf-diff --update --ledger experiments/ledger/BENCH_baseline.json
+    ADAPAR_PIN_WALL=1 cargo run --release -- perf-diff --update --ledger experiments/ledger/BENCH_baseline.json
     git diff --stat experiments/ledger/BENCH_baseline.json

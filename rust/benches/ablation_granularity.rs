@@ -22,6 +22,7 @@ fn main() -> adapar::Result<()> {
             tasks_per_cycle: 6,
             seed: 1,
             cost: CostModel::default(),
+            trace: adapar::TraceMode::Off,
         }
         .run(&m);
         let tasks = rep.totals.executed.max(1);

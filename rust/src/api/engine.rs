@@ -17,6 +17,7 @@ use crate::protocol::{
 };
 use crate::sched::{ShardedConfig, ShardedEngine};
 use crate::telemetry::TelemetryMode;
+use crate::trace::TraceMode;
 use crate::vtime::{CostModel, VirtualEngine};
 
 /// An execution backend able to run any [`DynModel`].
@@ -51,7 +52,7 @@ impl Engine for SequentialEngine {
         model: &dyn DynModel,
         obs: Option<&mut Observer>,
     ) -> Result<RunReport> {
-        Ok(model.run_sequential(self.seed, obs))
+        Ok(model.run_sequential(self.seed, self.trace, obs))
     }
 }
 
@@ -79,7 +80,7 @@ impl Engine for StepwiseEngine {
         model: &dyn DynModel,
         obs: Option<&mut Observer>,
     ) -> Result<RunReport> {
-        model.run_stepwise(self.workers, self.seed, obs)
+        model.run_stepwise(self.workers, self.seed, self.trace, obs)
     }
 }
 
@@ -112,6 +113,7 @@ impl Engine for VirtualEngine {
             tasks_per_cycle: self.tasks_per_cycle,
             batch: 1, // the DES models unbatched creation
             seed: self.seed,
+            trace: self.trace,
             ..Default::default()
         };
         Ok(model.run_virtual(&cfg, &self.cost, obs))
@@ -195,7 +197,8 @@ impl std::fmt::Display for EngineKind {
 /// Build a boxed engine for a kind and workflow parameters. `batch` is
 /// the chain engines' creation/routing batch size `B`; `cost` is only
 /// consulted by the virtual testbed; `telemetry` selects the (inert)
-/// histogram-sampling mode on the threaded engines.
+/// histogram-sampling mode on the threaded engines; `trace` the equally
+/// inert causal-tracing mode (every engine honours it).
 pub fn engine_for(
     kind: EngineKind,
     workers: usize,
@@ -204,9 +207,10 @@ pub fn engine_for(
     seed: u64,
     cost: CostModel,
     telemetry: TelemetryMode,
+    trace: TraceMode,
 ) -> Box<dyn Engine> {
     match kind {
-        EngineKind::Sequential => Box::new(SequentialEngine::new(seed)),
+        EngineKind::Sequential => Box::new(SequentialEngine { seed, trace }),
         EngineKind::Parallel => Box::new(ParallelEngine::new(ProtocolConfig {
             workers,
             tasks_per_cycle,
@@ -214,14 +218,20 @@ pub fn engine_for(
             seed,
             collect_timing: false,
             telemetry,
+            trace,
         })),
-        EngineKind::Stepwise => Box::new(StepwiseEngine::new(workers, seed)),
+        EngineKind::Stepwise => {
+            let mut e = StepwiseEngine::new(workers, seed);
+            e.trace = trace;
+            Box::new(e)
+        }
         EngineKind::Sharded => Box::new(ShardedEngine::new(ShardedConfig {
             workers,
             tasks_per_cycle,
             batch,
             seed,
             telemetry,
+            trace,
             ..Default::default()
         })),
         EngineKind::Virtual => Box::new(VirtualEngine {
@@ -229,6 +239,7 @@ pub fn engine_for(
             tasks_per_cycle,
             seed,
             cost,
+            trace,
         }),
     }
 }

@@ -26,6 +26,7 @@ use crate::protocol::{
     ParallelEngine, ProtocolConfig, RunReport, SequentialEngine, StepwiseEngine, SyncModel,
 };
 use crate::sched::{ShardableModel, ShardedConfig, ShardedEngine};
+use crate::trace::TraceMode;
 use crate::vtime::{calibrate_exec, CostModel, VirtualEngine};
 
 /// An object-safe, engine-agnostic runnable model: [`Model`] with its
@@ -35,8 +36,15 @@ pub trait DynModel: Send + Sync {
     /// Model name (registry key or ad-hoc label).
     fn name(&self) -> &str;
 
-    /// Run on the canonical single-threaded engine.
-    fn run_sequential(&self, seed: u64, obs: Option<&mut Observer>) -> RunReport;
+    /// Run on the canonical single-threaded engine. `trace` selects the
+    /// (inert) causal-tracing mode, like `ProtocolConfig::trace` does for
+    /// the chain engines.
+    fn run_sequential(
+        &self,
+        seed: u64,
+        trace: TraceMode,
+        obs: Option<&mut Observer>,
+    ) -> RunReport;
 
     /// Run on the paper's adaptive parallel engine.
     fn run_parallel(&self, cfg: &ProtocolConfig, obs: Option<&mut Observer>) -> RunReport;
@@ -79,6 +87,7 @@ pub trait DynModel: Send + Sync {
         &self,
         workers: usize,
         seed: u64,
+        trace: TraceMode,
         obs: Option<&mut Observer>,
     ) -> Result<RunReport>;
 
@@ -137,7 +146,7 @@ pub struct Runnable<M: Model> {
 /// The monomorphized stepwise entry point stored by [`Runnable`] when the
 /// model has a synchronous form.
 type StepwiseFn<M> =
-    fn(&M, usize, u64, Option<(&dyn Fn() -> Metrics, &mut Observer)>) -> RunReport;
+    fn(&M, usize, u64, TraceMode, Option<(&dyn Fn() -> Metrics, &mut Observer)>) -> RunReport;
 
 /// The monomorphized sharded entry point stored by [`Runnable`] when the
 /// model exposes a footprint topology.
@@ -157,9 +166,11 @@ fn run_stepwise_impl<M: Model + SyncModel>(
     m: &M,
     workers: usize,
     seed: u64,
+    trace: TraceMode,
     obs: Option<(&dyn Fn() -> Metrics, &mut Observer)>,
 ) -> RunReport {
-    let engine = StepwiseEngine::new(workers, seed);
+    let mut engine = StepwiseEngine::new(workers, seed);
+    engine.trace = trace;
     match obs {
         None => engine.run(m),
         Some((probe, observer)) => engine.run_observed(m, probe, observer),
@@ -275,8 +286,13 @@ impl<M: Model> DynModel for Runnable<M> {
         &self.name
     }
 
-    fn run_sequential(&self, seed: u64, obs: Option<&mut Observer>) -> RunReport {
-        let engine = SequentialEngine::new(seed);
+    fn run_sequential(
+        &self,
+        seed: u64,
+        trace: TraceMode,
+        obs: Option<&mut Observer>,
+    ) -> RunReport {
+        let engine = SequentialEngine { seed, trace };
         match obs {
             None => engine.run(&self.model),
             Some(observer) => engine.run_observed(&self.model, &|| self.probe_now(), observer),
@@ -302,6 +318,7 @@ impl<M: Model> DynModel for Runnable<M> {
             tasks_per_cycle: cfg.tasks_per_cycle,
             seed: cfg.seed,
             cost: *cost,
+            trace: cfg.trace,
         };
         match obs {
             None => engine.run(&self.model),
@@ -321,6 +338,7 @@ impl<M: Model> DynModel for Runnable<M> {
             tasks_per_cycle: cfg.tasks_per_cycle,
             seed: cfg.seed,
             cost: *cost,
+            trace: cfg.trace,
         };
         match obs {
             None => engine.run_chaos(&self.model, hook),
@@ -358,15 +376,17 @@ impl<M: Model> DynModel for Runnable<M> {
         &self,
         workers: usize,
         seed: u64,
+        trace: TraceMode,
         obs: Option<&mut Observer>,
     ) -> Result<RunReport> {
         match self.stepwise {
             Some(f) => Ok(match obs {
-                None => f(&self.model, workers, seed, None),
+                None => f(&self.model, workers, seed, trace, None),
                 Some(observer) => f(
                     &self.model,
                     workers,
                     seed,
+                    trace,
                     Some((&|| self.probe_now(), observer)),
                 ),
             }),
@@ -445,7 +465,7 @@ mod tests {
                 )]
             })
             .boxed();
-        let seq = dyn_model.run_sequential(3, None);
+        let seq = dyn_model.run_sequential(3, TraceMode::Off, None);
         assert_eq!(seq.totals.executed, 200);
         let par = dyn_model.run_parallel(
             &ProtocolConfig {
@@ -475,7 +495,7 @@ mod tests {
         ));
         assert_eq!(dyn_model.task_count_hint(3), Some(200));
         assert!(!dyn_model.has_sync_form());
-        assert!(dyn_model.run_stepwise(2, 3, None).is_err());
+        assert!(dyn_model.run_stepwise(2, 3, TraceMode::Off, None).is_err());
         assert!(!dyn_model.has_sharded_form(), "sharding is opt-in");
         assert!(dyn_model.run_sharded(&ShardedConfig::default(), None).is_err());
         dyn_model.check_consistency().unwrap();
@@ -519,7 +539,7 @@ mod tests {
             obs.finish().unwrap()
         };
         let reference = trace(&|m, o| {
-            m.run_sequential(5, Some(o));
+            m.run_sequential(5, TraceMode::Off, Some(o));
         });
         assert_eq!(reference.len() as u64, frame_count(30, 100), "0,30,60,90,100");
         for workers in [1, 2, 4] {

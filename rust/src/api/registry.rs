@@ -641,7 +641,7 @@ mod tests {
             )
             .unwrap();
         assert_eq!(m.name(), "axelrod");
-        let rep = m.run_sequential(1, None);
+        let rep = m.run_sequential(1, crate::trace::TraceMode::Off, None);
         assert_eq!(rep.totals.executed, 10);
     }
 

@@ -34,6 +34,7 @@ use crate::api::registry::{self, BuildCtx, Params};
 use crate::error::Result;
 use crate::protocol::{ProtocolConfig, RunReport};
 use crate::telemetry::TelemetryMode;
+use crate::trace::TraceMode;
 use crate::util::toml::Value;
 use crate::vtime::CostModel;
 
@@ -84,6 +85,9 @@ pub struct Simulation {
     /// Telemetry sampling mode (semantically inert; defaults from
     /// `ADAPAR_TELEMETRY`).
     pub telemetry: TelemetryMode,
+    /// Causal-tracing mode (semantically inert; defaults from
+    /// `ADAPAR_TRACE`).
+    pub trace: TraceMode,
 }
 
 impl Default for Simulation {
@@ -103,6 +107,7 @@ impl Default for Simulation {
             cost: None,
             observe: ObservePlan::default(),
             telemetry: TelemetryMode::env_default(),
+            trace: TraceMode::env_default(),
         }
     }
 }
@@ -150,6 +155,7 @@ impl Simulation {
             self.seed,
             self.cost.unwrap_or_default(),
             self.telemetry,
+            self.trace,
         );
 
         // Materialize the observation pipeline: the in-memory trace is
@@ -283,6 +289,13 @@ impl SimulationBuilder {
     /// mode; only the report's `telemetry` histograms change).
     pub fn telemetry(mut self, mode: TelemetryMode) -> Self {
         self.sim.telemetry = mode;
+        self
+    }
+
+    /// Causal-tracing mode (inert — results are identical in any mode;
+    /// only the report's `trace` timeline changes).
+    pub fn trace(mut self, mode: TraceMode) -> Self {
+        self.sim.trace = mode;
         self
     }
 

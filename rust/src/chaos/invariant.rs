@@ -217,6 +217,7 @@ mod tests {
                 ..Default::default()
             }),
             telemetry: None,
+            trace: None,
         }
     }
 

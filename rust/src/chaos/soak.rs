@@ -73,6 +73,12 @@ pub struct SoakFailure {
     pub shrunk: FaultPlan,
     /// The committable repro file: comment header + shrunk plan TOML.
     pub repro_toml: String,
+    /// Telemetry snapshot (JSON) from a diagnostic re-run of the shrunk
+    /// plan on the sharded engine — written next to the repro TOML.
+    pub telemetry_json: String,
+    /// Perfetto trace from the same diagnostic re-run (full mode), when
+    /// the re-run produced one.
+    pub trace_json: Option<String>,
 }
 
 /// Outcome of one soak sweep.
@@ -185,7 +191,7 @@ fn derive_seed(base: u64, i: u64) -> u64 {
 fn oracle(name: &str, wl: &Workload, seed: u64) -> Result<Observations> {
     let m = build(name, wl, seed)?;
     let mut obs = Observer::new(wl.cadence);
-    m.run_sequential(seed, Some(&mut obs));
+    m.run_sequential(seed, crate::trace::TraceMode::Off, Some(&mut obs));
     obs.finish()
 }
 
@@ -244,6 +250,37 @@ fn check_combo(
     Ok(out)
 }
 
+/// Observability artifacts for one failing combination: re-run the
+/// shrunk plan once on the sharded injected engine with telemetry
+/// sampling on and full causal tracing — both semantically inert, so
+/// the diagnostic re-run reproduces the failing schedule byte for byte
+/// — and serialize what it saw.
+fn capture_artifacts(
+    name: &str,
+    wl: &Workload,
+    seed: u64,
+    p: &FaultPlan,
+    workers: usize,
+) -> Result<(String, Option<String>)> {
+    let m = build(name, wl, seed)?;
+    let mut hook = FaultHook::new(p.clone());
+    let scfg = ShardedConfig {
+        workers,
+        seed,
+        telemetry: crate::telemetry::TelemetryMode::On,
+        trace: crate::trace::TraceMode::Full,
+        ..Default::default()
+    };
+    let report = m.run_sharded_chaos(&scfg, None, &mut hook)?;
+    let telemetry = report
+        .telemetry
+        .as_ref()
+        .map(|t| t.to_json().render())
+        .unwrap_or_else(|| "{}".to_string());
+    let trace = report.trace.as_ref().map(crate::trace::perfetto::export);
+    Ok((telemetry, trace))
+}
+
 /// Run a soak sweep. Deterministic in the config; a non-empty
 /// [`SoakReport::failures`] carries minimized repro TOMLs.
 pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
@@ -279,6 +316,8 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
                         .unwrap_or(true)
                 });
                 let repro_toml = repro_toml(name, seed, cfg.workers, &shrunk, &violations);
+                let (telemetry_json, trace_json) =
+                    capture_artifacts(name, &wl, seed, &shrunk, cfg.workers)?;
                 report.failures.push(SoakFailure {
                     model: name.clone(),
                     seed,
@@ -286,6 +325,8 @@ pub fn run(cfg: &SoakConfig) -> Result<SoakReport> {
                     violations,
                     shrunk,
                     repro_toml,
+                    telemetry_json,
+                    trace_json,
                 });
             }
         }

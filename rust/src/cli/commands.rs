@@ -133,12 +133,20 @@ fn observe_plan_from(args: &Args, with_progress: bool) -> Result<ObservePlan> {
     Ok(plan)
 }
 
-/// The `--json` payload for one run.
+/// The `--json` payload for one run. `sampling_lossy` flags a saturated
+/// telemetry run (dropped histogram samples) so downstream consumers
+/// don't trust under-counted histograms silently.
 fn run_json(cfg: &SweepConfig, out: &SimOutcome, size: usize, seed: u64) -> Json {
+    let lossy = out
+        .report
+        .telemetry
+        .as_ref()
+        .is_some_and(|t| t.dropped_total() > 0);
     Json::Obj(vec![
         ("model".into(), Json::from(cfg.model.clone())),
         ("size".into(), Json::from(size)),
         ("seed".into(), Json::from(seed)),
+        ("sampling_lossy".into(), Json::from(lossy)),
         ("report".into(), out.report.to_json()),
         ("observations".into(), out.observable.to_json()),
     ])
@@ -163,6 +171,22 @@ pub fn run(args: &Args) -> Result<()> {
         "telemetry",
         crate::telemetry::TelemetryMode::env_default(),
     )?;
+    // `--trace <file>` implies full tracing unless `--trace-mode` says
+    // otherwise; without a file the mode still controls collection (the
+    // summary lands in the report).
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let trace_mode = args.get_parse(
+        "trace-mode",
+        if trace_path.is_some() {
+            crate::trace::TraceMode::Full
+        } else {
+            crate::trace::TraceMode::env_default()
+        },
+    )?;
+    crate::ensure!(
+        trace_path.is_none() || trace_mode != crate::trace::TraceMode::Off,
+        "--trace needs tracing enabled: drop `--trace-mode off` or use spans|full"
+    );
     let out = Simulation::builder()
         .model(cfg.model.clone())
         .engine(engine)
@@ -177,7 +201,39 @@ pub fn run(args: &Args) -> Result<()> {
         .params(cfg.params.clone())
         .observe(plan)
         .telemetry(telemetry)
+        .trace(trace_mode)
         .run()?;
+    // Saturated telemetry rings drop histogram samples; say so out loud
+    // (stderr, so `--json` stdout stays machine-readable).
+    if let Some(t) = &out.report.telemetry {
+        let dropped = t.dropped_total();
+        if dropped > 0 {
+            eprintln!(
+                "warning: telemetry rings saturated — {dropped} histogram sample(s) dropped; \
+                 histograms under-count (lossless counters are unaffected)"
+            );
+        }
+    }
+    if let Some(path) = &trace_path {
+        let tr = out
+            .report
+            .trace
+            .as_ref()
+            .with_context(|| "engine returned no trace despite tracing being enabled")?;
+        crate::util::create_parent_dirs(path)?;
+        let mut text = crate::trace::perfetto::export(tr);
+        text.push('\n');
+        std::fs::write(path, text)
+            .with_context(|| format!("writing trace {}", path.display()))?;
+        eprintln!(
+            "wrote trace {} ({} events, {} edges) — open at ui.perfetto.dev or run \
+             `adapar trace-analyze {}`",
+            path.display(),
+            tr.events.len(),
+            tr.edges.len(),
+            path.display()
+        );
+    }
     if json {
         println!("{}", run_json(&cfg, &out, size, seed).render());
         return Ok(());
@@ -425,10 +481,23 @@ pub fn soak(args: &Args) -> Result<()> {
         std::fs::create_dir_all(&out_dir)
             .with_context(|| format!("creating {}", out_dir.display()))?;
         for f in &report.failures {
-            let path = out_dir.join(format!("repro-{}-{}-{:#x}.toml", f.model, f.plan, f.seed));
+            let stem = format!("repro-{}-{}-{:#x}", f.model, f.plan, f.seed);
+            let path = out_dir.join(format!("{stem}.toml"));
             std::fs::write(&path, &f.repro_toml)
                 .with_context(|| format!("writing {}", path.display()))?;
             eprintln!("wrote {}", path.display());
+            // Observability artifacts from the diagnostic re-run of the
+            // shrunk plan: telemetry snapshot + full Perfetto trace.
+            let tpath = out_dir.join(format!("{stem}-telemetry.json"));
+            std::fs::write(&tpath, &f.telemetry_json)
+                .with_context(|| format!("writing {}", tpath.display()))?;
+            eprintln!("wrote {}", tpath.display());
+            if let Some(trace) = &f.trace_json {
+                let trpath = out_dir.join(format!("{stem}-trace.json"));
+                std::fs::write(&trpath, trace)
+                    .with_context(|| format!("writing {}", trpath.display()))?;
+                eprintln!("wrote {}", trpath.display());
+            }
         }
     }
 
@@ -461,6 +530,32 @@ pub fn soak(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `adapar trace-analyze <trace.json>` — work–span analysis of a trace
+/// written by `run --trace`: T1 (total work), T∞ (critical path), the
+/// per-epoch achievable-speedup bound T1/T∞, and the exact attribution
+/// of the gap between the ideal makespan T1/W and the measured window
+/// (exec skew, fence waits, spillover serialization, rebalance, idle).
+pub fn trace_analyze(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.get("trace"))
+        .with_context(|| "usage: adapar trace-analyze <trace.json> [--json]")?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace {path}"))?;
+    let trace = crate::trace::perfetto::parse(&text)
+        .map_err(crate::error::Error::msg)
+        .with_context(|| format!("parsing trace {path}"))?;
+    let analysis = crate::trace::analyze::analyze(&trace);
+    if args.has_flag("json") {
+        println!("{}", analysis.to_json().render());
+    } else {
+        print!("{}", analysis.render_text());
+    }
+    Ok(())
+}
+
 /// `adapar perf-diff` — the run-over-run perf gate. Runs the fixed
 /// deterministic ledger scenarios, compares against the committed
 /// baseline (`--ledger`), and exits nonzero on any structural or schema
@@ -481,9 +576,52 @@ pub fn perf_diff(args: &Args) -> Result<()> {
         let tolerance = ledger::Ledger::load(&ledger_path)
             .map(|l| l.tolerance)
             .unwrap_or(ledger::DEFAULT_TOLERANCE);
-        let updated = ledger::Ledger::pinned(&fresh, tolerance);
+        // Wall-clock baselines only mean something from the designated
+        // reference machine; a casual `--update` keeps them unpinned and
+        // says so, so the provisional baseline can't pass for a pinned one.
+        let pin_wall =
+            std::env::var("ADAPAR_PIN_WALL").is_ok_and(|v| v != "0" && !v.is_empty());
+        let updated = ledger::Ledger::pinned(&fresh, tolerance, pin_wall);
         updated.write(&ledger_path)?;
-        println!("perf-diff: wrote {} (all metrics pinned)", ledger_path.display());
+        let unpinned = updated.unpinned_wall();
+        let notice = (unpinned > 0).then(|| {
+            format!(
+                "{unpinned} wall metric{} unpinned — run `just ledger-update` on a \
+                 reference machine (ADAPAR_PIN_WALL=1) to pin wall-clock baselines",
+                if unpinned == 1 { "" } else { "s" }
+            )
+        });
+        if args.has_flag("json") {
+            println!(
+                "{}",
+                Json::Obj(vec![
+                    (
+                        "updated".into(),
+                        Json::from(ledger_path.display().to_string()),
+                    ),
+                    ("provisional".into(), Json::from(updated.provisional)),
+                    ("unpinned_wall".into(), Json::from(unpinned)),
+                    (
+                        "notice".into(),
+                        notice.clone().map(Json::from).unwrap_or(Json::Null),
+                    ),
+                ])
+                .render()
+            );
+        } else {
+            println!(
+                "perf-diff: wrote {} ({})",
+                ledger_path.display(),
+                if updated.provisional {
+                    "structural metrics pinned"
+                } else {
+                    "all metrics pinned"
+                }
+            );
+        }
+        if let Some(n) = notice {
+            eprintln!("perf-diff: {n}");
+        }
         return Ok(());
     }
 

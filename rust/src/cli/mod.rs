@@ -2,7 +2,8 @@
 //!
 //! ```text
 //! adapar run        --model sir --engine parallel --workers 4 --size 50
-//! adapar run        --model sir --engine sharded  --workers 4 --size 50
+//! adapar run        --model sir --engine sharded  --workers 4 --size 50 --trace t.json
+//! adapar trace-analyze t.json
 //! adapar sweep      --preset fig3 [--engine virtual] [--out target/figures]
 //! adapar sweep      --config experiments/fig2.toml
 //! adapar models
@@ -20,7 +21,8 @@ const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
         "c", "batch", "config", "preset", "out", "sample", "params", "every", "observe",
-        "move-radius", "models", "plans", "telemetry", "ledger", "report",
+        "move-radius", "models", "plans", "telemetry", "trace", "trace-mode", "ledger",
+        "report",
     ],
     flags: &[
         "paper-scale", "calibrate", "help", "json", "update", "seed-regression", "lenient",
@@ -41,6 +43,8 @@ COMMANDS:
   validate         assert parallel == sequential bit-for-bit for a model
   soak             chaos sweep: seeds × fault plans × models under injection,
                    shrinking any failure to a committable repro TOML
+  trace-analyze    critical-path analysis of a --trace file: T1, T-inf,
+                   per-epoch speedup bound, gap attribution
   perf-diff        compare fresh deterministic bench metrics against a
                    committed ledger baseline (structural = hard gate,
                    wall-clock = tolerance)
@@ -72,6 +76,11 @@ COMMON OPTIONS:
   --observe <file.csv|file.jsonl>       run: also stream the observation trace to a file
   --telemetry <on|off|saturate>         histogram sampling mode (inert: results identical
                                         in any mode); env ADAPAR_TELEMETRY sets the default
+  --trace <file.json>                   run: write a Perfetto-loadable causal trace (open at
+                                        ui.perfetto.dev, analyze with `trace-analyze`)
+  --trace-mode <off|spans|full>         causal-tracing mode (inert: results identical in any
+                                        mode); env ADAPAR_TRACE sets the default; --trace
+                                        implies `full` unless set explicitly
   --ledger <file.json>                  perf-diff: baseline ledger
                                         [experiments/ledger/BENCH_baseline.json]
   --report <file.json>                  perf-diff: also write the diff report as JSON
@@ -100,6 +109,7 @@ pub fn main_with_args(raw: Vec<String>) -> Result<()> {
         "calibrate" => commands::calibrate_cmd(&args),
         "validate" => commands::validate(&args),
         "soak" => commands::soak(&args),
+        "trace-analyze" => commands::trace_analyze(&args),
         "perf-diff" => commands::perf_diff(&args),
         "artifacts-check" => commands::artifacts_check(&args),
         other => crate::bail!("unknown command `{other}`; try --help"),

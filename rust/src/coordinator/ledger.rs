@@ -189,22 +189,45 @@ impl Ledger {
             .with_context(|| format!("parsing ledger {}", path.display()))
     }
 
-    /// A fully-pinned ledger from fresh metrics (the `--update` output).
-    pub fn pinned(fresh: &[BenchMetrics], tolerance: f64) -> Ledger {
+    /// An updated ledger from fresh metrics (the `--update` output).
+    /// Structural metrics are always pinned; `wall_*` metrics are only
+    /// pinned when `pin_wall` (the reference-machine run) — otherwise
+    /// they stay `null` and the ledger remains provisional, since wall
+    /// times measured on an arbitrary machine make a meaningless gate.
+    pub fn pinned(fresh: &[BenchMetrics], tolerance: f64, pin_wall: bool) -> Ledger {
+        let benches: Vec<_> = fresh
+            .iter()
+            .map(|b| {
+                (
+                    b.name.clone(),
+                    b.metrics
+                        .iter()
+                        .map(|(k, v)| {
+                            let pin = pin_wall || !is_wall_metric(k);
+                            (k.clone(), pin.then_some(*v))
+                        })
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        let provisional = benches
+            .iter()
+            .any(|(_, ms)| ms.iter().any(|(_, v)| v.is_none()));
         Ledger {
             schema: SCHEMA,
-            provisional: false,
+            provisional,
             tolerance,
-            benches: fresh
-                .iter()
-                .map(|b| {
-                    (
-                        b.name.clone(),
-                        b.metrics.iter().map(|(k, v)| (k.clone(), Some(*v))).collect(),
-                    )
-                })
-                .collect(),
+            benches,
         }
+    }
+
+    /// How many `wall_*` metrics are unpinned (`null`) in this ledger.
+    pub fn unpinned_wall(&self) -> usize {
+        self.benches
+            .iter()
+            .flat_map(|(_, ms)| ms.iter())
+            .filter(|(k, v)| is_wall_metric(k) && v.is_none())
+            .count()
     }
 
     /// The ledger as a JSON tree (field order is canonical, so
@@ -419,6 +442,21 @@ mod tests {
                 vec![("tasks_executed".into(), executed), ("wall_s".into(), wall)],
             )],
         }
+    }
+
+    #[test]
+    fn update_pins_structural_but_not_wall_metrics() {
+        let l = Ledger::pinned(&fresh(), 0.25, false);
+        assert!(l.provisional, "unpinned wall metrics keep it provisional");
+        assert_eq!(l.unpinned_wall(), 1);
+        let (_, metrics) = &l.benches[0];
+        assert_eq!(metrics[0], ("tasks_executed".into(), Some(100.0)));
+        assert_eq!(metrics[1], ("wall_s".into(), None));
+        // The reference-machine run pins everything.
+        let r = Ledger::pinned(&fresh(), 0.25, true);
+        assert!(!r.provisional);
+        assert_eq!(r.unpinned_wall(), 0);
+        assert_eq!(r.benches[0].1[1], ("wall_s".into(), Some(1.0)));
     }
 
     #[test]

@@ -49,6 +49,13 @@
 //!   background aggregator into mergeable percentile histograms, and
 //!   the [`TelemetrySnapshot`] every engine attaches to its report —
 //!   semantically inert by construction (DESIGN.md §11).
+//! * [`trace`] — causal task tracing: opt-in per-worker timeline spans
+//!   with task/block/shard ids and causal edges (footprint order, fence
+//!   releases), collected through SPSC rings into a background
+//!   aggregator, exported as Chrome/Perfetto `trace_event` JSON
+//!   (`--trace`) and replayed by the critical-path analyzer
+//!   (`cli trace-analyze`: T1, T∞, per-epoch speedup bounds, gap
+//!   attribution) — semantically inert like telemetry (DESIGN.md §12).
 //! * [`chaos`] — the deterministic chaos harness: seeded declarative
 //!   fault plans (stalls, cost skews, jitter, fence delays) injected at
 //!   epoch boundaries, invariant checkers against the sequential
@@ -78,6 +85,7 @@ pub mod runtime;
 pub mod sched;
 pub mod sim;
 pub mod telemetry;
+pub mod trace;
 pub mod util;
 pub mod vtime;
 
@@ -89,6 +97,7 @@ pub use api::{
 pub use error::{Context, Error};
 pub use sched::{PartitionHint, PartitionPolicy, ShardableModel, ShardedConfig, ShardedEngine};
 pub use telemetry::{MetricsRegistry, TelemetryMode, TelemetrySnapshot};
+pub use trace::{Trace, TraceCore, TraceHandle, TraceMode};
 
 /// Crate-wide result type.
 pub type Result<T> = error::Result<T>;

@@ -59,6 +59,28 @@ pub fn env_telemetry_modes() -> Vec<crate::telemetry::TelemetryMode> {
     }
 }
 
+/// Trace modes for the conformance matrix: all three (off, spans-only,
+/// full causal recording), or the modes pinned by `ADAPAR_TRACE_MODES`
+/// (comma list). Causal tracing is semantically inert, so every mode
+/// must leave every observation trace byte-identical — this axis is the
+/// test of that claim. Shared by `rust/tests/conformance.rs` and
+/// `rust/tests/trace.rs`.
+pub fn env_trace_modes() -> Vec<crate::trace::TraceMode> {
+    use crate::trace::TraceMode;
+    match std::env::var("ADAPAR_TRACE_MODES") {
+        Ok(v) => v
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .expect("ADAPAR_TRACE_MODES must list off|spans|full")
+            })
+            .collect(),
+        Err(_) => vec![TraceMode::Off, TraceMode::Spans, TraceMode::Full],
+    }
+}
+
 /// Seed count for soak sweeps: the full-depth default, or the count
 /// pinned by `ADAPAR_SOAK_SEEDS` (PR-gate CI sets a small value so the
 /// chaos sweep stays fast; the nightly soak job leaves it unset and

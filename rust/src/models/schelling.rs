@@ -457,6 +457,7 @@ mod tests {
             tasks_per_cycle: 6,
             seed,
             cost: CostModel::default(),
+            trace: crate::trace::TraceMode::Off,
         }
         .run(&m);
         assert_eq!(m.snapshot(), reference, "virtual");

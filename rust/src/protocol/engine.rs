@@ -9,6 +9,7 @@ use crate::chain::Chain;
 use crate::chaos::FaultHook;
 use crate::model::{Model, TaskSource};
 use crate::telemetry::{MetricsRegistry, TelemetryMode};
+use crate::trace::{TraceCore, TraceHandle, TraceMode};
 
 use super::stats::{ProtocolStats, RunReport, StdInstruments, TimeBasis, WorkerStats};
 use super::worker::{worker_loop, RunCtx};
@@ -49,6 +50,10 @@ pub struct ProtocolConfig {
     /// on). Semantically inert: any value yields the identical trace
     /// (DESIGN.md §11). Defaults from `ADAPAR_TELEMETRY`.
     pub telemetry: TelemetryMode,
+    /// Causal-tracing mode (timeline spans + causal edges, DESIGN.md
+    /// §12). Semantically inert like `telemetry`. Defaults from
+    /// `ADAPAR_TRACE` (off unless set).
+    pub trace: TraceMode,
 }
 
 impl Default for ProtocolConfig {
@@ -62,6 +67,7 @@ impl Default for ProtocolConfig {
             seed: 0,
             collect_timing: false,
             telemetry: TelemetryMode::env_default(),
+            trace: TraceMode::env_default(),
         }
     }
 }
@@ -180,6 +186,13 @@ impl ParallelEngine {
         let mut reg = MetricsRegistry::new();
         let ids = StdInstruments::register(&mut reg);
         let tele = reg.start(self.cfg.workers, self.cfg.telemetry);
+        // Causal tracing (inert, off by default): worker lanes record
+        // exec spans, the coordinator lane records epoch marks.
+        let trc = TraceCore::start(self.cfg.trace, self.cfg.workers, "parallel", "wall");
+        let trc_coord = match &trc {
+            Some(c) => c.coordinator(),
+            None => TraceHandle::disabled(),
+        };
 
         if let Some((probe, observer)) = obs.as_mut() {
             observer.record_initial(*probe);
@@ -207,7 +220,7 @@ impl ParallelEngine {
             if self.cfg.workers == 1 {
                 // Run in-place: a single worker needs no extra thread,
                 // which keeps T(n=1) free of spawn overhead.
-                worker_loop(&ctx, 0, tele.handle(0), &ids);
+                worker_loop(&ctx, 0, tele.handle(0), TraceHandle::lane(trc.as_ref(), 0), &ids);
             } else {
                 std::thread::scope(|s| {
                     let handles: Vec<_> = (0..self.cfg.workers)
@@ -215,7 +228,8 @@ impl ParallelEngine {
                             let ctx_ref = &ctx;
                             let ids_ref = &ids;
                             let h = tele.handle(w);
-                            s.spawn(move || worker_loop(ctx_ref, w, h, ids_ref))
+                            let th = TraceHandle::lane(trc.as_ref(), w);
+                            s.spawn(move || worker_loop(ctx_ref, w, h, th, ids_ref))
                         })
                         .collect();
                     for h in handles {
@@ -233,6 +247,7 @@ impl ParallelEngine {
                 if let Some((probe, observer)) = obs.as_mut() {
                     observer.record(gate.emitted(), probe());
                 }
+                trc_coord.epoch_mark(gate.emitted());
                 gate.finished()
             };
             if done {
@@ -278,6 +293,7 @@ impl ParallelEngine {
             chain: ProtocolStats::from_snapshot(&snap, self.cfg.batch),
             sched: None,
             telemetry: Some(snap),
+            trace: trc.map(TraceCore::finish),
         }
     }
 }

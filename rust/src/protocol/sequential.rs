@@ -7,6 +7,7 @@ use std::time::Instant;
 use crate::api::observe::{ObsProbe, Observer};
 use crate::model::{Model, TaskSource};
 use crate::sim::rng::TaskRng;
+use crate::trace::{TraceCore, TraceHandle, TraceMode, NONE_ID, NONE_SHARD};
 
 use super::stats::{post_hoc_snapshot, ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
@@ -16,12 +17,18 @@ use super::stats::{post_hoc_snapshot, ProtocolStats, RunReport, TimeBasis, Worke
 pub struct SequentialEngine {
     /// Simulation seed.
     pub seed: u64,
+    /// Causal-tracing mode (inert; sequential traces carry program-order
+    /// edges, so their critical path equals their total work).
+    pub trace: TraceMode,
 }
 
 impl SequentialEngine {
-    /// Create with a seed.
+    /// Create with a seed (tracing defaults from `ADAPAR_TRACE`).
     pub fn new(seed: u64) -> Self {
-        Self { seed }
+        Self {
+            seed,
+            trace: TraceMode::env_default(),
+        }
     }
 
     /// Run to source exhaustion.
@@ -51,21 +58,29 @@ impl SequentialEngine {
         if let Some((probe, observer)) = obs.as_mut() {
             observer.record_initial(*probe);
         }
+        let trc = TraceCore::start(self.trace, 1, "sequential", "wall");
+        let th = TraceHandle::lane(trc.as_ref(), 0);
         let t0 = Instant::now();
         let mut executed = 0u64;
         while let Some(recipe) = source.next_task() {
             let mut rng = TaskRng::for_task(self.seed, executed);
+            let span_t0 = if th.active() { th.now() } else { 0 };
             model.execute(&recipe, &mut rng);
+            if th.active() {
+                th.exec(executed, NONE_ID, NONE_SHARD, span_t0, th.now());
+            }
             executed += 1;
             if let Some((probe, observer)) = obs.as_mut() {
                 if observer.due(executed) {
                     observer.record(executed, probe());
+                    th.epoch_mark(executed);
                 }
             }
         }
         if let Some((probe, observer)) = obs.as_mut() {
             observer.record(executed, probe());
         }
+        th.epoch_mark(executed);
         let wall = t0.elapsed();
         let stats = WorkerStats {
             cycles: executed,
@@ -92,6 +107,7 @@ impl SequentialEngine {
             per_worker,
             chain,
             sched: None,
+            trace: trc.map(TraceCore::finish),
         }
     }
 }

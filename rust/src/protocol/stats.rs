@@ -450,6 +450,10 @@ pub struct RunReport {
     /// histogram, rendered as one coherent `telemetry` object in
     /// `--json`. `None` only on hand-built reports (tests).
     pub telemetry: Option<TelemetrySnapshot>,
+    /// The causal trace collected during the run (`Some` only when
+    /// `--trace-mode` was not `off`). The CLI exports it to Perfetto
+    /// JSON; `to_json` carries only a small summary.
+    pub trace: Option<crate::trace::Trace>,
 }
 
 impl RunReport {
@@ -538,6 +542,9 @@ impl RunReport {
         if let Some(telemetry) = &self.telemetry {
             fields.push(("telemetry".into(), telemetry.to_json()));
         }
+        if let Some(trace) = &self.trace {
+            fields.push(("trace".into(), trace.summary_json()));
+        }
         Json::Obj(fields)
     }
 
@@ -596,6 +603,7 @@ mod tests {
             chain: ProtocolStats::default(),
             sched: None,
             telemetry: None,
+            trace: None,
         };
         assert_eq!(r.overhead_ratio(), 0.0);
         r.totals.executed = 10;
@@ -650,6 +658,7 @@ mod tests {
             chain: s,
             sched: None,
             telemetry: None,
+            trace: None,
         };
         let json = r.to_json().render();
         assert!(json.contains("\"batch\":64"), "{json}");

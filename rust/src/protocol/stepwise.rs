@@ -20,6 +20,7 @@ use std::sync::Barrier;
 use std::time::Instant;
 
 use crate::api::observe::{ObsProbe, Observer};
+use crate::trace::{TraceCore, TraceHandle, TraceMode, NONE_SHARD};
 
 use super::stats::{post_hoc_snapshot, ProtocolStats, RunReport, TimeBasis, WorkerStats};
 
@@ -50,13 +51,22 @@ pub struct StepwiseEngine {
     pub workers: usize,
     /// Simulation seed.
     pub seed: u64,
+    /// Causal-tracing mode (inert). Spans carry the canonical
+    /// lexicographic `(step, phase, block)` sequence numbers, so stepwise
+    /// traces line up with the chain engines' task ids.
+    pub trace: TraceMode,
 }
 
 impl StepwiseEngine {
-    /// Create with `workers` threads and a seed.
+    /// Create with `workers` threads and a seed (tracing defaults from
+    /// `ADAPAR_TRACE`).
     pub fn new(workers: usize, seed: u64) -> Self {
         assert!(workers >= 1);
-        Self { workers, seed }
+        Self {
+            workers,
+            seed,
+            trace: TraceMode::env_default(),
+        }
     }
 
     /// Run the synchronous model to completion.
@@ -64,19 +74,34 @@ impl StepwiseEngine {
         let steps = model.steps();
         let phases = model.phases();
         let n = self.workers;
+        // Canonical numbering for spans: seq(step, phase, block) =
+        // step * per_step + phase_base[phase] + block.
+        let mut phase_base = Vec::with_capacity(phases);
+        let mut per_step = 0u64;
+        for p in 0..phases {
+            phase_base.push(per_step);
+            per_step += model.blocks(p) as u64;
+        }
+        let trc = TraceCore::start(self.trace, n, "stepwise", "wall");
         let t0 = Instant::now();
         let executed_blocks = AtomicU64::new(0);
 
         if n == 1 {
+            let th = TraceHandle::lane(trc.as_ref(), 0);
+            let mut seq = 0u64;
             for step in 0..steps {
                 for phase in 0..phases {
                     for block in 0..model.blocks(phase) {
+                        let span_t0 = if th.active() { th.now() } else { 0 };
                         model.run_block(self.seed, step, phase, block);
+                        if th.active() {
+                            th.exec(seq, block as u64, NONE_SHARD, span_t0, th.now());
+                        }
+                        seq += 1;
                     }
                 }
             }
-            let total = (0..phases).map(|p| model.blocks(p) as u64).sum::<u64>() * steps;
-            executed_blocks.store(total, Ordering::Relaxed);
+            executed_blocks.store(steps * per_step, Ordering::Relaxed);
         } else {
             // Persistent pool: every thread walks the same (step, phase)
             // schedule; an atomic index hands out blocks; two barrier
@@ -86,8 +111,13 @@ impl StepwiseEngine {
             let next_block = AtomicUsize::new(0);
             std::thread::scope(|s| {
                 let mut handles = Vec::with_capacity(n);
-                for _ in 0..n {
-                    handles.push(s.spawn(|| {
+                for w in 0..n {
+                    let barrier = &barrier;
+                    let next_block = &next_block;
+                    let phase_base = &phase_base;
+                    let seed = self.seed;
+                    let th = TraceHandle::lane(trc.as_ref(), w);
+                    handles.push(s.spawn(move || {
                         let mut my_blocks = 0u64;
                         for step in 0..steps {
                             for phase in 0..phases {
@@ -97,7 +127,13 @@ impl StepwiseEngine {
                                     if b >= blocks {
                                         break;
                                     }
-                                    model.run_block(self.seed, step, phase, b);
+                                    let span_t0 = if th.active() { th.now() } else { 0 };
+                                    model.run_block(seed, step, phase, b);
+                                    if th.active() {
+                                        let seq =
+                                            step * per_step + phase_base[phase] + b as u64;
+                                        th.exec(seq, b as u64, NONE_SHARD, span_t0, th.now());
+                                    }
                                     my_blocks += 1;
                                 }
                                 // Work barrier: phase complete everywhere.
@@ -121,6 +157,9 @@ impl StepwiseEngine {
 
         let wall = t0.elapsed();
         let executed = executed_blocks.load(Ordering::Relaxed);
+        if let Some(c) = &trc {
+            c.coordinator().epoch_mark(executed);
+        }
         let stats = WorkerStats {
             cycles: steps,
             executed,
@@ -146,6 +185,7 @@ impl StepwiseEngine {
             per_worker,
             chain,
             sched: None,
+            trace: trc.map(TraceCore::finish),
         }
     }
 
@@ -168,6 +208,7 @@ impl StepwiseEngine {
     ) -> RunReport {
         let every = observer.gate_cadence();
         observer.record_initial(probe);
+        let trc = TraceCore::start(self.trace, self.workers, "stepwise", "wall");
         let t0 = Instant::now();
         let steps = model.steps();
         let phases = model.phases();
@@ -180,17 +221,31 @@ impl StepwiseEngine {
                 while b0 < blocks {
                     debug_assert!(executed < next_boundary);
                     let b1 = blocks.min(b0 + (next_boundary - executed));
-                    self.run_block_range(model, step, phase, b0 as usize, b1 as usize);
+                    self.run_block_range(
+                        model,
+                        step,
+                        phase,
+                        b0 as usize,
+                        b1 as usize,
+                        trc.as_ref(),
+                        executed,
+                    );
                     executed += b1 - b0;
                     b0 = b1;
                     if executed == next_boundary {
                         observer.record(executed, probe());
+                        if let Some(c) = &trc {
+                            c.coordinator().epoch_mark(executed);
+                        }
                         next_boundary = next_boundary.saturating_add(every);
                     }
                 }
             }
         }
         observer.record(executed, probe());
+        if let Some(c) = &trc {
+            c.coordinator().epoch_mark(executed);
+        }
         let wall = t0.elapsed();
 
         let stats = WorkerStats {
@@ -218,6 +273,7 @@ impl StepwiseEngine {
             per_worker,
             chain,
             sched: None,
+            trace: trc.map(TraceCore::finish),
         }
     }
 
@@ -238,23 +294,39 @@ impl StepwiseEngine {
         phase: usize,
         b0: usize,
         b1: usize,
+        trc: Option<&TraceCore>,
+        base_seq: u64,
     ) {
         let threads = self.workers.min(b1 - b0);
         if threads <= 1 {
+            let th = TraceHandle::lane(trc, 0);
             for block in b0..b1 {
+                let span_t0 = if th.active() { th.now() } else { 0 };
                 model.run_block(self.seed, step, phase, block);
+                if th.active() {
+                    let seq = base_seq + (block - b0) as u64;
+                    th.exec(seq, block as u64, NONE_SHARD, span_t0, th.now());
+                }
             }
             return;
         }
         let next = AtomicUsize::new(b0);
         std::thread::scope(|s| {
-            for _ in 0..threads {
-                s.spawn(|| loop {
+            for w in 0..threads {
+                let next = &next;
+                let seed = self.seed;
+                let th = TraceHandle::lane(trc, w);
+                s.spawn(move || loop {
                     let block = next.fetch_add(1, Ordering::Relaxed);
                     if block >= b1 {
                         break;
                     }
-                    model.run_block(self.seed, step, phase, block);
+                    let span_t0 = if th.active() { th.now() } else { 0 };
+                    model.run_block(seed, step, phase, block);
+                    if th.active() {
+                        let seq = base_seq + (block - b0) as u64;
+                        th.exec(seq, block as u64, NONE_SHARD, span_t0, th.now());
+                    }
                 });
             }
         });

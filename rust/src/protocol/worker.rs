@@ -47,6 +47,7 @@ use crate::chain::{Chain, Handle, NodeKind, NodeState};
 use crate::model::{Model, Record, TaskSource};
 use crate::sim::rng::TaskRng;
 use crate::telemetry::WorkerTelemetry;
+use crate::trace::{TraceHandle, NONE_ID, NONE_SHARD};
 
 use super::stats::{StdInstruments, WorkerStats};
 
@@ -94,6 +95,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     ctx: &RunCtx<'_, M, S>,
     worker_id: usize,
     tele: WorkerTelemetry<'_>,
+    trace: TraceHandle<'_>,
     ids: &StdInstruments,
 ) {
     let mut stats = WorkerStats {
@@ -117,6 +119,9 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     'cycle: loop {
         record.reset();
         stats.cycles += 1;
+        // Full-mode tracing times whole cycles (idle/walk spans); the
+        // clock reads are gated so Spans mode pays only per execution.
+        let cycle_t0 = if trace.full() { trace.now() } else { 0 };
         let mut created_this_cycle: u32 = 0;
         let did_work_at_cycle_start = stats.executed + stats.created;
 
@@ -163,7 +168,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 ctx.chain.acquire(first);
                 ctx.chain.release(current);
                 current = first;
-                match process(ctx, current, &mut record, &mut stats, &tele, ids) {
+                match process(ctx, current, &mut record, &mut stats, &tele, trace, ids) {
                     Processed::ExecutedCycleEnds => continue 'cycle,
                     Processed::Absorbed => continue,
                 }
@@ -182,7 +187,7 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
             ctx.chain.release(current);
             current = next;
             debug_assert_eq!(ctx.chain.kind(current), NodeKind::Task);
-            match process(ctx, current, &mut record, &mut stats, &tele, ids) {
+            match process(ctx, current, &mut record, &mut stats, &tele, trace, ids) {
                 Processed::ExecutedCycleEnds => continue 'cycle,
                 Processed::Absorbed => continue,
             }
@@ -192,7 +197,16 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
         if ctx.chain.exhausted() && ctx.chain.is_empty() {
             break;
         }
-        if stats.executed + stats.created == did_work_at_cycle_start {
+        let idle = stats.executed + stats.created == did_work_at_cycle_start;
+        if trace.full() {
+            let t1 = trace.now();
+            if idle {
+                trace.idle(cycle_t0, t1);
+            } else {
+                trace.walk(cycle_t0, t1);
+            }
+        }
+        if idle {
             // Nothing executed or created this cycle: other workers hold
             // all remaining work. Yield so the executor(s) get CPU time
             // (essential on machines with fewer cores than workers).
@@ -212,6 +226,7 @@ fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
     record: &mut M::Record,
     stats: &mut WorkerStats,
     tele: &WorkerTelemetry<'_>,
+    trace: TraceHandle<'_>,
     ids: &StdInstruments,
 ) -> Processed {
     match ctx.chain.state(node) {
@@ -247,6 +262,7 @@ fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 // SAFETY: as above — execution claimant keeps the node
                 // live.
                 let recipe = unsafe { ctx.chain.recipe(node) };
+                let span_t0 = if trace.active() { trace.now() } else { 0 };
                 if ctx.collect_timing {
                     let t0 = Instant::now();
                     ctx.model.execute(recipe, &mut rng);
@@ -255,6 +271,9 @@ fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                     stats.exec_time += dt;
                 } else {
                     ctx.model.execute(recipe, &mut rng);
+                }
+                if trace.active() {
+                    trace.exec(seq, NONE_ID, NONE_SHARD, span_t0, trace.now());
                 }
 
                 // Erase: re-acquire our node's slot (waiting out any worker

@@ -45,6 +45,7 @@ use crate::protocol::{
 use crate::sim::graph::{bfs_partition, edge_cut, grid_partition, Partition};
 use crate::sim::rng::TaskRng;
 use crate::telemetry::{CounterId, HistId, MetricsRegistry, TelemetryCore, TelemetryMode, WorkerTelemetry};
+use crate::trace::{TraceCore, TraceHandle, TraceMode, NONE_SHARD};
 
 use super::cost::{BlockCost, CostProbe};
 use super::rebalance::Rebalancer;
@@ -93,6 +94,10 @@ pub struct ShardedConfig {
     /// on). Semantically inert: any value yields the identical trace
     /// (DESIGN.md §11). Defaults from `ADAPAR_TELEMETRY`.
     pub telemetry: TelemetryMode,
+    /// Causal-tracing mode (timeline spans + causal edges, DESIGN.md
+    /// §12). Semantically inert like telemetry. Defaults from
+    /// `ADAPAR_TRACE`.
+    pub trace: TraceMode,
 }
 
 impl Default for ShardedConfig {
@@ -109,6 +114,7 @@ impl Default for ShardedConfig {
             alpha: 0.4,
             partition: PartitionPolicy::Auto,
             telemetry: TelemetryMode::env_default(),
+            trace: TraceMode::env_default(),
         }
     }
 }
@@ -268,6 +274,11 @@ impl ShardedEngine {
         let mut reg = MetricsRegistry::new();
         let ids = SchedInstruments::register(&mut reg, shards);
         let tele = reg.start(self.cfg.workers, self.cfg.telemetry);
+        let trc = TraceCore::start(self.cfg.trace, self.cfg.workers, "sharded", "wall");
+        let trc_coord = match &trc {
+            Some(c) => c.coordinator(),
+            None => TraceHandle::disabled(),
+        };
         let mut sched = SchedStats {
             shards,
             edge_cut: cut,
@@ -309,6 +320,7 @@ impl ShardedEngine {
                     0,
                     stalls.first().copied().unwrap_or_default(),
                     tele.handle(0),
+                    TraceHandle::lane(trc.as_ref(), 0),
                     &ids,
                 );
             } else {
@@ -318,8 +330,9 @@ impl ShardedEngine {
                             let ctx_ref = &ctx;
                             let ids_ref = &ids;
                             let h = tele.handle(w);
+                            let th = TraceHandle::lane(trc.as_ref(), w);
                             let stall = stalls.get(w).copied().unwrap_or_default();
-                            s.spawn(move || sharded_worker(ctx_ref, w, stall, h, ids_ref))
+                            s.spawn(move || sharded_worker(ctx_ref, w, stall, h, th, ids_ref))
                         })
                         .collect();
                     for h in handles {
@@ -351,15 +364,20 @@ impl ShardedEngine {
                 if let Some((probe, observer)) = obs.as_mut() {
                     observer.record(sp.emitted(), probe());
                 }
+                trc_coord.epoch_mark(sp.emitted());
                 let done = sp.finished();
                 if !done && every != u64::MAX {
                     // Close the adaptive loop: fold this epoch's per-block
                     // timings into the EWMA model, then migrate blocks.
+                    let rb_t0 = if trc_coord.active() { trc_coord.now() } else { 0 };
                     cost_model.update(&costs);
                     let gap_before = hook
                         .as_ref()
                         .map(|_| load_gap(&cost_model.shard_loads(sp.map_mut())));
                     let moves = rebalancer.rebalance(sp.map_mut(), &cost_model, &topology);
+                    if trc_coord.active() {
+                        trc_coord.rebalance(moves, rb_t0, trc_coord.now());
+                    }
                     sched.migrations += moves;
                     sched.rebalances += 1;
                     if let Some(h) = hook.as_mut() {
@@ -469,6 +487,11 @@ impl ShardedEngine {
             chain: ProtocolStats::from_snapshot(&snap, self.cfg.batch),
             sched: Some(sched),
             telemetry: Some(snap),
+            trace: trc.map(|c| {
+                let mut tr = c.finish();
+                tr.shards = shards;
+                tr
+            }),
         }
     }
 }
@@ -647,6 +670,7 @@ fn sharded_worker<M: ShardableModel>(
     worker_id: usize,
     stall: Duration,
     tele: WorkerTelemetry<'_>,
+    trace: TraceHandle<'_>,
     ids: &SchedInstruments,
 ) {
     let shards = ctx.chains.len();
@@ -670,15 +694,18 @@ fn sharded_worker<M: ShardableModel>(
     // live-task ceiling while the epoch still has tasks to route.
     let mut starved: u32 = 0;
     loop {
+        // Full-mode tracing times idle cycles; the clock reads are gated
+        // so Spans mode pays only per execution.
+        let cycle_t0 = if trace.full() { trace.now() } else { 0 };
         let mut did_work = false;
         for &s in &own {
             did_work |= matches!(
-                shard_cycle(ctx, s, &mut record, &mut stats, &mut sw, &tele, ids),
+                shard_cycle(ctx, s, &mut record, &mut stats, &mut sw, &tele, trace, ids),
                 Cycle::Executed
             );
         }
         did_work |= matches!(
-            spill_cycle(ctx, &mut record, &mut stats, &mut sw, &tele, ids),
+            spill_cycle(ctx, &mut record, &mut stats, &mut sw, &tele, trace, ids),
             Cycle::Executed
         );
         if !did_work && !ctx.closed.load(Ordering::Acquire) {
@@ -721,6 +748,9 @@ fn sharded_worker<M: ShardableModel>(
             if ctx.epoch_done() {
                 break;
             }
+            if trace.full() {
+                trace.idle(cycle_t0, trace.now());
+            }
             stats.idle_cycles += 1;
             std::thread::yield_now();
         }
@@ -745,6 +775,7 @@ fn shard_cycle<M: ShardableModel>(
     stats: &mut WorkerStats,
     sw: &mut SchedWorker,
     tele: &WorkerTelemetry<'_>,
+    trace: TraceHandle<'_>,
     ids: &SchedInstruments,
 ) -> Cycle {
     let chain = &ctx.chains[s];
@@ -792,14 +823,15 @@ fn shard_cycle<M: ShardableModel>(
         // SAFETY: we hold `next`'s visitor slot, so its incarnation
         // cannot be erased (nor its recipe freed) under us.
         let completed_fence = match unsafe { chain.recipe(next) } {
-            ShardItem::Fence(b) => b.done(),
-            ShardItem::Local { .. } => false,
+            ShardItem::Fence(b) if b.done() => Some(b.seq),
+            _ => None,
         };
-        if completed_fence {
+        if let Some(fence_seq) = completed_fence {
             chain.begin_execution(next);
             chain.unlink(next);
             chain.release(next);
             sw.fence_clears += 1;
+            trace.fence_clear(fence_seq);
             continue; // current.next was rewired by the unlink
         }
         chain.release(current);
@@ -824,7 +856,9 @@ fn shard_cycle<M: ShardableModel>(
                         stats.skipped_dependent += 1;
                     } else {
                         let (seq, block) = (*seq, *block);
-                        execute_and_unlink(ctx, chain, current, seq, block, stats, tele, ids);
+                        execute_and_unlink(
+                            ctx, chain, current, seq, block, s as u32, stats, tele, trace, ids,
+                        );
                         ctx.per_shard_executed[s].fetch_add(1, Ordering::Relaxed);
                         return Cycle::Executed;
                     }
@@ -844,8 +878,10 @@ fn execute_and_unlink<M: ShardableModel, R>(
     node: Handle,
     seq: u64,
     block: u32,
+    shard: u32,
     stats: &mut WorkerStats,
     tele: &WorkerTelemetry<'_>,
+    trace: TraceHandle<'_>,
     ids: &SchedInstruments,
 ) where
     R: ShardRecipe<M>,
@@ -864,6 +900,18 @@ fn execute_and_unlink<M: ShardableModel, R>(
     stats.exec_time += dt;
     tele.sample(ids.std.exec_ns, u64::try_from(dt.as_nanos()).unwrap_or(u64::MAX));
     ctx.costs.record(block, dt.as_nanos() as u64);
+    if trace.active() {
+        // Reuse the cost probe's clock reads: the span start is the
+        // existing `t0` rebased onto the trace anchor, so Spans mode
+        // adds no `Instant::now` calls to the execution path.
+        let start = trace.rel(t0);
+        let end = start.saturating_add(dt.as_nanos() as u64);
+        if shard == NONE_SHARD {
+            trace.spill(seq, block as u64, start, end);
+        } else {
+            trace.exec(seq, block as u64, shard, start, end);
+        }
+    }
     R::publish_done(item);
 
     chain.acquire(node);
@@ -904,6 +952,7 @@ fn spill_cycle<M: ShardableModel>(
     stats: &mut WorkerStats,
     sw: &mut SchedWorker,
     tele: &WorkerTelemetry<'_>,
+    trace: TraceHandle<'_>,
     ids: &SchedInstruments,
 ) -> Cycle {
     let chain = ctx.spill;
@@ -941,16 +990,25 @@ fn spill_cycle<M: ShardableModel>(
                 if record.depends(&boundary.recipe) {
                     record.absorb(&boundary.recipe);
                     stats.skipped_dependent += 1;
-                } else if !fences_clear(ctx, boundary) {
-                    // A touched shard still has live work ahead of our
-                    // fence: defer, but absorb so later boundary tasks
-                    // stay ordered behind us.
-                    record.absorb(&boundary.recipe);
-                    sw.spill_blocked += 1;
                 } else {
-                    let (seq, block) = (boundary.seq, boundary.block);
-                    execute_and_unlink(ctx, chain, current, seq, block, stats, tele, ids);
-                    return Cycle::Executed;
+                    let wait_t0 = if trace.full() { trace.now() } else { 0 };
+                    if !fences_clear(ctx, boundary) {
+                        // A touched shard still has live work ahead of our
+                        // fence: defer, but absorb so later boundary tasks
+                        // stay ordered behind us. Full-mode tracing times
+                        // the failed readiness walk as a fence-wait span.
+                        if trace.full() {
+                            trace.fence_wait(boundary.seq, wait_t0, trace.now());
+                        }
+                        record.absorb(&boundary.recipe);
+                        sw.spill_blocked += 1;
+                    } else {
+                        let (seq, block) = (boundary.seq, boundary.block);
+                        execute_and_unlink(
+                            ctx, chain, current, seq, block, NONE_SHARD, stats, tele, trace, ids,
+                        );
+                        return Cycle::Executed;
+                    }
                 }
             }
             NodeState::Erased => unreachable!("stale arrivals are retried earlier"),

@@ -30,7 +30,7 @@
 
 mod ring;
 
-pub use ring::Ring;
+pub use ring::{Ring, WideRing};
 
 use crate::util::histogram::LogHistogram;
 use crate::util::json::Json;

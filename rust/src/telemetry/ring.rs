@@ -1,44 +1,52 @@
-//! Fixed-capacity SPSC sample rings (the telemetry hot path).
+//! Fixed-capacity SPSC sample rings (the telemetry + trace hot path).
 //!
 //! One ring per worker: the worker is the only producer, the background
-//! aggregator the only consumer. A push is two relaxed stores plus one
-//! release store of the tail — no locks, no allocation, no CAS loop. A
-//! full ring **drops** the sample (counted in [`Ring::dropped`]) rather
-//! than blocking or overwriting: telemetry loss is acceptable, telemetry
-//! back-pressure on the protocol is not (the inertness contract,
-//! DESIGN.md §11).
+//! aggregator the only consumer. A push is a handful of relaxed stores
+//! plus one release store of the tail — no locks, no allocation, no CAS
+//! loop. A full ring **drops** the event (counted in
+//! [`WideRing::dropped`]) rather than blocking or overwriting:
+//! telemetry loss is acceptable, telemetry back-pressure on the
+//! protocol is not (the inertness contract, DESIGN.md §11).
+//!
+//! [`WideRing<W>`] generalizes the PR 7 sample ring to `W` payload
+//! words per slot so a multi-word record (e.g. a trace span: task,
+//! block, start, duration — see `crate::trace`) is pushed and dropped
+//! *atomically as one event*; a drop can never tear a record in half.
+//! The original `(instrument, value)` sample ring is the width-1 case,
+//! kept as the [`Ring`] alias with its historic `push`/`drain` API.
 //!
 //! Every slot is an atomic, so even a (buggy) second producer cannot
 //! cause undefined behaviour — only garbled samples.
 
 use std::sync::atomic::{AtomicU32, AtomicU64, AtomicUsize, Ordering};
 
-/// A single-producer single-consumer ring of `(instrument, value)`
-/// samples with drop-counting overflow behaviour.
-pub struct Ring {
+/// A single-producer single-consumer ring of `(meta, [u64; W])` events
+/// with drop-counting overflow behaviour.
+pub struct WideRing<const W: usize> {
     /// Index mask (capacity is a power of two).
     mask: usize,
-    /// Instrument id per slot.
+    /// Meta word (instrument id / event tag) per slot.
     meta: Box<[AtomicU32]>,
-    /// Sample value per slot.
+    /// Payload words, `W` per slot (slot `i` owns `i*W .. i*W+W`).
     vals: Box<[AtomicU64]>,
     /// Consumer cursor (monotonic, wrapped by `mask` on access).
     head: AtomicUsize,
     /// Producer cursor.
     tail: AtomicUsize,
-    /// Samples rejected because the ring was full.
+    /// Events rejected because the ring was full.
     dropped: AtomicU64,
 }
 
-impl Ring {
+impl<const W: usize> WideRing<W> {
     /// Ring with at least `capacity` slots (rounded up to a power of
     /// two, minimum 2).
     pub fn new(capacity: usize) -> Self {
+        assert!(W >= 1, "a ring slot needs at least one payload word");
         let cap = capacity.max(2).next_power_of_two();
         Self {
             mask: cap - 1,
             meta: (0..cap).map(|_| AtomicU32::new(0)).collect(),
-            vals: (0..cap).map(|_| AtomicU64::new(0)).collect(),
+            vals: (0..cap * W).map(|_| AtomicU64::new(0)).collect(),
             head: AtomicUsize::new(0),
             tail: AtomicUsize::new(0),
             dropped: AtomicU64::new(0),
@@ -50,10 +58,11 @@ impl Ring {
         self.mask + 1
     }
 
-    /// Producer side: push one sample. Returns `false` (and counts a
-    /// drop) when the ring is full. Never blocks.
+    /// Producer side: push one whole event. Returns `false` (and counts
+    /// a drop) when the ring is full — the event is rejected in full,
+    /// never torn. Never blocks.
     #[inline]
-    pub fn push(&self, instrument: u32, value: u64) -> bool {
+    pub fn push_event(&self, meta: u32, words: &[u64; W]) -> bool {
         let tail = self.tail.load(Ordering::Relaxed);
         // Acquire pairs with the consumer's release store of `head`: a
         // reused slot is only written after the consumer has finished
@@ -64,23 +73,29 @@ impl Ring {
             return false;
         }
         let i = tail & self.mask;
-        self.meta[i].store(instrument, Ordering::Relaxed);
-        self.vals[i].store(value, Ordering::Relaxed);
+        self.meta[i].store(meta, Ordering::Relaxed);
+        for (k, &w) in words.iter().enumerate() {
+            self.vals[i * W + k].store(w, Ordering::Relaxed);
+        }
         // Release publishes the slot contents to the consumer's acquire
         // load of `tail`.
         self.tail.store(tail.wrapping_add(1), Ordering::Release);
         true
     }
 
-    /// Consumer side: drain all currently published samples into `f`,
+    /// Consumer side: drain all currently published events into `f`,
     /// in push order. Returns how many were drained.
-    pub fn drain(&self, mut f: impl FnMut(u32, u64)) -> usize {
+    pub fn drain_events(&self, mut f: impl FnMut(u32, [u64; W])) -> usize {
         let mut h = self.head.load(Ordering::Relaxed);
         let tail = self.tail.load(Ordering::Acquire);
         let n = tail.wrapping_sub(h);
         while h != tail {
             let i = h & self.mask;
-            f(self.meta[i].load(Ordering::Relaxed), self.vals[i].load(Ordering::Relaxed));
+            let mut words = [0u64; W];
+            for (k, w) in words.iter_mut().enumerate() {
+                *w = self.vals[i * W + k].load(Ordering::Relaxed);
+            }
+            f(self.meta[i].load(Ordering::Relaxed), words);
             h = h.wrapping_add(1);
         }
         // Release hands the consumed slots back to the producer.
@@ -88,21 +103,42 @@ impl Ring {
         n
     }
 
-    /// Samples rejected so far because the ring was full.
+    /// Events rejected so far because the ring was full.
     pub fn dropped(&self) -> u64 {
         self.dropped.load(Ordering::Relaxed)
     }
 
-    /// Published-but-undrained sample count (for tests).
+    /// Published-but-undrained event count (for tests).
     pub fn len(&self) -> usize {
         self.tail
             .load(Ordering::Acquire)
             .wrapping_sub(self.head.load(Ordering::Acquire))
     }
 
-    /// Whether no samples are waiting.
+    /// Whether no events are waiting.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+}
+
+/// The PR 7 telemetry sample ring: one `(instrument, value)` pair per
+/// slot — [`WideRing`] at width 1.
+pub type Ring = WideRing<1>;
+
+impl Ring {
+    /// Push one sample (width-1 convenience over
+    /// [`WideRing::push_event`]). Returns `false` (and counts a drop)
+    /// when the ring is full. Never blocks.
+    #[inline]
+    pub fn push(&self, instrument: u32, value: u64) -> bool {
+        self.push_event(instrument, &[value])
+    }
+
+    /// Drain all currently published samples into `f`, in push order
+    /// (width-1 convenience over [`WideRing::drain_events`]). Returns
+    /// how many were drained.
+    pub fn drain(&self, mut f: impl FnMut(u32, u64)) -> usize {
+        self.drain_events(|id, [v]| f(id, v))
     }
 }
 
@@ -151,6 +187,30 @@ mod tests {
         assert_eq!(Ring::new(0).capacity(), 2);
         assert_eq!(Ring::new(5).capacity(), 8);
         assert_eq!(Ring::new(8).capacity(), 8);
+    }
+
+    #[test]
+    fn wide_events_round_trip_whole_records() {
+        let r: WideRing<4> = WideRing::new(8);
+        assert!(r.push_event(3, &[10, 20, 30, 40]));
+        assert!(r.push_event(4, &[u64::MAX, 0, 7, 1]));
+        let mut got = Vec::new();
+        assert_eq!(r.drain_events(|m, ws| got.push((m, ws))), 2);
+        assert_eq!(got, vec![(3, [10, 20, 30, 40]), (4, [u64::MAX, 0, 7, 1])]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn wide_overflow_rejects_whole_events() {
+        let r: WideRing<2> = WideRing::new(2);
+        assert!(r.push_event(1, &[1, 2]));
+        assert!(r.push_event(2, &[3, 4]));
+        assert!(!r.push_event(3, &[5, 6]), "full ring rejects the event");
+        assert_eq!(r.dropped(), 1);
+        let mut got = Vec::new();
+        r.drain_events(|m, ws| got.push((m, ws)));
+        // No partial write of the rejected event anywhere.
+        assert_eq!(got, vec![(1, [1, 2]), (2, [3, 4])]);
     }
 
     #[test]

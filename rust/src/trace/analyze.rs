@@ -1,0 +1,595 @@
+//! Critical-path analysis over a collected [`Trace`].
+//!
+//! Replays the causal DAG (work spans + derived edges) to compute the
+//! two classic quantities of work–span analysis:
+//!
+//! * **T1** — total work: the sum of every execution span (what one
+//!   worker would take with zero overhead).
+//! * **T∞** — the critical path: the longest causally-chained sequence
+//!   of spans. No schedule, however many workers, can beat it; `T1/T∞`
+//!   is the achievable-speedup ceiling of the dependence graph itself.
+//!
+//! Both are reported run-wide and per epoch (quiescence is a barrier,
+//! so epochs partition the timeline). The **gap attribution** then
+//! splits the distance between the ideal makespan `T1/W` and the
+//! measured wall window into exec skew, fence waits, spillover
+//! serialization, rebalance cost and idle — an exact decomposition
+//! (the components sum to the gap by construction), computed along the
+//! busiest worker lane.
+
+use super::{EventKind, Trace};
+use crate::util::json::Json;
+
+/// The exact decomposition of `window − ideal` (all ns, may be
+/// negative for individual components when the run beats the uniform
+/// ideal on some axis — the *sum* always equals the gap).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Attribution {
+    /// Measured wall window: last span end − first span start.
+    pub window_ns: f64,
+    /// Ideal makespan `T1 / workers`.
+    pub ideal_ns: f64,
+    /// `window − ideal`, what the components below sum to.
+    pub gap_ns: f64,
+    /// Extra local execution on the busiest lane vs the uniform share.
+    pub exec_skew_ns: f64,
+    /// Spillover (boundary-task) execution on the busiest lane beyond
+    /// its uniform share — cross-shard work that serialized there.
+    pub spill_serial_ns: f64,
+    /// Time the busiest lane spent in blocked fence-readiness walks.
+    pub fence_wait_ns: f64,
+    /// Total epoch-boundary rebalance time (coordinator lane).
+    pub rebalance_ns: f64,
+    /// Residual: window time the busiest lane was neither executing,
+    /// fence-walking, nor covered by rebalancing.
+    pub idle_ns: f64,
+}
+
+impl Attribution {
+    /// The components in report order, with labels.
+    pub fn components(&self) -> [(&'static str, f64); 5] {
+        [
+            ("exec skew", self.exec_skew_ns),
+            ("fence waits", self.fence_wait_ns),
+            ("spillover serialization", self.spill_serial_ns),
+            ("rebalance", self.rebalance_ns),
+            ("idle (residual)", self.idle_ns),
+        ]
+    }
+}
+
+/// Work–span numbers for one epoch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EpochAnalysis {
+    /// Tasks emitted at the epoch's quiescent point (`u64::MAX` for
+    /// the unterminated tail segment).
+    pub emitted: u64,
+    /// Total work in the epoch (ns).
+    pub t1_ns: u64,
+    /// Critical path within the epoch (ns).
+    pub tinf_ns: u64,
+    /// `T1/T∞` for the epoch (1.0 when empty).
+    pub speedup_bound: f64,
+}
+
+/// The full analysis of one trace.
+#[derive(Clone, Debug)]
+pub struct Analysis {
+    /// Engine the trace came from.
+    pub engine: String,
+    /// Worker count.
+    pub workers: usize,
+    /// Timestamp basis (`"wall"` / `"virtual"`).
+    pub basis: String,
+    /// Collection mode label.
+    pub mode: &'static str,
+    /// Events in the trace (post mark extraction).
+    pub events: usize,
+    /// Work spans (exec + spill) analyzed.
+    pub work_spans: usize,
+    /// Causal edges replayed.
+    pub edges: usize,
+    /// Events lost to saturation (a lossy trace under-counts T1).
+    pub dropped: u64,
+    /// Total work (ns).
+    pub t1_ns: u64,
+    /// Critical path (ns).
+    pub tinf_ns: u64,
+    /// `T1/T∞` (1.0 for an empty trace).
+    pub speedup_bound: f64,
+    /// Per-epoch breakdown, in epoch order.
+    pub epochs: Vec<EpochAnalysis>,
+    /// The gap decomposition.
+    pub attribution: Attribution,
+}
+
+/// Longest path (ns) through `spans` (indices into `trace.events`)
+/// using only edges between them. Events are already sorted by
+/// `(start_ns, index)` and every edge points strictly forward in that
+/// order, so a single in-order sweep is a topological traversal.
+fn critical_path(trace: &Trace, spans: &[usize]) -> u64 {
+    let mut dist: std::collections::HashMap<usize, u64> = spans
+        .iter()
+        .map(|&i| (i, trace.events[i].dur_ns))
+        .collect();
+    // Every edge points strictly forward in the event order, so
+    // relaxing edges in ascending `from` order is a topological sweep:
+    // a node's distance is final before any of its out-edges is used.
+    let mut edges: Vec<&super::Edge> = trace.edges.iter().collect();
+    edges.sort_by_key(|e| e.from);
+    for e in edges {
+        let (Some(&df), Some(dt)) = (dist.get(&e.from), dist.get(&e.to).copied()) else {
+            continue;
+        };
+        let cand = df + trace.events[e.to].dur_ns;
+        if cand > dt {
+            dist.insert(e.to, cand);
+        }
+    }
+    dist.values().copied().max().unwrap_or(0)
+}
+
+/// Analyze a trace: T1, T∞, per-epoch bounds, gap attribution.
+pub fn analyze(trace: &Trace) -> Analysis {
+    let work = trace.work_spans();
+    let t1_ns: u64 = work.iter().map(|&i| trace.events[i].dur_ns).sum();
+    let tinf_ns = critical_path(trace, &work);
+    let speedup_bound = if tinf_ns == 0 {
+        1.0
+    } else {
+        t1_ns as f64 / tinf_ns as f64
+    };
+
+    // Epochs: quiescence marks partition the timeline; a span belongs
+    // to the first epoch whose mark is at-or-after its end. Spans past
+    // the last mark form the tail segment.
+    let mut epochs = Vec::new();
+    let n_segments = trace.epoch_marks.len() + 1;
+    let mut per_epoch: Vec<Vec<usize>> = vec![Vec::new(); n_segments];
+    for &i in &work {
+        let end = trace.events[i].end_ns();
+        let seg = trace
+            .epoch_marks
+            .iter()
+            .position(|m| m.t_ns >= end)
+            .unwrap_or(trace.epoch_marks.len());
+        per_epoch[seg].push(i);
+    }
+    for (seg, spans) in per_epoch.iter().enumerate() {
+        if spans.is_empty() {
+            continue;
+        }
+        let t1: u64 = spans.iter().map(|&i| trace.events[i].dur_ns).sum();
+        let tinf = critical_path(trace, spans);
+        epochs.push(EpochAnalysis {
+            emitted: trace
+                .epoch_marks
+                .get(seg)
+                .map(|m| m.emitted)
+                .unwrap_or(u64::MAX),
+            t1_ns: t1,
+            tinf_ns: tinf,
+            speedup_bound: if tinf == 0 { 1.0 } else { t1 as f64 / tinf as f64 },
+        });
+    }
+
+    Analysis {
+        engine: trace.engine.clone(),
+        workers: trace.workers,
+        basis: trace.basis.clone(),
+        mode: trace.mode.label(),
+        events: trace.events.len(),
+        work_spans: work.len(),
+        edges: trace.edges.len(),
+        dropped: trace.dropped,
+        t1_ns,
+        tinf_ns,
+        speedup_bound,
+        epochs,
+        attribution: attribute(trace, t1_ns),
+    }
+}
+
+/// Decompose `window − T1/W` along the busiest worker lane. The five
+/// components sum to the gap exactly (see the struct docs): idle is
+/// defined as the residual, and the skew terms are busiest-lane time
+/// minus the uniform share.
+fn attribute(trace: &Trace, t1_ns: u64) -> Attribution {
+    let w = trace.workers.max(1) as f64;
+    let spans: Vec<_> = trace
+        .events
+        .iter()
+        .filter(|e| e.kind.is_span())
+        .collect();
+    if spans.is_empty() {
+        return Attribution::default();
+    }
+    let start = spans.iter().map(|e| e.start_ns).min().unwrap_or(0);
+    let end = spans.iter().map(|e| e.end_ns()).max().unwrap_or(0);
+    let window_ns = end.saturating_sub(start) as f64;
+    let ideal_ns = t1_ns as f64 / w;
+    let gap_ns = window_ns - ideal_ns;
+
+    // Per worker lane: local exec, spillover exec, fence-walk time.
+    let lanes = trace.workers.max(1);
+    let mut exec = vec![0f64; lanes];
+    let mut spill = vec![0f64; lanes];
+    let mut fence = vec![0f64; lanes];
+    let mut rebalance_ns = 0f64;
+    let mut exec_tot = 0f64;
+    let mut spill_tot = 0f64;
+    for e in &spans {
+        let lane = e.lane as usize;
+        match e.kind {
+            EventKind::Exec if lane < lanes => {
+                exec[lane] += e.dur_ns as f64;
+                exec_tot += e.dur_ns as f64;
+            }
+            EventKind::Spill if lane < lanes => {
+                spill[lane] += e.dur_ns as f64;
+                spill_tot += e.dur_ns as f64;
+            }
+            EventKind::FenceWait if lane < lanes => fence[lane] += e.dur_ns as f64,
+            EventKind::Rebalance => rebalance_ns += e.dur_ns as f64,
+            _ => {}
+        }
+    }
+    let busiest = (0..lanes)
+        .max_by(|&a, &b| {
+            (exec[a] + spill[a])
+                .partial_cmp(&(exec[b] + spill[b]))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .unwrap_or(0);
+    let exec_skew_ns = exec[busiest] - exec_tot / w;
+    let spill_serial_ns = spill[busiest] - spill_tot / w;
+    let fence_wait_ns = fence[busiest];
+    let idle_ns =
+        window_ns - exec[busiest] - spill[busiest] - fence_wait_ns - rebalance_ns;
+    Attribution {
+        window_ns,
+        ideal_ns,
+        gap_ns,
+        exec_skew_ns,
+        spill_serial_ns,
+        fence_wait_ns,
+        rebalance_ns,
+        idle_ns,
+    }
+}
+
+/// Format ns adaptively (`ns` / `µs` / `ms` / `s`).
+pub fn fmt_ns(ns: f64) -> String {
+    let a = ns.abs();
+    if a < 1_000.0 {
+        format!("{ns:.0} ns")
+    } else if a < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if a < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+impl Analysis {
+    /// Human-readable report (`cli trace-analyze`).
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace: engine={} workers={} basis={} mode={} events={} work-spans={} edges={} dropped={}",
+            self.engine,
+            self.workers,
+            self.basis,
+            self.mode,
+            self.events,
+            self.work_spans,
+            self.edges,
+            self.dropped,
+        );
+        let _ = writeln!(out, "  T1 (total work)     = {}", fmt_ns(self.t1_ns as f64));
+        let _ = writeln!(out, "  T∞ (critical path)  = {}", fmt_ns(self.tinf_ns as f64));
+        let _ = writeln!(
+            out,
+            "  speedup bound T1/T∞ = {:.2}x  ({} workers available)",
+            self.speedup_bound, self.workers
+        );
+        if !self.epochs.is_empty() {
+            let _ = writeln!(out, "per-epoch:");
+            let _ = writeln!(
+                out,
+                "  {:>10}  {:>12}  {:>12}  {:>7}",
+                "emitted", "T1", "T∞", "bound"
+            );
+            for e in &self.epochs {
+                let emitted = if e.emitted == u64::MAX {
+                    "(tail)".to_string()
+                } else {
+                    e.emitted.to_string()
+                };
+                let _ = writeln!(
+                    out,
+                    "  {:>10}  {:>12}  {:>12}  {:>6.2}x",
+                    emitted,
+                    fmt_ns(e.t1_ns as f64),
+                    fmt_ns(e.tinf_ns as f64),
+                    e.speedup_bound
+                );
+            }
+        }
+        let a = &self.attribution;
+        let _ = writeln!(
+            out,
+            "gap attribution (window {}, ideal T1/W {}, gap {}):",
+            fmt_ns(a.window_ns),
+            fmt_ns(a.ideal_ns),
+            fmt_ns(a.gap_ns)
+        );
+        for (label, v) in a.components() {
+            let share = if a.gap_ns.abs() > f64::EPSILON {
+                format!("{:>6.1}%", 100.0 * v / a.gap_ns)
+            } else {
+                "     —".to_string()
+            };
+            let _ = writeln!(out, "  {label:<24} {:>12}  {share}", fmt_ns(v));
+        }
+        if self.dropped > 0 {
+            let _ = writeln!(
+                out,
+                "note: {} events dropped at collection — T1 and the attribution under-count.",
+                self.dropped
+            );
+        }
+        out
+    }
+
+    /// The `--json` form of the report.
+    pub fn to_json(&self) -> Json {
+        let a = &self.attribution;
+        Json::Obj(vec![
+            ("engine".to_string(), Json::from(self.engine.clone())),
+            ("workers".to_string(), Json::from(self.workers)),
+            ("basis".to_string(), Json::from(self.basis.clone())),
+            ("mode".to_string(), Json::from(self.mode)),
+            ("events".to_string(), Json::from(self.events)),
+            ("work_spans".to_string(), Json::from(self.work_spans)),
+            ("edges".to_string(), Json::from(self.edges)),
+            ("dropped".to_string(), Json::from(self.dropped)),
+            ("t1_ns".to_string(), Json::from(self.t1_ns)),
+            ("tinf_ns".to_string(), Json::from(self.tinf_ns)),
+            ("speedup_bound".to_string(), Json::from(self.speedup_bound)),
+            (
+                "epochs".to_string(),
+                Json::Arr(
+                    self.epochs
+                        .iter()
+                        .map(|e| {
+                            Json::Obj(vec![
+                                (
+                                    "emitted".to_string(),
+                                    if e.emitted == u64::MAX {
+                                        Json::Null
+                                    } else {
+                                        Json::from(e.emitted)
+                                    },
+                                ),
+                                ("t1_ns".to_string(), Json::from(e.t1_ns)),
+                                ("tinf_ns".to_string(), Json::from(e.tinf_ns)),
+                                (
+                                    "speedup_bound".to_string(),
+                                    Json::from(e.speedup_bound),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "attribution".to_string(),
+                Json::Obj(vec![
+                    ("window_ns".to_string(), Json::from(a.window_ns)),
+                    ("ideal_ns".to_string(), Json::from(a.ideal_ns)),
+                    ("gap_ns".to_string(), Json::from(a.gap_ns)),
+                    ("exec_skew_ns".to_string(), Json::from(a.exec_skew_ns)),
+                    (
+                        "spill_serial_ns".to_string(),
+                        Json::from(a.spill_serial_ns),
+                    ),
+                    ("fence_wait_ns".to_string(), Json::from(a.fence_wait_ns)),
+                    ("rebalance_ns".to_string(), Json::from(a.rebalance_ns)),
+                    ("idle_ns".to_string(), Json::from(a.idle_ns)),
+                ]),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Edge, EdgeKind, EpochMark, Event, EventKind, TraceMode, NONE_ID, NONE_SHARD};
+
+    fn ev(lane: u32, kind: EventKind, task: u64, start: u64, dur: u64) -> Event {
+        Event {
+            lane,
+            kind,
+            task,
+            block: NONE_ID,
+            shard: NONE_SHARD,
+            start_ns: start,
+            dur_ns: dur,
+        }
+    }
+
+    fn trace(events: Vec<Event>, edges: Vec<Edge>, marks: Vec<EpochMark>, workers: usize) -> Trace {
+        Trace {
+            engine: "test".to_string(),
+            workers,
+            shards: 0,
+            mode: TraceMode::Spans,
+            basis: "wall".to_string(),
+            events,
+            edges,
+            epoch_marks: marks,
+            dropped: 0,
+        }
+    }
+
+    #[test]
+    fn t1_is_the_sum_of_work_spans_and_tinf_follows_edges() {
+        // Chain 0→1 (100+50), task 2 independent (70).
+        let t = trace(
+            vec![
+                ev(0, EventKind::Exec, 0, 0, 100),
+                ev(1, EventKind::Exec, 2, 0, 70),
+                ev(0, EventKind::Exec, 1, 100, 50),
+            ],
+            vec![Edge { from: 0, to: 2, kind: EdgeKind::Footprint }],
+            vec![],
+            2,
+        );
+        let a = analyze(&t);
+        assert_eq!(a.t1_ns, 220);
+        assert_eq!(a.tinf_ns, 150, "critical path is the 0→1 chain");
+        assert!((a.speedup_bound - 220.0 / 150.0).abs() < 1e-9);
+        assert!(a.tinf_ns <= a.t1_ns);
+    }
+
+    #[test]
+    fn no_edges_means_critical_path_is_the_longest_span() {
+        let t = trace(
+            vec![
+                ev(0, EventKind::Exec, 0, 0, 40),
+                ev(1, EventKind::Exec, 1, 0, 90),
+            ],
+            vec![],
+            vec![],
+            2,
+        );
+        let a = analyze(&t);
+        assert_eq!(a.t1_ns, 130);
+        assert_eq!(a.tinf_ns, 90);
+    }
+
+    #[test]
+    fn fully_ordered_trace_has_t1_equal_tinf() {
+        // Sequential-engine shape: order edges chain every span.
+        let t = trace(
+            vec![
+                ev(0, EventKind::Exec, 0, 0, 10),
+                ev(0, EventKind::Exec, 1, 10, 20),
+                ev(0, EventKind::Exec, 2, 30, 30),
+            ],
+            vec![
+                Edge { from: 0, to: 1, kind: EdgeKind::Order },
+                Edge { from: 1, to: 2, kind: EdgeKind::Order },
+            ],
+            vec![],
+            1,
+        );
+        let a = analyze(&t);
+        assert_eq!(a.t1_ns, 60);
+        assert_eq!(a.tinf_ns, 60);
+        assert!((a.speedup_bound - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn epochs_partition_spans_by_quiescence_marks() {
+        let t = trace(
+            vec![
+                ev(0, EventKind::Exec, 0, 0, 10),
+                ev(0, EventKind::Exec, 1, 20, 10),
+                ev(0, EventKind::Exec, 2, 60, 10),
+            ],
+            vec![],
+            vec![EpochMark { emitted: 2, t_ns: 40 }],
+            1,
+        );
+        let a = analyze(&t);
+        assert_eq!(a.epochs.len(), 2);
+        assert_eq!(a.epochs[0].emitted, 2);
+        assert_eq!(a.epochs[0].t1_ns, 20);
+        assert_eq!(a.epochs[1].emitted, u64::MAX, "tail segment");
+        assert_eq!(a.epochs[1].t1_ns, 10);
+        let epoch_sum: u64 = a.epochs.iter().map(|e| e.t1_ns).sum();
+        assert_eq!(epoch_sum, a.t1_ns, "epochs partition the work");
+    }
+
+    #[test]
+    fn attribution_components_sum_to_the_gap_exactly() {
+        let t = trace(
+            vec![
+                ev(0, EventKind::Exec, 0, 0, 100),
+                ev(0, EventKind::Spill, 1, 100, 40),
+                ev(0, EventKind::FenceWait, 1, 140, 10),
+                ev(1, EventKind::Exec, 2, 0, 30),
+                ev(2, EventKind::Rebalance, 1, 160, 20),
+            ],
+            vec![],
+            vec![],
+            2,
+        );
+        let a = analyze(&t);
+        let at = &a.attribution;
+        assert_eq!(at.window_ns, 180.0);
+        assert_eq!(at.ideal_ns, 170.0 / 2.0);
+        let sum: f64 = at.components().iter().map(|(_, v)| v).sum();
+        assert!(
+            (sum - at.gap_ns).abs() < 1e-6,
+            "components {sum} must sum to gap {}",
+            at.gap_ns
+        );
+        assert_eq!(at.fence_wait_ns, 10.0);
+        assert_eq!(at.rebalance_ns, 20.0);
+        // Busiest lane is 0 (140 vs 30).
+        assert_eq!(at.exec_skew_ns, 100.0 - 130.0 / 2.0);
+        assert_eq!(at.spill_serial_ns, 40.0 - 40.0 / 2.0);
+    }
+
+    #[test]
+    fn empty_trace_analyzes_cleanly() {
+        let t = trace(vec![], vec![], vec![], 4);
+        let a = analyze(&t);
+        assert_eq!(a.t1_ns, 0);
+        assert_eq!(a.tinf_ns, 0);
+        assert_eq!(a.speedup_bound, 1.0);
+        assert!(a.epochs.is_empty());
+        assert_eq!(a.attribution, Attribution::default());
+        assert!(!a.render_text().is_empty());
+    }
+
+    #[test]
+    fn report_renders_and_serializes() {
+        let t = trace(
+            vec![
+                ev(0, EventKind::Exec, 0, 0, 1500),
+                ev(1, EventKind::Exec, 1, 0, 2500),
+            ],
+            vec![],
+            vec![EpochMark { emitted: 2, t_ns: 3000 }],
+            2,
+        );
+        let a = analyze(&t);
+        let text = a.render_text();
+        assert!(text.contains("T1 (total work)"));
+        assert!(text.contains("speedup bound"));
+        assert!(text.contains("gap attribution"));
+        let j = a.to_json();
+        assert_eq!(j.get("t1_ns").unwrap().as_i64(), Some(4000));
+        assert_eq!(j.get("tinf_ns").unwrap().as_i64(), Some(2500));
+        assert!(j.get("attribution").unwrap().get("window_ns").is_some());
+        assert_eq!(j.get("epochs").unwrap().as_arr().unwrap().len(), 1);
+        // The JSON must round-trip through the crate parser.
+        assert_eq!(Json::parse(&j.render()).unwrap(), j);
+    }
+
+    #[test]
+    fn fmt_ns_is_adaptive() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2_500_000.0), "2.50 ms");
+        assert_eq!(fmt_ns(3_000_000_000.0), "3.000 s");
+    }
+}

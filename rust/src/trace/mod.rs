@@ -1,0 +1,975 @@
+//! Causal task tracing (DESIGN.md §12): opt-in, always-cheap timeline
+//! spans + causal edges riding the telemetry ring infrastructure.
+//!
+//! Layering:
+//!
+//! * [`TraceMode`] — `Off` (zero recording, the default), `Spans`
+//!   (execution/spillover/fence-wait/rebalance spans + epoch marks),
+//!   `Full` (adds idle/walk/quiescence spans and runtime fence-clear
+//!   events). Defaults from `ADAPAR_TRACE`. Like `--telemetry`, the
+//!   mode is **semantically inert**: nothing recorded here feeds back
+//!   into execution, so the observation trace is byte-identical in
+//!   every mode (asserted by the conformance matrix).
+//! * [`TraceCore`] — per-lane SPSC [`WideRing<4>`]s (one lane per
+//!   worker plus a coordinator lane) drained by a background
+//!   aggregator thread ("adapar-trace") into an event buffer. A full
+//!   ring **drops whole events** (counted), it never blocks a worker;
+//!   the buffer itself is capped ([`EVENT_CAP`]) with the overflow
+//!   counted too.
+//! * [`Trace`] — the immutable post-run view: events sorted on a
+//!   global timeline, causal [`Edge`]s derived post hoc (canonical
+//!   footprint order per block, program order on the sequential
+//!   engine, fence releases in `Full` mode), and the epoch-quiescence
+//!   marks. Consumed by the Perfetto exporter ([`perfetto`]) and the
+//!   critical-path analyzer ([`analyze`]).
+//!
+//! Timestamps are nanoseconds relative to the run's start: wall-clock
+//! on the threaded engines ([`TraceHandle::now`]/[`TraceHandle::rel`]),
+//! deterministic virtual time on the DES testbed (which passes its own
+//! clocks explicitly). A span is recorded *after* it ends — one ring
+//! push per span, nothing on the span-open path.
+
+pub mod analyze;
+pub mod perfetto;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::telemetry::WideRing;
+use crate::util::json::Json;
+
+/// Sentinel for "no task id" / "no block id" in an [`Event`].
+pub const NONE_ID: u64 = u64::MAX;
+/// Sentinel for "no shard" in an [`Event`].
+pub const NONE_SHARD: u32 = u32::MAX;
+/// Hard cap on buffered events per run (~40 MB of [`Event`]s); events
+/// beyond it are dropped and counted, never reallocated without bound.
+pub const EVENT_CAP: usize = 1 << 20;
+
+/// Per-lane trace ring capacity (slots). The aggregator drains every
+/// ~200 µs, so this bounds burst tolerance, not throughput.
+const RING_CAPACITY: usize = 8192;
+
+/// Causal-tracing mode for one run (inert in every mode).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TraceMode {
+    /// No recording at all: one predicted-false branch per site.
+    #[default]
+    Off,
+    /// Execution, spillover, fence-wait and rebalance spans plus epoch
+    /// marks — enough for the Perfetto timeline and the critical-path
+    /// analysis.
+    Spans,
+    /// Everything in `Spans` plus idle/walk/quiescence spans and
+    /// runtime fence-clear events (flow-arrow sources).
+    Full,
+}
+
+impl TraceMode {
+    /// Mode from `ADAPAR_TRACE` (`spans` → [`Spans`],
+    /// `full`/`on`/`1`/`true` → [`Full`], anything else / unset →
+    /// [`Off`]).
+    ///
+    /// [`Spans`]: TraceMode::Spans
+    /// [`Full`]: TraceMode::Full
+    pub fn env_default() -> Self {
+        match std::env::var("ADAPAR_TRACE").as_deref() {
+            Ok("spans") => TraceMode::Spans,
+            Ok("full") | Ok("on") | Ok("1") | Ok("true") => TraceMode::Full,
+            _ => TraceMode::Off,
+        }
+    }
+
+    /// Whether any recording happens.
+    pub fn enabled(self) -> bool {
+        self != TraceMode::Off
+    }
+
+    /// Whether the verbose (`Full`) layer is on.
+    pub fn is_full(self) -> bool {
+        self == TraceMode::Full
+    }
+
+    /// Short label for reports.
+    pub fn label(self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Spans => "spans",
+            TraceMode::Full => "full",
+        }
+    }
+}
+
+impl std::str::FromStr for TraceMode {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "off" | "0" | "false" => Ok(TraceMode::Off),
+            "spans" => Ok(TraceMode::Spans),
+            "full" | "on" | "1" | "true" => Ok(TraceMode::Full),
+            _ => Err(format!("unknown trace mode `{s}` (off|spans|full)")),
+        }
+    }
+}
+
+/// What one trace event records.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A task execution (span; `task` = canonical seq).
+    Exec,
+    /// A boundary (spillover-chain) task execution (span).
+    Spill,
+    /// A blocked boundary-readiness walk: the fences of `task` were
+    /// not clear (span).
+    FenceWait,
+    /// An epoch-boundary rebalance (span, coordinator lane; `task` =
+    /// blocks migrated).
+    Rebalance,
+    /// An idle protocol cycle (span, `Full` only).
+    Idle,
+    /// A chain walk that ended without executing (span, `Full` only).
+    Walk,
+    /// Epoch-boundary bookkeeping between quiescence and the next
+    /// epoch's start (span, coordinator lane, `Full` only).
+    Quiesce,
+    /// Epoch quiescence reached (point, coordinator lane; `task` =
+    /// canonical tasks emitted so far).
+    EpochMark,
+    /// A completed fence was cleared from a shard chain (point, `Full`
+    /// only; `task` = the fence's boundary seq).
+    FenceClear,
+}
+
+impl EventKind {
+    fn from_u8(v: u8) -> Option<EventKind> {
+        Some(match v {
+            1 => EventKind::Exec,
+            2 => EventKind::Spill,
+            3 => EventKind::FenceWait,
+            4 => EventKind::Rebalance,
+            5 => EventKind::Idle,
+            6 => EventKind::Walk,
+            7 => EventKind::Quiesce,
+            8 => EventKind::EpochMark,
+            9 => EventKind::FenceClear,
+            _ => return None,
+        })
+    }
+
+    fn as_u8(self) -> u8 {
+        match self {
+            EventKind::Exec => 1,
+            EventKind::Spill => 2,
+            EventKind::FenceWait => 3,
+            EventKind::Rebalance => 4,
+            EventKind::Idle => 5,
+            EventKind::Walk => 6,
+            EventKind::Quiesce => 7,
+            EventKind::EpochMark => 8,
+            EventKind::FenceClear => 9,
+        }
+    }
+
+    /// Stable lowercase name (Perfetto event name, JSON tag).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Exec => "exec",
+            EventKind::Spill => "spill",
+            EventKind::FenceWait => "fence_wait",
+            EventKind::Rebalance => "rebalance",
+            EventKind::Idle => "idle",
+            EventKind::Walk => "walk",
+            EventKind::Quiesce => "quiesce",
+            EventKind::EpochMark => "epoch",
+            EventKind::FenceClear => "fence_clear",
+        }
+    }
+
+    /// Parse a stable name back (the Perfetto round-trip).
+    pub fn parse(name: &str) -> Option<EventKind> {
+        Some(match name {
+            "exec" => EventKind::Exec,
+            "spill" => EventKind::Spill,
+            "fence_wait" => EventKind::FenceWait,
+            "rebalance" => EventKind::Rebalance,
+            "idle" => EventKind::Idle,
+            "walk" => EventKind::Walk,
+            "quiesce" => EventKind::Quiesce,
+            "epoch" => EventKind::EpochMark,
+            "fence_clear" => EventKind::FenceClear,
+            _ => return None,
+        })
+    }
+
+    /// Whether the kind is a duration span (vs a point event).
+    pub fn is_span(self) -> bool {
+        !matches!(self, EventKind::EpochMark | EventKind::FenceClear)
+    }
+
+    /// Whether the kind represents task work (counts into `T1`).
+    pub fn is_work(self) -> bool {
+        matches!(self, EventKind::Exec | EventKind::Spill)
+    }
+}
+
+/// One collected trace event (a span or a point on some lane).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Producer lane: worker id, or `workers` for the coordinator.
+    pub lane: u32,
+    /// What happened.
+    pub kind: EventKind,
+    /// Canonical task seq ([`NONE_ID`] when not task-bound; migrated
+    /// block count for [`EventKind::Rebalance`], emitted task count
+    /// for [`EventKind::EpochMark`]).
+    pub task: u64,
+    /// Footprint block id ([`NONE_ID`] when unknown).
+    pub block: u64,
+    /// Shard id ([`NONE_SHARD`] when not shard-bound).
+    pub shard: u32,
+    /// Start timestamp, ns since run start (wall or virtual).
+    pub start_ns: u64,
+    /// Duration in ns (0 for point events).
+    pub dur_ns: u64,
+}
+
+impl Event {
+    /// End timestamp (`start + dur`).
+    pub fn end_ns(&self) -> u64 {
+        self.start_ns.saturating_add(self.dur_ns)
+    }
+}
+
+/// A causal edge between two events (indices into [`Trace::events`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Edge {
+    /// Source event index.
+    pub from: usize,
+    /// Sink event index.
+    pub to: usize,
+    /// Why the sink depends on the source.
+    pub kind: EdgeKind,
+}
+
+/// The causal relationship an [`Edge`] encodes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EdgeKind {
+    /// Footprint overlap: both tasks touch the same block; the edge
+    /// follows canonical task order (the order the engines are bound
+    /// to execute conflicting tasks in).
+    Footprint,
+    /// Sequential program order (consecutive tasks on the sequential
+    /// engine — what makes its `T∞` equal `T1`).
+    Order,
+    /// Fence release: a boundary task's completed fence was cleared,
+    /// unblocking the sink.
+    Fence,
+}
+
+impl EdgeKind {
+    /// Stable lowercase name.
+    pub fn name(self) -> &'static str {
+        match self {
+            EdgeKind::Footprint => "footprint",
+            EdgeKind::Order => "order",
+            EdgeKind::Fence => "fence",
+        }
+    }
+
+    /// Parse a stable name back.
+    pub fn parse(name: &str) -> Option<EdgeKind> {
+        Some(match name {
+            "footprint" => EdgeKind::Footprint,
+            "order" => EdgeKind::Order,
+            "fence" => EdgeKind::Fence,
+            _ => return None,
+        })
+    }
+}
+
+/// An epoch-quiescence mark on the global timeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EpochMark {
+    /// Canonical tasks emitted when the boundary drained.
+    pub emitted: u64,
+    /// Timestamp of the quiescent point, ns since run start.
+    pub t_ns: u64,
+}
+
+// ---------------------------------------------------------------------------
+// collection (rings + aggregator)
+// ---------------------------------------------------------------------------
+
+/// Width of a trace ring slot: `[task, block, start_ns, dur_ns]`.
+const W: usize = 4;
+
+fn encode_meta(kind: EventKind, shard: u32) -> u32 {
+    let s16 = if shard == NONE_SHARD {
+        0xFFFF
+    } else {
+        (shard & 0xFFFF) as u32
+    };
+    (kind.as_u8() as u32) | (s16 << 8)
+}
+
+fn decode_meta(meta: u32) -> Option<(EventKind, u32)> {
+    let kind = EventKind::from_u8((meta & 0xFF) as u8)?;
+    let s16 = (meta >> 8) & 0xFFFF;
+    let shard = if s16 == 0xFFFF { NONE_SHARD } else { s16 };
+    Some((kind, shard))
+}
+
+/// The trace aggregator: drain every lane's ring into the event buffer
+/// until stopped; the stop flag is checked *before* the drain, so
+/// everything pushed before [`TraceCore::finish`] (workers already
+/// joined) is collected. Returns the buffer plus the count of events
+/// dropped at the buffer cap.
+fn collect_loop(rings: &[Arc<WideRing<W>>], stop: &AtomicBool) -> (Vec<Event>, u64) {
+    let mut events: Vec<Event> = Vec::new();
+    let mut overflow = 0u64;
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        for (lane, ring) in rings.iter().enumerate() {
+            ring.drain_events(|meta, [task, block, start_ns, dur_ns]| {
+                let Some((kind, shard)) = decode_meta(meta) else {
+                    return; // unknown tag (corrupt slot): skip, never panic
+                };
+                if events.len() >= EVENT_CAP {
+                    overflow += 1;
+                    return;
+                }
+                events.push(Event {
+                    lane: lane as u32,
+                    kind,
+                    task,
+                    block,
+                    shard,
+                    start_ns,
+                    dur_ns,
+                });
+            });
+        }
+        if stopping {
+            return (events, overflow);
+        }
+        std::thread::park_timeout(Duration::from_micros(200));
+    }
+}
+
+struct AggHandle {
+    stop: Arc<AtomicBool>,
+    thread: std::thread::JoinHandle<(Vec<Event>, u64)>,
+}
+
+/// Live trace-collection state for one run: per-lane rings + the
+/// background aggregator. Shared by reference with scoped worker
+/// threads (all interior state is atomic).
+pub struct TraceCore {
+    mode: TraceMode,
+    workers: usize,
+    engine: &'static str,
+    basis: &'static str,
+    anchor: Instant,
+    /// `workers + 1` lanes; the last is the coordinator's.
+    rings: Vec<Arc<WideRing<W>>>,
+    agg: Option<AggHandle>,
+}
+
+impl TraceCore {
+    /// Start collection for `workers` lanes (plus the coordinator
+    /// lane). Returns `None` when the mode is [`TraceMode::Off`] — the
+    /// engines then hand [`TraceHandle::disabled`] to their workers
+    /// and the hot path carries one predicted-false branch per site.
+    ///
+    /// `basis` is `"wall"` or `"virtual"` — the unit of every
+    /// timestamp in the finished trace.
+    pub fn start(
+        mode: TraceMode,
+        workers: usize,
+        engine: &'static str,
+        basis: &'static str,
+    ) -> Option<TraceCore> {
+        if !mode.enabled() {
+            return None;
+        }
+        let rings: Vec<Arc<WideRing<W>>> = (0..=workers)
+            .map(|_| Arc::new(WideRing::new(RING_CAPACITY)))
+            .collect();
+        let stop = Arc::new(AtomicBool::new(false));
+        let t_rings = rings.clone();
+        let t_stop = Arc::clone(&stop);
+        let thread = std::thread::Builder::new()
+            .name("adapar-trace".to_string())
+            .spawn(move || collect_loop(&t_rings, &t_stop))
+            .expect("spawn trace aggregator");
+        Some(TraceCore {
+            mode,
+            workers,
+            engine,
+            basis,
+            anchor: Instant::now(),
+            rings,
+            agg: Some(AggHandle { stop, thread }),
+        })
+    }
+
+    /// The run's trace mode.
+    pub fn mode(&self) -> TraceMode {
+        self.mode
+    }
+
+    /// Recording handle for worker `w`'s lane.
+    pub fn handle(&self, worker: usize) -> TraceHandle<'_> {
+        debug_assert!(worker < self.workers);
+        TraceHandle {
+            inner: Some((self, worker as u32)),
+        }
+    }
+
+    /// Recording handle for the coordinator lane (epoch marks,
+    /// rebalance and quiescence spans).
+    pub fn coordinator(&self) -> TraceHandle<'_> {
+        TraceHandle {
+            inner: Some((self, self.workers as u32)),
+        }
+    }
+
+    /// Stop the aggregator (final drain included) and freeze the
+    /// collected trace. Call only after all worker threads have been
+    /// joined — that join is the fence making every push visible.
+    pub fn finish(mut self) -> Trace {
+        let (mut events, overflow) = match self.agg.take() {
+            Some(a) => {
+                a.stop.store(true, Ordering::Release);
+                a.thread.thread().unpark();
+                a.thread.join().expect("trace aggregator panicked")
+            }
+            None => (Vec::new(), 0),
+        };
+        let dropped =
+            overflow + self.rings.iter().map(|r| r.dropped()).sum::<u64>();
+        // One global timeline: per-lane order is push order already;
+        // interleave lanes by start time (stable, so ties keep lane
+        // order deterministic).
+        events.sort_by(|a, b| {
+            a.start_ns
+                .cmp(&b.start_ns)
+                .then(a.lane.cmp(&b.lane))
+                .then(a.task.cmp(&b.task))
+        });
+        let epoch_marks = events
+            .iter()
+            .filter(|e| e.kind == EventKind::EpochMark)
+            .map(|e| EpochMark {
+                emitted: e.task,
+                t_ns: e.start_ns,
+            })
+            .collect();
+        events.retain(|e| e.kind != EventKind::EpochMark);
+        let edges = derive_edges(&events, self.engine);
+        Trace {
+            engine: self.engine.to_string(),
+            workers: self.workers,
+            shards: 0,
+            mode: self.mode,
+            basis: self.basis.to_string(),
+            events,
+            edges,
+            epoch_marks,
+            dropped,
+        }
+    }
+}
+
+/// A lane's recording handle: every operation is one wait-free ring
+/// push (or a predicted-false branch when tracing is off) and never
+/// feeds back into execution.
+#[derive(Clone, Copy)]
+pub struct TraceHandle<'a> {
+    inner: Option<(&'a TraceCore, u32)>,
+}
+
+impl TraceHandle<'_> {
+    /// The no-op handle ([`TraceMode::Off`] / untraced engines).
+    pub const fn disabled() -> TraceHandle<'static> {
+        TraceHandle { inner: None }
+    }
+
+    /// Handle for `lane` of an optional core (the engine-side glue:
+    /// `TraceHandle::lane(core.as_ref(), w)`).
+    pub fn lane(core: Option<&TraceCore>, lane: usize) -> TraceHandle<'_> {
+        match core {
+            Some(c) => TraceHandle {
+                inner: Some((c, lane as u32)),
+            },
+            None => TraceHandle { inner: None },
+        }
+    }
+
+    /// Whether spans are being recorded at all.
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Whether the verbose (`Full`) layer is on.
+    #[inline]
+    pub fn full(&self) -> bool {
+        matches!(self.inner, Some((c, _)) if c.mode.is_full())
+    }
+
+    /// Now, in ns since the run's start (0 when disabled — callers
+    /// guard with [`active`](Self::active) so the value is never used).
+    #[inline]
+    pub fn now(&self) -> u64 {
+        match self.inner {
+            Some((c, _)) => c.anchor.elapsed().as_nanos() as u64,
+            None => 0,
+        }
+    }
+
+    /// Convert an already-taken [`Instant`] to run-relative ns (reuses
+    /// clock reads the engine made anyway, e.g. the sharded cost
+    /// probe's).
+    #[inline]
+    pub fn rel(&self, t: Instant) -> u64 {
+        match self.inner {
+            Some((c, _)) => t.duration_since(c.anchor).as_nanos() as u64,
+            None => 0,
+        }
+    }
+
+    #[inline]
+    fn push(&self, kind: EventKind, shard: u32, task: u64, block: u64, start: u64, dur: u64) {
+        if let Some((core, lane)) = self.inner {
+            core.rings[lane as usize]
+                .push_event(encode_meta(kind, shard), &[task, block, start, dur]);
+        }
+    }
+
+    /// Record a task-execution span.
+    #[inline]
+    pub fn exec(&self, task: u64, block: u64, shard: u32, start: u64, end: u64) {
+        self.push(EventKind::Exec, shard, task, block, start, end.saturating_sub(start));
+    }
+
+    /// Record a boundary (spillover) execution span.
+    #[inline]
+    pub fn spill(&self, task: u64, block: u64, start: u64, end: u64) {
+        self.push(EventKind::Spill, NONE_SHARD, task, block, start, end.saturating_sub(start));
+    }
+
+    /// Record a blocked fence-readiness walk for boundary `task`.
+    #[inline]
+    pub fn fence_wait(&self, task: u64, start: u64, end: u64) {
+        self.push(
+            EventKind::FenceWait,
+            NONE_SHARD,
+            task,
+            NONE_ID,
+            start,
+            end.saturating_sub(start),
+        );
+    }
+
+    /// Record a rebalance span (`moves` = migrated blocks).
+    #[inline]
+    pub fn rebalance(&self, moves: u64, start: u64, end: u64) {
+        self.push(
+            EventKind::Rebalance,
+            NONE_SHARD,
+            moves,
+            NONE_ID,
+            start,
+            end.saturating_sub(start),
+        );
+    }
+
+    /// Record an idle cycle span (`Full` only; no-op otherwise).
+    #[inline]
+    pub fn idle(&self, start: u64, end: u64) {
+        if self.full() {
+            self.push(EventKind::Idle, NONE_SHARD, NONE_ID, NONE_ID, start, end.saturating_sub(start));
+        }
+    }
+
+    /// Record a workless chain-walk span (`Full` only; no-op otherwise).
+    #[inline]
+    pub fn walk(&self, start: u64, end: u64) {
+        if self.full() {
+            self.push(EventKind::Walk, NONE_SHARD, NONE_ID, NONE_ID, start, end.saturating_sub(start));
+        }
+    }
+
+    /// Record an epoch-boundary bookkeeping span (`Full` only).
+    #[inline]
+    pub fn quiesce(&self, start: u64, end: u64) {
+        if self.full() {
+            self.push(EventKind::Quiesce, NONE_SHARD, NONE_ID, NONE_ID, start, end.saturating_sub(start));
+        }
+    }
+
+    /// Record an epoch-quiescence mark at the current wall clock.
+    #[inline]
+    pub fn epoch_mark(&self, emitted: u64) {
+        let t = self.now();
+        self.epoch_mark_at(emitted, t);
+    }
+
+    /// Record an epoch-quiescence mark at an explicit timestamp (the
+    /// virtual engine's deterministic clocks).
+    #[inline]
+    pub fn epoch_mark_at(&self, emitted: u64, t_ns: u64) {
+        self.push(EventKind::EpochMark, NONE_SHARD, emitted, NONE_ID, t_ns, 0);
+    }
+
+    /// Record a fence-clear point for boundary `task` (`Full` only).
+    #[inline]
+    pub fn fence_clear(&self, task: u64) {
+        if self.full() {
+            let t = self.now();
+            self.push(EventKind::FenceClear, NONE_SHARD, task, NONE_ID, t, 0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the finished trace + causal-edge derivation
+// ---------------------------------------------------------------------------
+
+/// The immutable, post-run causal trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    /// Engine label (`"parallel"`, `"sharded"`, ...).
+    pub engine: String,
+    /// Worker-lane count (lane `workers` is the coordinator).
+    pub workers: usize,
+    /// Shard count (0 for unsharded engines).
+    pub shards: usize,
+    /// The mode the trace was collected under.
+    pub mode: TraceMode,
+    /// Timestamp basis: `"wall"` or `"virtual"`.
+    pub basis: String,
+    /// All events on one timeline, sorted by `(start_ns, lane)`.
+    pub events: Vec<Event>,
+    /// Causal edges between events (indices into `events`); acyclic by
+    /// construction (every edge points strictly forward on the
+    /// `(start_ns, index)` order).
+    pub edges: Vec<Edge>,
+    /// Epoch-quiescence marks in time order.
+    pub epoch_marks: Vec<EpochMark>,
+    /// Events lost to ring saturation or the buffer cap.
+    pub dropped: u64,
+}
+
+impl Trace {
+    /// Indices of the work spans (exec + spill), the `T1` population.
+    pub fn work_spans(&self) -> Vec<usize> {
+        self.events
+            .iter()
+            .enumerate()
+            .filter(|(_, e)| e.kind.is_work())
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Small summary for `RunReport::to_json` (the full trace goes to
+    /// the Perfetto file, not the report).
+    pub fn summary_json(&self) -> Json {
+        Json::Obj(vec![
+            ("mode".to_string(), Json::from(self.mode.label())),
+            ("basis".to_string(), Json::from(self.basis.clone())),
+            ("events".to_string(), Json::from(self.events.len())),
+            ("edges".to_string(), Json::from(self.edges.len())),
+            ("epochs".to_string(), Json::from(self.epoch_marks.len())),
+            ("dropped".to_string(), Json::from(self.dropped)),
+        ])
+    }
+}
+
+/// `(start, index)` key giving the strict forward order every edge
+/// must respect — the acyclicity invariant.
+fn order_key(events: &[Event], i: usize) -> (u64, usize) {
+    (events[i].start_ns, i)
+}
+
+/// Derive causal edges from the collected events.
+///
+/// * **Footprint** edges chain the work spans touching each block in
+///   canonical (seq) order — the dependence order every engine is
+///   bound to execute conflicting tasks in, so edges always point
+///   forward in time.
+/// * **Order** edges chain consecutive work spans on the sequential
+///   engine (total program order ⇒ `T∞ == T1`).
+/// * **Fence** edges connect a boundary task's span to the first
+///   execution on the lane that observed its fence complete
+///   ([`EventKind::FenceClear`], `Full` mode) — the released task.
+///
+/// Every candidate violating the forward `(start_ns, index)` order is
+/// discarded, so the result is acyclic unconditionally (even on
+/// drop-lossy traces).
+fn derive_edges(events: &[Event], engine: &str) -> Vec<Edge> {
+    let mut edges: Vec<Edge> = Vec::new();
+    let work: Vec<usize> = events
+        .iter()
+        .enumerate()
+        .filter(|(_, e)| e.kind.is_work() && e.task != NONE_ID)
+        .map(|(i, _)| i)
+        .collect();
+    let mut push = |from: usize, to: usize, kind: EdgeKind, edges: &mut Vec<Edge>| {
+        if order_key(events, from) < order_key(events, to) {
+            edges.push(Edge { from, to, kind });
+        }
+    };
+
+    // By canonical task order (the seq assigned at creation).
+    let mut by_seq = work.clone();
+    by_seq.sort_by_key(|&i| events[i].task);
+
+    if engine == "sequential" {
+        for pair in by_seq.windows(2) {
+            push(pair[0], pair[1], EdgeKind::Order, &mut edges);
+        }
+    }
+
+    // Footprint: last-writer chains per block, in canonical order.
+    let mut last_by_block: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::new();
+    for &i in &by_seq {
+        let block = events[i].block;
+        if block == NONE_ID {
+            continue;
+        }
+        if let Some(&prev) = last_by_block.get(&block) {
+            push(prev, i, EdgeKind::Footprint, &mut edges);
+        }
+        last_by_block.insert(block, i);
+    }
+
+    // Fence releases (Full mode): clear point → next execution on the
+    // clearing lane; source = the boundary task's own span.
+    let mut span_of_task: std::collections::HashMap<u64, usize> =
+        std::collections::HashMap::new();
+    for &i in &work {
+        span_of_task.entry(events[i].task).or_insert(i);
+    }
+    for (ci, clear) in events.iter().enumerate() {
+        if clear.kind != EventKind::FenceClear {
+            continue;
+        }
+        let Some(&from) = span_of_task.get(&clear.task) else {
+            continue; // the boundary's own span was dropped
+        };
+        // First work span on the clearing lane at or after the clear.
+        let to = work
+            .iter()
+            .copied()
+            .filter(|&i| {
+                events[i].lane == clear.lane
+                    && order_key(events, i) > order_key(events, ci)
+            })
+            .min_by_key(|&i| order_key(events, i));
+        if let Some(to) = to {
+            push(from, to, EdgeKind::Fence, &mut edges);
+        }
+    }
+    edges.sort_by_key(|e| (e.from, e.to));
+    edges.dedup_by_key(|e| (e.from, e.to));
+    edges
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(lane: u32, kind: EventKind, task: u64, block: u64, start: u64, dur: u64) -> Event {
+        Event {
+            lane,
+            kind,
+            task,
+            block,
+            shard: NONE_SHARD,
+            start_ns: start,
+            dur_ns: dur,
+        }
+    }
+
+    #[test]
+    fn mode_parses_and_defaults_off() {
+        assert_eq!("off".parse::<TraceMode>().unwrap(), TraceMode::Off);
+        assert_eq!("spans".parse::<TraceMode>().unwrap(), TraceMode::Spans);
+        assert_eq!("full".parse::<TraceMode>().unwrap(), TraceMode::Full);
+        assert!("bogus".parse::<TraceMode>().is_err());
+        assert_eq!(TraceMode::default(), TraceMode::Off);
+        assert!(!TraceMode::Off.enabled());
+        assert!(TraceMode::Spans.enabled() && !TraceMode::Spans.is_full());
+        assert!(TraceMode::Full.is_full());
+    }
+
+    #[test]
+    fn meta_encoding_round_trips() {
+        for kind in [
+            EventKind::Exec,
+            EventKind::Spill,
+            EventKind::FenceWait,
+            EventKind::Rebalance,
+            EventKind::Idle,
+            EventKind::Walk,
+            EventKind::Quiesce,
+            EventKind::EpochMark,
+            EventKind::FenceClear,
+        ] {
+            for shard in [0u32, 7, 65_534, NONE_SHARD] {
+                assert_eq!(decode_meta(encode_meta(kind, shard)), Some((kind, shard)));
+            }
+            assert_eq!(EventKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(decode_meta(0), None, "kind 0 is reserved/invalid");
+    }
+
+    #[test]
+    fn off_mode_starts_nothing() {
+        assert!(TraceCore::start(TraceMode::Off, 4, "parallel", "wall").is_none());
+        let h = TraceHandle::disabled();
+        assert!(!h.active() && !h.full());
+        assert_eq!(h.now(), 0);
+        h.exec(1, NONE_ID, NONE_SHARD, 0, 10); // must be a no-op, not a panic
+    }
+
+    #[test]
+    fn core_collects_spans_and_marks_across_lanes() {
+        let core = TraceCore::start(TraceMode::Full, 2, "parallel", "wall").unwrap();
+        let w0 = core.handle(0);
+        let w1 = core.handle(1);
+        assert!(w0.active() && w0.full());
+        w0.exec(0, NONE_ID, NONE_SHARD, 10, 30);
+        w1.exec(1, NONE_ID, NONE_SHARD, 5, 25);
+        w0.idle(30, 40);
+        core.coordinator().epoch_mark_at(2, 50);
+        let trace = core.finish();
+        assert_eq!(trace.engine, "parallel");
+        assert_eq!(trace.workers, 2);
+        assert_eq!(trace.dropped, 0);
+        assert_eq!(trace.epoch_marks, vec![EpochMark { emitted: 2, t_ns: 50 }]);
+        // Sorted by start: w1's exec (5) first, then w0's (10), idle (30).
+        let kinds: Vec<(u32, EventKind)> =
+            trace.events.iter().map(|e| (e.lane, e.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (1, EventKind::Exec),
+                (0, EventKind::Exec),
+                (0, EventKind::Idle)
+            ]
+        );
+        assert_eq!(trace.events[0].dur_ns, 20);
+        assert_eq!(trace.events[0].end_ns(), 25);
+    }
+
+    #[test]
+    fn spans_mode_suppresses_full_only_events() {
+        let core = TraceCore::start(TraceMode::Spans, 1, "parallel", "wall").unwrap();
+        let h = core.handle(0);
+        assert!(h.active() && !h.full());
+        h.exec(0, NONE_ID, NONE_SHARD, 0, 10);
+        h.idle(10, 20);
+        h.walk(20, 30);
+        h.quiesce(30, 40);
+        h.fence_clear(0);
+        let trace = core.finish();
+        assert_eq!(trace.events.len(), 1, "only the exec span is recorded");
+        assert_eq!(trace.events[0].kind, EventKind::Exec);
+    }
+
+    #[test]
+    fn sequential_order_edges_chain_every_task() {
+        let events = vec![
+            span(0, EventKind::Exec, 0, NONE_ID, 0, 10),
+            span(0, EventKind::Exec, 1, NONE_ID, 12, 10),
+            span(0, EventKind::Exec, 2, NONE_ID, 25, 10),
+        ];
+        let edges = derive_edges(&events, "sequential");
+        assert_eq!(
+            edges,
+            vec![
+                Edge { from: 0, to: 1, kind: EdgeKind::Order },
+                Edge { from: 1, to: 2, kind: EdgeKind::Order },
+            ]
+        );
+    }
+
+    #[test]
+    fn footprint_edges_follow_canonical_order_per_block() {
+        // Tasks 0,2 touch block 5; task 1 touches block 9. Wall order
+        // differs from seq order across lanes; edges follow seq.
+        let events = vec![
+            span(1, EventKind::Exec, 1, 9, 0, 5),
+            span(0, EventKind::Exec, 0, 5, 1, 5),
+            span(0, EventKind::Exec, 2, 5, 8, 5),
+        ];
+        let edges = derive_edges(&events, "sharded");
+        assert_eq!(
+            edges,
+            vec![Edge { from: 1, to: 2, kind: EdgeKind::Footprint }]
+        );
+    }
+
+    #[test]
+    fn derived_edges_are_acyclic_and_forward() {
+        // A degenerate trace (equal starts, duplicate seqs from a lossy
+        // ring) must still yield only forward edges.
+        let events = vec![
+            span(0, EventKind::Exec, 3, 1, 0, 0),
+            span(1, EventKind::Exec, 3, 1, 0, 0),
+            span(0, EventKind::Exec, 1, 1, 0, 0),
+        ];
+        let edges = derive_edges(&events, "sharded");
+        for e in &edges {
+            assert!(order_key(&events, e.from) < order_key(&events, e.to));
+        }
+    }
+
+    #[test]
+    fn fence_clear_edges_point_at_the_released_execution() {
+        let mut events = vec![
+            span(0, EventKind::Spill, 7, 3, 0, 10), // boundary task 7
+            span(1, EventKind::Exec, 8, NONE_ID, 20, 5), // released local
+        ];
+        events.push(Event {
+            lane: 1,
+            kind: EventKind::FenceClear,
+            task: 7,
+            block: NONE_ID,
+            shard: NONE_SHARD,
+            start_ns: 15,
+            dur_ns: 0,
+        });
+        events.sort_by_key(|e| e.start_ns);
+        let edges = derive_edges(&events, "sharded");
+        assert!(
+            edges.contains(&Edge { from: 0, to: 2, kind: EdgeKind::Fence }),
+            "{edges:?}"
+        );
+    }
+
+    #[test]
+    fn ring_saturation_drops_whole_events_and_counts() {
+        let core = TraceCore::start(TraceMode::Spans, 1, "parallel", "wall").unwrap();
+        let h = core.handle(0);
+        // Overfill far beyond the ring capacity faster than the 200µs
+        // aggregator cadence can drain — some events must drop, every
+        // drop must be counted, and nothing may block.
+        let n: u64 = 200_000;
+        for t in 0..n {
+            h.exec(t, NONE_ID, NONE_SHARD, t, t + 1);
+        }
+        let trace = core.finish();
+        assert_eq!(trace.events.len() as u64 + trace.dropped, n);
+        // Whatever survived is well-formed.
+        for e in &trace.events {
+            assert_eq!(e.kind, EventKind::Exec);
+            assert_eq!(e.dur_ns, 1);
+        }
+    }
+}

@@ -1,0 +1,549 @@
+//! Chrome/Perfetto `trace_event` export (and parse-back) for a
+//! collected [`Trace`].
+//!
+//! The file is one JSON object with the standard `traceEvents` array —
+//! loadable as-is in `ui.perfetto.dev` or `chrome://tracing` — plus an
+//! `"adapar"` sidecar object carrying the trace at full fidelity
+//! (events, causal edges, epoch marks, drop counts). Perfetto ignores
+//! unknown top-level keys, so one file serves both the human timeline
+//! and `cli trace-analyze`, which reads the sidecar back through
+//! [`parse`] without any loss.
+//!
+//! Lane layout:
+//! * `pid 1` — one row per worker (`tid` = worker id) plus the
+//!   coordinator row (`tid` = worker count): every span and instant.
+//! * `pid 2` — one row per shard (sharded engine only): task
+//!   executions duplicated onto their shard's row, so per-shard load
+//!   is visible at a glance.
+//! * Fence releases and spillover-serialization dependencies are
+//!   emitted as `s`/`f` flow arrows between the connected spans.
+
+use super::{Edge, EdgeKind, EpochMark, Event, EventKind, Trace, TraceMode, NONE_ID, NONE_SHARD};
+use crate::util::json::Json;
+
+/// µs with fractional ns, the unit `trace_event` timestamps use.
+fn us(ns: u64) -> Json {
+    Json::Float(ns as f64 / 1000.0)
+}
+
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
+/// `task`/`block` ids for the sidecar: `null` for the none sentinel so
+/// the round trip is exact even though `u64::MAX` itself is not
+/// representable as a JSON integer.
+fn id_json(v: u64) -> Json {
+    if v == NONE_ID {
+        Json::Null
+    } else {
+        Json::from(v)
+    }
+}
+
+fn shard_json(v: u32) -> Json {
+    if v == NONE_SHARD {
+        Json::Null
+    } else {
+        Json::from(v)
+    }
+}
+
+fn span_args(e: &Event) -> Json {
+    let mut fields: Vec<(&str, Json)> = Vec::new();
+    if e.task != NONE_ID {
+        let key = match e.kind {
+            EventKind::Rebalance => "moves",
+            EventKind::EpochMark => "emitted",
+            _ => "task",
+        };
+        fields.push((key, Json::from(e.task)));
+    }
+    if e.block != NONE_ID {
+        fields.push(("block", Json::from(e.block)));
+    }
+    if e.shard != NONE_SHARD {
+        fields.push(("shard", Json::from(e.shard)));
+    }
+    obj(fields)
+}
+
+/// Render `trace` as a Perfetto-loadable `trace_event` JSON document
+/// (with the full-fidelity `adapar` sidecar).
+pub fn export(trace: &Trace) -> String {
+    let mut te: Vec<Json> = Vec::new();
+
+    // Process/thread naming metadata.
+    te.push(obj(vec![
+        ("ph", Json::from("M")),
+        ("pid", Json::from(1u32)),
+        ("name", Json::from("process_name")),
+        (
+            "args",
+            obj(vec![(
+                "name",
+                Json::from(format!("adapar {} workers", trace.engine)),
+            )]),
+        ),
+    ]));
+    for w in 0..=trace.workers {
+        let label = if w == trace.workers {
+            "coordinator".to_string()
+        } else {
+            format!("worker {w}")
+        };
+        te.push(obj(vec![
+            ("ph", Json::from("M")),
+            ("pid", Json::from(1u32)),
+            ("tid", Json::from(w)),
+            ("name", Json::from("thread_name")),
+            ("args", obj(vec![("name", Json::from(label))])),
+        ]));
+    }
+    let shards_used = trace.events.iter().any(|e| e.shard != NONE_SHARD);
+    if shards_used {
+        te.push(obj(vec![
+            ("ph", Json::from("M")),
+            ("pid", Json::from(2u32)),
+            ("name", Json::from("process_name")),
+            ("args", obj(vec![("name", Json::from("adapar shards"))])),
+        ]));
+        let max_shard = trace
+            .events
+            .iter()
+            .filter(|e| e.shard != NONE_SHARD)
+            .map(|e| e.shard)
+            .max()
+            .unwrap_or(0);
+        for s in 0..=max_shard {
+            te.push(obj(vec![
+                ("ph", Json::from("M")),
+                ("pid", Json::from(2u32)),
+                ("tid", Json::from(s)),
+                ("name", Json::from("thread_name")),
+                ("args", obj(vec![("name", Json::from(format!("shard {s}")))])),
+            ]));
+        }
+    }
+
+    // Spans and instants on the worker lanes (+ shard-lane duplicates).
+    for e in &trace.events {
+        if e.kind.is_span() {
+            te.push(obj(vec![
+                ("ph", Json::from("X")),
+                ("pid", Json::from(1u32)),
+                ("tid", Json::from(e.lane)),
+                ("ts", us(e.start_ns)),
+                ("dur", us(e.dur_ns)),
+                ("name", Json::from(e.kind.name())),
+                ("cat", Json::from("adapar")),
+                ("args", span_args(e)),
+            ]));
+            if e.shard != NONE_SHARD {
+                te.push(obj(vec![
+                    ("ph", Json::from("X")),
+                    ("pid", Json::from(2u32)),
+                    ("tid", Json::from(e.shard)),
+                    ("ts", us(e.start_ns)),
+                    ("dur", us(e.dur_ns)),
+                    ("name", Json::from(e.kind.name())),
+                    ("cat", Json::from("adapar")),
+                    ("args", span_args(e)),
+                ]));
+            }
+        } else {
+            te.push(obj(vec![
+                ("ph", Json::from("i")),
+                ("pid", Json::from(1u32)),
+                ("tid", Json::from(e.lane)),
+                ("ts", us(e.start_ns)),
+                ("name", Json::from(e.kind.name())),
+                ("cat", Json::from("adapar")),
+                ("s", Json::from("t")),
+                ("args", span_args(e)),
+            ]));
+        }
+    }
+
+    // Epoch-quiescence marks: process-scoped instants on the
+    // coordinator row.
+    for m in &trace.epoch_marks {
+        te.push(obj(vec![
+            ("ph", Json::from("i")),
+            ("pid", Json::from(1u32)),
+            ("tid", Json::from(trace.workers)),
+            ("ts", us(m.t_ns)),
+            ("name", Json::from("epoch")),
+            ("cat", Json::from("adapar")),
+            ("s", Json::from("p")),
+            ("args", obj(vec![("emitted", Json::from(m.emitted))])),
+        ]));
+    }
+
+    // Flow arrows: fence releases always; footprint dependencies when
+    // the source is a spillover execution (the cross-shard
+    // serialization the analyzer charges separately).
+    let mut flow_id = 0u64;
+    for edge in &trace.edges {
+        let draw = match edge.kind {
+            EdgeKind::Fence => true,
+            EdgeKind::Footprint => trace.events[edge.from].kind == EventKind::Spill,
+            EdgeKind::Order => false,
+        };
+        if !draw {
+            continue;
+        }
+        let (from, to) = (&trace.events[edge.from], &trace.events[edge.to]);
+        te.push(obj(vec![
+            ("ph", Json::from("s")),
+            ("pid", Json::from(1u32)),
+            ("tid", Json::from(from.lane)),
+            ("ts", us(from.end_ns())),
+            ("id", Json::from(flow_id)),
+            ("name", Json::from(edge.kind.name())),
+            ("cat", Json::from("adapar")),
+        ]));
+        te.push(obj(vec![
+            ("ph", Json::from("f")),
+            ("pid", Json::from(1u32)),
+            ("tid", Json::from(to.lane)),
+            ("ts", us(to.start_ns)),
+            ("id", Json::from(flow_id)),
+            ("name", Json::from(edge.kind.name())),
+            ("cat", Json::from("adapar")),
+            ("bp", Json::from("e")),
+        ]));
+        flow_id += 1;
+    }
+
+    // Full-fidelity sidecar (what `parse` reads back).
+    let sidecar = obj(vec![
+        ("engine", Json::from(trace.engine.clone())),
+        ("workers", Json::from(trace.workers)),
+        ("shards", Json::from(trace.shards)),
+        ("mode", Json::from(trace.mode.label())),
+        ("basis", Json::from(trace.basis.clone())),
+        ("dropped", Json::from(trace.dropped)),
+        (
+            "epoch_marks",
+            Json::Arr(
+                trace
+                    .epoch_marks
+                    .iter()
+                    .map(|m| {
+                        obj(vec![
+                            ("emitted", Json::from(m.emitted)),
+                            ("t_ns", Json::from(m.t_ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "events",
+            Json::Arr(
+                trace
+                    .events
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("lane", Json::from(e.lane)),
+                            ("kind", Json::from(e.kind.name())),
+                            ("task", id_json(e.task)),
+                            ("block", id_json(e.block)),
+                            ("shard", shard_json(e.shard)),
+                            ("start_ns", Json::from(e.start_ns)),
+                            ("dur_ns", Json::from(e.dur_ns)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "edges",
+            Json::Arr(
+                trace
+                    .edges
+                    .iter()
+                    .map(|e| {
+                        obj(vec![
+                            ("from", Json::from(e.from)),
+                            ("to", Json::from(e.to)),
+                            ("kind", Json::from(e.kind.name())),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ]);
+
+    Json::Obj(vec![
+        ("traceEvents".to_string(), Json::Arr(te)),
+        ("displayTimeUnit".to_string(), Json::from("ns")),
+        ("adapar".to_string(), sidecar),
+    ])
+    .render()
+}
+
+fn need<'a>(j: &'a Json, key: &str) -> Result<&'a Json, String> {
+    j.get(key).ok_or_else(|| format!("missing `{key}`"))
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, String> {
+    need(j, key)?
+        .as_i64()
+        .filter(|v| *v >= 0)
+        .map(|v| v as u64)
+        .ok_or_else(|| format!("`{key}` is not a non-negative integer"))
+}
+
+fn id_from(j: &Json, key: &str) -> Result<u64, String> {
+    match need(j, key)? {
+        Json::Null => Ok(NONE_ID),
+        v => v
+            .as_i64()
+            .filter(|v| *v >= 0)
+            .map(|v| v as u64)
+            .ok_or_else(|| format!("`{key}` is not an id or null")),
+    }
+}
+
+/// Reconstruct a [`Trace`] from an exported file (the `adapar`
+/// sidecar). Exact inverse of [`export`].
+pub fn parse(text: &str) -> Result<Trace, String> {
+    let doc = Json::parse(text)?;
+    let side = doc
+        .get("adapar")
+        .ok_or("not an adapar trace: no `adapar` sidecar object")?;
+    let mode: TraceMode = need(side, "mode")?
+        .as_str()
+        .ok_or("`mode` is not a string")?
+        .parse()?;
+    let mut events = Vec::new();
+    for ev in need(side, "events")?.as_arr().ok_or("`events` is not an array")? {
+        let kind_name = need(ev, "kind")?.as_str().ok_or("event `kind` not a string")?;
+        let kind = EventKind::parse(kind_name)
+            .ok_or_else(|| format!("unknown event kind `{kind_name}`"))?;
+        let shard = match need(ev, "shard")? {
+            Json::Null => NONE_SHARD,
+            v => v
+                .as_i64()
+                .filter(|v| *v >= 0)
+                .map(|v| v as u32)
+                .ok_or("event `shard` is not a shard id or null")?,
+        };
+        events.push(Event {
+            lane: need_u64(ev, "lane")? as u32,
+            kind,
+            task: id_from(ev, "task")?,
+            block: id_from(ev, "block")?,
+            shard,
+            start_ns: need_u64(ev, "start_ns")?,
+            dur_ns: need_u64(ev, "dur_ns")?,
+        });
+    }
+    let mut edges = Vec::new();
+    for ed in need(side, "edges")?.as_arr().ok_or("`edges` is not an array")? {
+        let kind_name = need(ed, "kind")?.as_str().ok_or("edge `kind` not a string")?;
+        let kind = EdgeKind::parse(kind_name)
+            .ok_or_else(|| format!("unknown edge kind `{kind_name}`"))?;
+        let from = need_u64(ed, "from")? as usize;
+        let to = need_u64(ed, "to")? as usize;
+        if from >= events.len() || to >= events.len() {
+            return Err(format!("edge {from}->{to} out of bounds"));
+        }
+        edges.push(Edge { from, to, kind });
+    }
+    let mut epoch_marks = Vec::new();
+    for m in need(side, "epoch_marks")?
+        .as_arr()
+        .ok_or("`epoch_marks` is not an array")?
+    {
+        epoch_marks.push(EpochMark {
+            emitted: need_u64(m, "emitted")?,
+            t_ns: need_u64(m, "t_ns")?,
+        });
+    }
+    Ok(Trace {
+        engine: need(side, "engine")?
+            .as_str()
+            .ok_or("`engine` is not a string")?
+            .to_string(),
+        workers: need_u64(side, "workers")? as usize,
+        shards: need_u64(side, "shards")? as usize,
+        mode,
+        basis: need(side, "basis")?
+            .as_str()
+            .ok_or("`basis` is not a string")?
+            .to_string(),
+        events,
+        edges,
+        epoch_marks,
+        dropped: need_u64(side, "dropped")?,
+    })
+}
+
+/// Structural validation that an exported document is
+/// Perfetto-loadable: parses as one JSON object, `traceEvents` is an
+/// array, and every entry has a `ph` plus the fields its phase
+/// requires. Returns the `traceEvents` count.
+pub fn validate_structure(text: &str) -> Result<usize, String> {
+    let doc = Json::parse(text)?;
+    let te = need(&doc, "traceEvents")?
+        .as_arr()
+        .ok_or("`traceEvents` is not an array")?;
+    for (i, ev) in te.iter().enumerate() {
+        let ph = ev
+            .get("ph")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| format!("traceEvents[{i}]: missing `ph`"))?;
+        let req: &[&str] = match ph {
+            "X" => &["pid", "tid", "ts", "dur", "name"],
+            "i" => &["pid", "tid", "ts", "name", "s"],
+            "s" | "f" => &["pid", "tid", "ts", "id", "name"],
+            "M" => &["pid", "name", "args"],
+            _ => return Err(format!("traceEvents[{i}]: unexpected phase `{ph}`")),
+        };
+        for key in req {
+            if ev.get(key).is_none() {
+                return Err(format!("traceEvents[{i}] (`{ph}`): missing `{key}`"));
+            }
+        }
+        if ph == "X" {
+            let dur = ev.get("dur").and_then(|d| d.as_f64()).unwrap_or(-1.0);
+            if dur < 0.0 {
+                return Err(format!("traceEvents[{i}]: negative duration"));
+            }
+        }
+    }
+    Ok(te.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_trace() -> Trace {
+        let events = vec![
+            Event {
+                lane: 0,
+                kind: EventKind::Spill,
+                task: 3,
+                block: 9,
+                shard: NONE_SHARD,
+                start_ns: 0,
+                dur_ns: 50,
+            },
+            Event {
+                lane: 1,
+                kind: EventKind::Exec,
+                task: 4,
+                block: 9,
+                shard: 1,
+                start_ns: 60,
+                dur_ns: 40,
+            },
+            Event {
+                lane: 1,
+                kind: EventKind::FenceWait,
+                task: 3,
+                block: NONE_ID,
+                shard: NONE_SHARD,
+                start_ns: 10,
+                dur_ns: 20,
+            },
+            Event {
+                lane: 2,
+                kind: EventKind::Rebalance,
+                task: 2,
+                block: NONE_ID,
+                shard: NONE_SHARD,
+                start_ns: 120,
+                dur_ns: 15,
+            },
+        ];
+        Trace {
+            engine: "sharded".to_string(),
+            workers: 2,
+            shards: 2,
+            mode: TraceMode::Full,
+            basis: "wall".to_string(),
+            edges: vec![Edge {
+                from: 0,
+                to: 1,
+                kind: EdgeKind::Footprint,
+            }],
+            epoch_marks: vec![EpochMark {
+                emitted: 5,
+                t_ns: 110,
+            }],
+            dropped: 7,
+            events,
+        }
+    }
+
+    #[test]
+    fn export_parse_round_trips_exactly() {
+        let trace = sample_trace();
+        let text = export(&trace);
+        let back = parse(&text).expect("parse back");
+        assert_eq!(back.engine, trace.engine);
+        assert_eq!(back.workers, trace.workers);
+        assert_eq!(back.shards, trace.shards);
+        assert_eq!(back.mode, trace.mode);
+        assert_eq!(back.basis, trace.basis);
+        assert_eq!(back.events, trace.events);
+        assert_eq!(back.edges, trace.edges);
+        assert_eq!(back.epoch_marks, trace.epoch_marks);
+        assert_eq!(back.dropped, trace.dropped);
+    }
+
+    #[test]
+    fn export_is_structurally_perfetto_loadable() {
+        let text = export(&sample_trace());
+        let n = validate_structure(&text).expect("structurally valid");
+        // 4 span events + 1 shard-lane duplicate + 1 epoch instant +
+        // 1 flow pair + metadata rows (1 process + 3 threads + 1 shard
+        // process + 2 shard threads).
+        assert_eq!(n, 4 + 1 + 1 + 2 + 7);
+    }
+
+    #[test]
+    fn spill_footprint_edges_become_flow_arrows() {
+        let text = export(&sample_trace());
+        let doc = Json::parse(&text).unwrap();
+        let te = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let flows: Vec<&str> = te
+            .iter()
+            .filter(|e| matches!(e.get("ph").and_then(|p| p.as_str()), Some("s" | "f")))
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(flows, vec!["footprint", "footprint"], "one s/f pair");
+    }
+
+    #[test]
+    fn parse_rejects_non_trace_documents() {
+        assert!(parse("{}").is_err());
+        assert!(parse("[1,2]").is_err());
+        assert!(parse("not json").is_err());
+        // Sidecar with a dangling edge index.
+        let bad = r#"{"traceEvents":[],"adapar":{"engine":"e","workers":1,"shards":0,
+            "mode":"spans","basis":"wall","dropped":0,"epoch_marks":[],
+            "events":[],"edges":[{"from":0,"to":1,"kind":"fence"}]}}"#;
+        assert!(parse(bad).is_err());
+    }
+
+    #[test]
+    fn timestamps_are_fractional_microseconds() {
+        let trace = sample_trace();
+        let text = export(&trace);
+        let doc = Json::parse(&text).unwrap();
+        let te = doc.get("traceEvents").unwrap().as_arr().unwrap();
+        let spill = te
+            .iter()
+            .find(|e| e.get("name").and_then(|n| n.as_str()) == Some("spill"))
+            .unwrap();
+        assert_eq!(spill.get("ts").unwrap().as_f64(), Some(0.0));
+        assert_eq!(spill.get("dur").unwrap().as_f64(), Some(0.05));
+    }
+}

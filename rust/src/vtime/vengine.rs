@@ -16,6 +16,7 @@ use crate::chaos::FaultHook;
 use crate::model::{Model, Record, TaskSource};
 use crate::protocol::{ProtocolStats, RunReport, TimeBasis, WorkerStats};
 use crate::sim::rng::TaskRng;
+use crate::trace::{TraceCore, TraceHandle, TraceMode, NONE_ID, NONE_SHARD};
 
 use super::cost::CostModel;
 
@@ -30,6 +31,10 @@ pub struct VirtualEngine {
     pub seed: u64,
     /// Micro-action costs.
     pub cost: CostModel,
+    /// Causal-tracing mode (inert). Virtual traces carry *virtual*
+    /// timestamps (the DES clocks), so `trace-analyze` attributes the
+    /// modelled schedule rather than host wall time.
+    pub trace: TraceMode,
 }
 
 // ---------------------------------------------------------------------------
@@ -117,6 +122,9 @@ struct Des<'m, M: Model> {
     cost: CostModel,
     seed: u64,
     cap: u32,
+    /// Per-worker trace lanes (empty when tracing is off); the DES is
+    /// single-threaded, so each lane trivially has one producer.
+    trace: Vec<TraceHandle<'m>>,
     nodes: Vec<VNode<M::Recipe>>,
     workers: Vec<VWorker<M::Record>>,
     heap: BinaryHeap<Ev>,
@@ -191,11 +199,16 @@ impl VirtualEngine {
             },
         };
 
+        let trc = TraceCore::start(self.trace, self.workers, "virtual", "virtual");
         let mut des = Des {
             model,
             cost: self.cost,
             seed: self.seed,
             cap: self.tasks_per_cycle,
+            trace: match &trc {
+                Some(c) => (0..self.workers).map(|w| c.handle(w)).collect(),
+                None => Vec::new(),
+            },
             nodes: Vec::with_capacity(64),
             workers: Vec::with_capacity(self.workers),
             heap: BinaryHeap::new(),
@@ -262,6 +275,12 @@ impl VirtualEngine {
             if let Some((probe, observer)) = obs.as_mut() {
                 observer.record(des.source.emitted(), probe());
             }
+            if let Some(c) = &trc {
+                // The epoch's quiescent point in virtual time is the
+                // latest worker clock.
+                let t = des.workers.iter().fold(0.0f64, |a, w| a.max(w.clock));
+                c.coordinator().epoch_mark_at(des.source.emitted(), t as u64);
+            }
             if des.source.finished() {
                 break;
             }
@@ -289,6 +308,9 @@ impl VirtualEngine {
             batch: 1,
             ..Default::default()
         };
+        // `des` holds `TraceHandle`s borrowing `trc`: end the borrow
+        // before `finish` consumes the core.
+        drop(des);
         RunReport {
             engine: "virtual",
             workers: self.workers,
@@ -302,6 +324,7 @@ impl VirtualEngine {
             per_worker,
             chain,
             sched: None,
+            trace: trc.map(TraceCore::finish),
         }
     }
 }
@@ -465,10 +488,16 @@ impl<'m, M: Model> Des<'m, M> {
                     let mut rng = TaskRng::for_task(self.seed, seq);
                     self.model.execute(&recipe, &mut rng);
                     let work = self.model.task_work(&recipe);
+                    let th = self.trace.get(wid).copied();
                     let w = &mut self.workers[wid];
                     w.clock += self.cost.exec_ns(work);
                     w.cycle_had_work = true;
                     w.phase = Phase::WantEraseSlot { node };
+                    if let Some(th) = th {
+                        // Span in virtual time: the modelled execution
+                        // occupies [claim clock, claim clock + exec cost).
+                        th.exec(seq, NONE_ID, NONE_SHARD, now as u64, w.clock as u64);
+                    }
                     self.push(wid);
                 }
             }
@@ -591,6 +620,7 @@ mod tests {
             tasks_per_cycle: 6,
             seed,
             cost: CostModel::default(),
+            trace: crate::trace::TraceMode::Off,
         }
     }
 
@@ -663,6 +693,7 @@ mod tests {
                 tasks_per_cycle: 6,
                 seed: 4,
                 cost: CostModel::ideal(1.0),
+                trace: crate::trace::TraceMode::Off,
             }
             .run(&m)
             .time_s

@@ -73,7 +73,7 @@ fn build_sir(seed: u64) -> Box<dyn DynModel> {
 fn oracle() -> Observations {
     let m = build_sir(SIM_SEED);
     let mut obs = Observer::new(15);
-    m.run_sequential(SIM_SEED, Some(&mut obs));
+    m.run_sequential(SIM_SEED, adapar::TraceMode::Off, Some(&mut obs));
     obs.finish().unwrap()
 }
 

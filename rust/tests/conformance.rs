@@ -200,6 +200,63 @@ fn telemetry_modes_are_invisible_in_every_trace() {
 }
 
 #[test]
+fn trace_modes_are_invisible_in_every_trace() {
+    // ISSUE 8's conformance axis: causal tracing must be semantically
+    // inert — the epoch observation trace is byte-identical with
+    // tracing off, spans-only, or full causal recording, on every chain
+    // engine × worker count. Only the report's `trace` timeline may
+    // differ. (`ADAPAR_TRACE_MODES` pins the axis for CI sharding.)
+    use adapar::model::testkit::env_trace_modes;
+    use adapar::TraceMode;
+    for name in ["voter", "sir"] {
+        let info = registry::info(name).unwrap();
+        let (agents, steps, size) = workload(&info);
+        let run = |engine: EngineKind, workers: usize, mode: TraceMode| {
+            Simulation::builder()
+                .model(info.name.clone())
+                .engine(engine)
+                .workers(workers)
+                .tasks_per_cycle(8)
+                .batch(8)
+                .agents(agents)
+                .steps(steps)
+                .size(size)
+                .seed(23)
+                .every(256)
+                .trace(mode)
+                .run()
+                .unwrap_or_else(|e| {
+                    panic!("{name}/{engine} n={workers} trace={}: {e}", mode.label())
+                })
+        };
+        let reference = run(EngineKind::Sequential, 1, TraceMode::Off).observable;
+        assert!(reference.len() > 1, "{name}: need a multi-frame trace");
+        for mode in env_trace_modes() {
+            for &engine in &[EngineKind::Sequential, EngineKind::Parallel, EngineKind::Sharded] {
+                if !info.supports(engine) {
+                    continue;
+                }
+                for &workers in &worker_counts() {
+                    let out = run(engine, workers, mode);
+                    assert_eq!(
+                        out.observable, reference,
+                        "{name} {engine} n={workers} trace={}: trace diverged",
+                        mode.label()
+                    );
+                    // The timeline itself appears exactly when asked for.
+                    assert_eq!(
+                        out.report.trace.is_some(),
+                        mode != TraceMode::Off,
+                        "{name} {engine} n={workers} trace={}",
+                        mode.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn runtime_registrations_enter_the_matrix() {
     // A model registered at runtime — sharding capability included —
     // must be covered by exactly the same machinery, proving the matrix

@@ -48,6 +48,7 @@ fn axelrod_all_engines_agree() {
                 tasks_per_cycle: 6,
                 seed,
                 cost: CostModel::default(),
+                trace: adapar::TraceMode::Off,
             }
             .run(&m);
             assert_eq!(m.snapshot(), reference, "virtual n={workers} seed={seed}");
@@ -76,6 +77,7 @@ fn sir_all_engines_agree_across_granularities() {
             tasks_per_cycle: 6,
             seed,
             cost: CostModel::default(),
+            trace: adapar::TraceMode::Off,
         }
         .run(&m);
         assert_eq!(m.snapshot(), reference, "virtual s={s}");

@@ -58,6 +58,7 @@ fn prop_virtual_equals_sequential() {
                 tasks_per_cycle: 6,
                 seed,
                 cost: CostModel::default(),
+                trace: adapar::TraceMode::Off,
             }
             .run(&m);
             m.cells_snapshot() == expected

@@ -272,10 +272,11 @@ fn boxed_engines_dispatch_uniformly() {
     // The object-safe Engine surface: one loop, four backends, one report
     // type.
     let tele = adapar::TelemetryMode::env_default();
+    let trc = adapar::TraceMode::Off;
     let engines: Vec<Box<dyn Engine>> = vec![
-        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 3, CostModel::default(), tele),
-        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 3, CostModel::default(), tele),
-        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 3, CostModel::default(), tele),
+        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 3, CostModel::default(), tele, trc),
+        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 3, CostModel::default(), tele, trc),
+        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 3, CostModel::default(), tele, trc),
     ];
     let model = registry_api::build(
         "voter",

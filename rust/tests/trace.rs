@@ -1,0 +1,235 @@
+//! Causal-trace invariants (ISSUE 8): real models, real engines, full
+//! tracing — asserting the structural contract the Perfetto exporter
+//! and the critical-path analyzer rely on:
+//!
+//! * per-lane spans form a laminar family (nest or are disjoint, never
+//!   partially overlap);
+//! * causal edges point strictly forward on the `(start_ns, index)`
+//!   order (hence acyclic) and fence edges respect fence discipline
+//!   (work span → later work span);
+//! * `T1` equals the sum of the work-span durations, `T∞ ≤ T1`, and the
+//!   sequential engine's total program order forces `T∞ == T1`;
+//! * the exported Perfetto JSON validates structurally and parses back
+//!   to the identical trace.
+
+use adapar::trace::{analyze, perfetto, EdgeKind, EventKind, Trace};
+use adapar::{EngineKind, Simulation, TraceMode};
+
+/// Traced run of a registered model through the facade.
+fn traced(model: &str, engine: EngineKind, workers: usize, mode: TraceMode) -> Trace {
+    let out = Simulation::builder()
+        .model(model)
+        .engine(engine)
+        .workers(workers)
+        .agents(150)
+        .steps(2_000)
+        .size(8)
+        .seed(41)
+        .trace(mode)
+        .run()
+        .unwrap_or_else(|e| panic!("{model}/{engine} n={workers}: {e:#}"));
+    out.report
+        .trace
+        .unwrap_or_else(|| panic!("{model}/{engine}: tracing on but no trace in the report"))
+}
+
+/// The engines a model supports, out of the ones this suite exercises.
+fn engines_for(model: &str) -> Vec<EngineKind> {
+    let info = adapar::api::registry::info(model).unwrap();
+    [EngineKind::Sequential, EngineKind::Parallel, EngineKind::Sharded]
+        .into_iter()
+        .filter(|&e| info.supports(e))
+        .collect()
+}
+
+/// Laminar check for one lane: sorted by `(start, -end)`, every span
+/// either starts at/after the enclosing span's end (disjoint) or ends
+/// at/before it (nested). A partial overlap is a recording bug.
+fn assert_lane_spans_laminar(trace: &Trace, lane: u32, ctx: &str) {
+    let mut spans: Vec<(u64, u64)> = trace
+        .events
+        .iter()
+        .filter(|e| e.lane == lane && e.kind.is_span())
+        .map(|e| (e.start_ns, e.end_ns()))
+        .collect();
+    spans.sort_by(|a, b| a.0.cmp(&b.0).then(b.1.cmp(&a.1)));
+    let mut open: Vec<(u64, u64)> = Vec::new();
+    for &(start, end) in &spans {
+        while matches!(open.last(), Some(&(_, oe)) if oe <= start) {
+            open.pop();
+        }
+        if let Some(&(os, oe)) = open.last() {
+            assert!(
+                end <= oe,
+                "{ctx} lane {lane}: span [{start}, {end}) partially overlaps [{os}, {oe})"
+            );
+        }
+        open.push((start, end));
+    }
+}
+
+#[test]
+fn spans_nest_and_never_overlap_per_worker() {
+    for model in ["voter", "sir"] {
+        for engine in engines_for(model) {
+            let trace = traced(model, engine, 2, TraceMode::Full);
+            assert!(!trace.events.is_empty(), "{model}/{engine}: empty trace");
+            for lane in 0..=trace.workers as u32 {
+                assert_lane_spans_laminar(&trace, lane, &format!("{model}/{engine}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn causal_edges_are_acyclic_and_respect_fence_discipline() {
+    for model in ["voter", "sir"] {
+        for engine in engines_for(model) {
+            let trace = traced(model, engine, 2, TraceMode::Full);
+            for edge in &trace.edges {
+                let from = &trace.events[edge.from];
+                let to = &trace.events[edge.to];
+                // Strictly forward on (start, index): the acyclicity
+                // invariant — any cycle would need a backward edge.
+                assert!(
+                    (from.start_ns, edge.from) < (to.start_ns, edge.to),
+                    "{model}/{engine}: backward edge {edge:?}"
+                );
+                // Every causal edge connects task work to task work.
+                assert!(
+                    from.kind.is_work() && to.kind.is_work(),
+                    "{model}/{engine}: edge on non-work spans {edge:?}"
+                );
+                if edge.kind == EdgeKind::Fence {
+                    // Fence discipline: the source is the fenced
+                    // boundary task's own span, released strictly
+                    // before the sink ran.
+                    assert_ne!(from.task, adapar::trace::NONE_ID, "{model}/{engine}");
+                }
+                if edge.kind == EdgeKind::Footprint {
+                    // Footprint edges follow canonical task order on a
+                    // shared block.
+                    assert_eq!(from.block, to.block, "{model}/{engine}: {edge:?}");
+                    assert!(from.task < to.task, "{model}/{engine}: {edge:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn t1_is_the_sum_of_work_spans_and_bounds_tinf() {
+    for model in ["voter", "sir"] {
+        for engine in engines_for(model) {
+            for workers in [1usize, 3] {
+                let trace = traced(model, engine, workers, TraceMode::Full);
+                let a = analyze::analyze(&trace);
+                let sum: u64 = trace
+                    .work_spans()
+                    .iter()
+                    .map(|&i| trace.events[i].dur_ns)
+                    .sum();
+                assert_eq!(a.t1_ns, sum, "{model}/{engine} n={workers}: T1 != Σ exec");
+                assert!(
+                    a.tinf_ns <= a.t1_ns,
+                    "{model}/{engine} n={workers}: T∞ {} > T1 {}",
+                    a.tinf_ns,
+                    a.t1_ns
+                );
+                // The attribution components always sum to the gap.
+                let parts: f64 = a.attribution.components().iter().map(|(_, v)| v).sum();
+                assert!(
+                    (parts - a.attribution.gap_ns).abs() < 1e-6 * a.attribution.gap_ns.max(1.0),
+                    "{model}/{engine} n={workers}: attribution {} != gap {}",
+                    parts,
+                    a.attribution.gap_ns
+                );
+                // Per-epoch bounds obey the same law.
+                for e in &a.epochs {
+                    assert!(e.tinf_ns <= a.t1_ns, "{model}/{engine}: epoch {e:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sequential_traces_have_t1_equal_tinf() {
+    for model in ["voter", "sir"] {
+        let trace = traced(model, EngineKind::Sequential, 1, TraceMode::Full);
+        // Program order chains every pair of consecutive work spans.
+        let order = trace
+            .edges
+            .iter()
+            .filter(|e| e.kind == EdgeKind::Order)
+            .count();
+        let work = trace.work_spans().len();
+        assert!(work > 0, "{model}: no work spans");
+        assert_eq!(order, work - 1, "{model}: broken program-order chain");
+        let a = analyze::analyze(&trace);
+        assert_eq!(
+            a.t1_ns, a.tinf_ns,
+            "{model}: a total order leaves no parallelism, T∞ must equal T1"
+        );
+        assert!((a.speedup_bound - 1.0).abs() < 1e-9, "{model}");
+    }
+}
+
+#[test]
+fn work_spans_match_executed_tasks_when_lossless() {
+    for model in ["voter", "sir"] {
+        for engine in engines_for(model) {
+            let out = Simulation::builder()
+                .model(model)
+                .engine(engine)
+                .workers(2)
+                .agents(150)
+                .steps(2_000)
+                .size(8)
+                .seed(41)
+                .trace(TraceMode::Spans)
+                .run()
+                .unwrap_or_else(|e| panic!("{model}/{engine}: {e:#}"));
+            let trace = out.report.trace.as_ref().unwrap();
+            if trace.dropped == 0 {
+                assert_eq!(
+                    trace.work_spans().len() as u64,
+                    out.report.totals.executed,
+                    "{model}/{engine}: one work span per executed task"
+                );
+            }
+            for i in trace.work_spans() {
+                let e = &trace.events[i];
+                assert!(matches!(e.kind, EventKind::Exec | EventKind::Spill));
+                assert_ne!(e.task, adapar::trace::NONE_ID, "{model}/{engine}");
+            }
+        }
+    }
+}
+
+#[test]
+fn perfetto_export_validates_and_round_trips() {
+    for model in ["voter"] {
+        for engine in engines_for(model) {
+            let trace = traced(model, engine, 2, TraceMode::Full);
+            let text = perfetto::export(&trace);
+            let n = perfetto::validate_structure(&text)
+                .unwrap_or_else(|e| panic!("{model}/{engine}: invalid Perfetto JSON: {e}"));
+            assert!(n > 0, "{model}/{engine}: empty traceEvents");
+            let back = perfetto::parse(&text)
+                .unwrap_or_else(|e| panic!("{model}/{engine}: round-trip parse: {e}"));
+            assert_eq!(back.engine, trace.engine, "{model}/{engine}");
+            assert_eq!(back.workers, trace.workers, "{model}/{engine}");
+            assert_eq!(back.mode, trace.mode, "{model}/{engine}");
+            assert_eq!(back.basis, trace.basis, "{model}/{engine}");
+            assert_eq!(back.events, trace.events, "{model}/{engine}");
+            assert_eq!(back.edges, trace.edges, "{model}/{engine}");
+            assert_eq!(back.epoch_marks, trace.epoch_marks, "{model}/{engine}");
+            assert_eq!(back.dropped, trace.dropped, "{model}/{engine}");
+            // The analyzer sees the identical critical path either way.
+            let (a, b) = (analyze::analyze(&trace), analyze::analyze(&back));
+            assert_eq!(a.t1_ns, b.t1_ns, "{model}/{engine}");
+            assert_eq!(a.tinf_ns, b.tinf_ns, "{model}/{engine}");
+        }
+    }
+}

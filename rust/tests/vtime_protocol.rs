@@ -14,6 +14,7 @@ fn engine(workers: usize, seed: u64) -> VirtualEngine {
         tasks_per_cycle: 6,
         seed,
         cost: CostModel::default(),
+        trace: adapar::TraceMode::Off,
     }
 }
 
