@@ -14,7 +14,10 @@
 //!
 //! Emits `BENCH_chain.json` into the invocation directory (repo root
 //! under `cargo bench`), where per-PR perf tracking — and the CI
-//! artifact upload — pick `BENCH_*.json` files up.
+//! artifact upload — pick `BENCH_*.json` files up. A fourth section
+//! compares the bit-packed SoA state layout against the legacy AoS
+//! buffers on the three migrated models (SIR, voter, Ising) and emits
+//! it as a separate `BENCH_soa.json` artifact.
 //!
 //! Acceptance:
 //! * **hard, deterministic**: at `B = 64` every configuration takes ≥10×
@@ -294,6 +297,112 @@ fn main() -> adapar::Result<()> {
         })
         .collect();
 
+    // SoA layout section (ISSUE 9): the bit-packed state layer vs the
+    // legacy AoS buffers on the three migrated models, emitted as its
+    // own `BENCH_soa.json` artifact (the CI `BENCH_*.json` glob picks it
+    // up). `bytes_per_task` is structural — derived from the model's
+    // per-task state estimate, never from the clock — so "packed moves
+    // fewer bytes than legacy" is a hard deterministic gate, as is
+    // observable equality across layouts. Throughput (and, with
+    // `bench-alloc`, allocation traffic) rides along lenient-gated like
+    // every wall-clock number.
+    let soa_workloads: [(&str, usize, u64, usize); 3] = [
+        ("sir", 2_000, 500, 100),
+        ("voter", 2_000, 20_000, 1),
+        ("ising", 4_096, 20_000, 1),
+    ];
+    let mut soa_rows = Vec::new();
+    let mut soa_bytes_ok = true;
+    let mut soa_tps_ok = true;
+    for &(model, agents, steps, size) in &soa_workloads {
+        let run = |layout: adapar::Layout| -> adapar::Result<_> {
+            #[cfg(feature = "bench-alloc")]
+            let before = adapar::util::alloc::snapshot();
+            let out = Simulation::builder()
+                .model(model)
+                .engine(EngineKind::Parallel)
+                .workers(4)
+                .tasks_per_cycle(64)
+                .batch(64)
+                .agents(agents)
+                .steps(steps)
+                .size(size)
+                .seed(7)
+                .layout(layout)
+                .run()?;
+            #[cfg(feature = "bench-alloc")]
+            let alloc_bytes = Some(adapar::util::alloc::since(before).bytes);
+            #[cfg(not(feature = "bench-alloc"))]
+            let alloc_bytes: Option<u64> = None;
+            Ok((out, alloc_bytes))
+        };
+        let (legacy, legacy_alloc) = run(adapar::Layout::Legacy)?;
+        let (packed, packed_alloc) = run(adapar::Layout::Packed)?;
+        adapar::ensure!(
+            legacy.observable == packed.observable,
+            "{model}: packed layout diverged from the legacy observables"
+        );
+        let tps = |o: &adapar::SimOutcome| -> f64 {
+            o.report.chain.tasks_executed as f64 / o.report.time_s.max(1e-12)
+        };
+        let legacy_bpt = legacy.report.chain.bytes_per_task();
+        let packed_bpt = packed.report.chain.bytes_per_task();
+        let legacy_tps = tps(&legacy);
+        let packed_tps = tps(&packed);
+        let tps_ratio = packed_tps / legacy_tps.max(1e-12);
+        if packed_bpt >= legacy_bpt {
+            soa_bytes_ok = false;
+        }
+        if tps_ratio < 0.8 {
+            soa_tps_ok = false;
+        }
+        eprintln!(
+            "soa      {model:<8} n=4 B=64: bytes/task {legacy_bpt:.2} -> {packed_bpt:.2} \
+             ({:.1}x), tasks/s {legacy_tps:>9.0} -> {packed_tps:>9.0} ({:.0}%)",
+            legacy_bpt / packed_bpt.max(1e-12),
+            tps_ratio * 100.0
+        );
+        let opt = |v: Option<u64>| v.map_or(Json::Null, Json::from);
+        soa_rows.push(Json::Obj(vec![
+            ("model".into(), Json::from(model)),
+            ("workers".into(), Json::from(4usize)),
+            ("agents".into(), Json::from(agents)),
+            ("steps".into(), Json::from(steps)),
+            ("legacy_bytes_per_task".into(), Json::from(legacy_bpt)),
+            ("packed_bytes_per_task".into(), Json::from(packed_bpt)),
+            (
+                "bytes_reduction".into(),
+                Json::from(legacy_bpt / packed_bpt.max(1e-12)),
+            ),
+            ("legacy_tasks_per_s".into(), Json::from(legacy_tps)),
+            ("packed_tasks_per_s".into(), Json::from(packed_tps)),
+            ("throughput_ratio".into(), Json::from(tps_ratio)),
+            ("legacy_alloc_bytes".into(), opt(legacy_alloc)),
+            ("packed_alloc_bytes".into(), opt(packed_alloc)),
+        ]));
+    }
+    let soa_json = Json::Obj(vec![
+        ("bench".into(), Json::from("soa")),
+        ("layouts".into(), Json::Arr(soa_rows)),
+        (
+            "acceptance".into(),
+            Json::Obj(vec![
+                (
+                    "packed_bytes_per_task_below_legacy".into(),
+                    Json::from(soa_bytes_ok),
+                ),
+                (
+                    "packed_throughput_within_20pct".into(),
+                    Json::from(soa_tps_ok),
+                ),
+                ("pass".into(), Json::from(soa_bytes_ok && soa_tps_ok)),
+            ]),
+        ),
+    ]);
+    let soa_path = std::path::Path::new("BENCH_soa.json");
+    std::fs::write(soa_path, soa_json.render())?;
+    eprintln!("wrote {}", soa_path.display());
+
     let alloc_pass = bytes_per_task_n1.map(|b| b < 16.0);
     let json = Json::Obj(vec![
         ("bench".into(), Json::from("chain")),
@@ -367,6 +476,23 @@ fn main() -> adapar::Result<()> {
             trace_ratio * 100.0
         );
         eprintln!("bench_chain: trace overhead MISS tolerated (lenient mode)");
+    }
+    // The packed layout must move fewer state bytes per task than
+    // legacy on every migrated model. `bytes_per_task` is structural,
+    // so this gate is hard even in CI's lenient mode.
+    adapar::ensure!(
+        soa_bytes_ok,
+        "packed layout failed to reduce bytes/task below legacy"
+    );
+    // Packed throughput is wall-clock-bound: lenient mode records the
+    // verdict (in BENCH_soa.json) instead of failing the job.
+    if !soa_tps_ok {
+        let lenient = std::env::var("ADAPAR_BENCH_LENIENT").is_ok_and(|v| v == "1");
+        adapar::ensure!(
+            lenient,
+            "packed layout lost >20% tasks/s vs legacy on a migrated model"
+        );
+        eprintln!("bench_chain: soa throughput MISS tolerated (lenient mode)");
     }
     eprintln!("bench_chain: acceptance PASS");
     Ok(())

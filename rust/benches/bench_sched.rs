@@ -155,6 +155,12 @@ impl Model for RingBlockModel {
     fn task_work(&self, r: &BlockTask) -> f64 {
         1.0 + self.work[r.block as usize] as f64
     }
+
+    fn state_bytes_per_task(&self) -> f64 {
+        // Each task reads its ±1 ring neighbourhood and writes its own
+        // block: three u64 cells.
+        3.0 * 8.0
+    }
 }
 
 impl ShardableModel for RingBlockModel {
@@ -459,14 +465,15 @@ fn main() -> adapar::Result<()> {
         let sched = report.sched.expect("sharded runs report telemetry");
         eprintln!(
             "structural workload={:<7}: local={} boundary={} edge_cut={} migrations={} \
-             tail_locks={} arena_high_water={}",
+             tail_locks={} arena_high_water={} bytes/task={:.1}",
             if skewed { "skewed" } else { "uniform" },
             sched.local_tasks,
             sched.boundary_tasks,
             sched.edge_cut,
             sched.migrations,
             report.chain.tail_locks,
-            report.chain.arena_high_water
+            report.chain.arena_high_water,
+            report.chain.bytes_per_task()
         );
         structural.push(Json::Obj(vec![
             (
@@ -485,6 +492,10 @@ fn main() -> adapar::Result<()> {
                 Json::from(report.chain.arena_high_water),
             ),
             ("arena_occupancy".into(), Json::from(sched.arena_occupancy)),
+            (
+                "bytes_per_task".into(),
+                Json::from(report.chain.bytes_per_task()),
+            ),
         ]));
     }
 

@@ -249,6 +249,9 @@ pub struct BuildCtx {
     pub steps: u64,
     /// Simulation seed (factories derive their init streams from it).
     pub seed: u64,
+    /// Agent-state storage layout (semantically inert; DESIGN.md §13).
+    /// Factories of packed-capable models must pass this through.
+    pub layout: crate::sim::soa::Layout,
     /// Model-specific knobs.
     pub params: Params,
 }
@@ -466,7 +469,7 @@ mod bundled {
                     .params
                     .f64_or("initial_infected", SirParams::default().initial_infected)?,
             };
-            let model = SirModel::new(params, ctx.seed ^ 0x51);
+            let model = SirModel::with_layout(params, ctx.seed ^ 0x51, ctx.layout);
             Ok(Runnable::new("sir", model)
                 .observable()
                 .with_sync()
@@ -485,13 +488,14 @@ mod bundled {
         r.register(info, |ctx| {
             let degree = ctx.params.usize_or("degree", 6)?;
             let opinions = ctx.params.usize_or("opinions", 3)? as u8;
-            let model = VoterModel::new(
+            let model = VoterModel::with_layout(
                 ring_lattice(ctx.agents, degree),
                 VoterParams {
                     opinions,
                     steps: ctx.steps,
                 },
                 ctx.seed ^ 0x70,
+                ctx.layout,
             );
             Ok(Runnable::new("voter", model)
                 .observable()
@@ -514,7 +518,7 @@ mod bundled {
                 temperature: ctx.params.f64_or("temperature", 2.269)?,
                 steps: ctx.steps,
             };
-            let model = IsingModel::new(params, ctx.seed ^ 0x15);
+            let model = IsingModel::with_layout(params, ctx.seed ^ 0x15, ctx.layout);
             Ok(Runnable::new("ising", model)
                 .observable()
                 .with_sharding()
@@ -636,6 +640,7 @@ mod tests {
                     agents: 50,
                     steps: 10,
                     seed: 1,
+                    layout: Default::default(),
                     params,
                 },
             )

@@ -33,6 +33,7 @@ use crate::api::observe::{Observations, ObservePlan, Observer};
 use crate::api::registry::{self, BuildCtx, Params};
 use crate::error::Result;
 use crate::protocol::{ProtocolConfig, RunReport};
+use crate::sim::soa::Layout;
 use crate::telemetry::TelemetryMode;
 use crate::trace::TraceMode;
 use crate::util::toml::Value;
@@ -88,6 +89,9 @@ pub struct Simulation {
     /// Causal-tracing mode (semantically inert; defaults from
     /// `ADAPAR_TRACE`).
     pub trace: TraceMode,
+    /// Agent-state storage layout (semantically inert; defaults from
+    /// `ADAPAR_LAYOUT`, see DESIGN.md §13).
+    pub layout: Layout,
 }
 
 impl Default for Simulation {
@@ -108,6 +112,7 @@ impl Default for Simulation {
             observe: ObservePlan::default(),
             telemetry: TelemetryMode::env_default(),
             trace: TraceMode::env_default(),
+            layout: Layout::env_default(),
         }
     }
 }
@@ -141,6 +146,7 @@ impl Simulation {
                 info.steps_for(self.paper_scale)
             },
             seed: self.seed,
+            layout: self.layout,
             params: self.params.clone(),
         };
         crate::ensure!(self.workers >= 1, "workers must be >= 1");
@@ -296,6 +302,13 @@ impl SimulationBuilder {
     /// only the report's `trace` timeline changes).
     pub fn trace(mut self, mode: TraceMode) -> Self {
         self.sim.trace = mode;
+        self
+    }
+
+    /// Agent-state storage layout (inert — every layout yields identical
+    /// results; only memory traffic and `chain.bytes_per_task` change).
+    pub fn layout(mut self, layout: Layout) -> Self {
+        self.sim.layout = layout;
         self
     }
 

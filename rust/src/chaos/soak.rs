@@ -176,6 +176,7 @@ fn build(name: &str, wl: &Workload, seed: u64) -> Result<Box<dyn DynModel>> {
             agents: wl.agents,
             steps: wl.steps,
             seed,
+            layout: crate::sim::soa::Layout::env_default(),
             params: Default::default(),
         },
     )

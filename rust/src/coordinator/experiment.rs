@@ -75,6 +75,7 @@ pub fn sweep_cost_model(cfg: &SweepConfig) -> Result<CostModel> {
             agents: cfg.effective_agents(),
             steps: cfg.effective_steps(),
             seed: 0,
+            layout: crate::sim::soa::Layout::env_default(),
             params: cfg.params.clone(),
         },
     )?;

@@ -60,6 +60,7 @@ fn chain_metrics(report: &RunReport) -> Vec<(String, f64)> {
             report.chain.arena_high_water as f64,
         ),
         ("arena_recycled".into(), report.chain.arena_recycled as f64),
+        ("bytes_per_task".into(), report.chain.bytes_per_task()),
         ("wall_s".into(), report.time_s),
     ]
 }
@@ -79,6 +80,7 @@ fn sched_metrics(report: &RunReport) -> Vec<(String, f64)> {
             "arena_high_water".into(),
             report.chain.arena_high_water as f64,
         ),
+        ("bytes_per_task".into(), report.chain.bytes_per_task()),
         ("wall_s".into(), report.time_s),
     ]
 }
@@ -87,6 +89,9 @@ fn sched_metrics(report: &RunReport) -> Vec<(String, f64)> {
 /// single-worker and seeded, so the structural metrics are deterministic
 /// on any host; only `wall_s` varies run to run.
 pub fn collect() -> Result<Vec<BenchMetrics>> {
+    // The layout is pinned (never read from `ADAPAR_LAYOUT`) so the
+    // ledger's structural metrics — `bytes_per_task` in particular —
+    // stay reproducible regardless of the environment.
     let chain = |model: &str, agents: usize, steps: u64, size: usize, seed: u64| {
         Simulation::builder()
             .model(model)
@@ -97,6 +102,7 @@ pub fn collect() -> Result<Vec<BenchMetrics>> {
             .steps(steps)
             .size(size)
             .seed(seed)
+            .layout(crate::sim::soa::Layout::Packed)
             .run()
     };
     let voter = chain("voter", 240, 4_000, 0, 7)?;
@@ -109,6 +115,7 @@ pub fn collect() -> Result<Vec<BenchMetrics>> {
         .agents(240)
         .steps(4_000)
         .seed(7)
+        .layout(crate::sim::soa::Layout::Packed)
         .run()?;
     Ok(vec![
         BenchMetrics {

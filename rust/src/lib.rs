@@ -25,7 +25,9 @@
 //!   disease spreading (§4.2), plus voter and Ising models exercising the
 //!   same interface.
 //! * [`sim`] — simulation substrates: deterministic RNG streams, CSR
-//!   graphs + generators + partitions + aggregate graphs, shared state.
+//!   graphs + generators + partitions + aggregate graphs, shared state,
+//!   and the bit-packed SoA state layer with locality relabeling
+//!   ([`sim::soa`], DESIGN.md §13).
 //! * [`vtime`] — the virtual-core testbed: a deterministic discrete-event
 //!   simulation of the protocol with a calibrated cost model (reproduces
 //!   the paper's multi-core figures on a single-core host).
@@ -96,6 +98,7 @@ pub use api::{
 };
 pub use error::{Context, Error};
 pub use sched::{PartitionHint, PartitionPolicy, ShardableModel, ShardedConfig, ShardedEngine};
+pub use sim::soa::{Layout, PackedStates, Relabeling};
 pub use telemetry::{MetricsRegistry, TelemetryMode, TelemetrySnapshot};
 pub use trace::{Trace, TraceCore, TraceHandle, TraceMode};
 

@@ -150,6 +150,16 @@ pub trait Model: Send + Sync + 'static {
     fn task_work(&self, _recipe: &Self::Recipe) -> f64 {
         1.0
     }
+
+    /// Average agent-*state* bytes one task reads + writes under the
+    /// model's current storage layout (DESIGN.md §13). Structural — a
+    /// fixed property of (layout, parameters), never measured on the hot
+    /// path — and feeds the `chain.bytes_per_task` instrument and the
+    /// packed-vs-legacy bench gate. The default (0) opts a model out of
+    /// the byte accounting.
+    fn state_bytes_per_task(&self) -> f64 {
+        0.0
+    }
 }
 
 #[cfg(test)]

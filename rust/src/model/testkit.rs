@@ -81,6 +81,29 @@ pub fn env_trace_modes() -> Vec<crate::trace::TraceMode> {
     }
 }
 
+/// State layouts for the conformance matrix: all three (legacy AoS,
+/// bit-packed SoA with locality relabeling, bit-packed linear), or the
+/// layouts pinned by `ADAPAR_LAYOUTS` (comma list — the CI matrix jobs
+/// set it so each runner covers a subset). The layout is semantically
+/// inert storage, so every layout must leave every observation trace
+/// byte-identical — this axis is the test of that claim. Shared by
+/// `rust/tests/conformance.rs` and `rust/tests/soa.rs`.
+pub fn env_layouts() -> Vec<crate::sim::soa::Layout> {
+    use crate::sim::soa::Layout;
+    match std::env::var("ADAPAR_LAYOUTS") {
+        Ok(v) => v
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .expect("ADAPAR_LAYOUTS must list legacy|packed|packed-linear")
+            })
+            .collect(),
+        Err(_) => Layout::ALL.to_vec(),
+    }
+}
+
 /// Seed count for soak sweeps: the full-depth default, or the count
 /// pinned by `ADAPAR_SOAK_SEEDS` (PR-gate CI sets a small value so the
 /// chaos sweep stays fast; the nightly soak job leaves it unset and

@@ -377,6 +377,13 @@ impl Model for AxelrodModel {
         // Execution cost is dominated by the O(F) feature scan.
         self.params.features as f64
     }
+
+    /// AoS estimate (the model keeps byte traits, DESIGN.md §13): an
+    /// interaction reads both agents' F-byte trait rows and writes at
+    /// most one trait.
+    fn state_bytes_per_task(&self) -> f64 {
+        2.0 * self.params.features as f64 + 1.0
+    }
 }
 
 #[cfg(test)]

@@ -15,10 +15,17 @@
 use std::sync::Arc;
 
 use crate::model::{Model, Record, TaskSource};
-use crate::sim::graph::{lattice2d, Csr};
+use crate::sim::graph::{grid_partition, lattice2d, Csr};
 use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::soa::{Layout, PackedStates, Relabeling};
 use crate::sim::state::SharedSim;
 use crate::util::u32set::U32Set;
+
+/// Packed spin encoding: bit 1 ⇔ spin +1, bit 0 ⇔ spin −1.
+#[inline]
+fn spin_of(bit: u8) -> i32 {
+    bit as i32 * 2 - 1
+}
 
 /// Parameters.
 #[derive(Clone, Copy, Debug)]
@@ -41,44 +48,89 @@ impl Default for IsingParams {
     }
 }
 
+/// Storage backend for the spin array, selected by [`Layout`].
+enum SpinStore {
+    /// Spins stored as ±1 (i8).
+    Legacy(SharedSim<Vec<i8>>),
+    /// 1-bit lanes ([`spin_of`] encoding); under [`Layout::Packed`]
+    /// agent slots follow the torus tiling so grid shards are contiguous.
+    Packed(PackedStates),
+}
+
 /// The pluggable model.
 pub struct IsingModel {
     /// Parameters.
     pub params: IsingParams,
     graph: Arc<Csr>,
-    /// Spins stored as ±1 (i8).
-    spins: SharedSim<Vec<i8>>,
+    store: SpinStore,
+    layout: Layout,
 }
 
 impl IsingModel {
-    /// Build with uniform random spins.
+    /// Build with uniform random spins under the ambient default layout
+    /// ([`Layout::env_default`]).
     pub fn new(params: IsingParams, init_seed: u64) -> Self {
+        Self::with_layout(params, init_seed, Layout::env_default())
+    }
+
+    /// Build with an explicit storage layout. Spins are drawn in logical
+    /// site order regardless of layout, and the packed arithmetic decodes
+    /// to the same ±1 integers, so all layouts run byte-identically.
+    pub fn with_layout(params: IsingParams, init_seed: u64, layout: Layout) -> Self {
         let graph = lattice2d(params.side);
         let mut rng = Rng::stream(init_seed, 0x1516);
-        let spins = (0..graph.n())
+        let spins: Vec<i8> = (0..graph.n())
             .map(|_| if rng.bernoulli(0.5) { 1i8 } else { -1i8 })
             .collect();
+        let store = match layout {
+            Layout::Legacy => SpinStore::Legacy(SharedSim::new(spins)),
+            Layout::Packed | Layout::PackedLinear => {
+                let n = graph.n();
+                let order = if layout == Layout::Packed {
+                    // Tile the torus so each ~64-site tile packs into a
+                    // word of 1-bit lanes.
+                    let tiles = (n / 64).clamp(1, n.max(1));
+                    Relabeling::from_partition(&grid_partition(params.side, params.side, tiles))
+                } else {
+                    Relabeling::identity(n)
+                };
+                let ps = PackedStates::new(1, &order);
+                for (i, &s) in spins.iter().enumerate() {
+                    ps.set(i, u8::from(s > 0));
+                }
+                SpinStore::Packed(ps)
+            }
+        };
         Self {
             params,
             graph: Arc::new(graph),
-            spins: SharedSim::new(spins),
+            store,
+            layout,
         }
+    }
+
+    /// The active storage layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
     }
 
     /// Snapshot (quiescent use).
     pub fn snapshot(&self) -> Vec<i8> {
-        unsafe { self.spins.get() }.clone()
+        match &self.store {
+            SpinStore::Legacy(st) => unsafe { st.get() }.clone(),
+            SpinStore::Packed(ps) => (0..ps.len()).map(|i| spin_of(ps.get(i)) as i8).collect(),
+        }
     }
 
     /// Magnetization per site, in [-1, 1].
     pub fn magnetization(&self) -> f64 {
-        let spins = unsafe { self.spins.get() };
+        let spins = self.snapshot();
         spins.iter().map(|&s| s as i64).sum::<i64>() as f64 / spins.len() as f64
     }
 
     /// Energy per site (J = 1).
     pub fn energy(&self) -> f64 {
-        let spins = unsafe { self.spins.get() };
+        let spins = self.snapshot();
         let mut e = 0i64;
         for (v, nbrs) in self.graph.iter() {
             for &u in nbrs {
@@ -217,28 +269,61 @@ impl Model for IsingModel {
     }
 
     fn execute(&self, r: &FlipAttempt, rng: &mut TaskRng) {
-        // SAFETY: record discipline — writes {site}, reads {site} ∪ N(site),
-        // disjoint from every concurrently-executing task's footprint
-        // (DESIGN.md §6).
-        let spins = unsafe { self.spins.get_mut() };
         let i = r.site as usize;
-        let field: i32 = self
-            .graph
-            .neighbors(i)
-            .iter()
-            .map(|&nb| spins[nb as usize] as i32)
-            .sum();
-        let delta_e = 2.0 * spins[i] as f64 * field as f64;
+        // Both stores decode to the same ±1 integers before any floating-
+        // point op, so `delta_e` (and therefore the accept decision and
+        // the RNG stream consumption) is layout-independent.
+        let (si, field): (i32, i32) = match &self.store {
+            SpinStore::Legacy(st) => {
+                // SAFETY: record discipline — writes {site}, reads
+                // {site} ∪ N(site), disjoint from every concurrently-
+                // executing task's footprint (DESIGN.md §6).
+                let spins = unsafe { st.get_mut() };
+                (
+                    spins[i] as i32,
+                    self.graph
+                        .neighbors(i)
+                        .iter()
+                        .map(|&nb| spins[nb as usize] as i32)
+                        .sum(),
+                )
+            }
+            SpinStore::Packed(ps) => (
+                spin_of(ps.get(i)),
+                self.graph
+                    .neighbors(i)
+                    .iter()
+                    .map(|&nb| spin_of(ps.get(nb as usize)))
+                    .sum(),
+            ),
+        };
+        let delta_e = 2.0 * si as f64 * field as f64;
         // Heat-bath acceptance; one uniform per attempt keeps the stream
         // schedule-independent.
         let accept = rng.unit_f64() < 1.0 / (1.0 + (delta_e / self.params.temperature).exp());
         if accept {
-            spins[i] = -spins[i];
+            match &self.store {
+                SpinStore::Legacy(st) => {
+                    // SAFETY: as above.
+                    let spins = unsafe { st.get_mut() };
+                    spins[i] = -spins[i];
+                }
+                SpinStore::Packed(ps) => ps.set(i, ps.get(i) ^ 1),
+            }
         }
     }
 
     fn task_work(&self, r: &FlipAttempt) -> f64 {
         1.0 + self.graph.degree(r.site as usize) as f64
+    }
+
+    /// A flip reads 5 lanes (site + 4 neighbours) and writes 1.
+    fn state_bytes_per_task(&self) -> f64 {
+        let lane_bytes = match &self.store {
+            SpinStore::Legacy(_) => 1.0,
+            SpinStore::Packed(ps) => ps.bytes_per_lane(),
+        };
+        6.0 * lane_bytes
     }
 }
 
@@ -321,6 +406,30 @@ mod tests {
             assert_eq!(sched.partition, "grid", "grid hint must reach the engine");
             assert_eq!(sched.local_tasks + sched.boundary_tasks, 12_000);
         }
+    }
+
+    #[test]
+    fn every_layout_is_byte_identical() {
+        let seed = 29;
+        let reference = {
+            let m = IsingModel::with_layout(small(8_000), 4, Layout::Legacy);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for layout in Layout::ALL {
+            let m = IsingModel::with_layout(small(8_000), 4, layout);
+            SequentialEngine::new(seed).run(&m);
+            assert_eq!(m.snapshot(), reference, "{layout} diverged from legacy");
+        }
+    }
+
+    #[test]
+    fn packed_layout_shrinks_bytes_per_task() {
+        // 1-bit spins: 8× smaller than the i8 per lane.
+        let legacy = IsingModel::with_layout(small(10), 0, Layout::Legacy);
+        let packed = IsingModel::with_layout(small(10), 0, Layout::Packed);
+        assert_eq!(legacy.state_bytes_per_task(), 6.0);
+        assert_eq!(packed.state_bytes_per_task(), 0.75);
     }
 
     #[test]

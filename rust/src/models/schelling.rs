@@ -395,6 +395,13 @@ impl Model for SchellingModel {
         // Two 3×3 neighbourhood scans.
         18.0
     }
+
+    /// AoS estimate (the model keeps its u32 grid/pos vecs, DESIGN.md
+    /// §13): two 3×3 scans of 4-byte grid cells, one kind-byte read, and
+    /// on a move two grid-cell writes plus the 4-byte position update.
+    fn state_bytes_per_task(&self) -> f64 {
+        18.0 * 4.0 + 1.0 + 2.0 * 4.0 + 4.0
+    }
 }
 
 #[cfg(test)]

@@ -33,8 +33,12 @@ use crate::model::{Model, Record, TaskSource};
 use crate::protocol::SyncModel;
 use crate::sim::graph::{aggregate_graph, contiguous_partition, ring_lattice, Csr, Partition};
 use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::soa::{Layout, PackedStates, Relabeling};
 use crate::sim::state::SharedSim;
 use crate::util::bitset::BitSet;
+
+/// SIR health occupies 2 bits per agent when packed (3 states).
+const SIR_BITS: u32 = 2;
 
 /// Agent epidemic state.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -110,12 +114,24 @@ impl SirParams {
     }
 }
 
-/// Double-buffered epidemic state.
+/// Double-buffered epidemic state (legacy AoS layout).
 pub struct SirState {
     /// Current states (read by compute, written by swap).
     pub cur: Vec<u8>,
     /// Next states (written by compute, read by swap).
     pub new: Vec<u8>,
+}
+
+/// Storage backend for the double buffer, selected by [`Layout`].
+enum SirStore {
+    /// One byte per agent in two plain vectors.
+    Legacy(SharedSim<SirState>),
+    /// 2-bit lanes; under [`Layout::Packed`] the buffers are word-aligned
+    /// per block so swap publishes whole words.
+    Packed {
+        cur: PackedStates,
+        new: PackedStates,
+    },
 }
 
 /// The pluggable model.
@@ -130,17 +146,26 @@ pub struct SirModel {
     /// Per-block dependence mask: `{b} ∪ neighbours(b)` in the aggregate
     /// graph. Shared with every worker record.
     masks: std::sync::Arc<Vec<BitSet>>,
-    state: SharedSim<SirState>,
+    store: SirStore,
+    layout: Layout,
     /// Time spent building the aggregate graph (part of measured T per the
     /// paper; reported so benches can add it).
     pub setup_cost: std::time::Duration,
 }
 
 impl SirModel {
+    /// Build the model with the ambient default layout
+    /// ([`Layout::env_default`]).
+    pub fn new(params: SirParams, init_seed: u64) -> Self {
+        Self::with_layout(params, init_seed, Layout::env_default())
+    }
+
     /// Build the model: graph, initial state (untimed, from `init_seed`),
     /// partition and aggregate graph (timed — the paper includes this in
-    /// `T`).
-    pub fn new(params: SirParams, init_seed: u64) -> Self {
+    /// `T`). The layout selects the state store; the initial-state RNG
+    /// stream and every logical id are layout-independent, so all layouts
+    /// start (and stay) byte-identical.
+    pub fn with_layout(params: SirParams, init_seed: u64, layout: Layout) -> Self {
         let graph = ring_lattice(params.agents, params.degree);
         let mut rng = Rng::stream(init_seed, 0x51A);
         let cur: Vec<u8> = (0..params.agents)
@@ -155,6 +180,21 @@ impl SirModel {
 
         let t0 = std::time::Instant::now();
         let partition = contiguous_partition(params.agents, params.subset_size);
+        // Ragged-tail hardening: the partition, the parameter-level block
+        // count, and the per-block member lists must tell one story even
+        // when `subset_size` does not divide `agents`.
+        assert_eq!(
+            partition.blocks(),
+            params.blocks(),
+            "partition disagrees with SirParams::blocks() at agents={} s={}",
+            params.agents,
+            params.subset_size
+        );
+        assert_eq!(
+            (0..partition.blocks()).map(|b| partition.members(b).len()).sum::<usize>(),
+            params.agents,
+            "partition must cover every agent exactly once"
+        );
         let agg = aggregate_graph(&graph, &partition);
         let blocks = partition.blocks();
         let mut masks = Vec::with_capacity(blocks);
@@ -168,16 +208,42 @@ impl SirModel {
         }
         let setup_cost = t0.elapsed();
 
-        let new = cur.clone();
+        let store = match layout {
+            Layout::Legacy => {
+                let new = cur.clone();
+                SirStore::Legacy(SharedSim::new(SirState { cur, new }))
+            }
+            Layout::Packed | Layout::PackedLinear => {
+                // The contiguous partition makes block-by-block slot
+                // assignment the identity, so Packed's only physical
+                // difference from PackedLinear is word alignment of
+                // blocks (and the whole-word swap it enables).
+                let pc = match layout {
+                    Layout::Packed => PackedStates::block_aligned(SIR_BITS, &partition),
+                    _ => PackedStates::new(SIR_BITS, &Relabeling::identity(params.agents)),
+                };
+                for (i, &v) in cur.iter().enumerate() {
+                    pc.set(i, v);
+                }
+                let pn = pc.duplicate();
+                SirStore::Packed { cur: pc, new: pn }
+            }
+        };
         Self {
             params,
             graph,
             partition,
             aggregate: agg,
             masks: std::sync::Arc::new(masks),
-            state: SharedSim::new(SirState { cur, new }),
+            store,
+            layout,
             setup_cost,
         }
+    }
+
+    /// The active storage layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
     }
 
     /// Number of subsets.
@@ -197,51 +263,69 @@ impl SirModel {
 
     /// Snapshot of current states (quiescent use).
     pub fn snapshot(&self) -> Vec<u8> {
-        unsafe { self.state.get() }.cur.clone()
+        match &self.store {
+            SirStore::Legacy(st) => unsafe { st.get() }.cur.clone(),
+            SirStore::Packed { cur, .. } => cur.snapshot_bytes(),
+        }
     }
 
-    /// Raw state access for the XLA task engine (crate-internal).
+    /// Raw state access for the XLA task engine (crate-internal). Only
+    /// the legacy layout exposes plain buffers; the XLA engine gates on
+    /// [`SirModel::layout`] at manifest load.
     ///
     /// # Safety
     /// Same contract as `SharedSim::get_mut`: caller must uphold the
     /// record discipline for everything it touches.
     pub(crate) unsafe fn state_mut(&self) -> &mut SirState {
-        self.state.get_mut()
+        match &self.store {
+            SirStore::Legacy(st) => st.get_mut(),
+            SirStore::Packed { .. } => {
+                panic!("SirModel::state_mut needs the legacy layout (ADAPAR_LAYOUT=legacy)")
+            }
+        }
     }
 
     /// (S, I, R) counts (quiescent use).
     pub fn census(&self) -> (usize, usize, usize) {
-        let cur = &unsafe { self.state.get() }.cur;
         let mut c = [0usize; 3];
-        for &s in cur {
-            c[s as usize] += 1;
+        match &self.store {
+            SirStore::Legacy(st) => {
+                for &s in &unsafe { st.get() }.cur {
+                    c[s as usize] += 1;
+                }
+            }
+            SirStore::Packed { cur, .. } => {
+                for i in 0..self.params.agents {
+                    c[cur.get(i) as usize] += 1;
+                }
+            }
         }
         (c[0], c[1], c[2])
     }
 
-    /// Compute phase for one block: write `new` states of the block's
-    /// agents from `cur` states. Draws exactly one uniform per agent so
-    /// the stream is schedule-independent.
-    fn compute_block(&self, block: usize, rng: &mut TaskRng) {
-        // SAFETY: record discipline — no concurrent swap of this block or
-        // a connected block (they write `cur` rows we read), no concurrent
-        // compute of this block (writes our `new` rows). Distinct-block
-        // computes write disjoint `new` rows and only share reads of
-        // `cur`. (DESIGN.md §6.)
-        let state = unsafe { self.state.get_mut() };
+    /// One agent's compute transition — shared by both storage backends
+    /// so the two paths cannot drift. Draws exactly one uniform per agent
+    /// so the stream is schedule- and layout-independent.
+    #[inline]
+    fn compute_block_with(
+        &self,
+        block: usize,
+        rng: &mut TaskRng,
+        read: impl Fn(usize) -> u8,
+        mut write: impl FnMut(usize, u8),
+    ) {
         let k = self.params.degree as f64;
         for &a in self.partition.members(block) {
             let a = a as usize;
             let u = rng.unit_f64();
-            let cur = state.cur[a];
-            let next = match cur {
+            let next = match read(a) {
                 0 => {
                     // S → I with p_SI · (infected neighbour fraction)
                     let infected = self
                         .graph
                         .neighbors(a)
                         .iter()
-                        .filter(|&&nb| state.cur[nb as usize] == 1)
+                        .filter(|&&nb| read(nb as usize) == 1)
                         .count();
                     if u < self.params.p_si * (infected as f64 / k) {
                         1
@@ -264,18 +348,56 @@ impl SirModel {
                     }
                 }
             };
-            state.new[a] = next;
+            write(a, next);
+        }
+    }
+
+    /// Compute phase for one block: write `new` states of the block's
+    /// agents from `cur` states.
+    fn compute_block(&self, block: usize, rng: &mut TaskRng) {
+        match &self.store {
+            SirStore::Legacy(st) => {
+                // SAFETY: record discipline — no concurrent swap of this
+                // block or a connected block (they write `cur` rows we
+                // read), no concurrent compute of this block (writes our
+                // `new` rows). Distinct-block computes write disjoint
+                // `new` rows and only share reads of `cur`. (DESIGN.md §6.)
+                let state = unsafe { st.get_mut() };
+                let SirState { cur, new } = state;
+                self.compute_block_with(block, rng, |a| cur[a], |a, v| new[a] = v);
+            }
+            // Same record discipline; lane-level CAS additionally keeps
+            // writes lossless where independent blocks share a word (the
+            // unaligned PackedLinear case).
+            SirStore::Packed { cur, new } => {
+                self.compute_block_with(block, rng, |a| cur.get(a), |a, v| new.set(a, v));
+            }
         }
     }
 
     /// Swap phase for one block: publish `new` into `cur`.
     fn swap_block(&self, block: usize) {
-        // SAFETY: record discipline — no concurrent compute of this or a
-        // connected block (they read our `cur` rows); swaps of distinct
-        // blocks touch disjoint rows. (DESIGN.md §6.)
-        let state = unsafe { self.state.get_mut() };
-        for &a in self.partition.members(block) {
-            state.cur[a as usize] = state.new[a as usize];
+        match &self.store {
+            SirStore::Legacy(st) => {
+                // SAFETY: record discipline — no concurrent compute of
+                // this or a connected block (they read our `cur` rows);
+                // swaps of distinct blocks touch disjoint rows.
+                // (DESIGN.md §6.)
+                let state = unsafe { st.get_mut() };
+                for &a in self.partition.members(block) {
+                    state.cur[a as usize] = state.new[a as usize];
+                }
+            }
+            SirStore::Packed { cur, new } => {
+                if cur.is_block_aligned() {
+                    // The block owns its words outright: publish them whole.
+                    cur.copy_block_from(new, block);
+                } else {
+                    for &a in self.partition.members(block) {
+                        cur.set(a as usize, new.get(a as usize));
+                    }
+                }
+            }
         }
     }
 
@@ -420,6 +542,19 @@ impl Model for SirModel {
             SirPhase::Swap => members * 0.25,
         }
     }
+
+    /// Structural state traffic, averaged over the two task types: a
+    /// compute reads ~μ·(k+1) lanes and writes μ, a swap moves 2μ lanes
+    /// (μ = mean block size, k = degree) → μ·(k+4)/2 lanes per task,
+    /// scaled by the layout's bytes per lane (1 legacy, 1/4 packed).
+    fn state_bytes_per_task(&self) -> f64 {
+        let mu = self.params.agents as f64 / self.blocks() as f64;
+        let lane_bytes = match &self.store {
+            SirStore::Legacy(_) => 1.0,
+            SirStore::Packed { cur, .. } => cur.bytes_per_lane(),
+        };
+        mu * (self.params.degree as f64 + 4.0) / 2.0 * lane_bytes
+    }
 }
 
 impl crate::sched::ShardableModel for SirModel {
@@ -471,6 +606,9 @@ impl SyncModel for SirModel {
             0 => self.compute_block(block, &mut rng),
             _ => self.swap_block(block),
         }
+    }
+    fn state_bytes_per_task(&self) -> f64 {
+        Model::state_bytes_per_task(self)
     }
 }
 
@@ -595,5 +733,34 @@ mod tests {
         let m = SirModel::new(small(10), 0);
         // Aggregate-graph construction takes nonzero (but tiny) time.
         assert!(m.setup_cost.as_nanos() > 0);
+    }
+
+    #[test]
+    fn every_layout_is_byte_identical() {
+        use crate::sim::soa::Layout;
+        let reference = {
+            let m = SirModel::with_layout(small(30), 5, Layout::Legacy);
+            SequentialEngine::new(9).run(&m);
+            m.snapshot()
+        };
+        for layout in Layout::ALL {
+            let m = SirModel::with_layout(small(30), 5, layout);
+            assert_eq!(m.layout(), layout);
+            SequentialEngine::new(9).run(&m);
+            assert_eq!(m.snapshot(), reference, "{layout} diverged from legacy");
+        }
+    }
+
+    #[test]
+    fn packed_layout_shrinks_bytes_per_task() {
+        use crate::sim::soa::Layout;
+        let legacy = SirModel::with_layout(small(30), 0, Layout::Legacy);
+        let packed = SirModel::with_layout(small(30), 0, Layout::Packed);
+        assert!(legacy.state_bytes_per_task() > 0.0);
+        // 2-bit lanes: exactly a 4× structural reduction.
+        assert_eq!(
+            packed.state_bytes_per_task() * 4.0,
+            legacy.state_bytes_per_task()
+        );
     }
 }

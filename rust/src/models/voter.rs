@@ -13,8 +13,9 @@
 use std::sync::Arc;
 
 use crate::model::{Model, Record, TaskSource};
-use crate::sim::graph::Csr;
+use crate::sim::graph::{bfs_partition, Csr};
 use crate::sim::rng::{Rng, TaskRng};
+use crate::sim::soa::{bits_for, Layout, PackedStates, Relabeling};
 use crate::sim::state::SharedSim;
 use crate::util::u32set::U32Set;
 
@@ -36,39 +37,94 @@ impl Default for VoterParams {
     }
 }
 
+/// Storage backend for the opinion array, selected by [`Layout`].
+enum OpinionStore {
+    /// One byte per agent.
+    Legacy(SharedSim<Vec<u8>>),
+    /// `bits_for(opinions)`-bit lanes; under [`Layout::Packed`] agent
+    /// slots follow a BFS partition of the voter graph so neighbourhoods
+    /// are word-adjacent.
+    Packed(PackedStates),
+}
+
 /// The pluggable model. Owns the topology (any connected graph works).
 pub struct VoterModel {
     /// Parameters.
     pub params: VoterParams,
     graph: Arc<Csr>,
-    opinions: SharedSim<Vec<u8>>,
+    store: OpinionStore,
+    layout: Layout,
 }
 
 impl VoterModel {
-    /// Build with uniform random initial opinions.
+    /// Build with uniform random initial opinions under the ambient
+    /// default layout ([`Layout::env_default`]).
     pub fn new(graph: Csr, params: VoterParams, init_seed: u64) -> Self {
+        Self::with_layout(graph, params, init_seed, Layout::env_default())
+    }
+
+    /// Build with an explicit storage layout. The initial-opinion RNG
+    /// stream is drawn in logical id order regardless of layout, so all
+    /// layouts start byte-identical.
+    pub fn with_layout(graph: Csr, params: VoterParams, init_seed: u64, layout: Layout) -> Self {
         let mut rng = Rng::stream(init_seed, 0x707E);
-        let opinions = (0..graph.n())
+        let opinions: Vec<u8> = (0..graph.n())
             .map(|_| rng.below(params.opinions as u64) as u8)
             .collect();
+        let store = match layout {
+            Layout::Legacy => OpinionStore::Legacy(SharedSim::new(opinions)),
+            Layout::Packed | Layout::PackedLinear => {
+                let n = graph.n();
+                let order = if layout == Layout::Packed {
+                    // ~64 agents per block: one cache line of byte-lanes,
+                    // a word or two once packed.
+                    let blocks = (n / 64).clamp(1, n.max(1));
+                    Relabeling::from_partition(&bfs_partition(&graph, blocks))
+                } else {
+                    Relabeling::identity(n)
+                };
+                let ps = PackedStates::new(bits_for(params.opinions.max(1) as usize), &order);
+                for (i, &v) in opinions.iter().enumerate() {
+                    ps.set(i, v);
+                }
+                OpinionStore::Packed(ps)
+            }
+        };
         Self {
             params,
             graph: Arc::new(graph),
-            opinions: SharedSim::new(opinions),
+            store,
+            layout,
         }
+    }
+
+    /// The active storage layout.
+    pub fn layout(&self) -> Layout {
+        self.layout
     }
 
     /// Snapshot of opinions (quiescent use).
     pub fn snapshot(&self) -> Vec<u8> {
-        unsafe { self.opinions.get() }.clone()
+        match &self.store {
+            OpinionStore::Legacy(ops) => unsafe { ops.get() }.clone(),
+            OpinionStore::Packed(ps) => ps.snapshot_bytes(),
+        }
     }
 
     /// Count of agents holding each opinion.
     pub fn tally(&self) -> Vec<usize> {
-        let ops = unsafe { self.opinions.get() };
         let mut out = vec![0usize; self.params.opinions as usize];
-        for &o in ops.iter() {
-            out[o as usize] += 1;
+        match &self.store {
+            OpinionStore::Legacy(ops) => {
+                for &o in unsafe { ops.get() }.iter() {
+                    out[o as usize] += 1;
+                }
+            }
+            OpinionStore::Packed(ps) => {
+                for i in 0..ps.len() {
+                    out[ps.get(i) as usize] += 1;
+                }
+            }
         }
         out
     }
@@ -201,17 +257,35 @@ impl Model for VoterModel {
     }
 
     fn execute(&self, r: &VoterStep, _rng: &mut TaskRng) {
-        // SAFETY: record discipline — only row `listener` is written; the
-        // speaker row is only read and no absorbed incomplete task wrote
-        // either (DESIGN.md §6).
-        unsafe {
-            let ops = self.opinions.get_mut();
-            ops[r.listener as usize] = ops[r.speaker as usize];
+        match &self.store {
+            OpinionStore::Legacy(st) => {
+                // SAFETY: record discipline — only row `listener` is
+                // written; the speaker row is only read and no absorbed
+                // incomplete task wrote either (DESIGN.md §6).
+                unsafe {
+                    let ops = st.get_mut();
+                    ops[r.listener as usize] = ops[r.speaker as usize];
+                }
+            }
+            // Same discipline; the CAS lane write stays lossless when an
+            // independent task's listener shares the listener's word.
+            OpinionStore::Packed(ps) => {
+                ps.set(r.listener as usize, ps.get(r.speaker as usize));
+            }
         }
     }
 
     fn task_work(&self, _r: &VoterStep) -> f64 {
         1.0
+    }
+
+    /// A step reads one lane (speaker) and writes one (listener).
+    fn state_bytes_per_task(&self) -> f64 {
+        let lane_bytes = match &self.store {
+            OpinionStore::Legacy(_) => 1.0,
+            OpinionStore::Packed(ps) => ps.bytes_per_lane(),
+        };
+        2.0 * lane_bytes
     }
 }
 
@@ -258,6 +332,46 @@ mod tests {
             .run(&m);
             assert_eq!(m.snapshot(), reference, "n={workers}");
         }
+    }
+
+    #[test]
+    fn every_layout_is_byte_identical() {
+        let seed = 17;
+        let reference = {
+            let m = VoterModel::with_layout(
+                ring_lattice(200, 6),
+                VoterParams { opinions: 3, steps: 4_000 },
+                6,
+                Layout::Legacy,
+            );
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for layout in Layout::ALL {
+            let m = VoterModel::with_layout(
+                ring_lattice(200, 6),
+                VoterParams { opinions: 3, steps: 4_000 },
+                6,
+                layout,
+            );
+            SequentialEngine::new(seed).run(&m);
+            assert_eq!(m.snapshot(), reference, "{layout} diverged from legacy");
+        }
+    }
+
+    #[test]
+    fn packed_layout_shrinks_bytes_per_task() {
+        let mk = |layout| {
+            VoterModel::with_layout(
+                ring_lattice(64, 4),
+                VoterParams { opinions: 3, steps: 10 },
+                0,
+                layout,
+            )
+        };
+        // 3 opinions → 2-bit lanes → 4× smaller than a byte per lane.
+        assert_eq!(mk(Layout::Legacy).state_bytes_per_task(), 2.0);
+        assert_eq!(mk(Layout::Packed).state_bytes_per_task(), 0.5);
     }
 
     #[test]

@@ -273,6 +273,10 @@ impl ParallelEngine {
                 arena_high_water: chain.arena_high_water(),
                 arena_recycled: chain.arena_recycled(),
                 arena_live: chain.arena_live(),
+                state_bytes: super::stats::state_bytes_total(
+                    model.state_bytes_per_task(),
+                    chain.erased(),
+                ),
             },
         );
         let snap = tele.finish();

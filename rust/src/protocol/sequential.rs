@@ -94,6 +94,7 @@ impl SequentialEngine {
             tasks_executed: executed,
             max_chain_len: 1,
             batch: 1,
+            state_bytes: super::stats::state_bytes_total(model.state_bytes_per_task(), executed),
             ..Default::default()
         };
         let per_worker = vec![stats.clone()];

@@ -150,6 +150,12 @@ pub struct StdInstruments {
     pub chain_arena_recycled: CounterId,
     /// `chain.arena_live`
     pub chain_arena_live: CounterId,
+    /// `chain.state_bytes` — total structural agent-state traffic.
+    pub chain_state_bytes: CounterId,
+    /// `chain.bytes_per_task` — rounded average state bytes per task
+    /// (the DESIGN.md §13 layout instrument; the exact f64 average is
+    /// [`ProtocolStats::bytes_per_task`]).
+    pub chain_bytes_per_task: CounterId,
     /// `chain.batch_fill` — tasks linked per tail-lock acquisition.
     pub batch_fill: HistId,
     /// `chain.exec_ns` — per-task execution time in nanoseconds.
@@ -182,6 +188,8 @@ impl StdInstruments {
             chain_arena_high_water: reg.counter("chain.arena_high_water"),
             chain_arena_recycled: reg.counter("chain.arena_recycled"),
             chain_arena_live: reg.counter("chain.arena_live"),
+            chain_state_bytes: reg.counter("chain.state_bytes"),
+            chain_bytes_per_task: reg.counter("chain.bytes_per_task"),
             batch_fill: reg.histogram("chain.batch_fill"),
             exec_ns: reg.histogram("chain.exec_ns"),
         }
@@ -213,7 +221,16 @@ impl StdInstruments {
         core.record(self.chain_arena_high_water, chain.arena_high_water as u64);
         core.record(self.chain_arena_recycled, chain.arena_recycled);
         core.record(self.chain_arena_live, chain.arena_live as u64);
+        core.record(self.chain_state_bytes, chain.state_bytes);
+        core.record(self.chain_bytes_per_task, chain.bytes_per_task().round() as u64);
     }
+}
+
+/// Total structural state traffic of a run: the model's per-task average
+/// times the executed task count, rounded once at the end so engines all
+/// derive the counter identically.
+pub fn state_bytes_total(bytes_per_task: f64, tasks_executed: u64) -> u64 {
+    (bytes_per_task * tasks_executed as f64).round().max(0.0) as u64
 }
 
 /// Post-hoc registry publication for engines without live per-worker
@@ -266,6 +283,12 @@ pub struct ProtocolStats {
     /// excess is a leaked node — the chaos harness's leak-freedom
     /// invariant (DESIGN.md §10). `0` for engines without an arena.
     pub arena_live: usize,
+    /// Total structural agent-state bytes the run's tasks read + wrote
+    /// under the model's storage layout
+    /// ([`Model::state_bytes_per_task`](crate::model::Model::state_bytes_per_task)
+    /// × executed; DESIGN.md §13). `0` for models that opt out of the
+    /// accounting.
+    pub state_bytes: u64,
 }
 
 impl ProtocolStats {
@@ -276,6 +299,17 @@ impl ProtocolStats {
             0.0
         } else {
             self.tasks_created as f64 / self.tail_locks as f64
+        }
+    }
+
+    /// Average structural state bytes per executed task (`0.0` for a
+    /// taskless run or an opted-out model) — the layout comparison
+    /// metric the SoA bench gates on.
+    pub fn bytes_per_task(&self) -> f64 {
+        if self.tasks_executed == 0 {
+            0.0
+        } else {
+            self.state_bytes as f64 / self.tasks_executed as f64
         }
     }
 
@@ -302,6 +336,7 @@ impl ProtocolStats {
             arena_high_water: snap.counter("chain.arena_high_water") as usize,
             arena_recycled: snap.counter("chain.arena_recycled"),
             arena_live: snap.counter("chain.arena_live") as usize,
+            state_bytes: snap.counter("chain.state_bytes"),
         }
     }
 }
@@ -532,6 +567,11 @@ impl RunReport {
                         "arena_occupancy".into(),
                         Json::from(self.chain.arena_occupancy()),
                     ),
+                    ("state_bytes".into(), Json::from(self.chain.state_bytes)),
+                    (
+                        "bytes_per_task".into(),
+                        Json::from(self.chain.bytes_per_task()),
+                    ),
                 ]),
             ),
             ("overhead_ratio".into(), Json::from(self.overhead_ratio())),
@@ -637,17 +677,21 @@ mod tests {
     fn chain_telemetry_derivations() {
         let s = ProtocolStats {
             tasks_created: 640,
+            tasks_executed: 640,
             tail_locks: 10,
             arena_capacity: 128,
             arena_high_water: 32,
             batch: 64,
+            state_bytes: 320,
             ..Default::default()
         };
         assert!((s.tasks_per_tail_lock() - 64.0).abs() < 1e-12);
         assert!((s.arena_occupancy() - 0.25).abs() < 1e-12);
+        assert!((s.bytes_per_task() - 0.5).abs() < 1e-12);
         let empty = ProtocolStats::default();
         assert_eq!(empty.tasks_per_tail_lock(), 0.0);
         assert_eq!(empty.arena_occupancy(), 0.0);
+        assert_eq!(empty.bytes_per_task(), 0.0);
         let r = RunReport {
             engine: "test",
             workers: 1,

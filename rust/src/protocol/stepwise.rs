@@ -42,6 +42,13 @@ pub trait SyncModel: Send + Sync {
     /// results independent of scheduling (implementations typically reuse
     /// the chain engines' per-task stream mapping so all engines agree).
     fn run_block(&self, seed: u64, step: u64, phase: usize, block: usize);
+    /// Average bytes of agent state a block touches — the sync-form
+    /// mirror of [`crate::model::Model::state_bytes_per_task`]. Feeds the
+    /// `chain.bytes_per_task` instrument; `0.0` (the default) means
+    /// "unknown" and keeps the counters at zero.
+    fn state_bytes_per_task(&self) -> f64 {
+        0.0
+    }
 }
 
 /// Barrier-synchronized step-parallel engine.
@@ -172,6 +179,7 @@ impl StepwiseEngine {
             tasks_executed: executed,
             max_chain_len: 0,
             batch: 1,
+            state_bytes: super::stats::state_bytes_total(model.state_bytes_per_task(), executed),
             ..Default::default()
         };
         let per_worker = vec![stats.clone()];
@@ -260,6 +268,7 @@ impl StepwiseEngine {
             tasks_executed: executed,
             max_chain_len: 0,
             batch: 1,
+            state_bytes: super::stats::state_bytes_total(model.state_bytes_per_task(), executed),
             ..Default::default()
         };
         let per_worker = vec![stats.clone()];

@@ -97,6 +97,13 @@ pub struct XlaSirModel {
 impl XlaSirModel {
     /// Build from a manifest entry matching the model's shape.
     pub fn from_manifest(rt: &XlaRuntime, manifest: &Manifest, inner: SirModel) -> Result<Self> {
+        // The XLA kernel streams the plain byte buffers, which only the
+        // legacy layout exposes (DESIGN.md §13).
+        crate::ensure!(
+            inner.layout() == crate::sim::soa::Layout::Legacy,
+            "the XLA SIR engine needs the legacy state layout (ADAPAR_LAYOUT=legacy), got {}",
+            inner.layout()
+        );
         let n = inner.params.agents;
         let k = inner.params.degree;
         let s = inner.params.subset_size;

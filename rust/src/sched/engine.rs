@@ -463,6 +463,10 @@ impl ShardedEngine {
                 arena_high_water,
                 arena_recycled,
                 arena_live,
+                state_bytes: crate::protocol::stats::state_bytes_total(
+                    model.state_bytes_per_task(),
+                    local + boundary,
+                ),
             },
         );
         ids.publish_engine(&tele, &sched);
@@ -674,11 +678,19 @@ fn sharded_worker<M: ShardableModel>(
     ids: &SchedInstruments,
 ) {
     let shards = ctx.chains.len();
-    // Static ownership: worker w owns the shards congruent to w. With
-    // shards == workers (the default) that is exactly one chain each;
-    // extra workers beyond the shard count serve the spillover chain and
-    // keep the splitter fed.
-    let own: Vec<usize> = (worker_id..shards).step_by(ctx.workers).collect();
+    // Pinned contiguous ownership: worker w owns the shard range
+    // [⌊S·w/n⌋, ⌊S·(w+1)/n⌋) — a partition of 0..S that is recomputed
+    // identically every epoch, so a shard's home worker never changes
+    // (the rebalancer migrates *blocks* between shards, never shard
+    // homes; DESIGN.md §13). Contiguous ranges beat id-congruence for
+    // locality: the shard splitter numbers adjacent shards from adjacent
+    // regions of the topology, and the SoA relabeling lays those regions
+    // out contiguously in memory, so one worker's shards share cache
+    // lines and pages. With shards == workers (the default) this is
+    // exactly one chain each; extra workers beyond the shard count own
+    // an empty range and serve the spillover chain instead.
+    let own: Vec<usize> =
+        (shards * worker_id / ctx.workers..shards * (worker_id + 1) / ctx.workers).collect();
     let mut stats = WorkerStats {
         worker: worker_id,
         ..Default::default()

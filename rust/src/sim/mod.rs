@@ -1,6 +1,8 @@
-//! Simulation substrates: deterministic RNG, shared simulation state, and
-//! the graph toolkit (topologies, partitions, aggregate graphs).
+//! Simulation substrates: deterministic RNG, shared simulation state, the
+//! graph toolkit (topologies, partitions, aggregate graphs), and the
+//! bit-packed SoA state layer.
 
 pub mod graph;
 pub mod rng;
+pub mod soa;
 pub mod state;

@@ -1,0 +1,571 @@
+//! Structure-of-arrays agent state: bit-packed state lanes with
+//! locality-aware slot placement (DESIGN.md §13).
+//!
+//! The bundled models carry tiny per-agent states — SIR health is one of
+//! three values (2 bits), an Ising spin is one of two (1 bit), voter
+//! opinions fit a few bits — yet the legacy layout spends a whole byte
+//! (or an `i8`) per agent. BioDynaMo and the TeraAgent engine attribute
+//! most of their single-node scaling to flat SoA storage and
+//! iteration-space locality rather than scheduling; this module is that
+//! layer for our models:
+//!
+//! * [`PackedStates`] — a flat array of 64-bit words holding fixed-width
+//!   state lanes (1/2/4/8 bits). Lane writes go through a CAS loop, so
+//!   two protocol-independent tasks whose agents happen to share a word
+//!   never lose an update; lane reads are single atomic loads.
+//! * [`Relabeling`] — a pure permutation of agent ids onto storage slots
+//!   so that each partition block (and therefore each shard built from
+//!   the same topology) is contiguous in memory. Logical ids — RNG
+//!   streams, task recipes, footprints, observations — are untouched;
+//!   only the *physical* slot of an agent moves, which is why every
+//!   trace stays byte-identical through the relabeling.
+//! * [`Layout`] — the facade-level selector (`ADAPAR_LAYOUT`): legacy
+//!   AoS vectors, packed-with-relabeling, or packed-in-identity-order
+//!   (isolates the permutation axis in the conformance matrix).
+//!
+//! ## Memory model
+//!
+//! [`PackedStates::set`] and [`PackedStates::get`] use `Relaxed`
+//! atomics. Cross-task ordering is established by the chain protocol
+//! exactly as for [`SharedSim`](crate::sim::state::SharedSim): a task
+//! only reads agent lanes that no concurrently-executing task writes
+//! (record discipline, DESIGN.md §6), and the chain's acquire/release
+//! operations around task publication order everything else. The CAS is
+//! *not* for ordering — it only makes sub-word lane writes lossless when
+//! two independent tasks write different lanes of the same word.
+
+use std::str::FromStr;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::sim::graph::Partition;
+
+/// Agent-state storage layout (facade knob, default from
+/// `ADAPAR_LAYOUT`). Semantically inert: every layout yields the
+/// identical observation trace and the identical final state under a
+/// fixed seed — the conformance matrix runs a dedicated axis over all
+/// three to prove it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Layout {
+    /// The historical AoS layout: one `u8`/`i8` per agent in logical id
+    /// order (and whatever struct vecs a model already used).
+    Legacy,
+    /// Bit-packed SoA lanes, with agent slots permuted so each
+    /// partition block is contiguous in memory (the default).
+    #[default]
+    Packed,
+    /// Bit-packed SoA lanes in identity (logical id) order — isolates
+    /// the packing axis from the relabeling axis.
+    PackedLinear,
+}
+
+impl Layout {
+    /// Every selectable layout (the conformance axis).
+    pub const ALL: [Layout; 3] = [Layout::Legacy, Layout::Packed, Layout::PackedLinear];
+
+    /// Canonical label — what [`FromStr`] accepts and `Display` prints.
+    pub fn label(self) -> &'static str {
+        match self {
+            Layout::Legacy => "legacy",
+            Layout::Packed => "packed",
+            Layout::PackedLinear => "packed-linear",
+        }
+    }
+
+    /// Whether states are bit-packed under this layout.
+    pub fn is_packed(self) -> bool {
+        !matches!(self, Layout::Legacy)
+    }
+
+    /// Default layout: `ADAPAR_LAYOUT` if set to a valid label, else
+    /// [`Layout::Packed`] (unknown values fall back rather than panic —
+    /// same tolerance as the telemetry/trace mode envs).
+    pub fn env_default() -> Self {
+        std::env::var("ADAPAR_LAYOUT")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(Layout::Packed)
+    }
+}
+
+impl FromStr for Layout {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.trim() {
+            "legacy" | "aos" => Layout::Legacy,
+            "packed" | "soa" => Layout::Packed,
+            "packed-linear" | "packed_linear" | "linear" => Layout::PackedLinear,
+            other => {
+                return Err(crate::err!(
+                    "unknown layout `{other}`; valid layouts: legacy|packed|packed-linear"
+                ))
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Smallest word-aligned lane width (1, 2, 4 or 8 bits) that can hold
+/// `values` distinct states. Widths are powers of two so lanes never
+/// straddle a word boundary.
+pub fn bits_for(values: usize) -> u32 {
+    debug_assert!((1..=256).contains(&values), "state space must fit a byte");
+    match values {
+        0..=2 => 1,
+        3..=4 => 2,
+        5..=16 => 4,
+        _ => 8,
+    }
+}
+
+/// A pure permutation of agent ids onto storage slots.
+///
+/// `slot_of` maps logical agent id → physical slot; `agent_of` is its
+/// inverse. [`Relabeling::from_partition`] assigns slots block by block
+/// (members in ascending id order), so every block of the partition —
+/// and every shard the scheduler later builds from the same topology —
+/// occupies a contiguous slot range.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Relabeling {
+    slot_of: Vec<u32>,
+    agent_of: Vec<u32>,
+}
+
+impl Relabeling {
+    /// The identity relabeling on `n` agents.
+    pub fn identity(n: usize) -> Self {
+        let ids: Vec<u32> = (0..n as u32).collect();
+        Self {
+            slot_of: ids.clone(),
+            agent_of: ids,
+        }
+    }
+
+    /// Block-contiguous relabeling: slots are assigned block by block in
+    /// partition order, members ascending. A contiguous partition (the
+    /// SIR subsets) therefore yields the identity.
+    pub fn from_partition(p: &Partition) -> Self {
+        let mut slot_of = vec![0u32; p.n()];
+        let mut agent_of = Vec::with_capacity(p.n());
+        for b in 0..p.blocks() {
+            for &a in p.members(b) {
+                slot_of[a as usize] = agent_of.len() as u32;
+                agent_of.push(a);
+            }
+        }
+        let out = Self { slot_of, agent_of };
+        debug_assert!(out.is_permutation());
+        out
+    }
+
+    /// Number of agents.
+    pub fn len(&self) -> usize {
+        self.slot_of.len()
+    }
+
+    /// Whether the relabeling covers zero agents.
+    pub fn is_empty(&self) -> bool {
+        self.slot_of.is_empty()
+    }
+
+    /// Physical slot of logical agent `a`.
+    #[inline]
+    pub fn slot_of(&self, a: usize) -> u32 {
+        self.slot_of[a]
+    }
+
+    /// Logical agent stored at physical slot `s`.
+    #[inline]
+    pub fn agent_of(&self, s: usize) -> u32 {
+        self.agent_of[s]
+    }
+
+    /// The slot map as a slice (logical id order).
+    pub fn slots(&self) -> &[u32] {
+        &self.slot_of
+    }
+
+    /// The inverse relabeling (swaps the two maps).
+    pub fn inverse(&self) -> Self {
+        Self {
+            slot_of: self.agent_of.clone(),
+            agent_of: self.slot_of.clone(),
+        }
+    }
+
+    /// Whether the relabeling is the identity.
+    pub fn is_identity(&self) -> bool {
+        self.slot_of.iter().enumerate().all(|(i, &s)| i as u32 == s)
+    }
+
+    /// Verify the maps are mutually-inverse bijections on `0..n` — the
+    /// "pure permutation" property the conformance argument rests on.
+    pub fn is_permutation(&self) -> bool {
+        let n = self.slot_of.len();
+        self.agent_of.len() == n
+            && self
+                .slot_of
+                .iter()
+                .all(|&s| (s as usize) < n)
+            && self
+                .slot_of
+                .iter()
+                .enumerate()
+                .all(|(a, &s)| self.agent_of[s as usize] as usize == a)
+    }
+}
+
+/// Bit-packed SoA agent states: fixed-width lanes in a flat array of
+/// 64-bit words, addressed through a (possibly permuted, possibly
+/// block-aligned) lane map.
+///
+/// Two constructors:
+/// * [`PackedStates::new`] — dense lanes in relabeled slot order.
+/// * [`PackedStates::block_aligned`] — each partition block starts at a
+///   word boundary (padding lanes stay zero), so block-exclusive tasks
+///   touch exclusive words and block publication can copy whole words
+///   ([`PackedStates::copy_block_from`]).
+pub struct PackedStates {
+    bits: u32,
+    mask: u64,
+    words: Box<[AtomicU64]>,
+    /// Logical agent id → lane index. Shared (`Arc`) between buffers of
+    /// a double-buffered model so `copy_block_from` can assert the two
+    /// sides agree on placement.
+    lane_of: Arc<Vec<u32>>,
+    /// Per-block word ranges (block-aligned layout only).
+    block_words: Option<Arc<Vec<(u32, u32)>>>,
+    len: usize,
+}
+
+impl PackedStates {
+    fn check_bits(bits: u32) {
+        assert!(
+            matches!(bits, 1 | 2 | 4 | 8),
+            "lane width must be 1, 2, 4 or 8 bits, got {bits}"
+        );
+    }
+
+    fn alloc_words(n: usize) -> Box<[AtomicU64]> {
+        (0..n).map(|_| AtomicU64::new(0)).collect()
+    }
+
+    /// Dense packing: lane index = relabeled slot.
+    pub fn new(bits: u32, order: &Relabeling) -> Self {
+        Self::check_bits(bits);
+        let lpw = (64 / bits) as usize;
+        let lanes = order.len();
+        Self {
+            bits,
+            mask: (1u64 << bits) - 1,
+            words: Self::alloc_words(lanes.div_ceil(lpw)),
+            lane_of: Arc::new(order.slots().to_vec()),
+            block_words: None,
+            len: lanes,
+        }
+    }
+
+    /// Word-aligned block packing: blocks are laid out in partition
+    /// order (members ascending — the [`Relabeling::from_partition`]
+    /// order), each starting at a fresh word. Distinct blocks never
+    /// share a word, so block-exclusive writers need no CAS retries and
+    /// [`PackedStates::copy_block_from`] can move whole words.
+    pub fn block_aligned(bits: u32, part: &Partition) -> Self {
+        Self::check_bits(bits);
+        let lpw = (64 / bits) as usize;
+        let mut lane_of = vec![0u32; part.n()];
+        let mut ranges = Vec::with_capacity(part.blocks());
+        let mut next_lane = 0usize;
+        for b in 0..part.blocks() {
+            debug_assert_eq!(next_lane % lpw, 0, "blocks start word-aligned");
+            let w0 = (next_lane / lpw) as u32;
+            for &a in part.members(b) {
+                lane_of[a as usize] = next_lane as u32;
+                next_lane += 1;
+            }
+            let w1 = next_lane.div_ceil(lpw) as u32;
+            ranges.push((w0, w1));
+            next_lane = w1 as usize * lpw; // pad the tail to a whole word
+        }
+        Self {
+            bits,
+            mask: (1u64 << bits) - 1,
+            words: Self::alloc_words(next_lane / lpw),
+            lane_of: Arc::new(lane_of),
+            block_words: Some(Arc::new(ranges)),
+            len: part.n(),
+        }
+    }
+
+    /// A zeroed twin sharing this buffer's lane map and block ranges —
+    /// the second half of a double buffer.
+    pub fn like(&self) -> Self {
+        Self {
+            bits: self.bits,
+            mask: self.mask,
+            words: Self::alloc_words(self.words.len()),
+            lane_of: Arc::clone(&self.lane_of),
+            block_words: self.block_words.as_ref().map(Arc::clone),
+            len: self.len,
+        }
+    }
+
+    /// A word-for-word copy sharing the lane map (quiescent use).
+    pub fn duplicate(&self) -> Self {
+        let out = self.like();
+        for (d, s) in out.words.iter().zip(self.words.iter()) {
+            d.store(s.load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+        out
+    }
+
+    /// Number of agents.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the store holds zero agents.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Lane width in bits.
+    pub fn bits(&self) -> u32 {
+        self.bits
+    }
+
+    /// Bytes of state one lane access moves — `bits / 8` (the
+    /// structural counterpart of the legacy byte-per-agent).
+    pub fn bytes_per_lane(&self) -> f64 {
+        self.bits as f64 / 8.0
+    }
+
+    /// Whether blocks are word-aligned (built by
+    /// [`PackedStates::block_aligned`]).
+    pub fn is_block_aligned(&self) -> bool {
+        self.block_words.is_some()
+    }
+
+    /// Heap footprint of the word array + lane map, in bytes (bench
+    /// reporting).
+    pub fn heap_bytes(&self) -> usize {
+        self.words.len() * 8 + self.lane_of.len() * 4
+    }
+
+    /// State of logical agent `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u8 {
+        let lane = self.lane_of[i] as usize;
+        let lpw = (64 / self.bits) as usize;
+        let w = self.words[lane / lpw].load(Ordering::Relaxed);
+        ((w >> ((lane % lpw) as u32 * self.bits)) & self.mask) as u8
+    }
+
+    /// Set the state of logical agent `i`.
+    ///
+    /// Lossless under concurrent writers of *other* lanes in the same
+    /// word (CAS loop); the record discipline guarantees no concurrent
+    /// writer of the *same* lane, so the stored value is deterministic.
+    #[inline]
+    pub fn set(&self, i: usize, v: u8) {
+        debug_assert!(u64::from(v) <= self.mask, "value {v} exceeds {} bits", self.bits);
+        let lane = self.lane_of[i] as usize;
+        let lpw = (64 / self.bits) as usize;
+        let word = &self.words[lane / lpw];
+        let shift = (lane % lpw) as u32 * self.bits;
+        let lane_mask = self.mask << shift;
+        let lane_val = u64::from(v) << shift;
+        let mut cur = word.load(Ordering::Relaxed);
+        loop {
+            let next = (cur & !lane_mask) | lane_val;
+            match word.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Publish block `b` from `src` into `self` as whole-word copies.
+    /// Requires the block-aligned layout with a shared lane map; a
+    /// block-exclusive task owns the block's words outright (no other
+    /// block shares them), so plain word stores suffice.
+    #[inline]
+    pub fn copy_block_from(&self, src: &PackedStates, b: usize) {
+        debug_assert!(
+            Arc::ptr_eq(&self.lane_of, &src.lane_of),
+            "double-buffer sides must share one placement"
+        );
+        let ranges = self
+            .block_words
+            .as_ref()
+            .expect("copy_block_from needs the block-aligned layout");
+        let (w0, w1) = ranges[b];
+        for w in w0 as usize..w1 as usize {
+            self.words[w].store(src.words[w].load(Ordering::Relaxed), Ordering::Relaxed);
+        }
+    }
+
+    /// All states in logical id order (quiescent use).
+    pub fn snapshot_bytes(&self) -> Vec<u8> {
+        (0..self.len).map(|i| self.get(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::graph::{contiguous_partition, grid_partition, ring_lattice};
+    use crate::sim::graph::bfs_partition;
+
+    #[test]
+    fn layout_labels_roundtrip() {
+        for l in Layout::ALL {
+            assert_eq!(l.label().parse::<Layout>().unwrap(), l);
+        }
+        assert_eq!("aos".parse::<Layout>().unwrap(), Layout::Legacy);
+        assert_eq!("soa".parse::<Layout>().unwrap(), Layout::Packed);
+        assert!("nope".parse::<Layout>().is_err());
+        assert_eq!(Layout::default(), Layout::Packed);
+    }
+
+    #[test]
+    fn bits_for_covers_the_state_spaces() {
+        assert_eq!(bits_for(2), 1); // Ising spins
+        assert_eq!(bits_for(3), 2); // SIR health, 3-opinion voter
+        assert_eq!(bits_for(4), 2);
+        assert_eq!(bits_for(5), 4);
+        assert_eq!(bits_for(16), 4);
+        assert_eq!(bits_for(17), 8);
+        assert_eq!(bits_for(256), 8);
+    }
+
+    #[test]
+    fn relabeling_from_contiguous_partition_is_identity() {
+        let p = contiguous_partition(257, 16);
+        let r = Relabeling::from_partition(&p);
+        assert!(r.is_permutation());
+        assert!(r.is_identity(), "contiguous blocks keep id order");
+    }
+
+    #[test]
+    fn relabeling_is_a_pure_permutation_and_inverts() {
+        let g = ring_lattice(97, 6);
+        let r = Relabeling::from_partition(&bfs_partition(&g, 5));
+        assert!(r.is_permutation());
+        let inv = r.inverse();
+        assert!(inv.is_permutation());
+        for a in 0..97 {
+            assert_eq!(inv.slot_of(r.slot_of(a) as usize) as usize, a);
+            assert_eq!(r.agent_of(r.slot_of(a) as usize) as usize, a);
+        }
+    }
+
+    #[test]
+    fn relabeling_groups_blocks_contiguously() {
+        let p = grid_partition(9, 9, 4);
+        let r = Relabeling::from_partition(&p);
+        assert!(r.is_permutation());
+        let mut next = 0u32;
+        for b in 0..p.blocks() {
+            for &a in p.members(b) {
+                assert_eq!(r.slot_of(a as usize), next, "block {b} must be contiguous");
+                next += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn packed_roundtrip_every_width() {
+        for bits in [1u32, 2, 4, 8] {
+            let n = 131; // crosses word boundaries at every width
+            let ps = PackedStates::new(bits, &Relabeling::identity(n));
+            let m = ((1u64 << bits) - 1) as u8;
+            for i in 0..n {
+                ps.set(i, (i as u8).wrapping_mul(7) & m);
+            }
+            for i in 0..n {
+                assert_eq!(ps.get(i), (i as u8).wrapping_mul(7) & m, "bits={bits} i={i}");
+            }
+            assert_eq!(ps.snapshot_bytes().len(), n);
+        }
+    }
+
+    #[test]
+    fn packed_respects_a_permuted_lane_map() {
+        let g = ring_lattice(40, 4);
+        let r = Relabeling::from_partition(&bfs_partition(&g, 4));
+        let ps = PackedStates::new(2, &r);
+        for i in 0..40 {
+            ps.set(i, (i % 4) as u8);
+        }
+        for i in 0..40 {
+            assert_eq!(ps.get(i), (i % 4) as u8, "logical addressing survives relabeling");
+        }
+    }
+
+    #[test]
+    fn block_aligned_blocks_never_share_words() {
+        let p = contiguous_partition(257, 16); // ragged tail: 16×16 + 1
+        let ps = PackedStates::block_aligned(2, &p);
+        assert!(ps.is_block_aligned());
+        let lpw = 32; // 64 / 2 bits
+        for b in 0..p.blocks() {
+            let first = ps.lane_of[p.members(b)[0] as usize] as usize;
+            assert_eq!(first % lpw, 0, "block {b} must start word-aligned");
+        }
+        // The ragged tail block still packs and round-trips.
+        for &a in p.members(p.blocks() - 1) {
+            ps.set(a as usize, 2);
+            assert_eq!(ps.get(a as usize), 2);
+        }
+    }
+
+    #[test]
+    fn block_copy_publishes_exactly_one_block() {
+        let p = contiguous_partition(100, 16);
+        let cur = PackedStates::block_aligned(2, &p);
+        let new = cur.like();
+        for i in 0..100 {
+            new.set(i, 1);
+        }
+        cur.copy_block_from(&new, 2);
+        for i in 0..100 {
+            let expect = u8::from(p.members(2).contains(&(i as u32)));
+            assert_eq!(cur.get(i), expect, "i={i}");
+        }
+    }
+
+    #[test]
+    fn duplicate_is_word_identical() {
+        let ps = PackedStates::new(4, &Relabeling::identity(77));
+        for i in 0..77 {
+            ps.set(i, (i % 13) as u8);
+        }
+        let d = ps.duplicate();
+        assert_eq!(d.snapshot_bytes(), ps.snapshot_bytes());
+    }
+
+    #[test]
+    fn concurrent_disjoint_lane_writes_are_lossless() {
+        // 64 one-bit lanes share a single word; 4 threads write disjoint
+        // lane ranges concurrently. The CAS loop must lose nothing.
+        let ps = PackedStates::new(1, &Relabeling::identity(64));
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                let ps = &ps;
+                s.spawn(move || {
+                    for i in (t * 16)..(t * 16 + 16) {
+                        ps.set(i, 1);
+                    }
+                });
+            }
+        });
+        assert!((0..64).all(|i| ps.get(i) == 1), "a lane write was lost");
+    }
+}

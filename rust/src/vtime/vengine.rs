@@ -306,6 +306,10 @@ impl VirtualEngine {
             tasks_executed: des.erased,
             max_chain_len: des.max_live,
             batch: 1,
+            state_bytes: crate::protocol::stats::state_bytes_total(
+                model.state_bytes_per_task(),
+                des.erased,
+            ),
             ..Default::default()
         };
         // `des` holds `TraceHandle`s borrowing `trc`: end the borrow

@@ -64,6 +64,7 @@ fn build_sir(seed: u64) -> Box<dyn DynModel> {
             agents: 300,
             steps: 60,
             seed,
+            layout: Default::default(),
             params: Default::default(),
         },
     )

@@ -257,6 +257,60 @@ fn trace_modes_are_invisible_in_every_trace() {
 }
 
 #[test]
+fn state_layouts_are_invisible_in_every_trace() {
+    // ISSUE 9's conformance axis: the state layout is pure storage —
+    // the epoch observation trace is byte-identical whether agent state
+    // lives in the legacy AoS buffers, the bit-packed SoA words with
+    // locality relabeling, or the bit-packed linear (identity-order)
+    // words, on every engine × worker count. The reference is always
+    // sequential-on-legacy, so this also pins packed against the
+    // pre-SoA semantics. (`ADAPAR_LAYOUTS` pins the axis for CI
+    // sharding.)
+    use adapar::model::testkit::env_layouts;
+    use adapar::Layout;
+    for name in ["voter", "sir", "ising"] {
+        let info = registry::info(name).unwrap();
+        let (agents, steps, size) = workload(&info);
+        let run = |engine: EngineKind, workers: usize, layout: Layout| {
+            Simulation::builder()
+                .model(info.name.clone())
+                .engine(engine)
+                .workers(workers)
+                .tasks_per_cycle(8)
+                .batch(8)
+                .agents(agents)
+                .steps(steps)
+                .size(size)
+                .seed(19)
+                .every(256)
+                .layout(layout)
+                .run()
+                .unwrap_or_else(|e| {
+                    panic!("{name}/{engine} n={workers} layout={}: {e}", layout.label())
+                })
+                .observable
+        };
+        let reference = run(EngineKind::Sequential, 1, Layout::Legacy);
+        assert!(reference.len() > 1, "{name}: need a multi-frame trace");
+        for layout in env_layouts() {
+            for &engine in &EngineKind::ALL {
+                if !info.supports(engine) {
+                    continue;
+                }
+                for &workers in &worker_counts() {
+                    assert_eq!(
+                        run(engine, workers, layout),
+                        reference,
+                        "{name} {engine} n={workers} layout={}: trace diverged",
+                        layout.label()
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn runtime_registrations_enter_the_matrix() {
     // A model registered at runtime — sharding capability included —
     // must be covered by exactly the same machinery, proving the matrix

@@ -1,0 +1,184 @@
+//! Ragged-partition regression suite (ISSUE 9 satellites): awkward
+//! sizes where the block size does not divide the agent count, or the
+//! lattice side is odd. Every engine must agree with the sequential
+//! reference bitwise at these sizes, at both odd and even step counts —
+//! an off-by-one in the ragged tail block or a double-buffer swap bug
+//! shows up as a divergence here long before it corrupts a full-size
+//! run.
+
+use adapar::models::ising::{IsingModel, IsingParams};
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine, StepwiseEngine};
+use adapar::sched::{ShardedConfig, ShardedEngine};
+use adapar::sim::graph::{contiguous_partition, grid_partition};
+use adapar::vtime::{CostModel, VirtualEngine};
+use adapar::Layout;
+
+// --------------------------------------------------- partition geometry
+
+#[test]
+fn ragged_contiguous_partitions_tell_one_story() {
+    // 257 = 16×16 + 1: a one-agent tail block. 255 = 15×16 + 15: a
+    // near-full tail block. Both must agree between the parameter-level
+    // block count and the partition itself.
+    for (agents, s) in [(257usize, 16usize), (255, 16), (100, 100), (1, 16)] {
+        let params = SirParams::scaled(s, agents, 1);
+        let p = contiguous_partition(agents, s);
+        assert_eq!(p.blocks(), params.blocks(), "agents={agents} s={s}");
+        assert_eq!(p.n(), agents, "agents={agents} s={s}");
+        let mut covered = 0usize;
+        for b in 0..p.blocks() {
+            let members = p.members(b);
+            assert!(!members.is_empty(), "agents={agents} s={s}: empty block {b}");
+            assert!(
+                members.len() <= s,
+                "agents={agents} s={s}: block {b} exceeds subset size"
+            );
+            for &v in members {
+                assert_eq!(p.block_of(v as usize), b as u32, "agents={agents} s={s}");
+            }
+            covered += members.len();
+        }
+        assert_eq!(covered, agents, "agents={agents} s={s}: cover");
+        // The tail block holds exactly the remainder.
+        let tail = p.members(p.blocks() - 1).len();
+        let expect = if agents % s == 0 { s.min(agents) } else { agents % s };
+        assert_eq!(tail, expect, "agents={agents} s={s}: tail size");
+    }
+}
+
+#[test]
+fn odd_lattice_grid_partitions_cover_and_stay_disjoint() {
+    // 255² with power-of-two part counts: every tiling is ragged in both
+    // dimensions.
+    let (rows, cols) = (255usize, 255usize);
+    for parts in [2usize, 4, 8, 16, 31] {
+        let p = grid_partition(rows, cols, parts);
+        assert_eq!(p.blocks(), parts, "parts={parts}");
+        assert_eq!(p.n(), rows * cols, "parts={parts}");
+        let mut covered = 0usize;
+        for b in 0..p.blocks() {
+            let members = p.members(b);
+            assert!(!members.is_empty(), "parts={parts}: empty block {b}");
+            for &v in members {
+                assert_eq!(p.block_of(v as usize), b as u32, "parts={parts}");
+            }
+            covered += members.len();
+        }
+        assert_eq!(covered, rows * cols, "parts={parts}: cover");
+    }
+}
+
+// -------------------------------------- SIR at ragged sizes, 5 engines
+
+/// Raw final state of a SIR run under `run`, at the given layout.
+fn sir_state(
+    agents: usize,
+    subset: usize,
+    steps: u64,
+    layout: Layout,
+    run: &dyn Fn(&SirModel),
+) -> Vec<u8> {
+    let m = SirModel::with_layout(SirParams::scaled(subset, agents, steps), 5, layout);
+    run(&m);
+    m.snapshot()
+}
+
+#[test]
+fn sir_ragged_tail_is_bitwise_identical_on_every_engine() {
+    let seed = 11;
+    // Odd and even step counts: after an odd number of compute+swap
+    // steps a double-buffer discipline bug (publishing the wrong buffer,
+    // or skipping the tail block's swap) leaves the buffers crossed.
+    for (agents, subset) in [(257usize, 16usize), (255, 16)] {
+        for steps in [9u64, 10] {
+            for layout in [Layout::Legacy, Layout::Packed] {
+                let reference = sir_state(agents, subset, steps, layout, &|m| {
+                    SequentialEngine::new(seed).run(m);
+                });
+                let label = format!("agents={agents} s={subset} steps={steps} layout={layout}");
+                let par = sir_state(agents, subset, steps, layout, &|m| {
+                    ParallelEngine::new(ProtocolConfig {
+                        workers: 2,
+                        seed,
+                        ..Default::default()
+                    })
+                    .run(m);
+                });
+                assert_eq!(par, reference, "parallel {label}");
+                let step = sir_state(agents, subset, steps, layout, &|m| {
+                    StepwiseEngine::new(2, seed).run(m);
+                });
+                assert_eq!(step, reference, "stepwise {label}");
+                let shard = sir_state(agents, subset, steps, layout, &|m| {
+                    ShardedEngine::new(ShardedConfig {
+                        workers: 2,
+                        seed,
+                        ..Default::default()
+                    })
+                    .run(m);
+                });
+                assert_eq!(shard, reference, "sharded {label}");
+                let virt = sir_state(agents, subset, steps, layout, &|m| {
+                    VirtualEngine {
+                        workers: 2,
+                        tasks_per_cycle: 6,
+                        seed,
+                        cost: CostModel::default(),
+                        trace: adapar::TraceMode::Off,
+                    }
+                    .run(m);
+                });
+                assert_eq!(virt, reference, "virtual {label}");
+            }
+        }
+    }
+}
+
+#[test]
+fn sir_census_is_consistent_at_ragged_sizes() {
+    for layout in [Layout::Legacy, Layout::Packed, Layout::PackedLinear] {
+        let m = SirModel::with_layout(SirParams::scaled(16, 257, 9), 5, layout);
+        SequentialEngine::new(11).run(&m);
+        let (s, i, r) = m.census();
+        assert_eq!(s + i + r, 257, "{layout}: census must cover every agent");
+        let snap = m.snapshot();
+        assert_eq!(snap.len(), 257, "{layout}");
+        assert_eq!(snap.iter().filter(|&&h| h == 0).count(), s, "{layout}");
+        assert_eq!(snap.iter().filter(|&&h| h == 1).count(), i, "{layout}");
+        assert_eq!(snap.iter().filter(|&&h| h == 2).count(), r, "{layout}");
+    }
+}
+
+// --------------------------------------------------- Ising at odd side
+
+#[test]
+fn ising_odd_side_sharded_matches_sequential() {
+    let params = IsingParams {
+        side: 33, // odd side: every grid tiling is ragged
+        temperature: 2.269,
+        steps: 5_000,
+    };
+    let seed = 29;
+    for layout in [Layout::Legacy, Layout::Packed] {
+        let reference = {
+            let m = IsingModel::with_layout(params, 4, layout);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [2usize, 4] {
+            let m = IsingModel::with_layout(params, 4, layout);
+            ShardedEngine::new(ShardedConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(
+                m.snapshot(),
+                reference,
+                "ising side=33 sharded n={workers} layout={layout}"
+            );
+        }
+    }
+}

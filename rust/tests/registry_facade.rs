@@ -285,6 +285,7 @@ fn boxed_engines_dispatch_uniformly() {
             agents: 100,
             steps: 500,
             seed: 3,
+            layout: Default::default(),
             params: adapar::Params::new(),
         },
     )

@@ -1,0 +1,239 @@
+//! SoA state-layer acceptance (ISSUE 9): the bit-packed layout is pure
+//! storage. Relabeling is a pure permutation of agent ids; every layout
+//! produces byte-identical state trajectories on every engine × worker
+//! count; and the packed stores actually shrink the per-task byte
+//! footprint on the migrated models.
+
+use adapar::model::testkit::{env_layouts, env_worker_counts};
+use adapar::model::Model;
+use adapar::models::ising::{IsingModel, IsingParams};
+use adapar::models::sir::{SirModel, SirParams};
+use adapar::models::voter::{VoterModel, VoterParams};
+use adapar::protocol::{ParallelEngine, ProtocolConfig, SequentialEngine, StepwiseEngine};
+use adapar::sched::{ShardedConfig, ShardedEngine};
+use adapar::sim::graph::{
+    bfs_partition, contiguous_partition, grid_partition, ring_lattice, Partition,
+};
+use adapar::vtime::{CostModel, VirtualEngine};
+use adapar::{Layout, Relabeling};
+
+// ------------------------------------------------------------ relabeling
+
+fn assert_pure_permutation(rel: &Relabeling, label: &str) {
+    assert!(rel.is_permutation(), "{label}: not a permutation");
+    let n = rel.len();
+    // relabel ∘ inverse == identity, in both directions.
+    for a in 0..n {
+        let s = rel.slot_of(a) as usize;
+        assert_eq!(rel.agent_of(s) as usize, a, "{label}: agent {a}");
+    }
+    let inv = rel.inverse();
+    assert!(inv.is_permutation(), "{label}: inverse not a permutation");
+    for a in 0..n {
+        assert_eq!(
+            inv.slot_of(rel.agent_of(a) as usize) as usize,
+            a,
+            "{label}: inverse ∘ relabel at {a}"
+        );
+    }
+    // Every slot hit exactly once.
+    let mut seen = vec![false; n];
+    for a in 0..n {
+        let s = rel.slot_of(a) as usize;
+        assert!(!seen[s], "{label}: slot {s} assigned twice");
+        seen[s] = true;
+    }
+}
+
+#[test]
+fn relabelings_from_partitions_are_pure_permutations() {
+    let cases: Vec<(&str, Partition)> = vec![
+        ("contiguous 257/16", contiguous_partition(257, 16)),
+        ("contiguous 255/16", contiguous_partition(255, 16)),
+        ("bfs ring 257/7", bfs_partition(&ring_lattice(257, 6), 7)),
+        ("grid 13x19/5", grid_partition(13, 19, 5)),
+        ("grid 255x255/16", grid_partition(255, 255, 16)),
+    ];
+    for (label, p) in &cases {
+        let rel = Relabeling::from_partition(p);
+        assert_eq!(rel.len(), p.n(), "{label}");
+        assert_pure_permutation(&rel, label);
+        // Each block's slots are contiguous — the locality property the
+        // packed layout exists for.
+        let mut next = 0u32;
+        for b in 0..p.blocks() {
+            for &a in p.members(b) {
+                assert_eq!(rel.slot_of(a as usize), next, "{label}: block {b}");
+                next += 1;
+            }
+        }
+    }
+    // A contiguous partition relabels to the identity.
+    assert!(Relabeling::from_partition(&contiguous_partition(257, 16)).is_identity());
+    assert_pure_permutation(&Relabeling::identity(100), "identity 100");
+}
+
+// ------------------------------------- layout equivalence, five engines
+
+/// SIR at a deliberately ragged size (257 agents, subset 16 → 17 blocks,
+/// one-member tail): the raw final state buffer must be byte-identical
+/// across every layout × engine × worker count, at several trajectory
+/// depths.
+#[test]
+fn every_engine_and_layout_agree_on_the_sir_trajectory() {
+    let seed = 23;
+    for steps in [10u64, 50, 200] {
+        let params = SirParams::scaled(16, 257, steps);
+        let reference = {
+            let m = SirModel::with_layout(params, 5, Layout::Legacy);
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for layout in env_layouts() {
+            let run_and_snapshot = |run: &dyn Fn(&SirModel)| {
+                let m = SirModel::with_layout(params, 5, layout);
+                run(&m);
+                m.snapshot()
+            };
+            let seq = run_and_snapshot(&|m| {
+                SequentialEngine::new(seed).run(m);
+            });
+            assert_eq!(seq, reference, "sequential layout={layout} steps={steps}");
+            for &workers in &env_worker_counts() {
+                let par = run_and_snapshot(&|m| {
+                    ParallelEngine::new(ProtocolConfig {
+                        workers,
+                        seed,
+                        ..Default::default()
+                    })
+                    .run(m);
+                });
+                assert_eq!(par, reference, "parallel n={workers} layout={layout} steps={steps}");
+                let step = run_and_snapshot(&|m| {
+                    StepwiseEngine::new(workers, seed).run(m);
+                });
+                assert_eq!(step, reference, "stepwise n={workers} layout={layout} steps={steps}");
+                let shard = run_and_snapshot(&|m| {
+                    ShardedEngine::new(ShardedConfig {
+                        workers,
+                        seed,
+                        ..Default::default()
+                    })
+                    .run(m);
+                });
+                assert_eq!(shard, reference, "sharded n={workers} layout={layout} steps={steps}");
+                let virt = run_and_snapshot(&|m| {
+                    VirtualEngine {
+                        workers,
+                        tasks_per_cycle: 6,
+                        seed,
+                        cost: CostModel::default(),
+                        trace: adapar::TraceMode::Off,
+                    }
+                    .run(m);
+                });
+                assert_eq!(virt, reference, "virtual n={workers} layout={layout} steps={steps}");
+            }
+        }
+    }
+}
+
+#[test]
+fn voter_and_ising_layouts_agree_on_raw_state() {
+    let seed = 31;
+    // Voter on a ring lattice.
+    let vparams = VoterParams {
+        opinions: 3,
+        steps: 3_000,
+    };
+    let vref = {
+        let m = VoterModel::with_layout(ring_lattice(200, 6), vparams, 6, Layout::Legacy);
+        SequentialEngine::new(seed).run(&m);
+        m.snapshot()
+    };
+    for layout in env_layouts() {
+        let m = VoterModel::with_layout(ring_lattice(200, 6), vparams, 6, layout);
+        ParallelEngine::new(ProtocolConfig {
+            workers: 2,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.snapshot(), vref, "voter layout={layout}");
+        assert_eq!(
+            m.tally().iter().sum::<usize>(),
+            200,
+            "voter layout={layout}: tally covers all agents"
+        );
+    }
+    // Ising on a small torus.
+    let iparams = IsingParams {
+        side: 20,
+        temperature: 2.269,
+        steps: 4_000,
+    };
+    let iref = {
+        let m = IsingModel::with_layout(iparams, 4, Layout::Legacy);
+        SequentialEngine::new(seed).run(&m);
+        m.snapshot()
+    };
+    for layout in env_layouts() {
+        let m = IsingModel::with_layout(iparams, 4, layout);
+        ParallelEngine::new(ProtocolConfig {
+            workers: 2,
+            seed,
+            ..Default::default()
+        })
+        .run(&m);
+        assert_eq!(m.snapshot(), iref, "ising layout={layout}");
+    }
+}
+
+// ------------------------------------------------------- byte footprint
+
+#[test]
+fn packed_layouts_shrink_state_bytes_per_task() {
+    let sir = |layout| {
+        SirModel::with_layout(SirParams::scaled(16, 257, 10), 5, layout).state_bytes_per_task()
+    };
+    let voter = |layout| {
+        VoterModel::with_layout(
+            ring_lattice(200, 6),
+            VoterParams {
+                opinions: 3,
+                steps: 100,
+            },
+            6,
+            layout,
+        )
+        .state_bytes_per_task()
+    };
+    let ising = |layout| {
+        IsingModel::with_layout(
+            IsingParams {
+                side: 20,
+                temperature: 2.269,
+                steps: 100,
+            },
+            4,
+            layout,
+        )
+        .state_bytes_per_task()
+    };
+    for (name, f) in [
+        ("sir", &sir as &dyn Fn(Layout) -> f64),
+        ("voter", &voter),
+        ("ising", &ising),
+    ] {
+        let legacy = f(Layout::Legacy);
+        assert!(legacy > 0.0, "{name}: legacy estimate must be positive");
+        for layout in [Layout::Packed, Layout::PackedLinear] {
+            assert!(
+                f(layout) < legacy,
+                "{name} {layout}: packed must move fewer bytes than legacy \
+                 ({} vs {legacy})",
+                f(layout)
+            );
+        }
+    }
+}
