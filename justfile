@@ -14,6 +14,13 @@ test:
 bench:
     ADAPAR_BENCH_LENIENT=1 cargo bench --bench bench_sched
     ADAPAR_BENCH_LENIENT=1 cargo bench --bench bench_chain --features bench-alloc
+    ADAPAR_BENCH_LENIENT=1 cargo bench --bench bench_scale --features bench-alloc
+
+# The >=1M-agent scale tier alone (BENCH_scale.json): streaming-window
+# arena bounds gate hard; the streamed-vs-materialized throughput ratio
+# is report-only under lenient.
+bench-scale:
+    ADAPAR_BENCH_LENIENT=1 cargo bench --bench bench_scale --features bench-alloc
 
 # Compare the current tree's deterministic structural metrics (and
 # advisory wall-clock) against the committed run-over-run baseline.

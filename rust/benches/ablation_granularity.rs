@@ -23,6 +23,7 @@ fn main() -> adapar::Result<()> {
             seed: 1,
             cost: CostModel::default(),
             trace: adapar::TraceMode::Off,
+            window: 0,
         }
         .run(&m);
         let tasks = rep.totals.executed.max(1);

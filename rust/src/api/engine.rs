@@ -114,6 +114,7 @@ impl Engine for VirtualEngine {
             batch: 1, // the DES models unbatched creation
             seed: self.seed,
             trace: self.trace,
+            window: self.window,
             ..Default::default()
         };
         Ok(model.run_virtual(&cfg, &self.cost, obs))
@@ -195,15 +196,20 @@ impl std::fmt::Display for EngineKind {
 }
 
 /// Build a boxed engine for a kind and workflow parameters. `batch` is
-/// the chain engines' creation/routing batch size `B`; `cost` is only
-/// consulted by the virtual testbed; `telemetry` selects the (inert)
-/// histogram-sampling mode on the threaded engines; `trace` the equally
-/// inert causal-tracing mode (every engine honours it).
+/// the chain engines' creation/routing batch size `B`; `window` the
+/// streaming materialization window `W` (`0` = fully materialized;
+/// DESIGN.md §14 — honoured by every chain-based engine, ignored by the
+/// chainless baselines); `cost` is only consulted by the virtual
+/// testbed; `telemetry` selects the (inert) histogram-sampling mode on
+/// the threaded engines; `trace` the equally inert causal-tracing mode
+/// (every engine honours it).
+#[allow(clippy::too_many_arguments)]
 pub fn engine_for(
     kind: EngineKind,
     workers: usize,
     tasks_per_cycle: u32,
     batch: u32,
+    window: u64,
     seed: u64,
     cost: CostModel,
     telemetry: TelemetryMode,
@@ -215,6 +221,7 @@ pub fn engine_for(
             workers,
             tasks_per_cycle,
             batch,
+            window,
             seed,
             collect_timing: false,
             telemetry,
@@ -229,6 +236,7 @@ pub fn engine_for(
             workers,
             tasks_per_cycle,
             batch,
+            window,
             seed,
             telemetry,
             trace,
@@ -240,6 +248,7 @@ pub fn engine_for(
             seed,
             cost,
             trace,
+            window,
         }),
     }
 }

@@ -319,6 +319,7 @@ impl<M: Model> DynModel for Runnable<M> {
             seed: cfg.seed,
             cost: *cost,
             trace: cfg.trace,
+            window: cfg.window,
         };
         match obs {
             None => engine.run(&self.model),
@@ -339,6 +340,7 @@ impl<M: Model> DynModel for Runnable<M> {
             seed: cfg.seed,
             cost: *cost,
             trace: cfg.trace,
+            window: cfg.window,
         };
         match obs {
             None => engine.run_chaos(&self.model, hook),

@@ -738,6 +738,12 @@ pub struct EpochGate<S: TaskSource> {
     emitted: u64,
     budget: u64,
     inner_exhausted: bool,
+    /// Optional bounded materialization window (ISSUE 10). The window
+    /// lives *inside* the gate — not wrapped around it — because the
+    /// gate must distinguish a temporary window stall from the inner
+    /// source's true exhaustion (a wrapped `StreamingSource`'s `None`
+    /// would be latched as permanent by `next_task`/`finished`).
+    window: Option<crate::model::Window>,
 }
 
 impl<S: TaskSource> EpochGate<S> {
@@ -750,7 +756,39 @@ impl<S: TaskSource> EpochGate<S> {
             emitted: 0,
             budget: 0,
             inner_exhausted: false,
+            window: None,
         }
+    }
+
+    /// Clamp emission to a bounded materialization window: `next_task`
+    /// returns `None` — reported by [`window_stalled`](Self::window_stalled),
+    /// *not* latched as exhaustion — while `emitted - retired` would
+    /// reach the cap. Set before the first epoch opens.
+    pub fn set_window(&mut self, window: Option<crate::model::Window>) {
+        debug_assert_eq!(self.emitted, 0, "window must be set before the run");
+        self.window = window;
+    }
+
+    /// The window's retirement handle, if a window is installed. The
+    /// engine hands this to workers so each erased task reopens window
+    /// room.
+    pub fn retire_handle(&self) -> Option<crate::model::RetireHandle> {
+        self.window.as_ref().map(|w| w.handle())
+    }
+
+    /// Whether the last `None` from [`next_task`](TaskSource::next_task)
+    /// was a *temporary* window stall: budget remains, the source can
+    /// still produce, but the window is full. Engines must treat this as
+    /// "keep cycling" (outstanding tasks will retire and reopen room),
+    /// never as epoch exhaustion — that is what keeps streaming traces
+    /// byte-identical to materialized ones (DESIGN.md §14).
+    pub fn window_stalled(&self) -> bool {
+        let Some(w) = &self.window else {
+            return false;
+        };
+        self.emitted < self.budget
+            && !(self.inner_exhausted && self.pending.is_none())
+            && !w.has_room(self.emitted)
     }
 
     /// Open the next epoch: allow `every` more tasks (`u64::MAX`-safe).
@@ -800,6 +838,15 @@ impl<S: TaskSource> TaskSource for EpochGate<S> {
         if self.emitted >= self.budget {
             return None;
         }
+        // Window stall: a *temporary* `None` (window room reappears as
+        // workers retire tasks). Checked before the pending/inner draws
+        // so a full window never consumes lookahead or latches
+        // `inner_exhausted`.
+        if let Some(w) = &self.window {
+            if !w.has_room(self.emitted) {
+                return None;
+            }
+        }
         if let Some(recipe) = self.pending.take() {
             self.emitted += 1;
             return Some(recipe);
@@ -823,6 +870,10 @@ impl<S: TaskSource> TaskSource for EpochGate<S> {
         self.inner
             .size_hint()
             .map(|n| n + u64::from(self.pending.is_some()))
+    }
+
+    fn stalled(&self) -> bool {
+        self.window_stalled()
     }
 }
 

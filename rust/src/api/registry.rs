@@ -468,6 +468,9 @@ mod bundled {
                 initial_infected: ctx
                     .params
                     .f64_or("initial_infected", SirParams::default().initial_infected)?,
+                // Scale-tier contact graph (ISSUE 10): extra seeded
+                // long-range strides; 0 keeps the paper's ring lattice.
+                long_links: ctx.params.usize_or("long_links", 0)?,
             };
             let model = SirModel::with_layout(params, ctx.seed ^ 0x51, ctx.layout);
             Ok(Runnable::new("sir", model)

@@ -67,6 +67,12 @@ pub struct Simulation {
     /// acquisition on the chain engines; `1` = classic unbatched
     /// protocol). Trace-invariant: any value yields the same results.
     pub batch: u32,
+    /// Streaming materialization window `W` (DESIGN.md §14): at most
+    /// this many tasks are live per chain engine at any instant; `0` =
+    /// fully materialized. Result-invariant like `batch`; only memory
+    /// (`chain.arena_high_water`) changes. Defaults from
+    /// `ADAPAR_WINDOW`/`ADAPAR_STREAMING`.
+    pub window: u64,
     /// Simulation seed.
     pub seed: u64,
     /// Agent count `N` (0 = model default).
@@ -102,6 +108,7 @@ impl Default for Simulation {
             workers: ProtocolConfig::default().workers,
             tasks_per_cycle: 6,
             batch: ProtocolConfig::default().batch,
+            window: crate::model::stream::env_window(),
             seed: 1,
             agents: 0,
             steps: 0,
@@ -158,6 +165,7 @@ impl Simulation {
             self.workers,
             self.tasks_per_cycle,
             self.batch,
+            self.window,
             self.seed,
             self.cost.unwrap_or_default(),
             self.telemetry,
@@ -234,6 +242,13 @@ impl SimulationBuilder {
     /// protocol; results are identical at any value).
     pub fn batch(mut self, b: u32) -> Self {
         self.sim.batch = b;
+        self
+    }
+
+    /// Streaming materialization window `W` (`0` = fully materialized;
+    /// results are identical at any value — only peak memory changes).
+    pub fn window(mut self, w: u64) -> Self {
+        self.sim.window = w;
         self
     }
 
@@ -432,6 +447,40 @@ mod tests {
         assert!(
             b1.report.to_json().render().contains("\"batch\":1"),
             "batch must surface in --json reports"
+        );
+    }
+
+    #[test]
+    fn window_flows_from_builder_and_bounds_the_arena() {
+        let run = |window| {
+            Simulation::builder()
+                .model("voter")
+                .engine(EngineKind::Parallel)
+                .workers(2)
+                .agents(120)
+                .steps(1_500)
+                .seed(4)
+                .window(window)
+                .run()
+                .unwrap()
+        };
+        let full = run(0);
+        let streamed = run(16);
+        assert_eq!(
+            full.observable, streamed.observable,
+            "streaming must not change results"
+        );
+        // Live tasks never exceed W, so peak occupancy is W + sentinels.
+        assert!(
+            streamed.report.chain.arena_high_water <= 16 + 2,
+            "high_water={}",
+            streamed.report.chain.arena_high_water
+        );
+        assert!(
+            streamed.report.chain.arena_high_water < full.report.chain.arena_high_water,
+            "streamed {} vs materialized {}",
+            streamed.report.chain.arena_high_water,
+            full.report.chain.arena_high_water
         );
     }
 

@@ -244,6 +244,54 @@ impl<R> Arena<R> {
         }
     }
 
+    /// Drop initialized growth chunks beyond the smallest prefix whose
+    /// capacity covers `keep_slots`, and reset the allocator to a
+    /// pristine state — the shrink half of the bounded-arena contract
+    /// (DESIGN.md §14): after a burst, `capacity` falls back toward the
+    /// live-estimate instead of pinning the peak forever.
+    ///
+    /// # Quiescence contract
+    /// Exclusive access (`&mut self`), plus: the only live slots are the
+    /// chain's sentinels, which occupy the lowest indices of chunk 0
+    /// (they are allocated first and never released), and no handle into
+    /// any chunk survives outside the arena. The chain layer guarantees
+    /// this by calling only on a drained chain between epochs. The free
+    /// list is rebuilt empty and the bump pointer rewound past the
+    /// sentinels, so freed slots in kept chunks become reachable again
+    /// through fresh allocation and nothing can reference a dropped
+    /// chunk. Chunk 0 is never dropped (the sentinels live there);
+    /// `high_water` is deliberately untouched — it reports the run's
+    /// true peak.
+    pub(crate) fn shrink_on_quiesce(&mut self, keep_slots: usize) {
+        let live = self.in_use.load(Ordering::Relaxed);
+        debug_assert!(
+            (live as usize) <= self.chunk_len(0),
+            "live slots must all sit in chunk 0 at quiesce"
+        );
+        let mut kept = self.chunk_len(0);
+        let mut dropped = 0usize;
+        for c in 1..MAX_CHUNKS {
+            if self.chunks[c].get().is_none() {
+                continue;
+            }
+            let len = self.chunk_len(c);
+            if kept >= keep_slots {
+                // Once the kept prefix covers the target, every later
+                // chunk goes: kept chunks stay a contiguous prefix, as
+                // `locate` requires.
+                self.chunks[c] = OnceLock::new();
+                dropped += len;
+            } else {
+                kept += len;
+            }
+        }
+        self.free.store(u32::MAX as u64, Ordering::Release);
+        self.next_fresh.store(live, Ordering::Relaxed);
+        if dropped > 0 {
+            self.capacity.fetch_sub(dropped as u32, Ordering::Relaxed);
+        }
+    }
+
     /// Slots currently backed by allocated chunks.
     pub fn capacity(&self) -> usize {
         self.capacity.load(Ordering::Relaxed) as usize
@@ -319,6 +367,41 @@ mod tests {
         assert_eq!(a.alloc(), i[3], "LIFO reuse");
         assert_eq!(a.alloc(), i[1]);
         assert_eq!(a.recycled(), 2);
+    }
+
+    #[test]
+    fn shrink_drops_growth_chunks_and_keeps_the_prefix() {
+        let mut a: Arena<u32> = Arena::with_capacity(64);
+        let _sentinels = (a.alloc(), a.alloc());
+        let idxs: Vec<u32> = (0..500).map(|_| a.alloc()).collect();
+        assert!(a.capacity() >= 502);
+        for &i in &idxs {
+            a.release(i);
+        }
+        a.shrink_on_quiesce(64);
+        assert_eq!(a.capacity(), 64, "growth chunks dropped");
+        assert_eq!(a.live(), 2, "sentinels survive");
+        assert_eq!(a.high_water(), 502, "the run's peak is preserved");
+        assert_eq!(a.alloc(), 2, "allocator rewound past the sentinels");
+    }
+
+    #[test]
+    fn shrink_keeps_enough_chunks_to_cover_the_target() {
+        let mut a: Arena<u32> = Arena::with_capacity(64);
+        let _sentinels = (a.alloc(), a.alloc());
+        let idxs: Vec<u32> = (0..500).map(|_| a.alloc()).collect();
+        for &i in &idxs {
+            a.release(i);
+        }
+        // 64 + 64 + 128 = 256 covers 130; chunk 3 (256 slots) goes.
+        a.shrink_on_quiesce(130);
+        assert_eq!(a.capacity(), 256);
+        // Regrowth after a shrink is clean: fresh allocations walk the
+        // kept prefix and re-initialize dropped chunks on demand.
+        for expect in 2..400u32 {
+            assert_eq!(a.alloc(), expect);
+        }
+        assert!(a.capacity() >= 400);
     }
 
     #[test]

@@ -333,6 +333,18 @@ impl<R> Chain<R> {
         self.exhausted.store(false, Ordering::Release);
     }
 
+    /// Shrink the arena back toward a `keep_tasks` live-task capacity
+    /// (plus the two sentinels), dropping growth chunks acquired during
+    /// a burst so `arena_capacity` tracks the live estimate instead of
+    /// pinning the run's peak (DESIGN.md §14). **Quiescent use only** —
+    /// the chain must be drained (no live tasks, no running workers),
+    /// exactly like [`reopen`](Chain::reopen); `&mut self` enforces the
+    /// exclusivity.
+    pub fn shrink_on_quiesce(&mut self, keep_tasks: usize) {
+        debug_assert!(self.is_empty(), "shrink requires a drained chain");
+        self.arena.shrink_on_quiesce(keep_tasks.saturating_add(2));
+    }
+
     // -- structural mutation ------------------------------------------------
 
     /// Allocate and initialize one unpublished node. The slot comes from
@@ -741,6 +753,30 @@ mod tests {
         assert_eq!(c.arena_capacity(), cap0, "no growth at steady state");
         assert!(c.arena_high_water() <= 3, "2 sentinels + 1 live task");
         assert_eq!(c.arena_recycled(), 9_999, "all but the first alloc reuse");
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn shrink_on_quiesce_rewinds_burst_growth() {
+        let mut c: Chain<u64> = Chain::with_capacity(16);
+        let cap0 = c.arena_capacity();
+        // Burst: hold 2 000 live tasks, forcing growth chunks.
+        let nodes: Vec<Handle> = (0..2_000).map(|i| append(&c, i)).collect();
+        assert!(c.arena_capacity() > cap0, "burst must grow the arena");
+        for n in nodes {
+            erase(&c, n);
+        }
+        c.shrink_on_quiesce(16);
+        assert_eq!(c.arena_capacity(), cap0, "drained chain falls back");
+        assert_eq!(c.arena_live(), 2, "only the sentinels survive");
+        assert!(c.arena_high_water() >= 2_000, "peak stays reported");
+        // The chain keeps working after a shrink: canonical order and
+        // recycling behave as on a fresh chain.
+        let a = append(&c, 7);
+        let b = append(&c, 8);
+        assert_eq!(c.validate().unwrap(), vec![2_000, 2_001]);
+        erase(&c, a);
+        erase(&c, b);
         assert!(c.is_empty());
     }
 

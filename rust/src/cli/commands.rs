@@ -136,7 +136,7 @@ fn observe_plan_from(args: &Args, with_progress: bool) -> Result<ObservePlan> {
 /// The `--json` payload for one run. `sampling_lossy` flags a saturated
 /// telemetry run (dropped histogram samples) so downstream consumers
 /// don't trust under-counted histograms silently.
-fn run_json(cfg: &SweepConfig, out: &SimOutcome, size: usize, seed: u64) -> Json {
+fn run_json(cfg: &SweepConfig, out: &SimOutcome, size: usize, seed: u64, window: u64) -> Json {
     let lossy = out
         .report
         .telemetry
@@ -146,6 +146,13 @@ fn run_json(cfg: &SweepConfig, out: &SimOutcome, size: usize, seed: u64) -> Json
         ("model".into(), Json::from(cfg.model.clone())),
         ("size".into(), Json::from(size)),
         ("seed".into(), Json::from(seed)),
+        ("window".into(), Json::from(window)),
+        // Peak live heap (bytes) — zero unless the counting allocator is
+        // installed (`bench-alloc` builds); null would hide the schema.
+        (
+            "peak_alloc_bytes".into(),
+            Json::from(crate::util::alloc::peak_bytes()),
+        ),
         ("sampling_lossy".into(), Json::from(lossy)),
         ("report".into(), out.report.to_json()),
         ("observations".into(), out.observable.to_json()),
@@ -165,6 +172,13 @@ pub fn run(args: &Args) -> Result<()> {
         cfg.effective_sizes().first().copied().unwrap_or(1),
     )?;
     let seed = args.get_parse("seed", 1u64)?;
+    // `--window <n>` bounds live tasks per chain (0 = materialized);
+    // `--streaming` is shorthand for the default window. Both default
+    // from ADAPAR_WINDOW / ADAPAR_STREAMING (ISSUE 10).
+    let mut window = args.get_parse("window", crate::model::stream::env_window())?;
+    if args.has_flag("streaming") && window == 0 {
+        window = crate::model::stream::DEFAULT_WINDOW;
+    }
     let json = args.has_flag("json");
     let plan = observe_plan_from(args, !json)?;
     let telemetry = args.get_parse(
@@ -194,6 +208,7 @@ pub fn run(args: &Args) -> Result<()> {
         .tasks_per_cycle(cfg.tasks_per_cycle)
         .batch(cfg.batch)
         .seed(seed)
+        .window(window)
         .agents(cfg.agents)
         .steps(cfg.steps)
         .size(size)
@@ -235,7 +250,7 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
     if json {
-        println!("{}", run_json(&cfg, &out, size, seed).render());
+        println!("{}", run_json(&cfg, &out, size, seed, window).render());
         return Ok(());
     }
     println!(
@@ -262,6 +277,20 @@ pub fn run(args: &Args) -> Result<()> {
             out.report.chain.arena_high_water,
             out.report.chain.arena_capacity,
             out.report.chain.arena_recycled
+        );
+    }
+    // Memory line (ISSUE 10): always printed — the arena high-water is
+    // the bounded-memory contract's observable, window 0 = materialized.
+    {
+        let peak = crate::util::alloc::peak_bytes();
+        let peak_note = if peak > 0 {
+            format!(" peak_alloc={:.1} MiB", peak as f64 / (1024.0 * 1024.0))
+        } else {
+            String::new()
+        };
+        println!(
+            "memory: window={window} arena_high_water={} arena_capacity={}{peak_note}",
+            out.report.chain.arena_high_water, out.report.chain.arena_capacity
         );
     }
     if out.report.per_worker.len() > 1 {

@@ -20,12 +20,13 @@ use crate::util::cli::{Args, Spec};
 const SPEC: Spec = Spec {
     options: &[
         "model", "engine", "workers", "size", "sizes", "seeds", "seed", "steps", "agents",
-        "c", "batch", "config", "preset", "out", "sample", "params", "every", "observe",
-        "move-radius", "models", "plans", "telemetry", "trace", "trace-mode", "ledger",
-        "report",
+        "c", "batch", "window", "config", "preset", "out", "sample", "params", "every",
+        "observe", "move-radius", "models", "plans", "telemetry", "trace", "trace-mode",
+        "ledger", "report",
     ],
     flags: &[
         "paper-scale", "calibrate", "help", "json", "update", "seed-regression", "lenient",
+        "streaming",
     ],
 };
 
@@ -62,6 +63,11 @@ COMMON OPTIONS:
   --batch <n>                           creation batch size B: tasks linked per tail-lock
                                         acquisition, clamped to the cycle's remaining C
                                         (1 = classic protocol; results identical at any B)
+  --window <n>                          run: streaming-window cap on live tasks per chain
+                                        (0 = materialized; results identical at any window;
+                                        env ADAPAR_WINDOW sets the default)
+  --streaming                           run: shorthand for the default window (4096); env
+                                        ADAPAR_STREAMING=1 does the same
   --params <k=v,k2=v2>                  model-specific parameters (registry bag)
   --move-radius <r>                     schelling: bound relocations to Chebyshev radius r
                                         (0 = unbounded; >0 makes sharded runs mostly local)

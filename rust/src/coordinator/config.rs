@@ -82,7 +82,35 @@ impl SweepConfig {
                 sizes: vec![10, 20, 50, 100, 200, 500, 1000],
                 ..Default::default()
             },
-            other => crate::bail!("unknown preset `{other}` (fig2|fig3)"),
+            // Scale tier (ISSUE 10): the ≥1M-agent workloads. Meant to
+            // run with a streaming window (ADAPAR_STREAMING=1 or
+            // `run --streaming`) so chain memory stays bounded.
+            "scale-sir" => {
+                let mut params = Params::new();
+                params.set("long_links", 8i64);
+                Self {
+                    model: "sir".to_string(),
+                    engine: EngineKind::Parallel,
+                    sizes: vec![1_000],
+                    workers: vec![4],
+                    seeds: vec![1],
+                    agents: 1 << 20,
+                    steps: 10,
+                    params,
+                    ..Default::default()
+                }
+            }
+            "scale-ising" => Self {
+                model: "ising".to_string(),
+                engine: EngineKind::Parallel,
+                sizes: vec![1],
+                workers: vec![4],
+                seeds: vec![1],
+                agents: 1024 * 1024,
+                steps: 500_000,
+                ..Default::default()
+            },
+            other => crate::bail!("unknown preset `{other}` (fig2|fig3|scale-sir|scale-ising)"),
         })
     }
 
@@ -225,10 +253,13 @@ mod tests {
 
     #[test]
     fn presets_are_valid() {
-        for p in ["fig2", "fig3"] {
+        for p in ["fig2", "fig3", "scale-sir", "scale-ising"] {
             SweepConfig::preset(p).unwrap().validate().unwrap();
         }
         assert!(SweepConfig::preset("fig9").is_err());
+        let scale = SweepConfig::preset("scale-sir").unwrap();
+        assert!(scale.effective_agents() >= 1 << 20, "scale tier is >= 1M agents");
+        assert_eq!(scale.params.usize_or("long_links", 0).unwrap(), 8);
     }
 
     #[test]

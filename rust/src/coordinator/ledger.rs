@@ -92,7 +92,10 @@ pub fn collect() -> Result<Vec<BenchMetrics>> {
     // The layout is pinned (never read from `ADAPAR_LAYOUT`) so the
     // ledger's structural metrics — `bytes_per_task` in particular —
     // stay reproducible regardless of the environment.
-    let chain = |model: &str, agents: usize, steps: u64, size: usize, seed: u64| {
+    // The window is likewise pinned per scenario (never from
+    // ADAPAR_WINDOW/ADAPAR_STREAMING): `arena_high_water` is structural
+    // and must not depend on the environment the gate runs in.
+    let chain = |model: &str, agents: usize, steps: u64, size: usize, seed: u64, window: u64| {
         Simulation::builder()
             .model(model)
             .engine(EngineKind::Parallel)
@@ -102,11 +105,16 @@ pub fn collect() -> Result<Vec<BenchMetrics>> {
             .steps(steps)
             .size(size)
             .seed(seed)
+            .window(window)
             .layout(crate::sim::soa::Layout::Packed)
             .run()
     };
-    let voter = chain("voter", 240, 4_000, 0, 7)?;
-    let sir = chain("sir", 200, 50, 20, 11)?;
+    let voter = chain("voter", 240, 4_000, 0, 7, 0)?;
+    let sir = chain("sir", 200, 50, 20, 11, 0)?;
+    // The same SIR workload through a 32-task streaming window (ISSUE
+    // 10): results are identical, but `arena_high_water` must collapse
+    // from ~workload-sized to window-sized.
+    let sir_streamed = chain("sir", 200, 50, 20, 11, 32)?;
     let sched = Simulation::builder()
         .model("voter")
         .engine(EngineKind::Sharded)
@@ -115,6 +123,7 @@ pub fn collect() -> Result<Vec<BenchMetrics>> {
         .agents(240)
         .steps(4_000)
         .seed(7)
+        .window(0)
         .layout(crate::sim::soa::Layout::Packed)
         .run()?;
     Ok(vec![
@@ -125,6 +134,10 @@ pub fn collect() -> Result<Vec<BenchMetrics>> {
         BenchMetrics {
             name: "chain_sir".into(),
             metrics: chain_metrics(&sir.report),
+        },
+        BenchMetrics {
+            name: "chain_sir_streamed".into(),
+            metrics: chain_metrics(&sir_streamed.report),
         },
         BenchMetrics {
             name: "sched_voter".into(),
@@ -536,7 +549,7 @@ mod tests {
     fn collect_produces_deterministic_structural_metrics() {
         let a = collect().unwrap();
         let b = collect().unwrap();
-        assert_eq!(a.len(), 3);
+        assert_eq!(a.len(), 4);
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.name, y.name);
             for ((k, vx), (_, vy)) in x.metrics.iter().zip(&y.metrics) {
@@ -552,6 +565,16 @@ mod tests {
         };
         assert_eq!(metric(by_name("chain_voter"), "tasks_executed"), 4_000.0);
         assert_eq!(metric(by_name("chain_sir"), "tasks_executed"), 2_000.0);
+        assert_eq!(metric(by_name("chain_sir_streamed"), "tasks_executed"), 2_000.0);
         assert_eq!(metric(by_name("sched_voter"), "tasks_executed"), 4_000.0);
+        // The streaming scenario's whole point: identical task counts,
+        // window-bounded arena (32 + 2 sentinels) strictly below the
+        // materialized run's high-water.
+        let streamed_hw = metric(by_name("chain_sir_streamed"), "arena_high_water");
+        assert!(streamed_hw <= 34.0, "streamed high-water {streamed_hw} > window + 2");
+        assert!(
+            streamed_hw < metric(by_name("chain_sir"), "arena_high_water"),
+            "streaming must lower the arena high-water"
+        );
     }
 }

@@ -30,7 +30,10 @@
 //! bulk of the computation at execution, and the bundled models follow
 //! suit.
 
+pub mod stream;
 pub mod testkit;
+
+pub use stream::{RetireHandle, StreamingSource, Window, DEFAULT_WINDOW};
 
 use crate::sim::rng::TaskRng;
 
@@ -108,6 +111,28 @@ pub trait TaskSource: Send {
     /// Callers must degrade gracefully on `None`.
     fn size_hint(&self) -> Option<u64> {
         None
+    }
+
+    /// Whether the last `None` from [`next_task`](TaskSource::next_task)
+    /// was a **temporary** streaming-window stall rather than true
+    /// exhaustion: room reappears once outstanding tasks retire, so the
+    /// caller should keep cycling instead of latching end-of-source.
+    /// Plain sources never stall (the default); the windowed adapters
+    /// ([`StreamingSource`], the engines' `EpochGate`) override this.
+    fn stalled(&self) -> bool {
+        false
+    }
+
+    /// Clamp this source to a bounded materialization [`Window`]
+    /// (ISSUE 10): the returned adapter emits the same tasks in the
+    /// same canonical order, but `next_task` yields `None` — a
+    /// *temporary* stall, see [`stalled`](TaskSource::stalled) —
+    /// whenever `emitted - retired` would exceed the window cap.
+    fn stream(self, window: Window) -> StreamingSource<Self>
+    where
+        Self: Sized,
+    {
+        StreamingSource::new(self, window)
     }
 }
 

@@ -33,6 +33,29 @@ pub fn env_batches() -> Vec<u32> {
     }
 }
 
+/// Streaming windows `W` for the conformance matrix: materialized (`0`),
+/// the degenerate one-task window, an awkward prime, and a deep window —
+/// or the windows pinned by `ADAPAR_STREAM_WINDOWS` (comma list; the CI
+/// matrix jobs set it so each runner covers a subset). The window is
+/// semantically inert back-pressure (ISSUE 10, DESIGN.md §14), so every
+/// window must leave every observation trace byte-identical — this axis
+/// is the test of that claim. Shared by `rust/tests/conformance.rs` and
+/// `rust/tests/stream.rs`.
+pub fn env_stream_windows() -> Vec<u64> {
+    match std::env::var("ADAPAR_STREAM_WINDOWS") {
+        Ok(v) => v
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .expect("ADAPAR_STREAM_WINDOWS must list window sizes (0 = materialized)")
+            })
+            .collect(),
+        Err(_) => vec![0, 1, 7, 64],
+    }
+}
+
 /// Telemetry modes for the conformance matrix: all three (sampling on,
 /// off, and saturated 4-slot rings), or the single mode pinned by
 /// `ADAPAR_TELEMETRY_MODES`. Telemetry is semantically inert, so every

@@ -465,6 +465,7 @@ mod tests {
             seed,
             cost: CostModel::default(),
             trace: crate::trace::TraceMode::Off,
+            window: 0,
         }
         .run(&m);
         assert_eq!(m.snapshot(), reference, "virtual");

@@ -31,7 +31,7 @@
 
 use crate::model::{Model, Record, TaskSource};
 use crate::protocol::SyncModel;
-use crate::sim::graph::{aggregate_graph, contiguous_partition, ring_lattice, Csr, Partition};
+use crate::sim::graph::{aggregate_graph, contact_graph, contiguous_partition, Csr, Partition};
 use crate::sim::rng::{Rng, TaskRng};
 use crate::sim::soa::{Layout, PackedStates, Relabeling};
 use crate::sim::state::SharedSim;
@@ -72,6 +72,11 @@ pub struct SirParams {
     /// Initially infected fraction (not specified in the paper; fixed at
     /// 0.1 so the epidemic neither dies out instantly nor saturates).
     pub initial_infected: f64,
+    /// Seeded long-range strides added to the ring lattice (the scale
+    /// tier's contact graph, ISSUE 10). Each adds 2 to every vertex's
+    /// degree; `0` is the paper's pure ring lattice, byte-identical to
+    /// every prior run.
+    pub long_links: usize,
 }
 
 impl Default for SirParams {
@@ -85,6 +90,7 @@ impl Default for SirParams {
             steps: 3_000,
             subset_size: 100,
             initial_infected: 0.1,
+            long_links: 0,
         }
     }
 }
@@ -166,7 +172,8 @@ impl SirModel {
     /// stream and every logical id are layout-independent, so all layouts
     /// start (and stay) byte-identical.
     pub fn with_layout(params: SirParams, init_seed: u64, layout: Layout) -> Self {
-        let graph = ring_lattice(params.agents, params.degree);
+        // `long_links = 0` makes this exactly the paper's ring lattice.
+        let graph = contact_graph(params.agents, params.degree, params.long_links, init_seed);
         let mut rng = Rng::stream(init_seed, 0x51A);
         let cur: Vec<u8> = (0..params.agents)
             .map(|_| {
@@ -261,6 +268,12 @@ impl SirModel {
         &self.partition
     }
 
+    /// Constant vertex degree of the contact graph: the ring-lattice
+    /// band plus both ends of every long-range stride.
+    pub fn effective_degree(&self) -> usize {
+        self.params.degree + 2 * self.params.long_links
+    }
+
     /// Snapshot of current states (quiescent use).
     pub fn snapshot(&self) -> Vec<u8> {
         match &self.store {
@@ -314,7 +327,7 @@ impl SirModel {
         read: impl Fn(usize) -> u8,
         mut write: impl FnMut(usize, u8),
     ) {
-        let k = self.params.degree as f64;
+        let k = self.effective_degree() as f64;
         for &a in self.partition.members(block) {
             let a = a as usize;
             let u = rng.unit_f64();
@@ -538,7 +551,7 @@ impl Model for SirModel {
         let members = self.partition.members(r.block as usize).len() as f64;
         match r.phase {
             // Per-agent: one RNG draw + a k-neighbour scan when susceptible.
-            SirPhase::Compute => members * (1.0 + self.params.degree as f64 * 0.5),
+            SirPhase::Compute => members * (1.0 + self.effective_degree() as f64 * 0.5),
             SirPhase::Swap => members * 0.25,
         }
     }
@@ -553,7 +566,7 @@ impl Model for SirModel {
             SirStore::Legacy(_) => 1.0,
             SirStore::Packed { cur, .. } => cur.bytes_per_lane(),
         };
-        mu * (self.params.degree as f64 + 4.0) / 2.0 * lane_bytes
+        mu * (self.effective_degree() as f64 + 4.0) / 2.0 * lane_bytes
     }
 }
 
@@ -726,6 +739,41 @@ mod tests {
         assert_eq!(seen.len(), 3 * 2 * p);
         assert_eq!(*seen.iter().next().unwrap(), 0);
         assert_eq!(*seen.iter().last().unwrap(), (3 * 2 * p - 1) as u64);
+    }
+
+    #[test]
+    fn long_links_raise_degree_and_stay_deterministic() {
+        let params = SirParams {
+            long_links: 3,
+            ..small(30)
+        };
+        let seed = 17;
+        let reference = {
+            let m = SirModel::new(params, 5);
+            assert_eq!(m.effective_degree(), 14 + 6);
+            for v in 0..m.params.agents {
+                assert_eq!(m.graph().degree(v), 20, "degree stays constant");
+            }
+            SequentialEngine::new(seed).run(&m);
+            m.snapshot()
+        };
+        for workers in [2, 4] {
+            let m = SirModel::new(params, 5);
+            ParallelEngine::new(ProtocolConfig {
+                workers,
+                seed,
+                ..Default::default()
+            })
+            .run(&m);
+            assert_eq!(m.snapshot(), reference, "n={workers} diverged");
+        }
+        // `long_links = 0` keeps the paper's exact ring lattice.
+        let plain = SirModel::new(small(30), 5);
+        assert_eq!(
+            plain.graph(),
+            &crate::sim::graph::ring_lattice(300, 14),
+            "zero long links must reproduce the ring lattice"
+        );
     }
 
     #[test]

@@ -54,6 +54,14 @@ pub struct ProtocolConfig {
     /// §12). Semantically inert like `telemetry`. Defaults from
     /// `ADAPAR_TRACE` (off unless set).
     pub trace: TraceMode,
+    /// `W` — streaming materialization window (ISSUE 10, DESIGN.md §14):
+    /// at most this many tasks outstanding (created, not yet erased) at
+    /// any instant; `0` disables streaming (materialized epochs, the
+    /// classic behavior). Semantically inert — the canonical task
+    /// order, RNG streams and observation traces are byte-identical for
+    /// every window — only peak arena residency changes. Defaults from
+    /// `ADAPAR_WINDOW` / `ADAPAR_STREAMING` (0 unless set).
+    pub window: u64,
 }
 
 impl Default for ProtocolConfig {
@@ -68,27 +76,47 @@ impl Default for ProtocolConfig {
             collect_timing: false,
             telemetry: TelemetryMode::env_default(),
             trace: TraceMode::env_default(),
+            window: crate::model::stream::env_window(),
         }
     }
 }
 
+/// Burst padding over the per-worker creation allowance when estimating
+/// peak live tasks (ISSUE 10 satellite: the clamp that keeps a huge
+/// `size_hint` from ever pre-sizing an O(total-tasks) arena).
+pub(crate) const LIVE_SAFETY: usize = 4;
+
 /// Arena pre-size for a chain run: the slab only ever needs to hold the
 /// *live* tasks (erased slots recycle), which the creation discipline
-/// bounds at roughly `workers · max(C, B)` — padded ×4 for bursts — and
-/// the source's [`size_hint`](TaskSource::size_hint) bounds from above
-/// (a 100-task run should not reserve thousands of slots). A low
-/// estimate costs amortized chunk growth, never correctness.
+/// bounds at roughly `workers · max(C, B)` — padded ×[`LIVE_SAFETY`]
+/// for bursts — and the source's [`size_hint`](TaskSource::size_hint)
+/// bounds from above (a 100-task run should not reserve thousands of
+/// slots). The live estimate also caps the hint, never the other way
+/// around: a million-task hint pre-sizes only the live-task bound. A
+/// streaming window (`window > 0`) additionally clamps to
+/// `window + max(C, B)` — the window *is* the outstanding-task bound,
+/// plus one creation burst of slack. A low estimate costs amortized
+/// chunk growth, never correctness.
 pub(crate) fn chain_capacity(
     hint: Option<u64>,
     workers: usize,
     tasks_per_cycle: u32,
     batch: u32,
+    window: u64,
 ) -> usize {
     let per_worker = tasks_per_cycle.max(batch).max(1) as usize;
-    let live_estimate = workers.max(1).saturating_mul(per_worker).saturating_mul(4);
-    match hint {
+    let live_estimate = workers
+        .max(1)
+        .saturating_mul(per_worker)
+        .saturating_mul(LIVE_SAFETY);
+    let est = match hint {
         Some(total) => total.min(live_estimate as u64) as usize,
         None => live_estimate,
+    };
+    if window > 0 {
+        est.min((window as usize).saturating_add(per_worker))
+    } else {
+        est
     }
 }
 
@@ -172,13 +200,20 @@ impl ParallelEngine {
         let inner_source = model.source(self.cfg.seed);
         // Pre-size the node arena from the source's own forecast — the
         // previously launcher-only `size_hint` now shapes the hot path.
-        let chain: Chain<M::Recipe> = Chain::with_capacity(chain_capacity(
+        let cap = chain_capacity(
             inner_source.size_hint(),
             self.cfg.workers,
             self.cfg.tasks_per_cycle,
             self.cfg.batch,
-        ));
-        let source = Mutex::new(EpochGate::new(inner_source));
+            self.cfg.window,
+        );
+        let mut chain: Chain<M::Recipe> = Chain::with_capacity(cap);
+        let mut gate = EpochGate::new(inner_source);
+        if self.cfg.window > 0 {
+            gate.set_window(Some(crate::model::Window::new(self.cfg.window)));
+        }
+        let retire = gate.retire_handle();
+        let source = Mutex::new(gate);
         // The registry is the single source of truth for run statistics:
         // workers publish onto their rows at each epoch's end, and the
         // report's `per_worker`/`chain` stats are views reconstructed
@@ -215,6 +250,7 @@ impl ParallelEngine {
                 batch: self.cfg.batch,
                 collect_timing: self.cfg.collect_timing,
                 stalls: &stalls,
+                retire: retire.clone(),
             };
             source.lock().unwrap().open(every);
             if self.cfg.workers == 1 {
@@ -254,6 +290,10 @@ impl ParallelEngine {
                 break;
             }
             chain.reopen();
+            // Quiescent shrink (ISSUE 10): release arena chunks a burst
+            // may have grown beyond the steady-state estimate, so
+            // `arena_capacity` tracks live tasks across epochs too.
+            chain.shrink_on_quiesce(cap);
         }
         let wall = t0.elapsed();
 
@@ -513,10 +553,66 @@ mod tests {
 
     #[test]
     fn capacity_heuristic_respects_hint_and_floor() {
-        assert_eq!(chain_capacity(Some(10), 4, 6, 16), 10, "small run, small slab");
-        let est = chain_capacity(None, 4, 6, 16);
-        assert_eq!(est, 4 * 16 * 4);
-        assert_eq!(chain_capacity(Some(1 << 40), 4, 6, 16), est, "hint caps at live estimate");
-        assert_eq!(chain_capacity(Some(0), 1, 1, 1), 0, "arena clamps internally");
+        assert_eq!(chain_capacity(Some(10), 4, 6, 16, 0), 10, "small run, small slab");
+        let est = chain_capacity(None, 4, 6, 16, 0);
+        assert_eq!(est, 4 * 16 * LIVE_SAFETY);
+        assert_eq!(
+            chain_capacity(Some(1 << 40), 4, 6, 16, 0),
+            est,
+            "hint caps at live estimate"
+        );
+        assert_eq!(chain_capacity(Some(0), 1, 1, 1, 0), 0, "arena clamps internally");
+        // A streaming window additionally clamps to window + one burst.
+        assert_eq!(chain_capacity(Some(1 << 40), 4, 6, 16, 32), 32 + 16);
+        assert_eq!(
+            chain_capacity(Some(1 << 40), 4, 6, 16, 1 << 30),
+            est,
+            "a huge window never raises the estimate"
+        );
+    }
+
+    #[test]
+    fn streaming_window_bounds_arena_and_matches_sequential() {
+        // ISSUE 10: a windowed run must be state-identical to the
+        // sequential engine while the arena high water stays within the
+        // window (+2 sentinels) — O(W), not O(total tasks).
+        let seed = 21;
+        let expected = run_sequentially(&fresh(5_000, 8), seed);
+        for workers in [1, 2, 4] {
+            let model = fresh(5_000, 8);
+            let report = ParallelEngine::new(ProtocolConfig {
+                workers,
+                tasks_per_cycle: 64,
+                batch: 16,
+                seed,
+                window: 32,
+                ..Default::default()
+            })
+            .run(&model);
+            assert_eq!(model.cells_snapshot(), expected, "n={workers} diverged");
+            assert_eq!(report.totals.executed, 5_000);
+            assert!(
+                report.chain.arena_high_water <= 32 + 2,
+                "n={workers}: high water {} exceeds the window",
+                report.chain.arena_high_water
+            );
+        }
+    }
+
+    #[test]
+    fn window_of_one_serializes_but_completes() {
+        let seed = 33;
+        let expected = run_sequentially(&fresh(400, 4), seed);
+        let model = fresh(400, 4);
+        let report = ParallelEngine::new(ProtocolConfig {
+            workers: 3,
+            seed,
+            window: 1,
+            ..Default::default()
+        })
+        .run(&model);
+        assert_eq!(model.cells_snapshot(), expected);
+        assert_eq!(report.totals.executed, 400);
+        assert!(report.chain.arena_high_water <= 3, "1 task + 2 sentinels");
     }
 }

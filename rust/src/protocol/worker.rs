@@ -77,6 +77,11 @@ pub(crate) struct RunCtx<'a, M: Model, S: TaskSource<Recipe = M::Recipe>> {
     /// `worker_loop` call — i.e. once per epoch, before the cycle loop —
     /// so the per-task hot path carries no injection branch.
     pub stalls: &'a [Duration],
+    /// Streaming-window retirement handle (ISSUE 10): bumped once per
+    /// erased task so the gated source regains materialization room.
+    /// `None` on materialized runs — the single `Option` branch per
+    /// erase is the whole hot-path cost of the feature when off.
+    pub retire: Option<crate::model::RetireHandle>,
 }
 
 /// Outcome of processing an arrived-at node within a cycle.
@@ -149,9 +154,20 @@ pub(crate) fn worker_loop<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 // allowance, so batching never loosens the growth cap.
                 let want = batch.min((ctx.tasks_per_cycle - created_this_cycle) as usize);
                 debug_assert!(scratch.is_empty());
-                let got = ctx.source.lock().unwrap().next_batch(&mut scratch, want);
+                let (got, stalled) = {
+                    let mut src = ctx.source.lock().unwrap();
+                    let got = src.next_batch(&mut scratch, want);
+                    // Distinguish (under the same lock hold) a temporary
+                    // streaming-window stall from true epoch exhaustion:
+                    // a stall must NOT latch `exhausted` — the window
+                    // reopens as outstanding tasks retire, and ending the
+                    // epoch early would corrupt the observation trace.
+                    (got, got == 0 && src.stalled())
+                };
                 if got == 0 {
-                    ctx.chain.set_exhausted();
+                    if !stalled {
+                        ctx.chain.set_exhausted();
+                    }
                     ctx.chain.release(ctx.chain.tail());
                     ctx.chain.release(current);
                     break; // cycle ends
@@ -282,6 +298,11 @@ fn process<M: Model, S: TaskSource<Recipe = M::Recipe>>(
                 ctx.chain.acquire(node);
                 ctx.chain.unlink(node);
                 ctx.chain.release(node);
+                // Streaming: the erased task's window room reopens here
+                // (conservative Relaxed counter — see model::stream).
+                if let Some(r) = &ctx.retire {
+                    r.retire(1);
+                }
                 stats.executed += 1;
                 Processed::ExecutedCycleEnds
             }

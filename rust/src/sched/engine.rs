@@ -98,6 +98,14 @@ pub struct ShardedConfig {
     /// §12). Semantically inert like telemetry. Defaults from
     /// `ADAPAR_TRACE`.
     pub trace: TraceMode,
+    /// `W` — streaming materialization window (ISSUE 10, DESIGN.md
+    /// §14): at most this many *canonical* tasks outstanding (routed,
+    /// not yet executed) at any instant; `0` disables streaming.
+    /// Boundary tasks additionally pin one fence per touched shard, so
+    /// the node bound is `O(W)` with the fence fan-out as the constant.
+    /// Semantically inert (byte-identical traces at any value).
+    /// Defaults from `ADAPAR_WINDOW` / `ADAPAR_STREAMING`.
+    pub window: u64,
 }
 
 impl Default for ShardedConfig {
@@ -115,6 +123,7 @@ impl Default for ShardedConfig {
             partition: PartitionPolicy::Auto,
             telemetry: TelemetryMode::env_default(),
             trace: TraceMode::env_default(),
+            window: crate::model::stream::env_window(),
         }
     }
 }
@@ -234,12 +243,18 @@ impl ShardedEngine {
             2,
             self.cfg.tasks_per_cycle,
             self.cfg.batch,
+            self.cfg.window,
         );
-        let chains: Vec<Chain<ShardItem<M::Recipe>>> = (0..shards)
+        let mut chains: Vec<Chain<ShardItem<M::Recipe>>> = (0..shards)
             .map(|_| Chain::with_capacity(per_chain_cap))
             .collect();
-        let spill: Chain<Arc<Boundary<M::Recipe>>> = Chain::with_capacity(per_chain_cap);
-        let splitter = Mutex::new(Splitter::<M>::new(source, map));
+        let mut spill: Chain<Arc<Boundary<M::Recipe>>> = Chain::with_capacity(per_chain_cap);
+        let mut sp = Splitter::<M>::new(source, map);
+        if self.cfg.window > 0 {
+            sp.set_window(Some(crate::model::Window::new(self.cfg.window)));
+        }
+        let retire = sp.retire_handle();
+        let splitter = Mutex::new(sp);
         let costs = CostProbe::new(blocks);
         let closed = AtomicBool::new(false);
         let per_shard_executed: Vec<AtomicU64> =
@@ -251,20 +266,6 @@ impl ShardedEngine {
         // and shards fed.
         let backlog_cap = (shards.max(self.cfg.workers) * self.cfg.tasks_per_cycle as usize * 8)
             .max(256);
-        let ctx = ShardCtx {
-            model,
-            chains: &chains,
-            spill: &spill,
-            splitter: &splitter,
-            closed: &closed,
-            costs: &costs,
-            per_shard_executed: &per_shard_executed,
-            workers: self.cfg.workers,
-            seed: self.cfg.seed,
-            tasks_per_cycle: self.cfg.tasks_per_cycle,
-            batch: self.cfg.batch,
-            backlog_cap,
-        };
 
         // The registry is the single source of truth for worker-side
         // statistics: workers publish onto their rows at each epoch's
@@ -311,6 +312,24 @@ impl ShardedEngine {
                     faults.wall_stalls()
                 }
                 None => Vec::new(),
+            };
+            // The context is rebuilt per epoch (shared borrows only live
+            // through one epoch's worker scope) so the chains can be
+            // mutably shrunk at the quiescent boundary below.
+            let ctx = ShardCtx {
+                model,
+                chains: &chains,
+                spill: &spill,
+                splitter: &splitter,
+                closed: &closed,
+                costs: &costs,
+                per_shard_executed: &per_shard_executed,
+                workers: self.cfg.workers,
+                seed: self.cfg.seed,
+                tasks_per_cycle: self.cfg.tasks_per_cycle,
+                batch: self.cfg.batch,
+                backlog_cap,
+                retire: retire.clone(),
             };
             closed.store(false, Ordering::Release);
             splitter.lock().unwrap().open(every);
@@ -413,6 +432,12 @@ impl ShardedEngine {
             if done {
                 break;
             }
+            // Quiescent shrink (ISSUE 10): release arena chunks a burst
+            // may have grown beyond the per-chain steady-state estimate.
+            for c in &mut chains {
+                c.shrink_on_quiesce(per_chain_cap);
+            }
+            spill.shrink_on_quiesce(per_chain_cap);
         }
         let wall = t0.elapsed();
 
@@ -518,6 +543,11 @@ struct ShardCtx<'a, M: ShardableModel> {
     batch: u32,
     /// Live-task ceiling across all chains: routing pauses above it.
     backlog_cap: usize,
+    /// Streaming-window retirement handle (ISSUE 10): bumped once per
+    /// executed canonical task (local or boundary — never per fence) so
+    /// the gated source regains materialization room. `None` on
+    /// materialized runs.
+    retire: Option<crate::model::RetireHandle>,
 }
 
 impl<M: ShardableModel> ShardCtx<'_, M> {
@@ -533,7 +563,12 @@ impl<M: ShardableModel> ShardCtx<'_, M> {
         let want = self.batch.min(budget).max(1);
         let mut sp = self.splitter.lock().unwrap();
         let got = sp.pull_batch(self.model, self.chains, self.spill, want);
-        if got < want {
+        // A short batch closes the epoch — unless it was a temporary
+        // streaming-window stall (checked under the same lock hold):
+        // routing room reopens as outstanding tasks retire, and closing
+        // early would end the epoch with canonical tasks unrouted,
+        // corrupting the observation trace.
+        if got < want && !sp.window_stalled() {
             self.closed.store(true, Ordering::Release);
         }
         got
@@ -929,6 +964,13 @@ fn execute_and_unlink<M: ShardableModel, R>(
     chain.acquire(node);
     chain.unlink(node);
     chain.release(node);
+    // Streaming: exactly one retire per canonical task — here, where the
+    // task's own node (local item or spillover boundary) is erased.
+    // Fence unlinks in `shard_cycle` do NOT retire: a fence is not a
+    // canonical task, and its boundary already retired on execution.
+    if let Some(r) = &ctx.retire {
+        r.retire(1);
+    }
     stats.executed += 1;
 }
 

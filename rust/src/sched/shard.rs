@@ -238,6 +238,24 @@ impl<M: ShardableModel> Splitter<M> {
         self.gate.open(every);
     }
 
+    /// Clamp routing to a bounded materialization window (ISSUE 10);
+    /// set before the first epoch opens.
+    pub(crate) fn set_window(&mut self, window: Option<crate::model::Window>) {
+        self.gate.set_window(window);
+    }
+
+    /// The window's retirement handle, if streaming is enabled.
+    pub(crate) fn retire_handle(&self) -> Option<crate::model::RetireHandle> {
+        self.gate.retire_handle()
+    }
+
+    /// Whether the last short [`pull_batch`](Self::pull_batch) was a
+    /// *temporary* window stall (room reopens as tasks retire) rather
+    /// than budget/source exhaustion.
+    pub(crate) fn window_stalled(&self) -> bool {
+        self.gate.window_stalled()
+    }
+
     /// Canonical tasks routed so far.
     pub(crate) fn emitted(&self) -> u64 {
         self.gate.emitted()

@@ -20,6 +20,67 @@ pub fn ring_lattice(n: usize, k: usize) -> Csr {
     Csr::from_edges(n, &edges)
 }
 
+/// Circulant graph: vertex `i` connects to `i ± s (mod n)` for every
+/// stride `s`. Constant degree `2·strides.len()`; `ring_lattice(n, k)`
+/// is the special case `strides = 1..=k/2`. Built row-by-row through
+/// [`Csr::from_flat`] in O(n·k) with no intermediate edge list — the
+/// scale tier's constructor (ISSUE 10).
+pub fn circulant(n: usize, strides: &[usize]) -> Csr {
+    let k = strides.len() * 2;
+    assert!(k < n, "degree must be below n");
+    let mut sorted = strides.to_vec();
+    sorted.sort_unstable();
+    for w in sorted.windows(2) {
+        assert_ne!(w[0], w[1], "duplicate stride {}", w[0]);
+    }
+    for &s in &sorted {
+        // `2s < n` keeps `i+s` and `i-s` distinct, so the degree really
+        // is constant and no row ever holds a duplicate.
+        assert!(s >= 1 && 2 * s < n, "stride {s} must satisfy 1 <= s < n/2");
+    }
+    let mut neighbors = Vec::with_capacity(n * k);
+    let mut row = vec![0u32; k];
+    for i in 0..n {
+        for (j, &s) in sorted.iter().enumerate() {
+            row[2 * j] = ((i + s) % n) as u32;
+            row[2 * j + 1] = ((i + n - s) % n) as u32;
+        }
+        row.sort_unstable();
+        neighbors.extend_from_slice(&row);
+    }
+    Csr::from_flat(n, k, neighbors)
+}
+
+/// Degree-bounded synthetic contact graph for the scale tier (ISSUE 10):
+/// a ring lattice of local degree `k_local` plus `long_links` seeded
+/// long-range strides. Circulant, so the degree stays constant at
+/// `k_local + 2·long_links`, construction is a deterministic O(n·k)
+/// stream, and no dense adjacency is ever materialized.
+/// `long_links = 0` is exactly [`ring_lattice`]`(n, k_local)`.
+pub fn contact_graph(n: usize, k_local: usize, long_links: usize, seed: u64) -> Csr {
+    assert!(k_local % 2 == 0, "local degree must be even");
+    let half = k_local / 2;
+    let mut strides: Vec<usize> = (1..=half).collect();
+    if long_links > 0 {
+        // Distinct strides drawn from (k_local/2, (n-1)/2] — disjoint
+        // from the local band, rejection-sampled into a set so the
+        // result is seed-deterministic and duplicate-free.
+        let lo = half + 1;
+        let span = ((n - 1) / 2).saturating_sub(half);
+        assert!(
+            long_links <= span,
+            "cannot place {long_links} distinct long strides in a span of {span}"
+        );
+        let mut rng = Rng::new(seed);
+        let mut chosen = std::collections::BTreeSet::new();
+        while chosen.len() < long_links {
+            chosen.insert(lo + rng.index(span));
+        }
+        strides.extend(chosen);
+    }
+    circulant(n, &strides)
+}
+
 /// Complete graph K_n (the Axelrod experiment's "all connected to each
 /// other" topology — only used at small n; the Axelrod model itself samples
 /// pairs directly and never materializes K_n).
@@ -139,6 +200,29 @@ mod tests {
         assert_eq!(g.n(), 4000);
         assert_eq!(g.m(), 4000 * 7);
         assert!(g.neighbor_matrix().is_some());
+    }
+
+    #[test]
+    fn circulant_generalizes_ring_lattice() {
+        assert_eq!(circulant(20, &[1, 2, 3]), ring_lattice(20, 6));
+        let g = circulant(11, &[1, 4]);
+        for v in 0..11 {
+            assert_eq!(g.degree(v), 4);
+        }
+        assert!(g.has_edge(0, 4));
+        assert!(g.has_edge(0, 7)); // 0 - 4 mod 11
+    }
+
+    #[test]
+    fn contact_graph_is_deterministic_with_constant_degree() {
+        assert_eq!(contact_graph(40, 6, 0, 9), ring_lattice(40, 6));
+        let g = contact_graph(1_000, 6, 4, 9);
+        assert_eq!(g.n(), 1_000);
+        for v in 0..g.n() {
+            assert_eq!(g.degree(v), 6 + 2 * 4, "degree stays constant");
+        }
+        assert_eq!(g, contact_graph(1_000, 6, 4, 9), "same seed, same graph");
+        assert_ne!(g, contact_graph(1_000, 6, 4, 10), "seed must matter");
     }
 
     #[test]

@@ -14,7 +14,9 @@ mod partition;
 
 pub use aggregate::aggregate_graph;
 pub use csr::Csr;
-pub use generators::{complete, erdos_renyi, lattice2d, ring_lattice, watts_strogatz};
+pub use generators::{
+    circulant, complete, contact_graph, erdos_renyi, lattice2d, ring_lattice, watts_strogatz,
+};
 pub use partition::{
     bfs_partition, contiguous_partition, edge_cut, grid_partition, round_robin_partition,
     Partition,

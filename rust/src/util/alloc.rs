@@ -21,10 +21,29 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 static ALLOCATED_BYTES: AtomicU64 = AtomicU64::new(0);
 static ALLOCATION_COUNT: AtomicU64 = AtomicU64::new(0);
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+static PEAK_BYTES: AtomicU64 = AtomicU64::new(0);
+
+/// Record `size` freshly-allocated bytes: bump the live gauge and
+/// CAS-max it into the peak. Relaxed everywhere — the gauges are
+/// measurements, not synchronization.
+fn note_alloc(size: u64) {
+    let live = LIVE_BYTES.fetch_add(size, Ordering::Relaxed) + size;
+    let mut peak = PEAK_BYTES.load(Ordering::Relaxed);
+    while live > peak {
+        match PEAK_BYTES.compare_exchange_weak(peak, live, Ordering::Relaxed, Ordering::Relaxed)
+        {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
 
 /// [`System`] allocator wrapper that counts allocations and bytes.
-/// Deallocations are *not* subtracted: the counters measure allocation
-/// traffic (what the acceptance criterion bounds), not live heap size.
+/// Deallocations are *not* subtracted from the traffic counters: those
+/// measure allocation traffic (what the acceptance criterion bounds).
+/// A separate live/peak gauge pair (ISSUE 10) *does* track
+/// deallocations, so scale benches can report peak resident heap.
 pub struct Counting;
 
 // SAFETY: delegates verbatim to `System`; the counters are simple
@@ -33,10 +52,12 @@ unsafe impl GlobalAlloc for Counting {
     unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
         ALLOCATED_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
         ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+        note_alloc(layout.size() as u64);
         System.alloc(layout)
     }
 
     unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
         System.dealloc(ptr, layout)
     }
 
@@ -46,6 +67,9 @@ unsafe impl GlobalAlloc for Counting {
         if new_size > layout.size() {
             ALLOCATED_BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
             ALLOCATION_COUNT.fetch_add(1, Ordering::Relaxed);
+            note_alloc((new_size - layout.size()) as u64);
+        } else if new_size < layout.size() {
+            LIVE_BYTES.fetch_sub((layout.size() - new_size) as u64, Ordering::Relaxed);
         }
         System.realloc(ptr, layout, new_size)
     }
@@ -59,6 +83,24 @@ pub fn allocated_bytes() -> u64 {
 /// Total allocation calls so far (monotonic).
 pub fn allocation_count() -> u64 {
     ALLOCATION_COUNT.load(Ordering::Relaxed)
+}
+
+/// Bytes currently live on the heap (allocated minus freed). Zero unless
+/// [`Counting`] is installed as the global allocator.
+pub fn live_bytes() -> u64 {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// High-water mark of [`live_bytes`] since process start (or the last
+/// [`reset_peak`]). Zero unless [`Counting`] is installed.
+pub fn peak_bytes() -> u64 {
+    PEAK_BYTES.load(Ordering::Relaxed)
+}
+
+/// Rewind the peak gauge to the current live level so a bench can
+/// measure the peak of one run in isolation.
+pub fn reset_peak() {
+    PEAK_BYTES.store(LIVE_BYTES.load(Ordering::Relaxed), Ordering::Relaxed);
 }
 
 /// Counter snapshot for before/after deltas.
@@ -103,5 +145,16 @@ mod tests {
         let d = since(a);
         assert!(d.bytes >= b.bytes - a.bytes);
         assert!(since(snapshot()).bytes <= snapshot().bytes);
+    }
+
+    #[test]
+    fn peak_gauge_tracks_live_and_resets() {
+        // The gauges are only driven here (the counting allocator is not
+        // installed in test builds), so the arithmetic is observable.
+        note_alloc(64);
+        assert!(peak_bytes() >= live_bytes(), "peak can never trail live");
+        LIVE_BYTES.fetch_sub(64, Ordering::Relaxed);
+        reset_peak();
+        assert_eq!(peak_bytes(), live_bytes(), "reset pins peak to live");
     }
 }

@@ -35,6 +35,13 @@ pub struct VirtualEngine {
     /// timestamps (the DES clocks), so `trace-analyze` attributes the
     /// modelled schedule rather than host wall time.
     pub trace: TraceMode,
+    /// `W` — streaming materialization window (ISSUE 10, DESIGN.md §14):
+    /// at most this many tasks live at any virtual instant; `0` disables
+    /// streaming. Inert for simulation state and observation traces (a
+    /// stalled virtual worker idles exactly like one that found the
+    /// epoch budget spent); only node residency — and, through the idle
+    /// cycles, the *virtual* clocks — changes.
+    pub window: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -126,9 +133,19 @@ struct Des<'m, M: Model> {
     /// single-threaded, so each lane trivially has one producer.
     trace: Vec<TraceHandle<'m>>,
     nodes: Vec<VNode<M::Recipe>>,
+    /// Erased node indices available for reuse (ISSUE 10): recycling
+    /// keeps `nodes` at O(live) instead of one entry per task ever
+    /// created. Safe because an erased node is unreachable — neighbors
+    /// are relinked by the unlink and every waiter is redirected to the
+    /// retry path before the index is freed.
+    free: Vec<usize>,
+    /// Free-list reuses (the report's `arena_recycled`).
+    recycled: u64,
     workers: Vec<VWorker<M::Record>>,
     heap: BinaryHeap<Ev>,
     source: EpochGate<M::Source>,
+    /// Streaming-window retirement handle (`None` when materialized).
+    retire: Option<crate::model::RetireHandle>,
     exhausted: bool,
     live: usize,
     max_live: usize,
@@ -200,6 +217,11 @@ impl VirtualEngine {
         };
 
         let trc = TraceCore::start(self.trace, self.workers, "virtual", "virtual");
+        let mut gate = EpochGate::new(model.source(self.seed));
+        if self.window > 0 {
+            gate.set_window(Some(crate::model::Window::new(self.window)));
+        }
+        let retire = gate.retire_handle();
         let mut des = Des {
             model,
             cost: self.cost,
@@ -210,9 +232,12 @@ impl VirtualEngine {
                 None => Vec::new(),
             },
             nodes: Vec::with_capacity(64),
+            free: Vec::new(),
+            recycled: 0,
             workers: Vec::with_capacity(self.workers),
             heap: BinaryHeap::new(),
-            source: EpochGate::new(model.source(self.seed)),
+            source: gate,
+            retire,
             exhausted: false,
             live: 0,
             max_live: 0,
@@ -306,6 +331,12 @@ impl VirtualEngine {
             tasks_executed: des.erased,
             max_chain_len: des.max_live,
             batch: 1,
+            // The node pool is the DES's arena: recycling keeps its length
+            // at O(peak live), and a drained run holds only the sentinels.
+            arena_capacity: des.nodes.len(),
+            arena_high_water: des.max_live + 2,
+            arena_recycled: des.recycled,
+            arena_live: 2,
             state_bytes: crate::protocol::stats::state_bytes_total(
                 model.state_bytes_per_task(),
                 des.erased,
@@ -521,7 +552,16 @@ impl<'m, M: Model> Des<'m, M> {
         self.workers[wid].clock += self.cost.create_ns;
         match self.source.next_task() {
             None => {
-                self.exhausted = true;
+                // A temporary streaming-window stall must NOT latch
+                // exhaustion: the worker just ends its cycle and keeps
+                // cycling — outstanding tasks retire at erase and reopen
+                // room, so progress is guaranteed (live ≥ 1 while
+                // stalled). Epoch boundaries happen only at true
+                // budget/source exhaustion, keeping traces identical to
+                // the materialized path.
+                if !self.source.window_stalled() {
+                    self.exhausted = true;
+                }
                 let now = self.workers[wid].clock;
                 self.release(TAIL, now);
                 self.end_cycle(wid, from);
@@ -531,10 +571,7 @@ impl<'m, M: Model> Des<'m, M> {
                 self.created += 1;
                 self.live += 1;
                 self.max_live = self.max_live.max(self.live);
-                let idx = self.nodes.len();
-                let prev = self.nodes[TAIL].prev;
-                debug_assert_eq!(prev, from);
-                self.nodes.push(VNode {
+                let node = VNode {
                     seq,
                     recipe: Some(recipe),
                     state: VState::Pending,
@@ -542,7 +579,22 @@ impl<'m, M: Model> Des<'m, M> {
                     waiters: VecDeque::new(),
                     prev: from,
                     next: TAIL,
-                });
+                };
+                let prev = self.nodes[TAIL].prev;
+                debug_assert_eq!(prev, from);
+                // Reuse an erased slot when one is free — the node pool
+                // stays O(live), not O(total tasks) (ISSUE 10).
+                let idx = match self.free.pop() {
+                    Some(i) => {
+                        self.recycled += 1;
+                        self.nodes[i] = node;
+                        i
+                    }
+                    None => {
+                        self.nodes.push(node);
+                        self.nodes.len() - 1
+                    }
+                };
                 self.nodes[from].next = idx;
                 self.nodes[TAIL].prev = idx;
                 let now = self.workers[wid].clock;
@@ -590,6 +642,13 @@ impl<'m, M: Model> Des<'m, M> {
             wk.phase = Phase::WantNext { from: retry_from };
             self.push(w);
         }
+        // Every observer is gone (waiters redirected above; arrivers hold
+        // the slot, which blocked this erase): the index can be reused.
+        self.free.push(node);
+        // One canonical task done — reopen its streaming-window slot.
+        if let Some(r) = &self.retire {
+            r.retire(1);
+        }
 
         self.workers[wid].stats.executed += 1;
         // Cycle ends after an execution.
@@ -625,6 +684,7 @@ mod tests {
             seed,
             cost: CostModel::default(),
             trace: crate::trace::TraceMode::Off,
+            window: 0,
         }
     }
 
@@ -698,6 +758,7 @@ mod tests {
                 seed: 4,
                 cost: CostModel::ideal(1.0),
                 trace: crate::trace::TraceMode::Off,
+                window: 0,
             }
             .run(&m)
             .time_s
@@ -742,6 +803,39 @@ mod tests {
         };
         assert_eq!(run(5_000.0), run(5_000.0));
         assert!(run(500_000.0) > run(0.0), "a long stall must show up in T");
+    }
+
+    #[test]
+    fn streaming_window_bounds_node_pool_and_preserves_state() {
+        let seed = 11;
+        let expected = {
+            let m = IncModel::new(1200, 8);
+            SequentialEngine::new(seed).run(&m);
+            m.cells_snapshot()
+        };
+        for window in [1u64, 7, 64] {
+            let m = IncModel::new(1200, 8);
+            let mut eng = vengine(4, seed);
+            eng.window = window;
+            let rep = eng.run(&m);
+            assert_eq!(m.cells_snapshot(), expected, "W={window}");
+            assert_eq!(rep.chain.tasks_executed, 1200, "W={window}");
+            // live ≤ W at every instant, so pool ≤ W + sentinels.
+            assert!(
+                rep.chain.arena_high_water as u64 <= window + 2,
+                "W={window}: high_water={}",
+                rep.chain.arena_high_water
+            );
+            assert!(
+                rep.chain.arena_capacity as u64 <= window + 2,
+                "W={window}: capacity={}",
+                rep.chain.arena_capacity
+            );
+            assert!(
+                rep.chain.arena_recycled > 0,
+                "W={window}: a bounded pool must recycle"
+            );
+        }
     }
 
     #[test]

@@ -257,6 +257,70 @@ fn trace_modes_are_invisible_in_every_trace() {
 }
 
 #[test]
+fn streaming_windows_are_invisible_in_every_trace() {
+    // ISSUE 10's conformance axis: the streaming materialization window
+    // must be semantically inert back-pressure — the epoch observation
+    // trace is byte-identical materialized, through the degenerate
+    // one-task window, an awkward prime, and a deep window, on every
+    // chain engine × worker count; only peak arena residency may
+    // change. (`ADAPAR_STREAM_WINDOWS` pins the axis for CI sharding.)
+    use adapar::model::testkit::env_stream_windows;
+    for name in ["voter", "sir"] {
+        let info = registry::info(name).unwrap();
+        let (agents, steps, size) = workload(&info);
+        let run = |engine: EngineKind, workers: usize, window: u64| {
+            Simulation::builder()
+                .model(info.name.clone())
+                .engine(engine)
+                .workers(workers)
+                .tasks_per_cycle(8)
+                .batch(8)
+                .agents(agents)
+                .steps(steps)
+                .size(size)
+                .seed(31)
+                .every(256)
+                .window(window)
+                .run()
+                .unwrap_or_else(|e| panic!("{name}/{engine} n={workers} W={window}: {e}"))
+        };
+        let reference = run(EngineKind::Sequential, 1, 0).observable;
+        assert!(reference.len() > 1, "{name}: need a multi-frame trace");
+        for window in env_stream_windows() {
+            for &engine in &[
+                EngineKind::Sequential,
+                EngineKind::Parallel,
+                EngineKind::Sharded,
+                EngineKind::Virtual,
+            ] {
+                if !info.supports(engine) {
+                    continue;
+                }
+                for &workers in &worker_counts() {
+                    let out = run(engine, workers, window);
+                    assert_eq!(
+                        out.observable, reference,
+                        "{name} {engine} n={workers} W={window}: trace diverged"
+                    );
+                    // The bound the window buys: never more than W live
+                    // tasks (+2 arena sentinel slots) at once. Tight
+                    // only on the single-chain engines — the sharded
+                    // report *sums* per-shard high-waters (each with
+                    // its own sentinels and epoch fences).
+                    if window > 0 && matches!(engine, EngineKind::Parallel | EngineKind::Virtual) {
+                        assert!(
+                            out.report.chain.arena_high_water as u64 <= window + 2,
+                            "{name} {engine} n={workers} W={window}: high-water {} escaped",
+                            out.report.chain.arena_high_water
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn state_layouts_are_invisible_in_every_trace() {
     // ISSUE 9's conformance axis: the state layout is pure storage —
     // the epoch observation trace is byte-identical whether agent state

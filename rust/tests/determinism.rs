@@ -49,6 +49,7 @@ fn axelrod_all_engines_agree() {
                 seed,
                 cost: CostModel::default(),
                 trace: adapar::TraceMode::Off,
+                window: 0,
             }
             .run(&m);
             assert_eq!(m.snapshot(), reference, "virtual n={workers} seed={seed}");
@@ -78,6 +79,7 @@ fn sir_all_engines_agree_across_granularities() {
             seed,
             cost: CostModel::default(),
             trace: adapar::TraceMode::Off,
+            window: 0,
         }
         .run(&m);
         assert_eq!(m.snapshot(), reference, "virtual s={s}");

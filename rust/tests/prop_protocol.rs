@@ -59,6 +59,7 @@ fn prop_virtual_equals_sequential() {
                 seed,
                 cost: CostModel::default(),
                 trace: adapar::TraceMode::Off,
+                window: 0,
             }
             .run(&m);
             m.cells_snapshot() == expected

@@ -126,6 +126,7 @@ fn sir_ragged_tail_is_bitwise_identical_on_every_engine() {
                         seed,
                         cost: CostModel::default(),
                         trace: adapar::TraceMode::Off,
+                        window: 0,
                     }
                     .run(m);
                 });

@@ -274,9 +274,9 @@ fn boxed_engines_dispatch_uniformly() {
     let tele = adapar::TelemetryMode::env_default();
     let trc = adapar::TraceMode::Off;
     let engines: Vec<Box<dyn Engine>> = vec![
-        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 3, CostModel::default(), tele, trc),
-        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 3, CostModel::default(), tele, trc),
-        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 3, CostModel::default(), tele, trc),
+        adapar::engine_for(EngineKind::Sequential, 1, 6, 16, 0, 3, CostModel::default(), tele, trc),
+        adapar::engine_for(EngineKind::Parallel, 2, 6, 16, 0, 3, CostModel::default(), tele, trc),
+        adapar::engine_for(EngineKind::Virtual, 2, 6, 16, 0, 3, CostModel::default(), tele, trc),
     ];
     let model = registry_api::build(
         "voter",

@@ -129,6 +129,7 @@ fn every_engine_and_layout_agree_on_the_sir_trajectory() {
                         seed,
                         cost: CostModel::default(),
                         trace: adapar::TraceMode::Off,
+                        window: 0,
                     }
                     .run(m);
                 });

@@ -1,0 +1,176 @@
+//! Streaming-window integration suite (ISSUE 10): the materialization
+//! window is semantically inert back-pressure. For every window — the
+//! degenerate `W = 1`, an awkward prime, a deep window, and windows
+//! ragged against the workload's task count — results must be
+//! byte-identical to the materialized run, while the arena's high-water
+//! mark stays pinned at `W + 2` sentinel slots instead of tracking the
+//! workload. The cross-engine trace axis lives in
+//! `rust/tests/conformance.rs` (`streaming_windows_are_invisible_in_
+//! every_trace`); this suite drills the chain- and facade-level
+//! mechanics.
+
+use adapar::model::testkit::{env_stream_windows, IncModel};
+use adapar::protocol::{ParallelEngine, ProtocolConfig, RunReport};
+use adapar::{EngineKind, Simulation};
+
+fn inc_run(tasks: u64, workers: usize, c: u32, window: u64) -> (RunReport, Vec<u64>) {
+    let m = IncModel::new(tasks, 32);
+    let rep = ParallelEngine::new(ProtocolConfig {
+        workers,
+        tasks_per_cycle: c,
+        batch: 16,
+        seed: 41,
+        window,
+        ..Default::default()
+    })
+    .run(&m);
+    (rep, m.cells_snapshot())
+}
+
+// ------------------------------------------------------- chain level
+
+#[test]
+fn every_window_reproduces_the_materialized_run() {
+    // Windows from the shared axis ({0, 1, 7, 64} unless pinned),
+    // against the materialized reference, across worker counts.
+    let (ref_rep, reference) = inc_run(2_000, 1, 6, 0);
+    assert_eq!(ref_rep.totals.executed, 2_000);
+    for window in env_stream_windows() {
+        for workers in [1usize, 2, 4] {
+            let (rep, cells) = inc_run(2_000, workers, 6, window);
+            assert_eq!(cells, reference, "n={workers} W={window}");
+            assert_eq!(rep.totals.executed, 2_000, "n={workers} W={window}");
+            if window > 0 {
+                assert!(
+                    rep.chain.arena_high_water as u64 <= window + 2,
+                    "n={workers} W={window}: high-water {} escaped the window",
+                    rep.chain.arena_high_water
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ragged_tails_drain_completely() {
+    // Task counts deliberately ragged against the window: W ∤ tasks,
+    // W = tasks (exact), W = tasks ± 1, and W ≫ tasks. Exhaustion, not
+    // a stall, must close the source in every case — a latched stall
+    // here shows up as a hang or a short count.
+    for tasks in [1u64, 13, 100] {
+        for window in [1u64, 7, tasks.saturating_sub(1).max(1), tasks, tasks + 1, 4_096] {
+            let (rep, cells) = inc_run(tasks, 2, 6, window);
+            let (_, reference) = inc_run(tasks, 2, 6, 0);
+            assert_eq!(cells, reference, "tasks={tasks} W={window}");
+            assert_eq!(rep.totals.executed, tasks, "tasks={tasks} W={window}");
+        }
+    }
+}
+
+#[test]
+fn window_pins_high_water_while_materialized_tracks_the_workload() {
+    // Single worker, C = 64: materialized, each cycle creates up to 64
+    // and drains one, so the live set — and with it both the high-water
+    // mark and the arena's chunk footprint — tracks the workload.
+    // Streamed through W = 7 the same run holds ≤ 9 slots and never
+    // grows past its (power-of-two-rounded) pre-size.
+    const TASKS: u64 = 20_000;
+    let (mat, mat_cells) = inc_run(TASKS, 1, 64, 0);
+    let (st, st_cells) = inc_run(TASKS, 1, 64, 7);
+    assert_eq!(st_cells, mat_cells);
+    assert!(
+        mat.chain.arena_high_water as u64 > TASKS / 2,
+        "materialized single-worker high-water should track the workload, got {}",
+        mat.chain.arena_high_water
+    );
+    assert!(
+        st.chain.arena_high_water <= 9,
+        "streamed high-water {} escaped W + 2",
+        st.chain.arena_high_water
+    );
+    assert!(
+        st.chain.arena_capacity <= 256,
+        "streamed arena grew past its windowed pre-size: {}",
+        st.chain.arena_capacity
+    );
+    assert!(
+        (mat.chain.arena_capacity as u64) >= TASKS,
+        "materialized arena must have materialized the workload: {}",
+        mat.chain.arena_capacity
+    );
+}
+
+// ------------------------------------------------------ facade level
+
+#[test]
+fn facade_streaming_is_invisible_in_sir_observations() {
+    // Model-level check through the public facade: a multi-epoch SIR
+    // run (observation cadence forces epoch boundaries, which exercise
+    // reopen + shrink-on-quiesce under streaming) yields the identical
+    // observation trace at every window, on both chain engines.
+    let run = |engine: EngineKind, window: u64| {
+        Simulation::builder()
+            .model("sir")
+            .engine(engine)
+            .workers(2)
+            .tasks_per_cycle(8)
+            .batch(8)
+            .agents(300)
+            .steps(400)
+            .size(20)
+            .seed(13)
+            .every(128)
+            .window(window)
+            .run()
+            .unwrap_or_else(|e| panic!("{engine} W={window}: {e}"))
+    };
+    let reference = run(EngineKind::Parallel, 0);
+    assert!(reference.observable.len() > 1, "need a multi-frame trace");
+    for window in [1u64, 7, 64] {
+        for engine in [EngineKind::Parallel, EngineKind::Sharded] {
+            let out = run(engine, window);
+            assert_eq!(
+                out.observable, reference.observable,
+                "{engine} W={window}: trace diverged"
+            );
+            if engine == EngineKind::Parallel {
+                assert!(
+                    out.report.chain.arena_high_water as u64 <= window + 2,
+                    "{engine} W={window}: high-water {} escaped",
+                    out.report.chain.arena_high_water
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn default_window_applies_through_the_builder() {
+    // `.window(DEFAULT_WINDOW)` (what `--streaming` resolves to) on a
+    // virtual-time run: same T, same trace, bounded node pool.
+    use adapar::model::DEFAULT_WINDOW;
+    let run = |window: u64| {
+        Simulation::builder()
+            .model("voter")
+            .engine(EngineKind::Virtual)
+            .workers(3)
+            .agents(200)
+            .steps(3_000)
+            .seed(19)
+            .every(1_000)
+            .window(window)
+            .run()
+            .unwrap()
+    };
+    let mat = run(0);
+    let st = run(DEFAULT_WINDOW);
+    // Observable (semantic) equality is the contract; the virtual T may
+    // differ marginally because stalled creation draws still cost
+    // `create_ns` on the drawing worker's clock.
+    assert_eq!(st.observable, mat.observable, "virtual trace diverged");
+    assert!(
+        st.report.chain.arena_high_water as u64 <= DEFAULT_WINDOW + 2,
+        "virtual high-water {} escaped the default window",
+        st.report.chain.arena_high_water
+    );
+}

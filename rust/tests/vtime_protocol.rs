@@ -15,6 +15,7 @@ fn engine(workers: usize, seed: u64) -> VirtualEngine {
         seed,
         cost: CostModel::default(),
         trace: adapar::TraceMode::Off,
+        window: 0,
     }
 }
 
